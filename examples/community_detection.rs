@@ -1,0 +1,63 @@
+//! Community detection on a DBLP-like author–conference graph — the
+//! workload the paper's §6 uses spherical k-means for ("Spherical k-means
+//! clustering has been used successfully for community detection on such
+//! data sets").
+//!
+//! Clusters authors by their conference profile, validates against the
+//! planted communities, and shows the acceleration each variant achieves
+//! over the standard algorithm on this tall-and-narrow matrix.
+//!
+//! ```text
+//! cargo run --release --example community_detection -- [--scale small] [--k 40]
+//! ```
+
+use sphkm::data::datasets::{self, Scale};
+use sphkm::init::{seed_centers, InitMethod};
+use sphkm::kmeans::{run_with_centers, KMeansConfig, Variant};
+use sphkm::metrics;
+use sphkm::util::cli::Args;
+use sphkm::util::timer::Stopwatch;
+
+fn main() {
+    let args = Args::from_env();
+    let scale: Scale = args.get_or("scale", Scale::Small).unwrap_or(Scale::Small);
+    let ds = datasets::dblp_author_conf(scale, 42);
+    let k: usize = args.get_or("k", 40).unwrap_or(40);
+    println!(
+        "author–conference graph: {} authors × {} conferences, {:.3}% nnz, k={k}",
+        ds.matrix.rows(),
+        ds.matrix.cols(),
+        ds.matrix.density() * 100.0
+    );
+
+    let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 7);
+    let mut standard_ms = 0.0;
+    println!("\n{:<14} {:>9} {:>6} {:>14} {:>8}", "variant", "ms", "iters", "sims", "speedup");
+    for variant in Variant::ALL {
+        let cfg = KMeansConfig::new(k).variant(variant);
+        let sw = Stopwatch::start();
+        let r = run_with_centers(&ds.matrix, init.centers.clone(), &cfg);
+        let ms = sw.ms();
+        if variant == Variant::Standard {
+            standard_ms = ms;
+        }
+        println!(
+            "{:<14} {:>9.1} {:>6} {:>14} {:>7.2}x",
+            variant.name(),
+            ms,
+            r.iterations,
+            r.stats.total_point_center(),
+            standard_ms / ms
+        );
+        if variant == Variant::Standard {
+            if let Some(truth) = &ds.labels {
+                println!(
+                    "    community recovery: NMI={:.3} purity={:.3}",
+                    metrics::nmi(&r.assignments, truth),
+                    metrics::purity(&r.assignments, truth)
+                );
+            }
+        }
+    }
+    println!("\n(all variants produce identical assignments — the speedup is free)");
+}

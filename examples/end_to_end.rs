@@ -1,0 +1,146 @@
+//! End-to-end driver — exercises the **full system** on a real (synthetic
+//! but non-trivial) workload and reports the paper's headline result:
+//! accelerated spherical k-means produces *identical* clusterings to the
+//! standard algorithm at a fraction of the similarity computations and
+//! wall time, with the winner depending on data shape (N vs d) and k.
+//!
+//! Layers composed here:
+//!   L1/L2 (if `make artifacts` has run): the PJRT engine executes the
+//!          AOT-compiled JAX/Pallas assignment kernel to cross-check the
+//!          Rust assignment on a dense-shaped dataset;
+//!   L3:    datasets → seeding → all six algorithm variants → metrics →
+//!          report, entirely in Rust.
+//!
+//! ```text
+//! cargo run --release --example end_to_end -- [--scale small] [--quick]
+//! ```
+//!
+//! The output of one run is recorded in EXPERIMENTS.md §End-to-end.
+
+use sphkm::coordinator::report::{fmt_ms, Table};
+use sphkm::data::datasets::{self, Scale};
+use sphkm::init::{seed_centers, InitMethod};
+use sphkm::kmeans::{run_with_centers, KMeansConfig, Variant};
+use sphkm::metrics;
+use sphkm::runtime::{artifacts_available, AssignEngine};
+use sphkm::util::cli::Args;
+use sphkm::util::timer::Stopwatch;
+
+fn main() {
+    let args = Args::from_env();
+    let scale: Scale = if args.flag("quick") {
+        Scale::Tiny
+    } else {
+        args.get_or("scale", Scale::Small).unwrap_or(Scale::Small)
+    };
+    let seed = 42u64;
+
+    println!("=== end-to-end driver (scale={}) ===\n", scale.name());
+
+    // ---- stage 1: the full workload matrix --------------------------
+    let workloads = [
+        (datasets::dblp_author_conf(scale, seed), 50usize),
+        (datasets::dblp_conf_author(scale, seed), 20),
+        (datasets::rcv1(scale, seed ^ 4), 50),
+    ];
+    let mut table = Table::new(&[
+        "Data set", "Variant", "ms", "iters", "pc sims", "cc sims", "speedup", "exact",
+    ]);
+    let mut headline: Vec<(String, f64)> = Vec::new();
+    for (ds, k) in &workloads {
+        let k = (*k).min(ds.matrix.rows() / 2);
+        let init = seed_centers(&ds.matrix, k, &InitMethod::KMeansPP { alpha: 1.0 }, 7);
+        let mut baseline_ms = 0.0;
+        let mut baseline_assign: Vec<u32> = Vec::new();
+        let mut best_speedup: f64 = 1.0;
+        for variant in Variant::ALL {
+            let cfg = KMeansConfig::new(k).variant(variant);
+            let sw = Stopwatch::start();
+            let r = run_with_centers(&ds.matrix, init.centers.clone(), &cfg);
+            let ms = sw.ms();
+            let exact = if variant == Variant::Standard {
+                baseline_ms = ms;
+                baseline_assign = r.assignments.clone();
+                true
+            } else {
+                r.assignments == baseline_assign
+            };
+            assert!(exact, "{}: {} diverged from Standard!", ds.name, variant.name());
+            let speedup = baseline_ms / ms;
+            best_speedup = best_speedup.max(speedup);
+            let cc = r.stats.total_sims() - r.stats.total_point_center();
+            table.row(vec![
+                ds.name.clone(),
+                variant.name().into(),
+                fmt_ms(ms),
+                r.iterations.to_string(),
+                r.stats.total_point_center().to_string(),
+                cc.to_string(),
+                format!("{speedup:.2}x"),
+                if exact { "yes".into() } else { "NO".into() },
+            ]);
+        }
+        headline.push((ds.name.clone(), best_speedup));
+        // Quality sanity on the planted structure.
+        if let Some(truth) = &ds.labels {
+            println!(
+                "{}: NMI vs planted communities = {:.3}",
+                ds.name,
+                metrics::nmi(&baseline_assign, truth)
+            );
+        }
+    }
+    println!("\n{}", table.render());
+
+    // ---- stage 2: the PJRT (L1/L2) path ------------------------------
+    let art = std::path::Path::new("artifacts");
+    if artifacts_available(art) {
+        // Dense-shaped dataset matching the compiled (256, 16, 512) artifact.
+        let ds = sphkm::data::synth::SynthConfig {
+            name: "pjrt-x-check".into(),
+            n_docs: 2048,
+            vocab: 512,
+            topics: 16,
+            doc_len_mean: 40.0,
+            doc_len_sigma: 0.4,
+            topic_strength: 0.7,
+            shared_vocab_frac: 0.25,
+            zipf_s: 1.1,
+            anomaly_frac: 0.0,
+            tfidf: Default::default(),
+        }
+        .generate(9);
+        let k = 16;
+        let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 5);
+        let r = run_with_centers(
+            &ds.matrix,
+            init.centers.clone(),
+            &KMeansConfig::new(k).variant(Variant::SimplifiedElkan),
+        );
+        let mut engine = AssignEngine::load_matching(art, k, 512).expect("artifact");
+        let tile = engine
+            .assign_all(&ds.matrix, r.centers.data())
+            .expect("PJRT execute");
+        let agree = tile
+            .best
+            .iter()
+            .zip(&r.assignments)
+            .filter(|(a, b)| a == b)
+            .count();
+        println!(
+            "PJRT cross-check: JAX/Pallas kernel agrees with Rust assignment on {}/{} rows ({})",
+            agree,
+            ds.matrix.rows(),
+            engine.manifest().filename()
+        );
+        assert!(agree * 1000 >= ds.matrix.rows() * 999, "PJRT/native disagreement");
+    } else {
+        println!("PJRT stage skipped (run `make artifacts` to enable)");
+    }
+
+    // ---- headline ----------------------------------------------------
+    println!("\n=== headline ===");
+    for (name, s) in &headline {
+        println!("{name}: best accelerated variant is {s:.1}x faster than Standard (identical result)");
+    }
+}

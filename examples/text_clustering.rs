@@ -1,0 +1,81 @@
+//! End-to-end text clustering: raw documents → tokenize/stem/filter →
+//! TF-IDF → spherical k-means → top terms per cluster.
+//!
+//! By default runs on a small built-in three-theme corpus; point it at a
+//! directory of `.txt` files to cluster your own documents:
+//!
+//! ```text
+//! cargo run --release --example text_clustering -- [--dir path/] [--k 3]
+//! ```
+
+use sphkm::data::text::{demo_corpus, TextPipeline};
+use sphkm::init::InitMethod;
+use sphkm::kmeans::{run, KMeansConfig, Variant};
+use sphkm::util::cli::Args;
+
+fn load_docs(args: &Args) -> Vec<String> {
+    if let Some(dir) = args.get("dir") {
+        let mut docs = Vec::new();
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(dir).expect("readable --dir") {
+            let path = entry.expect("dir entry").path();
+            if path.extension().map(|e| e == "txt").unwrap_or(false) {
+                names.push(path.display().to_string());
+                docs.push(std::fs::read_to_string(&path).unwrap_or_default());
+            }
+        }
+        println!("loaded {} documents from {dir}", docs.len());
+        docs
+    } else {
+        let docs = demo_corpus();
+        println!("using the built-in demo corpus ({} docs, 3 themes)", docs.len());
+        docs
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let docs = load_docs(&args);
+    let k: usize = args.get_or("k", 3).unwrap_or(3);
+
+    let pipeline = TextPipeline {
+        min_df: 1,
+        max_df_frac: 0.7,
+        ..Default::default()
+    };
+    let (ds, vocab) = pipeline.fit(&docs, "text");
+    println!(
+        "matrix: {} docs × {} terms after filtering",
+        ds.matrix.rows(),
+        ds.matrix.cols()
+    );
+
+    let cfg = KMeansConfig::new(k)
+        .variant(Variant::SimplifiedElkan)
+        .init(InitMethod::KMeansPP { alpha: 1.0 })
+        .seed(11);
+    let r = run(&ds.matrix, &cfg);
+    println!(
+        "converged={} in {} iterations, mean cosine {:.3}\n",
+        r.converged, r.iterations, r.mean_similarity
+    );
+
+    // Top terms per cluster = largest center weights.
+    for j in 0..k {
+        let center = r.centers.row(j);
+        let mut weighted: Vec<(usize, f32)> = center
+            .iter()
+            .enumerate()
+            .filter(|(_, &w)| w > 0.0)
+            .map(|(t, &w)| (t, w))
+            .collect();
+        weighted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let members = r.assignments.iter().filter(|&&a| a as usize == j).count();
+        let top: Vec<&str> = weighted
+            .iter()
+            .take(6)
+            .map(|&(t, _)| vocab[t].as_str())
+            .collect();
+        println!("cluster {j} ({members} docs): {}", top.join(", "));
+    }
+}

@@ -1,0 +1,87 @@
+"""AOT lowering: JAX/Pallas model → HLO text artifacts for the Rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the published `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Usage (normally via `make artifacts`):
+
+    python -m compile.aot --out-dir ../artifacts \
+        --shape 256,16,512 --shape 512,64,1024
+
+Each `--shape B,K,D` emits `assign_b{B}_k{K}_d{D}.hlo.txt` (the assignment
+step) — the filename doubles as the manifest the Rust side parses.
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+DEFAULT_SHAPES = [(256, 16, 512)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (with return_tuple=True, so the
+    Rust side unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_assign(batch: int, k: int, dim: int) -> str:
+    x = jax.ShapeDtypeStruct((batch, dim), jnp.float32)
+    c = jax.ShapeDtypeStruct((k, dim), jnp.float32)
+    return to_hlo_text(jax.jit(model.assign_step).lower(x, c))
+
+
+def lower_cc(k: int, dim: int) -> str:
+    c = jax.ShapeDtypeStruct((k, dim), jnp.float32)
+    return to_hlo_text(jax.jit(model.cc_step).lower(c))
+
+
+def parse_shape(text: str):
+    parts = tuple(int(p) for p in text.split(","))
+    if len(parts) != 3 or any(p <= 0 for p in parts):
+        raise argparse.ArgumentTypeError(f"bad shape {text!r}, want B,K,D")
+    return parts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", type=Path)
+    ap.add_argument(
+        "--shape",
+        action="append",
+        type=parse_shape,
+        help="B,K,D assignment-step shape (repeatable)",
+    )
+    ap.add_argument("--cc", action="store_true", help="also emit cc_step artifacts")
+    args = ap.parse_args(argv)
+
+    shapes = args.shape or DEFAULT_SHAPES
+    args.out_dir.mkdir(parents=True, exist_ok=True)
+    for batch, k, dim in shapes:
+        text = lower_assign(batch, k, dim)
+        path = args.out_dir / f"assign_b{batch}_k{k}_d{dim}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+        if args.cc:
+            text = lower_cc(k, dim)
+            path = args.out_dir / f"cc_k{k}_d{dim}.hlo.txt"
+            path.write_text(text)
+            print(f"wrote {path} ({len(text)} chars)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: elementwise bound maintenance (Eq. 6 + Eq. 9).
+
+The per-iteration bound update touches every point (`O(N)` for Hamerly,
+`O(N·k)` for Elkan) and is purely elementwise — a bandwidth-bound VPU
+kernel on TPU. Tiled 1-D with a block of 1024 lanes (8×128 VPU registers).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+BLOCK = 1024
+
+
+def _bound_kernel(l_ref, u_ref, pa_ref, pc_ref, lo_ref, uo_ref):
+    l = jnp.clip(l_ref[...], -1.0, 1.0)
+    u = jnp.clip(u_ref[...], -1.0, 1.0)
+    pa = jnp.clip(pa_ref[...], -1.0, 1.0)
+    pc = jnp.maximum(pc_ref[...], 0.0)
+    sin_l = jnp.sqrt(jnp.maximum(1.0 - l * l, 0.0))
+    sin_p = jnp.sqrt(jnp.maximum(1.0 - pa * pa, 0.0))
+    l_new = l * pa - sin_l * sin_p  # Eq. 6
+    l_new = jnp.where(pa <= -l, -1.0, l_new)  # saturation guard
+    u_new = u + jnp.sqrt(jnp.maximum(1.0 - u * u, 0.0) * pc)  # Eq. 9
+    lo_ref[...] = jnp.clip(l_new, -1.0, 1.0)
+    uo_ref[...] = jnp.clip(u_new, -1.0, 1.0)
+
+
+def _pick_block(n, want):
+    b = min(n, want)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@jax.jit
+def bound_update(l, u, p_a, p_min_sq_comp):
+    """Updated ``(l, u)`` per Eq. 6 / Eq. 9 with saturation guards.
+
+    All four inputs are f32 vectors of the same length (``p_a`` and
+    ``p_min_sq_comp`` are pre-gathered per point by the caller).
+    """
+    (n,) = l.shape
+    bn = _pick_block(n, BLOCK)
+    grid = (n // bn,)
+    spec = pl.BlockSpec((bn,), lambda i: (i,))
+    return pl.pallas_call(
+        _bound_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        interpret=True,
+    )(l, u, p_a, p_min_sq_comp)

@@ -1,0 +1,70 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+This module defines the *semantics* the kernels must match; pytest asserts
+`kernels.similarity` and `kernels.bound_update` against it with
+hypothesis-driven shape sweeps (see python/tests/).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def similarity_ref(x, c):
+    """Dense cosine-similarity matrix: ``x[B,D] @ c[K,D]^T -> [B,K]``.
+
+    Inputs are assumed unit-normalized, so the dot product *is* the cosine
+    similarity (paper §2).
+    """
+    return jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+
+
+def assign_ref(x, c):
+    """The assignment step every bound-based variant needs to seed its
+    bounds: best center index, best similarity, second-best similarity.
+
+    Returns ``(best_idx i32[B], best f32[B], second f32[B])``.
+    """
+    sims = similarity_ref(x, c)
+    k = sims.shape[1]
+    if k == 1:
+        best_idx = jnp.zeros(sims.shape[0], dtype=jnp.int32)
+        best = sims[:, 0]
+        second = jnp.full(sims.shape[0], -1.0, dtype=sims.dtype)
+        return best_idx, best, second
+    top2, idx2 = jax.lax.top_k(sims, 2)
+    return idx2[:, 0].astype(jnp.int32), top2[:, 0], top2[:, 1]
+
+
+def bound_update_ref(l, u, p_a, p_min_sq_comp):
+    """Elementwise bound maintenance (Eq. 6 + Eq. 9 with saturation guards).
+
+    ``l``            lower bounds to the assigned center, per point
+    ``u``            single Hamerly upper bounds, per point
+    ``p_a``          movement self-similarity of the assigned center
+    ``p_min_sq_comp``  ``1 - p'(a)^2`` for the assigned center's min-other
+
+    Returns the updated ``(l, u)``.
+    """
+    l = jnp.clip(l, -1.0, 1.0)
+    u = jnp.clip(u, -1.0, 1.0)
+    p_a = jnp.clip(p_a, -1.0, 1.0)
+    sin_l = jnp.sqrt(jnp.maximum(1.0 - l * l, 0.0))
+    sin_p = jnp.sqrt(jnp.maximum(1.0 - p_a * p_a, 0.0))
+    l_new = l * p_a - sin_l * sin_p  # Eq. 6
+    # Saturation guard: if the center moved past the bound angle, no
+    # information remains (see rust/src/bounds/mod.rs).
+    l_new = jnp.where(p_a <= -l, -1.0, l_new)
+    sin_u_sq = jnp.maximum(1.0 - u * u, 0.0)
+    u_new = u + jnp.sqrt(sin_u_sq * jnp.maximum(p_min_sq_comp, 0.0))  # Eq. 9
+    return jnp.clip(l_new, -1.0, 1.0), jnp.clip(u_new, -1.0, 1.0)
+
+
+def cc_bounds_ref(c):
+    """Center–center half-angle matrix ``cc(i,j) = sqrt((<ci,cj>+1)/2)``
+    plus ``s(i) = max_{j != i} cc(i,j)`` (§5.2)."""
+    sims = jnp.clip(similarity_ref(c, c), -1.0, 1.0)
+    cc = jnp.sqrt((sims + 1.0) * 0.5)
+    k = cc.shape[0]
+    masked = jnp.where(jnp.eye(k, dtype=bool), -jnp.inf, cc)
+    s = jnp.max(masked, axis=1)
+    return cc, s

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: tiled dense similarity matrix ``X @ C^T``.
+
+This is the one dense compute hot-spot of the (otherwise control-flow
+dominated) algorithm family: a block of points against all centers, used by
+the runtime to (re)initialize `l`/`u` bounds and by the dense baseline.
+
+TPU-shaped design (DESIGN.md §Hardware-Adaptation):
+
+* grid = (B/bB, K/bK, D/bD); the D axis is the innermost (reduction) axis,
+  so each (i, j) output tile stays resident in VMEM while partial products
+  accumulate over D-tiles — the HBM↔VMEM schedule a CUDA kernel would
+  express with threadblocks + shared memory is expressed with BlockSpecs.
+* block shapes default to (128, 128, 512): MXU-friendly multiples of 128,
+  f32 accumulation, VMEM footprint = (bB·bD + bK·bD + bB·bK)·4 B ≈ 576 KiB
+  per step — far under the ~16 MiB budget, leaving room for
+  double-buffering.
+* `interpret=True` everywhere in this environment: the CPU PJRT plugin
+  cannot execute Mosaic custom-calls; real-TPU lowering would only change
+  `interpret` and the artifacts would be compile-only targets.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = (128, 128, 512)
+
+
+def _matmul_kernel(x_ref, c_ref, o_ref):
+    """One grid step: accumulate x_tile @ c_tile^T into the output tile."""
+    d_step = pl.program_id(2)
+
+    @pl.when(d_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], c_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(n, want):
+    """Largest divisor of n that is <= want (keeps the grid exact without
+    padding; shapes in this project are chosen to divide evenly)."""
+    b = min(n, want)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def similarity(x, c, *, block=None):
+    """Tiled ``x[B,D] @ c[K,D]^T -> [B,K]`` as a Pallas kernel.
+
+    ``block`` is ``(bB, bK, bD)``; each entry is clamped to a divisor of the
+    corresponding dimension.
+    """
+    b, d = x.shape
+    k, d2 = c.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    want = block or DEFAULT_BLOCK
+    bb = _pick_block(b, want[0])
+    bk = _pick_block(k, want[1])
+    bd = _pick_block(d, want[2])
+    grid = (b // bb, k // bk, d // bd)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bd), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bd), lambda i, j, s: (j, s)),
+        ],
+        out_specs=pl.BlockSpec((bb, bk), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=True,
+    )(x, c)
+
+
+def vmem_bytes(block=DEFAULT_BLOCK):
+    """VMEM footprint estimate of one grid step (f32), for DESIGN.md §Perf."""
+    bb, bk, bd = block
+    return 4 * (bb * bd + bk * bd + bb * bk)

@@ -1,0 +1,50 @@
+"""L2 JAX model: the dense assignment step of spherical k-means.
+
+Composes the L1 Pallas similarity kernel with the top-2 reduction every
+bound-based variant needs (best center, best similarity, second-best
+similarity), plus the center–center bound graph. `aot.py` lowers these
+functions once to HLO text; the Rust runtime executes them via PJRT with
+Python long gone.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import similarity as simk
+
+
+def assign_step(x, c):
+    """Dense tile assignment: ``(best i32[B], best_sim f32[B], second f32[B])``.
+
+    ``x[B,D]`` is a (densified) tile of unit rows, ``c[K,D]`` the current
+    unit centers. The similarity matrix comes from the Pallas kernel; the
+    top-2 reduction lowers to the same HLO module and fuses with it.
+    """
+    sims = simk.similarity(x, c)
+    k = sims.shape[1]
+    if k == 1:
+        b = sims.shape[0]
+        return (
+            jnp.zeros(b, dtype=jnp.int32),
+            sims[:, 0],
+            jnp.full(b, -1.0, dtype=sims.dtype),
+        )
+    # Top-2 via argmax + mask + max rather than jax.lax.top_k: top_k lowers
+    # to the modern `topk(..., largest=true)` HLO op, which the xla crate's
+    # XLA 0.5.1 text parser rejects; these classic ops round-trip fine.
+    best_idx = jnp.argmax(sims, axis=1).astype(jnp.int32)
+    best = jnp.max(sims, axis=1)
+    is_best = jnp.arange(k, dtype=jnp.int32)[None, :] == best_idx[:, None]
+    masked = jnp.where(is_best, -jnp.inf, sims)
+    second = jnp.max(masked, axis=1)
+    return best_idx, best, second
+
+
+def cc_step(c):
+    """Center–center half-angle bounds ``cc[K,K]`` and ``s[K]`` (§5.2),
+    using the Pallas kernel for the K×K similarity matrix."""
+    sims = jnp.clip(simk.similarity(c, c), -1.0, 1.0)
+    cc = jnp.sqrt((sims + 1.0) * 0.5)
+    k = cc.shape[0]
+    masked = jnp.where(jnp.eye(k, dtype=bool), -jnp.inf, cc)
+    return cc, jnp.max(masked, axis=1)

@@ -1,0 +1,174 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and data; assert_allclose against the reference —
+the CORE correctness signal for the compiled artifacts.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bound_update as bu
+from compile.kernels import ref
+from compile.kernels import similarity as simk
+
+
+def unit_rows(rng, n, d):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    norms = np.linalg.norm(x, axis=1, keepdims=True)
+    return x / np.maximum(norms, 1e-9)
+
+
+# ------------------------------------------------------------- similarity
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 40),
+    k=st.integers(1, 24),
+    d=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_similarity_matches_ref(b, k, d, seed):
+    rng = np.random.default_rng(seed)
+    x = unit_rows(rng, b, d)
+    c = unit_rows(rng, k, d)
+    got = np.asarray(simk.similarity(x, c))
+    want = np.asarray(ref.similarity_ref(x, c))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "block", [(8, 8, 16), (16, 4, 64), (128, 128, 512), (1, 1, 1)]
+)
+def test_similarity_block_shapes_agree(block):
+    rng = np.random.default_rng(7)
+    x = unit_rows(rng, 32, 64)
+    c = unit_rows(rng, 16, 64)
+    got = np.asarray(simk.similarity(x, c, block=block))
+    want = np.asarray(ref.similarity_ref(x, c))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_similarity_non_divisible_shapes():
+    # 37, 13, 71 are prime-ish: exercises the divisor-clamping logic.
+    rng = np.random.default_rng(11)
+    x = unit_rows(rng, 37, 71)
+    c = unit_rows(rng, 13, 71)
+    got = np.asarray(simk.similarity(x, c))
+    want = np.asarray(ref.similarity_ref(x, c))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_estimate_is_positive_and_modest():
+    vm = simk.vmem_bytes()
+    assert 0 < vm < 16 * 2**20, "default blocks must fit VMEM"
+
+
+# ------------------------------------------------------------- assign_step
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 32),
+    k=st.integers(2, 24),
+    d=st.integers(2, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_assign_matches_ref(b, k, d, seed):
+    from compile import model
+
+    rng = np.random.default_rng(seed)
+    x = unit_rows(rng, b, d)
+    c = unit_rows(rng, k, d)
+    gi, gb, gs = (np.asarray(v) for v in model.assign_step(x, c))
+    ri, rb, rs = (np.asarray(v) for v in ref.assign_ref(x, c))
+    np.testing.assert_allclose(gb, rb, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gs, rs, rtol=1e-5, atol=1e-5)
+    # Index may differ only under (near-)ties of the top-2 values.
+    differs = gi != ri
+    if differs.any():
+        np.testing.assert_allclose(gb[differs], gs[differs], rtol=1e-4, atol=1e-4)
+
+
+def test_assign_against_numpy_bruteforce():
+    from compile import model
+
+    rng = np.random.default_rng(3)
+    x = unit_rows(rng, 50, 30)
+    c = unit_rows(rng, 8, 30)
+    gi, gb, gs = (np.asarray(v) for v in model.assign_step(x, c))
+    sims = x @ c.T
+    np.testing.assert_array_equal(gi, sims.argmax(axis=1))
+    np.testing.assert_allclose(gb, sims.max(axis=1), rtol=1e-5, atol=1e-6)
+    part = np.partition(sims, -2, axis=1)
+    np.testing.assert_allclose(gs, part[:, -2], rtol=1e-5, atol=1e-6)
+
+
+def test_assign_k_equals_one():
+    from compile import model
+
+    rng = np.random.default_rng(5)
+    x = unit_rows(rng, 9, 12)
+    c = unit_rows(rng, 1, 12)
+    gi, gb, gs = (np.asarray(v) for v in model.assign_step(x, c))
+    assert (gi == 0).all()
+    np.testing.assert_allclose(gb, (x @ c.T)[:, 0], rtol=1e-5, atol=1e-6)
+    assert (gs == -1.0).all()
+
+
+# ------------------------------------------------------------ bound_update
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bound_update_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    l = rng.uniform(-1, 1, n).astype(np.float32)
+    u = rng.uniform(-1, 1, n).astype(np.float32)
+    pa = rng.uniform(-1, 1, n).astype(np.float32)
+    pc = rng.uniform(0, 1, n).astype(np.float32)
+    gl, gu = (np.asarray(v) for v in bu.bound_update(l, u, pa, pc))
+    rl, ru = (np.asarray(v) for v in ref.bound_update_ref(l, u, pa, pc))
+    np.testing.assert_allclose(gl, rl, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(gu, ru, rtol=1e-5, atol=1e-6)
+
+
+def test_bound_update_guards():
+    # Center moved past the bound angle: lower bound saturates to -1.
+    l = np.array([0.9], dtype=np.float32)
+    u = np.array([0.1], dtype=np.float32)
+    pa = np.array([-0.95], dtype=np.float32)  # p <= -l
+    pc = np.array([0.0], dtype=np.float32)
+    gl, gu = (np.asarray(v) for v in bu.bound_update(l, u, pa, pc))
+    assert gl[0] == -1.0
+    np.testing.assert_allclose(gu[0], 0.1, atol=1e-6)  # pc=0 ⇒ no change
+
+
+# ------------------------------------------------------------- cc bounds
+
+
+def test_cc_bounds_ref_properties():
+    rng = np.random.default_rng(13)
+    c = unit_rows(rng, 10, 20)
+    cc, s = (np.asarray(v) for v in ref.cc_bounds_ref(c))
+    assert cc.shape == (10, 10)
+    np.testing.assert_allclose(cc, cc.T, atol=1e-6)
+    np.testing.assert_allclose(np.diag(cc), 1.0, atol=1e-6)
+    for i in range(10):
+        others = [cc[i, j] for j in range(10) if j != i]
+        np.testing.assert_allclose(s[i], max(others), atol=1e-6)
+
+
+def test_cc_step_matches_ref():
+    from compile import model
+
+    rng = np.random.default_rng(17)
+    c = unit_rows(rng, 12, 24)
+    gcc, gs = (np.asarray(v) for v in model.cc_step(c))
+    rcc, rs = (np.asarray(v) for v in ref.cc_bounds_ref(c))
+    np.testing.assert_allclose(gcc, rcc, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gs, rs, rtol=1e-5, atol=1e-5)

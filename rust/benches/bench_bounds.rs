@@ -1,0 +1,149 @@
+//! Bound-machinery benchmarks and ablations:
+//!
+//! 1. **Cost**: closed-form Eq. 4/5 vs the trigonometric Eq. 3 (the paper's
+//!    10–50 vs 60–100 CPU-cycle argument) vs the Euclidean detour
+//!    `√(2−2s)` + triangle + conversion back.
+//! 2. **Tightness**: how often each single-bound rule (Eq. 9, Eq. 8,
+//!    guarded min-p, safe-interval) retains enough information to prune,
+//!    over simulated center-movement traces.
+//! 3. **End-to-end**: Hamerly with Eq. 9 vs the beyond-paper guarded
+//!    min-p rule on a real workload (prune counts + time).
+//!
+//! ```text
+//! cargo bench --bench bench_bounds -- [--runs 10]
+//! ```
+
+use sphkm::bounds::hamerly_bound::{update_eq8, update_eq9, update_min_p_guarded, update_safe};
+use sphkm::bounds::{sim_lower, sim_lower_arc, sim_upper, update_upper};
+use sphkm::data::datasets::{self, Scale};
+use sphkm::init::{seed_centers, InitMethod};
+use sphkm::kmeans::{run_with_centers, KMeansConfig, Variant};
+use sphkm::util::benchkit::{bench, black_box, BenchOpts};
+use sphkm::util::cli::Args;
+use sphkm::util::rng::Xoshiro256;
+
+fn main() {
+    let args = Args::from_env();
+    let mut opts = BenchOpts::from_args(&args);
+    if !args.has("runs") {
+        opts.runs = 10;
+    }
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let pairs: Vec<(f64, f64)> = (0..1_000_000)
+        .map(|_| (rng.next_f64() * 2.0 - 1.0, rng.next_f64() * 2.0 - 1.0))
+        .collect();
+
+    // --- 1. cost of the bound formulas -------------------------------
+    bench("bound_cost/closed-form Eq.4 (1M)", opts, || {
+        let mut acc = 0.0;
+        for &(a, b) in &pairs {
+            acc += sim_lower(a, b);
+        }
+        black_box(acc);
+    });
+    bench("bound_cost/trigonometric Eq.3 (1M)", opts, || {
+        let mut acc = 0.0;
+        for &(a, b) in &pairs {
+            acc += sim_lower_arc(a, b);
+        }
+        black_box(acc);
+    });
+    bench("bound_cost/euclidean detour (1M)", opts, || {
+        // d = √(2−2s); triangle on distances; convert back s = 1−d²/2.
+        let mut acc = 0.0;
+        for &(a, b) in &pairs {
+            let da = (2.0 - 2.0 * a).max(0.0).sqrt();
+            let db = (2.0 - 2.0 * b).max(0.0).sqrt();
+            let d = da + db;
+            acc += 1.0 - 0.5 * d * d;
+        }
+        black_box(acc);
+    });
+    bench("bound_cost/upper Eq.5 (1M)", opts, || {
+        let mut acc = 0.0;
+        for &(a, b) in &pairs {
+            acc += sim_upper(a, b);
+        }
+        black_box(acc);
+    });
+
+    // --- 2. tightness of the single-bound rules ----------------------
+    // Simulated trace: u ~ second-best sims, p(j) drifting to 1.
+    let mut survive = [0u64; 4]; // eq9, eq8, guarded, safe
+    let mut total = 0u64;
+    for trial in 0..20_000u64 {
+        let mut r = Xoshiro256::substream(11, trial);
+        let l = 0.5 + 0.5 * r.next_f64(); // tight lower bound
+        let mut u = l - 0.3 * r.next_f64(); // below: prunable
+        let mut u8v = u;
+        let mut ug = u;
+        let mut us = u;
+        for it in 0..10i32 {
+            // Center movements shrink geometrically as the run converges.
+            let movement = 0.08 * 0.6f64.powi(it);
+            let ps: Vec<f64> = (0..8)
+                .map(|_| (1.0 - movement * r.next_f64()).min(1.0))
+                .collect();
+            let pmin = ps.iter().cloned().fold(f64::MAX, f64::min);
+            let pmax = ps.iter().cloned().fold(f64::MIN, f64::max);
+            u = update_eq9(u, pmin);
+            u8v = update_eq8(u8v, pmin, pmax);
+            ug = update_min_p_guarded(ug, pmin);
+            us = update_safe(us, pmin, pmax);
+            total += 1;
+            // Would the bound still prune against the (unchanged) l?
+            if l >= u {
+                survive[0] += 1;
+            }
+            if l >= u8v {
+                survive[1] += 1;
+            }
+            if l >= ug {
+                survive[2] += 1;
+            }
+            if l >= us {
+                survive[3] += 1;
+            }
+        }
+    }
+    println!("\n# single-bound pruning survival over drift traces (higher = tighter)");
+    for (name, s) in ["Eq.9", "Eq.8", "guarded min-p", "safe-interval"]
+        .iter()
+        .zip(survive)
+    {
+        println!(
+            "tightness {:<14} {:>7.3}% of bound checks still prune",
+            name,
+            100.0 * s as f64 / total as f64
+        );
+    }
+    // Validity sanity: guarded min-p must dominate Eq.8/Eq.9 tightness.
+    assert!(survive[2] >= survive[0]);
+    assert!(survive[2] >= survive[1]);
+
+    // --- 3. end-to-end: Eq.9 vs guarded min-p in Hamerly --------------
+    let ds = datasets::dblp_author_conf(Scale::Tiny, 5);
+    let k = 50.min(ds.matrix.rows() / 2);
+    let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 9);
+    for (name, tight) in [("hamerly/eq9", false), ("hamerly/guarded-min-p", true)] {
+        let cfg = KMeansConfig::new(k)
+            .variant(Variant::SimplifiedHamerly)
+            .tight_bound(tight);
+        let mut sims = 0u64;
+        let r = bench(name, opts, || {
+            let res = run_with_centers(&ds.matrix, init.centers.clone(), &cfg);
+            sims = res.stats.total_point_center();
+            black_box(res.objective);
+        });
+        println!("    -> {} point-center sims ({})", sims, r.name);
+    }
+
+    // update_upper itself (the O(N·k) Elkan maintenance cost).
+    bench("bound_cost/guarded update_upper (1M)", opts, || {
+        let mut acc = 0.0;
+        for &(a, b) in &pairs {
+            acc += update_upper(a, b);
+        }
+        black_box(acc);
+    });
+}

@@ -1,0 +1,22 @@
+//! Regenerates **Fig. 1** of the paper: per-iteration similarity
+//! computations (1a cumulative: 1b) and per-iteration run time
+//! (1c, cumulative: 1d) on the DBLP author-conference analogue with one
+//! initialization and large k (paper: k=100).
+//!
+//! ```text
+//! cargo bench --bench bench_fig1 -- [--scale S] [--k 100] [--reps 10]
+//! ```
+
+use sphkm::coordinator::experiments::{self, ExperimentOpts};
+use sphkm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let mut opts = ExperimentOpts::from_args(&args);
+    if !args.has("reps") {
+        opts.reps = if args.flag("quick") { 2 } else { 10 }; // paper: 10 re-runs
+    }
+    let k = args.get_or("k", 100usize).unwrap_or(100);
+    println!("# Fig. 1 bench — scale={}, k={k}, reps={}", opts.scale.name(), opts.reps);
+    experiments::fig1(&opts, k);
+}

@@ -1,0 +1,23 @@
+//! Regenerates **Fig. 2** of the paper: run time vs k on the DBLP
+//! author-conference analogue (high N, low d) and its transpose
+//! (low N, high d) — the contrast where the `O(k²·d)` center–center cost
+//! makes the full Elkan/Hamerly variants blow up.
+//!
+//! ```text
+//! cargo bench --bench bench_fig2 -- [--scale S] [--reps N] [--ks ...]
+//!     [--ablation]   # adds the cc-cost-vs-dimensionality ablation
+//! ```
+
+use sphkm::coordinator::experiments::{self, ExperimentOpts};
+use sphkm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let opts = ExperimentOpts::from_args(&args);
+    println!("# Fig. 2 bench — scale={}, reps={}", opts.scale.name(), opts.reps);
+    experiments::fig2(&opts);
+    if args.flag("ablation") {
+        let k = args.get_or("k", 50usize).unwrap_or(50);
+        experiments::ablation_cc(&opts, k);
+    }
+}

@@ -1,0 +1,99 @@
+//! Microbenchmarks of the hot-path primitives: sparse·sparse dot
+//! (merge vs suffix-binary-search), sparse·dense dot, dense·dense dot,
+//! and the center update. These are the innermost loops the §Perf pass
+//! optimizes; see EXPERIMENTS.md §Perf for the recorded iterations.
+//!
+//! ```text
+//! cargo bench --bench bench_sparse -- [--runs 20]
+//! ```
+
+use sphkm::sparse::{CsrMatrix, DenseMatrix, SparseVec};
+use sphkm::util::benchkit::{bench, black_box, BenchOpts};
+use sphkm::util::cli::Args;
+use sphkm::util::rng::Xoshiro256;
+
+fn random_sparse(rng: &mut Xoshiro256, d: usize, nnz: usize) -> SparseVec {
+    let mut idx = rng.sample_distinct(d, nnz);
+    idx.sort_unstable();
+    SparseVec::new(
+        d,
+        idx.iter().map(|&i| i as u32).collect(),
+        idx.iter().map(|_| rng.next_f32() - 0.5).collect(),
+    )
+}
+
+fn main() {
+    let args = Args::from_env();
+    let mut opts = BenchOpts::from_args(&args);
+    if !args.has("runs") {
+        opts.runs = 10;
+    }
+    let mut rng = Xoshiro256::seed_from_u64(7);
+
+    // Sparse·sparse: balanced sizes (merge path).
+    let d = 50_000;
+    let a: Vec<SparseVec> = (0..64).map(|_| random_sparse(&mut rng, d, 80)).collect();
+    let b: Vec<SparseVec> = (0..64).map(|_| random_sparse(&mut rng, d, 80)).collect();
+    bench("sparse_dot/merge 80x80 nnz (64x64 pairs)", opts, || {
+        let mut acc = 0.0;
+        for x in &a {
+            for y in &b {
+                acc += x.dot(y);
+            }
+        }
+        black_box(acc);
+    });
+
+    // Sparse·sparse: lopsided sizes (suffix binary search path).
+    let tiny: Vec<SparseVec> = (0..64).map(|_| random_sparse(&mut rng, d, 3)).collect();
+    let big: Vec<SparseVec> = (0..64).map(|_| random_sparse(&mut rng, d, 2000)).collect();
+    bench("sparse_dot/gallop 3x2000 nnz (64x64 pairs)", opts, || {
+        let mut acc = 0.0;
+        for x in &tiny {
+            for y in &big {
+                acc += x.dot(y);
+            }
+        }
+        black_box(acc);
+    });
+
+    // Sparse·dense: the assignment-loop hot path.
+    let dense: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+    let docs: Vec<SparseVec> = (0..2048).map(|_| random_sparse(&mut rng, d, 80)).collect();
+    bench("sparse_dense_dot 80 nnz x 2048 rows", opts, || {
+        let mut acc = 0.0;
+        for x in &docs {
+            acc += x.dot_dense(&dense);
+        }
+        black_box(acc);
+    });
+
+    // Dense·dense: the center–center (cc) cost that Fig. 2 hinges on.
+    let k = 64;
+    let dd = 8192;
+    let mut centers = DenseMatrix::zeros(k, dd);
+    for j in 0..k {
+        for v in centers.row_mut(j) {
+            *v = rng.next_f32();
+        }
+    }
+    bench("dense_dot 8192-d centers (64x64/2 pairs)", opts, || {
+        let mut acc = 0.0;
+        for i in 0..k {
+            for j in (i + 1)..k {
+                acc += centers.row_dot(i, &centers, j);
+            }
+        }
+        black_box(acc);
+    });
+
+    // Center rebuild + update (the O(nnz) per-iteration bookkeeping).
+    let rows: Vec<SparseVec> = (0..4096).map(|_| random_sparse(&mut rng, 4096, 60)).collect();
+    let m = CsrMatrix::from_rows(4096, &rows);
+    let assign: Vec<u32> = (0..4096u32).map(|i| i % 32).collect();
+    let mut cs = sphkm::kmeans::Centers::from_initial(DenseMatrix::zeros(32, 4096));
+    bench("centers rebuild+update 4096 rows, k=32", opts, || {
+        cs.rebuild(&m, &assign);
+        black_box(cs.update());
+    });
+}

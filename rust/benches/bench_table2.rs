@@ -1,0 +1,20 @@
+//! Regenerates **Table 2** of the paper: relative change of the converged
+//! objective vs uniform random initialization for k-means++ and AFK-MC²
+//! with α ∈ {1, 1.5}, across datasets and k.
+//!
+//! ```text
+//! cargo bench --bench bench_table2 -- [--scale S] [--reps 10] [--ks ...]
+//! ```
+
+use sphkm::coordinator::experiments::{self, ExperimentOpts};
+use sphkm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let mut opts = ExperimentOpts::from_args(&args);
+    if !args.has("reps") && !args.flag("quick") {
+        opts.reps = 3; // paper: 10 seeds; 3 keeps the default run tractable
+    }
+    println!("# Table 2 bench — scale={}, reps={}", opts.scale.name(), opts.reps);
+    experiments::table2(&opts);
+}

@@ -1,0 +1,24 @@
+//! Regenerates **Table 3** of the paper: run times (ms) of Standard,
+//! Elkan, Simplified Elkan, Hamerly, and Simplified Hamerly across the six
+//! dataset analogues and the k grid.
+//!
+//! ```text
+//! cargo bench --bench bench_table3 -- [--scale tiny|small|medium]
+//!     [--reps N] [--ks 2,10,20,50,100,200] [--quick] [--extended]
+//! ```
+//!
+//! `--extended` adds the Yinyang variant (§5.5, implemented beyond the
+//! paper). `--table1` prints the dataset inventory as well.
+
+use sphkm::coordinator::experiments::{self, ExperimentOpts};
+use sphkm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let opts = ExperimentOpts::from_args(&args);
+    println!("# Table 3 bench — scale={}, reps={}", opts.scale.name(), opts.reps);
+    if args.flag("table1") {
+        experiments::table1(&opts);
+    }
+    experiments::table3(&opts, args.flag("extended"));
+}

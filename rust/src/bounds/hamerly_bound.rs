@@ -1,0 +1,259 @@
+//! The Hamerly upper-bound update and its "easily overlooked pitfall"
+//! (§5.3 of the paper).
+//!
+//! Hamerly keeps **one** upper bound `u(i)` for "all other centers". With
+//! distances one updates it with the largest center movement; with cosines
+//! the update `u·p + √((1−u²)(1−p²))` (Eq. 7) is **not monotone in `p`**:
+//! for large `u` a *smaller* `p` loosens the bound most, but for small `u`
+//! a *larger* `p` does. So no single `p(j)` is safe for all points.
+//!
+//! The paper's resolution, which we implement:
+//!
+//! * Eq. 8 — use both `p' = min_{j≠a} p(j)` and `p'' = max_{j≠a} p(j)`:
+//!   `u ← u·p'' + √((1−u²)(1−p'²))`.
+//! * Eq. 9 — since `p'' → 1` at convergence, drop the first factor:
+//!   `u ← u + √((1−u²)(1−p'²))`, precomputing `(1−p'²)` per center.
+//!
+//! **Validity regime.** Eq. 8/9 as printed assume the practical regime
+//! `u ≥ 0` and `p(j) ≥ 0` (TF-IDF document data is non-negative, so all
+//! similarities are; and centers barely move after the first iterations,
+//! so `p ≈ 1`). For *general* unit vectors (negative similarities
+//! possible) we also provide [`update_safe`], the exact interval
+//! maximization of Eq. 7 over `p ∈ [p_min, p_max]`, which is valid for all
+//! inputs and reduces to Eq. 8 in the practical regime. The spherical
+//! Hamerly implementation uses Eq. 9 on the fast path and falls back to
+//! [`update_safe`] when `u < 0` or `p_min < 0` — see the
+//! `counterexample_*` tests for why the naive updates would be wrong.
+
+use super::{clamp_sim, sin_from_cos};
+
+/// Unsafe-naive update: plug the minimum `p` into the **unguarded** Eq. 7.
+/// This is the pitfall — it is **not** a valid single bound (see
+/// `counterexample_*` tests); kept only for the ablation bench and
+/// regression tests.
+#[inline(always)]
+pub fn update_naive_min_p(u: f64, p_min: f64) -> f64 {
+    super::sim_upper(u, p_min)
+}
+
+/// **Beyond the paper:** the *guarded* min-p update. Once Eq. 7 carries
+/// the saturation guard of [`crate::bounds::update_upper`] (saturate to 1
+/// when `p ≤ u`), the per-center update becomes monotone non-increasing in
+/// `p` — so plugging in `p' = min_{j≠a} p(j)` is simultaneously **valid**
+/// (it dominates every per-center requirement) and **tight** (it equals
+/// the exact requirement `max_j guarded-Eq.7(u, p_j)`). The paper's §5.3
+/// "we probably cannot use just one p(j) for all points" refers to the
+/// unguarded formula; with the guard we can, and the bound dominates both
+/// Eq. 8 and Eq. 9. Proven by `guarded_min_p_is_valid_and_tightest` and
+/// benched in `bench_bounds`; selectable in the Hamerly/Yinyang variants
+/// via `KMeansConfig::tight_hamerly_bound`.
+#[inline(always)]
+pub fn update_min_p_guarded(u: f64, p_min: f64) -> f64 {
+    super::update_upper(u, p_min)
+}
+
+/// Eq. 8 as printed: `u·p'' + √((1−u²)(1−p'²))`, with the saturation guard
+/// of [`crate::bounds::update_upper`] (saturate to 1 when any center may
+/// have moved past the bound angle, i.e. `p' ≤ u`).
+/// Valid for `u ≥ 0` and `0 ≤ p' ≤ p''`.
+#[inline(always)]
+pub fn update_eq8(u: f64, p_min: f64, p_max: f64) -> f64 {
+    let u = clamp_sim(u);
+    if p_min <= u {
+        return 1.0;
+    }
+    clamp_sim(u * clamp_sim(p_max) + sin_from_cos(u) * sin_from_cos(p_min))
+}
+
+/// Eq. 9: the efficient upper bound `u + √((1−u²)·(1−p'²))`, using the
+/// precomputed `one_minus_p_min_sq = 1 − p'²` term.
+/// Valid for `u ≥ 0` and `p' ≥ 0` (dominates Eq. 8 there).
+#[inline(always)]
+pub fn update_eq9_pre(u: f64, one_minus_p_min_sq: f64) -> f64 {
+    let u = clamp_sim(u);
+    clamp_sim(u + ((1.0 - u * u).max(0.0) * one_minus_p_min_sq.max(0.0)).sqrt())
+}
+
+/// Eq. 9 from the raw `p'` value.
+#[inline(always)]
+pub fn update_eq9(u: f64, p_min: f64) -> f64 {
+    let p = clamp_sim(p_min);
+    update_eq9_pre(u, 1.0 - p * p)
+}
+
+/// Exact interval maximization of Eq. 7 over `p ∈ [p_min, p_max]` —
+/// valid for **all** `u, p ∈ [−1, 1]`:
+///
+/// * the linear term `u·p` is maximized at an endpoint depending on the
+///   sign of `u`;
+/// * the `√(1−p²)` term is maximized at the `p` of smallest magnitude in
+///   the interval (1 if the interval straddles 0).
+///
+/// Maximizing the two terms separately dominates the joint maximum, so the
+/// result is a correct (if slightly loose) single bound.
+#[inline(always)]
+pub fn update_safe(u: f64, p_min: f64, p_max: f64) -> f64 {
+    let u = clamp_sim(u);
+    let (p_min, p_max) = (clamp_sim(p_min), clamp_sim(p_max));
+    debug_assert!(p_min <= p_max);
+    if p_min <= u {
+        // Some center may have moved past the bound angle: saturate
+        // (see `crate::bounds::update_upper`).
+        return 1.0;
+    }
+    let linear = if u >= 0.0 { u * p_max } else { u * p_min };
+    let max_sin = if p_min <= 0.0 && 0.0 <= p_max {
+        1.0
+    } else {
+        sin_from_cos(if p_min.abs() < p_max.abs() { p_min } else { p_max })
+    };
+    clamp_sim(linear + sin_from_cos(u) * max_sin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::update_upper;
+    use crate::util::prop::forall;
+
+    /// Eq. 7 evaluated at every actual center movement; the true requirement
+    /// for a single bound is `max_j update_upper(u, p_j)`.
+    fn exact_requirement(u: f64, ps: &[f64]) -> f64 {
+        ps.iter().fold(f64::MIN, |m, &p| m.max(update_upper(u, p)))
+    }
+
+    #[test]
+    fn eq7_is_not_monotone_in_p() {
+        // Raw Eq. 7 equals cos(θ_u − θ_p): it is maximized at p = u, not at
+        // an endpoint — so no single p(j) extreme is safe for the unguarded
+        // formula (the paper's §5.3 observation).
+        use crate::bounds::sim_upper;
+        // High u (small θ_u): the *larger* p loosens more…
+        assert!(sim_upper(0.95, 0.9) > sim_upper(0.95, 0.6));
+        // …while for lower u the *smaller* p loosens more.
+        assert!(sim_upper(0.3, 0.6) > sim_upper(0.3, 0.9));
+    }
+
+    #[test]
+    fn counterexample_naive_min_p_is_invalid() {
+        // With high u and centers moving different amounts, plugging the
+        // minimum p into unguarded Eq. 7 UNDERestimates the requirement:
+        // the p = 0.9 center (which moved past the bound angle, p < u)
+        // forces saturation to 1, which p_min = 0.6 does not reflect.
+        let u = 0.95;
+        let ps = [0.6, 0.9];
+        let naive = update_naive_min_p(u, 0.6);
+        let required = exact_requirement(u, &ps);
+        assert!(
+            naive < required - 1e-9,
+            "expected the naive bound {naive} to be below the requirement {required}"
+        );
+    }
+
+    #[test]
+    fn guarded_min_p_is_valid_and_tightest() {
+        forall(2000, 0x4a8, |g| {
+            let u = g.sim();
+            let n = g.usize_in(1, 8);
+            let ps: Vec<f64> = (0..n).map(|_| g.sim()).collect();
+            let p_min = ps.iter().cloned().fold(f64::MAX, f64::min);
+            let p_max = ps.iter().cloned().fold(f64::MIN, f64::max);
+            let req = exact_requirement(u, &ps);
+            let tight = update_min_p_guarded(u, p_min);
+            // Valid: dominates the exact requirement…
+            assert!(tight >= req - 1e-12, "guarded min-p {tight} < req {req}");
+            // …and exactly equals it (tightest possible single bound).
+            assert!(
+                (tight - req).abs() < 1e-12,
+                "guarded min-p {tight} != req {req} (u={u}, ps={ps:?})"
+            );
+            // Dominated by the looser alternatives wherever they are valid.
+            let safe = update_safe(u, p_min, p_max);
+            assert!(safe >= tight - 1e-12);
+            if u >= 0.0 && p_min >= 0.0 {
+                assert!(update_eq9(u, p_min) >= tight - 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn counterexample_eq9_needs_nonnegative_u() {
+        // Outside its validity regime (u < 0), Eq. 9 can under-bound —
+        // which is exactly why the algorithm falls back to update_safe.
+        let u = -0.9;
+        let ps = [0.1, 0.99];
+        let req = exact_requirement(u, &ps);
+        let e9 = update_eq9(u, 0.1);
+        assert!(e9 < req, "expected Eq.9 {e9} below requirement {req} for u<0");
+        let safe = update_safe(u, 0.1, 0.99);
+        assert!(safe >= req - 1e-9);
+    }
+
+    #[test]
+    fn eq8_and_eq9_dominate_in_practical_regime() {
+        // u ≥ 0 and all p(j) ∈ [0, 1]: the paper's setting.
+        forall(1000, 0x4a3, |g| {
+            let u = g.f64_in(0.0, 1.0);
+            let n = g.usize_in(1, 8);
+            let ps: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 1.0)).collect();
+            let p_min = ps.iter().cloned().fold(f64::MAX, f64::min);
+            let p_max = ps.iter().cloned().fold(f64::MIN, f64::max);
+            let req = exact_requirement(u, &ps);
+            let e8 = update_eq8(u, p_min, p_max);
+            let e9 = update_eq9(u, p_min);
+            assert!(e8 >= req - 1e-9, "Eq.8 {e8} below requirement {req} (u={u})");
+            assert!(e9 >= req - 1e-9, "Eq.9 {e9} below requirement {req} (u={u})");
+            assert!(e9 >= e8 - 1e-12, "Eq.9 {e9} should dominate Eq.8 {e8}");
+        });
+    }
+
+    #[test]
+    fn safe_dominates_for_all_inputs() {
+        forall(2000, 0x4a6, |g| {
+            let u = g.sim();
+            let n = g.usize_in(1, 8);
+            let ps: Vec<f64> = (0..n).map(|_| g.sim()).collect();
+            let p_min = ps.iter().cloned().fold(f64::MAX, f64::min);
+            let p_max = ps.iter().cloned().fold(f64::MIN, f64::max);
+            let req = exact_requirement(u, &ps);
+            let safe = update_safe(u, p_min, p_max);
+            assert!(
+                safe >= req - 1e-9,
+                "update_safe {safe} below requirement {req} (u={u}, ps={ps:?})"
+            );
+        });
+    }
+
+    #[test]
+    fn safe_reduces_to_eq8_in_practical_regime() {
+        forall(500, 0x4a7, |g| {
+            let u = g.f64_in(0.0, 1.0);
+            let p_min = g.f64_in(0.0, 1.0);
+            let p_max = g.f64_in(p_min, 1.0);
+            let safe = update_safe(u, p_min, p_max);
+            let e8 = update_eq8(u, p_min, p_max);
+            assert!(
+                (safe - e8).abs() < 1e-12,
+                "safe {safe} != Eq.8 {e8} for u={u} p=[{p_min},{p_max}]"
+            );
+        });
+    }
+
+    #[test]
+    fn eq9_tightness_at_convergence() {
+        // As p' → 1 the update must converge to a no-op.
+        for &u in &[0.0, 0.3, 0.8, 0.999] {
+            let updated = update_eq9(u, 1.0 - 1e-15);
+            assert!((updated - u).abs() < 1e-6, "u={u}, updated={updated}");
+        }
+    }
+
+    #[test]
+    fn eq9_pre_matches_eq9() {
+        forall(200, 0x4a5, |g| {
+            let u = g.sim();
+            let p = g.sim();
+            assert!((update_eq9(u, p) - update_eq9_pre(u, 1.0 - p * p)).abs() < 1e-12);
+        });
+    }
+}

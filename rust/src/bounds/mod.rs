@@ -1,0 +1,250 @@
+//! The cosine triangle inequality (Schubert 2021) and the bound-maintenance
+//! algebra built on it — the mathematical core of the paper.
+//!
+//! For unit vectors and `sim(x,y) = ⟨x,y⟩ = cos θ(x,y)`:
+//!
+//! ```text
+//! sim(x,y) ≥ sim(x,z)·sim(z,y) − √((1−sim(x,z)²)(1−sim(z,y)²))   (Eq. 4)
+//! sim(x,y) ≤ sim(x,z)·sim(z,y) + √((1−sim(x,z)²)(1−sim(z,y)²))   (Eq. 5)
+//! ```
+//!
+//! These equal `cos(θxz + θzy)` and `cos(θxz − θzy)` — the arc-length
+//! triangle inequality (Eq. 3) without trigonometric function calls.
+//!
+//! All similarities are clamped into `[-1, 1]` before entering `√(1−s²)`;
+//! accumulated floating-point error can otherwise push `s²` above 1 and
+//! poison the bound with NaN.
+
+pub mod cc;
+pub mod hamerly_bound;
+
+/// Clamp a similarity into the valid cosine range `[-1, 1]`.
+#[inline(always)]
+pub fn clamp_sim(s: f64) -> f64 {
+    s.clamp(-1.0, 1.0)
+}
+
+/// `sin θ` from `cos θ`: `√(1 − s²)`, safe under clamping.
+#[inline(always)]
+pub fn sin_from_cos(s: f64) -> f64 {
+    let s = clamp_sim(s);
+    (1.0 - s * s).max(0.0).sqrt()
+}
+
+/// Lower bound on `sim(x,y)` given `sim(x,z)` and `sim(z,y)` (Eq. 4),
+/// i.e. `cos(θxz + θzy)` computed without trigonometric calls.
+#[inline(always)]
+pub fn sim_lower(sxz: f64, szy: f64) -> f64 {
+    let (a, b) = (clamp_sim(sxz), clamp_sim(szy));
+    clamp_sim(a * b - sin_from_cos(a) * sin_from_cos(b))
+}
+
+/// Upper bound on `sim(x,y)` given `sim(x,z)` and `sim(z,y)` (Eq. 5),
+/// i.e. `cos(θxz − θzy)`.
+#[inline(always)]
+pub fn sim_upper(sxz: f64, szy: f64) -> f64 {
+    let (a, b) = (clamp_sim(sxz), clamp_sim(szy));
+    clamp_sim(a * b + sin_from_cos(a) * sin_from_cos(b))
+}
+
+/// Reference implementation of Eq. 3 via `arccos`/`cos` — used only in
+/// tests and the `bench_bounds` ablation (it costs 60–100 cycles per trig
+/// call, which is exactly why the paper avoids it).
+pub fn sim_lower_arc(sxz: f64, szy: f64) -> f64 {
+    (clamp_sim(sxz).acos() + clamp_sim(szy).acos()).cos()
+}
+
+/// Reference upper bound via arcs: `cos(|θxz − θzy|)`.
+pub fn sim_upper_arc(sxz: f64, szy: f64) -> f64 {
+    ((clamp_sim(sxz).acos() - clamp_sim(szy).acos()).abs()).cos()
+}
+
+/// Update the **lower** bound `l(i)` on the similarity to the own center
+/// after that center moved with self-similarity `p = ⟨c, c'⟩` (Eq. 6):
+/// `l ← l·p − √((1−l²)(1−p²))`.
+///
+/// **Saturation guard.** Eq. 6 as printed plugs the *bound* `l` into the
+/// three-point inequality, but `cos(θ_l + θ_p)` is only a valid lower
+/// bound while `θ_l + θ_p ≤ π`. If the center moved further than that
+/// (`p ≤ −l`), no information remains and the bound must saturate to −1;
+/// the unguarded formula would wrap around the sphere and *overestimate*.
+/// The paper does not spell this out (with tightened bounds and small
+/// center movements the guard almost never fires — but "almost" breaks
+/// exactness; see `bounds::tests::chained_updates_remain_valid_bounds`).
+#[inline(always)]
+pub fn update_lower(l: f64, p: f64) -> f64 {
+    if p <= -l {
+        return -1.0;
+    }
+    sim_lower(l, p)
+}
+
+/// Update an **upper** bound `u(i,j)` on the similarity to another center
+/// after it moved with self-similarity `p = ⟨c, c'⟩` (Eq. 7):
+/// `u ← u·p + √((1−u²)(1−p²))`.
+///
+/// **Saturation guard** (mirror of [`update_lower`]): the unguarded
+/// formula equals `cos(θ_u − θ_p)`, valid only while `θ_p ≤ θ_u`. If the
+/// center moved further than the bound angle (`p ≤ u`), the true
+/// similarity can reach 1 and the bound must saturate.
+#[inline(always)]
+pub fn update_upper(u: f64, p: f64) -> f64 {
+    if p <= u {
+        return 1.0;
+    }
+    sim_upper(u, p)
+}
+
+/// [`update_lower`] with the center's `sin θ_p = √(1−p²)` precomputed —
+/// the Elkan variants update `N·k` bounds per iteration with only `k`
+/// distinct `p(j)` values, so caching the sine halves the sqrt count
+/// (§Perf optimization; see EXPERIMENTS.md).
+#[inline(always)]
+pub fn update_lower_pre(l: f64, p: f64, sin_p: f64) -> f64 {
+    if p <= -l {
+        return -1.0;
+    }
+    let l = clamp_sim(l);
+    clamp_sim(l * p - sin_from_cos(l) * sin_p)
+}
+
+/// [`update_upper`] with the center's `sin θ_p` precomputed.
+#[inline(always)]
+pub fn update_upper_pre(u: f64, p: f64, sin_p: f64) -> f64 {
+    if p <= u {
+        return 1.0;
+    }
+    let u = clamp_sim(u);
+    clamp_sim(u * p + sin_from_cos(u) * sin_p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn dot(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn triangle_inequality_holds_for_random_unit_vectors() {
+        forall(500, 0x7121, |g| {
+            let d = g.usize_in(2, 40);
+            let x = g.unit(d);
+            let y = g.unit(d);
+            let z = g.unit(d);
+            let sxy = dot(&x, &y);
+            let sxz = dot(&x, &z);
+            let szy = dot(&z, &y);
+            let lo = sim_lower(sxz, szy);
+            let hi = sim_upper(sxz, szy);
+            assert!(
+                sxy >= lo - 1e-9,
+                "lower bound violated: sim={sxy}, bound={lo}"
+            );
+            assert!(
+                sxy <= hi + 1e-9,
+                "upper bound violated: sim={sxy}, bound={hi}"
+            );
+        });
+    }
+
+    #[test]
+    fn closed_form_matches_trigonometric_form() {
+        forall(500, 0x7122, |g| {
+            let a = g.sim();
+            let b = g.sim();
+            assert!(
+                (sim_lower(a, b) - sim_lower_arc(a, b)).abs() < 1e-9,
+                "Eq.4 vs arc mismatch at ({a}, {b})"
+            );
+            assert!(
+                (sim_upper(a, b) - sim_upper_arc(a, b)).abs() < 1e-9,
+                "Eq.5 vs arc mismatch at ({a}, {b})"
+            );
+        });
+    }
+
+    #[test]
+    fn bounds_are_ordered_and_in_range() {
+        forall(500, 0x7123, |g| {
+            let a = g.sim();
+            let b = g.sim();
+            let lo = sim_lower(a, b);
+            let hi = sim_upper(a, b);
+            assert!(lo <= hi + 1e-15);
+            assert!((-1.0..=1.0).contains(&lo));
+            assert!((-1.0..=1.0).contains(&hi));
+        });
+    }
+
+    #[test]
+    fn identity_center_does_not_move_bounds() {
+        // p = 1 (center did not move) must leave bounds unchanged.
+        forall(100, 0x7124, |g| {
+            let l = g.sim();
+            assert!((update_lower(l, 1.0) - l).abs() < 1e-12);
+            assert!((update_upper(l, 1.0) - l).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn degenerate_inputs_are_safe() {
+        // Values slightly outside [-1,1] (float error) must not NaN.
+        for &(a, b) in &[
+            (1.0 + 1e-9, 0.5),
+            (-1.0 - 1e-9, 0.5),
+            (1.0, 1.0),
+            (-1.0, -1.0),
+            (1.0, -1.0),
+        ] {
+            assert!(sim_lower(a, b).is_finite());
+            assert!(sim_upper(a, b).is_finite());
+        }
+    }
+
+    #[test]
+    fn update_monotonically_widens_with_movement() {
+        // More center movement (smaller p) must loosen bounds when the
+        // current bound is high (the common case near convergence).
+        let l = 0.9;
+        let l1 = update_lower(l, 0.99);
+        let l2 = update_lower(l, 0.90);
+        assert!(l1 > l2, "smaller p should lower the lower bound");
+        let u = 0.9;
+        let u1 = update_upper(u, 0.99);
+        let u2 = update_upper(u, 0.90);
+        assert!(u1 < u2, "smaller p should raise the upper bound");
+    }
+
+    #[test]
+    fn chained_updates_remain_valid_bounds() {
+        // Simulate a center drifting over several iterations and check the
+        // maintained bounds still bracket the true similarity.
+        forall(200, 0x7125, |g| {
+            let d = g.usize_in(2, 24);
+            let x = g.unit(d);
+            let mut c = g.unit(d);
+            let mut l = dot(&x, &c);
+            let mut u = dot(&x, &c);
+            for _ in 0..5 {
+                // Move the center a random small step and renormalize.
+                let step = g.f64_in(0.0, 0.5);
+                let dir = g.unit(d);
+                let mut c2: Vec<f64> = c.iter().zip(&dir).map(|(a, b)| a + step * b).collect();
+                let n = dot(&c2, &c2).sqrt();
+                for v in &mut c2 {
+                    *v /= n;
+                }
+                let p = clamp_sim(dot(&c, &c2));
+                l = update_lower(l, p);
+                u = update_upper(u, p);
+                c = c2;
+                let s = dot(&x, &c);
+                assert!(l <= s + 1e-9, "lower bound {l} exceeds true sim {s}");
+                assert!(u >= s - 1e-9, "upper bound {u} below true sim {s}");
+            }
+        });
+    }
+}

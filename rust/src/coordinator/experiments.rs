@@ -1,0 +1,603 @@
+//! Drivers that regenerate every table and figure of the paper's
+//! evaluation (§6). Each driver prints a paper-style table and writes a
+//! CSV under `results/` for plotting. See DESIGN.md §5 for the experiment
+//! index and EXPERIMENTS.md for recorded outcomes.
+
+use super::plot::{render, PlotCfg, Series};
+use super::report::{fmt_ms, fmt_pct, Table};
+use crate::data::datasets::{self, Scale};
+use crate::data::Dataset;
+use crate::init::{seed_centers, InitMethod};
+use crate::kmeans::{run_with_centers, KMeansConfig, KMeansResult, Variant};
+use crate::sparse::DenseMatrix;
+use crate::util::rng::SplitMix64;
+
+/// Options shared by all experiment drivers.
+#[derive(Debug, Clone)]
+pub struct ExperimentOpts {
+    /// Dataset scale preset.
+    pub scale: Scale,
+    /// Master seed; per-cell RNGs are derived deterministically.
+    pub seed: u64,
+    /// Repetitions (different seeds) per cell; the paper uses 10.
+    pub reps: usize,
+    /// The k grid; the paper uses {2, 10, 20, 50, 100, 200}.
+    pub ks: Vec<usize>,
+    /// Iteration cap per run.
+    pub max_iter: usize,
+    /// Directory for CSV output.
+    pub out_dir: std::path::PathBuf,
+}
+
+impl Default for ExperimentOpts {
+    fn default() -> Self {
+        Self {
+            scale: Scale::Small,
+            seed: 42,
+            reps: 3,
+            ks: vec![2, 10, 20, 50, 100, 200],
+            max_iter: 200,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl ExperimentOpts {
+    /// Parse overrides from CLI args (`--scale`, `--seed`, `--reps`,
+    /// `--ks`, `--max-iter`, `--quick`).
+    pub fn from_args(args: &crate::util::cli::Args) -> Self {
+        let mut o = Self::default();
+        if args.flag("quick") {
+            o.scale = Scale::Tiny;
+            o.reps = 1;
+            o.ks = vec![2, 10, 20, 50];
+        }
+        o.scale = args.get_or("scale", o.scale.name().parse().unwrap()).unwrap_or(o.scale);
+        o.seed = args.get_or("seed", o.seed).unwrap_or(o.seed);
+        o.reps = args.get_or("reps", o.reps).unwrap_or(o.reps).max(1);
+        o.max_iter = args.get_or("max-iter", o.max_iter).unwrap_or(o.max_iter);
+        if let Ok(Some(ks)) = args.list::<usize>("ks") {
+            o.ks = ks;
+        }
+        if let Some(dir) = args.get("out") {
+            o.out_dir = dir.into();
+        }
+        o
+    }
+
+    /// Deterministic per-cell seed.
+    fn cell_seed(&self, tag: &str, rep: usize) -> u64 {
+        let mut h = SplitMix64::new(self.seed ^ rep as u64);
+        let mut acc = h.next_u64();
+        for b in tag.bytes() {
+            acc = acc.wrapping_mul(0x100000001B3) ^ b as u64;
+        }
+        SplitMix64::new(acc).next_u64()
+    }
+
+    fn save(&self, t: &Table, name: &str) {
+        let path = self.out_dir.join(name);
+        if let Err(e) = t.save_csv(&path) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("[csv] {}", path.display());
+        }
+    }
+}
+
+/// Run one (dataset, variant, k, rep) cell from shared initial centers.
+/// The Standard variant runs with the **gather** similarity path so its
+/// per-similarity cost matches the pruned variants (the paper's cost
+/// model); the SIMD path is benchmarked separately as "Standard+SIMD".
+fn run_cell(
+    ds: &Dataset,
+    variant: Variant,
+    k: usize,
+    initial: DenseMatrix,
+    max_iter: usize,
+) -> KMeansResult {
+    let cfg = KMeansConfig::new(k)
+        .variant(variant)
+        .max_iter(max_iter)
+        .fast_standard(false);
+    run_with_centers(&ds.matrix, initial, &cfg)
+}
+
+/// The extra beyond-paper baseline: Standard with the transposed-centers
+/// SIMD path (see EXPERIMENTS.md §Perf).
+fn run_cell_simd_standard(
+    ds: &Dataset,
+    k: usize,
+    initial: DenseMatrix,
+    max_iter: usize,
+) -> KMeansResult {
+    let cfg = KMeansConfig::new(k)
+        .variant(Variant::Standard)
+        .max_iter(max_iter)
+        .fast_standard(true);
+    run_with_centers(&ds.matrix, initial, &cfg)
+}
+
+/// Uniform initial centers for a cell (shared across variants so the
+/// exactness property makes timings comparable).
+fn uniform_centers(ds: &Dataset, k: usize, seed: u64) -> DenseMatrix {
+    seed_centers(&ds.matrix, k, &InitMethod::Uniform, seed).centers
+}
+
+// ---------------------------------------------------------------- Table 1
+
+/// Table 1: the dataset inventory (rows, columns, density).
+pub fn table1(opts: &ExperimentOpts) -> Table {
+    println!("\n== Table 1: data sets (scale={}) ==", opts.scale.name());
+    let mut t = Table::new(&["Data set", "Rows", "Columns", "Non-zero"]);
+    for ds in datasets::paper_datasets(opts.scale, opts.seed) {
+        let (name, rows, cols, dens) = ds.table1_row();
+        t.row(vec![
+            name,
+            rows.to_string(),
+            cols.to_string(),
+            format!("{dens:.3}%"),
+        ]);
+    }
+    println!("{}", t.render());
+    opts.save(&t, "table1.csv");
+    t
+}
+
+// ---------------------------------------------------------------- Fig. 1
+
+/// Fig. 1: per-iteration similarity computations (a cumulative: b) and
+/// per-iteration run time (c, cumulative: d) for one initialization on the
+/// DBLP author-conference analogue with large k.
+///
+/// Returns the long-format table: one row per (algorithm, iteration).
+pub fn fig1(opts: &ExperimentOpts, k: usize) -> Table {
+    println!(
+        "\n== Fig. 1: per-iteration behaviour, DBLP Author-Conf., k={k}, scale={} ==",
+        opts.scale.name()
+    );
+    let ds = datasets::dblp_author_conf(opts.scale, opts.seed);
+    let k = k.min(ds.matrix.rows());
+    let initial = uniform_centers(&ds, k, opts.cell_seed("fig1", 0));
+    let mut t = Table::new(&[
+        "Algorithm", "iter", "sims", "cum_sims", "ms", "cum_ms", "reassign",
+    ]);
+    let mut sims_series: Vec<Series> = Vec::new();
+    let mut time_series: Vec<Series> = Vec::new();
+    for variant in Variant::PAPER_SET {
+        // Average wall times over reps (sims are deterministic).
+        let mut runs = Vec::new();
+        for _ in 0..opts.reps {
+            runs.push(run_cell(&ds, variant, k, initial.clone(), opts.max_iter));
+        }
+        let r0 = &runs[0];
+        for it in 0..r0.stats.iters.len() {
+            let s = &r0.stats.iters[it];
+            let ms = runs
+                .iter()
+                .filter_map(|r| r.stats.iters.get(it).map(|i| i.wall_ms))
+                .sum::<f64>()
+                / runs.len() as f64;
+            let cum_ms: f64 = (0..=it)
+                .map(|j| {
+                    runs.iter()
+                        .filter_map(|r| r.stats.iters.get(j).map(|i| i.wall_ms))
+                        .sum::<f64>()
+                        / runs.len() as f64
+                })
+                .sum();
+            t.row(vec![
+                variant.name().into(),
+                it.to_string(),
+                s.sims_total().to_string(),
+                r0.stats.cumulative_sims()[it].to_string(),
+                format!("{ms:.2}"),
+                format!("{cum_ms:.2}"),
+                s.reassignments.to_string(),
+            ]);
+        }
+        println!(
+            "  {:<14} iters={:<3} total sims={:<12} total ms={:>10.1} obj={:.2}",
+            variant.name(),
+            r0.iterations,
+            r0.stats.total_sims(),
+            runs.iter().map(|r| r.stats.total_ms()).sum::<f64>() / runs.len() as f64,
+            r0.objective,
+        );
+        sims_series.push(Series {
+            name: variant.name().into(),
+            points: r0
+                .stats
+                .iters
+                .iter()
+                .enumerate()
+                .map(|(it, s)| (it as f64, (s.sims_total() as f64).max(1.0)))
+                .collect(),
+        });
+        time_series.push(Series {
+            name: variant.name().into(),
+            points: r0
+                .stats
+                .cumulative_ms()
+                .iter()
+                .enumerate()
+                .map(|(it, &ms)| (it as f64, ms.max(1e-3)))
+                .collect(),
+        });
+    }
+    println!(
+        "\n{}",
+        render(
+            &sims_series,
+            &PlotCfg {
+                title: format!("Fig. 1a: similarity computations per iteration (k={k}, log y)"),
+                log_y: true,
+                ..Default::default()
+            }
+        )
+    );
+    println!(
+        "{}",
+        render(
+            &time_series,
+            &PlotCfg {
+                title: format!("Fig. 1d: cumulative run time (ms) per iteration (k={k})"),
+                ..Default::default()
+            }
+        )
+    );
+    opts.save(&t, "fig1.csv");
+    t
+}
+
+// ---------------------------------------------------------------- Table 2
+
+/// Table 2: relative change of the converged objective vs uniform random
+/// initialization (lower = better), for k-means++ and AFK-MC² with
+/// α ∈ {1, 1.5}, averaged over `reps` seeds.
+pub fn table2(opts: &ExperimentOpts) -> Table {
+    println!(
+        "\n== Table 2: initialization quality (relative objective vs uniform), scale={} ==",
+        opts.scale.name()
+    );
+    let methods = InitMethod::paper_set();
+    let mut t = {
+        let mut header: Vec<String> = vec!["Data set".into(), "Initialization".into()];
+        header.extend(opts.ks.iter().map(|k| format!("k={k}")));
+        let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        Table::new(&hrefs)
+    };
+    for ds in datasets::paper_datasets(opts.scale, opts.seed) {
+        // Baseline objectives per (k, rep) with uniform init.
+        let mut base = vec![vec![0.0f64; opts.reps]; opts.ks.len()];
+        for (ki, &k) in opts.ks.iter().enumerate() {
+            let k = k.min(ds.matrix.rows());
+            for rep in 0..opts.reps {
+                let seed = opts.cell_seed(&format!("t2-{}-{k}", ds.name), rep);
+                let initial = uniform_centers(&ds, k, seed);
+                // Simplified Hamerly: fastest reasonable default; the
+                // converged objective is variant-independent (exactness).
+                let r = run_cell(&ds, Variant::SimplifiedHamerly, k, initial, opts.max_iter);
+                base[ki][rep] = r.objective;
+            }
+        }
+        for method in &methods {
+            let mut cells: Vec<String> = Vec::with_capacity(opts.ks.len());
+            for (ki, &k) in opts.ks.iter().enumerate() {
+                let k = k.min(ds.matrix.rows());
+                if matches!(method, InitMethod::Uniform) {
+                    cells.push(fmt_pct(0.0));
+                    continue;
+                }
+                let mut rel_sum = 0.0;
+                for rep in 0..opts.reps {
+                    let seed = opts.cell_seed(&format!("t2-{}-{k}", ds.name), rep);
+                    let init = seed_centers(&ds.matrix, k, method, seed);
+                    let r = run_cell(&ds, Variant::SimplifiedHamerly, k, init.centers, opts.max_iter);
+                    rel_sum += r.objective / base[ki][rep] - 1.0;
+                }
+                cells.push(fmt_pct(rel_sum / opts.reps as f64));
+            }
+            let mut row = vec![ds.name.clone(), method.name()];
+            row.extend(cells);
+            t.row(row);
+        }
+        println!("  {} done", ds.name);
+    }
+    println!("{}", t.render());
+    opts.save(&t, "table2.csv");
+    t
+}
+
+// ---------------------------------------------------------------- Table 3
+
+/// Table 3: run times (ms) of all five paper variants across the dataset ×
+/// k grid, averaged over `reps` seeds (same seeds across variants).
+/// `extended` additionally includes the Yinyang variant.
+pub fn table3(opts: &ExperimentOpts, extended: bool) -> Table {
+    println!(
+        "\n== Table 3: run times in ms (reps={}, scale={}) ==",
+        opts.reps,
+        opts.scale.name()
+    );
+    let variants: Vec<Variant> = if extended {
+        Variant::ALL.to_vec()
+    } else {
+        Variant::PAPER_SET.to_vec()
+    };
+    // Extended mode adds the SIMD standard baseline as a final pseudo-row.
+    let n_rows = variants.len() + usize::from(extended);
+    let mut t = {
+        let mut header: Vec<String> = vec!["Data set".into(), "Algorithm".into()];
+        header.extend(opts.ks.iter().map(|k| format!("k={k}")));
+        let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        Table::new(&hrefs)
+    };
+    for ds in datasets::paper_datasets(opts.scale, opts.seed) {
+        let mut cells = vec![vec![String::new(); opts.ks.len()]; n_rows];
+        for (ki, &k) in opts.ks.iter().enumerate() {
+            let k = k.min(ds.matrix.rows());
+            // Shared initial centers per rep.
+            let initials: Vec<DenseMatrix> = (0..opts.reps)
+                .map(|rep| {
+                    uniform_centers(&ds, k, opts.cell_seed(&format!("t3-{}-{k}", ds.name), rep))
+                })
+                .collect();
+            for (vi, &variant) in variants.iter().enumerate() {
+                let mut total_ms = 0.0;
+                for initial in &initials {
+                    let sw = crate::util::timer::Stopwatch::start();
+                    let r = run_cell(&ds, variant, k, initial.clone(), opts.max_iter);
+                    total_ms += sw.ms();
+                    std::hint::black_box(r.objective);
+                }
+                cells[vi][ki] = fmt_ms(total_ms / opts.reps as f64);
+            }
+            if extended {
+                let mut total_ms = 0.0;
+                for initial in &initials {
+                    let sw = crate::util::timer::Stopwatch::start();
+                    let r = run_cell_simd_standard(&ds, k, initial.clone(), opts.max_iter);
+                    total_ms += sw.ms();
+                    std::hint::black_box(r.objective);
+                }
+                cells[variants.len()][ki] = fmt_ms(total_ms / opts.reps as f64);
+            }
+        }
+        for (vi, &variant) in variants.iter().enumerate() {
+            let mut row = vec![ds.name.clone(), variant.name().to_string()];
+            row.extend(cells[vi].clone());
+            t.row(row);
+        }
+        if extended {
+            let mut row = vec![ds.name.clone(), "Standard+SIMD".to_string()];
+            row.extend(cells[variants.len()].clone());
+            t.row(row);
+        }
+        println!("  {} done", ds.name);
+    }
+    println!("{}", t.render());
+    opts.save(&t, "table3.csv");
+    t
+}
+
+// ---------------------------------------------------------------- Fig. 2
+
+/// Fig. 2: run time vs k for the author-conference analogue (high N, low d)
+/// and its transpose (low N, high d). The paper's headline contrast: the
+/// `O(k²·d)` center–center cost makes full Elkan/Hamerly blow up on the
+/// transposed data.
+pub fn fig2(opts: &ExperimentOpts) -> Table {
+    println!(
+        "\n== Fig. 2: run time vs k, Author-Conf. vs Conf.-Author, scale={} ==",
+        opts.scale.name()
+    );
+    let pair = [
+        datasets::dblp_author_conf(opts.scale, opts.seed),
+        datasets::dblp_conf_author(opts.scale, opts.seed),
+    ];
+    let mut t = Table::new(&["Data set", "Algorithm", "k", "ms", "total_sims", "iters"]);
+    for ds in &pair {
+        let mut series: Vec<Series> = Variant::PAPER_SET
+            .iter()
+            .map(|v| Series { name: v.name().into(), points: Vec::new() })
+            .collect();
+        for &k in &opts.ks {
+            let k = k.min(ds.matrix.rows());
+            let initials: Vec<DenseMatrix> = (0..opts.reps)
+                .map(|rep| {
+                    uniform_centers(ds, k, opts.cell_seed(&format!("f2-{}-{k}", ds.name), rep))
+                })
+                .collect();
+            for (vi, variant) in Variant::PAPER_SET.into_iter().enumerate() {
+                let mut total_ms = 0.0;
+                let mut sims = 0u64;
+                let mut iters = 0usize;
+                for initial in &initials {
+                    let sw = crate::util::timer::Stopwatch::start();
+                    let r = run_cell(ds, variant, k, initial.clone(), opts.max_iter);
+                    total_ms += sw.ms();
+                    sims = r.stats.total_sims();
+                    iters = r.iterations;
+                }
+                let mean_ms = total_ms / opts.reps as f64;
+                series[vi].points.push((k as f64, mean_ms.max(1e-3)));
+                t.row(vec![
+                    ds.name.clone(),
+                    variant.name().into(),
+                    k.to_string(),
+                    fmt_ms(mean_ms),
+                    sims.to_string(),
+                    iters.to_string(),
+                ]);
+            }
+        }
+        println!(
+            "\n{}",
+            render(
+                &series,
+                &PlotCfg {
+                    title: format!("Fig. 2: run time (ms, log y) vs k — {}", ds.name),
+                    log_y: true,
+                    ..Default::default()
+                }
+            )
+        );
+        println!("  {} done", ds.name);
+    }
+    println!("{}", t.render());
+    opts.save(&t, "fig2.csv");
+    t
+}
+
+// ------------------------------------------------------------- Ablations
+
+/// Ablation: the cost of the center–center (`cc`/`s`) pruning machinery as
+/// dimensionality grows — full vs simplified variants on synthetic corpora
+/// of increasing vocabulary (DESIGN.md §5). Quantifies the Fig. 2 effect in
+/// isolation.
+pub fn ablation_cc(opts: &ExperimentOpts, k: usize) -> Table {
+    println!("\n== Ablation: center-center bound cost vs dimensionality (k={k}) ==");
+    let dims = [500usize, 2_000, 8_000, 32_000];
+    let mut t = Table::new(&["d", "Algorithm", "ms", "cc_sims", "pc_sims"]);
+    for &d in &dims {
+        let ds = crate::data::synth::SynthConfig {
+            name: format!("synth-d{d}"),
+            n_docs: (opts.scale.factor() * 2000.0) as usize,
+            vocab: d,
+            topics: 16,
+            doc_len_mean: 60.0,
+            doc_len_sigma: 0.5,
+            topic_strength: 0.6,
+            shared_vocab_frac: 0.3,
+            zipf_s: 1.1,
+            anomaly_frac: 0.0,
+            tfidf: Default::default(),
+        }
+        .generate(opts.seed);
+        let k = k.min(ds.matrix.rows());
+        let initial = uniform_centers(&ds, k, opts.cell_seed(&format!("cc-{d}"), 0));
+        for variant in [
+            Variant::Elkan,
+            Variant::SimplifiedElkan,
+            Variant::Hamerly,
+            Variant::SimplifiedHamerly,
+        ] {
+            let sw = crate::util::timer::Stopwatch::start();
+            let r = run_cell(&ds, variant, k, initial.clone(), opts.max_iter);
+            let ms = sw.ms();
+            let cc: u64 = r.stats.iters.iter().map(|i| i.sims_center_center).sum();
+            t.row(vec![
+                d.to_string(),
+                variant.name().into(),
+                fmt_ms(ms),
+                cc.to_string(),
+                r.stats.total_point_center().to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    opts.save(&t, "ablation_cc.csv");
+    t
+}
+
+/// Ablation (beyond the paper, §7 synergy): k-means++ already computes all
+/// point-to-seed similarities; pre-initializing the bound structures from
+/// them removes the initial `O(N·k)` assignment pass. Compares plain vs
+/// pre-initialized runs per variant.
+pub fn ablation_preinit(opts: &ExperimentOpts, k: usize) -> Table {
+    use crate::init::{seed_centers_with_bounds, InitMethod};
+    use crate::kmeans::run_seeded;
+    println!("\n== Ablation: bound pre-initialization from k-means++ (k={k}) ==");
+    let mut t = Table::new(&[
+        "Data set", "Variant", "mode", "ms", "pc sims", "iters",
+    ]);
+    for ds in [
+        datasets::dblp_author_conf(opts.scale, opts.seed),
+        datasets::rcv1(opts.scale, opts.seed ^ 4),
+    ] {
+        let k = k.min(ds.matrix.rows() / 2);
+        let method = InitMethod::KMeansPP { alpha: 1.0 };
+        for variant in [
+            Variant::SimplifiedElkan,
+            Variant::SimplifiedHamerly,
+            Variant::Exponion,
+        ] {
+            for preinit in [false, true] {
+                let mut ms = 0.0;
+                let mut sims = 0u64;
+                let mut iters = 0;
+                for rep in 0..opts.reps {
+                    let seed = opts.cell_seed(&format!("pre-{}-{k}", ds.name), rep);
+                    let sw = crate::util::timer::Stopwatch::start();
+                    let init = seed_centers_with_bounds(&ds.matrix, k, &method, seed);
+                    let cfg = KMeansConfig::new(k).variant(variant).max_iter(opts.max_iter);
+                    let r = if preinit {
+                        run_seeded(&ds.matrix, init, &cfg)
+                    } else {
+                        run_with_centers(&ds.matrix, init.centers, &cfg)
+                    };
+                    ms += sw.ms();
+                    sims = r.stats.total_point_center();
+                    iters = r.iterations;
+                }
+                t.row(vec![
+                    ds.name.clone(),
+                    variant.name().into(),
+                    if preinit { "preinit".into() } else { "plain".into() },
+                    fmt_ms(ms / opts.reps as f64),
+                    sims.to_string(),
+                    iters.to_string(),
+                ]);
+            }
+        }
+        println!("  {} done", ds.name);
+    }
+    println!("{}", t.render());
+    opts.save(&t, "ablation_preinit.csv");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> ExperimentOpts {
+        ExperimentOpts {
+            scale: Scale::Tiny,
+            seed: 1,
+            reps: 1,
+            ks: vec![2, 5],
+            max_iter: 30,
+            out_dir: std::env::temp_dir().join("sphkm-exp-tests"),
+        }
+    }
+
+    #[test]
+    fn table1_has_six_rows() {
+        let t = table1(&tiny_opts());
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    fn fig1_produces_series_for_all_variants() {
+        let mut o = tiny_opts();
+        o.ks = vec![5];
+        let t = fig1(&o, 5);
+        // At least 2 iterations per variant (init + ≥1).
+        assert!(t.len() >= 2 * Variant::PAPER_SET.len());
+    }
+
+    #[test]
+    fn opts_from_args() {
+        let args = crate::util::cli::Args::parse(
+            ["--scale", "tiny", "--reps", "2", "--ks", "2,4"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let o = ExperimentOpts::from_args(&args);
+        assert_eq!(o.scale, Scale::Tiny);
+        assert_eq!(o.reps, 2);
+        assert_eq!(o.ks, vec![2, 4]);
+    }
+}

@@ -1,0 +1,6 @@
+//! Experiment coordinator: drivers that regenerate every table and figure
+//! of the paper, plus report rendering.
+
+pub mod experiments;
+pub mod plot;
+pub mod report;

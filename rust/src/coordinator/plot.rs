@@ -1,0 +1,182 @@
+//! Terminal ASCII plots for the figure drivers (no plotting libraries
+//! offline). Renders multiple named series as a braille-free, monospace
+//! line chart with a log-scale option — enough to eyeball the *shape* of
+//! Fig. 1/Fig. 2 (who wins, where the crossovers are).
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    /// Legend label.
+    pub name: String,
+    /// Data points (x ascending).
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Plot configuration.
+#[derive(Debug, Clone)]
+pub struct PlotCfg {
+    /// Total chart width in characters (plot area excludes the y-axis gutter).
+    pub width: usize,
+    /// Plot height in rows.
+    pub height: usize,
+    /// Log₁₀-scale the y axis (run times spanning decades).
+    pub log_y: bool,
+    /// Chart title.
+    pub title: String,
+}
+
+impl Default for PlotCfg {
+    fn default() -> Self {
+        Self { width: 72, height: 18, log_y: false, title: String::new() }
+    }
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+/// Render the series into a string.
+pub fn render(series: &[Series], cfg: &PlotCfg) -> String {
+    let mut out = String::new();
+    if series.iter().all(|s| s.points.is_empty()) {
+        return "(no data)\n".to_string();
+    }
+    let ys = |y: f64| -> f64 {
+        if cfg.log_y {
+            y.max(1e-12).log10()
+        } else {
+            y
+        }
+    };
+    let (mut xmin, mut xmax) = (f64::MAX, f64::MIN);
+    let (mut ymin, mut ymax) = (f64::MAX, f64::MIN);
+    for s in series {
+        for &(x, y) in &s.points {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(ys(y));
+            ymax = ymax.max(ys(y));
+        }
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let w = cfg.width.max(16);
+    let h = cfg.height.max(4);
+    let mut grid = vec![vec![' '; w]; h];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        // Interpolate between consecutive points so lines are visible.
+        for win in s.points.windows(2) {
+            let (x0, y0) = win[0];
+            let (x1, y1) = win[1];
+            let steps = w * 2;
+            for t in 0..=steps {
+                let f = t as f64 / steps as f64;
+                let x = x0 + (x1 - x0) * f;
+                let y = ys(y0) + (ys(y1) - ys(y0)) * f;
+                let cx = ((x - xmin) / (xmax - xmin) * (w - 1) as f64).round() as usize;
+                let cy = ((y - ymin) / (ymax - ymin) * (h - 1) as f64).round() as usize;
+                let row = h - 1 - cy.min(h - 1);
+                let col = cx.min(w - 1);
+                if grid[row][col] == ' ' || t == 0 || t == steps {
+                    grid[row][col] = mark;
+                }
+            }
+        }
+        if s.points.len() == 1 {
+            let (x, y) = s.points[0];
+            let cx = ((x - xmin) / (xmax - xmin) * (w - 1) as f64).round() as usize;
+            let cy = ((ys(y) - ymin) / (ymax - ymin) * (h - 1) as f64).round() as usize;
+            grid[h - 1 - cy.min(h - 1)][cx.min(w - 1)] = mark;
+        }
+    }
+    if !cfg.title.is_empty() {
+        out.push_str(&format!("  {}\n", cfg.title));
+    }
+    let fmt_y = |v: f64| -> String {
+        let v = if cfg.log_y { 10f64.powf(v) } else { v };
+        if v.abs() >= 1000.0 {
+            format!("{:>9.0}", v)
+        } else {
+            format!("{:>9.2}", v)
+        }
+    };
+    for (r, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * r as f64 / (h - 1) as f64;
+        let label = if r == 0 || r == h - 1 || r == h / 2 {
+            fmt_y(yv)
+        } else {
+            " ".repeat(9)
+        };
+        out.push_str(&format!("{label} |{}\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!("{} +{}\n", " ".repeat(9), "-".repeat(w)));
+    out.push_str(&format!(
+        "{}  {:<12}{}{:>12}\n",
+        " ".repeat(9),
+        format!("{xmin:.0}"),
+        " ".repeat(w.saturating_sub(24)),
+        format!("{xmax:.0}")
+    ));
+    // Legend.
+    out.push_str("  legend: ");
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("{}={}  ", MARKS[si % MARKS.len()], s.name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series() -> Vec<Series> {
+        vec![
+            Series {
+                name: "a".into(),
+                points: vec![(2.0, 10.0), (10.0, 100.0), (100.0, 1000.0)],
+            },
+            Series {
+                name: "b".into(),
+                points: vec![(2.0, 20.0), (10.0, 50.0), (100.0, 200.0)],
+            },
+        ]
+    }
+
+    #[test]
+    fn renders_marks_and_legend() {
+        let cfg = PlotCfg { title: "test".into(), ..Default::default() };
+        let r = render(&series(), &cfg);
+        assert!(r.contains('*'));
+        assert!(r.contains('o'));
+        assert!(r.contains("legend: *=a  o=b"));
+        assert!(r.contains("test"));
+        assert!(r.lines().count() > 18);
+    }
+
+    #[test]
+    fn log_scale_compresses() {
+        let cfg = PlotCfg { log_y: true, ..Default::default() };
+        let r = render(&series(), &cfg);
+        assert!(r.contains('*'));
+    }
+
+    #[test]
+    fn empty_and_single_point_are_safe() {
+        let cfg = PlotCfg::default();
+        assert_eq!(render(&[], &cfg), "(no data)\n");
+        let s = vec![Series { name: "p".into(), points: vec![(1.0, 1.0)] }];
+        let r = render(&s, &cfg);
+        assert!(r.contains('*'));
+    }
+
+    #[test]
+    fn flat_series_do_not_divide_by_zero() {
+        let s = vec![Series { name: "f".into(), points: vec![(1.0, 5.0), (2.0, 5.0)] }];
+        let r = render(&s, &PlotCfg::default());
+        assert!(r.contains('*'));
+    }
+}

@@ -1,0 +1,268 @@
+//! Sparse-matrix file I/O: SVMlight/libsvm and MatrixMarket coordinate
+//! formats, plus a labels sidecar. Lets users run the CLI on their own
+//! corpora and lets the experiment drivers cache generated datasets.
+
+use crate::sparse::{CsrMatrix, SparseVec};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// I/O errors.
+#[derive(Debug, thiserror::Error)]
+pub enum IoError {
+    /// Underlying filesystem error.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    /// Malformed file contents.
+    #[error("parse error at line {line}: {msg}")]
+    Parse {
+        /// 1-based line number.
+        line: usize,
+        /// Description.
+        msg: String,
+    },
+}
+
+fn perr<T>(line: usize, msg: impl Into<String>) -> Result<T, IoError> {
+    Err(IoError::Parse { line, msg: msg.into() })
+}
+
+/// Read an SVMlight/libsvm file: `[label] idx:val idx:val …` per line.
+/// Returns the matrix and the labels (if every line carries one).
+/// One-based and zero-based indices are both accepted (auto-detected:
+/// if any index is 0, indices are treated as zero-based).
+pub fn read_libsvm(path: &Path) -> Result<(CsrMatrix, Option<Vec<u32>>), IoError> {
+    let file = std::fs::File::open(path)?;
+    let reader = BufReader::new(file);
+    let mut raw_rows: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut labels: Vec<i64> = Vec::new();
+    let mut all_labeled = true;
+    let mut saw_zero = false;
+    let mut max_idx = 0u32;
+    for (lno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut pairs = Vec::new();
+        let mut label: Option<i64> = None;
+        for (t, tok) in line.split_whitespace().enumerate() {
+            if let Some((i, v)) = tok.split_once(':') {
+                let idx: u32 = match i.parse() {
+                    Ok(x) => x,
+                    Err(_) => return perr(lno + 1, format!("bad index {i:?}")),
+                };
+                let val: f32 = match v.parse() {
+                    Ok(x) => x,
+                    Err(_) => return perr(lno + 1, format!("bad value {v:?}")),
+                };
+                saw_zero |= idx == 0;
+                max_idx = max_idx.max(idx);
+                pairs.push((idx, val));
+            } else if t == 0 {
+                label = tok.parse().ok();
+                if label.is_none() {
+                    return perr(lno + 1, format!("bad label {tok:?}"));
+                }
+            } else {
+                return perr(lno + 1, format!("unexpected token {tok:?}"));
+            }
+        }
+        all_labeled &= label.is_some();
+        labels.push(label.unwrap_or(0));
+        raw_rows.push(pairs);
+    }
+    let offset = if saw_zero { 0 } else { 1 };
+    let cols = (max_idx + 1 - offset) as usize;
+    let rows: Vec<SparseVec> = raw_rows
+        .into_iter()
+        .map(|pairs| {
+            SparseVec::from_pairs(
+                cols.max(1),
+                pairs.into_iter().map(|(i, v)| (i - offset, v)).collect(),
+            )
+        })
+        .collect();
+    let matrix = CsrMatrix::from_rows(cols.max(1), &rows);
+    let labels = if all_labeled && !labels.is_empty() {
+        // Remap arbitrary integer labels to 0..k.
+        let mut uniq: Vec<i64> = labels.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        Some(
+            labels
+                .iter()
+                .map(|l| uniq.binary_search(l).unwrap() as u32)
+                .collect(),
+        )
+    } else {
+        None
+    };
+    Ok((matrix, labels))
+}
+
+/// Write a matrix (and optional labels) in SVMlight format (1-based).
+pub fn write_libsvm(path: &Path, m: &CsrMatrix, labels: Option<&[u32]>) -> Result<(), IoError> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    for r in 0..m.rows() {
+        if let Some(ls) = labels {
+            write!(w, "{}", ls[r])?;
+        } else {
+            write!(w, "0")?;
+        }
+        let row = m.row(r);
+        for (t, &c) in row.indices.iter().enumerate() {
+            write!(w, " {}:{}", c + 1, row.values[t])?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Read a MatrixMarket coordinate file (`%%MatrixMarket matrix coordinate
+/// real general`).
+pub fn read_matrix_market(path: &Path) -> Result<CsrMatrix, IoError> {
+    let file = std::fs::File::open(path)?;
+    let reader = BufReader::new(file);
+    let mut lines = reader.lines().enumerate();
+    // Header.
+    let (_, header) = lines
+        .next()
+        .ok_or_else(|| IoError::Parse { line: 1, msg: "empty file".into() })?;
+    let header = header?;
+    if !header.starts_with("%%MatrixMarket matrix coordinate") {
+        return perr(1, "not a MatrixMarket coordinate file");
+    }
+    // Size line (skipping comments).
+    let mut size: Option<(usize, usize, usize)> = None;
+    let mut triples: Vec<(u32, u32, f32)> = Vec::new();
+    for (lno, line) in lines {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('%') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if size.is_none() {
+            if parts.len() != 3 {
+                return perr(lno + 1, "bad size line");
+            }
+            let r = parts[0].parse().map_err(|_| IoError::Parse { line: lno + 1, msg: "rows".into() })?;
+            let c = parts[1].parse().map_err(|_| IoError::Parse { line: lno + 1, msg: "cols".into() })?;
+            let n = parts[2].parse().map_err(|_| IoError::Parse { line: lno + 1, msg: "nnz".into() })?;
+            size = Some((r, c, n));
+            triples.reserve(n);
+            continue;
+        }
+        if parts.len() < 2 {
+            return perr(lno + 1, "bad entry line");
+        }
+        let i: u32 = parts[0].parse().map_err(|_| IoError::Parse { line: lno + 1, msg: "row".into() })?;
+        let j: u32 = parts[1].parse().map_err(|_| IoError::Parse { line: lno + 1, msg: "col".into() })?;
+        let v: f32 = if parts.len() > 2 {
+            parts[2].parse().map_err(|_| IoError::Parse { line: lno + 1, msg: "val".into() })?
+        } else {
+            1.0 // pattern matrices
+        };
+        if i == 0 || j == 0 {
+            return perr(lno + 1, "MatrixMarket is 1-based");
+        }
+        triples.push((i - 1, j - 1, v));
+    }
+    let (r, c, n) = size.ok_or(IoError::Parse { line: 2, msg: "missing size line".into() })?;
+    if triples.len() != n {
+        return perr(0, format!("expected {n} entries, found {}", triples.len()));
+    }
+    // Group by row.
+    let mut per_row: Vec<Vec<(u32, f32)>> = vec![Vec::new(); r];
+    for (i, j, v) in triples {
+        if i as usize >= r || j as usize >= c {
+            return perr(0, "entry out of bounds");
+        }
+        per_row[i as usize].push((j, v));
+    }
+    let rows: Vec<SparseVec> = per_row
+        .into_iter()
+        .map(|pairs| SparseVec::from_pairs(c, pairs))
+        .collect();
+    Ok(CsrMatrix::from_rows(c, &rows))
+}
+
+/// Write a matrix in MatrixMarket coordinate format.
+pub fn write_matrix_market(path: &Path, m: &CsrMatrix) -> Result<(), IoError> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by spherical-kmeans")?;
+    writeln!(w, "{} {} {}", m.rows(), m.cols(), m.nnz())?;
+    for r in 0..m.rows() {
+        let row = m.row(r);
+        for (t, &c) in row.indices.iter().enumerate() {
+            writeln!(w, "{} {} {}", r + 1, c + 1, row.values[t])?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthConfig;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sphkm-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn libsvm_round_trip_with_labels() {
+        let ds = SynthConfig::small_demo().generate(1);
+        let path = tmp("rt.svm");
+        write_libsvm(&path, &ds.matrix, ds.labels.as_deref()).unwrap();
+        let (m, labels) = read_libsvm(&path).unwrap();
+        assert_eq!(m.rows(), ds.matrix.rows());
+        // Column count may shrink if trailing columns are empty.
+        assert!(m.cols() <= ds.matrix.cols());
+        assert_eq!(m.nnz(), ds.matrix.nnz());
+        assert_eq!(labels.unwrap(), ds.labels.unwrap());
+        // Values survive (compare first row).
+        assert_eq!(m.row(0).values, ds.matrix.row(0).values);
+    }
+
+    #[test]
+    fn libsvm_parses_unlabeled_and_comments() {
+        let path = tmp("plain.svm");
+        std::fs::write(&path, "1:0.5 3:1.5 # comment\n\n2:2.0\n").unwrap();
+        let (m, labels) = read_libsvm(&path).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert!(labels.is_none() || labels == Some(vec![0, 0]));
+        assert_eq!(m.row(0).values, &[0.5, 1.5]);
+    }
+
+    #[test]
+    fn libsvm_rejects_garbage() {
+        let path = tmp("bad.svm");
+        std::fs::write(&path, "1 1:x\n").unwrap();
+        assert!(read_libsvm(&path).is_err());
+    }
+
+    #[test]
+    fn matrix_market_round_trip() {
+        let ds = SynthConfig::small_demo().generate(2);
+        let path = tmp("rt.mtx");
+        write_matrix_market(&path, &ds.matrix).unwrap();
+        let m = read_matrix_market(&path).unwrap();
+        assert_eq!(m.rows(), ds.matrix.rows());
+        assert_eq!(m.cols(), ds.matrix.cols());
+        assert_eq!(m.nnz(), ds.matrix.nnz());
+        assert_eq!(m.row(5).indices, ds.matrix.row(5).indices);
+    }
+
+    #[test]
+    fn matrix_market_rejects_non_mm() {
+        let path = tmp("nomm.mtx");
+        std::fs::write(&path, "hello\n1 1 1\n").unwrap();
+        assert!(read_matrix_market(&path).is_err());
+    }
+}

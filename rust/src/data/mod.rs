@@ -1,0 +1,42 @@
+//! Datasets: synthetic corpus/graph generators shaped like the paper's six
+//! benchmark data sets (Table 1), TF-IDF weighting, a text-ingestion
+//! pipeline, and sparse-matrix file I/O.
+//!
+//! The original evaluation data (DBLP snapshots, the Simpsons wiki dump,
+//! 20 Newsgroups, RCV-1) is not redistributable/available offline, so the
+//! generators in [`synth`] and [`datasets`] produce matrices matched in
+//! *shape* — rows/columns ratio, non-zero density, Zipfian token
+//! statistics, planted community structure, and (for the 20news analogue)
+//! injected anomalous documents — at configurable scale. DESIGN.md §4
+//! documents each substitution.
+
+pub mod datasets;
+pub mod io;
+pub mod synth;
+pub mod text;
+pub mod tfidf;
+
+use crate::sparse::CsrMatrix;
+
+/// A dataset: its (normalized) matrix plus metadata.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Short name (Table 1 style).
+    pub name: String,
+    /// Row-normalized sparse matrix (rows = samples).
+    pub matrix: CsrMatrix,
+    /// Planted ground-truth labels, when the generator knows them.
+    pub labels: Option<Vec<u32>>,
+}
+
+impl Dataset {
+    /// Table 1 row: rows, columns, density(%) — for the dataset inventory.
+    pub fn table1_row(&self) -> (String, usize, usize, f64) {
+        (
+            self.name.clone(),
+            self.matrix.rows(),
+            self.matrix.cols(),
+            self.matrix.density() * 100.0,
+        )
+    }
+}

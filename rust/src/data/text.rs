@@ -1,0 +1,246 @@
+//! Plain-text ingestion: tokenizer, vocabulary building with stopword and
+//! document-frequency filtering — the Simpsons-wiki-style pipeline of §6
+//! ("tokenized and lemmatized, stop words were removed as well as
+//! infrequent tokens"). Lemmatization is approximated by a light suffix
+//! stemmer (no NLP models are available offline).
+
+use super::tfidf::TfIdf;
+use super::Dataset;
+use crate::sparse::{CsrMatrix, SparseVec};
+use std::collections::HashMap;
+
+/// A small English stopword list (the usual suspects).
+pub const STOPWORDS: &[&str] = &[
+    "a", "about", "above", "after", "again", "all", "also", "an", "and", "any",
+    "are", "as", "at", "be", "because", "been", "before", "being", "below",
+    "between", "both", "but", "by", "can", "could", "did", "do", "does",
+    "doing", "down", "during", "each", "few", "for", "from", "further", "had",
+    "has", "have", "having", "he", "her", "here", "hers", "him", "his", "how",
+    "i", "if", "in", "into", "is", "it", "its", "just", "me", "more", "most",
+    "my", "no", "nor", "not", "now", "of", "off", "on", "once", "only", "or",
+    "other", "our", "ours", "out", "over", "own", "s", "same", "she", "so",
+    "some", "such", "t", "than", "that", "the", "their", "theirs", "them",
+    "then", "there", "these", "they", "this", "those", "through", "to", "too",
+    "under", "until", "up", "very", "was", "we", "were", "what", "when",
+    "where", "which", "while", "who", "whom", "why", "will", "with", "you",
+    "your", "yours",
+];
+
+/// Tokenizer + vocabulary filter configuration.
+#[derive(Debug, Clone)]
+pub struct TextPipeline {
+    /// Lowercase and keep alphabetic tokens of at least this length.
+    pub min_token_len: usize,
+    /// Drop tokens appearing in fewer than `min_df` documents.
+    pub min_df: u32,
+    /// Drop tokens appearing in more than this fraction of documents.
+    pub max_df_frac: f64,
+    /// Remove [`STOPWORDS`].
+    pub remove_stopwords: bool,
+    /// Apply the light suffix stemmer.
+    pub stem: bool,
+    /// TF-IDF weighting for the final matrix.
+    pub tfidf: TfIdf,
+}
+
+impl Default for TextPipeline {
+    fn default() -> Self {
+        Self {
+            min_token_len: 2,
+            min_df: 2,
+            max_df_frac: 0.5,
+            remove_stopwords: true,
+            stem: true,
+            tfidf: TfIdf::default(),
+        }
+    }
+}
+
+/// Lowercase alphabetic tokenization.
+pub fn tokenize(text: &str) -> impl Iterator<Item = String> + '_ {
+    text.split(|c: char| !c.is_alphabetic())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.to_lowercase())
+}
+
+/// A light suffix stemmer (Porter-step-1-ish): plural/participle suffixes.
+pub fn stem(token: &str) -> String {
+    let t = token;
+    for (suffix, repl) in [
+        ("sses", "ss"),
+        ("ies", "i"),
+        ("ing", ""),
+        ("edly", ""),
+        ("ed", ""),
+        ("ly", ""),
+        ("s", ""),
+    ] {
+        if t.len() > suffix.len() + 2 && t.ends_with(suffix) {
+            return format!("{}{}", &t[..t.len() - suffix.len()], repl);
+        }
+    }
+    t.to_string()
+}
+
+impl TextPipeline {
+    /// Turn a collection of documents into a TF-IDF matrix + vocabulary.
+    /// Returns `(dataset, vocabulary)` where `vocabulary[j]` is the token of
+    /// column `j`.
+    pub fn fit(&self, docs: &[String], name: &str) -> (Dataset, Vec<String>) {
+        let stop: std::collections::HashSet<&str> = if self.remove_stopwords {
+            STOPWORDS.iter().copied().collect()
+        } else {
+            Default::default()
+        };
+        // Pass 1: token streams per doc (post stop/stem filtering).
+        let mut doc_tokens: Vec<Vec<String>> = Vec::with_capacity(docs.len());
+        for d in docs {
+            let mut toks = Vec::new();
+            for t in tokenize(d) {
+                if t.len() < self.min_token_len || stop.contains(t.as_str()) {
+                    continue;
+                }
+                toks.push(if self.stem { stem(&t) } else { t });
+            }
+            doc_tokens.push(toks);
+        }
+        // Pass 2: document frequencies.
+        let mut df: HashMap<&str, u32> = HashMap::new();
+        for toks in &doc_tokens {
+            let uniq: std::collections::HashSet<&str> =
+                toks.iter().map(|s| s.as_str()).collect();
+            for t in uniq {
+                *df.entry(t).or_insert(0) += 1;
+            }
+        }
+        let max_df = (docs.len() as f64 * self.max_df_frac).ceil() as u32;
+        let mut vocab: Vec<String> = df
+            .iter()
+            .filter(|(_, &d)| d >= self.min_df && d <= max_df)
+            .map(|(t, _)| t.to_string())
+            .collect();
+        vocab.sort(); // deterministic column order
+        let index: HashMap<&str, u32> = vocab
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.as_str(), i as u32))
+            .collect();
+        // Pass 3: counts.
+        let mut rows = Vec::with_capacity(docs.len());
+        for toks in &doc_tokens {
+            let mut pairs: Vec<(u32, f32)> = Vec::new();
+            for t in toks {
+                if let Some(&j) = index.get(t.as_str()) {
+                    pairs.push((j, 1.0));
+                }
+            }
+            rows.push(SparseVec::from_pairs(vocab.len().max(1), pairs));
+        }
+        let counts = CsrMatrix::from_rows(vocab.len().max(1), &rows);
+        let matrix = self.tfidf.apply(&counts);
+        (
+            Dataset { name: name.into(), matrix, labels: None },
+            vocab,
+        )
+    }
+}
+
+/// A tiny built-in demo corpus (three obvious themes) so the
+/// `text_clustering` example runs without external files.
+pub fn demo_corpus() -> Vec<String> {
+    let space = [
+        "the rocket launched the satellite into orbit and the spacecraft circled the moon",
+        "astronauts aboard the spacecraft observed the satellite from lunar orbit",
+        "the rocket carried the astronauts into orbit around the moon",
+        "mission control confirmed the spacecraft and its satellite entered orbit",
+        "the satellite orbited the moon while astronauts monitored the rocket stage",
+        "a rocket launch placed the orbiting satellite above the lunar spacecraft",
+    ];
+    let cooking = [
+        "simmer the garlic and onions in olive oil and cook the sauce slowly",
+        "the recipe says to cook the garlic in olive oil before adding the sauce",
+        "cook the pasta and toss it with garlic olive oil and tomato sauce",
+        "this recipe simmers onions and garlic in oil for a rich sauce",
+        "add olive oil and garlic to the pan and cook until the sauce thickens",
+        "a simple recipe of oil garlic and fresh tomato sauce over pasta",
+    ];
+    let football = [
+        "the striker scored a goal and the team won the match before the fans",
+        "the goalkeeper saved a penalty but the team lost the match by one goal",
+        "the team passed the ball well and scored two goals in the match",
+        "fans cheered as the team scored the winning goal of the match",
+        "a late goal from the striker gave the team victory in the final match",
+        "the match ended with the team celebrating the decisive goal with fans",
+    ];
+    space
+        .iter()
+        .chain(cooking.iter())
+        .chain(football.iter())
+        .map(|s| s.to_string())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_splits_and_lowercases() {
+        let toks: Vec<String> = tokenize("Hello, World! 123 foo_bar").collect();
+        assert_eq!(toks, vec!["hello", "world", "foo", "bar"]);
+    }
+
+    #[test]
+    fn stemmer_basics() {
+        assert_eq!(stem("running"), "runn");
+        assert_eq!(stem("cakes"), "cake");
+        assert_eq!(stem("cities"), "citi");
+        // Too-short tokens are left alone.
+        assert_eq!(stem("is"), "is");
+        assert_eq!(stem("bus"), "bus");
+    }
+
+    #[test]
+    fn pipeline_filters_stopwords_and_rare_tokens() {
+        let docs: Vec<String> = vec![
+            "the cat sat on the mat".into(),
+            "the cat ate the fish".into(),
+            "a dog chased the cat".into(),
+        ];
+        let p = TextPipeline {
+            min_df: 2,
+            max_df_frac: 1.0,
+            stem: false,
+            ..Default::default()
+        };
+        let (ds, vocab) = p.fit(&docs, "t");
+        assert!(!vocab.iter().any(|t| t == "the"), "stopword kept");
+        assert!(vocab.iter().any(|t| t == "cat"));
+        // 'mat', 'fish', 'dog' each appear once: filtered by min_df=2.
+        assert!(!vocab.iter().any(|t| t == "mat"));
+        assert_eq!(ds.matrix.rows(), 3);
+        assert_eq!(ds.matrix.cols(), vocab.len());
+    }
+
+    #[test]
+    fn demo_corpus_clusters_by_theme() {
+        let docs = demo_corpus();
+        let p = TextPipeline { min_df: 1, max_df_frac: 0.9, ..Default::default() };
+        let (ds, _) = p.fit(&docs, "demo");
+        // Average within-theme similarity must exceed cross-theme.
+        let theme = |i: usize| i / 6;
+        let mut same = (0.0, 0);
+        let mut cross = (0.0, 0);
+        for i in 0..docs.len() {
+            for j in (i + 1)..docs.len() {
+                let s = ds.matrix.row(i).dot(&ds.matrix.row(j));
+                if theme(i) == theme(j) {
+                    same = (same.0 + s, same.1 + 1);
+                } else {
+                    cross = (cross.0 + s, cross.1 + 1);
+                }
+            }
+        }
+        assert!(same.0 / same.1 as f64 > cross.0 / cross.1 as f64);
+    }
+}

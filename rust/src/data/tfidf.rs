@@ -1,0 +1,159 @@
+//! TF-IDF weighting. The paper applies TF-IDF to every dataset before
+//! clustering (§6); the 20 Newsgroups analogue uses scikit-learn's default
+//! smooth-IDF formula, so both variants are provided.
+
+use crate::sparse::CsrMatrix;
+
+/// IDF formula selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IdfScheme {
+    /// `ln(N / df)` — the classic formula.
+    Plain,
+    /// `ln((1 + N) / (1 + df)) + 1` — scikit-learn's default (`smooth_idf`),
+    /// used for the 20 Newsgroups analogue.
+    Smooth,
+}
+
+/// TF-IDF transformer configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TfIdf {
+    /// IDF formula.
+    pub scheme: IdfScheme,
+    /// Use `1 + ln(tf)` instead of raw term frequency.
+    pub sublinear_tf: bool,
+    /// L2-normalize rows afterwards (required for spherical k-means).
+    pub normalize: bool,
+}
+
+impl Default for TfIdf {
+    fn default() -> Self {
+        Self {
+            scheme: IdfScheme::Smooth,
+            sublinear_tf: false,
+            normalize: true,
+        }
+    }
+}
+
+impl TfIdf {
+    /// Compute document frequencies per column.
+    pub fn document_frequencies(counts: &CsrMatrix) -> Vec<u32> {
+        let mut df = vec![0u32; counts.cols()];
+        for r in 0..counts.rows() {
+            for &c in counts.row(r).indices {
+                df[c as usize] += 1;
+            }
+        }
+        df
+    }
+
+    /// IDF value for a document frequency.
+    pub fn idf(&self, n_docs: usize, df: u32) -> f64 {
+        match self.scheme {
+            IdfScheme::Plain => {
+                if df == 0 {
+                    0.0
+                } else {
+                    (n_docs as f64 / df as f64).ln()
+                }
+            }
+            IdfScheme::Smooth => ((1.0 + n_docs as f64) / (1.0 + df as f64)).ln() + 1.0,
+        }
+    }
+
+    /// Apply TF-IDF (and row normalization) to a raw count matrix.
+    pub fn apply(&self, counts: &CsrMatrix) -> CsrMatrix {
+        let n = counts.rows();
+        let df = Self::document_frequencies(counts);
+        let idf: Vec<f64> = df.iter().map(|&d| self.idf(n, d)).collect();
+        let mut rows = Vec::with_capacity(n);
+        for r in 0..n {
+            let view = counts.row(r);
+            let mut idx = Vec::with_capacity(view.nnz());
+            let mut val = Vec::with_capacity(view.nnz());
+            for (t, &c) in view.indices.iter().enumerate() {
+                let tf = view.values[t] as f64;
+                let tf = if self.sublinear_tf && tf > 0.0 {
+                    1.0 + tf.ln()
+                } else {
+                    tf
+                };
+                let w = tf * idf[c as usize];
+                if w != 0.0 {
+                    idx.push(c);
+                    val.push(w as f32);
+                }
+            }
+            rows.push(crate::sparse::SparseVec::new(counts.cols(), idx, val));
+        }
+        let mut out = CsrMatrix::from_rows(counts.cols(), &rows);
+        if self.normalize {
+            out.normalize_rows();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseVec;
+
+    fn counts() -> CsrMatrix {
+        // 3 docs, 4 terms. Term 0 appears in all docs, term 3 in one.
+        let rows = vec![
+            SparseVec::from_pairs(4, vec![(0, 2.0), (1, 1.0)]),
+            SparseVec::from_pairs(4, vec![(0, 1.0), (2, 3.0)]),
+            SparseVec::from_pairs(4, vec![(0, 1.0), (3, 5.0)]),
+        ];
+        CsrMatrix::from_rows(4, &rows)
+    }
+
+    #[test]
+    fn document_frequencies_counted() {
+        let df = TfIdf::document_frequencies(&counts());
+        assert_eq!(df, vec![3, 1, 1, 1]);
+    }
+
+    #[test]
+    fn plain_idf_zeroes_ubiquitous_terms() {
+        let t = TfIdf { scheme: IdfScheme::Plain, sublinear_tf: false, normalize: false };
+        let m = t.apply(&counts());
+        // Term 0 appears in every doc: idf = ln(3/3) = 0 ⇒ weight dropped.
+        for r in 0..3 {
+            assert!(!m.row(r).indices.contains(&0), "row {r} kept a zero weight");
+        }
+        // Term 3 in doc 2: weight = 5 · ln 3.
+        let w = m.row(2).values[0] as f64;
+        assert!((w - 5.0 * 3f64.ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn smooth_idf_matches_sklearn_formula() {
+        let t = TfIdf::default();
+        assert!((t.idf(3, 1) - ((4.0f64 / 2.0).ln() + 1.0)).abs() < 1e-12);
+        assert!((t.idf(3, 3) - ((4.0f64 / 4.0).ln() + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalized_rows_are_unit() {
+        let t = TfIdf::default();
+        let m = t.apply(&counts());
+        for r in 0..m.rows() {
+            let n = m.row(r).norm_sq();
+            assert!((n - 1.0).abs() < 1e-5, "row {r} norm² = {n}");
+        }
+    }
+
+    #[test]
+    fn sublinear_tf_dampens() {
+        let lin = TfIdf { scheme: IdfScheme::Smooth, sublinear_tf: false, normalize: false };
+        let sub = TfIdf { scheme: IdfScheme::Smooth, sublinear_tf: true, normalize: false };
+        let a = lin.apply(&counts());
+        let b = sub.apply(&counts());
+        // tf=5 → 1+ln5 ≈ 2.61 < 5.
+        let wa = a.row(2).values.iter().cloned().fold(f32::MIN, f32::max);
+        let wb = b.row(2).values.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(wb < wa);
+    }
+}

@@ -1,0 +1,184 @@
+//! AFK-MC² seeding (Bachem et al., NeurIPS 2016) adapted to spherical
+//! k-means with the `α − sim` dissimilarity (Pratap et al. 2018, §5.6 of
+//! the paper).
+//!
+//! k-means++ needs a full pass over the data per center; AFK-MC² replaces
+//! it with a Metropolis–Hastings chain of length `m` whose stationary
+//! distribution is the k-means++ distribution. The proposal is the
+//! assumption-free mixture
+//!
+//! ```text
+//! q(x) = ½ · dis(x, c₁)/Σ_y dis(y, c₁)  +  ½ · 1/N
+//! ```
+//!
+//! built once from the first (uniform) seed; each subsequent center costs
+//! `O(m · k)` similarities instead of `O(N)`.
+
+use crate::sparse::CsrMatrix;
+use crate::util::rng::Xoshiro256;
+
+pub(crate) fn choose(
+    data: &CsrMatrix,
+    k: usize,
+    alpha: f64,
+    chain: usize,
+    rng: &mut Xoshiro256,
+) -> (Vec<usize>, u64) {
+    let n = data.rows();
+    let chain = chain.max(1);
+    let mut sims = 0u64;
+    let mut chosen = Vec::with_capacity(k);
+    let first = rng.index(n);
+    chosen.push(first);
+    let mut is_chosen = vec![false; n];
+    is_chosen[first] = true;
+
+    // Proposal distribution q from the first seed (one full pass).
+    let c1 = data.row(first);
+    let mut q = vec![0.0f64; n];
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let dis = (alpha - data.row(i).dot(&c1)).max(0.0);
+        q[i] = dis;
+        total += dis;
+    }
+    sims += n as u64;
+    for qi in &mut q {
+        *qi = if total > 0.0 { 0.5 * *qi / total } else { 0.0 };
+        *qi += 0.5 / n as f64;
+    }
+
+    // dis(x, C) = α − max_{c∈C} sim(x, c), computed on demand.
+    let dis_to_set = |i: usize, chosen: &[usize], sims: &mut u64| -> f64 {
+        let row = data.row(i);
+        let mut best = f64::MIN;
+        for &c in chosen {
+            let s = row.dot(&data.row(c));
+            if s > best {
+                best = s;
+            }
+        }
+        *sims += chosen.len() as u64;
+        (alpha - best).max(0.0)
+    };
+
+    for _ in 1..k {
+        // Initialize the chain at a proposal draw.
+        let mut x = sample_q(&q, rng);
+        let mut dx = dis_to_set(x, &chosen, &mut sims);
+        for _ in 1..chain {
+            let y = sample_q(&q, rng);
+            let dy = dis_to_set(y, &chosen, &mut sims);
+            // Metropolis–Hastings acceptance for target ∝ dis(·, C).
+            let accept = if dx * q[y] <= 0.0 {
+                // Current state has zero mass (e.g. x already chosen):
+                // always move.
+                true
+            } else {
+                let ratio = (dy * q[x]) / (dx * q[y]);
+                rng.next_f64() < ratio
+            };
+            if accept {
+                x = y;
+                dx = dy;
+            }
+        }
+        // Guarantee distinctness (duplicates would crash k-means later):
+        // if the chain landed on a chosen point (possible when α > 1),
+        // fall back to the best unchosen proposal draw.
+        let mut guard = 0;
+        while is_chosen[x] {
+            x = sample_q(&q, rng);
+            guard += 1;
+            if guard > 16 * n {
+                x = (0..n).find(|&i| !is_chosen[i]).expect("k ≤ rows");
+                break;
+            }
+        }
+        is_chosen[x] = true;
+        chosen.push(x);
+    }
+    (chosen, sims)
+}
+
+/// Draw an index from the (normalized) proposal distribution.
+fn sample_q(q: &[f64], rng: &mut Xoshiro256) -> usize {
+    let mut target = rng.next_f64();
+    for (i, &w) in q.iter().enumerate() {
+        target -= w;
+        if target < 0.0 {
+            return i;
+        }
+    }
+    q.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseVec;
+
+    fn orthogonal_groups() -> CsrMatrix {
+        let mut rows = Vec::new();
+        for g in 0..3u32 {
+            for t in 0..30u32 {
+                rows.push(SparseVec::from_pairs(
+                    100,
+                    vec![(g, 1.0), (10 + g * 30 + t, 0.05)],
+                ));
+            }
+        }
+        let mut m = CsrMatrix::from_rows(100, &rows);
+        m.normalize_rows();
+        m
+    }
+
+    #[test]
+    fn afkmc2_spreads_across_groups() {
+        let data = orthogonal_groups();
+        let mut hits = 0;
+        let trials = 40;
+        for seed in 0..trials {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let (chosen, _) = choose(&data, 3, 1.0, 50, &mut rng);
+            let groups: std::collections::HashSet<usize> =
+                chosen.iter().map(|&i| i / 30).collect();
+            if groups.len() == 3 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= trials * 7 / 10, "only {hits}/{trials} spread runs");
+    }
+
+    #[test]
+    fn proposal_distribution_is_normalized() {
+        let data = orthogonal_groups();
+        let n = data.rows();
+        // Build q exactly as `choose` does.
+        let first = 0usize;
+        let c1 = data.row(first);
+        let mut q = vec![0.0f64; n];
+        let mut total = 0.0;
+        for i in 0..n {
+            q[i] = (1.0 - data.row(i).dot(&c1)).max(0.0);
+            total += q[i];
+        }
+        for qi in &mut q {
+            *qi = 0.5 * *qi / total + 0.5 / n as f64;
+        }
+        let sum: f64 = q.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "q sums to {sum}");
+        assert!(q.iter().all(|&w| w > 0.0), "assumption-free term keeps q positive");
+    }
+
+    #[test]
+    fn distinct_even_with_alpha_15() {
+        let data = orthogonal_groups();
+        for seed in 0..10 {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let (chosen, _) = choose(&data, 12, 1.5, 30, &mut rng);
+            let set: std::collections::HashSet<_> = chosen.iter().collect();
+            assert_eq!(set.len(), 12);
+        }
+    }
+}

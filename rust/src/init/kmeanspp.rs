@@ -1,0 +1,135 @@
+//! Spherical k-means++ (§5.6): the first seed is uniform; each further
+//! seed is sampled proportional to the dissimilarity `α − max_c ⟨x, c⟩`
+//! of the point to its closest already-chosen center. For α = 1 this is
+//! exactly proportional to the squared Euclidean distance on unit vectors
+//! (the canonical k-means++ weighting); α = 1.5 is the offset for which
+//! Endo & Miyamoto prove metric guarantees.
+//!
+//! `O(N·k)` total: the running `max_c ⟨x, c⟩` is cached per point and
+//! refreshed with one sparse dot per point per new center (the "caching
+//! the previous maximum" optimization the paper describes).
+
+use crate::sparse::CsrMatrix;
+use crate::util::rng::Xoshiro256;
+
+/// k-means++ seeding, optionally recording every point-to-seed similarity in
+/// a row-major `N × k` matrix (`collect`) — the similarities are computed
+/// anyway, which is exactly the §7 bound-pre-initialization synergy.
+pub(crate) fn choose_collecting(
+    data: &CsrMatrix,
+    k: usize,
+    alpha: f64,
+    rng: &mut Xoshiro256,
+    mut collect: Option<&mut [f32]>,
+) -> (Vec<usize>, u64) {
+    let n = data.rows();
+    let mut chosen = Vec::with_capacity(k);
+    let mut sims = 0u64;
+
+    let first = rng.index(n);
+    chosen.push(first);
+
+    // Cached max similarity to any chosen center, per point.
+    let mut max_sim = vec![f64::MIN; n];
+    let mut weights = vec![0.0f64; n];
+    let mut is_chosen = vec![false; n];
+    is_chosen[first] = true;
+
+    for _ in 1..k {
+        // Refresh the cache with the most recently chosen center.
+        let c = data.row(*chosen.last().unwrap());
+        let col = chosen.len() - 1;
+        for i in 0..n {
+            let s = data.row(i).dot(&c);
+            if let Some(m) = collect.as_deref_mut() {
+                m[i * k + col] = s as f32;
+            }
+            if s > max_sim[i] {
+                max_sim[i] = s;
+            }
+        }
+        sims += n as u64;
+        for i in 0..n {
+            // α − max sim, floored at 0; already-chosen points get weight 0
+            // so α = 1.5 cannot re-pick them (α − 1 > 0 for the seed itself).
+            weights[i] = if is_chosen[i] {
+                0.0
+            } else {
+                (alpha - max_sim[i]).max(0.0)
+            };
+        }
+        let next = match rng.weighted_index(&weights) {
+            Some(i) => i,
+            None => {
+                // All weights zero (e.g. duplicate-heavy data): fall back to
+                // a uniform unchosen row.
+                let unchosen: Vec<usize> = (0..n).filter(|&i| !is_chosen[i]).collect();
+                unchosen[rng.index(unchosen.len())]
+            }
+        };
+        is_chosen[next] = true;
+        chosen.push(next);
+    }
+    (chosen, sims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseVec;
+
+    /// Three well-separated orthogonal groups: k-means++ should pick one
+    /// seed from each group far more often than uniform would.
+    fn orthogonal_groups() -> CsrMatrix {
+        let mut rows = Vec::new();
+        // 30 copies of e0, 30 of e1, 30 of e2 (with tiny per-row jitter on a
+        // private dimension so rows are distinct).
+        for g in 0..3u32 {
+            for t in 0..30u32 {
+                rows.push(SparseVec::from_pairs(
+                    100,
+                    vec![(g, 1.0), (10 + g * 30 + t, 0.05)],
+                ));
+            }
+        }
+        let mut m = CsrMatrix::from_rows(100, &rows);
+        m.normalize_rows();
+        m
+    }
+
+    #[test]
+    fn plusplus_spreads_across_groups() {
+        let data = orthogonal_groups();
+        let mut hits = 0;
+        let trials = 40;
+        for seed in 0..trials {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let (chosen, _) = choose_collecting(&data, 3, 1.0, &mut rng, None);
+            let groups: std::collections::HashSet<usize> =
+                chosen.iter().map(|&i| i / 30).collect();
+            if groups.len() == 3 {
+                hits += 1;
+            }
+        }
+        // Uniform seeding would hit all three groups ~22% of the time;
+        // k-means++ should nearly always.
+        assert!(hits >= trials * 8 / 10, "only {hits}/{trials} spread runs");
+    }
+
+    #[test]
+    fn weights_zero_for_chosen_points() {
+        let data = orthogonal_groups();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let (chosen, _) = choose_collecting(&data, 10, 1.5, &mut rng, None);
+        let set: std::collections::HashSet<_> = chosen.iter().collect();
+        assert_eq!(set.len(), 10, "α=1.5 must not re-pick chosen seeds");
+    }
+
+    #[test]
+    fn sims_accounting() {
+        let data = orthogonal_groups();
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let (_, sims) = choose_collecting(&data, 4, 1.0, &mut rng, None);
+        assert_eq!(sims, (3 * data.rows()) as u64);
+    }
+}

@@ -1,0 +1,236 @@
+//! Seeding methods for spherical k-means (§5.6 of the paper).
+//!
+//! * [`InitMethod::Uniform`] — k distinct rows uniformly at random.
+//! * [`InitMethod::KMeansPP`] — spherical k-means++: sample proportional to
+//!   the dissimilarity `α − max_c ⟨x, c⟩` (α = 1 is the canonical cosine
+//!   adaptation; α = 1.5 is the metric-making value of Endo & Miyamoto).
+//! * [`InitMethod::AfkMc2`] — AFK-MC² (Bachem et al. 2016) with the same
+//!   `α` trick (Pratap et al. 2018): an MCMC approximation of k-means++
+//!   that avoids the full `O(N·k)` pass per center after the first.
+
+mod afkmc2;
+mod kmeanspp;
+mod uniform;
+
+use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::util::rng::Xoshiro256;
+
+/// Seeding method selector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InitMethod {
+    /// k distinct rows uniformly at random.
+    Uniform,
+    /// Spherical k-means++ with dissimilarity `α − sim`.
+    KMeansPP {
+        /// Dissimilarity offset; 1.0 = canonical, 1.5 = metric variant.
+        alpha: f64,
+    },
+    /// AFK-MC² with dissimilarity `α − sim` and a given chain length.
+    AfkMc2 {
+        /// Dissimilarity offset; 1.0 = canonical, 1.5 = metric variant.
+        alpha: f64,
+        /// Markov chain length `m` per sampled center (paper-typical: 100–200).
+        chain: usize,
+    },
+}
+
+impl InitMethod {
+    /// Display name matching Table 2 of the paper.
+    pub fn name(&self) -> String {
+        match self {
+            InitMethod::Uniform => "Uniform".into(),
+            InitMethod::KMeansPP { alpha } => format!("k-means++ a={alpha}"),
+            InitMethod::AfkMc2 { alpha, .. } => format!("AFK-MC2 a={alpha}"),
+        }
+    }
+
+    /// The five initialization configurations evaluated in Table 2.
+    pub fn paper_set() -> Vec<InitMethod> {
+        vec![
+            InitMethod::Uniform,
+            InitMethod::KMeansPP { alpha: 1.0 },
+            InitMethod::KMeansPP { alpha: 1.5 },
+            InitMethod::AfkMc2 { alpha: 1.0, chain: 100 },
+            InitMethod::AfkMc2 { alpha: 1.5, chain: 100 },
+        ]
+    }
+}
+
+impl std::str::FromStr for InitMethod {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" | "random" => Ok(InitMethod::Uniform),
+            "kmeans++" | "kmeanspp" | "pp" => Ok(InitMethod::KMeansPP { alpha: 1.0 }),
+            "kmeans++1.5" | "pp1.5" => Ok(InitMethod::KMeansPP { alpha: 1.5 }),
+            "afkmc2" | "afk-mc2" => Ok(InitMethod::AfkMc2 { alpha: 1.0, chain: 100 }),
+            "afkmc2-1.5" | "afk-mc2-1.5" => Ok(InitMethod::AfkMc2 { alpha: 1.5, chain: 100 }),
+            other => Err(format!("unknown init method: {other}")),
+        }
+    }
+}
+
+/// The outcome of seeding: initial unit centers plus instrumentation.
+#[derive(Debug, Clone)]
+pub struct InitOutcome {
+    /// k × d matrix of initial centers (unit rows).
+    pub centers: DenseMatrix,
+    /// Similarity computations spent during seeding.
+    pub sims_computed: u64,
+    /// Wall time of seeding in milliseconds.
+    pub wall_ms: f64,
+    /// Row indices of the chosen seeds (for reproducibility reports).
+    pub chosen: Vec<usize>,
+    /// Row-major `N × k` matrix of point-to-seed similarities collected
+    /// *during* seeding (k-means++ computes them anyway — the §7 synergy).
+    /// When present, [`crate::kmeans::run_seeded`] initializes all bound
+    /// structures from it and skips the initial `O(N·k)` assignment pass.
+    pub sim_matrix: Option<Vec<f32>>,
+}
+
+/// Seed `k` centers from `data` with `method` and `seed`.
+pub fn seed_centers(data: &CsrMatrix, k: usize, method: &InitMethod, seed: u64) -> InitOutcome {
+    seed_centers_impl(data, k, method, seed, false)
+}
+
+/// Like [`seed_centers`], additionally collecting the `N × k` similarity
+/// matrix when the method computes those similarities anyway (k-means++) —
+/// the paper's §7 "pre-initialize the bounds" synergy. Costs `N` extra
+/// similarities (the last seed's column) plus `N·k·4` bytes.
+pub fn seed_centers_with_bounds(
+    data: &CsrMatrix,
+    k: usize,
+    method: &InitMethod,
+    seed: u64,
+) -> InitOutcome {
+    seed_centers_impl(data, k, method, seed, true)
+}
+
+fn seed_centers_impl(
+    data: &CsrMatrix,
+    k: usize,
+    method: &InitMethod,
+    seed: u64,
+    collect: bool,
+) -> InitOutcome {
+    assert!(k >= 1, "k must be positive");
+    assert!(
+        k <= data.rows(),
+        "cannot seed k={k} centers from {} rows",
+        data.rows()
+    );
+    let sw = crate::util::timer::Stopwatch::start();
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut sim_matrix = if collect && matches!(method, InitMethod::KMeansPP { .. }) {
+        Some(vec![0.0f32; data.rows() * k])
+    } else {
+        None
+    };
+    let (chosen, mut sims) = match method {
+        InitMethod::Uniform => (uniform::choose(data, k, &mut rng), 0),
+        InitMethod::KMeansPP { alpha } => {
+            kmeanspp::choose_collecting(data, k, *alpha, &mut rng, sim_matrix.as_deref_mut())
+        }
+        InitMethod::AfkMc2 { alpha, chain } => afkmc2::choose(data, k, *alpha, *chain, &mut rng),
+    };
+    if let Some(m) = sim_matrix.as_deref_mut() {
+        // The last chosen seed's column was never needed by the seeding
+        // loop itself; fill it so the matrix is complete.
+        let last = data.row_vec(chosen[k - 1]).to_dense();
+        for i in 0..data.rows() {
+            m[i * k + (k - 1)] = data.row(i).dot_dense(&last) as f32;
+        }
+        sims += data.rows() as u64;
+    }
+    let mut centers = DenseMatrix::zeros(k, data.cols());
+    for (c, &row) in chosen.iter().enumerate() {
+        let v = data.row(row);
+        let dst = centers.row_mut(c);
+        for (t, &col) in v.indices.iter().enumerate() {
+            dst[col as usize] = v.values[t];
+        }
+    }
+    centers.normalize_rows();
+    InitOutcome {
+        centers,
+        sims_computed: sims,
+        wall_ms: sw.ms(),
+        chosen,
+        sim_matrix,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthConfig;
+
+    fn dataset() -> CsrMatrix {
+        SynthConfig::small_demo().generate(7).matrix
+    }
+
+    #[test]
+    fn all_methods_produce_k_unit_centers() {
+        let data = dataset();
+        for method in InitMethod::paper_set() {
+            let out = seed_centers(&data, 5, &method, 3);
+            assert_eq!(out.centers.rows(), 5, "{}", method.name());
+            assert_eq!(out.chosen.len(), 5);
+            for j in 0..5 {
+                let n: f64 = out
+                    .centers
+                    .row(j)
+                    .iter()
+                    .map(|&v| v as f64 * v as f64)
+                    .sum();
+                assert!((n - 1.0).abs() < 1e-4, "{} center {j} norm {n}", method.name());
+            }
+        }
+    }
+
+    #[test]
+    fn seeding_is_deterministic_per_seed() {
+        let data = dataset();
+        for method in InitMethod::paper_set() {
+            let a = seed_centers(&data, 4, &method, 11);
+            let b = seed_centers(&data, 4, &method, 11);
+            assert_eq!(a.chosen, b.chosen, "{}", method.name());
+            let c = seed_centers(&data, 4, &method, 12);
+            // Different seeds should (almost surely) choose differently.
+            if a.chosen == c.chosen {
+                let d = seed_centers(&data, 4, &method, 13);
+                assert_ne!(a.chosen, d.chosen, "{}", method.name());
+            }
+        }
+    }
+
+    #[test]
+    fn plusplus_chooses_distinct_rows() {
+        let data = dataset();
+        for method in [
+            InitMethod::KMeansPP { alpha: 1.0 },
+            InitMethod::KMeansPP { alpha: 1.5 },
+            InitMethod::AfkMc2 { alpha: 1.0, chain: 20 },
+        ] {
+            for seed in 0..5 {
+                let out = seed_centers(&data, 8, &method, seed);
+                let set: std::collections::HashSet<_> = out.chosen.iter().collect();
+                assert_eq!(set.len(), 8, "{} seed {seed}", method.name());
+            }
+        }
+    }
+
+    #[test]
+    fn parse_init_methods() {
+        assert_eq!("uniform".parse::<InitMethod>().unwrap(), InitMethod::Uniform);
+        assert!(matches!(
+            "kmeans++".parse::<InitMethod>().unwrap(),
+            InitMethod::KMeansPP { .. }
+        ));
+        assert!(matches!(
+            "afkmc2".parse::<InitMethod>().unwrap(),
+            InitMethod::AfkMc2 { .. }
+        ));
+        assert!("bogus".parse::<InitMethod>().is_err());
+    }
+}

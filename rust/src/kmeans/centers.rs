@@ -1,0 +1,357 @@
+//! Cluster-center bookkeeping shared by all algorithm variants.
+//!
+//! Implements the paper's baseline optimizations (§5): centers are stored
+//! **dense** (sparse rows aggregate into nearly-dense sums, §5.2), the
+//! per-cluster **sums are cached** and updated incrementally when a point
+//! changes assignment (optimization iii), and the center is the sum scaled
+//! to unit length (not the arithmetic mean).
+//!
+//! Sums are accumulated in `f64`: the experiment drivers run thousands of
+//! incremental ± updates per cluster, and `f32` drift would break the
+//! "accelerated variants produce identical assignments" exactness tests.
+
+use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::sparse::csr::RowView;
+
+/// Cluster centers plus the cached unnormalized sums behind them.
+#[derive(Debug, Clone)]
+pub struct Centers {
+    k: usize,
+    d: usize,
+    /// Unnormalized per-cluster sums (k×d, row-major, f64).
+    sums: Vec<f64>,
+    /// Points per cluster.
+    counts: Vec<u64>,
+    /// Current unit-normalized centers (k×d, f32).
+    centers: DenseMatrix,
+    /// Transposed copy of the centers (d×k, f32): the all-centers
+    /// similarity pass reads `t[idx·k .. idx·k+k]` contiguously per
+    /// non-zero, which vectorizes — the §Perf transposed-gather
+    /// optimization (see EXPERIMENTS.md).
+    centers_t: DenseMatrix,
+    /// Centers of the previous iteration (for `p(j)`).
+    prev: DenseMatrix,
+    /// `p(j) = ⟨c(j), c'(j)⟩`: self-similarity of each center's last move.
+    p: Vec<f64>,
+}
+
+impl Centers {
+    /// Start from initial (unit-normalized) centers produced by a seeding
+    /// method. Sums start at zero; call [`Centers::rebuild`] once the first
+    /// assignment exists.
+    pub fn from_initial(initial: DenseMatrix) -> Self {
+        let k = initial.rows();
+        let d = initial.cols();
+        let mut centers = initial;
+        centers.normalize_rows();
+        let mut me = Self {
+            k,
+            d,
+            sums: vec![0.0; k * d],
+            counts: vec![0; k],
+            prev: centers.clone(),
+            centers_t: DenseMatrix::zeros(d, k),
+            centers,
+            p: vec![1.0; k],
+        };
+        me.refresh_transpose();
+        me
+    }
+
+    /// Rewrite the d×k transposed copy from the current centers.
+    fn refresh_transpose(&mut self) {
+        let k = self.k;
+        let t = self.centers_t.data_mut();
+        for j in 0..k {
+            let row = self.centers.row(j);
+            for (c, &v) in row.iter().enumerate() {
+                t[c * k + j] = v;
+            }
+        }
+    }
+
+    /// Similarities of one sparse row to **all** centers at once, written
+    /// into `out[0..k]`. Uses the transposed layout: per non-zero, the k
+    /// center coordinates are contiguous, so the inner loop vectorizes —
+    /// several times faster than k separate gather dots for the Standard
+    /// algorithm and the full re-scans of Hamerly.
+    #[inline]
+    pub fn sims_all(&self, row: crate::sparse::csr::RowView<'_>, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.k);
+        let k = self.k;
+        let t = self.centers_t.data();
+        // f64 accumulators (exactness), contiguous f32 center reads
+        // (speed): the contiguity is what buys the throughput.
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        for (t_i, &v) in row.indices.iter().zip(row.values.iter()) {
+            let base = *t_i as usize * k;
+            let col = &t[base..base + k];
+            let v = v as f64;
+            for (o, &cv) in out.iter_mut().zip(col.iter()) {
+                *o += v * cv as f64;
+            }
+        }
+    }
+
+    /// Number of clusters.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Dimensionality.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// The current unit-normalized centers.
+    #[inline]
+    pub fn centers(&self) -> &DenseMatrix {
+        &self.centers
+    }
+
+    /// Row `j` of the current centers.
+    #[inline]
+    pub fn center(&self, j: usize) -> &[f32] {
+        self.centers.row(j)
+    }
+
+    /// `p(j)` of the most recent [`Centers::update`].
+    #[inline]
+    pub fn p(&self) -> &[f64] {
+        &self.p
+    }
+
+    /// Points currently assigned to cluster `j`.
+    #[inline]
+    pub fn count(&self, j: usize) -> u64 {
+        self.counts[j]
+    }
+
+    /// Rebuild sums and counts from scratch for a full assignment
+    /// (deterministic order: ascending point index).
+    pub fn rebuild(&mut self, data: &CsrMatrix, assign: &[u32]) {
+        debug_assert_eq!(assign.len(), data.rows());
+        self.sums.fill(0.0);
+        self.counts.fill(0);
+        for (i, &a) in assign.iter().enumerate() {
+            let a = a as usize;
+            self.counts[a] += 1;
+            let row = data.row(i);
+            let base = a * self.d;
+            for (t, &c) in row.indices.iter().enumerate() {
+                self.sums[base + c as usize] += row.values[t] as f64;
+            }
+        }
+    }
+
+    /// Incrementally move one point's mass from cluster `from` to `to`
+    /// (the paper's optimization iii).
+    pub fn apply_move(&mut self, row: RowView<'_>, from: usize, to: usize) {
+        debug_assert_ne!(from, to);
+        self.counts[from] -= 1;
+        self.counts[to] += 1;
+        let (bf, bt) = (from * self.d, to * self.d);
+        for (t, &c) in row.indices.iter().enumerate() {
+            let v = row.values[t] as f64;
+            self.sums[bf + c as usize] -= v;
+            self.sums[bt + c as usize] += v;
+        }
+    }
+
+    /// Recompute unit centers from the cached sums, leaving empty clusters
+    /// at their previous position (`p = 1`). Returns the number of
+    /// center·center dot products spent computing `p(j)` (= k for moved
+    /// centers), so callers can account for them.
+    pub fn update(&mut self) -> u64 {
+        std::mem::swap(&mut self.centers, &mut self.prev);
+        let mut dots = 0u64;
+        for j in 0..self.k {
+            if self.counts[j] == 0 {
+                // Empty cluster: keep previous center.
+                let prev = self.prev.row(j).to_vec();
+                self.centers.row_mut(j).copy_from_slice(&prev);
+                self.p[j] = 1.0;
+                continue;
+            }
+            let base = j * self.d;
+            let sum = &self.sums[base..base + self.d];
+            let norm = sum.iter().map(|&v| v * v).sum::<f64>().sqrt();
+            let dst = self.centers.row_mut(j);
+            if norm > 0.0 {
+                let inv = 1.0 / norm;
+                for (o, &s) in dst.iter_mut().zip(sum.iter()) {
+                    *o = (s * inv) as f32;
+                }
+            } else {
+                // Degenerate (sum cancelled to zero): keep previous center.
+                let prev = self.prev.row(j).to_vec();
+                dst.copy_from_slice(&prev);
+            }
+            self.p[j] = crate::bounds::clamp_sim(self.centers.row_dot(j, &self.prev, j));
+            dots += 1;
+        }
+        self.refresh_transpose();
+        dots
+    }
+
+    /// Min and max of `p(j)` over `j ≠ excluded`, plus the same over all j.
+    /// Used by the Hamerly single-bound update (Eq. 8/9): for the points of
+    /// cluster `a`, the relevant movement is `p'(a) = min_{j≠a} p(j)`.
+    /// Computing (min, second-min, max, second-max) once per iteration
+    /// yields all k per-cluster values in O(k).
+    pub fn p_extremes(&self) -> PExtremes {
+        PExtremes::from_p(&self.p)
+    }
+}
+
+/// Minimum/maximum structure over `p(j)` with exclusion support.
+#[derive(Debug, Clone, Copy)]
+pub struct PExtremes {
+    min1: f64,
+    min1_at: usize,
+    min2: f64,
+    max1: f64,
+    max1_at: usize,
+    max2: f64,
+}
+
+impl PExtremes {
+    /// Build from the `p` vector.
+    pub fn from_p(p: &[f64]) -> Self {
+        let mut e = PExtremes {
+            min1: f64::MAX,
+            min1_at: usize::MAX,
+            min2: f64::MAX,
+            max1: f64::MIN,
+            max1_at: usize::MAX,
+            max2: f64::MIN,
+        };
+        for (j, &v) in p.iter().enumerate() {
+            if v < e.min1 {
+                e.min2 = e.min1;
+                e.min1 = v;
+                e.min1_at = j;
+            } else if v < e.min2 {
+                e.min2 = v;
+            }
+            if v > e.max1 {
+                e.max2 = e.max1;
+                e.max1 = v;
+                e.max1_at = j;
+            } else if v > e.max2 {
+                e.max2 = v;
+            }
+        }
+        e
+    }
+
+    /// `min_{j≠a} p(j)`.
+    #[inline]
+    pub fn min_excluding(&self, a: usize) -> f64 {
+        if a == self.min1_at { self.min2 } else { self.min1 }
+    }
+
+    /// `max_{j≠a} p(j)`.
+    #[inline]
+    pub fn max_excluding(&self, a: usize) -> f64 {
+        if a == self.max1_at { self.max2 } else { self.max1 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseVec;
+
+    fn toy_data() -> CsrMatrix {
+        // Four unit-ish rows in 3D.
+        let rows = vec![
+            SparseVec::from_pairs(3, vec![(0, 1.0)]),
+            SparseVec::from_pairs(3, vec![(0, 0.8), (1, 0.6)]),
+            SparseVec::from_pairs(3, vec![(2, 1.0)]),
+            SparseVec::from_pairs(3, vec![(1, 0.6), (2, 0.8)]),
+        ];
+        CsrMatrix::from_rows(3, &rows)
+    }
+
+    fn initial_centers() -> DenseMatrix {
+        DenseMatrix::from_vec(2, 3, vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0])
+    }
+
+    #[test]
+    fn rebuild_and_update_normalizes() {
+        let data = toy_data();
+        let mut c = Centers::from_initial(initial_centers());
+        c.rebuild(&data, &[0, 0, 1, 1]);
+        assert_eq!(c.count(0), 2);
+        assert_eq!(c.count(1), 2);
+        c.update();
+        // Center 0 = normalize([1.8, 0.6, 0]).
+        let n = (1.8f64 * 1.8 + 0.6 * 0.6).sqrt();
+        assert!((c.center(0)[0] as f64 - 1.8 / n).abs() < 1e-6);
+        assert!((c.center(0)[1] as f64 - 0.6 / n).abs() < 1e-6);
+        // p(j) in [−1, 1] and meaningful.
+        assert!(c.p().iter().all(|&p| (-1.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn apply_move_matches_rebuild() {
+        let data = toy_data();
+        let mut a = Centers::from_initial(initial_centers());
+        a.rebuild(&data, &[0, 0, 1, 1]);
+        // Move point 1 from cluster 0 to 1 incrementally…
+        a.apply_move(data.row(1), 0, 1);
+        a.update();
+        // …and compare with a from-scratch rebuild of the same assignment.
+        let mut b = Centers::from_initial(initial_centers());
+        b.rebuild(&data, &[0, 1, 1, 1]);
+        b.update();
+        for j in 0..2 {
+            for (x, y) in a.center(j).iter().zip(b.center(j)) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+        assert_eq!(a.count(0), 1);
+        assert_eq!(a.count(1), 3);
+    }
+
+    #[test]
+    fn empty_cluster_keeps_previous_center() {
+        let data = toy_data();
+        let mut c = Centers::from_initial(initial_centers());
+        c.rebuild(&data, &[0, 0, 0, 0]);
+        c.update();
+        let kept = c.center(1).to_vec();
+        assert_eq!(kept, vec![0.0, 0.0, 1.0]);
+        assert_eq!(c.p()[1], 1.0);
+    }
+
+    #[test]
+    fn p_is_one_when_center_static() {
+        let data = toy_data();
+        let mut c = Centers::from_initial(initial_centers());
+        c.rebuild(&data, &[0, 0, 1, 1]);
+        c.update();
+        let p1 = c.p().to_vec();
+        // No moves: second update from identical sums ⇒ p = 1.
+        c.update();
+        for &p in c.p() {
+            assert!((p - 1.0).abs() < 1e-6);
+        }
+        drop(p1);
+    }
+
+    #[test]
+    fn p_extremes_exclusion() {
+        let p = [0.9, 0.5, 0.7, 0.99];
+        let e = PExtremes::from_p(&p);
+        assert_eq!(e.min_excluding(0), 0.5);
+        assert_eq!(e.min_excluding(1), 0.7);
+        assert_eq!(e.max_excluding(3), 0.9);
+        assert_eq!(e.max_excluding(0), 0.99);
+    }
+}

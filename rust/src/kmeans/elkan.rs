@@ -1,0 +1,103 @@
+//! Spherical Elkan's algorithm (§5.2): per-(point, center) upper bounds
+//! `u(i,j)`, a lower bound `l(i)` to the assigned center, plus the
+//! center–center half-angle pruning tests:
+//!
+//! * whole-loop skip: `l(i) ≥ s(a(i))` — no other center can win;
+//! * per-center skip: `u(i,j) ≤ l(i)` or `cc(a(i), j) ≤ l(i)`.
+//!
+//! Both `cc` tests are valid because `cc ≥ 0`, so `cc ≤ l` implies the
+//! `l ≥ 0` premise of the paper's derivation. Bounds are maintained across
+//! center movement with Eq. 6/7.
+
+use super::{Ctx, IterStats, KMeansConfig};
+use crate::bounds::cc::CenterBounds;
+use crate::bounds::{update_lower_pre, update_upper_pre};
+use crate::util::timer::Stopwatch;
+
+pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
+    let n = ctx.data.rows();
+    let k = ctx.k;
+    let mut l = vec![0.0f64; n];
+    let mut u = vec![0.0f64; n * k];
+
+    ctx.initial_assignment(true, |i, _bj, best, _second, sims| {
+        l[i] = best;
+        u[i * k..(i + 1) * k].copy_from_slice(sims);
+    });
+    ctx.stats.bound_bytes = (n + n * k) * std::mem::size_of::<f64>();
+
+    let mut cb = CenterBounds::new(k);
+    for _ in 0..cfg.max_iter {
+        let sw = Stopwatch::start();
+        let mut iter = IterStats::default();
+
+        // Maintain bounds across the center movement of the last update.
+        let p = ctx.centers.p().to_vec();
+        let sin_p: Vec<f64> = p.iter().map(|&v| crate::bounds::sin_from_cos(v)).collect();
+        for i in 0..n {
+            let a = ctx.assign[i] as usize;
+            l[i] = update_lower_pre(l[i], p[a], sin_p[a]);
+            let row = &mut u[i * k..(i + 1) * k];
+            for (j, uij) in row.iter_mut().enumerate() {
+                *uij = update_upper_pre(*uij, p[j], sin_p[j]);
+            }
+        }
+
+        // Center–center half-angle bounds for the current centers.
+        iter.sims_center_center += cb.recompute(ctx.centers.centers());
+
+        let mut moves = 0u64;
+        for i in 0..n {
+            let mut a = ctx.assign[i] as usize;
+            // Whole-loop test: no other center can beat l(i).
+            if l[i] >= cb.s(a) {
+                iter.loop_skips += 1;
+                continue;
+            }
+            let mut tight = false;
+            for j in 0..k {
+                if j == a {
+                    continue;
+                }
+                let uij = u[i * k + j];
+                if uij <= l[i] || cb.cc(a, j) <= l[i] {
+                    iter.bound_skips += 1;
+                    continue;
+                }
+                if !tight {
+                    // First failure: make l(i) exact and re-test.
+                    l[i] = ctx.similarity(i, a, &mut iter);
+                    tight = true;
+                    if uij <= l[i] || cb.cc(a, j) <= l[i] {
+                        iter.bound_skips += 1;
+                        continue;
+                    }
+                }
+                // Compute the exact similarity to the candidate center.
+                let s = ctx.similarity(i, j, &mut iter);
+                u[i * k + j] = s;
+                if s > l[i] {
+                    // Reassign: the old exact l(i) becomes a valid upper
+                    // bound for the old center.
+                    u[i * k + a] = l[i];
+                    ctx.centers.apply_move(ctx.data.row(i), a, j);
+                    a = j;
+                    ctx.assign[i] = j as u32;
+                    l[i] = s;
+                    moves += 1;
+                }
+            }
+        }
+
+        iter.reassignments = moves;
+        if moves == 0 {
+            iter.wall_ms = sw.ms();
+            ctx.stats.iters.push(iter);
+            return true;
+        }
+        iter.sims_center_center += ctx.centers.update();
+        iter.wall_ms = sw.ms();
+        ctx.stats.iters.push(iter);
+    }
+    false
+}

@@ -1,0 +1,158 @@
+//! Spherical Exponion (beyond the paper; §5.5 suggests the adaptation).
+//!
+//! Exponion (Newling & Fleuret 2016) keeps Hamerly's two bounds but, when
+//! they fail, searches only the centers inside a ball around the assigned
+//! center instead of all k. A center `j` can only beat the current
+//! assignment if `d(c_a, c_j) < 2·d(x, c_a)`; on the sphere this becomes
+//!
+//! ```text
+//! θ(c_a, c_j) < 2·θ(x, c_a)   ⇔   ⟨c_a, c_j⟩ > 2·l² − 1
+//! ```
+//!
+//! (double-angle identity, `l = ⟨x, c_a⟩` tight). Each center keeps its
+//! other centers **sorted by similarity descending**; the failing point
+//! scans only the prefix above the threshold `2l² − 1`. The first
+//! unscanned entry yields a valid upper bound for everything outside the
+//! prefix via Eq. 5, which keeps the single bound `u` tight.
+//!
+//! Cost: the `O(k²)` center–center similarities per iteration (like full
+//! Elkan/Hamerly) plus `O(k² log k)` sorting — traded against a much
+//! smaller scan set than Hamerly's full re-scan.
+
+use super::{Ctx, IterStats, KMeansConfig};
+use crate::bounds::hamerly_bound::{update_eq9_pre, update_min_p_guarded, update_safe};
+use crate::bounds::{sim_upper, update_lower};
+use crate::util::timer::Stopwatch;
+
+pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
+    let n = ctx.data.rows();
+    let k = ctx.k;
+    let mut l = vec![0.0f64; n];
+    let mut u = vec![0.0f64; n];
+
+    ctx.initial_assignment(false, |i, _bj, best, second, _| {
+        l[i] = best;
+        u[i] = if k > 1 { second } else { -1.0 };
+    });
+    ctx.stats.bound_bytes =
+        2 * n * std::mem::size_of::<f64>() + k * (k - 1) * std::mem::size_of::<(f64, u32)>();
+
+    // Per-center sorted neighbor lists: (similarity, center id) descending.
+    let mut neighbors: Vec<Vec<(f64, u32)>> = vec![Vec::with_capacity(k - 1); k];
+    let mut p_min_ex = vec![0.0f64; k];
+    let mut p_max_ex = vec![0.0f64; k];
+    let mut one_minus_pmin_sq = vec![0.0f64; k];
+
+    for _ in 0..cfg.max_iter {
+        let sw = Stopwatch::start();
+        let mut iter = IterStats::default();
+
+        // Maintain bounds across the last center movement (same machinery
+        // as Hamerly §5.3).
+        let p = ctx.centers.p();
+        let ex = ctx.centers.p_extremes();
+        for a in 0..k {
+            let pm = if k > 1 { ex.min_excluding(a) } else { 1.0 };
+            p_min_ex[a] = pm;
+            p_max_ex[a] = if k > 1 { ex.max_excluding(a) } else { 1.0 };
+            one_minus_pmin_sq[a] = (1.0 - pm * pm).max(0.0);
+        }
+        for i in 0..n {
+            let a = ctx.assign[i] as usize;
+            l[i] = update_lower(l[i], p[a]);
+            u[i] = if cfg.tight_hamerly_bound {
+                update_min_p_guarded(u[i], p_min_ex[a])
+            } else if u[i] >= 0.0 && p_min_ex[a] >= 0.0 {
+                update_eq9_pre(u[i], one_minus_pmin_sq[a])
+            } else {
+                update_safe(u[i], p_min_ex[a], p_max_ex[a])
+            };
+        }
+
+        // Rebuild the sorted neighbor lists for the current centers.
+        for list in &mut neighbors {
+            list.clear();
+        }
+        for a in 0..k {
+            for j in (a + 1)..k {
+                let s = ctx.centers.centers().row_dot(a, ctx.centers.centers(), j);
+                iter.sims_center_center += 1;
+                neighbors[a].push((s, j as u32));
+                neighbors[j].push((s, a as u32));
+            }
+        }
+        for list in &mut neighbors {
+            list.sort_unstable_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+        }
+
+        let mut moves = 0u64;
+        for i in 0..n {
+            let a = ctx.assign[i] as usize;
+            if l[i] >= u[i] {
+                iter.bound_skips += 1;
+                continue;
+            }
+            l[i] = ctx.similarity(i, a, &mut iter);
+            if l[i] >= u[i] {
+                iter.bound_skips += 1;
+                continue;
+            }
+            // Scan the annulus: neighbors of a with sim > 2l²−1.
+            let threshold = 2.0 * l[i] * l[i] - 1.0;
+            let row = ctx.data.row(i);
+            let mut m1 = f64::MIN;
+            let mut m2 = f64::MIN;
+            let mut jm = a;
+            let mut outside = -1.0f64; // sim(ca, c_first-unscanned)
+            let mut scanned_all = true;
+            for &(s_aj, j) in &neighbors[a] {
+                // Only prune by the annulus when l ≥ 0 (the double-angle
+                // threshold needs 2θ ≤ 2π guarded by cos monotonicity;
+                // for l < 0 scan everything — rare and still exact).
+                if l[i] >= 0.0 && s_aj <= threshold {
+                    outside = s_aj;
+                    scanned_all = false;
+                    break;
+                }
+                let s = row.dot_dense(ctx.centers.center(j as usize));
+                iter.sims_point_center += 1;
+                if s > m1 {
+                    m2 = m1;
+                    m1 = s;
+                    jm = j as usize;
+                } else if s > m2 {
+                    m2 = s;
+                }
+            }
+            // Upper bound for everything outside the scanned prefix.
+            let outside_bound = if scanned_all {
+                f64::MIN
+            } else {
+                sim_upper(outside, l[i])
+            };
+            if m1 > l[i] {
+                // Reassign. Others now include the old center (tight l_old)
+                // and the unscanned tail (≤ outside_bound).
+                let l_old = l[i];
+                ctx.centers.apply_move(row, a, jm);
+                ctx.assign[i] = jm as u32;
+                u[i] = m2.max(l_old).max(outside_bound).max(-1.0);
+                l[i] = m1;
+                moves += 1;
+            } else {
+                u[i] = m1.max(outside_bound).max(-1.0);
+            }
+        }
+
+        iter.reassignments = moves;
+        if moves == 0 {
+            iter.wall_ms = sw.ms();
+            ctx.stats.iters.push(iter);
+            return true;
+        }
+        iter.sims_center_center += ctx.centers.update();
+        iter.wall_ms = sw.ms();
+        ctx.stats.iters.push(iter);
+    }
+    false
+}

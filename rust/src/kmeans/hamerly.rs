@@ -1,0 +1,138 @@
+//! Spherical Hamerly's algorithm (§5.3): one lower bound `l(i)` to the
+//! assigned center and **one** upper bound `u(i)` on the similarity to all
+//! other centers, plus the nearest-other-center test `l(i) ≥ s(a(i))`.
+//!
+//! The single-bound update is the paper's subtle point: Eq. 7 is not
+//! monotone in `p(j)`, so the bound is maintained with Eq. 9 (using
+//! `p'(a) = min_{j≠a} p(j)`, precomputing `1 − p'²`) on the fast path,
+//! falling back to the provably safe interval bound
+//! [`crate::bounds::hamerly_bound::update_safe`] outside Eq. 9's validity
+//! regime (`u < 0` or `p' < 0`, possible with non-TF-IDF data).
+
+use super::{Ctx, IterStats, KMeansConfig};
+use crate::bounds::cc::nearest_center_bounds;
+use crate::bounds::hamerly_bound::{update_eq9_pre, update_min_p_guarded, update_safe};
+use crate::bounds::update_lower;
+use crate::util::timer::Stopwatch;
+
+/// Shared implementation: `use_s_test = true` for full Hamerly,
+/// `false` for Simplified Hamerly (§5.4).
+pub(crate) fn run_impl(ctx: &mut Ctx<'_>, cfg: &KMeansConfig, use_s_test: bool) -> bool {
+    let n = ctx.data.rows();
+    let k = ctx.k;
+    let mut l = vec![0.0f64; n];
+    let mut u = vec![0.0f64; n];
+
+    ctx.initial_assignment(false, |i, _bj, best, second, _| {
+        l[i] = best;
+        u[i] = if k > 1 { second } else { -1.0 };
+    });
+    ctx.stats.bound_bytes = 2 * n * std::mem::size_of::<f64>();
+
+    // Per-cluster movement extremes for the single-bound update.
+    let mut p_min_ex = vec![0.0f64; k];
+    let mut p_max_ex = vec![0.0f64; k];
+    let mut one_minus_pmin_sq = vec![0.0f64; k];
+    let mut s = Vec::new();
+    let mut scan = vec![0.0f64; k];
+
+    for _ in 0..cfg.max_iter {
+        let sw = Stopwatch::start();
+        let mut iter = IterStats::default();
+
+        // Maintain bounds across the last center movement.
+        let p = ctx.centers.p();
+        let ex = ctx.centers.p_extremes();
+        for a in 0..k {
+            let pm = if k > 1 { ex.min_excluding(a) } else { 1.0 };
+            let px = if k > 1 { ex.max_excluding(a) } else { 1.0 };
+            p_min_ex[a] = pm;
+            p_max_ex[a] = px;
+            one_minus_pmin_sq[a] = (1.0 - pm * pm).max(0.0);
+        }
+        for i in 0..n {
+            let a = ctx.assign[i] as usize;
+            l[i] = update_lower(l[i], p[a]);
+            u[i] = if cfg.tight_hamerly_bound {
+                // Beyond-paper: guarded min-p — valid for all inputs and
+                // the tightest possible single bound.
+                update_min_p_guarded(u[i], p_min_ex[a])
+            } else if u[i] >= 0.0 && p_min_ex[a] >= 0.0 {
+                update_eq9_pre(u[i], one_minus_pmin_sq[a])
+            } else {
+                update_safe(u[i], p_min_ex[a], p_max_ex[a])
+            };
+        }
+
+        // Nearest-other-center half-angle bounds (full variant only).
+        if use_s_test {
+            iter.sims_center_center += nearest_center_bounds(ctx.centers.centers(), &mut s);
+        }
+
+        let mut moves = 0u64;
+        for i in 0..n {
+            let a = ctx.assign[i] as usize;
+            if use_s_test && l[i] >= s[a] {
+                iter.loop_skips += 1;
+                continue;
+            }
+            if l[i] >= u[i] {
+                iter.bound_skips += 1;
+                continue;
+            }
+            // Tighten l(i) and re-test before the expensive full scan.
+            l[i] = ctx.similarity(i, a, &mut iter);
+            if l[i] >= u[i] || (use_s_test && l[i] >= s[a]) {
+                iter.bound_skips += 1;
+                continue;
+            }
+            // Bounds failed: recompute similarities to all other centers
+            // (transposed-centers fast path; the a-th entry is ignored in
+            // the reduction).
+            let row = ctx.data.row(i);
+            ctx.centers.sims_all(row, &mut scan);
+            let mut m1 = f64::MIN;
+            let mut m2 = f64::MIN;
+            let mut jm = a;
+            for (j, &sj) in scan.iter().enumerate() {
+                if j == a {
+                    continue;
+                }
+                if sj > m1 {
+                    m2 = m1;
+                    m1 = sj;
+                    jm = j;
+                } else if sj > m2 {
+                    m2 = sj;
+                }
+            }
+            iter.sims_point_center += (k - 1) as u64;
+            if m1 > l[i] {
+                // Reassign; the old center becomes the best "other" unless
+                // the runner-up among the others beats it.
+                ctx.centers.apply_move(row, a, jm);
+                ctx.assign[i] = jm as u32;
+                u[i] = l[i].max(m2);
+                l[i] = m1;
+                moves += 1;
+            } else {
+                u[i] = m1;
+            }
+        }
+
+        iter.reassignments = moves;
+        if moves == 0 {
+            iter.wall_ms = sw.ms();
+            ctx.stats.iters.push(iter);
+            return true;
+        }
+        iter.sims_center_center += ctx.centers.update();
+        iter.wall_ms = sw.ms();
+        ctx.stats.iters.push(iter);
+    }
+    false
+}
+
+pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
+    run_impl(ctx, cfg, true)
+}

@@ -1,0 +1,492 @@
+//! Spherical k-means and its accelerated variants (§5 of the paper).
+//!
+//! All variants share the alternating-optimization outline: assign every
+//! point to the most-similar center, then recompute each center as the
+//! unit-scaled sum of its points. They differ only in how many of the
+//! point×center similarity computations they can *prove unnecessary*:
+//!
+//! | Variant | Bounds kept | Extra per-iteration cost |
+//! |---|---|---|
+//! | [`Variant::Standard`] | none | — |
+//! | [`Variant::Elkan`] | `l(i)`, `u(i,j)` (N·k) | `k²/2` center–center sims |
+//! | [`Variant::SimplifiedElkan`] | `l(i)`, `u(i,j)` (N·k) | — |
+//! | [`Variant::Hamerly`] | `l(i)`, `u(i)` (2·N) | `k²/2` center–center sims |
+//! | [`Variant::SimplifiedHamerly`] | `l(i)`, `u(i)` (2·N) | — |
+//! | [`Variant::Yinyang`] | `l(i)`, `u(i,g)` (N·(G+1)) | `k²/2` (group ceilings) |
+//! | [`Variant::Exponion`] | `l(i)`, `u(i)` (2·N) | `k²/2` sims + `k² log k` sort |
+//!
+//! Every accelerated variant is **exact**: given the same initial centers it
+//! produces the same assignment sequence as [`Variant::Standard`] (this is
+//! asserted by the `exactness` integration tests).
+
+pub mod centers;
+pub mod stats;
+
+mod elkan;
+mod exponion;
+mod hamerly;
+mod simplified_elkan;
+mod simplified_hamerly;
+mod standard;
+mod yinyang;
+
+use crate::data::Dataset;
+use crate::init::InitMethod;
+use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::util::timer::Stopwatch;
+pub use centers::Centers;
+pub use stats::{IterStats, RunStats};
+
+/// Which algorithm variant to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// The baseline spherical k-means (Dhillon & Modha 2001) with the §5
+    /// implementation optimizations but no pruning.
+    Standard,
+    /// Spherical Elkan (§5.2): per-center upper bounds + center–center
+    /// pruning (`cc`/`s` tests).
+    Elkan,
+    /// Spherical Simplified Elkan (§5.1, after Newling & Fleuret): per-center
+    /// upper bounds only.
+    SimplifiedElkan,
+    /// Spherical Hamerly (§5.3): one upper bound per point + `s` test.
+    Hamerly,
+    /// Spherical Simplified Hamerly (§5.4): one upper bound, no `s` test.
+    SimplifiedHamerly,
+    /// Spherical Yinyang (§5.5 — listed as future work in the paper;
+    /// implemented here): group bounds between Elkan and Hamerly.
+    Yinyang,
+    /// Spherical Exponion (§5.5 — beyond the paper): Hamerly's bounds plus
+    /// sorted center-neighbor annulus search instead of full re-scans.
+    Exponion,
+}
+
+impl Variant {
+    /// All variants evaluated in the paper's experiments (Table 3 order).
+    pub const PAPER_SET: [Variant; 5] = [
+        Variant::Standard,
+        Variant::Elkan,
+        Variant::SimplifiedElkan,
+        Variant::Hamerly,
+        Variant::SimplifiedHamerly,
+    ];
+
+    /// All implemented variants, including extensions.
+    pub const ALL: [Variant; 7] = [
+        Variant::Standard,
+        Variant::Elkan,
+        Variant::SimplifiedElkan,
+        Variant::Hamerly,
+        Variant::SimplifiedHamerly,
+        Variant::Yinyang,
+        Variant::Exponion,
+    ];
+
+    /// Display name matching the paper's tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Standard => "Standard",
+            Variant::Elkan => "Elkan",
+            Variant::SimplifiedElkan => "Simp.Elkan",
+            Variant::Hamerly => "Hamerly",
+            Variant::SimplifiedHamerly => "Simp.Hamerly",
+            Variant::Yinyang => "Yinyang",
+            Variant::Exponion => "Exponion",
+        }
+    }
+}
+
+impl std::str::FromStr for Variant {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().replace(['_', '.'], "-").as_str() {
+            "standard" | "lloyd" => Ok(Variant::Standard),
+            "elkan" => Ok(Variant::Elkan),
+            "simplified-elkan" | "simp-elkan" | "selkan" => Ok(Variant::SimplifiedElkan),
+            "hamerly" => Ok(Variant::Hamerly),
+            "simplified-hamerly" | "simp-hamerly" | "shamerly" => Ok(Variant::SimplifiedHamerly),
+            "yinyang" | "yin-yang" => Ok(Variant::Yinyang),
+            "exponion" => Ok(Variant::Exponion),
+            other => Err(format!("unknown variant: {other}")),
+        }
+    }
+}
+
+/// Configuration for one clustering run.
+#[derive(Debug, Clone)]
+pub struct KMeansConfig {
+    /// Number of clusters.
+    pub k: usize,
+    /// Algorithm variant.
+    pub variant: Variant,
+    /// Seeding method.
+    pub init: InitMethod,
+    /// Maximum number of assignment iterations (safety cap; the paper runs
+    /// to convergence, which all experiments here reach well before this).
+    pub max_iter: usize,
+    /// RNG seed for the seeding method.
+    pub seed: u64,
+    /// Number of center groups for [`Variant::Yinyang`]; defaults to
+    /// `max(1, k/10)` as in Ding et al. (2015) when `None`.
+    pub yinyang_groups: Option<usize>,
+    /// Standard variant only: use the transposed-centers SIMD fast path
+    /// for the all-k similarity pass (§Perf). `true` is fastest; `false`
+    /// computes per-center gather dots — the **same per-similarity
+    /// machinery the pruned variants use**, which is what the paper's
+    /// Table 3/Fig. 1–2 comparisons assume (c.f. Kriegel et al., "are we
+    /// comparing algorithms or implementations?"). The experiment drivers
+    /// report both.
+    pub fast_standard: bool,
+    /// Use the guarded min-p single-bound update
+    /// ([`crate::bounds::hamerly_bound::update_min_p_guarded`]) instead of
+    /// the paper's Eq. 9 in the Hamerly and Yinyang variants. Exact either
+    /// way; the guarded rule is provably the tightest single bound (an
+    /// improvement over the paper — see `bench_bounds` for the ablation).
+    pub tight_hamerly_bound: bool,
+}
+
+impl KMeansConfig {
+    /// Config with defaults: Standard variant, uniform init, 200 iterations.
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            variant: Variant::Standard,
+            init: InitMethod::Uniform,
+            max_iter: 200,
+            seed: 0,
+            yinyang_groups: None,
+            fast_standard: true,
+            tight_hamerly_bound: false,
+        }
+    }
+
+    /// Select the Standard variant's similarity path (see
+    /// [`KMeansConfig::fast_standard`]).
+    pub fn fast_standard(mut self, on: bool) -> Self {
+        self.fast_standard = on;
+        self
+    }
+
+    /// Enable the guarded min-p Hamerly bound (beyond-paper improvement).
+    pub fn tight_bound(mut self, on: bool) -> Self {
+        self.tight_hamerly_bound = on;
+        self
+    }
+
+    /// Set the variant.
+    pub fn variant(mut self, v: Variant) -> Self {
+        self.variant = v;
+        self
+    }
+
+    /// Set the seeding method.
+    pub fn init(mut self, i: InitMethod) -> Self {
+        self.init = i;
+        self
+    }
+
+    /// Set the RNG seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Set the iteration cap.
+    pub fn max_iter(mut self, m: usize) -> Self {
+        self.max_iter = m;
+        self
+    }
+}
+
+/// The outcome of a clustering run.
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    /// Cluster assignment per row of the input.
+    pub assignments: Vec<u32>,
+    /// Final unit-normalized centers (k × d).
+    pub centers: DenseMatrix,
+    /// The spherical k-means objective `Σᵢ (1 − ⟨xᵢ, c(a(i))⟩)` —
+    /// equal to half the within-cluster sum of squared Euclidean deviations
+    /// on unit vectors; lower is better (Table 2 reports relative changes
+    /// of this quantity).
+    pub objective: f64,
+    /// Mean cosine similarity of points to their centers (higher is better).
+    pub mean_similarity: f64,
+    /// Number of assignment iterations performed (excluding the initial
+    /// full assignment pass).
+    pub iterations: usize,
+    /// True if the run converged (no reassignments) before `max_iter`.
+    pub converged: bool,
+    /// Per-iteration instrumentation.
+    pub stats: RunStats,
+}
+
+/// Cluster `data` (rows must be unit-normalized — see
+/// [`CsrMatrix::normalize_rows`]) according to `cfg`.
+pub fn run(data: &CsrMatrix, cfg: &KMeansConfig) -> KMeansResult {
+    let init = crate::init::seed_centers(data, cfg.k, &cfg.init, cfg.seed);
+    run_with_centers(data, init.centers, cfg)
+}
+
+/// Cluster `data` from a seeding outcome, consuming the point-to-seed
+/// similarity matrix (if the seeding collected one — see
+/// [`crate::init::seed_centers_with_bounds`]) to **pre-initialize the
+/// bounds** and skip the initial `O(N·k)` assignment pass entirely: the
+/// paper's §7 synergy. A conservative margin (±1e-5) is applied to the
+/// collected f32 similarities so they remain valid f64 bounds.
+pub fn run_seeded(
+    data: &CsrMatrix,
+    init: crate::init::InitOutcome,
+    cfg: &KMeansConfig,
+) -> KMeansResult {
+    assert_eq!(init.centers.rows(), cfg.k, "initial centers vs k");
+    if let Some(m) = &init.sim_matrix {
+        assert_eq!(m.len(), data.rows() * cfg.k, "sim matrix shape");
+    }
+    let mut ctx = Ctx::new(data, init.centers);
+    ctx.preinit = init.sim_matrix;
+    let converged = dispatch(&mut ctx, cfg);
+    ctx.into_result(converged)
+}
+
+/// Cluster `data` starting from explicit initial centers (rows will be
+/// normalized). This is the entry point the exactness tests and the
+/// experiment drivers use so every variant sees identical initial centers.
+pub fn run_with_centers(
+    data: &CsrMatrix,
+    initial_centers: DenseMatrix,
+    cfg: &KMeansConfig,
+) -> KMeansResult {
+    assert_eq!(initial_centers.rows(), cfg.k, "initial centers vs k");
+    assert_eq!(initial_centers.cols(), data.cols(), "center dimensionality");
+    assert!(cfg.k >= 1, "need at least one cluster");
+    let mut ctx = Ctx::new(data, initial_centers);
+    let converged = dispatch(&mut ctx, cfg);
+    ctx.into_result(converged)
+}
+
+fn dispatch(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
+    match cfg.variant {
+        Variant::Standard => standard::run(ctx, cfg),
+        Variant::Elkan => elkan::run(ctx, cfg),
+        Variant::SimplifiedElkan => simplified_elkan::run(ctx, cfg),
+        Variant::Hamerly => hamerly::run(ctx, cfg),
+        Variant::SimplifiedHamerly => simplified_hamerly::run(ctx, cfg),
+        Variant::Yinyang => yinyang::run(ctx, cfg),
+        Variant::Exponion => exponion::run(ctx, cfg),
+    }
+}
+
+/// Safety margin applied to f32 similarities collected during seeding so
+/// they remain valid f64 bounds (f32 rounding + center renormalization).
+const PREINIT_MARGIN: f64 = 1e-5;
+
+/// `(argmax, max, second_max)` of a similarity row.
+#[inline]
+pub(crate) fn top2(sims: &[f64]) -> (usize, f64, f64) {
+    let mut best = f64::MIN;
+    let mut second = f64::MIN;
+    let mut best_j = 0usize;
+    for (j, &s) in sims.iter().enumerate() {
+        if s > best {
+            second = best;
+            best = s;
+            best_j = j;
+        } else if s > second {
+            second = s;
+        }
+    }
+    (best_j, best, second)
+}
+
+/// Shared mutable state threaded through every algorithm implementation.
+pub(crate) struct Ctx<'a> {
+    pub data: &'a CsrMatrix,
+    pub k: usize,
+    pub assign: Vec<u32>,
+    pub centers: Centers,
+    pub stats: RunStats,
+    /// Row-major N×k point-to-seed similarities from the seeding method
+    /// (§7 synergy); consumed by [`Ctx::initial_assignment`].
+    pub preinit: Option<Vec<f32>>,
+}
+
+impl<'a> Ctx<'a> {
+    fn new(data: &'a CsrMatrix, initial_centers: DenseMatrix) -> Self {
+        let k = initial_centers.rows();
+        Self {
+            data,
+            k,
+            assign: vec![0; data.rows()],
+            centers: Centers::from_initial(initial_centers),
+            stats: RunStats::default(),
+            preinit: None,
+        }
+    }
+
+    /// Compute similarities of row `i` to **all** centers into `scratch`
+    /// (length k) via the transposed-centers fast path; returns
+    /// `(argmax, best, second_best)`. Charges `k` similarity computations.
+    #[inline]
+    pub fn similarities_full(
+        &self,
+        i: usize,
+        iter: &mut IterStats,
+        scratch: &mut [f64],
+    ) -> (usize, f64, f64) {
+        let row = self.data.row(i);
+        self.centers.sims_all(row, scratch);
+        iter.sims_point_center += self.k as u64;
+        top2(scratch)
+    }
+
+    /// Like [`Ctx::similarities_full`] but with per-center gather dots —
+    /// the paper-faithful cost model (identical per-similarity work to the
+    /// pruned variants' selective computations).
+    #[inline]
+    pub fn similarities_full_gather(
+        &self,
+        i: usize,
+        iter: &mut IterStats,
+        scratch: &mut [f64],
+    ) -> (usize, f64, f64) {
+        let row = self.data.row(i);
+        for (j, o) in scratch.iter_mut().enumerate() {
+            *o = row.dot_dense(self.centers.center(j));
+        }
+        iter.sims_point_center += self.k as u64;
+        top2(scratch)
+    }
+
+    /// One point×center similarity, charged to `iter`.
+    #[inline]
+    pub fn similarity(&self, i: usize, j: usize, iter: &mut IterStats) -> f64 {
+        iter.sims_point_center += 1;
+        self.data.row(i).dot_dense(self.centers.center(j))
+    }
+
+    /// The initial full assignment pass shared by all variants: assigns
+    /// every point to its most similar initial center, records an
+    /// iteration-0 stats entry, and rebuilds the center sums.
+    /// `on_point(i, best_j, best, second, sims_row)` lets each variant
+    /// capture whatever bound state it needs.
+    pub fn initial_assignment<F>(&mut self, want_sims_row: bool, mut on_point: F)
+    where
+        F: FnMut(usize, usize, f64, f64, &[f64]),
+    {
+        let sw = Stopwatch::start();
+        let mut iter = IterStats::default();
+        let mut sims_row = vec![0.0f64; self.k];
+        if let Some(pre) = self.preinit.take() {
+            // §7 synergy: bounds come from the seeding pass for free.
+            // Margins keep the f32 values valid as f64 bounds; l gets a
+            // downward margin, u values an upward one.
+            for i in 0..self.data.rows() {
+                let row = &pre[i * self.k..(i + 1) * self.k];
+                let mut best = f64::MIN;
+                let mut second = f64::MIN;
+                let mut bj = 0usize;
+                for (j, &s) in row.iter().enumerate() {
+                    let s = s as f64;
+                    if s > best {
+                        second = best;
+                        best = s;
+                        bj = j;
+                    } else if s > second {
+                        second = s;
+                    }
+                }
+                if want_sims_row {
+                    for (o, &s) in sims_row.iter_mut().zip(row.iter()) {
+                        *o = s as f64 + PREINIT_MARGIN;
+                    }
+                }
+                self.assign[i] = bj as u32;
+                on_point(
+                    i,
+                    bj,
+                    best - PREINIT_MARGIN,
+                    second + PREINIT_MARGIN,
+                    &sims_row,
+                );
+            }
+        } else {
+            for i in 0..self.data.rows() {
+                let (bj, b, s) = self.similarities_full(i, &mut iter, &mut sims_row);
+                self.assign[i] = bj as u32;
+                on_point(i, bj, b, s, &sims_row);
+            }
+        }
+        let _ = want_sims_row;
+        iter.reassignments = self.data.rows() as u64;
+        // Build sums for the initial assignment and move centers once.
+        self.centers.rebuild(self.data, &self.assign);
+        iter.sims_center_center += self.centers.update();
+        iter.wall_ms = sw.ms();
+        self.stats.iters.push(iter);
+    }
+
+    /// Finalize: compute the objective and assemble the result.
+    fn into_result(self, converged: bool) -> KMeansResult {
+        let mut obj = 0.0f64;
+        for i in 0..self.data.rows() {
+            let s = self
+                .data
+                .row(i)
+                .dot_dense(self.centers.center(self.assign[i] as usize));
+            obj += 1.0 - s;
+        }
+        let n = self.data.rows().max(1) as f64;
+        let iterations = self.stats.iters.len().saturating_sub(1);
+        KMeansResult {
+            mean_similarity: 1.0 - obj / n,
+            objective: obj,
+            assignments: self.assign,
+            centers: self.centers.centers().clone(),
+            iterations,
+            converged,
+            stats: self.stats,
+        }
+    }
+}
+
+/// Convenience: cluster a [`Dataset`] (which carries its matrix plus
+/// metadata) and return the result.
+pub fn run_dataset(ds: &Dataset, cfg: &KMeansConfig) -> KMeansResult {
+    run(&ds.matrix, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_parsing_and_names() {
+        assert_eq!("elkan".parse::<Variant>().unwrap(), Variant::Elkan);
+        assert_eq!(
+            "Simp_Elkan".parse::<Variant>().unwrap(),
+            Variant::SimplifiedElkan
+        );
+        assert_eq!(
+            "simplified-hamerly".parse::<Variant>().unwrap(),
+            Variant::SimplifiedHamerly
+        );
+        assert_eq!("YinYang".parse::<Variant>().unwrap(), Variant::Yinyang);
+        assert!("nope".parse::<Variant>().is_err());
+        for v in Variant::ALL {
+            assert!(!v.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn config_builder() {
+        let cfg = KMeansConfig::new(7)
+            .variant(Variant::Hamerly)
+            .seed(9)
+            .max_iter(50);
+        assert_eq!(cfg.k, 7);
+        assert_eq!(cfg.variant, Variant::Hamerly);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.max_iter, 50);
+    }
+}

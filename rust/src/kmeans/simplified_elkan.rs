@@ -1,0 +1,84 @@
+//! Spherical Simplified Elkan's algorithm (§5.1, after Newling & Fleuret
+//! 2016): keeps the full `u(i,j)` bound matrix and `l(i)`, but drops the
+//! center–center (`cc`/`s`) pruning tests — saving the `O(k²)`
+//! center–center similarities per iteration at the cost of having to scan
+//! all k bounds for every point. The paper finds this trade favorable on
+//! high-dimensional data (Fig. 2b) and unfavorable for large k on
+//! low-dimensional data (Fig. 1c/d).
+
+use super::{Ctx, IterStats, KMeansConfig};
+use crate::bounds::{update_lower_pre, update_upper_pre};
+use crate::util::timer::Stopwatch;
+
+pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
+    let n = ctx.data.rows();
+    let k = ctx.k;
+    let mut l = vec![0.0f64; n];
+    let mut u = vec![0.0f64; n * k];
+
+    ctx.initial_assignment(true, |i, _bj, best, _second, sims| {
+        l[i] = best;
+        u[i * k..(i + 1) * k].copy_from_slice(sims);
+    });
+    ctx.stats.bound_bytes = (n + n * k) * std::mem::size_of::<f64>();
+
+    for _ in 0..cfg.max_iter {
+        let sw = Stopwatch::start();
+        let mut iter = IterStats::default();
+
+        let p = ctx.centers.p().to_vec();
+        let sin_p: Vec<f64> = p.iter().map(|&v| crate::bounds::sin_from_cos(v)).collect();
+        for i in 0..n {
+            let a = ctx.assign[i] as usize;
+            l[i] = update_lower_pre(l[i], p[a], sin_p[a]);
+            let row = &mut u[i * k..(i + 1) * k];
+            for (j, uij) in row.iter_mut().enumerate() {
+                *uij = update_upper_pre(*uij, p[j], sin_p[j]);
+            }
+        }
+
+        let mut moves = 0u64;
+        for i in 0..n {
+            let mut a = ctx.assign[i] as usize;
+            let mut tight = false;
+            for j in 0..k {
+                if j == a {
+                    continue;
+                }
+                if u[i * k + j] <= l[i] {
+                    iter.bound_skips += 1;
+                    continue;
+                }
+                if !tight {
+                    l[i] = ctx.similarity(i, a, &mut iter);
+                    tight = true;
+                    if u[i * k + j] <= l[i] {
+                        iter.bound_skips += 1;
+                        continue;
+                    }
+                }
+                let s = ctx.similarity(i, j, &mut iter);
+                u[i * k + j] = s;
+                if s > l[i] {
+                    u[i * k + a] = l[i];
+                    ctx.centers.apply_move(ctx.data.row(i), a, j);
+                    a = j;
+                    ctx.assign[i] = j as u32;
+                    l[i] = s;
+                    moves += 1;
+                }
+            }
+        }
+
+        iter.reassignments = moves;
+        if moves == 0 {
+            iter.wall_ms = sw.ms();
+            ctx.stats.iters.push(iter);
+            return true;
+        }
+        iter.sims_center_center += ctx.centers.update();
+        iter.wall_ms = sw.ms();
+        ctx.stats.iters.push(iter);
+    }
+    false
+}

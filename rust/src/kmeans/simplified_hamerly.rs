@@ -1,0 +1,11 @@
+//! Spherical Simplified Hamerly's algorithm (§5.4): Hamerly's single-bound
+//! scheme with the `l(i) ≥ s(a(i))` nearest-other-center test removed —
+//! avoiding the `O(k²)` center–center similarity computations per iteration,
+//! for the same reasons as Simplified Elkan. The paper finds this "a
+//! reasonable default choice" across data set shapes (§6).
+
+use super::{Ctx, KMeansConfig};
+
+pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
+    super::hamerly::run_impl(ctx, cfg, false)
+}

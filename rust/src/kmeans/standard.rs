@@ -1,0 +1,43 @@
+//! The baseline spherical k-means algorithm (Dhillon & Modha 2001) with the
+//! paper's §5 implementation optimizations: unit-normalized data (dot
+//! product = cosine), sparse×dense row–center dots, cached unnormalized
+//! sums updated incrementally, and sums scaled (not averaged) to unit
+//! length. No pruning — every iteration computes all `N·k` similarities.
+
+use super::{Ctx, IterStats, KMeansConfig};
+use crate::util::timer::Stopwatch;
+
+pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
+    // Iteration 0: full assignment to the initial centers.
+    ctx.initial_assignment(false, |_, _, _, _, _| {});
+
+    let mut scratch = vec![0.0f64; ctx.k];
+    for _ in 0..cfg.max_iter {
+        let sw = Stopwatch::start();
+        let mut iter = IterStats::default();
+        let mut moves = 0u64;
+        for i in 0..ctx.data.rows() {
+            let (best_j, _, _) = if cfg.fast_standard {
+                ctx.similarities_full(i, &mut iter, &mut scratch)
+            } else {
+                ctx.similarities_full_gather(i, &mut iter, &mut scratch)
+            };
+            let old = ctx.assign[i] as usize;
+            if best_j != old {
+                ctx.assign[i] = best_j as u32;
+                ctx.centers.apply_move(ctx.data.row(i), old, best_j);
+                moves += 1;
+            }
+        }
+        iter.reassignments = moves;
+        if moves == 0 {
+            iter.wall_ms = sw.ms();
+            ctx.stats.iters.push(iter);
+            return true;
+        }
+        iter.sims_center_center += ctx.centers.update();
+        iter.wall_ms = sw.ms();
+        ctx.stats.iters.push(iter);
+    }
+    false
+}

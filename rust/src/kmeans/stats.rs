@@ -1,0 +1,112 @@
+//! Per-iteration instrumentation. Fig. 1 of the paper plots the number of
+//! similarity computations and the run time of every iteration; this module
+//! records exactly those series for every algorithm run.
+
+/// Counters for a single k-means iteration.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IterStats {
+    /// Point×center similarity computations (sparse·dense dots).
+    pub sims_point_center: u64,
+    /// Center×center similarity computations (dense·dense dots), including
+    /// the `p(j) = ⟨c, c'⟩` movement self-similarities.
+    pub sims_center_center: u64,
+    /// Points whose assignment changed this iteration.
+    pub reassignments: u64,
+    /// Points skipped entirely by the `l(i) ≥ s(a(i))` whole-loop test.
+    pub loop_skips: u64,
+    /// Per-center bound tests that pruned a similarity computation.
+    pub bound_skips: u64,
+    /// Wall time of the iteration in milliseconds.
+    pub wall_ms: f64,
+}
+
+impl IterStats {
+    /// Total similarity computations in this iteration.
+    pub fn sims_total(&self) -> u64 {
+        self.sims_point_center + self.sims_center_center
+    }
+}
+
+/// Full instrumentation of one clustering run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Per-iteration counters, index 0 = the initial full assignment pass.
+    pub iters: Vec<IterStats>,
+    /// Bytes of bound storage the algorithm allocated (paper §6 discusses
+    /// the 2 GB Elkan bound matrix vs Hamerly's 44 MB).
+    pub bound_bytes: usize,
+}
+
+impl RunStats {
+    /// Total similarity computations across all iterations.
+    pub fn total_sims(&self) -> u64 {
+        self.iters.iter().map(|i| i.sims_total()).sum()
+    }
+
+    /// Total point×center similarity computations.
+    pub fn total_point_center(&self) -> u64 {
+        self.iters.iter().map(|i| i.sims_point_center).sum()
+    }
+
+    /// Total wall time in milliseconds (sum of iteration laps).
+    pub fn total_ms(&self) -> f64 {
+        self.iters.iter().map(|i| i.wall_ms).sum()
+    }
+
+    /// Number of iterations recorded (including the initial pass).
+    pub fn iterations(&self) -> usize {
+        self.iters.len()
+    }
+
+    /// Cumulative similarity-computation series (Fig. 1b).
+    pub fn cumulative_sims(&self) -> Vec<u64> {
+        let mut acc = 0;
+        self.iters
+            .iter()
+            .map(|i| {
+                acc += i.sims_total();
+                acc
+            })
+            .collect()
+    }
+
+    /// Cumulative run-time series in ms (Fig. 1d).
+    pub fn cumulative_ms(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        self.iters
+            .iter()
+            .map(|i| {
+                acc += i.wall_ms;
+                acc
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_cumulative() {
+        let mut s = RunStats::default();
+        s.iters.push(IterStats {
+            sims_point_center: 10,
+            sims_center_center: 2,
+            wall_ms: 1.0,
+            ..Default::default()
+        });
+        s.iters.push(IterStats {
+            sims_point_center: 5,
+            sims_center_center: 1,
+            wall_ms: 0.5,
+            ..Default::default()
+        });
+        assert_eq!(s.total_sims(), 18);
+        assert_eq!(s.total_point_center(), 15);
+        assert_eq!(s.cumulative_sims(), vec![12, 18]);
+        let cm = s.cumulative_ms();
+        assert!((cm[1] - 1.5).abs() < 1e-12);
+        assert_eq!(s.iterations(), 2);
+    }
+}

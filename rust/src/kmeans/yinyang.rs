@@ -1,0 +1,246 @@
+//! Spherical Yinyang k-means (Ding et al. 2015, adapted to cosine
+//! similarity). The paper lists this as the obvious extension (§5.5):
+//! centers are partitioned into `G` groups, and one upper bound `u(i,g)`
+//! is kept per (point, group) — a memory/pruning compromise between
+//! Elkan (`G = k`) and Hamerly (`G = 1`). Group bounds are maintained with
+//! the same Eq. 9 / safe-interval machinery as Hamerly's single bound,
+//! using per-group movement extremes.
+//!
+//! Grouping: a lightweight spherical k-means over the *initial centers*
+//! (G groups, a few refinement rounds) — the grouping only affects pruning
+//! power, never correctness, which the exactness tests assert.
+
+use super::{Ctx, IterStats, KMeansConfig};
+use crate::bounds::hamerly_bound::{update_eq9_pre, update_min_p_guarded, update_safe};
+use crate::bounds::update_lower;
+use crate::sparse::DenseMatrix;
+use crate::util::timer::Stopwatch;
+
+/// Assign each of the k centers to one of `g` groups by a few rounds of
+/// spherical k-means over the centers themselves (deterministic seeding:
+/// evenly spaced centers).
+fn group_centers(centers: &DenseMatrix, g: usize) -> Vec<Vec<usize>> {
+    let k = centers.rows();
+    let g = g.clamp(1, k);
+    let d = centers.cols();
+    // Seeds: evenly spaced center indices.
+    let mut seeds = DenseMatrix::zeros(g, d);
+    for gi in 0..g {
+        let src = gi * k / g;
+        seeds.row_mut(gi).copy_from_slice(centers.row(src));
+    }
+    let mut assign = vec![0usize; k];
+    for _round in 0..4 {
+        // Assign.
+        for j in 0..k {
+            let mut best = f64::MIN;
+            let mut bg = 0;
+            for gi in 0..g {
+                let s = centers.row_dot(j, &seeds, gi);
+                if s > best {
+                    best = s;
+                    bg = gi;
+                }
+            }
+            assign[j] = bg;
+        }
+        // Update seeds = normalized group sums.
+        let mut sums = vec![0.0f64; g * d];
+        for j in 0..k {
+            let base = assign[j] * d;
+            for (t, &v) in centers.row(j).iter().enumerate() {
+                sums[base + t] += v as f64;
+            }
+        }
+        for gi in 0..g {
+            let s = &sums[gi * d..(gi + 1) * d];
+            let norm = s.iter().map(|&v| v * v).sum::<f64>().sqrt();
+            if norm > 0.0 {
+                for (o, &v) in seeds.row_mut(gi).iter_mut().zip(s) {
+                    *o = (v / norm) as f32;
+                }
+            }
+        }
+    }
+    let mut groups = vec![Vec::new(); g];
+    for (j, &gi) in assign.iter().enumerate() {
+        groups[gi].push(j);
+    }
+    // Drop empty groups (possible with degenerate geometry).
+    groups.retain(|v| !v.is_empty());
+    groups
+}
+
+pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
+    let n = ctx.data.rows();
+    let k = ctx.k;
+    let groups = group_centers(
+        ctx.centers.centers(),
+        cfg.yinyang_groups.unwrap_or_else(|| (k / 10).max(1)),
+    );
+    let ng = groups.len();
+    // group_of[j] = group index of center j.
+    let mut group_of = vec![0usize; k];
+    for (gi, members) in groups.iter().enumerate() {
+        for &j in members {
+            group_of[j] = gi;
+        }
+    }
+
+    let mut l = vec![0.0f64; n];
+    let mut ug = vec![0.0f64; n * ng]; // u(i, g)
+
+    ctx.initial_assignment(true, |i, bj, best, _second, sims| {
+        l[i] = best;
+        let row = &mut ug[i * ng..(i + 1) * ng];
+        for (gi, members) in groups.iter().enumerate() {
+            let mut m = -1.0f64;
+            for &j in members {
+                if j != bj && sims[j] > m {
+                    m = sims[j];
+                }
+            }
+            row[gi] = m;
+        }
+    });
+    ctx.stats.bound_bytes = (n + n * ng) * std::mem::size_of::<f64>();
+
+    // Per-group movement extremes.
+    let mut gp_min = vec![1.0f64; ng];
+    let mut gp_max = vec![1.0f64; ng];
+    let mut gp_one_minus_min_sq = vec![0.0f64; ng];
+    // Scan temporaries.
+    let mut gmax1 = vec![f64::MIN; ng];
+    let mut gmax2 = vec![f64::MIN; ng];
+    let mut scanned = vec![false; ng];
+
+    for _ in 0..cfg.max_iter {
+        let sw = Stopwatch::start();
+        let mut iter = IterStats::default();
+
+        let p = ctx.centers.p();
+        for (gi, members) in groups.iter().enumerate() {
+            let mut mn = f64::MAX;
+            let mut mx = f64::MIN;
+            for &j in members {
+                mn = mn.min(p[j]);
+                mx = mx.max(p[j]);
+            }
+            gp_min[gi] = mn;
+            gp_max[gi] = mx;
+            gp_one_minus_min_sq[gi] = (1.0 - mn * mn).max(0.0);
+        }
+        for i in 0..n {
+            let a = ctx.assign[i] as usize;
+            l[i] = update_lower(l[i], p[a]);
+            let row = &mut ug[i * ng..(i + 1) * ng];
+            for (gi, u) in row.iter_mut().enumerate() {
+                *u = if cfg.tight_hamerly_bound {
+                    update_min_p_guarded(*u, gp_min[gi])
+                } else if *u >= 0.0 && gp_min[gi] >= 0.0 {
+                    update_eq9_pre(*u, gp_one_minus_min_sq[gi])
+                } else {
+                    update_safe(*u, gp_min[gi], gp_max[gi])
+                };
+            }
+        }
+
+        let mut moves = 0u64;
+        for i in 0..n {
+            let a = ctx.assign[i] as usize;
+            let row_bounds = &ug[i * ng..(i + 1) * ng];
+            let global_u = row_bounds.iter().cloned().fold(f64::MIN, f64::max);
+            if l[i] >= global_u {
+                iter.bound_skips += 1;
+                continue;
+            }
+            // Tighten l(i) and re-test.
+            l[i] = ctx.similarity(i, a, &mut iter);
+            if l[i] >= global_u {
+                iter.bound_skips += 1;
+                continue;
+            }
+            // Scan failing groups.
+            let l_old = l[i];
+            let mut best = f64::MIN;
+            let mut best_j = a;
+            for gi in 0..ng {
+                scanned[gi] = false;
+                gmax1[gi] = f64::MIN;
+                gmax2[gi] = f64::MIN;
+            }
+            let data_row = ctx.data.row(i);
+            for (gi, members) in groups.iter().enumerate() {
+                if ug[i * ng + gi] <= l[i] {
+                    iter.bound_skips += 1;
+                    continue;
+                }
+                scanned[gi] = true;
+                for &j in members {
+                    if j == a {
+                        continue;
+                    }
+                    let s = data_row.dot_dense(ctx.centers.center(j));
+                    iter.sims_point_center += 1;
+                    if s > gmax1[gi] {
+                        gmax2[gi] = gmax1[gi];
+                        gmax1[gi] = s;
+                    } else if s > gmax2[gi] {
+                        gmax2[gi] = s;
+                    }
+                    if s > best {
+                        best = s;
+                        best_j = j;
+                    }
+                }
+            }
+            if best > l[i] {
+                // Reassign a → best_j; repair the scanned group bounds.
+                let ga = group_of[a];
+                let gb = group_of[best_j];
+                ctx.centers.apply_move(data_row, a, best_j);
+                ctx.assign[i] = best_j as u32;
+                l[i] = best;
+                moves += 1;
+                for gi in 0..ng {
+                    if !scanned[gi] {
+                        if gi == ga {
+                            // The old center joins the "others" of its
+                            // group; its (tight) similarity l_old may
+                            // exceed the stale group bound.
+                            ug[i * ng + gi] = ug[i * ng + gi].max(l_old);
+                        }
+                        continue; // otherwise the stale bound remains valid
+                    }
+                    let mut b = gmax1[gi];
+                    if gi == gb {
+                        // Exclude the new assigned center: use the runner-up.
+                        b = gmax2[gi];
+                    }
+                    if gi == ga {
+                        // The old center joins the "others" of its group.
+                        b = b.max(l_old);
+                    }
+                    ug[i * ng + gi] = b.max(-1.0);
+                }
+            } else {
+                for gi in 0..ng {
+                    if scanned[gi] {
+                        ug[i * ng + gi] = gmax1[gi].max(-1.0);
+                    }
+                }
+            }
+        }
+
+        iter.reassignments = moves;
+        if moves == 0 {
+            iter.wall_ms = sw.ms();
+            ctx.stats.iters.push(iter);
+            return true;
+        }
+        iter.sims_center_center += ctx.centers.update();
+        iter.wall_ms = sw.ms();
+        ctx.stats.iters.push(iter);
+    }
+    false
+}

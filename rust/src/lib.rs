@@ -1,0 +1,49 @@
+//! # spherical-kmeans
+//!
+//! A production-quality reproduction of **"Accelerating Spherical k-Means"**
+//! (Schubert, Lang, Feher; SISAP 2021, DOI 10.1007/978-3-030-89657-7_17).
+//!
+//! Spherical k-means clusters unit-normalized vectors by maximizing cosine
+//! similarity. This crate implements the paper's contribution — adapting the
+//! Elkan and Hamerly acceleration families to work *directly on cosine
+//! similarities* via the cosine triangle inequality of Schubert (2021) —
+//! plus every substrate it needs: sparse linear algebra, TF-IDF text
+//! pipelines, synthetic corpus generators, seeding algorithms
+//! (uniform, k-means++, AFK-MC²), cluster-quality metrics, a PJRT runtime
+//! that executes AOT-compiled JAX/Pallas dense kernels, and an experiment
+//! coordinator that regenerates every table and figure of the paper.
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — the coordinator: sparse data structures, the five
+//!   (plus extensions) k-means variants with cosine-bound pruning, seeding,
+//!   experiment drivers, CLI.
+//! * **L2/L1 (python/, build time only)** — a JAX assignment-step graph
+//!   calling a Pallas tiled similarity kernel, AOT-lowered to HLO text in
+//!   `artifacts/`, loaded at runtime by [`runtime`] via the PJRT C API.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use sphkm::data::synth::SynthConfig;
+//! use sphkm::kmeans::{KMeansConfig, Variant, run};
+//! use sphkm::init::InitMethod;
+//!
+//! let ds = SynthConfig::small_demo().generate(42);
+//! let cfg = KMeansConfig::new(8)
+//!     .variant(Variant::SimplifiedElkan)
+//!     .seed(1);
+//! let result = run(&ds.matrix, &cfg);
+//! println!("objective = {}", result.objective);
+//! ```
+#![deny(missing_docs)]
+
+pub mod bounds;
+pub mod coordinator;
+pub mod data;
+pub mod init;
+pub mod kmeans;
+pub mod metrics;
+pub mod runtime;
+pub mod sparse;
+pub mod util;

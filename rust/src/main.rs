@@ -1,0 +1,314 @@
+//! `sphkm` — the spherical k-means CLI.
+//!
+//! ```text
+//! sphkm datasets  [--scale small] [--seed 42]
+//! sphkm cluster   --data <name|path.svm|path.mtx> --k 20 [--algo simp-elkan]
+//!                 [--init kmeans++] [--seed 0] [--scale small] [--stats]
+//! sphkm gen       --data <name> --out file.svm [--scale small] [--seed 42]
+//! sphkm bench     --exp table1|table2|table3|fig1|fig2|ablation-cc [opts]
+//! sphkm info
+//! ```
+
+use sphkm::coordinator::experiments::{self, ExperimentOpts};
+use sphkm::data::datasets::{self, Scale, DATASET_NAMES};
+use sphkm::data::Dataset;
+use sphkm::init::InitMethod;
+use sphkm::kmeans::{KMeansConfig, Variant};
+use sphkm::metrics;
+use sphkm::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "sphkm — Accelerating Spherical k-Means (Schubert, Lang, Feher 2021)
+
+USAGE:
+  sphkm datasets [--scale tiny|small|medium] [--seed N]
+  sphkm cluster --data <dataset> --k K [--algo VARIANT] [--init METHOD]
+                [--seed N] [--scale S] [--max-iter M] [--stats] [--labels]
+                [--preinit]   # §7: pre-initialize bounds from k-means++
+  sphkm sweep --config FILE.cfg   # cross-product runs from a config file
+  sphkm gen --data <dataset> --out FILE.svm [--scale S] [--seed N]
+  sphkm bench --exp table1|table2|table3|fig1|fig2|ablation-cc|ablation-preinit
+              [--scale S] [--reps R] [--ks 2,10,20] [--quick] [--k K]
+  sphkm info
+
+  <dataset>: one of {names}, or a .svm/.libsvm/.mtx file path
+  VARIANT:   standard | elkan | simp-elkan | hamerly | simp-hamerly | yinyang
+  METHOD:    uniform | kmeans++ | kmeans++1.5 | afkmc2 | afkmc2-1.5",
+        names = DATASET_NAMES.join("|")
+    );
+    std::process::exit(2)
+}
+
+fn load_dataset(args: &Args, scale: Scale, seed: u64) -> Dataset {
+    let spec = args.get("data").unwrap_or("demo");
+    if spec.ends_with(".svm") || spec.ends_with(".libsvm") {
+        let (mut m, labels) =
+            sphkm::data::io::read_libsvm(std::path::Path::new(spec)).unwrap_or_else(|e| {
+                eprintln!("error reading {spec}: {e}");
+                std::process::exit(1)
+            });
+        m.normalize_rows();
+        Dataset { name: spec.into(), matrix: m, labels }
+    } else if spec.ends_with(".mtx") {
+        let mut m = sphkm::data::io::read_matrix_market(std::path::Path::new(spec))
+            .unwrap_or_else(|e| {
+                eprintln!("error reading {spec}: {e}");
+                std::process::exit(1)
+            });
+        m.normalize_rows();
+        Dataset { name: spec.into(), matrix: m, labels: None }
+    } else {
+        datasets::by_name(spec, scale, seed).unwrap_or_else(|| {
+            eprintln!("unknown dataset: {spec}");
+            usage()
+        })
+    }
+}
+
+/// `sphkm sweep --config file.cfg`: run the cross product of
+/// datasets × variants × inits × ks from a config file and print/save a
+/// result table (objective, time, sims, quality vs labels).
+fn run_sweep(cfg: &sphkm::util::config::Config) {
+    use sphkm::coordinator::report::{fmt_ms, Table};
+    let scale: Scale = cfg.get_or("scale", Scale::Small).unwrap_or(Scale::Small);
+    let seed: u64 = cfg.get_or("seed", 42).unwrap_or(42);
+    let reps: usize = cfg.get_or("reps", 1).unwrap_or(1).max(1);
+    let max_iter: usize = cfg.get_or("max_iter", 200).unwrap_or(200);
+    let datasets_list: Vec<String> = {
+        let l = cfg.list::<String>("datasets").unwrap_or_default();
+        if l.is_empty() {
+            vec![cfg.get("dataset").unwrap_or("demo").to_string()]
+        } else {
+            l
+        }
+    };
+    let ks: Vec<usize> = {
+        let l = cfg.list::<usize>("ks").unwrap_or_default();
+        if l.is_empty() { vec![10] } else { l }
+    };
+    let variants: Vec<Variant> = {
+        let raw = cfg.list::<String>("variants").unwrap_or_default();
+        if raw.is_empty() {
+            vec![Variant::SimplifiedElkan]
+        } else {
+            raw.iter()
+                .map(|s| s.parse().unwrap_or_else(|e| { eprintln!("{e}"); usage() }))
+                .collect()
+        }
+    };
+    let inits: Vec<InitMethod> = {
+        let raw = cfg.list::<String>("inits").unwrap_or_default();
+        if raw.is_empty() {
+            vec![InitMethod::Uniform]
+        } else {
+            raw.iter()
+                .map(|s| s.parse().unwrap_or_else(|e| { eprintln!("{e}"); usage() }))
+                .collect()
+        }
+    };
+    let mut t = Table::new(&[
+        "dataset", "variant", "init", "k", "ms", "iters", "objective", "NMI",
+    ]);
+    for name in &datasets_list {
+        let ds = datasets::by_name(name, scale, seed).unwrap_or_else(|| {
+            eprintln!("unknown dataset {name}");
+            usage()
+        });
+        for &k in &ks {
+            let k = k.min(ds.matrix.rows() / 2).max(1);
+            for variant in &variants {
+                for init in &inits {
+                    let mut ms = 0.0;
+                    let mut last: Option<sphkm::kmeans::KMeansResult> = None;
+                    for rep in 0..reps {
+                        let c = KMeansConfig::new(k)
+                            .variant(*variant)
+                            .init(*init)
+                            .seed(seed ^ rep as u64)
+                            .max_iter(max_iter);
+                        let sw = sphkm::util::timer::Stopwatch::start();
+                        last = Some(sphkm::kmeans::run(&ds.matrix, &c));
+                        ms += sw.ms();
+                    }
+                    let r = last.unwrap();
+                    let nmi = ds
+                        .labels
+                        .as_ref()
+                        .map(|l| format!("{:.3}", metrics::nmi(&r.assignments, l)))
+                        .unwrap_or_else(|| "-".into());
+                    t.row(vec![
+                        ds.name.clone(),
+                        variant.name().into(),
+                        init.name(),
+                        k.to_string(),
+                        fmt_ms(ms / reps as f64),
+                        r.iterations.to_string(),
+                        format!("{:.2}", r.objective),
+                        nmi,
+                    ]);
+                }
+            }
+        }
+        println!("  {} done", ds.name);
+    }
+    println!("{}", t.render());
+    if let Some(out) = cfg.get("out") {
+        if let Err(e) = t.save_csv(std::path::Path::new(out)) {
+            eprintln!("could not save {out}: {e}");
+        } else {
+            println!("[csv] {out}");
+        }
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let scale: Scale = args
+        .get_or("scale", Scale::Small)
+        .unwrap_or_else(|e| { eprintln!("{e}"); usage() });
+    let seed: u64 = args.get_or("seed", 42).unwrap_or(42);
+
+    match cmd {
+        "datasets" => {
+            let opts = ExperimentOpts { scale, seed, ..Default::default() };
+            experiments::table1(&opts);
+        }
+        "cluster" => {
+            let ds = load_dataset(&args, scale, seed);
+            let k: usize = args.get_or("k", 10).unwrap_or(10);
+            let variant: Variant = args
+                .get("algo")
+                .unwrap_or("simp-elkan")
+                .parse()
+                .unwrap_or_else(|e| { eprintln!("{e}"); usage() });
+            let init: InitMethod = args
+                .get("init")
+                .unwrap_or("uniform")
+                .parse()
+                .unwrap_or_else(|e| { eprintln!("{e}"); usage() });
+            let cfg = KMeansConfig::new(k)
+                .variant(variant)
+                .init(init)
+                .seed(seed)
+                .max_iter(args.get_or("max-iter", 200).unwrap_or(200));
+            println!(
+                "dataset {} ({}×{}, {:.3}% nnz), k={k}, algo={}, seed={seed}",
+                ds.name,
+                ds.matrix.rows(),
+                ds.matrix.cols(),
+                ds.matrix.density() * 100.0,
+                variant.name()
+            );
+            let sw = sphkm::util::timer::Stopwatch::start();
+            let r = if args.flag("preinit") {
+                // §7 synergy: consume the seeding's similarity matrix.
+                let outcome =
+                    sphkm::init::seed_centers_with_bounds(&ds.matrix, k, &init, seed);
+                sphkm::kmeans::run_seeded(&ds.matrix, outcome, &cfg)
+            } else {
+                sphkm::kmeans::run(&ds.matrix, &cfg)
+            };
+            println!(
+                "done in {:.1} ms: {} iterations, converged={}, objective={:.4}, mean similarity={:.4}",
+                sw.ms(),
+                r.iterations,
+                r.converged,
+                r.objective,
+                r.mean_similarity
+            );
+            println!(
+                "similarity computations: {} point-center + {} center-center",
+                r.stats.total_point_center(),
+                r.stats.total_sims() - r.stats.total_point_center()
+            );
+            if args.flag("labels") {
+                if let Some(truth) = &ds.labels {
+                    println!(
+                        "vs planted labels: NMI={:.4} ARI={:.4} purity={:.4}",
+                        metrics::nmi(&r.assignments, truth),
+                        metrics::ari(&r.assignments, truth),
+                        metrics::purity(&r.assignments, truth)
+                    );
+                }
+            }
+            if args.flag("stats") {
+                println!("\niter  sims_pc  sims_cc  reassign  skips(loop/bound)  ms");
+                for (i, s) in r.stats.iters.iter().enumerate() {
+                    println!(
+                        "{:>4}  {:>8} {:>8} {:>9}  {:>7}/{:<9} {:>8.2}",
+                        i,
+                        s.sims_point_center,
+                        s.sims_center_center,
+                        s.reassignments,
+                        s.loop_skips,
+                        s.bound_skips,
+                        s.wall_ms
+                    );
+                }
+            }
+        }
+        "gen" => {
+            let ds = load_dataset(&args, scale, seed);
+            let out = args.get("out").unwrap_or_else(|| usage());
+            sphkm::data::io::write_libsvm(
+                std::path::Path::new(out),
+                &ds.matrix,
+                ds.labels.as_deref(),
+            )
+            .unwrap_or_else(|e| {
+                eprintln!("error writing {out}: {e}");
+                std::process::exit(1)
+            });
+            println!(
+                "wrote {} ({}×{}, nnz={})",
+                out,
+                ds.matrix.rows(),
+                ds.matrix.cols(),
+                ds.matrix.nnz()
+            );
+        }
+        "bench" => {
+            let opts = ExperimentOpts::from_args(&args);
+            let k: usize = args.get_or("k", 100).unwrap_or(100);
+            match args.get("exp").unwrap_or("table3") {
+                "table1" => { experiments::table1(&opts); }
+                "table2" => { experiments::table2(&opts); }
+                "table3" => { experiments::table3(&opts, args.flag("extended")); }
+                "fig1" => { experiments::fig1(&opts, k); }
+                "fig2" => { experiments::fig2(&opts); }
+                "ablation-cc" => { experiments::ablation_cc(&opts, k.min(50)); }
+                "ablation-preinit" => { experiments::ablation_preinit(&opts, k.min(50)); }
+                other => {
+                    eprintln!("unknown experiment: {other}");
+                    usage()
+                }
+            }
+        }
+        "sweep" => {
+            let path = args.get("config").unwrap_or_else(|| usage());
+            let cfg = sphkm::util::config::Config::load(std::path::Path::new(path))
+                .unwrap_or_else(|e| {
+                    eprintln!("config error: {e}");
+                    std::process::exit(1)
+                });
+            run_sweep(&cfg);
+        }
+        "info" => {
+            println!("spherical-kmeans v{}", env!("CARGO_PKG_VERSION"));
+            println!("paper: Accelerating Spherical k-Means (Schubert, Lang, Feher; SISAP 2021)");
+            println!("variants: {}", Variant::ALL.map(|v| v.name()).join(", "));
+            let art = std::path::Path::new("artifacts");
+            println!(
+                "PJRT artifacts: {}",
+                if sphkm::runtime::artifacts_available(art) {
+                    "available (artifacts/)"
+                } else {
+                    "not built (run `make artifacts`)"
+                }
+            );
+        }
+        _ => usage(),
+    }
+}

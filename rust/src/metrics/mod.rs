@@ -1,0 +1,171 @@
+//! Clustering-quality metrics: the spherical k-means objective plus
+//! external validation against planted labels (NMI, ARI, purity) used by
+//! the examples and the end-to-end driver.
+
+mod silhouette;
+
+pub use silhouette::silhouette_sampled;
+
+use crate::sparse::{CsrMatrix, DenseMatrix};
+
+/// The spherical k-means objective `Σᵢ (1 − ⟨xᵢ, c(a(i))⟩)` (lower is
+/// better) for an arbitrary assignment/centers pair.
+pub fn objective(data: &CsrMatrix, assign: &[u32], centers: &DenseMatrix) -> f64 {
+    assert_eq!(assign.len(), data.rows());
+    let mut obj = 0.0;
+    for i in 0..data.rows() {
+        obj += 1.0 - data.row(i).dot_dense(centers.row(assign[i] as usize));
+    }
+    obj
+}
+
+/// Contingency table between two labelings.
+fn contingency(a: &[u32], b: &[u32]) -> (Vec<Vec<u64>>, Vec<u64>, Vec<u64>) {
+    assert_eq!(a.len(), b.len());
+    let ka = a.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0);
+    let kb = b.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0);
+    let mut table = vec![vec![0u64; kb]; ka];
+    let mut ra = vec![0u64; ka];
+    let mut rb = vec![0u64; kb];
+    for (&x, &y) in a.iter().zip(b) {
+        table[x as usize][y as usize] += 1;
+        ra[x as usize] += 1;
+        rb[y as usize] += 1;
+    }
+    (table, ra, rb)
+}
+
+/// Normalized Mutual Information (arithmetic normalization), in `[0, 1]`.
+pub fn nmi(a: &[u32], b: &[u32]) -> f64 {
+    let n = a.len() as f64;
+    if a.is_empty() {
+        return 0.0;
+    }
+    let (table, ra, rb) = contingency(a, b);
+    let mut mi = 0.0;
+    for (i, row) in table.iter().enumerate() {
+        for (j, &nij) in row.iter().enumerate() {
+            if nij > 0 {
+                let nij = nij as f64;
+                mi += nij / n * ((n * nij) / (ra[i] as f64 * rb[j] as f64)).ln();
+            }
+        }
+    }
+    let h = |counts: &[u64]| -> f64 {
+        counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.ln()
+            })
+            .sum()
+    };
+    let (ha, hb) = (h(&ra), h(&rb));
+    if ha == 0.0 && hb == 0.0 {
+        return 1.0; // both labelings are constant ⇒ identical structure
+    }
+    let denom = 0.5 * (ha + hb);
+    if denom == 0.0 {
+        0.0
+    } else {
+        (mi / denom).clamp(0.0, 1.0)
+    }
+}
+
+/// Adjusted Rand Index, in `[-1, 1]` (1 = identical partitions).
+pub fn ari(a: &[u32], b: &[u32]) -> f64 {
+    let n = a.len() as f64;
+    if a.is_empty() {
+        return 0.0;
+    }
+    let (table, ra, rb) = contingency(a, b);
+    let c2 = |x: u64| -> f64 {
+        let x = x as f64;
+        x * (x - 1.0) / 2.0
+    };
+    let sum_ij: f64 = table.iter().flatten().map(|&v| c2(v)).sum();
+    let sum_a: f64 = ra.iter().map(|&v| c2(v)).sum();
+    let sum_b: f64 = rb.iter().map(|&v| c2(v)).sum();
+    let total = c2(n as u64);
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        return if (sum_ij - expected).abs() < 1e-12 { 1.0 } else { 0.0 };
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Purity: fraction of points whose cluster's majority label matches theirs.
+pub fn purity(pred: &[u32], truth: &[u32]) -> f64 {
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let (table, _, _) = contingency(pred, truth);
+    let correct: u64 = table
+        .iter()
+        .map(|row| row.iter().copied().max().unwrap_or(0))
+        .sum();
+    correct as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_partitions_score_one() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((nmi(&a, &a) - 1.0).abs() < 1e-12);
+        assert!((ari(&a, &a) - 1.0).abs() < 1e-12);
+        assert!((purity(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn permuted_labels_still_score_one() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        let b = vec![2, 2, 0, 0, 1, 1];
+        assert!((nmi(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((ari(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((purity(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_partitions_score_low() {
+        // Balanced 2×2 independence.
+        let a = vec![0, 0, 1, 1, 0, 0, 1, 1];
+        let b = vec![0, 1, 0, 1, 0, 1, 0, 1];
+        assert!(nmi(&a, &b).abs() < 1e-9);
+        assert!(ari(&a, &b).abs() < 0.26);
+        assert!((purity(&a, &b) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_known_value() {
+        // sklearn doctest example: ARI([0,0,1,2],[0,0,1,1]) = 0.571428…
+        let a = vec![0, 0, 1, 2];
+        let b = vec![0, 0, 1, 1];
+        assert!((ari(&a, &b) - 0.5714285714).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nmi_is_symmetric() {
+        let a = vec![0, 0, 1, 1, 2, 2, 0, 1];
+        let b = vec![1, 1, 0, 0, 2, 1, 0, 1];
+        assert!((nmi(&a, &b) - nmi(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn objective_matches_manual() {
+        use crate::sparse::SparseVec;
+        let rows = vec![
+            SparseVec::from_pairs(2, vec![(0, 1.0)]),
+            SparseVec::from_pairs(2, vec![(1, 1.0)]),
+        ];
+        let m = CsrMatrix::from_rows(2, &rows);
+        let centers = DenseMatrix::from_vec(1, 2, vec![std::f32::consts::FRAC_1_SQRT_2; 2]);
+        let obj = objective(&m, &[0, 0], &centers);
+        let expect = 2.0 * (1.0 - std::f64::consts::FRAC_1_SQRT_2);
+        assert!((obj - expect).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,132 @@
+//! Cosine silhouette coefficient (sampled).
+//!
+//! The silhouette of a point compares its mean dissimilarity to its own
+//! cluster (`a`) with the smallest mean dissimilarity to another cluster
+//! (`b`): `s = (b − a) / max(a, b)`, in `[−1, 1]`. Dissimilarity here is
+//! the cosine dissimilarity `1 − ⟨x, y⟩` (valid since rows are unit
+//! length). Exact silhouette is `O(N²)`; we evaluate a deterministic
+//! sample of points against all others — enough for model selection.
+
+use crate::sparse::CsrMatrix;
+use crate::util::rng::Xoshiro256;
+
+/// Mean sampled silhouette for an assignment. `sample` points are drawn
+/// deterministically from `seed`; pass `sample >= N` for the exact value.
+/// Returns `None` when fewer than 2 clusters are non-empty.
+pub fn silhouette_sampled(
+    data: &CsrMatrix,
+    assign: &[u32],
+    sample: usize,
+    seed: u64,
+) -> Option<f64> {
+    assert_eq!(assign.len(), data.rows());
+    let n = data.rows();
+    if n == 0 {
+        return None;
+    }
+    let k = assign.iter().copied().max()? as usize + 1;
+    let mut counts = vec![0u64; k];
+    for &a in assign {
+        counts[a as usize] += 1;
+    }
+    if counts.iter().filter(|&&c| c > 0).count() < 2 {
+        return None;
+    }
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let ids: Vec<usize> = if sample >= n {
+        (0..n).collect()
+    } else {
+        rng.sample_distinct(n, sample)
+    };
+    let mut total = 0.0;
+    let mut used = 0usize;
+    let mut dis_sum = vec![0.0f64; k];
+    for &i in &ids {
+        let own = assign[i] as usize;
+        if counts[own] <= 1 {
+            // Singleton clusters have silhouette 0 by convention.
+            used += 1;
+            continue;
+        }
+        dis_sum.iter_mut().for_each(|v| *v = 0.0);
+        let row = data.row(i);
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let d = 1.0 - row.dot(&data.row(j));
+            dis_sum[assign[j] as usize] += d;
+        }
+        let a = dis_sum[own] / (counts[own] - 1) as f64;
+        let b = (0..k)
+            .filter(|&c| c != own && counts[c] > 0)
+            .map(|c| dis_sum[c] / counts[c] as f64)
+            .fold(f64::MAX, f64::min);
+        let denom = a.max(b);
+        if denom > 0.0 {
+            total += (b - a) / denom;
+        }
+        used += 1;
+    }
+    if used == 0 {
+        None
+    } else {
+        Some(total / used as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseVec;
+
+    /// Two tight orthogonal clusters → silhouette near 1.
+    fn two_blobs() -> (CsrMatrix, Vec<u32>) {
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        for g in 0..2u32 {
+            for t in 0..10u32 {
+                // Main direction e_g plus a small private component.
+                rows.push(SparseVec::from_pairs(
+                    64,
+                    vec![(g, 1.0), (10 + g * 10 + t, 0.1)],
+                ));
+                labels.push(g);
+            }
+        }
+        let mut m = CsrMatrix::from_rows(64, &rows);
+        m.normalize_rows();
+        (m, labels)
+    }
+
+    #[test]
+    fn separated_clusters_score_high() {
+        let (m, labels) = two_blobs();
+        let s = silhouette_sampled(&m, &labels, usize::MAX, 1).unwrap();
+        assert!(s > 0.9, "silhouette {s} too low for separated blobs");
+    }
+
+    #[test]
+    fn random_labels_score_low() {
+        let (m, _) = two_blobs();
+        let random: Vec<u32> = (0..20).map(|i| (i % 2) as u32).collect();
+        // Alternating labels mix the blobs.
+        let s = silhouette_sampled(&m, &random, usize::MAX, 1).unwrap();
+        assert!(s < 0.1, "silhouette {s} should be poor for mixed labels");
+    }
+
+    #[test]
+    fn single_cluster_is_none() {
+        let (m, _) = two_blobs();
+        let one = vec![0u32; 20];
+        assert!(silhouette_sampled(&m, &one, usize::MAX, 1).is_none());
+    }
+
+    #[test]
+    fn sampling_approximates_exact() {
+        let (m, labels) = two_blobs();
+        let exact = silhouette_sampled(&m, &labels, usize::MAX, 1).unwrap();
+        let sampled = silhouette_sampled(&m, &labels, 10, 2).unwrap();
+        assert!((exact - sampled).abs() < 0.15);
+    }
+}

@@ -1,0 +1,265 @@
+//! The PJRT assignment engine: loads an AOT-lowered HLO module (produced by
+//! `python/compile/aot.py` from the JAX model calling the Pallas similarity
+//! kernel) and executes it on the PJRT CPU client.
+//!
+//! The module computes, for a dense tile of points `X[B,D]` and centers
+//! `C[K,D]`: the best cluster index, the best similarity, and the
+//! second-best similarity per point — exactly the quantities every bound
+//! -based variant needs to (re)initialize `l(i)`/`u(i)`.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::sparse::CsrMatrix;
+use std::path::{Path, PathBuf};
+
+/// Errors from the PJRT engine.
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    /// Artifact directory or file missing.
+    #[error("artifact not found: {0} (run `make artifacts`)")]
+    MissingArtifact(PathBuf),
+    /// Underlying XLA error.
+    #[error("xla: {0}")]
+    Xla(String),
+    /// Shape mismatch between engine and data.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+}
+
+impl From<xla::Error> for EngineError {
+    fn from(e: xla::Error) -> Self {
+        EngineError::Xla(e.to_string())
+    }
+}
+
+/// Manifest describing the shapes an artifact was lowered for.
+/// Mirrors `python/compile/aot.py`'s `--batch/--k/--dim` arguments, parsed
+/// from the artifact filename `assign_b{B}_k{K}_d{D}.hlo.txt`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Manifest {
+    /// Tile size (rows of X per execution).
+    pub batch: usize,
+    /// Number of centers.
+    pub k: usize,
+    /// Dimensionality.
+    pub dim: usize,
+}
+
+impl Manifest {
+    /// Artifact filename for this shape.
+    pub fn filename(&self) -> String {
+        format!("assign_b{}_k{}_d{}.hlo.txt", self.batch, self.k, self.dim)
+    }
+
+    /// Parse a manifest back out of a filename.
+    pub fn parse(name: &str) -> Option<Manifest> {
+        let rest = name.strip_prefix("assign_b")?.strip_suffix(".hlo.txt")?;
+        let (b, rest) = rest.split_once("_k")?;
+        let (k, d) = rest.split_once("_d")?;
+        Some(Manifest {
+            batch: b.parse().ok()?,
+            k: k.parse().ok()?,
+            dim: d.parse().ok()?,
+        })
+    }
+}
+
+/// Whether any assignment artifacts exist under `dir` (used by tests and
+/// examples to skip gracefully before `make artifacts`).
+pub fn artifacts_available(dir: &Path) -> bool {
+    list_artifacts(dir).map(|v| !v.is_empty()).unwrap_or(false)
+}
+
+fn list_artifacts(dir: &Path) -> std::io::Result<Vec<(Manifest, PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(m) = Manifest::parse(&name) {
+            out.push((m, entry.path()));
+        }
+    }
+    Ok(out)
+}
+
+/// A compiled PJRT executable for one `(batch, k, dim)` shape.
+pub struct AssignEngine {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    manifest: Manifest,
+    /// Reused staging buffer for densifying sparse tiles.
+    stage: Vec<f32>,
+}
+
+impl std::fmt::Debug for AssignEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AssignEngine")
+            .field("manifest", &self.manifest)
+            .finish()
+    }
+}
+
+/// Result of one engine execution over a tile.
+#[derive(Debug, Clone)]
+pub struct AssignTile {
+    /// Best center per row.
+    pub best: Vec<u32>,
+    /// Similarity to the best center.
+    pub best_sim: Vec<f32>,
+    /// Similarity to the second-best center.
+    pub second_sim: Vec<f32>,
+}
+
+impl AssignEngine {
+    /// Load the artifact for an exact shape from `dir` and compile it.
+    pub fn load(dir: &Path, manifest: Manifest) -> Result<Self, EngineError> {
+        let path = dir.join(manifest.filename());
+        if !path.exists() {
+            return Err(EngineError::MissingArtifact(path));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| EngineError::Shape("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Self {
+            client,
+            exe,
+            manifest,
+            stage: vec![0.0; manifest.batch * manifest.dim],
+        })
+    }
+
+    /// Load the best-matching artifact in `dir` for `k` centers of
+    /// dimensionality `dim` (any batch size).
+    pub fn load_matching(dir: &Path, k: usize, dim: usize) -> Result<Self, EngineError> {
+        let all = list_artifacts(dir)
+            .map_err(|_| EngineError::MissingArtifact(dir.to_path_buf()))?;
+        let m = all
+            .iter()
+            .map(|(m, _)| *m)
+            .find(|m| m.k == k && m.dim == dim)
+            .ok_or_else(|| EngineError::MissingArtifact(dir.join(format!("assign_*_k{k}_d{dim}"))))?;
+        Self::load(dir, m)
+    }
+
+    /// The shape this engine was compiled for.
+    pub fn manifest(&self) -> Manifest {
+        self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute the assignment step on a dense row-major tile
+    /// `x[batch × dim]` against `centers[k × dim]`.
+    pub fn assign_dense(
+        &self,
+        x: &[f32],
+        centers: &[f32],
+    ) -> Result<AssignTile, EngineError> {
+        let m = self.manifest;
+        if x.len() != m.batch * m.dim {
+            return Err(EngineError::Shape(format!(
+                "x has {} elements, expected {}×{}",
+                x.len(),
+                m.batch,
+                m.dim
+            )));
+        }
+        if centers.len() != m.k * m.dim {
+            return Err(EngineError::Shape(format!(
+                "centers has {} elements, expected {}×{}",
+                centers.len(),
+                m.k,
+                m.dim
+            )));
+        }
+        let xl = xla::Literal::vec1(x).reshape(&[m.batch as i64, m.dim as i64])?;
+        let cl = xla::Literal::vec1(centers).reshape(&[m.k as i64, m.dim as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[xl, cl])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (best_idx i32, best f32, second f32).
+        let (t1, t2, t3) = result.to_tuple3()?;
+        let best_i32 = t1.to_vec::<i32>()?;
+        Ok(AssignTile {
+            best: best_i32.into_iter().map(|v| v as u32).collect(),
+            best_sim: t2.to_vec::<f32>()?,
+            second_sim: t3.to_vec::<f32>()?,
+        })
+    }
+
+    /// Run the assignment step over all rows of a sparse matrix (densifying
+    /// tile by tile), against dense `centers[k × dim]`. The trailing
+    /// partial tile is zero-padded; padding rows are discarded.
+    pub fn assign_all(
+        &mut self,
+        data: &CsrMatrix,
+        centers: &[f32],
+    ) -> Result<AssignTile, EngineError> {
+        let m = self.manifest;
+        if data.cols() != m.dim {
+            return Err(EngineError::Shape(format!(
+                "data has {} cols, engine compiled for {}",
+                data.cols(),
+                m.dim
+            )));
+        }
+        let n = data.rows();
+        let mut out = AssignTile {
+            best: Vec::with_capacity(n),
+            best_sim: Vec::with_capacity(n),
+            second_sim: Vec::with_capacity(n),
+        };
+        let mut start = 0;
+        while start < n {
+            let end = (start + m.batch).min(n);
+            // Densify the tile (zero-padding the tail).
+            self.stage.fill(0.0);
+            let stage = &mut self.stage;
+            for (local, r) in (start..end).enumerate() {
+                let row = data.row(r);
+                let base = local * m.dim;
+                for (t, &c) in row.indices.iter().enumerate() {
+                    stage[base + c as usize] = row.values[t];
+                }
+            }
+            let tile = self.assign_dense(&self.stage, centers)?;
+            let take = end - start;
+            out.best.extend_from_slice(&tile.best[..take]);
+            out.best_sim.extend_from_slice(&tile.best_sim[..take]);
+            out.second_sim.extend_from_slice(&tile.second_sim[..take]);
+            start = end;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_round_trip() {
+        let m = Manifest { batch: 128, k: 16, dim: 512 };
+        assert_eq!(m.filename(), "assign_b128_k16_d512.hlo.txt");
+        assert_eq!(Manifest::parse(&m.filename()), Some(m));
+        assert_eq!(Manifest::parse("assign_b1_k2_d3.hlo.txt"), Some(Manifest { batch: 1, k: 2, dim: 3 }));
+        assert!(Manifest::parse("model.hlo.txt").is_none());
+        assert!(Manifest::parse("assign_bX_k2_d3.hlo.txt").is_none());
+    }
+
+    #[test]
+    fn artifacts_available_on_missing_dir() {
+        assert!(!artifacts_available(Path::new("/nonexistent/surely")));
+    }
+
+    // Engine execution tests live in rust/tests/runtime_integration.rs and
+    // are skipped when `make artifacts` has not run.
+}

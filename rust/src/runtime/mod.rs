@@ -1,0 +1,6 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them from Rust via the `xla` crate.
+
+mod engine;
+
+pub use engine::{artifacts_available, AssignEngine, EngineError, Manifest};

@@ -1,0 +1,339 @@
+//! Compressed Sparse Row matrix — the container for a whole dataset.
+
+use super::ops::{sparse_dense_dot, sparse_sparse_dot};
+use super::vec::SparseVec;
+
+/// A read-optimized CSR matrix of `f32` values with `u32` column indices.
+///
+/// Rows are the data samples; the clustering algorithms only ever iterate
+/// rows and take row·center dot products, so CSR is the natural layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+/// A borrowed view of one CSR row (sorted indices + parallel values).
+#[derive(Debug, Clone, Copy)]
+pub struct RowView<'a> {
+    /// Sorted column indices of the non-zeros.
+    pub indices: &'a [u32],
+    /// Values parallel to `indices`.
+    pub values: &'a [f32],
+}
+
+impl<'a> RowView<'a> {
+    /// Number of non-zeros in the row.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Dot product with a dense vector.
+    #[inline]
+    pub fn dot_dense(&self, dense: &[f32]) -> f64 {
+        sparse_dense_dot(self.indices, self.values, dense)
+    }
+
+    /// Dot product with another row view (sorted merge).
+    #[inline]
+    pub fn dot(&self, other: &RowView<'_>) -> f64 {
+        sparse_sparse_dot(self.indices, self.values, other.indices, other.values)
+    }
+
+    /// Squared Euclidean norm of the row.
+    pub fn norm_sq(&self) -> f64 {
+        self.values.iter().map(|&v| v as f64 * v as f64).sum()
+    }
+}
+
+impl CsrMatrix {
+    /// Assemble from raw CSR parts (validated).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Self {
+        assert_eq!(indptr.len(), rows + 1, "indptr length");
+        assert_eq!(*indptr.last().unwrap_or(&0), indices.len(), "indptr end");
+        assert_eq!(indices.len(), values.len(), "indices/values length");
+        debug_assert!(indptr.windows(2).all(|w| w[0] <= w[1]));
+        for r in 0..rows {
+            let s = &indices[indptr[r]..indptr[r + 1]];
+            debug_assert!(s.windows(2).all(|w| w[0] < w[1]), "row {r} not sorted");
+            debug_assert!(s.last().map(|&c| (c as usize) < cols).unwrap_or(true));
+        }
+        Self { rows, cols, indptr, indices, values }
+    }
+
+    /// Build from a list of sparse rows (all must share `cols`).
+    pub fn from_rows(cols: usize, rows: &[SparseVec]) -> Self {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let nnz: usize = rows.iter().map(|r| r.nnz()).sum();
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for r in rows {
+            assert_eq!(r.dim, cols, "row dimension mismatch");
+            indices.extend_from_slice(r.indices());
+            values.extend_from_slice(r.values());
+            indptr.push(indices.len());
+        }
+        Self { rows: rows.len(), cols, indptr, indices, values }
+    }
+
+    /// Number of rows (samples).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns (features).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Fraction of stored entries: `nnz / (rows·cols)`.
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Borrow row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> RowView<'_> {
+        let (s, e) = (self.indptr[r], self.indptr[r + 1]);
+        RowView {
+            indices: &self.indices[s..e],
+            values: &self.values[s..e],
+        }
+    }
+
+    /// Iterate all rows in order.
+    pub fn iter_rows(&self) -> impl Iterator<Item = RowView<'_>> + '_ {
+        (0..self.rows).map(move |r| self.row(r))
+    }
+
+    /// Copy row `r` into an owned [`SparseVec`].
+    pub fn row_vec(&self, r: usize) -> SparseVec {
+        let v = self.row(r);
+        SparseVec::new(self.cols, v.indices.to_vec(), v.values.to_vec())
+    }
+
+    /// L2-normalize every row in place; all-zero rows are left untouched.
+    /// Returns the number of rows that could not be normalized.
+    pub fn normalize_rows(&mut self) -> usize {
+        let mut failures = 0;
+        for r in 0..self.rows {
+            let (s, e) = (self.indptr[r], self.indptr[r + 1]);
+            let norm: f64 = self.values[s..e]
+                .iter()
+                .map(|&v| v as f64 * v as f64)
+                .sum::<f64>()
+                .sqrt();
+            if norm > 0.0 {
+                let inv = (1.0 / norm) as f32;
+                for v in &mut self.values[s..e] {
+                    *v *= inv;
+                }
+            } else {
+                failures += 1;
+            }
+        }
+        failures
+    }
+
+    /// Transpose (CSR→CSR of the transpose). Used for the DBLP
+    /// conference–author experiments (Fig. 2), where the paper transposes
+    /// the bipartite matrix before TF-IDF.
+    pub fn transpose(&self) -> CsrMatrix {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 1..counts.len() {
+            counts[i] += counts[i - 1];
+        }
+        let indptr = counts.clone();
+        let mut pos = counts;
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0.0f32; self.nnz()];
+        for r in 0..self.rows {
+            let (s, e) = (self.indptr[r], self.indptr[r + 1]);
+            for k in s..e {
+                let c = self.indices[k] as usize;
+                let p = pos[c];
+                indices[p] = r as u32;
+                values[p] = self.values[k];
+                pos[c] = p + 1;
+            }
+        }
+        // Row order within each transposed row follows original row order,
+        // which is increasing — so indices are already sorted.
+        CsrMatrix::from_parts(self.cols, self.rows, indptr, indices, values)
+    }
+
+    /// Sum of selected rows accumulated into a dense buffer (used by center
+    /// computation). `out.len()` must equal `cols`.
+    pub fn sum_rows_into(&self, row_ids: impl Iterator<Item = usize>, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cols);
+        for r in row_ids {
+            let v = self.row(r);
+            for (i, &c) in v.indices.iter().enumerate() {
+                out[c as usize] += v.values[i];
+            }
+        }
+    }
+
+    /// Remove all-zero rows, returning the filtered matrix and the indices
+    /// of the kept rows (used to filter label vectors in parallel). The
+    /// transpose of a bipartite graph can contain empty rows (venues with
+    /// no papers at small scale) which cannot be unit-normalized.
+    pub fn drop_empty_rows(&self) -> (CsrMatrix, Vec<usize>) {
+        let mut kept = Vec::new();
+        let mut rows = Vec::new();
+        for r in 0..self.rows {
+            if self.indptr[r + 1] > self.indptr[r] {
+                kept.push(r);
+                rows.push(self.row_vec(r));
+            }
+        }
+        (CsrMatrix::from_rows(self.cols, &rows), kept)
+    }
+
+    /// Dense materialization (tests / PJRT batches only — O(rows·cols)).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let v = self.row(r);
+            for (i, &c) in v.indices.iter().enumerate() {
+                out[r * self.cols + c as usize] = v.values[i];
+            }
+        }
+        out
+    }
+
+    /// Dense materialization of a contiguous row range `[start, end)` into
+    /// a row-major `(end-start) × cols` buffer (PJRT batch staging).
+    pub fn rows_to_dense(&self, start: usize, end: usize, out: &mut [f32]) {
+        let n = end - start;
+        debug_assert_eq!(out.len(), n * self.cols);
+        out.fill(0.0);
+        for (local, r) in (start..end).enumerate() {
+            let v = self.row(r);
+            for (i, &c) in v.indices.iter().enumerate() {
+                out[local * self.cols + c as usize] = v.values[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn small() -> CsrMatrix {
+        // [[1,0,2],[0,0,0],[0,3,4]]
+        CsrMatrix::from_parts(
+            3,
+            3,
+            vec![0, 2, 2, 4],
+            vec![0, 2, 1, 2],
+            vec![1.0, 2.0, 3.0, 4.0],
+        )
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let m = small();
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row(0).nnz(), 2);
+        assert_eq!(m.row(1).nnz(), 0);
+        assert!((m.density() - 4.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_dot_products() {
+        let m = small();
+        let dense = vec![1.0f32, 1.0, 1.0];
+        assert!((m.row(0).dot_dense(&dense) - 3.0).abs() < 1e-12);
+        assert!((m.row(2).dot_dense(&dense) - 7.0).abs() < 1e-12);
+        let r0 = m.row(0);
+        let r2 = m.row(2);
+        assert!((r0.dot(&r2) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_rows_handles_zero_rows() {
+        let mut m = small();
+        let failures = m.normalize_rows();
+        assert_eq!(failures, 1); // row 1 is all-zero
+        assert!((m.row(0).norm_sq() - 1.0).abs() < 1e-6);
+        assert!((m.row(2).norm_sq() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = small();
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.row(2).indices, &[0, 2]);
+        let tt = t.transpose();
+        assert_eq!(tt, m);
+    }
+
+    #[test]
+    fn sum_rows_into_accumulates() {
+        let m = small();
+        let mut acc = vec![0.0f32; 3];
+        m.sum_rows_into([0usize, 2].into_iter(), &mut acc);
+        assert_eq!(acc, vec![1.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn rows_to_dense_block() {
+        let m = small();
+        let mut buf = vec![9.0f32; 2 * 3];
+        m.rows_to_dense(1, 3, &mut buf);
+        assert_eq!(buf, vec![0.0, 0.0, 0.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn prop_transpose_involution_and_dot_preservation() {
+        forall(60, 0xC5A, |g| {
+            let rows = g.usize_in(1, 30);
+            let cols = g.usize_in(1, 30);
+            let mut svs = Vec::new();
+            for _ in 0..rows {
+                let nnz = g.usize_in(0, cols + 1);
+                let p = g.sparse_pattern(cols, nnz);
+                svs.push(SparseVec::new(
+                    cols,
+                    p.iter().map(|&i| i as u32).collect(),
+                    p.iter().map(|_| g.f64_in(0.1, 2.0) as f32).collect(),
+                ));
+            }
+            let m = CsrMatrix::from_rows(cols, &svs);
+            let tt = m.transpose().transpose();
+            assert_eq!(tt, m);
+        });
+    }
+}

@@ -1,0 +1,134 @@
+//! Dense row-major matrix — used for cluster centers (which densify as they
+//! aggregate many sparse rows, §5.2 of the paper) and for PJRT batch I/O.
+
+use super::ops::{dense_dot, normalize_dense};
+
+/// A dense row-major `rows × cols` matrix of `f32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Borrow the full row-major buffer.
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutably borrow the full buffer.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Two disjoint mutable rows (for moving mass between centers).
+    pub fn two_rows_mut(&mut self, a: usize, b: usize) -> (&mut [f32], &mut [f32]) {
+        assert_ne!(a, b);
+        let c = self.cols;
+        if a < b {
+            let (lo, hi) = self.data.split_at_mut(b * c);
+            (&mut lo[a * c..(a + 1) * c], &mut hi[..c])
+        } else {
+            let (lo, hi) = self.data.split_at_mut(a * c);
+            let (bl, al) = (&mut lo[b * c..(b + 1) * c], &mut hi[..c]);
+            (al, bl)
+        }
+    }
+
+    /// Dot product of rows `a` (of self) and `b` (of other).
+    #[inline]
+    pub fn row_dot(&self, a: usize, other: &DenseMatrix, b: usize) -> f64 {
+        dense_dot(self.row(a), other.row(b))
+    }
+
+    /// Normalize every row to unit length; returns per-row original norms
+    /// (0.0 for rows that were all-zero and left untouched).
+    pub fn normalize_rows(&mut self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|r| normalize_dense(&mut self.data[r * self.cols..(r + 1) * self.cols]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_dots() {
+        let m = DenseMatrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert!((m.row_dot(0, &m, 1) - 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_rows_reports_norms() {
+        let mut m = DenseMatrix::from_vec(2, 2, vec![3.0, 4.0, 0.0, 0.0]);
+        let norms = m.normalize_rows();
+        assert!((norms[0] - 5.0).abs() < 1e-6);
+        assert_eq!(norms[1], 0.0);
+        assert!((m.row(0)[0] - 0.6).abs() < 1e-6);
+        assert_eq!(m.row(1), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn two_rows_mut_disjoint_both_orders() {
+        let mut m = DenseMatrix::from_vec(3, 2, vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        {
+            let (a, b) = m.two_rows_mut(0, 2);
+            a[0] = 10.0;
+            b[1] = 30.0;
+        }
+        {
+            let (a, b) = m.two_rows_mut(2, 0);
+            assert_eq!(a[1], 30.0);
+            assert_eq!(b[0], 10.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn two_rows_mut_same_row_panics() {
+        let mut m = DenseMatrix::zeros(2, 2);
+        let _ = m.two_rows_mut(1, 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Sparse and dense linear algebra substrate.
+//!
+//! The paper (§2) stores documents as sorted `(index, value)` pairs and
+//! computes dot products by merging; cluster centers are dense because they
+//! aggregate many sparse rows (§5.2). This module provides exactly those
+//! representations plus the CSR matrix that holds a dataset.
+
+pub mod csr;
+mod dense;
+mod ops;
+mod vec;
+
+pub use csr::{CsrMatrix, RowView};
+pub use dense::DenseMatrix;
+pub use ops::{dense_dot, normalize_dense, sparse_dense_dot, sparse_sparse_dot};
+pub use vec::SparseVec;

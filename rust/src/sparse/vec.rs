@@ -1,0 +1,260 @@
+//! Sparse vector stored as parallel sorted arrays of indices and values —
+//! the `(i, v)` pair encoding of the paper's §2.
+
+use super::ops::{sparse_dense_dot, sparse_sparse_dot};
+
+/// An immutable sparse vector with strictly increasing indices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseVec {
+    /// Logical dimensionality (number of columns).
+    pub dim: usize,
+    idx: Vec<u32>,
+    val: Vec<f32>,
+}
+
+impl SparseVec {
+    /// Build from parallel index/value arrays. Indices must be strictly
+    /// increasing and `< dim`; zero values are dropped.
+    pub fn new(dim: usize, idx: Vec<u32>, val: Vec<f32>) -> Self {
+        assert_eq!(idx.len(), val.len(), "index/value length mismatch");
+        debug_assert!(
+            idx.windows(2).all(|w| w[0] < w[1]),
+            "indices must be strictly increasing"
+        );
+        debug_assert!(idx.last().map(|&i| (i as usize) < dim).unwrap_or(true));
+        // Drop explicit zeros to keep nnz meaningful.
+        if val.iter().any(|&v| v == 0.0) {
+            let (mut i2, mut v2) = (Vec::with_capacity(idx.len()), Vec::with_capacity(val.len()));
+            for (i, v) in idx.into_iter().zip(val) {
+                if v != 0.0 {
+                    i2.push(i);
+                    v2.push(v);
+                }
+            }
+            return Self { dim, idx: i2, val: v2 };
+        }
+        Self { dim, idx, val }
+    }
+
+    /// Build from unsorted `(index, value)` pairs, summing duplicates.
+    pub fn from_pairs(dim: usize, mut pairs: Vec<(u32, f32)>) -> Self {
+        pairs.sort_unstable_by_key(|p| p.0);
+        let mut idx = Vec::with_capacity(pairs.len());
+        let mut val: Vec<f32> = Vec::with_capacity(pairs.len());
+        for (i, v) in pairs {
+            if Some(&i) == idx.last() {
+                *val.last_mut().unwrap() += v;
+            } else {
+                idx.push(i);
+                val.push(v);
+            }
+        }
+        Self::new(dim, idx, val)
+    }
+
+    /// Build a dense vector's sparse view (dropping zeros).
+    pub fn from_dense(v: &[f32]) -> Self {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &x) in v.iter().enumerate() {
+            if x != 0.0 {
+                idx.push(i as u32);
+                val.push(x);
+            }
+        }
+        Self { dim: v.len(), idx, val }
+    }
+
+    /// The empty vector of a given dimension.
+    pub fn zeros(dim: usize) -> Self {
+        Self { dim, idx: Vec::new(), val: Vec::new() }
+    }
+
+    /// Number of stored non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// True if there are no non-zeros.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Sorted indices of the non-zeros.
+    #[inline]
+    pub fn indices(&self) -> &[u32] {
+        &self.idx
+    }
+
+    /// Values of the non-zeros (parallel to [`Self::indices`]).
+    #[inline]
+    pub fn values(&self) -> &[f32] {
+        &self.val
+    }
+
+    /// Iterate `(index, value)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.idx.iter().copied().zip(self.val.iter().copied())
+    }
+
+    /// Value at logical position `i` (O(log nnz)).
+    pub fn get(&self, i: usize) -> f32 {
+        match self.idx.binary_search(&(i as u32)) {
+            Ok(p) => self.val[p],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Squared Euclidean norm.
+    pub fn norm_sq(&self) -> f64 {
+        self.val.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Euclidean norm.
+    pub fn norm(&self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+
+    /// Scale all values in place.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.val {
+            *v *= s;
+        }
+    }
+
+    /// Return a unit-normalized copy; `None` if the vector is all-zero.
+    pub fn normalized(&self) -> Option<Self> {
+        let n = self.norm();
+        if n <= 0.0 {
+            return None;
+        }
+        let inv = (1.0 / n) as f32;
+        let mut out = self.clone();
+        out.scale(inv);
+        Some(out)
+    }
+
+    /// Dot product with another sparse vector (sorted merge, §2).
+    #[inline]
+    pub fn dot(&self, other: &SparseVec) -> f64 {
+        sparse_sparse_dot(&self.idx, &self.val, &other.idx, &other.val)
+    }
+
+    /// Dot product with a dense vector.
+    #[inline]
+    pub fn dot_dense(&self, dense: &[f32]) -> f64 {
+        debug_assert_eq!(dense.len(), self.dim);
+        sparse_dense_dot(&self.idx, &self.val, dense)
+    }
+
+    /// Materialize as a dense `Vec<f32>`.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        for (i, v) in self.iter() {
+            out[i as usize] = v;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn sv(dim: usize, pairs: &[(u32, f32)]) -> SparseVec {
+        SparseVec::from_pairs(dim, pairs.to_vec())
+    }
+
+    #[test]
+    fn construction_drops_zeros_and_sums_duplicates() {
+        let v = sv(10, &[(3, 1.0), (1, 2.0), (3, 2.0), (5, 0.0)]);
+        assert_eq!(v.nnz(), 2);
+        assert_eq!(v.get(3), 3.0);
+        assert_eq!(v.get(1), 2.0);
+        assert_eq!(v.get(5), 0.0);
+        assert_eq!(v.get(0), 0.0);
+    }
+
+    #[test]
+    fn dot_merge_matches_dense() {
+        let a = sv(8, &[(0, 1.0), (3, 2.0), (7, -1.0)]);
+        let b = sv(8, &[(3, 4.0), (5, 1.0), (7, 2.0)]);
+        assert!((a.dot(&b) - (8.0 - 2.0)).abs() < 1e-12);
+        let bd = b.to_dense();
+        assert!((a.dot_dense(&bd) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot_empty_and_disjoint() {
+        let a = sv(5, &[(0, 1.0), (1, 1.0)]);
+        let b = sv(5, &[(3, 1.0), (4, 1.0)]);
+        let z = SparseVec::zeros(5);
+        assert_eq!(a.dot(&b), 0.0);
+        assert_eq!(a.dot(&z), 0.0);
+        assert_eq!(z.dot(&z), 0.0);
+    }
+
+    #[test]
+    fn normalization() {
+        let v = sv(4, &[(0, 3.0), (2, 4.0)]);
+        let n = v.normalized().unwrap();
+        assert!((n.norm() - 1.0).abs() < 1e-6);
+        assert!((n.get(0) - 0.6).abs() < 1e-6);
+        assert!((n.get(2) - 0.8).abs() < 1e-6);
+        assert!(SparseVec::zeros(4).normalized().is_none());
+    }
+
+    #[test]
+    fn prop_sparse_dot_equals_dense_dot() {
+        forall(200, 0x5EED, |g| {
+            let d = g.usize_in(1, 200);
+            let nnz_a = g.usize_in(0, d + 1);
+            let nnz_b = g.usize_in(0, d + 1);
+            let pa = g.sparse_pattern(d, nnz_a);
+            let pb = g.sparse_pattern(d, nnz_b);
+            let a = SparseVec::new(
+                d,
+                pa.iter().map(|&i| i as u32).collect(),
+                pa.iter().map(|_| g.f64_in(-2.0, 2.0) as f32).collect(),
+            );
+            let b = SparseVec::new(
+                d,
+                pb.iter().map(|&i| i as u32).collect(),
+                pb.iter().map(|_| g.f64_in(-2.0, 2.0) as f32).collect(),
+            );
+            let ad = a.to_dense();
+            let bd = b.to_dense();
+            let reference: f64 = ad
+                .iter()
+                .zip(&bd)
+                .map(|(&x, &y)| x as f64 * y as f64)
+                .sum();
+            assert!(
+                (a.dot(&b) - reference).abs() < 1e-6,
+                "merge dot {} vs dense {}",
+                a.dot(&b),
+                reference
+            );
+            assert!((a.dot_dense(&bd) - reference).abs() < 1e-6);
+        });
+    }
+
+    #[test]
+    fn prop_normalized_is_unit() {
+        forall(100, 0xBEEF, |g| {
+            let d = g.usize_in(2, 100);
+            let nnz = g.usize_in(1, d);
+            let p = g.sparse_pattern(d, nnz);
+            let v = SparseVec::new(
+                d,
+                p.iter().map(|&i| i as u32).collect(),
+                p.iter().map(|_| g.f64_in(0.1, 3.0) as f32).collect(),
+            );
+            let n = v.normalized().unwrap();
+            assert!((n.norm() - 1.0).abs() < 1e-5);
+        });
+    }
+}

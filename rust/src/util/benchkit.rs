@@ -1,0 +1,139 @@
+//! A small benchmarking harness (the offline registry has no `criterion`).
+//!
+//! Provides warmup + repeated measurement with summary statistics, a
+//! `black_box` to defeat dead-code elimination, and a uniform one-line
+//! reporting format used by all `cargo bench` targets:
+//!
+//! ```text
+//! bench <name> ... mean 12.345 ms  (min 11.9, max 13.1, std 0.4, n=10)
+//! ```
+
+use super::timer::{Stopwatch, TimingStats};
+
+/// Re-exported std black_box for convenience in bench targets.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    /// Number of un-measured warmup runs.
+    pub warmup: usize,
+    /// Number of measured runs.
+    pub runs: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self { warmup: 1, runs: 5 }
+    }
+}
+
+impl BenchOpts {
+    /// Read `--runs` / `--warmup` overrides from CLI args (for quick modes).
+    pub fn from_args(args: &super::cli::Args) -> Self {
+        let d = Self::default();
+        Self {
+            warmup: args.get_or("warmup", d.warmup).unwrap_or(d.warmup),
+            runs: args.get_or("runs", d.runs).unwrap_or(d.runs),
+        }
+    }
+}
+
+/// Result of one benchmark: its name and timing statistics.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark name (dataset/algo/k triple etc.).
+    pub name: String,
+    /// Timing summary.
+    pub stats: TimingStats,
+}
+
+impl BenchResult {
+    /// criterion-like single line.
+    pub fn line(&self) -> String {
+        format!(
+            "bench {:<48} mean {:>10.3} ms  (min {:.3}, max {:.3}, std {:.3}, n={})",
+            self.name,
+            self.stats.mean_ms,
+            self.stats.min_ms,
+            self.stats.max_ms,
+            self.stats.std_ms,
+            self.stats.n
+        )
+    }
+}
+
+/// Measure `f` (which should internally use [`black_box`]) under `opts`,
+/// print the summary line, and return it.
+pub fn bench<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> BenchResult {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.runs);
+    for _ in 0..opts.runs.max(1) {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.ms());
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        stats: TimingStats::from_ms(&samples),
+    };
+    println!("{}", result.line());
+    result
+}
+
+/// Measure a function that returns its own elapsed milliseconds (used when
+/// setup must be excluded from the measurement inside each run).
+pub fn bench_with_inner_timing<F: FnMut() -> f64>(
+    name: &str,
+    opts: BenchOpts,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.runs);
+    for _ in 0..opts.runs.max(1) {
+        samples.push(f());
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        stats: TimingStats::from_ms(&samples),
+    };
+    println!("{}", result.line());
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_expected_times() {
+        let mut count = 0;
+        let opts = BenchOpts { warmup: 2, runs: 3 };
+        let r = bench("unit-test", opts, || {
+            count += 1;
+            black_box(count);
+        });
+        assert_eq!(count, 5);
+        assert_eq!(r.stats.n, 3);
+    }
+
+    #[test]
+    fn inner_timing_passthrough() {
+        let opts = BenchOpts { warmup: 0, runs: 4 };
+        let mut i = 0.0;
+        let r = bench_with_inner_timing("inner", opts, || {
+            i += 1.0;
+            i
+        });
+        assert_eq!(r.stats.n, 4);
+        assert_eq!(r.stats.min_ms, 1.0);
+        assert_eq!(r.stats.max_ms, 4.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Minimal command-line argument parsing (the offline registry has no
+//! `clap`). Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments, with typed getters and a usage renderer.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+/// Error type for argument access.
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    /// A value failed to parse as the requested type.
+    #[error("invalid value for --{0}: {1:?}")]
+    Invalid(String, String),
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.push(k.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag.
+                    let key = stripped.to_string();
+                    let take_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if take_value {
+                        out.flags.insert(key.clone(), it.next().unwrap());
+                    } else {
+                        out.flags.insert(key.clone(), "true".to_string());
+                    }
+                    out.present.push(key);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Whether `--key` appeared at all.
+    pub fn has(&self, key: &str) -> bool {
+        self.present.iter().any(|k| k == key)
+    }
+
+    /// Raw string value of `--key`.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed value of `--key`, falling back to `default`.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, ArgError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError::Invalid(key.to_string(), v.clone())),
+        }
+    }
+
+    /// Boolean flag: present without value, or with true/false value.
+    pub fn flag(&self, key: &str) -> bool {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => true,
+            None => false,
+        }
+    }
+
+    /// Comma-separated list of typed values for `--key`.
+    pub fn list<T: std::str::FromStr>(&self, key: &str) -> Result<Option<Vec<T>>, ArgError> {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| ArgError::Invalid(key.to_string(), v.clone()))
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("cluster --k 10 --algo elkan data.svm");
+        assert_eq!(a.positional, vec!["cluster", "data.svm"]);
+        assert_eq!(a.get("k"), Some("10"));
+        assert_eq!(a.get("algo"), Some("elkan"));
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let a = parse("--k=25 --scale=0.5");
+        assert_eq!(a.get_or("k", 0usize).unwrap(), 25);
+        assert!((a.get_or("scale", 1.0f64).unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(a.get_or("seed", 42u64).unwrap(), 42);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("--verbose --quiet=false --k 3");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert!(!a.flag("absent"));
+        assert!(a.has("quiet"));
+        assert!(!a.has("absent"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--verbose --k 7");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_or("k", 0usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--ks 2,10,20,50");
+        assert_eq!(a.list::<usize>("ks").unwrap().unwrap(), vec![2, 10, 20, 50]);
+        assert!(a.list::<usize>("absent").unwrap().is_none());
+        let bad = parse("--ks 2,x");
+        assert!(bad.list::<usize>("ks").is_err());
+    }
+
+    #[test]
+    fn invalid_value_errors() {
+        let a = parse("--k notanumber");
+        assert!(a.get_or("k", 0usize).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Minimal key=value config-file parser (no `serde`/`toml` offline).
+//!
+//! Format: one `key = value` per line; `#` comments; values may be
+//! comma-separated lists. Used by the `sphkm sweep` subcommand.
+//!
+//! ```text
+//! # sweep.cfg
+//! dataset  = rcv1
+//! scale    = small
+//! ks       = 10, 50
+//! variants = standard, simp-elkan
+//! inits    = uniform, kmeans++
+//! reps     = 2
+//! ```
+
+use std::collections::BTreeMap;
+
+/// A parsed config file.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+/// Config parse/access errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    /// Filesystem error.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    /// A line without `key = value` shape.
+    #[error("line {0}: expected `key = value`, got {1:?}")]
+    BadLine(usize, String),
+    /// A value failed to parse as the requested type.
+    #[error("key {0}: invalid value {1:?}")]
+    BadValue(String, String),
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut values = BTreeMap::new();
+        for (lno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError::BadLine(lno + 1, raw.to_string()))?;
+            values.insert(k.trim().to_lowercase(), v.trim().to_string());
+        }
+        Ok(Self { values })
+    }
+
+    /// Parse from a file.
+    pub fn load(path: &std::path::Path) -> Result<Self, ConfigError> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Raw string value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed value with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, ConfigError> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ConfigError::BadValue(key.into(), v.clone())),
+        }
+    }
+
+    /// Comma-separated typed list (empty if absent).
+    pub fn list<T: std::str::FromStr>(&self, key: &str) -> Result<Vec<T>, ConfigError> {
+        match self.values.get(key) {
+            None => Ok(Vec::new()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim())
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse()
+                        .map_err(|_| ConfigError::BadValue(key.into(), v.clone()))
+                })
+                .collect(),
+        }
+    }
+
+    /// All keys (for unknown-key warnings).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_keys_lists_comments() {
+        let c = Config::parse(
+            "# comment\n dataset = rcv1 \nks = 10, 50,200\nreps=3\nempty=\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("dataset"), Some("rcv1"));
+        assert_eq!(c.list::<usize>("ks").unwrap(), vec![10, 50, 200]);
+        assert_eq!(c.get_or("reps", 1usize).unwrap(), 3);
+        assert_eq!(c.get_or("absent", 7usize).unwrap(), 7);
+        assert!(c.list::<usize>("missing").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_lines_and_values() {
+        assert!(Config::parse("not a kv line\n").is_err());
+        let c = Config::parse("reps = abc\n").unwrap();
+        assert!(c.get_or("reps", 1usize).is_err());
+    }
+
+    #[test]
+    fn keys_are_case_insensitive_on_write() {
+        let c = Config::parse("DataSet = demo\n").unwrap();
+        assert_eq!(c.get("dataset"), Some("demo"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Support substrates that would normally come from crates.io but are
+//! unavailable in this offline environment: PRNG, CLI parsing, a
+//! micro-benchmark harness, timing, and a property-testing mini-framework.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod prop;
+pub mod rng;
+pub mod timer;

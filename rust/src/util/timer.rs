@@ -1,0 +1,111 @@
+//! Lightweight wall-clock timing helpers used by the experiment drivers.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed milliseconds as f64.
+    pub fn ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Restart and return the elapsed duration of the previous lap.
+    pub fn lap(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Summary statistics over repeated timing measurements.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingStats {
+    /// Number of samples.
+    pub n: usize,
+    /// Mean in milliseconds.
+    pub mean_ms: f64,
+    /// Minimum in milliseconds.
+    pub min_ms: f64,
+    /// Maximum in milliseconds.
+    pub max_ms: f64,
+    /// Sample standard deviation in milliseconds.
+    pub std_ms: f64,
+    /// Median in milliseconds.
+    pub median_ms: f64,
+}
+
+impl TimingStats {
+    /// Compute stats from raw millisecond samples.
+    pub fn from_ms(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Self {
+            n,
+            mean_ms: mean,
+            min_ms: sorted[0],
+            max_ms: sorted[n - 1],
+            std_ms: var.sqrt(),
+            median_ms: median,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = TimingStats::from_ms(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean_ms - 2.5).abs() < 1e-12);
+        assert_eq!(s.min_ms, 1.0);
+        assert_eq!(s.max_ms, 4.0);
+        assert!((s.median_ms - 2.5).abs() < 1e-12);
+        let expect_std = (((1.5f64).powi(2) * 2.0 + (0.5f64).powi(2) * 2.0) / 3.0).sqrt();
+        assert!((s.std_ms - expect_std).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_single_sample() {
+        let s = TimingStats::from_ms(&[5.0]);
+        assert_eq!(s.std_ms, 0.0);
+        assert_eq!(s.median_ms, 5.0);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let mut sw = Stopwatch::start();
+        let a = sw.lap();
+        let b = sw.elapsed();
+        assert!(b >= a || b.as_nanos() == 0 || a.as_nanos() > 0);
+    }
+}

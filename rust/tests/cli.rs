@@ -1,0 +1,125 @@
+//! CLI smoke tests: run the `sphkm` binary end-to-end as a subprocess.
+
+use std::process::Command;
+
+fn sphkm() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_sphkm"))
+}
+
+#[test]
+fn info_runs() {
+    let out = sphkm().arg("info").output().expect("spawn");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Accelerating Spherical k-Means"));
+    assert!(text.contains("Simp.Hamerly"));
+}
+
+#[test]
+fn datasets_lists_table1() {
+    let out = sphkm()
+        .args(["datasets", "--scale", "tiny", "--seed", "1"])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in ["DBLP Author-Conf.", "Simpsons Wiki", "RCV-1"] {
+        assert!(text.contains(name), "missing {name} in:\n{text}");
+    }
+}
+
+#[test]
+fn cluster_demo_with_stats_and_labels() {
+    let out = sphkm()
+        .args([
+            "cluster", "--data", "demo", "--k", "6", "--algo", "hamerly",
+            "--init", "kmeans++", "--seed", "3", "--stats", "--labels",
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("converged=true"), "{text}");
+    assert!(text.contains("NMI="), "{text}");
+    assert!(text.contains("sims_pc"), "{text}");
+}
+
+#[test]
+fn gen_then_cluster_file() {
+    let dir = std::env::temp_dir().join("sphkm-cli-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let file = dir.join("demo.svm");
+    let out = sphkm()
+        .args(["gen", "--data", "demo", "--out", file.to_str().unwrap(), "--seed", "5"])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = sphkm()
+        .args(["cluster", "--data", file.to_str().unwrap(), "--k", "4"])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("objective="));
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = sphkm().arg("frobnicate").output().expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("USAGE"));
+}
+
+#[test]
+fn unknown_dataset_fails() {
+    let out = sphkm()
+        .args(["cluster", "--data", "not-a-dataset", "--k", "3"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn cluster_with_preinit_bounds() {
+    let out = sphkm()
+        .args([
+            "cluster", "--data", "demo", "--k", "5", "--algo", "simp-elkan",
+            "--init", "kmeans++", "--seed", "2", "--preinit",
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("converged=true"));
+}
+
+#[test]
+fn sweep_runs_from_config_file() {
+    let dir = std::env::temp_dir().join("sphkm-cli-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("sweep.cfg");
+    std::fs::write(
+        &cfg,
+        "dataset = demo\nscale = tiny\nks = 3\nvariants = standard, exponion\ninits = uniform\nreps = 1\n",
+    )
+    .unwrap();
+    let out = sphkm()
+        .args(["sweep", "--config", cfg.to_str().unwrap()])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Exponion"), "{text}");
+    assert!(text.contains("objective"), "{text}");
+}
+
+#[test]
+fn sweep_rejects_bad_config() {
+    let dir = std::env::temp_dir().join("sphkm-cli-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("bad.cfg");
+    std::fs::write(&cfg, "this is not a config\n").unwrap();
+    let out = sphkm()
+        .args(["sweep", "--config", cfg.to_str().unwrap()])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+}

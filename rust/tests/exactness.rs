@@ -1,0 +1,261 @@
+//! The paper's correctness claim: every accelerated variant (Elkan,
+//! Simplified Elkan, Hamerly, Simplified Hamerly — and our Yinyang
+//! extension) is **exact**: started from the same initial centers it must
+//! converge to the same assignment and objective as the standard algorithm.
+//!
+//! These tests run the full matrix of (dataset kind × k × seed × variant)
+//! at tiny scale and compare against Standard.
+
+use sphkm::data::datasets::{self, Scale};
+use sphkm::data::synth::SynthConfig;
+use sphkm::data::Dataset;
+use sphkm::init::{seed_centers, InitMethod};
+use sphkm::kmeans::{run_with_centers, KMeansConfig, Variant};
+
+fn exactness_on(ds: &Dataset, ks: &[usize], seeds: &[u64]) {
+    for &k in ks {
+        let k = k.min(ds.matrix.rows() / 2).max(2);
+        for &seed in seeds {
+            let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, seed);
+            let baseline = run_with_centers(
+                &ds.matrix,
+                init.centers.clone(),
+                &KMeansConfig::new(k).variant(Variant::Standard),
+            );
+            assert!(
+                baseline.converged,
+                "{}: standard did not converge (k={k}, seed={seed})",
+                ds.name
+            );
+            for variant in [
+                Variant::Elkan,
+                Variant::SimplifiedElkan,
+                Variant::Hamerly,
+                Variant::SimplifiedHamerly,
+                Variant::Yinyang,
+                Variant::Exponion,
+            ] {
+                let r = run_with_centers(
+                    &ds.matrix,
+                    init.centers.clone(),
+                    &KMeansConfig::new(k).variant(variant),
+                );
+                assert!(
+                    r.converged,
+                    "{}: {} did not converge (k={k}, seed={seed})",
+                    ds.name,
+                    variant.name()
+                );
+                assert_eq!(
+                    r.assignments,
+                    baseline.assignments,
+                    "{}: {} assignments differ from Standard (k={k}, seed={seed})",
+                    ds.name,
+                    variant.name()
+                );
+                assert!(
+                    (r.objective - baseline.objective).abs() < 1e-6 * (1.0 + baseline.objective),
+                    "{}: {} objective {} vs standard {} (k={k}, seed={seed})",
+                    ds.name,
+                    variant.name(),
+                    r.objective,
+                    baseline.objective
+                );
+                // Pruned variants must never compute MORE point-center sims
+                // than the standard algorithm needed.
+                assert!(
+                    r.stats.total_point_center() <= baseline.stats.total_point_center(),
+                    "{}: {} computed more sims than Standard",
+                    ds.name,
+                    variant.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn exact_on_synthetic_corpus() {
+    let ds = SynthConfig::small_demo().generate(11);
+    exactness_on(&ds, &[2, 5, 16], &[1, 2, 3]);
+}
+
+#[test]
+fn exact_on_dblp_author_conf() {
+    let ds = datasets::dblp_author_conf(Scale::Tiny, 5);
+    exactness_on(&ds, &[2, 10, 30], &[4, 5]);
+}
+
+#[test]
+fn exact_on_dblp_conf_author_high_dim() {
+    let ds = datasets::dblp_conf_author(Scale::Tiny, 5);
+    exactness_on(&ds, &[2, 10], &[6, 7]);
+}
+
+#[test]
+fn exact_on_newsgroups_with_anomalies() {
+    let ds = datasets::newsgroups(Scale::Tiny, 5);
+    exactness_on(&ds, &[5, 20], &[8]);
+}
+
+#[test]
+fn exact_with_kmeanspp_seeding() {
+    let ds = SynthConfig::small_demo().generate(13);
+    for method in [
+        InitMethod::KMeansPP { alpha: 1.0 },
+        InitMethod::AfkMc2 { alpha: 1.0, chain: 30 },
+    ] {
+        let init = seed_centers(&ds.matrix, 8, &method, 21);
+        let baseline = run_with_centers(
+            &ds.matrix,
+            init.centers.clone(),
+            &KMeansConfig::new(8).variant(Variant::Standard),
+        );
+        for variant in [Variant::Elkan, Variant::SimplifiedHamerly, Variant::Yinyang, Variant::Exponion] {
+            let r = run_with_centers(
+                &ds.matrix,
+                init.centers.clone(),
+                &KMeansConfig::new(8).variant(variant),
+            );
+            assert_eq!(r.assignments, baseline.assignments, "{:?}", variant);
+        }
+    }
+}
+
+#[test]
+fn exact_with_tight_hamerly_bound() {
+    // The beyond-paper guarded min-p rule must also be exact.
+    let ds = datasets::dblp_author_conf(Scale::Tiny, 9);
+    for &k in &[2usize, 10, 30] {
+        let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 31);
+        let baseline = run_with_centers(
+            &ds.matrix,
+            init.centers.clone(),
+            &KMeansConfig::new(k).variant(Variant::Standard),
+        );
+        for variant in [Variant::Hamerly, Variant::SimplifiedHamerly, Variant::Yinyang, Variant::Exponion] {
+            let tight = run_with_centers(
+                &ds.matrix,
+                init.centers.clone(),
+                &KMeansConfig::new(k).variant(variant).tight_bound(true),
+            );
+            assert_eq!(tight.assignments, baseline.assignments);
+            // The tight rule must prune at least as well as Eq. 9.
+            let loose = run_with_centers(
+                &ds.matrix,
+                init.centers.clone(),
+                &KMeansConfig::new(k).variant(variant),
+            );
+            assert!(
+                tight.stats.total_point_center() <= loose.stats.total_point_center(),
+                "{}: tight bound pruned less than Eq.9 (k={k})",
+                variant.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn degenerate_k_equals_one_and_k_equals_n() {
+    let ds = SynthConfig::small_demo().generate(17);
+    let n = ds.matrix.rows();
+    for variant in Variant::ALL {
+        // k = 1: everything in one cluster, converges immediately.
+        let r = sphkm::kmeans::run(
+            &ds.matrix,
+            &KMeansConfig::new(1).variant(variant).seed(3),
+        );
+        assert!(r.converged, "{}", variant.name());
+        assert!(r.assignments.iter().all(|&a| a == 0));
+        // k = n/3 (large k relative to n).
+        let k = n / 3;
+        let r = sphkm::kmeans::run(
+            &ds.matrix,
+            &KMeansConfig::new(k).variant(variant).seed(3),
+        );
+        assert!(r.converged, "{} large-k", variant.name());
+        assert!(r.assignments.iter().all(|&a| (a as usize) < k));
+    }
+}
+
+#[test]
+fn bounds_hold_during_entire_run() {
+    // White-box invariant via public API: after convergence the lower
+    // bound equality l(i) = ⟨x, c⟩ must reproduce the reported objective.
+    let ds = SynthConfig::small_demo().generate(19);
+    let r = sphkm::kmeans::run(
+        &ds.matrix,
+        &KMeansConfig::new(6).variant(Variant::Elkan).seed(5),
+    );
+    let recomputed = sphkm::metrics::objective(&ds.matrix, &r.assignments, &r.centers);
+    assert!((recomputed - r.objective).abs() < 1e-9 * (1.0 + r.objective));
+}
+
+#[test]
+fn preinit_bounds_from_kmeanspp_are_exact_and_cheaper() {
+    // §7 synergy: k-means++ collects the N×k similarity matrix during
+    // seeding; run_seeded consumes it, skips the initial O(N·k) pass, and
+    // must still produce exactly the same clustering as the plain path.
+    use sphkm::init::seed_centers_with_bounds;
+    use sphkm::kmeans::run_seeded;
+    let ds = datasets::simpsons_wiki(Scale::Tiny, 7);
+    let k = 12;
+    let method = InitMethod::KMeansPP { alpha: 1.0 };
+    let init = seed_centers_with_bounds(&ds.matrix, k, &method, 17);
+    assert!(init.sim_matrix.is_some(), "k-means++ should collect bounds");
+
+    // Baseline: same seeded assignment, standard algorithm.
+    let baseline = run_seeded(
+        &ds.matrix,
+        init.clone(),
+        &KMeansConfig::new(k).variant(Variant::Standard),
+    );
+    for variant in [
+        Variant::Elkan,
+        Variant::SimplifiedElkan,
+        Variant::Hamerly,
+        Variant::SimplifiedHamerly,
+        Variant::Yinyang,
+        Variant::Exponion,
+    ] {
+        let seeded = run_seeded(&ds.matrix, init.clone(), &KMeansConfig::new(k).variant(variant));
+        assert_eq!(
+            seeded.assignments,
+            baseline.assignments,
+            "{} with preinit bounds diverged",
+            variant.name()
+        );
+        // Iteration 0 must be free of point-center similarities.
+        assert_eq!(
+            seeded.stats.iters[0].sims_point_center, 0,
+            "{}: initial pass was not skipped",
+            variant.name()
+        );
+        // And the whole run must be cheaper than the non-seeded variant.
+        let plain = run_with_centers(
+            &ds.matrix,
+            init.centers.clone(),
+            &KMeansConfig::new(k).variant(variant),
+        );
+        assert!(
+            seeded.stats.total_point_center() < plain.stats.total_point_center(),
+            "{}: preinit did not save similarities",
+            variant.name()
+        );
+    }
+}
+
+#[test]
+fn preinit_absent_for_uniform_seeding() {
+    use sphkm::init::seed_centers_with_bounds;
+    let ds = SynthConfig::small_demo().generate(23);
+    let init = seed_centers_with_bounds(&ds.matrix, 5, &InitMethod::Uniform, 3);
+    assert!(init.sim_matrix.is_none());
+    // run_seeded still works, just without the skip.
+    let r = sphkm::kmeans::run_seeded(
+        &ds.matrix,
+        init,
+        &KMeansConfig::new(5).variant(Variant::SimplifiedElkan),
+    );
+    assert!(r.converged);
+}

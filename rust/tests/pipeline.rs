@@ -1,0 +1,161 @@
+//! Cross-module pipeline tests: data generation → seeding → clustering →
+//! metrics → reporting, plus failure-injection on the I/O path.
+
+use sphkm::coordinator::report::Table;
+use sphkm::data::datasets::{self, Scale};
+use sphkm::data::synth::SynthConfig;
+use sphkm::data::text::{demo_corpus, TextPipeline};
+use sphkm::init::InitMethod;
+use sphkm::kmeans::{run, KMeansConfig, Variant};
+use sphkm::metrics;
+
+#[test]
+fn clustering_recovers_planted_topics() {
+    // Strong topic structure should be recoverable with NMI well above
+    // chance by every variant.
+    let mut cfg = SynthConfig::small_demo();
+    cfg.topic_strength = 0.85;
+    let ds = cfg.generate(3);
+    let truth = ds.labels.as_ref().unwrap();
+    for variant in [Variant::Standard, Variant::SimplifiedElkan, Variant::Yinyang] {
+        let r = run(
+            &ds.matrix,
+            &KMeansConfig::new(8)
+                .variant(variant)
+                .init(InitMethod::KMeansPP { alpha: 1.0 })
+                .seed(5),
+        );
+        let nmi = metrics::nmi(&r.assignments, truth);
+        assert!(
+            nmi > 0.5,
+            "{}: NMI {nmi} too low for strong planted topics",
+            variant.name()
+        );
+    }
+}
+
+#[test]
+fn text_pipeline_clusters_demo_corpus() {
+    let docs = demo_corpus();
+    let p = TextPipeline { min_df: 1, max_df_frac: 0.7, ..Default::default() };
+    let (ds, vocab) = p.fit(&docs, "demo");
+    assert!(!vocab.is_empty());
+    // Three planted themes of six documents each. k-means is
+    // init-sensitive on 18 points; take the best of a few seeds (what a
+    // practitioner does) and require clean theme recovery.
+    let truth: Vec<u32> = (0..18).map(|i| (i / 6) as u32).collect();
+    let best_purity = (0..5)
+        .map(|seed| {
+            let r = run(
+                &ds.matrix,
+                &KMeansConfig::new(3)
+                    .variant(Variant::Elkan)
+                    .init(InitMethod::KMeansPP { alpha: 1.0 })
+                    .seed(seed),
+            );
+            metrics::purity(&r.assignments, &truth)
+        })
+        .fold(0.0f64, f64::max);
+    assert!(best_purity > 0.9, "theme purity {best_purity} too low");
+}
+
+#[test]
+fn better_seeding_never_explodes_objective() {
+    // k-means++/AFK-MC² objectives should be in the same ballpark as
+    // uniform (Table 2: changes are a few percent).
+    let ds = datasets::simpsons_wiki(Scale::Tiny, 9);
+    let mut objectives = Vec::new();
+    for init in InitMethod::paper_set() {
+        let r = run(
+            &ds.matrix,
+            &KMeansConfig::new(10)
+                .variant(Variant::SimplifiedHamerly)
+                .init(init)
+                .seed(13),
+        );
+        objectives.push(r.objective);
+    }
+    let min = objectives.iter().cloned().fold(f64::MAX, f64::min);
+    let max = objectives.iter().cloned().fold(f64::MIN, f64::max);
+    assert!(
+        max / min < 1.2,
+        "objectives vary too much across seedings: {objectives:?}"
+    );
+}
+
+#[test]
+fn libsvm_round_trip_preserves_clustering() {
+    let ds = SynthConfig::small_demo().generate(21);
+    let dir = std::env::temp_dir().join("sphkm-pipe-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pipe.svm");
+    sphkm::data::io::write_libsvm(&path, &ds.matrix, ds.labels.as_deref()).unwrap();
+    let (mut loaded, labels) = sphkm::data::io::read_libsvm(&path).unwrap();
+    loaded.normalize_rows();
+    assert_eq!(labels.unwrap(), ds.labels.clone().unwrap());
+    let cfg = KMeansConfig::new(6).variant(Variant::SimplifiedElkan).seed(2);
+    let a = run(&ds.matrix, &cfg);
+    // Column count may differ (trailing empty columns dropped) but the
+    // geometry is identical, so the clustering must be too.
+    let b = run(&loaded, &cfg);
+    assert_eq!(a.assignments, b.assignments);
+}
+
+#[test]
+fn io_failure_injection() {
+    let dir = std::env::temp_dir().join("sphkm-pipe-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Truncated/corrupt files must error, not panic.
+    let bad = dir.join("corrupt.svm");
+    std::fs::write(&bad, "1 3:0.5 nonsense\n").unwrap();
+    assert!(sphkm::data::io::read_libsvm(&bad).is_err());
+    let bad_mtx = dir.join("corrupt.mtx");
+    std::fs::write(&bad_mtx, "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.0\n").unwrap();
+    assert!(sphkm::data::io::read_matrix_market(&bad_mtx).is_err());
+    // Nonexistent paths.
+    assert!(sphkm::data::io::read_libsvm(std::path::Path::new("/no/such/file")).is_err());
+}
+
+#[test]
+fn report_tables_render_all_experiments_shapes() {
+    let mut t = Table::new(&["Data set", "Algorithm", "k=2"]);
+    t.row(vec!["X".into(), "Standard".into(), "1,234".into()]);
+    let rendered = t.render();
+    assert!(rendered.contains("Standard"));
+    let csv = t.to_csv();
+    assert_eq!(csv.lines().count(), 2);
+}
+
+#[test]
+fn max_iter_cap_reports_unconverged() {
+    let ds = datasets::newsgroups(Scale::Tiny, 3);
+    let r = run(
+        &ds.matrix,
+        &KMeansConfig::new(10).variant(Variant::Standard).seed(1).max_iter(1),
+    );
+    assert!(!r.converged);
+    assert_eq!(r.iterations, 1);
+}
+
+#[test]
+fn objective_decreases_monotonically_iteration_to_iteration() {
+    // Alternating optimization must never increase the objective: check by
+    // capping max_iter progressively (each prefix of the run is a run).
+    let ds = SynthConfig::small_demo().generate(33);
+    let mut prev = f64::MAX;
+    for cap in [1usize, 2, 4, 8, 32] {
+        let r = run(
+            &ds.matrix,
+            &KMeansConfig::new(5).variant(Variant::Standard).seed(3).max_iter(cap),
+        );
+        assert!(
+            r.objective <= prev + 1e-9,
+            "objective rose from {prev} to {} at cap {cap}",
+            r.objective
+        );
+        prev = r.objective;
+        if r.converged {
+            break;
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Integration of the PJRT runtime with the AOT artifacts: load the HLO
+//! text produced by `python/compile/aot.py`, execute it on the CPU PJRT
+//! client, and compare against the Rust-native computation on the same
+//! inputs. Skipped (with a notice) when `make artifacts` has not run.
+
+use sphkm::data::synth::SynthConfig;
+use sphkm::data::tfidf::TfIdf;
+use sphkm::runtime::{artifacts_available, AssignEngine, Manifest};
+use sphkm::sparse::CsrMatrix;
+use std::path::Path;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    // Tests run from the package root.
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn skip_if_missing() -> bool {
+    if !artifacts_available(&artifacts_dir()) {
+        eprintln!("SKIP: no artifacts (run `make artifacts` first)");
+        return true;
+    }
+    false
+}
+
+/// A unit-row dataset matching the (k=16, d=512) artifact.
+fn dataset_512() -> CsrMatrix {
+    let ds = SynthConfig {
+        name: "rt".into(),
+        n_docs: 600, // exercises full tiles (256) plus a partial tail (88)
+        vocab: 512,
+        topics: 16,
+        doc_len_mean: 30.0,
+        doc_len_sigma: 0.4,
+        topic_strength: 0.7,
+        shared_vocab_frac: 0.25,
+        zipf_s: 1.1,
+        anomaly_frac: 0.0,
+        tfidf: TfIdf::default(),
+    }
+    .generate(99);
+    ds.matrix
+}
+
+fn centers_from_rows(data: &CsrMatrix, k: usize) -> Vec<f32> {
+    let mut centers = vec![0.0f32; k * data.cols()];
+    for j in 0..k {
+        let row = data.row(j * 7);
+        for (t, &c) in row.indices.iter().enumerate() {
+            centers[j * data.cols() + c as usize] = row.values[t];
+        }
+    }
+    centers
+}
+
+#[test]
+fn engine_matches_native_assignment() {
+    if skip_if_missing() {
+        return;
+    }
+    let data = dataset_512();
+    let k = 16;
+    let centers = centers_from_rows(&data, k);
+    let mut engine = AssignEngine::load(
+        &artifacts_dir(),
+        Manifest { batch: 256, k, dim: 512 },
+    )
+    .expect("engine load");
+    assert!(engine.platform().to_lowercase().contains("cpu"));
+
+    let tile = engine.assign_all(&data, &centers).expect("execute");
+    assert_eq!(tile.best.len(), data.rows());
+
+    // Native reference: argmax / top-2 per row.
+    for i in 0..data.rows() {
+        let row = data.row(i);
+        let mut best = f64::MIN;
+        let mut second = f64::MIN;
+        let mut best_j = 0usize;
+        for j in 0..k {
+            let s = row.dot_dense(&centers[j * 512..(j + 1) * 512]);
+            if s > best {
+                second = best;
+                best = s;
+                best_j = j;
+            } else if s > second {
+                second = s;
+            }
+        }
+        let got_best = tile.best_sim[i] as f64;
+        let got_second = tile.second_sim[i] as f64;
+        assert!(
+            (got_best - best).abs() < 1e-4,
+            "row {i}: best {got_best} vs native {best}"
+        );
+        assert!(
+            (got_second - second).abs() < 1e-4,
+            "row {i}: second {got_second} vs native {second}"
+        );
+        // Index can differ only under near-ties.
+        if tile.best[i] as usize != best_j {
+            assert!((best - second).abs() < 1e-4, "row {i}: index mismatch");
+        }
+    }
+}
+
+#[test]
+fn engine_rejects_wrong_shapes() {
+    if skip_if_missing() {
+        return;
+    }
+    let engine = AssignEngine::load(
+        &artifacts_dir(),
+        Manifest { batch: 256, k: 16, dim: 512 },
+    )
+    .expect("engine load");
+    let bad_x = vec![0.0f32; 10];
+    let centers = vec![0.0f32; 16 * 512];
+    assert!(engine.assign_dense(&bad_x, &centers).is_err());
+    let x = vec![0.0f32; 256 * 512];
+    let bad_c = vec![0.0f32; 7];
+    assert!(engine.assign_dense(&x, &bad_c).is_err());
+}
+
+#[test]
+fn load_matching_finds_artifact() {
+    if skip_if_missing() {
+        return;
+    }
+    let e = AssignEngine::load_matching(&artifacts_dir(), 8, 1024).expect("match 8/1024");
+    assert_eq!(e.manifest().k, 8);
+    assert_eq!(e.manifest().dim, 1024);
+    assert!(AssignEngine::load_matching(&artifacts_dir(), 999, 999).is_err());
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let err = AssignEngine::load(
+        Path::new("/nonexistent"),
+        Manifest { batch: 1, k: 1, dim: 1 },
+    )
+    .unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
