@@ -1,0 +1,91 @@
+//! Sharded-executor scaling benchmark: run time of the assignment-dominated
+//! clustering loop vs worker-thread count, on the synthetic 20-newsgroups
+//! analogue (the acceptance target is ≥2× at 4 threads for the
+//! scan-heavy variants).
+//!
+//! ```text
+//! cargo bench --bench bench_parallel -- [--scale tiny|small|medium]
+//!     [--k 50] [--threads 1,2,4,8] [--runs 5] [--max-iter 25]
+//! ```
+//!
+//! Also spot-checks the determinism contract at the end: the parallel run
+//! must produce bit-identical assignments to the serial one.
+
+use sphkm::data::datasets::{self, Scale};
+use sphkm::init::{seed_centers, InitMethod};
+use sphkm::kmeans::{run_with_centers, KMeansConfig, Variant};
+use sphkm::util::benchkit::{bench, black_box, BenchOpts};
+use sphkm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let opts = BenchOpts::from_args(&args);
+    let scale: Scale = args.get_or("scale", Scale::Small).unwrap_or(Scale::Small);
+    let k: usize = args.get_or("k", 50).unwrap_or(50);
+    let max_iter: usize = args.get_or("max-iter", 25).unwrap_or(25);
+    let threads_grid: Vec<usize> = args
+        .list::<usize>("threads")
+        .unwrap_or(None)
+        .unwrap_or_else(|| vec![1, 2, 4]);
+
+    let ds = datasets::newsgroups(scale, 42);
+    let k = k.min(ds.matrix.rows() / 2).max(2);
+    let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 7);
+    println!(
+        "# parallel assignment bench — {} ({}×{}, {:.3}% nnz), k={k}, \
+         max_iter={max_iter}, cores={}",
+        ds.name,
+        ds.matrix.rows(),
+        ds.matrix.cols(),
+        ds.matrix.density() * 100.0,
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1),
+    );
+
+    for variant in [
+        Variant::Standard,
+        Variant::SimplifiedElkan,
+        Variant::SimplifiedHamerly,
+        Variant::Exponion,
+    ] {
+        let mut base_ms = f64::NAN;
+        for &t in &threads_grid {
+            let cfg = KMeansConfig::new(k)
+                .variant(variant)
+                .max_iter(max_iter)
+                .threads(t);
+            let r = bench(
+                &format!("parallel/{}/threads={t}", variant.name()),
+                opts,
+                || {
+                    let out = run_with_centers(&ds.matrix, init.centers.clone(), &cfg);
+                    black_box(out.objective);
+                },
+            );
+            if t == threads_grid[0] {
+                base_ms = r.stats.mean_ms;
+            } else {
+                println!(
+                    "        speedup vs threads={}: {:.2}x",
+                    threads_grid[0],
+                    base_ms / r.stats.mean_ms
+                );
+            }
+        }
+    }
+
+    // Determinism spot check (the exactness suite covers this per variant;
+    // here it guards the bench itself against measuring diverging runs).
+    let serial = run_with_centers(
+        &ds.matrix,
+        init.centers.clone(),
+        &KMeansConfig::new(k).variant(Variant::SimplifiedHamerly).max_iter(max_iter).threads(1),
+    );
+    let par = run_with_centers(
+        &ds.matrix,
+        init.centers.clone(),
+        &KMeansConfig::new(k).variant(Variant::SimplifiedHamerly).max_iter(max_iter).threads(4),
+    );
+    assert_eq!(serial.assignments, par.assignments, "determinism violation");
+    assert_eq!(serial.objective.to_bits(), par.objective.to_bits());
+    println!("# determinism check passed (threads=1 vs threads=4 bit-identical)");
+}

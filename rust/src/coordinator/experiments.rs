@@ -25,6 +25,10 @@ pub struct ExperimentOpts {
     pub ks: Vec<usize>,
     /// Iteration cap per run.
     pub max_iter: usize,
+    /// Worker threads for the sharded assignment phase (`0` = all cores,
+    /// `1` = serial). Results are thread-count invariant, so this only
+    /// changes wall times — the paper's tables default to serial.
+    pub threads: usize,
     /// Directory for CSV output.
     pub out_dir: std::path::PathBuf,
 }
@@ -37,6 +41,7 @@ impl Default for ExperimentOpts {
             reps: 3,
             ks: vec![2, 10, 20, 50, 100, 200],
             max_iter: 200,
+            threads: 1,
             out_dir: "results".into(),
         }
     }
@@ -44,7 +49,7 @@ impl Default for ExperimentOpts {
 
 impl ExperimentOpts {
     /// Parse overrides from CLI args (`--scale`, `--seed`, `--reps`,
-    /// `--ks`, `--max-iter`, `--quick`).
+    /// `--ks`, `--max-iter`, `--threads`, `--quick`).
     pub fn from_args(args: &crate::util::cli::Args) -> Self {
         let mut o = Self::default();
         if args.flag("quick") {
@@ -56,6 +61,7 @@ impl ExperimentOpts {
         o.seed = args.get_or("seed", o.seed).unwrap_or(o.seed);
         o.reps = args.get_or("reps", o.reps).unwrap_or(o.reps).max(1);
         o.max_iter = args.get_or("max-iter", o.max_iter).unwrap_or(o.max_iter);
+        o.threads = args.get_or("threads", o.threads).unwrap_or(o.threads);
         if let Ok(Some(ks)) = args.list::<usize>("ks") {
             o.ks = ks;
         }
@@ -95,10 +101,12 @@ fn run_cell(
     k: usize,
     initial: DenseMatrix,
     max_iter: usize,
+    threads: usize,
 ) -> KMeansResult {
     let cfg = KMeansConfig::new(k)
         .variant(variant)
         .max_iter(max_iter)
+        .threads(threads)
         .fast_standard(false);
     run_with_centers(&ds.matrix, initial, &cfg)
 }
@@ -110,10 +118,12 @@ fn run_cell_simd_standard(
     k: usize,
     initial: DenseMatrix,
     max_iter: usize,
+    threads: usize,
 ) -> KMeansResult {
     let cfg = KMeansConfig::new(k)
         .variant(Variant::Standard)
         .max_iter(max_iter)
+        .threads(threads)
         .fast_standard(true);
     run_with_centers(&ds.matrix, initial, &cfg)
 }
@@ -168,7 +178,7 @@ pub fn fig1(opts: &ExperimentOpts, k: usize) -> Table {
         // Average wall times over reps (sims are deterministic).
         let mut runs = Vec::new();
         for _ in 0..opts.reps {
-            runs.push(run_cell(&ds, variant, k, initial.clone(), opts.max_iter));
+            runs.push(run_cell(&ds, variant, k, initial.clone(), opts.max_iter, opts.threads));
         }
         let r0 = &runs[0];
         for it in 0..r0.stats.iters.len() {
@@ -277,7 +287,14 @@ pub fn table2(opts: &ExperimentOpts) -> Table {
                 let initial = uniform_centers(&ds, k, seed);
                 // Simplified Hamerly: fastest reasonable default; the
                 // converged objective is variant-independent (exactness).
-                let r = run_cell(&ds, Variant::SimplifiedHamerly, k, initial, opts.max_iter);
+                let r = run_cell(
+                    &ds,
+                    Variant::SimplifiedHamerly,
+                    k,
+                    initial,
+                    opts.max_iter,
+                    opts.threads,
+                );
                 base[ki][rep] = r.objective;
             }
         }
@@ -293,7 +310,14 @@ pub fn table2(opts: &ExperimentOpts) -> Table {
                 for rep in 0..opts.reps {
                     let seed = opts.cell_seed(&format!("t2-{}-{k}", ds.name), rep);
                     let init = seed_centers(&ds.matrix, k, method, seed);
-                    let r = run_cell(&ds, Variant::SimplifiedHamerly, k, init.centers, opts.max_iter);
+                    let r = run_cell(
+                        &ds,
+                        Variant::SimplifiedHamerly,
+                        k,
+                        init.centers,
+                        opts.max_iter,
+                        opts.threads,
+                    );
                     rel_sum += r.objective / base[ki][rep] - 1.0;
                 }
                 cells.push(fmt_pct(rel_sum / opts.reps as f64));
@@ -347,7 +371,7 @@ pub fn table3(opts: &ExperimentOpts, extended: bool) -> Table {
                 let mut total_ms = 0.0;
                 for initial in &initials {
                     let sw = crate::util::timer::Stopwatch::start();
-                    let r = run_cell(&ds, variant, k, initial.clone(), opts.max_iter);
+                    let r = run_cell(&ds, variant, k, initial.clone(), opts.max_iter, opts.threads);
                     total_ms += sw.ms();
                     std::hint::black_box(r.objective);
                 }
@@ -357,7 +381,8 @@ pub fn table3(opts: &ExperimentOpts, extended: bool) -> Table {
                 let mut total_ms = 0.0;
                 for initial in &initials {
                     let sw = crate::util::timer::Stopwatch::start();
-                    let r = run_cell_simd_standard(&ds, k, initial.clone(), opts.max_iter);
+                    let r =
+                        run_cell_simd_standard(&ds, k, initial.clone(), opts.max_iter, opts.threads);
                     total_ms += sw.ms();
                     std::hint::black_box(r.objective);
                 }
@@ -415,7 +440,7 @@ pub fn fig2(opts: &ExperimentOpts) -> Table {
                 let mut iters = 0usize;
                 for initial in &initials {
                     let sw = crate::util::timer::Stopwatch::start();
-                    let r = run_cell(ds, variant, k, initial.clone(), opts.max_iter);
+                    let r = run_cell(ds, variant, k, initial.clone(), opts.max_iter, opts.threads);
                     total_ms += sw.ms();
                     sims = r.stats.total_sims();
                     iters = r.iterations;
@@ -484,7 +509,7 @@ pub fn ablation_cc(opts: &ExperimentOpts, k: usize) -> Table {
             Variant::SimplifiedHamerly,
         ] {
             let sw = crate::util::timer::Stopwatch::start();
-            let r = run_cell(&ds, variant, k, initial.clone(), opts.max_iter);
+            let r = run_cell(&ds, variant, k, initial.clone(), opts.max_iter, opts.threads);
             let ms = sw.ms();
             let cc: u64 = r.stats.iters.iter().map(|i| i.sims_center_center).sum();
             t.row(vec![
@@ -531,7 +556,10 @@ pub fn ablation_preinit(opts: &ExperimentOpts, k: usize) -> Table {
                     let seed = opts.cell_seed(&format!("pre-{}-{k}", ds.name), rep);
                     let sw = crate::util::timer::Stopwatch::start();
                     let init = seed_centers_with_bounds(&ds.matrix, k, &method, seed);
-                    let cfg = KMeansConfig::new(k).variant(variant).max_iter(opts.max_iter);
+                    let cfg = KMeansConfig::new(k)
+                        .variant(variant)
+                        .threads(opts.threads)
+                        .max_iter(opts.max_iter);
                     let r = if preinit {
                         run_seeded(&ds.matrix, init, &cfg)
                     } else {
@@ -569,6 +597,7 @@ mod tests {
             reps: 1,
             ks: vec![2, 5],
             max_iter: 30,
+            threads: 1,
             out_dir: std::env::temp_dir().join("sphkm-exp-tests"),
         }
     }

@@ -10,6 +10,7 @@
 //! incremental ± updates per cluster, and `f32` drift would break the
 //! "accelerated variants produce identical assignments" exactness tests.
 
+use crate::runtime::parallel::{Plan, Pool, SHARD_ROWS};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use crate::sparse::csr::RowView;
 
@@ -148,6 +149,51 @@ impl Centers {
         }
     }
 
+    /// Like [`Centers::rebuild`], but accumulating per-band partial sums on
+    /// `pool`'s workers and reducing them once, in band order.
+    ///
+    /// The band grid is a pure function of the problem shape (`rows`,
+    /// `k·d`) — never of the thread count — so the floating-point reduction
+    /// tree, and therefore every downstream center coordinate, is identical
+    /// for every `threads` setting (the shard-determinism contract of
+    /// [`crate::kmeans`]). Band count is additionally capped by a memory
+    /// budget on the `k×d` f64 partials, degenerating to the plain serial
+    /// rebuild when even two partials would be too large to be worth it.
+    pub fn rebuild_sharded(&mut self, data: &CsrMatrix, assign: &[u32], pool: &Pool) {
+        debug_assert_eq!(assign.len(), data.rows());
+        let bands = rebuild_bands(data.rows(), self.k * self.d);
+        if bands <= 1 {
+            self.rebuild(data, assign);
+            return;
+        }
+        let plan = Plan::with_parts(data.rows(), bands);
+        let (k, d) = (self.k, self.d);
+        let parts: Vec<(Vec<f64>, Vec<u64>)> = pool.run(plan.ranges().to_vec(), |_, range| {
+            let mut sums = vec![0.0f64; k * d];
+            let mut counts = vec![0u64; k];
+            for i in range {
+                let a = assign[i] as usize;
+                counts[a] += 1;
+                let row = data.row(i);
+                let base = a * d;
+                for (t, &c) in row.indices.iter().enumerate() {
+                    sums[base + c as usize] += row.values[t] as f64;
+                }
+            }
+            (sums, counts)
+        });
+        self.sums.fill(0.0);
+        self.counts.fill(0);
+        for (ps, pc) in parts {
+            for (o, v) in self.sums.iter_mut().zip(ps) {
+                *o += v;
+            }
+            for (o, v) in self.counts.iter_mut().zip(pc) {
+                *o += v;
+            }
+        }
+    }
+
     /// Incrementally move one point's mass from cluster `from` to `to`
     /// (the paper's optimization iii).
     pub fn apply_move(&mut self, row: RowView<'_>, from: usize, to: usize) {
@@ -206,6 +252,20 @@ impl Centers {
     pub fn p_extremes(&self) -> PExtremes {
         PExtremes::from_p(&self.p)
     }
+}
+
+/// Number of parallel accumulation bands for a sharded rebuild: a function
+/// of the problem shape only (never the thread count), bounded by a
+/// ~128 MiB budget on the f64 partial-sum copies and by the row count.
+fn rebuild_bands(rows: usize, kd: usize) -> usize {
+    const MAX_BANDS: usize = 8;
+    const BUDGET_BYTES: usize = 128 << 20;
+    if rows < 2 * SHARD_ROWS || kd == 0 {
+        return 1;
+    }
+    let mem_cap = (BUDGET_BYTES / (8 * kd)).max(1);
+    let row_cap = rows / SHARD_ROWS;
+    mem_cap.min(MAX_BANDS).min(row_cap).max(1)
 }
 
 /// Minimum/maximum structure over `p(j)` with exclusion support.
@@ -343,6 +403,55 @@ mod tests {
             assert!((p - 1.0).abs() < 1e-6);
         }
         drop(p1);
+    }
+
+    #[test]
+    fn rebuild_sharded_is_thread_count_invariant() {
+        use crate::runtime::parallel::Pool;
+        use crate::util::rng::Xoshiro256;
+        // Enough rows for several bands (row_cap = rows / SHARD_ROWS).
+        let (rows, d, k) = (1200usize, 8usize, 3usize);
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        let data: Vec<SparseVec> = (0..rows)
+            .map(|_| {
+                let c = rng.index(d);
+                SparseVec::from_pairs(d, vec![(c as u32, 0.25 + rng.next_f64() as f32)])
+            })
+            .collect();
+        let data = CsrMatrix::from_rows(d, &data);
+        let assign: Vec<u32> = (0..rows).map(|i| (i % k) as u32).collect();
+        let initial = DenseMatrix::from_vec(
+            k,
+            d,
+            (0..k * d).map(|i| if i % (d + 1) == 0 { 1.0 } else { 0.0 }).collect(),
+        );
+
+        let mut serial = Centers::from_initial(initial.clone());
+        serial.rebuild_sharded(&data, &assign, &Pool::new(1));
+        serial.update();
+        for threads in [2usize, 4, 0] {
+            let mut par = Centers::from_initial(initial.clone());
+            par.rebuild_sharded(&data, &assign, &Pool::new(threads));
+            par.update();
+            for j in 0..k {
+                assert_eq!(par.count(j), serial.count(j));
+                // Bit-identical: the band grid never depends on threads.
+                for (a, b) in par.center(j).iter().zip(serial.center(j)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+                }
+            }
+        }
+        // And the sharded path agrees with the plain serial rebuild up to
+        // reduction-order rounding.
+        let mut plain = Centers::from_initial(initial);
+        plain.rebuild(&data, &assign);
+        plain.update();
+        for j in 0..k {
+            assert_eq!(plain.count(j), serial.count(j));
+            for (a, b) in plain.center(j).iter().zip(serial.center(j)) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
     }
 
     #[test]

@@ -7,9 +7,11 @@
 //!
 //! Both `cc` tests are valid because `cc ≥ 0`, so `cc ≤ l` implies the
 //! `l ≥ 0` premise of the paper's derivation. Bounds are maintained across
-//! center movement with Eq. 6/7.
+//! center movement with Eq. 6/7, fused into the sharded per-point pass
+//! (the `cc`/`s` table is rebuilt serially before the pass; it reads only
+//! the frozen centers).
 
-use super::{Ctx, IterStats, KMeansConfig};
+use super::{bound_states, bound_works, Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
 use crate::bounds::cc::CenterBounds;
 use crate::bounds::{update_lower_pre, update_upper_pre};
 use crate::util::timer::Stopwatch;
@@ -20,10 +22,13 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
     let mut l = vec![0.0f64; n];
     let mut u = vec![0.0f64; n * k];
 
-    ctx.initial_assignment(true, |i, _bj, best, _second, sims| {
-        l[i] = best;
-        u[i * k..(i + 1) * k].copy_from_slice(sims);
-    });
+    {
+        let states = bound_states(&ctx.plan, &mut l, 1, &mut u, k);
+        ctx.initial_assignment(true, states, |(l, u), li, _bj, best, _second, sims| {
+            l[li] = best;
+            u[li * k..(li + 1) * k].copy_from_slice(sims);
+        });
+    }
     ctx.stats.bound_bytes = (n + n * k) * std::mem::size_of::<f64>();
 
     let mut cb = CenterBounds::new(k);
@@ -31,66 +36,75 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
         let sw = Stopwatch::start();
         let mut iter = IterStats::default();
 
-        // Maintain bounds across the center movement of the last update.
-        let p = ctx.centers.p().to_vec();
-        let sin_p: Vec<f64> = p.iter().map(|&v| crate::bounds::sin_from_cos(v)).collect();
-        for i in 0..n {
-            let a = ctx.assign[i] as usize;
-            l[i] = update_lower_pre(l[i], p[a], sin_p[a]);
-            let row = &mut u[i * k..(i + 1) * k];
-            for (j, uij) in row.iter_mut().enumerate() {
-                *uij = update_upper_pre(*uij, p[j], sin_p[j]);
-            }
-        }
-
         // Center–center half-angle bounds for the current centers.
         iter.sims_center_center += cb.recompute(ctx.centers.centers());
 
-        let mut moves = 0u64;
-        for i in 0..n {
-            let mut a = ctx.assign[i] as usize;
-            // Whole-loop test: no other center can beat l(i).
-            if l[i] >= cb.s(a) {
-                iter.loop_skips += 1;
-                continue;
-            }
-            let mut tight = false;
-            for j in 0..k {
-                if j == a {
-                    continue;
-                }
-                let uij = u[i * k + j];
-                if uij <= l[i] || cb.cc(a, j) <= l[i] {
-                    iter.bound_skips += 1;
-                    continue;
-                }
-                if !tight {
-                    // First failure: make l(i) exact and re-test.
-                    l[i] = ctx.similarity(i, a, &mut iter);
-                    tight = true;
-                    if uij <= l[i] || cb.cc(a, j) <= l[i] {
-                        iter.bound_skips += 1;
+        let outs = {
+            let view = SimView { data: ctx.data, centers: &ctx.centers, k };
+            // Movement self-similarities of the last center update.
+            let p = ctx.centers.p();
+            let sin_p: Vec<f64> = p.iter().map(|&v| crate::bounds::sin_from_cos(v)).collect();
+            let sin_p = &sin_p;
+            let cb = &cb;
+            let works = bound_works(&ctx.plan, &mut ctx.assign, &mut l, 1, &mut u, k);
+            ctx.pool.run(works, |_, (range, assign, l, u)| {
+                let mut out = ShardOut::default();
+                for (li, i) in range.enumerate() {
+                    let mut a = assign[li] as usize;
+                    // Maintain bounds across the last center movement.
+                    l[li] = update_lower_pre(l[li], p[a], sin_p[a]);
+                    {
+                        let urow = &mut u[li * k..(li + 1) * k];
+                        for (j, uij) in urow.iter_mut().enumerate() {
+                            *uij = update_upper_pre(*uij, p[j], sin_p[j]);
+                        }
+                    }
+                    // Whole-loop test: no other center can beat l(i).
+                    if l[li] >= cb.s(a) {
+                        out.iter.loop_skips += 1;
                         continue;
                     }
+                    let mut tight = false;
+                    for j in 0..k {
+                        if j == a {
+                            continue;
+                        }
+                        let uij = u[li * k + j];
+                        if uij <= l[li] || cb.cc(a, j) <= l[li] {
+                            out.iter.bound_skips += 1;
+                            continue;
+                        }
+                        if !tight {
+                            // First failure: make l(i) exact and re-test.
+                            l[li] = view.similarity(i, a, &mut out.iter);
+                            tight = true;
+                            if uij <= l[li] || cb.cc(a, j) <= l[li] {
+                                out.iter.bound_skips += 1;
+                                continue;
+                            }
+                        }
+                        // Compute the exact similarity to the candidate
+                        // center.
+                        let s = view.similarity(i, j, &mut out.iter);
+                        u[li * k + j] = s;
+                        if s > l[li] {
+                            // Reassign: the old exact l(i) becomes a valid
+                            // upper bound for the old center.
+                            u[li * k + a] = l[li];
+                            assign[li] = j as u32;
+                            out.moves.push(Move { i: i as u32, from: a as u32, to: j as u32 });
+                            out.iter.reassignments += 1;
+                            a = j;
+                            l[li] = s;
+                        }
+                    }
                 }
-                // Compute the exact similarity to the candidate center.
-                let s = ctx.similarity(i, j, &mut iter);
-                u[i * k + j] = s;
-                if s > l[i] {
-                    // Reassign: the old exact l(i) becomes a valid upper
-                    // bound for the old center.
-                    u[i * k + a] = l[i];
-                    ctx.centers.apply_move(ctx.data.row(i), a, j);
-                    a = j;
-                    ctx.assign[i] = j as u32;
-                    l[i] = s;
-                    moves += 1;
-                }
-            }
-        }
+                out
+            })
+        };
+        ctx.merge_shards(outs, &mut iter);
 
-        iter.reassignments = moves;
-        if moves == 0 {
+        if iter.reassignments == 0 {
             iter.wall_ms = sw.ms();
             ctx.stats.iters.push(iter);
             return true;

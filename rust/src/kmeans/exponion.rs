@@ -17,9 +17,11 @@
 //!
 //! Cost: the `O(k²)` center–center similarities per iteration (like full
 //! Elkan/Hamerly) plus `O(k² log k)` sorting — traded against a much
-//! smaller scan set than Hamerly's full re-scan.
+//! smaller scan set than Hamerly's full re-scan. The neighbor lists are
+//! rebuilt serially from the frozen centers; the per-point annulus scans
+//! run on the sharded executor (see [`crate::kmeans`]).
 
-use super::{Ctx, IterStats, KMeansConfig};
+use super::{bound_states, bound_works, Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
 use crate::bounds::hamerly_bound::{update_eq9_pre, update_min_p_guarded, update_safe};
 use crate::bounds::{sim_upper, update_lower};
 use crate::util::timer::Stopwatch;
@@ -30,10 +32,13 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
     let mut l = vec![0.0f64; n];
     let mut u = vec![0.0f64; n];
 
-    ctx.initial_assignment(false, |i, _bj, best, second, _| {
-        l[i] = best;
-        u[i] = if k > 1 { second } else { -1.0 };
-    });
+    {
+        let states = bound_states(&ctx.plan, &mut l, 1, &mut u, 1);
+        ctx.initial_assignment(false, states, |(l, u), li, _bj, best, second, _| {
+            l[li] = best;
+            u[li] = second;
+        });
+    }
     ctx.stats.bound_bytes =
         2 * n * std::mem::size_of::<f64>() + k * (k - 1) * std::mem::size_of::<(f64, u32)>();
 
@@ -47,26 +52,16 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
         let sw = Stopwatch::start();
         let mut iter = IterStats::default();
 
-        // Maintain bounds across the last center movement (same machinery
-        // as Hamerly §5.3).
-        let p = ctx.centers.p();
-        let ex = ctx.centers.p_extremes();
-        for a in 0..k {
-            let pm = if k > 1 { ex.min_excluding(a) } else { 1.0 };
-            p_min_ex[a] = pm;
-            p_max_ex[a] = if k > 1 { ex.max_excluding(a) } else { 1.0 };
-            one_minus_pmin_sq[a] = (1.0 - pm * pm).max(0.0);
-        }
-        for i in 0..n {
-            let a = ctx.assign[i] as usize;
-            l[i] = update_lower(l[i], p[a]);
-            u[i] = if cfg.tight_hamerly_bound {
-                update_min_p_guarded(u[i], p_min_ex[a])
-            } else if u[i] >= 0.0 && p_min_ex[a] >= 0.0 {
-                update_eq9_pre(u[i], one_minus_pmin_sq[a])
-            } else {
-                update_safe(u[i], p_min_ex[a], p_max_ex[a])
-            };
+        // Maintain-bound inputs across the last center movement (same
+        // machinery as Hamerly §5.3).
+        {
+            let ex = ctx.centers.p_extremes();
+            for a in 0..k {
+                let pm = if k > 1 { ex.min_excluding(a) } else { 1.0 };
+                p_min_ex[a] = pm;
+                p_max_ex[a] = if k > 1 { ex.max_excluding(a) } else { 1.0 };
+                one_minus_pmin_sq[a] = (1.0 - pm * pm).max(0.0);
+            }
         }
 
         // Rebuild the sorted neighbor lists for the current centers.
@@ -85,67 +80,92 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
             list.sort_unstable_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
         }
 
-        let mut moves = 0u64;
-        for i in 0..n {
-            let a = ctx.assign[i] as usize;
-            if l[i] >= u[i] {
-                iter.bound_skips += 1;
-                continue;
-            }
-            l[i] = ctx.similarity(i, a, &mut iter);
-            if l[i] >= u[i] {
-                iter.bound_skips += 1;
-                continue;
-            }
-            // Scan the annulus: neighbors of a with sim > 2l²−1.
-            let threshold = 2.0 * l[i] * l[i] - 1.0;
-            let row = ctx.data.row(i);
-            let mut m1 = f64::MIN;
-            let mut m2 = f64::MIN;
-            let mut jm = a;
-            let mut outside = -1.0f64; // sim(ca, c_first-unscanned)
-            let mut scanned_all = true;
-            for &(s_aj, j) in &neighbors[a] {
-                // Only prune by the annulus when l ≥ 0 (the double-angle
-                // threshold needs 2θ ≤ 2π guarded by cos monotonicity;
-                // for l < 0 scan everything — rare and still exact).
-                if l[i] >= 0.0 && s_aj <= threshold {
-                    outside = s_aj;
-                    scanned_all = false;
-                    break;
+        let outs = {
+            let view = SimView { data: ctx.data, centers: &ctx.centers, k };
+            let p = ctx.centers.p();
+            let tight = cfg.tight_hamerly_bound;
+            let neighbors = &neighbors;
+            let p_min_ex = &p_min_ex;
+            let p_max_ex = &p_max_ex;
+            let one_minus_pmin_sq = &one_minus_pmin_sq;
+            let works = bound_works(&ctx.plan, &mut ctx.assign, &mut l, 1, &mut u, 1);
+            ctx.pool.run(works, |_, (range, assign, l, u)| {
+                let mut out = ShardOut::default();
+                for (li, i) in range.enumerate() {
+                    let a = assign[li] as usize;
+                    // Maintain bounds across the last center movement.
+                    l[li] = update_lower(l[li], p[a]);
+                    u[li] = if tight {
+                        update_min_p_guarded(u[li], p_min_ex[a])
+                    } else if u[li] >= 0.0 && p_min_ex[a] >= 0.0 {
+                        update_eq9_pre(u[li], one_minus_pmin_sq[a])
+                    } else {
+                        update_safe(u[li], p_min_ex[a], p_max_ex[a])
+                    };
+                    if l[li] >= u[li] {
+                        out.iter.bound_skips += 1;
+                        continue;
+                    }
+                    l[li] = view.similarity(i, a, &mut out.iter);
+                    if l[li] >= u[li] {
+                        out.iter.bound_skips += 1;
+                        continue;
+                    }
+                    // Scan the annulus: neighbors of a with sim > 2l²−1.
+                    let threshold = 2.0 * l[li] * l[li] - 1.0;
+                    let row = view.data.row(i);
+                    let mut m1 = f64::MIN;
+                    let mut m2 = f64::MIN;
+                    let mut jm = a;
+                    let mut outside = -1.0f64; // sim(ca, c_first-unscanned)
+                    let mut scanned_all = true;
+                    for &(s_aj, j) in &neighbors[a] {
+                        // Only prune by the annulus when l ≥ 0 (the
+                        // double-angle threshold needs 2θ ≤ 2π guarded by
+                        // cos monotonicity; for l < 0 scan everything —
+                        // rare and still exact).
+                        if l[li] >= 0.0 && s_aj <= threshold {
+                            outside = s_aj;
+                            scanned_all = false;
+                            break;
+                        }
+                        let s = row.dot_dense(view.centers.center(j as usize));
+                        out.iter.sims_point_center += 1;
+                        if s > m1 {
+                            m2 = m1;
+                            m1 = s;
+                            jm = j as usize;
+                        } else if s > m2 {
+                            m2 = s;
+                        }
+                    }
+                    // Upper bound for everything outside the scanned
+                    // prefix.
+                    let outside_bound = if scanned_all {
+                        f64::MIN
+                    } else {
+                        sim_upper(outside, l[li])
+                    };
+                    if m1 > l[li] {
+                        // Reassign. Others now include the old center
+                        // (tight l_old) and the unscanned tail
+                        // (≤ outside_bound).
+                        let l_old = l[li];
+                        assign[li] = jm as u32;
+                        out.moves.push(Move { i: i as u32, from: a as u32, to: jm as u32 });
+                        out.iter.reassignments += 1;
+                        u[li] = m2.max(l_old).max(outside_bound).max(-1.0);
+                        l[li] = m1;
+                    } else {
+                        u[li] = m1.max(outside_bound).max(-1.0);
+                    }
                 }
-                let s = row.dot_dense(ctx.centers.center(j as usize));
-                iter.sims_point_center += 1;
-                if s > m1 {
-                    m2 = m1;
-                    m1 = s;
-                    jm = j as usize;
-                } else if s > m2 {
-                    m2 = s;
-                }
-            }
-            // Upper bound for everything outside the scanned prefix.
-            let outside_bound = if scanned_all {
-                f64::MIN
-            } else {
-                sim_upper(outside, l[i])
-            };
-            if m1 > l[i] {
-                // Reassign. Others now include the old center (tight l_old)
-                // and the unscanned tail (≤ outside_bound).
-                let l_old = l[i];
-                ctx.centers.apply_move(row, a, jm);
-                ctx.assign[i] = jm as u32;
-                u[i] = m2.max(l_old).max(outside_bound).max(-1.0);
-                l[i] = m1;
-                moves += 1;
-            } else {
-                u[i] = m1.max(outside_bound).max(-1.0);
-            }
-        }
+                out
+            })
+        };
+        ctx.merge_shards(outs, &mut iter);
 
-        iter.reassignments = moves;
-        if moves == 0 {
+        if iter.reassignments == 0 {
             iter.wall_ms = sw.ms();
             ctx.stats.iters.push(iter);
             return true;

@@ -8,8 +8,12 @@
 //! falling back to the provably safe interval bound
 //! [`crate::bounds::hamerly_bound::update_safe`] outside Eq. 9's validity
 //! regime (`u < 0` or `p' < 0`, possible with non-TF-IDF data).
+//!
+//! Bound maintenance and the assignment scan are fused into one sharded
+//! per-point pass: both depend only on the point's own state and the
+//! frozen centers (see [`crate::kmeans`]'s parallel-execution docs).
 
-use super::{Ctx, IterStats, KMeansConfig};
+use super::{bound_states, bound_works, Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
 use crate::bounds::cc::nearest_center_bounds;
 use crate::bounds::hamerly_bound::{update_eq9_pre, update_min_p_guarded, update_safe};
 use crate::bounds::update_lower;
@@ -23,10 +27,13 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_>, cfg: &KMeansConfig, use_s_test: bool) 
     let mut l = vec![0.0f64; n];
     let mut u = vec![0.0f64; n];
 
-    ctx.initial_assignment(false, |i, _bj, best, second, _| {
-        l[i] = best;
-        u[i] = if k > 1 { second } else { -1.0 };
-    });
+    {
+        let states = bound_states(&ctx.plan, &mut l, 1, &mut u, 1);
+        ctx.initial_assignment(false, states, |(l, u), li, _bj, best, second, _| {
+            l[li] = best;
+            u[li] = second;
+        });
+    }
     ctx.stats.bound_bytes = 2 * n * std::mem::size_of::<f64>();
 
     // Per-cluster movement extremes for the single-bound update.
@@ -34,34 +41,20 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_>, cfg: &KMeansConfig, use_s_test: bool) 
     let mut p_max_ex = vec![0.0f64; k];
     let mut one_minus_pmin_sq = vec![0.0f64; k];
     let mut s = Vec::new();
-    let mut scan = vec![0.0f64; k];
 
     for _ in 0..cfg.max_iter {
         let sw = Stopwatch::start();
         let mut iter = IterStats::default();
 
-        // Maintain bounds across the last center movement.
-        let p = ctx.centers.p();
-        let ex = ctx.centers.p_extremes();
-        for a in 0..k {
-            let pm = if k > 1 { ex.min_excluding(a) } else { 1.0 };
-            let px = if k > 1 { ex.max_excluding(a) } else { 1.0 };
-            p_min_ex[a] = pm;
-            p_max_ex[a] = px;
-            one_minus_pmin_sq[a] = (1.0 - pm * pm).max(0.0);
-        }
-        for i in 0..n {
-            let a = ctx.assign[i] as usize;
-            l[i] = update_lower(l[i], p[a]);
-            u[i] = if cfg.tight_hamerly_bound {
-                // Beyond-paper: guarded min-p — valid for all inputs and
-                // the tightest possible single bound.
-                update_min_p_guarded(u[i], p_min_ex[a])
-            } else if u[i] >= 0.0 && p_min_ex[a] >= 0.0 {
-                update_eq9_pre(u[i], one_minus_pmin_sq[a])
-            } else {
-                update_safe(u[i], p_min_ex[a], p_max_ex[a])
-            };
+        {
+            let ex = ctx.centers.p_extremes();
+            for a in 0..k {
+                let pm = if k > 1 { ex.min_excluding(a) } else { 1.0 };
+                let px = if k > 1 { ex.max_excluding(a) } else { 1.0 };
+                p_min_ex[a] = pm;
+                p_max_ex[a] = px;
+                one_minus_pmin_sq[a] = (1.0 - pm * pm).max(0.0);
+            }
         }
 
         // Nearest-other-center half-angle bounds (full variant only).
@@ -69,59 +62,85 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_>, cfg: &KMeansConfig, use_s_test: bool) 
             iter.sims_center_center += nearest_center_bounds(ctx.centers.centers(), &mut s);
         }
 
-        let mut moves = 0u64;
-        for i in 0..n {
-            let a = ctx.assign[i] as usize;
-            if use_s_test && l[i] >= s[a] {
-                iter.loop_skips += 1;
-                continue;
-            }
-            if l[i] >= u[i] {
-                iter.bound_skips += 1;
-                continue;
-            }
-            // Tighten l(i) and re-test before the expensive full scan.
-            l[i] = ctx.similarity(i, a, &mut iter);
-            if l[i] >= u[i] || (use_s_test && l[i] >= s[a]) {
-                iter.bound_skips += 1;
-                continue;
-            }
-            // Bounds failed: recompute similarities to all other centers
-            // (transposed-centers fast path; the a-th entry is ignored in
-            // the reduction).
-            let row = ctx.data.row(i);
-            ctx.centers.sims_all(row, &mut scan);
-            let mut m1 = f64::MIN;
-            let mut m2 = f64::MIN;
-            let mut jm = a;
-            for (j, &sj) in scan.iter().enumerate() {
-                if j == a {
-                    continue;
+        let outs = {
+            let view = SimView { data: ctx.data, centers: &ctx.centers, k };
+            let p = ctx.centers.p();
+            let tight = cfg.tight_hamerly_bound;
+            let s = &s;
+            let p_min_ex = &p_min_ex;
+            let p_max_ex = &p_max_ex;
+            let one_minus_pmin_sq = &one_minus_pmin_sq;
+            let works = bound_works(&ctx.plan, &mut ctx.assign, &mut l, 1, &mut u, 1);
+            ctx.pool.run(works, |_, (range, assign, l, u)| {
+                let mut out = ShardOut::default();
+                let mut scan = vec![0.0f64; k];
+                for (li, i) in range.enumerate() {
+                    let a = assign[li] as usize;
+                    // Maintain bounds across the last center movement.
+                    l[li] = update_lower(l[li], p[a]);
+                    u[li] = if tight {
+                        // Beyond-paper: guarded min-p — valid for all
+                        // inputs and the tightest possible single bound.
+                        update_min_p_guarded(u[li], p_min_ex[a])
+                    } else if u[li] >= 0.0 && p_min_ex[a] >= 0.0 {
+                        update_eq9_pre(u[li], one_minus_pmin_sq[a])
+                    } else {
+                        update_safe(u[li], p_min_ex[a], p_max_ex[a])
+                    };
+                    if use_s_test && l[li] >= s[a] {
+                        out.iter.loop_skips += 1;
+                        continue;
+                    }
+                    if l[li] >= u[li] {
+                        out.iter.bound_skips += 1;
+                        continue;
+                    }
+                    // Tighten l(i) and re-test before the expensive full
+                    // scan.
+                    l[li] = view.similarity(i, a, &mut out.iter);
+                    if l[li] >= u[li] || (use_s_test && l[li] >= s[a]) {
+                        out.iter.bound_skips += 1;
+                        continue;
+                    }
+                    // Bounds failed: recompute similarities to all other
+                    // centers (transposed-centers fast path; the a-th entry
+                    // is ignored in the reduction).
+                    let row = view.data.row(i);
+                    view.centers.sims_all(row, &mut scan);
+                    let mut m1 = f64::MIN;
+                    let mut m2 = f64::MIN;
+                    let mut jm = a;
+                    for (j, &sj) in scan.iter().enumerate() {
+                        if j == a {
+                            continue;
+                        }
+                        if sj > m1 {
+                            m2 = m1;
+                            m1 = sj;
+                            jm = j;
+                        } else if sj > m2 {
+                            m2 = sj;
+                        }
+                    }
+                    out.iter.sims_point_center += (k - 1) as u64;
+                    if m1 > l[li] {
+                        // Reassign; the old center becomes the best "other"
+                        // unless the runner-up among the others beats it.
+                        assign[li] = jm as u32;
+                        out.moves.push(Move { i: i as u32, from: a as u32, to: jm as u32 });
+                        out.iter.reassignments += 1;
+                        u[li] = l[li].max(m2);
+                        l[li] = m1;
+                    } else {
+                        u[li] = m1;
+                    }
                 }
-                if sj > m1 {
-                    m2 = m1;
-                    m1 = sj;
-                    jm = j;
-                } else if sj > m2 {
-                    m2 = sj;
-                }
-            }
-            iter.sims_point_center += (k - 1) as u64;
-            if m1 > l[i] {
-                // Reassign; the old center becomes the best "other" unless
-                // the runner-up among the others beats it.
-                ctx.centers.apply_move(row, a, jm);
-                ctx.assign[i] = jm as u32;
-                u[i] = l[i].max(m2);
-                l[i] = m1;
-                moves += 1;
-            } else {
-                u[i] = m1;
-            }
-        }
+                out
+            })
+        };
+        ctx.merge_shards(outs, &mut iter);
 
-        iter.reassignments = moves;
-        if moves == 0 {
+        if iter.reassignments == 0 {
             iter.wall_ms = sw.ms();
             ctx.stats.iters.push(iter);
             return true;

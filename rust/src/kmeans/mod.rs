@@ -18,6 +18,41 @@
 //! Every accelerated variant is **exact**: given the same initial centers it
 //! produces the same assignment sequence as [`Variant::Standard`] (this is
 //! asserted by the `exactness` integration tests).
+//!
+//! # Parallel execution
+//!
+//! The assignment phase of every variant runs on the sharded executor of
+//! [`crate::runtime::parallel`]: rows are split into contiguous shards
+//! ([`crate::runtime::parallel::Plan`], a pure function of the row count)
+//! and each shard owns its rows' mutable state — assignments, per-point
+//! bounds, scratch similarity rows, and an [`IterStats`] accumulator. The
+//! worker count comes from [`KMeansConfig::threads`] (`0` = all cores;
+//! `1`, the default, runs the identical code inline with no thread pool).
+//!
+//! **Shard-determinism contract.** Results are bit-for-bit identical for
+//! every `threads` setting, because nothing an iteration computes depends
+//! on shard scheduling:
+//!
+//! 1. Centers are *frozen* during a pass — similarities are pure functions
+//!    of the previous barrier's centers, so each point's decision is
+//!    independent of every other point's.
+//! 2. Center-sum maintenance is *deferred*: shards record [`Move`]s instead
+//!    of calling [`Centers::apply_move`], and the barrier replays them in
+//!    ascending point order — the exact floating-point sequence the serial
+//!    loop produces.
+//! 3. [`IterStats`] counters are per-shard integers summed at the barrier
+//!    (exact in any order), and the one floating-point reduction keyed on a
+//!    shard grid ([`Centers::rebuild_sharded`]) uses a grid derived from
+//!    the problem shape alone, never from the thread count.
+//!
+//! The `parallel_matches_serial` integration suite asserts the contract
+//! (bit-identical assignments and objectives) for all seven variants.
+//!
+//! ```no_run
+//! use sphkm::kmeans::{KMeansConfig, Variant};
+//! // Simplified Hamerly on 8 clusters, using every available core.
+//! let cfg = KMeansConfig::new(8).variant(Variant::SimplifiedHamerly).threads(0);
+//! ```
 
 pub mod centers;
 pub mod stats;
@@ -32,8 +67,10 @@ mod yinyang;
 
 use crate::data::Dataset;
 use crate::init::InitMethod;
+use crate::runtime::parallel::{split_mut, Plan, Pool};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use crate::util::timer::Stopwatch;
+use std::ops::Range;
 pub use centers::Centers;
 pub use stats::{IterStats, RunStats};
 
@@ -126,6 +163,11 @@ pub struct KMeansConfig {
     pub max_iter: usize,
     /// RNG seed for the seeding method.
     pub seed: u64,
+    /// Worker threads for the sharded assignment phase: `0` = all
+    /// available cores, `1` (default) = the exact serial path with no
+    /// thread pool. Results are bit-identical for every setting — see the
+    /// shard-determinism contract in the [module docs](crate::kmeans).
+    pub threads: usize,
     /// Number of center groups for [`Variant::Yinyang`]; defaults to
     /// `max(1, k/10)` as in Ding et al. (2015) when `None`.
     pub yinyang_groups: Option<usize>,
@@ -146,7 +188,8 @@ pub struct KMeansConfig {
 }
 
 impl KMeansConfig {
-    /// Config with defaults: Standard variant, uniform init, 200 iterations.
+    /// Config with defaults: Standard variant, uniform init, 200
+    /// iterations, single-threaded.
     pub fn new(k: usize) -> Self {
         Self {
             k,
@@ -154,6 +197,7 @@ impl KMeansConfig {
             init: InitMethod::Uniform,
             max_iter: 200,
             seed: 0,
+            threads: 1,
             yinyang_groups: None,
             fast_standard: true,
             tight_hamerly_bound: false,
@@ -194,6 +238,12 @@ impl KMeansConfig {
     /// Set the iteration cap.
     pub fn max_iter(mut self, m: usize) -> Self {
         self.max_iter = m;
+        self
+    }
+
+    /// Set the worker-thread count (see [`KMeansConfig::threads`]).
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = t;
         self
     }
 }
@@ -243,7 +293,7 @@ pub fn run_seeded(
     if let Some(m) = &init.sim_matrix {
         assert_eq!(m.len(), data.rows() * cfg.k, "sim matrix shape");
     }
-    let mut ctx = Ctx::new(data, init.centers);
+    let mut ctx = Ctx::new(data, init.centers, cfg.threads);
     ctx.preinit = init.sim_matrix;
     let converged = dispatch(&mut ctx, cfg);
     ctx.into_result(converged)
@@ -260,7 +310,7 @@ pub fn run_with_centers(
     assert_eq!(initial_centers.rows(), cfg.k, "initial centers vs k");
     assert_eq!(initial_centers.cols(), data.cols(), "center dimensionality");
     assert!(cfg.k >= 1, "need at least one cluster");
-    let mut ctx = Ctx::new(data, initial_centers);
+    let mut ctx = Ctx::new(data, initial_centers, cfg.threads);
     let converged = dispatch(&mut ctx, cfg);
     ctx.into_result(converged)
 }
@@ -281,7 +331,11 @@ fn dispatch(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
 /// they remain valid f64 bounds (f32 rounding + center renormalization).
 const PREINIT_MARGIN: f64 = 1e-5;
 
-/// `(argmax, max, second_max)` of a similarity row.
+/// `(argmax, max, second_max)` of a similarity row. With a single center
+/// (`k = 1`) there is no runner-up: the second-best is clamped to `-1.0`,
+/// the cosine floor, so bound initializers can consume it directly as a
+/// valid (vacuous) upper bound on "all other centers" instead of guarding
+/// against a `f64::MIN` sentinel.
 #[inline]
 pub(crate) fn top2(sims: &[f64]) -> (usize, f64, f64) {
     let mut best = f64::MIN;
@@ -296,34 +350,90 @@ pub(crate) fn top2(sims: &[f64]) -> (usize, f64, f64) {
             second = s;
         }
     }
-    (best_j, best, second)
+    (best_j, best, second.max(-1.0))
 }
 
-/// Shared mutable state threaded through every algorithm implementation.
-pub(crate) struct Ctx<'a> {
-    pub data: &'a CsrMatrix,
-    pub k: usize,
-    pub assign: Vec<u32>,
-    pub centers: Centers,
-    pub stats: RunStats,
-    /// Row-major N×k point-to-seed similarities from the seeding method
-    /// (§7 synergy); consumed by [`Ctx::initial_assignment`].
-    pub preinit: Option<Vec<f32>>,
+/// One deferred reassignment recorded by a shard during an assignment
+/// pass: point `i` left cluster `from` for cluster `to`. Replayed through
+/// [`Centers::apply_move`] at the barrier, in ascending point order, so
+/// the incrementally maintained center sums see the exact floating-point
+/// sequence the serial loop would have produced. Elkan-family scans can
+/// reassign one point several times within a pass; every hop is recorded.
+pub(crate) struct Move {
+    /// Row index of the point.
+    pub i: u32,
+    /// Cluster the point left.
+    pub from: u32,
+    /// Cluster the point joined.
+    pub to: u32,
 }
 
-impl<'a> Ctx<'a> {
-    fn new(data: &'a CsrMatrix, initial_centers: DenseMatrix) -> Self {
-        let k = initial_centers.rows();
-        Self {
-            data,
-            k,
-            assign: vec![0; data.rows()],
-            centers: Centers::from_initial(initial_centers),
-            stats: RunStats::default(),
-            preinit: None,
-        }
+/// Everything a shard produces during one assignment pass: its counter
+/// accumulator and its deferred reassignments (in processing order).
+#[derive(Default)]
+pub(crate) struct ShardOut {
+    pub iter: IterStats,
+    pub moves: Vec<Move>,
+}
+
+/// Work list for a sharded assignment pass of the bound-keeping variants:
+/// each shard's row range paired with its mutable slices of the assignment
+/// vector (width 1), a first bound buffer (`wa` entries per row — `l`),
+/// and a second one (`wb` entries per row — `u`/`u(i,j)`/`u(i,g)`).
+pub(crate) type BoundWorks<'w> = Vec<(Range<usize>, &'w mut [u32], &'w mut [f64], &'w mut [f64])>;
+
+/// Build the per-shard work list every bound-keeping variant feeds to
+/// [`Pool::run`]: the shard grid zipped with [`split_mut`] carvings of the
+/// assignment vector and the two bound buffers. Centralized so the
+/// slice/range alignment — which the determinism contract depends on —
+/// lives in exactly one place.
+pub(crate) fn bound_works<'w>(
+    plan: &Plan,
+    assign: &'w mut [u32],
+    a: &'w mut [f64],
+    wa: usize,
+    b: &'w mut [f64],
+    wb: usize,
+) -> BoundWorks<'w> {
+    let assign = split_mut(plan, 1, assign);
+    let sa = split_mut(plan, wa, a);
+    let sb = split_mut(plan, wb, b);
+    let mut works = Vec::with_capacity(plan.len());
+    for (((r, x), y), z) in plan.ranges().iter().cloned().zip(assign).zip(sa).zip(sb) {
+        works.push((r, x, y, z));
     }
+    works
+}
 
+/// Per-shard `(bounds_a, bounds_b)` state pairs for
+/// [`Ctx::initial_assignment`], carved with the same grid as
+/// [`bound_works`].
+pub(crate) fn bound_states<'w>(
+    plan: &Plan,
+    a: &'w mut [f64],
+    wa: usize,
+    b: &'w mut [f64],
+    wb: usize,
+) -> Vec<(&'w mut [f64], &'w mut [f64])> {
+    split_mut(plan, wa, a)
+        .into_iter()
+        .zip(split_mut(plan, wb, b))
+        .collect()
+}
+
+/// Read-only similarity engine shared by every shard of one assignment
+/// pass: the data matrix, the centers **frozen at the last barrier**, and
+/// `k`. Similarities computed through the view are pure functions of those
+/// centers — they cannot observe other shards' work, which is what makes
+/// the row shards independent.
+#[derive(Clone, Copy)]
+pub(crate) struct SimView<'a> {
+    pub data: &'a CsrMatrix,
+    pub centers: &'a Centers,
+    pub k: usize,
+}
+
+impl SimView<'_> {
     /// Compute similarities of row `i` to **all** centers into `scratch`
     /// (length k) via the transposed-centers fast path; returns
     /// `(argmax, best, second_best)`. Charges `k` similarity computations.
@@ -340,7 +450,7 @@ impl<'a> Ctx<'a> {
         top2(scratch)
     }
 
-    /// Like [`Ctx::similarities_full`] but with per-center gather dots —
+    /// Like [`SimView::similarities_full`] but with per-center gather dots —
     /// the paper-faithful cost model (identical per-similarity work to the
     /// pruned variants' selective computations).
     #[inline]
@@ -364,66 +474,152 @@ impl<'a> Ctx<'a> {
         iter.sims_point_center += 1;
         self.data.row(i).dot_dense(self.centers.center(j))
     }
+}
+
+/// Shared mutable state threaded through every algorithm implementation.
+pub(crate) struct Ctx<'a> {
+    pub data: &'a CsrMatrix,
+    pub k: usize,
+    pub assign: Vec<u32>,
+    pub centers: Centers,
+    pub stats: RunStats,
+    /// Row-shard grid for the assignment phase (a function of the row
+    /// count only — see the module docs).
+    pub plan: Plan,
+    /// Worker pool executing the shards.
+    pub pool: Pool,
+    /// Row-major N×k point-to-seed similarities from the seeding method
+    /// (§7 synergy); consumed by [`Ctx::initial_assignment`].
+    pub preinit: Option<Vec<f32>>,
+}
+
+impl<'a> Ctx<'a> {
+    fn new(data: &'a CsrMatrix, initial_centers: DenseMatrix, threads: usize) -> Self {
+        let k = initial_centers.rows();
+        let plan = Plan::for_rows(data.rows());
+        // A single-shard plan can never use more than one worker — skip
+        // thread-pool construction entirely (runs on tiny inputs would
+        // otherwise spawn threads that do no work).
+        let threads = if plan.len() <= 1 { 1 } else { threads };
+        Self {
+            data,
+            k,
+            assign: vec![0; data.rows()],
+            centers: Centers::from_initial(initial_centers),
+            stats: RunStats::default(),
+            plan,
+            pool: Pool::new(threads),
+            preinit: None,
+        }
+    }
 
     /// The initial full assignment pass shared by all variants: assigns
-    /// every point to its most similar initial center, records an
-    /// iteration-0 stats entry, and rebuilds the center sums.
-    /// `on_point(i, best_j, best, second, sims_row)` lets each variant
-    /// capture whatever bound state it needs.
-    pub fn initial_assignment<F>(&mut self, want_sims_row: bool, mut on_point: F)
+    /// every point to its most similar initial center (one row shard per
+    /// worker), records an iteration-0 stats entry, and rebuilds the
+    /// center sums via the shard-partial path.
+    ///
+    /// `states` carries one mutable bound-capture state per shard of
+    /// [`Ctx::plan`] (build it with [`split_mut`]); for every point the
+    /// shard owns, `on_point(state, local_i, best_j, best, second, sims_row)`
+    /// lets the variant record whatever bound state it needs. `local_i`
+    /// indexes into the shard's slices; `sims_row` is only filled when
+    /// `want_sims_row` is set.
+    pub fn initial_assignment<S, F>(&mut self, want_sims_row: bool, states: Vec<S>, on_point: F)
     where
-        F: FnMut(usize, usize, f64, f64, &[f64]),
+        S: Send,
+        F: Fn(&mut S, usize, usize, f64, f64, &[f64]) + Sync + Send,
     {
+        assert_eq!(states.len(), self.plan.len(), "one state per shard");
         let sw = Stopwatch::start();
+        let k = self.k;
+        let pre = self.preinit.take();
         let mut iter = IterStats::default();
-        let mut sims_row = vec![0.0f64; self.k];
-        if let Some(pre) = self.preinit.take() {
-            // §7 synergy: bounds come from the seeding pass for free.
-            // Margins keep the f32 values valid as f64 bounds; l gets a
-            // downward margin, u values an upward one.
-            for i in 0..self.data.rows() {
-                let row = &pre[i * self.k..(i + 1) * self.k];
-                let mut best = f64::MIN;
-                let mut second = f64::MIN;
-                let mut bj = 0usize;
-                for (j, &s) in row.iter().enumerate() {
-                    let s = s as f64;
-                    if s > best {
-                        second = best;
-                        best = s;
-                        bj = j;
-                    } else if s > second {
-                        second = s;
-                    }
+        {
+            let view = SimView { data: self.data, centers: &self.centers, k };
+            let pre = pre.as_deref();
+            let mut works: Vec<(Range<usize>, &mut [u32], S)> =
+                Vec::with_capacity(self.plan.len());
+            {
+                let shards = split_mut(&self.plan, 1, &mut self.assign);
+                for ((r, a), s) in self.plan.ranges().iter().cloned().zip(shards).zip(states) {
+                    works.push((r, a, s));
                 }
-                if want_sims_row {
-                    for (o, &s) in sims_row.iter_mut().zip(row.iter()) {
-                        *o = s as f64 + PREINIT_MARGIN;
-                    }
-                }
-                self.assign[i] = bj as u32;
-                on_point(
-                    i,
-                    bj,
-                    best - PREINIT_MARGIN,
-                    second + PREINIT_MARGIN,
-                    &sims_row,
-                );
             }
-        } else {
-            for i in 0..self.data.rows() {
-                let (bj, b, s) = self.similarities_full(i, &mut iter, &mut sims_row);
-                self.assign[i] = bj as u32;
-                on_point(i, bj, b, s, &sims_row);
+            let outs = self.pool.run(works, |_, (range, assign, mut state)| {
+                let mut it = IterStats::default();
+                let mut sims_row = vec![0.0f64; k];
+                if let Some(pre) = pre {
+                    // §7 synergy: bounds come from the seeding pass for
+                    // free. Margins keep the f32 values valid as f64
+                    // bounds; l gets a downward margin, u values an upward
+                    // one.
+                    for (li, i) in range.enumerate() {
+                        let row = &pre[i * k..(i + 1) * k];
+                        let mut best = f64::MIN;
+                        let mut second = f64::MIN;
+                        let mut bj = 0usize;
+                        for (j, &s) in row.iter().enumerate() {
+                            let s = s as f64;
+                            if s > best {
+                                second = best;
+                                best = s;
+                                bj = j;
+                            } else if s > second {
+                                second = s;
+                            }
+                        }
+                        let second = second.max(-1.0);
+                        if want_sims_row {
+                            for (o, &s) in sims_row.iter_mut().zip(row.iter()) {
+                                *o = s as f64 + PREINIT_MARGIN;
+                            }
+                        }
+                        assign[li] = bj as u32;
+                        on_point(
+                            &mut state,
+                            li,
+                            bj,
+                            best - PREINIT_MARGIN,
+                            second + PREINIT_MARGIN,
+                            &sims_row,
+                        );
+                    }
+                } else {
+                    for (li, i) in range.enumerate() {
+                        let (bj, b, s) = view.similarities_full(i, &mut it, &mut sims_row);
+                        assign[li] = bj as u32;
+                        on_point(&mut state, li, bj, b, s, &sims_row);
+                    }
+                }
+                it
+            });
+            for o in &outs {
+                iter.absorb(o);
             }
         }
-        let _ = want_sims_row;
         iter.reassignments = self.data.rows() as u64;
         // Build sums for the initial assignment and move centers once.
-        self.centers.rebuild(self.data, &self.assign);
+        self.centers
+            .rebuild_sharded(self.data, &self.assign, &self.pool);
         iter.sims_center_center += self.centers.update();
         iter.wall_ms = sw.ms();
         self.stats.iters.push(iter);
+    }
+
+    /// Barrier after a sharded assignment pass: fold every shard's
+    /// counters into `iter` and replay the deferred reassignments in
+    /// ascending point order (shards are ascending and contiguous, and
+    /// each shard records its moves in processing order, so concatenation
+    /// *is* the serial order). After this returns, `iter.reassignments`
+    /// holds the pass's total move count.
+    pub(crate) fn merge_shards(&mut self, outs: Vec<ShardOut>, iter: &mut IterStats) {
+        for out in outs {
+            iter.absorb(&out.iter);
+            for mv in out.moves {
+                self.centers
+                    .apply_move(self.data.row(mv.i as usize), mv.from as usize, mv.to as usize);
+            }
+        }
     }
 
     /// Finalize: compute the objective and assemble the result.
@@ -483,10 +679,28 @@ mod tests {
         let cfg = KMeansConfig::new(7)
             .variant(Variant::Hamerly)
             .seed(9)
-            .max_iter(50);
+            .max_iter(50)
+            .threads(4);
         assert_eq!(cfg.k, 7);
         assert_eq!(cfg.variant, Variant::Hamerly);
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.max_iter, 50);
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(KMeansConfig::new(2).threads, 1, "serial by default");
+    }
+
+    #[test]
+    fn top2_clamps_missing_runner_up_to_cosine_floor() {
+        // k = 1: no runner-up exists; the second-best must be the cosine
+        // floor, not the f64::MIN sentinel.
+        let (j, best, second) = top2(&[0.25]);
+        assert_eq!(j, 0);
+        assert_eq!(best, 0.25);
+        assert_eq!(second, -1.0);
+        // k ≥ 2: real similarities (≥ −1) are unaffected by the clamp.
+        let (j, best, second) = top2(&[0.1, 0.9, -0.5]);
+        assert_eq!((j, best, second), (1, 0.9, 0.1));
+        let (_, _, second) = top2(&[-1.0, -1.0]);
+        assert_eq!(second, -1.0);
     }
 }

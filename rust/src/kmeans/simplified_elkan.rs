@@ -5,8 +5,11 @@
 //! all k bounds for every point. The paper finds this trade favorable on
 //! high-dimensional data (Fig. 2b) and unfavorable for large k on
 //! low-dimensional data (Fig. 1c/d).
+//!
+//! Bound maintenance and the bound scan are fused into one sharded
+//! per-point pass (see [`crate::kmeans`]'s parallel-execution docs).
 
-use super::{Ctx, IterStats, KMeansConfig};
+use super::{bound_states, bound_works, Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
 use crate::bounds::{update_lower_pre, update_upper_pre};
 use crate::util::timer::Stopwatch;
 
@@ -16,62 +19,71 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
     let mut l = vec![0.0f64; n];
     let mut u = vec![0.0f64; n * k];
 
-    ctx.initial_assignment(true, |i, _bj, best, _second, sims| {
-        l[i] = best;
-        u[i * k..(i + 1) * k].copy_from_slice(sims);
-    });
+    {
+        let states = bound_states(&ctx.plan, &mut l, 1, &mut u, k);
+        ctx.initial_assignment(true, states, |(l, u), li, _bj, best, _second, sims| {
+            l[li] = best;
+            u[li * k..(li + 1) * k].copy_from_slice(sims);
+        });
+    }
     ctx.stats.bound_bytes = (n + n * k) * std::mem::size_of::<f64>();
 
     for _ in 0..cfg.max_iter {
         let sw = Stopwatch::start();
         let mut iter = IterStats::default();
 
-        let p = ctx.centers.p().to_vec();
-        let sin_p: Vec<f64> = p.iter().map(|&v| crate::bounds::sin_from_cos(v)).collect();
-        for i in 0..n {
-            let a = ctx.assign[i] as usize;
-            l[i] = update_lower_pre(l[i], p[a], sin_p[a]);
-            let row = &mut u[i * k..(i + 1) * k];
-            for (j, uij) in row.iter_mut().enumerate() {
-                *uij = update_upper_pre(*uij, p[j], sin_p[j]);
-            }
-        }
-
-        let mut moves = 0u64;
-        for i in 0..n {
-            let mut a = ctx.assign[i] as usize;
-            let mut tight = false;
-            for j in 0..k {
-                if j == a {
-                    continue;
-                }
-                if u[i * k + j] <= l[i] {
-                    iter.bound_skips += 1;
-                    continue;
-                }
-                if !tight {
-                    l[i] = ctx.similarity(i, a, &mut iter);
-                    tight = true;
-                    if u[i * k + j] <= l[i] {
-                        iter.bound_skips += 1;
-                        continue;
+        let outs = {
+            let view = SimView { data: ctx.data, centers: &ctx.centers, k };
+            let p = ctx.centers.p();
+            let sin_p: Vec<f64> = p.iter().map(|&v| crate::bounds::sin_from_cos(v)).collect();
+            let sin_p = &sin_p;
+            let works = bound_works(&ctx.plan, &mut ctx.assign, &mut l, 1, &mut u, k);
+            ctx.pool.run(works, |_, (range, assign, l, u)| {
+                let mut out = ShardOut::default();
+                for (li, i) in range.enumerate() {
+                    let mut a = assign[li] as usize;
+                    l[li] = update_lower_pre(l[li], p[a], sin_p[a]);
+                    {
+                        let urow = &mut u[li * k..(li + 1) * k];
+                        for (j, uij) in urow.iter_mut().enumerate() {
+                            *uij = update_upper_pre(*uij, p[j], sin_p[j]);
+                        }
+                    }
+                    let mut tight = false;
+                    for j in 0..k {
+                        if j == a {
+                            continue;
+                        }
+                        if u[li * k + j] <= l[li] {
+                            out.iter.bound_skips += 1;
+                            continue;
+                        }
+                        if !tight {
+                            l[li] = view.similarity(i, a, &mut out.iter);
+                            tight = true;
+                            if u[li * k + j] <= l[li] {
+                                out.iter.bound_skips += 1;
+                                continue;
+                            }
+                        }
+                        let s = view.similarity(i, j, &mut out.iter);
+                        u[li * k + j] = s;
+                        if s > l[li] {
+                            u[li * k + a] = l[li];
+                            assign[li] = j as u32;
+                            out.moves.push(Move { i: i as u32, from: a as u32, to: j as u32 });
+                            out.iter.reassignments += 1;
+                            a = j;
+                            l[li] = s;
+                        }
                     }
                 }
-                let s = ctx.similarity(i, j, &mut iter);
-                u[i * k + j] = s;
-                if s > l[i] {
-                    u[i * k + a] = l[i];
-                    ctx.centers.apply_move(ctx.data.row(i), a, j);
-                    a = j;
-                    ctx.assign[i] = j as u32;
-                    l[i] = s;
-                    moves += 1;
-                }
-            }
-        }
+                out
+            })
+        };
+        ctx.merge_shards(outs, &mut iter);
 
-        iter.reassignments = moves;
-        if moves == 0 {
+        if iter.reassignments == 0 {
             iter.wall_ms = sw.ms();
             ctx.stats.iters.push(iter);
             return true;

@@ -2,7 +2,8 @@
 //! scheme with the `l(i) ≥ s(a(i))` nearest-other-center test removed —
 //! avoiding the `O(k²)` center–center similarity computations per iteration,
 //! for the same reasons as Simplified Elkan. The paper finds this "a
-//! reasonable default choice" across data set shapes (§6).
+//! reasonable default choice" across data set shapes (§6). Runs on the
+//! same sharded per-point pass as full Hamerly.
 
 use super::{Ctx, KMeansConfig};
 

@@ -2,35 +2,61 @@
 //! paper's §5 implementation optimizations: unit-normalized data (dot
 //! product = cosine), sparse×dense row–center dots, cached unnormalized
 //! sums updated incrementally, and sums scaled (not averaged) to unit
-//! length. No pruning — every iteration computes all `N·k` similarities.
+//! length. No pruning — every iteration computes all `N·k` similarities,
+//! sharded across the worker pool (see the module docs of
+//! [`crate::kmeans`] for the determinism contract).
 
-use super::{Ctx, IterStats, KMeansConfig};
+use super::{Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
+use crate::runtime::parallel::split_mut;
 use crate::util::timer::Stopwatch;
+use std::ops::Range;
 
 pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
     // Iteration 0: full assignment to the initial centers.
-    ctx.initial_assignment(false, |_, _, _, _, _| {});
+    let shards = ctx.plan.len();
+    ctx.initial_assignment(false, vec![(); shards], |_, _, _, _, _, _| {});
 
-    let mut scratch = vec![0.0f64; ctx.k];
+    let k = ctx.k;
     for _ in 0..cfg.max_iter {
         let sw = Stopwatch::start();
         let mut iter = IterStats::default();
-        let mut moves = 0u64;
-        for i in 0..ctx.data.rows() {
-            let (best_j, _, _) = if cfg.fast_standard {
-                ctx.similarities_full(i, &mut iter, &mut scratch)
-            } else {
-                ctx.similarities_full_gather(i, &mut iter, &mut scratch)
-            };
-            let old = ctx.assign[i] as usize;
-            if best_j != old {
-                ctx.assign[i] = best_j as u32;
-                ctx.centers.apply_move(ctx.data.row(i), old, best_j);
-                moves += 1;
+
+        let outs = {
+            let view = SimView { data: ctx.data, centers: &ctx.centers, k };
+            let fast = cfg.fast_standard;
+            let mut works: Vec<(Range<usize>, &mut [u32])> = Vec::with_capacity(shards);
+            {
+                let assign = split_mut(&ctx.plan, 1, &mut ctx.assign);
+                for (r, a) in ctx.plan.ranges().iter().cloned().zip(assign) {
+                    works.push((r, a));
+                }
             }
-        }
-        iter.reassignments = moves;
-        if moves == 0 {
+            ctx.pool.run(works, |_, (range, assign)| {
+                let mut out = ShardOut::default();
+                let mut scratch = vec![0.0f64; k];
+                for (li, i) in range.enumerate() {
+                    let (best_j, _, _) = if fast {
+                        view.similarities_full(i, &mut out.iter, &mut scratch)
+                    } else {
+                        view.similarities_full_gather(i, &mut out.iter, &mut scratch)
+                    };
+                    let old = assign[li] as usize;
+                    if best_j != old {
+                        assign[li] = best_j as u32;
+                        out.moves.push(Move {
+                            i: i as u32,
+                            from: old as u32,
+                            to: best_j as u32,
+                        });
+                        out.iter.reassignments += 1;
+                    }
+                }
+                out
+            })
+        };
+        ctx.merge_shards(outs, &mut iter);
+
+        if iter.reassignments == 0 {
             iter.wall_ms = sw.ms();
             ctx.stats.iters.push(iter);
             return true;

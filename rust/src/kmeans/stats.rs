@@ -25,6 +25,20 @@ impl IterStats {
     pub fn sims_total(&self) -> u64 {
         self.sims_point_center + self.sims_center_center
     }
+
+    /// Fold another (shard-local) counter set into this one. All counters
+    /// are exact integer sums, so the merged totals are identical for
+    /// every shard grid and thread count. `wall_ms` is deliberately **not**
+    /// summed: shard timings overlap under parallel execution, so the
+    /// caller measures the iteration wall time around the whole barrier
+    /// instead.
+    pub fn absorb(&mut self, shard: &IterStats) {
+        self.sims_point_center += shard.sims_point_center;
+        self.sims_center_center += shard.sims_center_center;
+        self.reassignments += shard.reassignments;
+        self.loop_skips += shard.loop_skips;
+        self.bound_skips += shard.bound_skips;
+    }
 }
 
 /// Full instrumentation of one clustering run.
@@ -108,5 +122,41 @@ mod tests {
         let cm = s.cumulative_ms();
         assert!((cm[1] - 1.5).abs() < 1e-12);
         assert_eq!(s.iterations(), 2);
+    }
+
+    #[test]
+    fn shard_merge_equals_serial_counts() {
+        // Property: folding any split of per-point counter increments into
+        // per-shard accumulators and absorbing them in shard order yields
+        // exactly the counters a single serial accumulator would hold.
+        crate::util::prop::forall(200, 0x57A7, |g| {
+            let shards = g.usize_in(1, 9);
+            let mut serial = IterStats::default();
+            let mut merged = IterStats::default();
+            for _ in 0..shards {
+                let part = IterStats {
+                    sims_point_center: g.usize_in(0, 10_000) as u64,
+                    sims_center_center: g.usize_in(0, 1_000) as u64,
+                    reassignments: g.usize_in(0, 500) as u64,
+                    loop_skips: g.usize_in(0, 500) as u64,
+                    bound_skips: g.usize_in(0, 500) as u64,
+                    wall_ms: g.f64_in(0.0, 5.0),
+                };
+                serial.sims_point_center += part.sims_point_center;
+                serial.sims_center_center += part.sims_center_center;
+                serial.reassignments += part.reassignments;
+                serial.loop_skips += part.loop_skips;
+                serial.bound_skips += part.bound_skips;
+                merged.absorb(&part);
+            }
+            assert_eq!(merged.sims_point_center, serial.sims_point_center);
+            assert_eq!(merged.sims_center_center, serial.sims_center_center);
+            assert_eq!(merged.reassignments, serial.reassignments);
+            assert_eq!(merged.loop_skips, serial.loop_skips);
+            assert_eq!(merged.bound_skips, serial.bound_skips);
+            assert_eq!(merged.sims_total(), serial.sims_total());
+            // Overlapping shard wall clocks must not leak into the merge.
+            assert_eq!(merged.wall_ms, 0.0);
+        });
     }
 }

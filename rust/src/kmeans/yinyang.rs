@@ -9,8 +9,12 @@
 //! Grouping: a lightweight spherical k-means over the *initial centers*
 //! (G groups, a few refinement rounds) — the grouping only affects pruning
 //! power, never correctness, which the exactness tests assert.
+//!
+//! Group-bound maintenance and the group scan are fused into one sharded
+//! per-point pass (see [`crate::kmeans`]'s parallel-execution docs); the
+//! per-group movement extremes are computed serially (`O(k)`) before it.
 
-use super::{Ctx, IterStats, KMeansConfig};
+use super::{bound_states, bound_works, Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
 use crate::bounds::hamerly_bound::{update_eq9_pre, update_min_p_guarded, update_safe};
 use crate::bounds::update_lower;
 use crate::sparse::DenseMatrix;
@@ -90,150 +94,171 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
     let mut l = vec![0.0f64; n];
     let mut ug = vec![0.0f64; n * ng]; // u(i, g)
 
-    ctx.initial_assignment(true, |i, bj, best, _second, sims| {
-        l[i] = best;
-        let row = &mut ug[i * ng..(i + 1) * ng];
-        for (gi, members) in groups.iter().enumerate() {
-            let mut m = -1.0f64;
-            for &j in members {
-                if j != bj && sims[j] > m {
-                    m = sims[j];
+    {
+        let groups = &groups;
+        let states = bound_states(&ctx.plan, &mut l, 1, &mut ug, ng);
+        ctx.initial_assignment(true, states, |(l, ug), li, bj, best, _second, sims| {
+            l[li] = best;
+            let row = &mut ug[li * ng..(li + 1) * ng];
+            for (gi, members) in groups.iter().enumerate() {
+                let mut m = -1.0f64;
+                for &j in members {
+                    if j != bj && sims[j] > m {
+                        m = sims[j];
+                    }
                 }
+                row[gi] = m;
             }
-            row[gi] = m;
-        }
-    });
+        });
+    }
     ctx.stats.bound_bytes = (n + n * ng) * std::mem::size_of::<f64>();
 
     // Per-group movement extremes.
     let mut gp_min = vec![1.0f64; ng];
     let mut gp_max = vec![1.0f64; ng];
     let mut gp_one_minus_min_sq = vec![0.0f64; ng];
-    // Scan temporaries.
-    let mut gmax1 = vec![f64::MIN; ng];
-    let mut gmax2 = vec![f64::MIN; ng];
-    let mut scanned = vec![false; ng];
 
     for _ in 0..cfg.max_iter {
         let sw = Stopwatch::start();
         let mut iter = IterStats::default();
 
-        let p = ctx.centers.p();
-        for (gi, members) in groups.iter().enumerate() {
-            let mut mn = f64::MAX;
-            let mut mx = f64::MIN;
-            for &j in members {
-                mn = mn.min(p[j]);
-                mx = mx.max(p[j]);
-            }
-            gp_min[gi] = mn;
-            gp_max[gi] = mx;
-            gp_one_minus_min_sq[gi] = (1.0 - mn * mn).max(0.0);
-        }
-        for i in 0..n {
-            let a = ctx.assign[i] as usize;
-            l[i] = update_lower(l[i], p[a]);
-            let row = &mut ug[i * ng..(i + 1) * ng];
-            for (gi, u) in row.iter_mut().enumerate() {
-                *u = if cfg.tight_hamerly_bound {
-                    update_min_p_guarded(*u, gp_min[gi])
-                } else if *u >= 0.0 && gp_min[gi] >= 0.0 {
-                    update_eq9_pre(*u, gp_one_minus_min_sq[gi])
-                } else {
-                    update_safe(*u, gp_min[gi], gp_max[gi])
-                };
+        {
+            let p = ctx.centers.p();
+            for (gi, members) in groups.iter().enumerate() {
+                let mut mn = f64::MAX;
+                let mut mx = f64::MIN;
+                for &j in members {
+                    mn = mn.min(p[j]);
+                    mx = mx.max(p[j]);
+                }
+                gp_min[gi] = mn;
+                gp_max[gi] = mx;
+                gp_one_minus_min_sq[gi] = (1.0 - mn * mn).max(0.0);
             }
         }
 
-        let mut moves = 0u64;
-        for i in 0..n {
-            let a = ctx.assign[i] as usize;
-            let row_bounds = &ug[i * ng..(i + 1) * ng];
-            let global_u = row_bounds.iter().cloned().fold(f64::MIN, f64::max);
-            if l[i] >= global_u {
-                iter.bound_skips += 1;
-                continue;
-            }
-            // Tighten l(i) and re-test.
-            l[i] = ctx.similarity(i, a, &mut iter);
-            if l[i] >= global_u {
-                iter.bound_skips += 1;
-                continue;
-            }
-            // Scan failing groups.
-            let l_old = l[i];
-            let mut best = f64::MIN;
-            let mut best_j = a;
-            for gi in 0..ng {
-                scanned[gi] = false;
-                gmax1[gi] = f64::MIN;
-                gmax2[gi] = f64::MIN;
-            }
-            let data_row = ctx.data.row(i);
-            for (gi, members) in groups.iter().enumerate() {
-                if ug[i * ng + gi] <= l[i] {
-                    iter.bound_skips += 1;
-                    continue;
-                }
-                scanned[gi] = true;
-                for &j in members {
-                    if j == a {
+        let outs = {
+            let view = SimView { data: ctx.data, centers: &ctx.centers, k };
+            let p = ctx.centers.p();
+            let tight = cfg.tight_hamerly_bound;
+            let groups = &groups;
+            let group_of = &group_of;
+            let gp_min = &gp_min;
+            let gp_max = &gp_max;
+            let gp_one_minus_min_sq = &gp_one_minus_min_sq;
+            let works = bound_works(&ctx.plan, &mut ctx.assign, &mut l, 1, &mut ug, ng);
+            ctx.pool.run(works, |_, (range, assign, l, ug)| {
+                let mut out = ShardOut::default();
+                // Per-group scan temporaries.
+                let mut gmax1 = vec![f64::MIN; ng];
+                let mut gmax2 = vec![f64::MIN; ng];
+                let mut scanned = vec![false; ng];
+                for (li, i) in range.enumerate() {
+                    let a = assign[li] as usize;
+                    let urow = &mut ug[li * ng..(li + 1) * ng];
+                    // Maintain bounds across the last center movement.
+                    l[li] = update_lower(l[li], p[a]);
+                    for (gi, u) in urow.iter_mut().enumerate() {
+                        *u = if tight {
+                            update_min_p_guarded(*u, gp_min[gi])
+                        } else if *u >= 0.0 && gp_min[gi] >= 0.0 {
+                            update_eq9_pre(*u, gp_one_minus_min_sq[gi])
+                        } else {
+                            update_safe(*u, gp_min[gi], gp_max[gi])
+                        };
+                    }
+                    let global_u = urow.iter().cloned().fold(f64::MIN, f64::max);
+                    if l[li] >= global_u {
+                        out.iter.bound_skips += 1;
                         continue;
                     }
-                    let s = data_row.dot_dense(ctx.centers.center(j));
-                    iter.sims_point_center += 1;
-                    if s > gmax1[gi] {
-                        gmax2[gi] = gmax1[gi];
-                        gmax1[gi] = s;
-                    } else if s > gmax2[gi] {
-                        gmax2[gi] = s;
+                    // Tighten l(i) and re-test.
+                    l[li] = view.similarity(i, a, &mut out.iter);
+                    if l[li] >= global_u {
+                        out.iter.bound_skips += 1;
+                        continue;
                     }
-                    if s > best {
-                        best = s;
-                        best_j = j;
+                    // Scan failing groups.
+                    let l_old = l[li];
+                    let mut best = f64::MIN;
+                    let mut best_j = a;
+                    for gi in 0..ng {
+                        scanned[gi] = false;
+                        gmax1[gi] = f64::MIN;
+                        gmax2[gi] = f64::MIN;
                     }
-                }
-            }
-            if best > l[i] {
-                // Reassign a → best_j; repair the scanned group bounds.
-                let ga = group_of[a];
-                let gb = group_of[best_j];
-                ctx.centers.apply_move(data_row, a, best_j);
-                ctx.assign[i] = best_j as u32;
-                l[i] = best;
-                moves += 1;
-                for gi in 0..ng {
-                    if !scanned[gi] {
-                        if gi == ga {
-                            // The old center joins the "others" of its
-                            // group; its (tight) similarity l_old may
-                            // exceed the stale group bound.
-                            ug[i * ng + gi] = ug[i * ng + gi].max(l_old);
+                    let data_row = view.data.row(i);
+                    for (gi, members) in groups.iter().enumerate() {
+                        if urow[gi] <= l[li] {
+                            out.iter.bound_skips += 1;
+                            continue;
                         }
-                        continue; // otherwise the stale bound remains valid
+                        scanned[gi] = true;
+                        for &j in members {
+                            if j == a {
+                                continue;
+                            }
+                            let s = data_row.dot_dense(view.centers.center(j));
+                            out.iter.sims_point_center += 1;
+                            if s > gmax1[gi] {
+                                gmax2[gi] = gmax1[gi];
+                                gmax1[gi] = s;
+                            } else if s > gmax2[gi] {
+                                gmax2[gi] = s;
+                            }
+                            if s > best {
+                                best = s;
+                                best_j = j;
+                            }
+                        }
                     }
-                    let mut b = gmax1[gi];
-                    if gi == gb {
-                        // Exclude the new assigned center: use the runner-up.
-                        b = gmax2[gi];
+                    if best > l[li] {
+                        // Reassign a → best_j; repair the scanned group
+                        // bounds.
+                        let ga = group_of[a];
+                        let gb = group_of[best_j];
+                        assign[li] = best_j as u32;
+                        out.moves.push(Move { i: i as u32, from: a as u32, to: best_j as u32 });
+                        out.iter.reassignments += 1;
+                        l[li] = best;
+                        for gi in 0..ng {
+                            if !scanned[gi] {
+                                if gi == ga {
+                                    // The old center joins the "others" of
+                                    // its group; its (tight) similarity
+                                    // l_old may exceed the stale group
+                                    // bound.
+                                    urow[gi] = urow[gi].max(l_old);
+                                }
+                                continue; // otherwise the stale bound remains valid
+                            }
+                            let mut b = gmax1[gi];
+                            if gi == gb {
+                                // Exclude the new assigned center: use the
+                                // runner-up.
+                                b = gmax2[gi];
+                            }
+                            if gi == ga {
+                                // The old center joins the "others" of its
+                                // group.
+                                b = b.max(l_old);
+                            }
+                            urow[gi] = b.max(-1.0);
+                        }
+                    } else {
+                        for gi in 0..ng {
+                            if scanned[gi] {
+                                urow[gi] = gmax1[gi].max(-1.0);
+                            }
+                        }
                     }
-                    if gi == ga {
-                        // The old center joins the "others" of its group.
-                        b = b.max(l_old);
-                    }
-                    ug[i * ng + gi] = b.max(-1.0);
                 }
-            } else {
-                for gi in 0..ng {
-                    if scanned[gi] {
-                        ug[i * ng + gi] = gmax1[gi].max(-1.0);
-                    }
-                }
-            }
-        }
+                out
+            })
+        };
+        ctx.merge_shards(outs, &mut iter);
 
-        iter.reassignments = moves;
-        if moves == 0 {
+        if iter.reassignments == 0 {
             iter.wall_ms = sw.ms();
             ctx.stats.iters.push(iter);
             return true;

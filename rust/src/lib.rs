@@ -17,10 +17,13 @@
 //!
 //! * **L3 (this crate)** — the coordinator: sparse data structures, the five
 //!   (plus extensions) k-means variants with cosine-bound pruning, seeding,
-//!   experiment drivers, CLI.
+//!   experiment drivers, CLI. The assignment hot loop of every variant runs
+//!   on the sharded parallel executor ([`runtime::parallel`]) with a
+//!   bit-for-bit thread-count-invariance guarantee (see [`kmeans`]).
 //! * **L2/L1 (python/, build time only)** — a JAX assignment-step graph
 //!   calling a Pallas tiled similarity kernel, AOT-lowered to HLO text in
-//!   `artifacts/`, loaded at runtime by [`runtime`] via the PJRT C API.
+//!   `artifacts/`, loaded at runtime by [`runtime`] via the PJRT C API
+//!   (behind the off-by-default `pjrt` cargo feature).
 //!
 //! ## Quickstart
 //!

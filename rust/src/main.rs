@@ -25,11 +25,13 @@ USAGE:
   sphkm datasets [--scale tiny|small|medium] [--seed N]
   sphkm cluster --data <dataset> --k K [--algo VARIANT] [--init METHOD]
                 [--seed N] [--scale S] [--max-iter M] [--stats] [--labels]
+                [--threads T] # sharded assignment: 0 = all cores, 1 = serial
                 [--preinit]   # §7: pre-initialize bounds from k-means++
   sphkm sweep --config FILE.cfg   # cross-product runs from a config file
   sphkm gen --data <dataset> --out FILE.svm [--scale S] [--seed N]
   sphkm bench --exp table1|table2|table3|fig1|fig2|ablation-cc|ablation-preinit
               [--scale S] [--reps R] [--ks 2,10,20] [--quick] [--k K]
+              [--threads T]
   sphkm info
 
   <dataset>: one of {names}, or a .svm/.libsvm/.mtx file path
@@ -75,6 +77,7 @@ fn run_sweep(cfg: &sphkm::util::config::Config) {
     let seed: u64 = cfg.get_or("seed", 42).unwrap_or(42);
     let reps: usize = cfg.get_or("reps", 1).unwrap_or(1).max(1);
     let max_iter: usize = cfg.get_or("max_iter", 200).unwrap_or(200);
+    let threads: usize = cfg.get_or("threads", 1).unwrap_or(1);
     let datasets_list: Vec<String> = {
         let l = cfg.list::<String>("datasets").unwrap_or_default();
         if l.is_empty() {
@@ -126,6 +129,7 @@ fn run_sweep(cfg: &sphkm::util::config::Config) {
                             .variant(*variant)
                             .init(*init)
                             .seed(seed ^ rep as u64)
+                            .threads(threads)
                             .max_iter(max_iter);
                         let sw = sphkm::util::timer::Stopwatch::start();
                         last = Some(sphkm::kmeans::run(&ds.matrix, &c));
@@ -188,13 +192,15 @@ fn main() {
                 .unwrap_or("uniform")
                 .parse()
                 .unwrap_or_else(|e| { eprintln!("{e}"); usage() });
+            let threads: usize = args.get_or("threads", 1).unwrap_or(1);
             let cfg = KMeansConfig::new(k)
                 .variant(variant)
                 .init(init)
                 .seed(seed)
+                .threads(threads)
                 .max_iter(args.get_or("max-iter", 200).unwrap_or(200));
             println!(
-                "dataset {} ({}×{}, {:.3}% nnz), k={k}, algo={}, seed={seed}",
+                "dataset {} ({}×{}, {:.3}% nnz), k={k}, algo={}, seed={seed}, threads={threads}",
                 ds.name,
                 ds.matrix.rows(),
                 ds.matrix.cols(),

@@ -10,7 +10,13 @@
 //! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Everything that touches the `xla` crate is gated behind the `pjrt`
+//! feature (off by default — the PJRT C library does not exist on clean
+//! machines). [`Manifest`] and [`artifacts_available`] are dependency-free
+//! and always compiled.
 
+#[cfg(feature = "pjrt")]
 use crate::sparse::CsrMatrix;
 use std::path::{Path, PathBuf};
 
@@ -28,6 +34,7 @@ pub enum EngineError {
     Shape(String),
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for EngineError {
     fn from(e: xla::Error) -> Self {
         EngineError::Xla(e.to_string())
@@ -47,21 +54,39 @@ pub struct Manifest {
     pub dim: usize,
 }
 
+/// Parse a field of the artifact filename: digits only, no signs, no
+/// whitespace, no leading zeros, no `_`-separated trailing segments
+/// (`usize::from_str` alone would accept a leading `+` or `08`, and a name
+/// like `assign_b8_k10_d128_k2` must not round-trip to a different
+/// filename than it was parsed from).
+fn digits(s: &str) -> Option<usize> {
+    if s.is_empty() || !s.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    if s.len() > 1 && s.starts_with('0') {
+        return None;
+    }
+    s.parse().ok()
+}
+
 impl Manifest {
     /// Artifact filename for this shape.
     pub fn filename(&self) -> String {
         format!("assign_b{}_k{}_d{}.hlo.txt", self.batch, self.k, self.dim)
     }
 
-    /// Parse a manifest back out of a filename.
+    /// Parse a manifest back out of a filename. Strict inverse of
+    /// [`Manifest::filename`]: every parsed name re-renders to itself, and
+    /// names with extra or malformed segments are rejected rather than
+    /// silently mis-parsed.
     pub fn parse(name: &str) -> Option<Manifest> {
         let rest = name.strip_prefix("assign_b")?.strip_suffix(".hlo.txt")?;
         let (b, rest) = rest.split_once("_k")?;
         let (k, d) = rest.split_once("_d")?;
         Some(Manifest {
-            batch: b.parse().ok()?,
-            k: k.parse().ok()?,
-            dim: d.parse().ok()?,
+            batch: digits(b)?,
+            k: digits(k)?,
+            dim: digits(d)?,
         })
     }
 }
@@ -86,6 +111,7 @@ fn list_artifacts(dir: &Path) -> std::io::Result<Vec<(Manifest, PathBuf)>> {
 }
 
 /// A compiled PJRT executable for one `(batch, k, dim)` shape.
+#[cfg(feature = "pjrt")]
 pub struct AssignEngine {
     client: xla::PjRtClient,
     exe: xla::PjRtLoadedExecutable,
@@ -94,6 +120,7 @@ pub struct AssignEngine {
     stage: Vec<f32>,
 }
 
+#[cfg(feature = "pjrt")]
 impl std::fmt::Debug for AssignEngine {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("AssignEngine")
@@ -113,6 +140,7 @@ pub struct AssignTile {
     pub second_sim: Vec<f32>,
 }
 
+#[cfg(feature = "pjrt")]
 impl AssignEngine {
     /// Load the artifact for an exact shape from `dir` and compile it.
     pub fn load(dir: &Path, manifest: Manifest) -> Result<Self, EngineError> {
@@ -144,7 +172,9 @@ impl AssignEngine {
             .iter()
             .map(|(m, _)| *m)
             .find(|m| m.k == k && m.dim == dim)
-            .ok_or_else(|| EngineError::MissingArtifact(dir.join(format!("assign_*_k{k}_d{dim}"))))?;
+            .ok_or_else(|| {
+                EngineError::MissingArtifact(dir.join(format!("assign_*_k{k}_d{dim}")))
+            })?;
         Self::load(dir, m)
     }
 
@@ -250,9 +280,51 @@ mod tests {
         let m = Manifest { batch: 128, k: 16, dim: 512 };
         assert_eq!(m.filename(), "assign_b128_k16_d512.hlo.txt");
         assert_eq!(Manifest::parse(&m.filename()), Some(m));
-        assert_eq!(Manifest::parse("assign_b1_k2_d3.hlo.txt"), Some(Manifest { batch: 1, k: 2, dim: 3 }));
+        assert_eq!(
+            Manifest::parse("assign_b1_k2_d3.hlo.txt"),
+            Some(Manifest { batch: 1, k: 2, dim: 3 })
+        );
         assert!(Manifest::parse("model.hlo.txt").is_none());
         assert!(Manifest::parse("assign_bX_k2_d3.hlo.txt").is_none());
+    }
+
+    #[test]
+    fn manifest_round_trips_for_all_shapes() {
+        crate::util::prop::forall(300, 0xAF01, |g| {
+            let m = Manifest {
+                batch: g.usize_in(1, 4096),
+                k: g.usize_in(1, 2048),
+                dim: g.usize_in(1, 1 << 20),
+            };
+            let parsed = Manifest::parse(&m.filename());
+            assert_eq!(parsed, Some(m), "filename {:?}", m.filename());
+        });
+    }
+
+    #[test]
+    fn manifest_rejects_trailing_and_malformed_segments() {
+        // Trailing `_k`/`_d` segments must be rejected, not absorbed.
+        for bad in [
+            "assign_b8_k10_d128_k2.hlo.txt",
+            "assign_b8_k10_d128_d64.hlo.txt",
+            "assign_b8_k10_d128_extra.hlo.txt",
+            "assign_b8_k1_k10_d128.hlo.txt",
+            "assign_b8_d128_k10.hlo.txt",
+            "assign_b8_k10_d128.hlo.txt.bak",
+            "assign_b_k10_d128.hlo.txt",
+            "assign_b8_k_d128.hlo.txt",
+            "assign_b8_k10_d.hlo.txt",
+            // `usize::from_str` would accept these; the strict parser must
+            // not — they would re-render to a *different* filename.
+            "assign_b+8_k10_d128.hlo.txt",
+            "assign_b8_k+10_d128.hlo.txt",
+            "assign_b8_k10_d+128.hlo.txt",
+            "assign_b08_k10_d128.hlo.txt",
+            "assign_b8_k010_d128.hlo.txt",
+            "assign_b8_k10_d0128.hlo.txt",
+        ] {
+            assert_eq!(Manifest::parse(bad), None, "accepted {bad:?}");
+        }
     }
 
     #[test]
@@ -261,5 +333,6 @@ mod tests {
     }
 
     // Engine execution tests live in rust/tests/runtime_integration.rs and
-    // are skipped when `make artifacts` has not run.
+    // are skipped when `make artifacts` has not run (and compiled only
+    // with the `pjrt` feature).
 }

@@ -1,6 +1,18 @@
-//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
-//! (`artifacts/*.hlo.txt`) and executes them from Rust via the `xla` crate.
+//! Execution runtimes.
+//!
+//! * [`parallel`] — the sharded worker pool the k-means assignment phase
+//!   runs on (always available; see the shard-determinism contract in
+//!   [`crate::kmeans`]).
+//! * [`AssignEngine`] (feature `pjrt`) — loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them via the `xla`
+//!   crate's PJRT client. Gated off by default because the `xla` crate and
+//!   its PJRT C library are unavailable on clean machines; the artifact
+//!   [`Manifest`] helpers stay available regardless so tooling can inspect
+//!   artifact directories without the heavyweight dependency.
 
 mod engine;
+pub mod parallel;
 
-pub use engine::{artifacts_available, AssignEngine, EngineError, Manifest};
+#[cfg(feature = "pjrt")]
+pub use engine::AssignEngine;
+pub use engine::{artifacts_available, AssignTile, EngineError, Manifest};

@@ -1,0 +1,286 @@
+//! Sharded parallel execution for the assignment hot loop.
+//!
+//! The k-means assignment phase is embarrassingly parallel *within one
+//! iteration*: every point's decision depends only on the (frozen) centers
+//! and the point's own bound state. This module supplies the two pieces the
+//! algorithm layer builds on:
+//!
+//! * [`Plan`] — a row-shard splitter. The shard grid is a pure function of
+//!   the **row count** (never of the thread count), which is the first half
+//!   of the crate's shard-determinism contract (see [`crate::kmeans`]):
+//!   any floating-point reduction tree keyed on shard boundaries is
+//!   identical for every `threads` setting.
+//! * [`Pool`] — a worker pool (rayon) that maps a closure over per-shard
+//!   work items and returns the outputs **in shard order**. With one
+//!   worker (`threads = 1`, the default) no thread pool is created at all
+//!   and the closure runs inline on the caller's thread — the exact serial
+//!   path.
+//!
+//! Shard-local mutable state (assignments, bounds) is carved out of the
+//! backing vectors with [`split_mut`], so shards never contend and no
+//! locks are needed; cross-shard effects (center updates, counters) are
+//! represented as per-shard values merged deterministically at the barrier
+//! by the caller.
+
+use std::ops::Range;
+
+/// Target rows per shard. Small enough that test-sized corpora (a few
+/// hundred rows) still split into several shards — exercising the merge
+/// path — while keeping per-shard scratch allocation negligible against
+/// the `O(rows × k)` similarity work inside a shard.
+pub const SHARD_ROWS: usize = 256;
+
+/// Upper bound on the number of shards, so very large corpora get
+/// proportionally larger shards instead of unbounded task counts.
+pub const MAX_SHARDS: usize = 64;
+
+/// A contiguous row-shard grid over `0..rows`.
+///
+/// Ranges are contiguous, ascending, non-overlapping, and cover the row
+/// space exactly. The grid depends only on `rows` — see the module docs
+/// for why that matters.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    ranges: Vec<Range<usize>>,
+    rows: usize,
+}
+
+impl Plan {
+    /// The canonical grid for `rows` data rows:
+    /// `ceil(rows / SHARD_ROWS)` shards, capped at [`MAX_SHARDS`].
+    pub fn for_rows(rows: usize) -> Plan {
+        let parts = rows.div_ceil(SHARD_ROWS).clamp(1, MAX_SHARDS);
+        Plan::with_parts(rows, parts)
+    }
+
+    /// An explicit grid: `parts` near-equal contiguous shards over
+    /// `0..rows` (the first `rows % parts` shards hold one extra row).
+    /// Empty when `rows == 0`.
+    pub fn with_parts(rows: usize, parts: usize) -> Plan {
+        let mut ranges = Vec::new();
+        if rows > 0 {
+            let parts = parts.clamp(1, rows);
+            let base = rows / parts;
+            let extra = rows % parts;
+            let mut start = 0;
+            for s in 0..parts {
+                let len = base + usize::from(s < extra);
+                ranges.push(start..start + len);
+                start += len;
+            }
+            debug_assert_eq!(start, rows);
+        }
+        Plan { ranges, rows }
+    }
+
+    /// The shard ranges, in ascending row order.
+    pub fn ranges(&self) -> &[Range<usize>] {
+        &self.ranges
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// True when the plan covers zero rows.
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+
+    /// Total rows covered.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+}
+
+/// Split a flat per-row buffer (`width` entries per row) into one
+/// non-overlapping mutable slice per shard of `plan`, in shard order.
+///
+/// This is how shard workers get lock-free mutable access to their rows of
+/// the assignment vector and the bound arrays.
+pub fn split_mut<'a, T>(plan: &Plan, width: usize, buf: &'a mut [T]) -> Vec<&'a mut [T]> {
+    assert_eq!(
+        buf.len(),
+        plan.rows() * width,
+        "buffer length does not match plan rows × width"
+    );
+    let mut rest = buf;
+    let mut out = Vec::with_capacity(plan.len());
+    for r in plan.ranges() {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * width);
+        out.push(head);
+        rest = tail;
+    }
+    out
+}
+
+/// A worker pool executing per-shard closures.
+///
+/// `threads == 1` (the default in [`crate::kmeans::KMeansConfig`]) never
+/// builds a thread pool: work runs inline, in shard order, on the calling
+/// thread. `threads == 0` resolves to all available cores.
+pub struct Pool {
+    threads: usize,
+    pool: Option<rayon::ThreadPool>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool")
+            .field("threads", &self.threads)
+            .field("serial", &self.pool.is_none())
+            .finish()
+    }
+}
+
+impl Pool {
+    /// Build a pool for `threads` workers (`0` = all available cores).
+    ///
+    /// If the underlying thread pool cannot be created (resource limits),
+    /// the pool silently degrades to serial execution — results are
+    /// identical either way by the determinism contract.
+    pub fn new(threads: usize) -> Pool {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|c| c.get())
+                .unwrap_or(1)
+        } else {
+            threads
+        };
+        let pool = if threads > 1 {
+            rayon::ThreadPoolBuilder::new()
+                .num_threads(threads)
+                .build()
+                .ok()
+        } else {
+            None
+        };
+        Pool { threads, pool }
+    }
+
+    /// Resolved worker count (after expanding `0` to the core count).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True when work will run inline on the caller's thread.
+    pub fn is_serial(&self) -> bool {
+        self.pool.is_none()
+    }
+
+    /// Run `f(shard_index, work)` over every work item and return the
+    /// outputs in input (shard) order. Serial pools, and work lists of at
+    /// most one item, run inline.
+    pub fn run<W, O, F>(&self, works: Vec<W>, f: F) -> Vec<O>
+    where
+        W: Send,
+        O: Send,
+        F: Fn(usize, W) -> O + Sync + Send,
+    {
+        match &self.pool {
+            Some(pool) if works.len() > 1 => {
+                use rayon::prelude::*;
+                pool.install(|| {
+                    works
+                        .into_par_iter()
+                        .enumerate()
+                        .map(|(s, w)| f(s, w))
+                        .collect()
+                })
+            }
+            _ => works
+                .into_iter()
+                .enumerate()
+                .map(|(s, w)| f(s, w))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn plan_partitions_rows_exactly() {
+        forall(300, 0x9A11, |g| {
+            let n = g.usize_in(0, 40_000);
+            let plan = Plan::for_rows(n);
+            assert_eq!(plan.rows(), n);
+            assert!(plan.len() <= MAX_SHARDS);
+            let mut next = 0usize;
+            for r in plan.ranges() {
+                assert_eq!(r.start, next, "shards must be contiguous ascending");
+                assert!(r.end > r.start, "no empty shards");
+                next = r.end;
+            }
+            assert_eq!(next, n, "shards must cover all rows");
+            if n > 0 {
+                assert!(!plan.is_empty());
+            }
+        });
+    }
+
+    #[test]
+    fn plan_depends_on_rows_only() {
+        // Same n → same grid, trivially; also: with_parts sizes differ by
+        // at most one row, largest first.
+        for n in [1usize, 7, 255, 256, 257, 1000, 64 * 256 + 1, 1 << 20] {
+            let a = Plan::for_rows(n);
+            let b = Plan::for_rows(n);
+            assert_eq!(a.ranges(), b.ranges());
+            let lens: Vec<usize> = a.ranges().iter().map(|r| r.len()).collect();
+            let (mn, mx) = (
+                *lens.iter().min().unwrap(),
+                *lens.iter().max().unwrap(),
+            );
+            assert!(mx - mn <= 1, "near-equal shards for n={n}: {lens:?}");
+        }
+        assert!(Plan::for_rows(0).is_empty());
+    }
+
+    #[test]
+    fn split_mut_carves_disjoint_row_slices() {
+        forall(200, 0x9A12, |g| {
+            let n = g.usize_in(1, 2000);
+            let width = g.usize_in(1, 5);
+            let plan = Plan::for_rows(n);
+            let mut buf = vec![0u32; n * width];
+            let shards = split_mut(&plan, width, &mut buf);
+            assert_eq!(shards.len(), plan.len());
+            for (slice, r) in shards.into_iter().zip(plan.ranges()) {
+                assert_eq!(slice.len(), r.len() * width);
+                // Write a marker through each shard...
+                for v in slice.iter_mut() {
+                    *v += 1;
+                }
+            }
+            // ...and confirm full, single coverage of the backing buffer.
+            assert!(buf.iter().all(|&v| v == 1));
+        });
+    }
+
+    #[test]
+    fn pool_preserves_shard_order_and_matches_serial() {
+        let works: Vec<usize> = (0..23).collect();
+        let serial = Pool::new(1).run(works.clone(), |s, w| (s, w * w));
+        for threads in [2usize, 4, 0] {
+            let par = Pool::new(threads).run(works.clone(), |s, w| (s, w * w));
+            assert_eq!(par, serial, "threads={threads}");
+        }
+        for (s, (idx, _)) in serial.iter().enumerate() {
+            assert_eq!(s, *idx);
+        }
+    }
+
+    #[test]
+    fn pool_zero_resolves_to_cores() {
+        let p = Pool::new(0);
+        assert!(p.threads() >= 1);
+        let q = Pool::new(1);
+        assert!(q.is_serial());
+        assert_eq!(q.threads(), 1);
+    }
+}

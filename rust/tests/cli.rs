@@ -45,6 +45,23 @@ fn cluster_demo_with_stats_and_labels() {
 }
 
 #[test]
+fn cluster_with_threads_flag() {
+    // The sharded executor must plumb through the CLI; results are
+    // thread-count invariant, so this only checks plumbing + convergence.
+    let out = sphkm()
+        .args([
+            "cluster", "--data", "demo", "--k", "5", "--algo", "simp-hamerly",
+            "--seed", "4", "--threads", "2",
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("threads=2"), "{text}");
+    assert!(text.contains("converged=true"), "{text}");
+}
+
+#[test]
 fn gen_then_cluster_file() {
     let dir = std::env::temp_dir().join("sphkm-cli-tests");
     std::fs::create_dir_all(&dir).unwrap();

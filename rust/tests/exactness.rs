@@ -155,18 +155,141 @@ fn exact_with_tight_hamerly_bound() {
     }
 }
 
+/// A synthetic TF-IDF corpus big enough for several row shards
+/// (`SHARD_ROWS = 256`), so `threads = 4` genuinely crosses shard
+/// boundaries and exercises the deferred-move merge.
+fn parallel_test_corpus(seed: u64) -> Dataset {
+    let mut cfg = SynthConfig::small_demo();
+    cfg.name = "par-synth".into();
+    cfg.n_docs = 1200;
+    cfg.generate(seed)
+}
+
+#[test]
+fn parallel_matches_serial() {
+    // The shard-determinism contract (kmeans module docs): for every
+    // variant, the sharded parallel path must produce **bit-identical**
+    // assignments and objectives to the serial path, for any thread count.
+    let ds = parallel_test_corpus(29);
+    for &k in &[2usize, 8] {
+        let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 3);
+        for variant in Variant::ALL {
+            let serial = run_with_centers(
+                &ds.matrix,
+                init.centers.clone(),
+                &KMeansConfig::new(k).variant(variant).threads(1),
+            );
+            assert!(serial.converged, "{} did not converge", variant.name());
+            for &threads in &[4usize, 0] {
+                let par = run_with_centers(
+                    &ds.matrix,
+                    init.centers.clone(),
+                    &KMeansConfig::new(k).variant(variant).threads(threads),
+                );
+                assert_eq!(
+                    par.assignments,
+                    serial.assignments,
+                    "{}: assignments diverge at threads={threads}, k={k}",
+                    variant.name()
+                );
+                assert_eq!(
+                    par.objective.to_bits(),
+                    serial.objective.to_bits(),
+                    "{}: objective not bit-identical at threads={threads}, k={k}",
+                    variant.name()
+                );
+                assert_eq!(par.iterations, serial.iterations, "{}", variant.name());
+                assert_eq!(par.converged, serial.converged, "{}", variant.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_shard_merged_stats_equal_serial_counts() {
+    // Shard-merged IterStats must equal the serial counters exactly,
+    // iteration by iteration — pruning decisions and similarity charges
+    // may not depend on the thread count.
+    let ds = parallel_test_corpus(31);
+    let k = 10;
+    let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 5);
+    for variant in Variant::ALL {
+        let serial = run_with_centers(
+            &ds.matrix,
+            init.centers.clone(),
+            &KMeansConfig::new(k).variant(variant).threads(1),
+        );
+        let par = run_with_centers(
+            &ds.matrix,
+            init.centers.clone(),
+            &KMeansConfig::new(k).variant(variant).threads(4),
+        );
+        assert_eq!(
+            par.stats.iters.len(),
+            serial.stats.iters.len(),
+            "{}: iteration counts differ",
+            variant.name()
+        );
+        for (it, (p, s)) in par.stats.iters.iter().zip(&serial.stats.iters).enumerate() {
+            assert_eq!(p.sims_point_center, s.sims_point_center, "{} iter {it}", variant.name());
+            assert_eq!(p.sims_center_center, s.sims_center_center, "{} iter {it}", variant.name());
+            assert_eq!(p.reassignments, s.reassignments, "{} iter {it}", variant.name());
+            assert_eq!(p.loop_skips, s.loop_skips, "{} iter {it}", variant.name());
+            assert_eq!(p.bound_skips, s.bound_skips, "{} iter {it}", variant.name());
+        }
+        assert_eq!(par.stats.total_sims(), serial.stats.total_sims(), "{}", variant.name());
+        assert_eq!(par.stats.bound_bytes, serial.stats.bound_bytes, "{}", variant.name());
+    }
+}
+
+#[test]
+fn parallel_matches_serial_with_preinit_bounds() {
+    // The §7 preinit path (seeded bounds, skipped initial pass) must obey
+    // the same thread-count invariance.
+    use sphkm::init::seed_centers_with_bounds;
+    use sphkm::kmeans::run_seeded;
+    let ds = parallel_test_corpus(37);
+    let k = 9;
+    let init = seed_centers_with_bounds(&ds.matrix, k, &InitMethod::KMeansPP { alpha: 1.0 }, 11);
+    assert!(init.sim_matrix.is_some());
+    for variant in [Variant::SimplifiedElkan, Variant::SimplifiedHamerly, Variant::Yinyang] {
+        let serial = run_seeded(
+            &ds.matrix,
+            init.clone(),
+            &KMeansConfig::new(k).variant(variant).threads(1),
+        );
+        let par = run_seeded(
+            &ds.matrix,
+            init.clone(),
+            &KMeansConfig::new(k).variant(variant).threads(4),
+        );
+        assert_eq!(par.assignments, serial.assignments, "{}", variant.name());
+        assert_eq!(
+            par.objective.to_bits(),
+            serial.objective.to_bits(),
+            "{}",
+            variant.name()
+        );
+        assert_eq!(par.stats.iters[0].sims_point_center, 0, "{}", variant.name());
+    }
+}
+
 #[test]
 fn degenerate_k_equals_one_and_k_equals_n() {
     let ds = SynthConfig::small_demo().generate(17);
     let n = ds.matrix.rows();
     for variant in Variant::ALL {
-        // k = 1: everything in one cluster, converges immediately.
-        let r = sphkm::kmeans::run(
-            &ds.matrix,
-            &KMeansConfig::new(1).variant(variant).seed(3),
-        );
-        assert!(r.converged, "{}", variant.name());
-        assert!(r.assignments.iter().all(|&a| a == 0));
+        // k = 1: everything in one cluster, converges immediately. The
+        // top2 runner-up clamp (cosine floor, no sentinel) must hold on
+        // both the serial and the sharded parallel path.
+        for threads in [1usize, 4] {
+            let r = sphkm::kmeans::run(
+                &ds.matrix,
+                &KMeansConfig::new(1).variant(variant).seed(3).threads(threads),
+            );
+            assert!(r.converged, "{} threads={threads}", variant.name());
+            assert!(r.assignments.iter().all(|&a| a == 0));
+        }
         // k = n/3 (large k relative to n).
         let k = n / 3;
         let r = sphkm::kmeans::run(

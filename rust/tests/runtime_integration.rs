@@ -1,7 +1,10 @@
 //! Integration of the PJRT runtime with the AOT artifacts: load the HLO
 //! text produced by `python/compile/aot.py`, execute it on the CPU PJRT
 //! client, and compare against the Rust-native computation on the same
-//! inputs. Skipped (with a notice) when `make artifacts` has not run.
+//! inputs. Skipped (with a notice) when `make artifacts` has not run, and
+//! compiled only with the `pjrt` feature (the `xla` crate and its PJRT C
+//! library are unavailable on clean machines).
+#![cfg(feature = "pjrt")]
 
 use sphkm::data::synth::SynthConfig;
 use sphkm::data::tfidf::TfIdf;
