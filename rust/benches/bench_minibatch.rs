@@ -1,0 +1,111 @@
+//! Mini-batch engine acceptance benchmark: on a ≥100k-row synthetic Zipf
+//! corpus the mini-batch engine must reach within **2%** of the full-batch
+//! Standard objective using **≥5×** fewer point–center similarity
+//! computations (both checked with asserts at the end of the run).
+//!
+//! ```text
+//! cargo bench --bench bench_minibatch -- [--rows 100000] [--k 50]
+//!     [--batch 1024] [--epochs 2] [--tol 1e-4] [--truncate 0]
+//!     [--threads 0] [--max-iter 100] [--seed 42]
+//! ```
+
+use sphkm::data::synth::SynthConfig;
+use sphkm::init::{seed_centers, InitMethod};
+use sphkm::kmeans::{minibatch, run_with_centers, KMeansConfig, Variant};
+use sphkm::metrics;
+use sphkm::util::cli::Args;
+use sphkm::util::timer::Stopwatch;
+
+fn main() {
+    let args = Args::from_env();
+    let rows: usize = args.get_or("rows", 100_000).unwrap_or(100_000);
+    let k: usize = args.get_or("k", 50).unwrap_or(50);
+    let batch: usize = args.get_or("batch", 1024).unwrap_or(1024);
+    let epochs: usize = args.get_or("epochs", 2).unwrap_or(2);
+    let tol: f64 = args.get_or("tol", 1e-4).unwrap_or(1e-4);
+    let truncate: usize = args.get_or("truncate", 0).unwrap_or(0);
+    let threads: usize = args.get_or("threads", 0).unwrap_or(0);
+    let max_iter: usize = args.get_or("max-iter", 100).unwrap_or(100);
+    let seed: u64 = args.get_or("seed", 42).unwrap_or(42);
+
+    let ds = SynthConfig {
+        name: format!("mb-blobs-{rows}"),
+        n_docs: rows,
+        vocab: 20_000,
+        topics: k.max(2),
+        doc_len_mean: 60.0,
+        doc_len_sigma: 0.4,
+        topic_strength: 0.65,
+        shared_vocab_frac: 0.2,
+        zipf_s: 1.05,
+        anomaly_frac: 0.0,
+        tfidf: Default::default(),
+    }
+    .generate(seed);
+    println!(
+        "# mini-batch acceptance bench — {} ({}×{}, {:.4}% nnz), k={k}, threads={threads}",
+        ds.name,
+        ds.matrix.rows(),
+        ds.matrix.cols(),
+        ds.matrix.density() * 100.0,
+    );
+
+    // Shared initial centers so the comparison isolates the optimizer.
+    let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, seed ^ 1);
+
+    let sw = Stopwatch::start();
+    let full = run_with_centers(
+        &ds.matrix,
+        init.centers.clone(),
+        &KMeansConfig::new(k)
+            .variant(Variant::Standard)
+            .threads(threads)
+            .max_iter(max_iter),
+    );
+    let full_ms = sw.ms();
+    println!(
+        "full-batch Standard : obj={:.2}  pc_sims={}  iters={}  converged={}  {:.0} ms",
+        full.objective,
+        full.stats.total_point_center(),
+        full.iterations,
+        full.converged,
+        full_ms,
+    );
+
+    let cfg = KMeansConfig::new(k)
+        .seed(seed)
+        .threads(threads)
+        .batch_size(batch)
+        .epochs(epochs)
+        .tol(tol)
+        .truncate(if truncate == 0 { None } else { Some(truncate) });
+    let sw = Stopwatch::start();
+    let mb = minibatch::run_with_centers(&ds.matrix, init.centers.clone(), &cfg);
+    let mb_ms = sw.ms();
+    let gap = metrics::objective_gap(mb.objective, full.objective);
+    let ratio =
+        full.stats.total_point_center() as f64 / mb.stats.total_point_center().max(1) as f64;
+    println!(
+        "mini-batch b={batch:<5}: obj={:.2}  pc_sims={}  epochs={}  {:.0} ms",
+        mb.objective,
+        mb.stats.total_point_center(),
+        mb.iterations,
+        mb_ms,
+    );
+    println!(
+        "trade-off           : gap={:+.3}%  sims ratio={ratio:.1}x  speedup={:.1}x",
+        gap * 100.0,
+        full_ms / mb_ms.max(1e-3),
+    );
+
+    assert!(
+        rows < 100_000 || gap <= 0.02,
+        "objective gap {:.3}% exceeds the 2% acceptance bar",
+        gap * 100.0
+    );
+    assert!(
+        rows < 100_000 || ratio >= 5.0,
+        "similarity ratio {ratio:.2}x is below the 5x acceptance bar"
+    );
+    println!("# acceptance: objective gap <= 2% and >= 5x fewer point-center sims — OK");
+}

@@ -586,6 +586,88 @@ pub fn ablation_preinit(opts: &ExperimentOpts, k: usize) -> Table {
     t
 }
 
+// ------------------------------------------------------------- Mini-batch
+
+/// Mini-batch vs full-batch trade-off (beyond the paper; the ROADMAP's
+/// large-corpus workload): objective gap and point–center similarity
+/// counts against the full-batch Standard baseline on a synthetic Zipf
+/// corpus, across batch sizes and center-truncation settings.
+pub fn minibatch(opts: &ExperimentOpts, k: usize) -> Table {
+    println!(
+        "\n== Mini-batch trade-off: objective gap vs similarity count (k={k}, scale={}) ==",
+        opts.scale.name()
+    );
+    let ds = crate::data::synth::SynthConfig {
+        name: "mb-synth".into(),
+        n_docs: (opts.scale.factor() * 4000.0) as usize,
+        vocab: 5_000,
+        topics: 16,
+        doc_len_mean: 60.0,
+        doc_len_sigma: 0.5,
+        topic_strength: 0.7,
+        shared_vocab_frac: 0.3,
+        zipf_s: 1.1,
+        anomaly_frac: 0.0,
+        tfidf: Default::default(),
+    }
+    .generate(opts.seed);
+    let k = k.min(ds.matrix.rows() / 2).max(2);
+    let initial = uniform_centers(&ds, k, opts.cell_seed("mb", 0));
+    let mut t = Table::new(&["mode", "ms", "pc_sims", "objective", "gap"]);
+
+    let sw = crate::util::timer::Stopwatch::start();
+    let full = run_cell(&ds, Variant::Standard, k, initial.clone(), opts.max_iter, opts.threads);
+    t.row(vec![
+        "Standard (full batch)".into(),
+        fmt_ms(sw.ms()),
+        full.stats.total_point_center().to_string(),
+        format!("{:.2}", full.objective),
+        fmt_pct(0.0),
+    ]);
+    let sw = crate::util::timer::Stopwatch::start();
+    let pruned = run_cell(
+        &ds,
+        Variant::SimplifiedHamerly,
+        k,
+        initial.clone(),
+        opts.max_iter,
+        opts.threads,
+    );
+    t.row(vec![
+        "Simp.Hamerly (full batch)".into(),
+        fmt_ms(sw.ms()),
+        pruned.stats.total_point_center().to_string(),
+        format!("{:.2}", pruned.objective),
+        fmt_pct(crate::metrics::objective_gap(pruned.objective, full.objective)),
+    ]);
+
+    for &(batch, truncate) in &[(256usize, None), (1024, None), (1024, Some(128usize))] {
+        let cfg = KMeansConfig::new(k)
+            .seed(opts.seed)
+            .threads(opts.threads)
+            .batch_size(batch)
+            .epochs(8)
+            .tol(1e-4)
+            .truncate(truncate);
+        let sw = crate::util::timer::Stopwatch::start();
+        let r = crate::kmeans::minibatch::run_with_centers(&ds.matrix, initial.clone(), &cfg);
+        let label = match truncate {
+            Some(m) => format!("MiniBatch b={batch} top-{m}"),
+            None => format!("MiniBatch b={batch}"),
+        };
+        t.row(vec![
+            label,
+            fmt_ms(sw.ms()),
+            r.stats.total_point_center().to_string(),
+            format!("{:.2}", r.objective),
+            fmt_pct(crate::metrics::objective_gap(r.objective, full.objective)),
+        ]);
+    }
+    println!("{}", t.render());
+    opts.save(&t, "minibatch.csv");
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -615,6 +697,13 @@ mod tests {
         let t = fig1(&o, 5);
         // At least 2 iterations per variant (init + ≥1).
         assert!(t.len() >= 2 * Variant::PAPER_SET.len());
+    }
+
+    #[test]
+    fn minibatch_driver_reports_all_modes() {
+        let t = minibatch(&tiny_opts(), 8);
+        // Two full-batch baselines + three mini-batch configurations.
+        assert_eq!(t.len(), 5);
     }
 
     #[test]

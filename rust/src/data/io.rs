@@ -30,11 +30,20 @@ fn perr<T>(line: usize, msg: impl Into<String>) -> Result<T, IoError> {
 /// Returns the matrix and the labels (if every line carries one).
 /// One-based and zero-based indices are both accepted (auto-detected:
 /// if any index is 0, indices are treated as zero-based).
+///
+/// Labels are parsed as **floats** — standard libsvm files carry class
+/// labels like `1.0` / `-1.0` (and regression targets) — and remapped to
+/// dense `0..k` class ids in ascending numeric order. Duplicate feature
+/// indices within a line and non-finite values are rejected with a parse
+/// error: silently accepting them would hide corrupt files, and the
+/// resulting rows feed the sorted-merge dot products, so every row goes
+/// through the validating [`SparseVec::try_from_pairs`] constructor.
 pub fn read_libsvm(path: &Path) -> Result<(CsrMatrix, Option<Vec<u32>>), IoError> {
     let file = std::fs::File::open(path)?;
     let reader = BufReader::new(file);
     let mut raw_rows: Vec<Vec<(u32, f32)>> = Vec::new();
-    let mut labels: Vec<i64> = Vec::new();
+    let mut line_nos: Vec<usize> = Vec::new();
+    let mut labels: Vec<f64> = Vec::new();
     let mut all_labeled = true;
     let mut saw_zero = false;
     let mut max_idx = 0u32;
@@ -45,7 +54,7 @@ pub fn read_libsvm(path: &Path) -> Result<(CsrMatrix, Option<Vec<u32>>), IoError
             continue;
         }
         let mut pairs = Vec::new();
-        let mut label: Option<i64> = None;
+        let mut label: Option<f64> = None;
         for (t, tok) in line.split_whitespace().enumerate() {
             if let Some((i, v)) = tok.split_once(':') {
                 let idx: u32 = match i.parse() {
@@ -60,39 +69,39 @@ pub fn read_libsvm(path: &Path) -> Result<(CsrMatrix, Option<Vec<u32>>), IoError
                 max_idx = max_idx.max(idx);
                 pairs.push((idx, val));
             } else if t == 0 {
-                label = tok.parse().ok();
-                if label.is_none() {
-                    return perr(lno + 1, format!("bad label {tok:?}"));
+                match tok.parse::<f64>() {
+                    // Normalize -0.0 so it cannot split into its own class.
+                    Ok(x) if x.is_finite() => label = Some(if x == 0.0 { 0.0 } else { x }),
+                    _ => return perr(lno + 1, format!("bad label {tok:?}")),
                 }
             } else {
                 return perr(lno + 1, format!("unexpected token {tok:?}"));
             }
         }
         all_labeled &= label.is_some();
-        labels.push(label.unwrap_or(0));
+        labels.push(label.unwrap_or(0.0));
         raw_rows.push(pairs);
+        line_nos.push(lno + 1);
     }
     let offset = if saw_zero { 0 } else { 1 };
-    let cols = (max_idx + 1 - offset) as usize;
-    let rows: Vec<SparseVec> = raw_rows
-        .into_iter()
-        .map(|pairs| {
-            SparseVec::from_pairs(
-                cols.max(1),
-                pairs.into_iter().map(|(i, v)| (i - offset, v)).collect(),
-            )
-        })
-        .collect();
-    let matrix = CsrMatrix::from_rows(cols.max(1), &rows);
+    let cols = ((max_idx + 1 - offset) as usize).max(1);
+    let mut rows: Vec<SparseVec> = Vec::with_capacity(raw_rows.len());
+    for (pairs, lno) in raw_rows.into_iter().zip(line_nos) {
+        let shifted: Vec<(u32, f32)> = pairs.into_iter().map(|(i, v)| (i - offset, v)).collect();
+        let row = SparseVec::try_from_pairs(cols, shifted)
+            .map_err(|msg| IoError::Parse { line: lno, msg })?;
+        rows.push(row);
+    }
+    let matrix = CsrMatrix::from_rows(cols, &rows);
     let labels = if all_labeled && !labels.is_empty() {
-        // Remap arbitrary integer labels to 0..k.
-        let mut uniq: Vec<i64> = labels.clone();
-        uniq.sort_unstable();
+        // Remap arbitrary numeric labels to 0..k (ascending order).
+        let mut uniq: Vec<f64> = labels.clone();
+        uniq.sort_unstable_by(f64::total_cmp);
         uniq.dedup();
         Some(
             labels
                 .iter()
-                .map(|l| uniq.binary_search(l).unwrap() as u32)
+                .map(|l| uniq.binary_search_by(|x| x.total_cmp(l)).unwrap() as u32)
                 .collect(),
         )
     } else {
@@ -102,17 +111,36 @@ pub fn read_libsvm(path: &Path) -> Result<(CsrMatrix, Option<Vec<u32>>), IoError
 }
 
 /// Write a matrix (and optional labels) in SVMlight format (1-based).
+///
+/// Without labels the label column is **omitted** entirely (the reader
+/// accepts label-less lines), so an unlabeled matrix round-trips to
+/// `labels = None` instead of a spurious all-zero labeling. An unlabeled
+/// **all-zero row** would serialize to an empty line that every reader
+/// skips, silently shrinking the matrix on round-trip — that case is
+/// rejected with an error (all-zero rows cannot be unit-normalized anyway;
+/// see [`CsrMatrix::drop_empty_rows`]). With labels, an empty row keeps
+/// its line via the label token.
 pub fn write_libsvm(path: &Path, m: &CsrMatrix, labels: Option<&[u32]>) -> Result<(), IoError> {
     let mut w = BufWriter::new(std::fs::File::create(path)?);
     for r in 0..m.rows() {
+        let row = m.row(r);
+        if labels.is_none() && row.nnz() == 0 {
+            return Err(IoError::Parse {
+                line: r + 1,
+                msg: format!(
+                    "row {r} is all-zero and unlabeled: it would serialize to an \
+                     empty line and be dropped on read (drop empty rows first)"
+                ),
+            });
+        }
+        let mut sep = "";
         if let Some(ls) = labels {
             write!(w, "{}", ls[r])?;
-        } else {
-            write!(w, "0")?;
+            sep = " ";
         }
-        let row = m.row(r);
         for (t, &c) in row.indices.iter().enumerate() {
-            write!(w, " {}:{}", c + 1, row.values[t])?;
+            write!(w, "{sep}{}:{}", c + 1, row.values[t])?;
+            sep = " ";
         }
         writeln!(w)?;
     }
@@ -173,7 +201,10 @@ pub fn read_matrix_market(path: &Path) -> Result<CsrMatrix, IoError> {
     if triples.len() != n {
         return perr(0, format!("expected {n} entries, found {}", triples.len()));
     }
-    // Group by row.
+    // Group by row; every row goes through the validating constructor so
+    // duplicate entries (forbidden in `general` coordinate files) and
+    // out-of-bounds columns surface as parse errors instead of silently
+    // corrupting downstream dot products.
     let mut per_row: Vec<Vec<(u32, f32)>> = vec![Vec::new(); r];
     for (i, j, v) in triples {
         if i as usize >= r || j as usize >= c {
@@ -181,10 +212,12 @@ pub fn read_matrix_market(path: &Path) -> Result<CsrMatrix, IoError> {
         }
         per_row[i as usize].push((j, v));
     }
-    let rows: Vec<SparseVec> = per_row
-        .into_iter()
-        .map(|pairs| SparseVec::from_pairs(c, pairs))
-        .collect();
+    let mut rows: Vec<SparseVec> = Vec::with_capacity(r);
+    for (i, pairs) in per_row.into_iter().enumerate() {
+        let row = SparseVec::try_from_pairs(c, pairs)
+            .map_err(|msg| IoError::Parse { line: 0, msg: format!("row {}: {msg}", i + 1) })?;
+        rows.push(row);
+    }
     Ok(CsrMatrix::from_rows(c, &rows))
 }
 
@@ -248,6 +281,83 @@ mod tests {
     }
 
     #[test]
+    fn libsvm_parses_float_labels() {
+        // Standard libsvm class labels are floats (`1.0`, `-1.0`); they
+        // must parse and remap to dense ids in ascending numeric order,
+        // merging with integer spellings of the same value.
+        let path = tmp("float-labels.svm");
+        std::fs::write(&path, "1.0 1:0.5\n-1.0 2:1.0\n2.5 1:0.1\n1 3:2.0\n").unwrap();
+        let (m, labels) = read_libsvm(&path).unwrap();
+        assert_eq!(m.rows(), 4);
+        // Ascending: -1.0 → 0, 1.0 → 1, 2.5 → 2.
+        assert_eq!(labels.unwrap(), vec![1, 0, 2, 1]);
+        // Non-numeric and non-finite labels still error.
+        std::fs::write(&path, "abc 1:0.5\n").unwrap();
+        assert!(read_libsvm(&path).is_err());
+        std::fs::write(&path, "nan 1:0.5\n").unwrap();
+        assert!(read_libsvm(&path).is_err());
+    }
+
+    #[test]
+    fn libsvm_unlabeled_round_trip_is_lossless() {
+        // Writer must omit the label column when there are no labels, so
+        // the reader reports None instead of a spurious all-zero labeling.
+        let ds = SynthConfig::small_demo().generate(3);
+        let path = tmp("rt-unlabeled.svm");
+        write_libsvm(&path, &ds.matrix, None).unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            first.lines().next().unwrap().starts_with(char::is_numeric)
+                && first.lines().next().unwrap().contains(':'),
+            "line must start with a feature, not a placeholder label"
+        );
+        let (m, labels) = read_libsvm(&path).unwrap();
+        assert!(labels.is_none(), "no labels in, no labels out");
+        assert_eq!(m.rows(), ds.matrix.rows());
+        assert_eq!(m.nnz(), ds.matrix.nnz());
+        assert_eq!(m.row(0).values, ds.matrix.row(0).values);
+    }
+
+    #[test]
+    fn libsvm_rejects_duplicate_feature_index() {
+        let path = tmp("dup.svm");
+        std::fs::write(&path, "1 3:1.0 3:2.0\n").unwrap();
+        let err = read_libsvm(&path).unwrap_err();
+        assert!(format!("{err}").contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn libsvm_write_rejects_unlabeled_empty_row() {
+        // Row 1 is all-zero: without a label it would vanish on read.
+        let rows = vec![
+            SparseVec::from_pairs(2, vec![(0, 1.0)]),
+            SparseVec::zeros(2),
+            SparseVec::from_pairs(2, vec![(1, 2.0)]),
+        ];
+        let m = CsrMatrix::from_rows(2, &rows);
+        let path = tmp("empty-row.svm");
+        let err = write_libsvm(&path, &m, None).unwrap_err();
+        assert!(format!("{err}").contains("all-zero"), "{err}");
+        // With labels the row keeps its line and the count survives.
+        write_libsvm(&path, &m, Some(&[0, 1, 0])).unwrap();
+        let (back, labels) = read_libsvm(&path).unwrap();
+        assert_eq!(back.rows(), 3);
+        assert_eq!(labels.unwrap().len(), 3);
+    }
+
+    #[test]
+    fn libsvm_rejects_non_finite_values() {
+        // `nan`/`inf` parse as valid f32s but would poison every dot
+        // product (and panic the truncation selector) downstream.
+        let path = tmp("nonfinite.svm");
+        for bad in ["1 1:nan\n", "1 1:inf\n", "1 2:-inf\n"] {
+            std::fs::write(&path, bad).unwrap();
+            let err = read_libsvm(&path).unwrap_err();
+            assert!(format!("{err}").contains("non-finite"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
     fn matrix_market_round_trip() {
         let ds = SynthConfig::small_demo().generate(2);
         let path = tmp("rt.mtx");
@@ -257,6 +367,18 @@ mod tests {
         assert_eq!(m.cols(), ds.matrix.cols());
         assert_eq!(m.nnz(), ds.matrix.nnz());
         assert_eq!(m.row(5).indices, ds.matrix.row(5).indices);
+    }
+
+    #[test]
+    fn matrix_market_rejects_duplicate_entry() {
+        let path = tmp("dup.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n1 1 2.0\n",
+        )
+        .unwrap();
+        let err = read_matrix_market(&path).unwrap_err();
+        assert!(format!("{err}").contains("duplicate"), "{err}");
     }
 
     #[test]

@@ -34,6 +34,13 @@ pub struct Centers {
     prev: DenseMatrix,
     /// `p(j) = ⟨c(j), c'(j)⟩`: self-similarity of each center's last move.
     p: Vec<f64>,
+    /// Per-center "sums changed since the last update" flags, maintained by
+    /// every sums mutation ([`Centers::rebuild`], [`Centers::apply_move`],
+    /// [`Centers::fold_point`]). [`Centers::update`] and
+    /// [`Centers::update_partial`] recompute (and charge a `p(j)` dot for)
+    /// **only** dirty centers — a clean center provably did not move, so
+    /// its `p(j)` is exactly 1 with no computation.
+    dirty: Vec<bool>,
 }
 
 impl Centers {
@@ -54,6 +61,7 @@ impl Centers {
             centers_t: DenseMatrix::zeros(d, k),
             centers,
             p: vec![1.0; k],
+            dirty: vec![false; k],
         };
         me.refresh_transpose();
         me
@@ -138,6 +146,7 @@ impl Centers {
         debug_assert_eq!(assign.len(), data.rows());
         self.sums.fill(0.0);
         self.counts.fill(0);
+        self.dirty.fill(true);
         for (i, &a) in assign.iter().enumerate() {
             let a = a as usize;
             self.counts[a] += 1;
@@ -184,6 +193,7 @@ impl Centers {
         });
         self.sums.fill(0.0);
         self.counts.fill(0);
+        self.dirty.fill(true);
         for (ps, pc) in parts {
             for (o, v) in self.sums.iter_mut().zip(ps) {
                 *o += v;
@@ -200,6 +210,8 @@ impl Centers {
         debug_assert_ne!(from, to);
         self.counts[from] -= 1;
         self.counts[to] += 1;
+        self.dirty[from] = true;
+        self.dirty[to] = true;
         let (bf, bt) = (from * self.d, to * self.d);
         for (t, &c) in row.indices.iter().enumerate() {
             let v = row.values[t] as f64;
@@ -208,21 +220,45 @@ impl Centers {
         }
     }
 
+    /// Fold one point into cluster `j`'s cached sum and count **without
+    /// removing it anywhere** — the mini-batch accumulation step. With
+    /// `n_j` points folded so far, the unit-scaled sum equals the running
+    /// mean updated at the decayed per-center learning rate `η = 1/n_j`
+    /// (Sculley 2010), renormalized to the sphere at the next
+    /// [`Centers::update_partial`].
+    pub fn fold_point(&mut self, row: RowView<'_>, j: usize) {
+        self.counts[j] += 1;
+        self.dirty[j] = true;
+        let base = j * self.d;
+        for (t, &c) in row.indices.iter().enumerate() {
+            self.sums[base + c as usize] += row.values[t] as f64;
+        }
+    }
+
     /// Recompute unit centers from the cached sums, leaving empty clusters
-    /// at their previous position (`p = 1`). Returns the number of
-    /// center·center dot products spent computing `p(j)` (= k for moved
-    /// centers), so callers can account for them.
+    /// at their previous position (`p = 1`). Only centers whose sums
+    /// actually changed since the last update (per-center dirty flags) are
+    /// recomputed; a clean center keeps its exact position and reports
+    /// `p(j) = 1` for free. Returns the number of center·center dot
+    /// products spent computing `p(j)` — exactly one per recomputed
+    /// center — so the `sims_center_center` counter (Fig. 1) reflects work
+    /// actually performed.
     pub fn update(&mut self) -> u64 {
         std::mem::swap(&mut self.centers, &mut self.prev);
         let mut dots = 0u64;
         for j in 0..self.k {
-            if self.counts[j] == 0 {
-                // Empty cluster: keep previous center.
-                let prev = self.prev.row(j).to_vec();
-                self.centers.row_mut(j).copy_from_slice(&prev);
+            if !self.dirty[j] || self.counts[j] == 0 {
+                // Clean center (sums untouched) or empty cluster: the
+                // center does not move. After the swap its position lives
+                // in `prev`; restore it (disjoint-field copy, no
+                // allocation) without charging a recomputation.
+                let (dst, src) = (self.centers.row_mut(j), self.prev.row(j));
+                dst.copy_from_slice(src);
                 self.p[j] = 1.0;
+                self.dirty[j] = false;
                 continue;
             }
+            self.dirty[j] = false;
             let base = j * self.d;
             let sum = &self.sums[base..base + self.d];
             let norm = sum.iter().map(|&v| v * v).sum::<f64>().sqrt();
@@ -234,14 +270,81 @@ impl Centers {
                 }
             } else {
                 // Degenerate (sum cancelled to zero): keep previous center.
-                let prev = self.prev.row(j).to_vec();
-                dst.copy_from_slice(&prev);
+                dst.copy_from_slice(self.prev.row(j));
             }
             self.p[j] = crate::bounds::clamp_sim(self.centers.row_dot(j, &self.prev, j));
             dots += 1;
         }
         self.refresh_transpose();
         dots
+    }
+
+    /// Mini-batch barrier: like [`Centers::update`] but touching only the
+    /// dirty centers — recompute each from its sums, optionally truncate it
+    /// to its `m` largest-magnitude coordinates (renormalized; Knittel
+    /// et al. 2021's sparse centroids), record `p(j)` against its previous
+    /// position, and refresh just its column of the transposed copy.
+    /// Untouched centers keep position and report `p(j) = 1`. Cost is
+    /// `O(touched · d)` instead of `O(k · d)`, which is what makes small
+    /// batches cheap. Returns the `p(j)` dot count, as [`Centers::update`].
+    pub fn update_partial(&mut self, truncate: Option<usize>) -> u64 {
+        let k = self.k;
+        let mut dots = 0u64;
+        for j in 0..k {
+            if !self.dirty[j] {
+                self.p[j] = 1.0;
+                continue;
+            }
+            self.dirty[j] = false;
+            if self.counts[j] == 0 {
+                self.p[j] = 1.0;
+                continue;
+            }
+            let base = j * self.d;
+            let norm = self.sums[base..base + self.d]
+                .iter()
+                .map(|&v| v * v)
+                .sum::<f64>()
+                .sqrt();
+            if norm <= 0.0 {
+                // Degenerate sum: the center stays where it is.
+                self.p[j] = 1.0;
+                continue;
+            }
+            // Current position becomes the "before" for p(j)…
+            let (dst, src) = (self.prev.row_mut(j), self.centers.row(j));
+            dst.copy_from_slice(src);
+            // …then recompute (and optionally truncate) the center.
+            let inv = 1.0 / norm;
+            {
+                let dst = self.centers.row_mut(j);
+                for (o, &s) in dst.iter_mut().zip(self.sums[base..base + self.d].iter()) {
+                    *o = (s * inv) as f32;
+                }
+            }
+            if let Some(m) = truncate {
+                truncate_unit_row(self.centers.row_mut(j), m);
+            }
+            self.p[j] = crate::bounds::clamp_sim(self.centers.row_dot(j, &self.prev, j));
+            dots += 1;
+            let row = self.centers.row(j);
+            let t = self.centers_t.data_mut();
+            for (c, &v) in row.iter().enumerate() {
+                t[c * k + j] = v;
+            }
+        }
+        dots
+    }
+
+    /// Truncate every current center to its `m` largest-magnitude
+    /// coordinates and renormalize (no-ops on centers that are already
+    /// `m`-sparse). Establishes the sparse-centroid invariant on initial
+    /// centers before a truncated mini-batch run.
+    pub fn truncate_centers(&mut self, m: usize) {
+        for j in 0..self.k {
+            truncate_unit_row(self.centers.row_mut(j), m);
+        }
+        self.refresh_transpose();
     }
 
     /// Min and max of `p(j)` over `j ≠ excluded`, plus the same over all j.
@@ -251,6 +354,49 @@ impl Centers {
     /// yields all k per-cluster values in O(k).
     pub fn p_extremes(&self) -> PExtremes {
         PExtremes::from_p(&self.p)
+    }
+}
+
+/// Truncate one unit row to its `m` largest-magnitude coordinates and
+/// re-scale the survivors back to unit length (the Knittel-style sparse
+/// centroid). Deterministic: ties at the threshold magnitude keep the
+/// lowest column indices. No-op when the row already has ≤ `m` non-zeros,
+/// is all-zero, or `m == 0` (treated as "no truncation").
+fn truncate_unit_row(row: &mut [f32], m: usize) {
+    if m == 0 {
+        return;
+    }
+    let nnz = row.iter().filter(|&&v| v != 0.0).count();
+    if nnz <= m {
+        return;
+    }
+    // Select the m-th largest magnitude in O(d).
+    let mut mags: Vec<f32> = row.iter().filter(|&&v| v != 0.0).map(|v| v.abs()).collect();
+    let cut = mags.len() - m;
+    let (_, thr, _) = mags.select_nth_unstable_by(cut, |a, b| a.partial_cmp(b).unwrap());
+    let thr = *thr;
+    // Keep everything strictly above the threshold, then fill the quota
+    // among threshold-magnitude entries in ascending index order.
+    let greater = row.iter().filter(|&&v| v.abs() > thr).count();
+    let mut quota_eq = m - greater;
+    let mut norm_sq = 0.0f64;
+    for v in row.iter_mut() {
+        let a = v.abs();
+        let keep = a > thr || (a == thr && quota_eq > 0);
+        if keep {
+            if a == thr {
+                quota_eq -= 1;
+            }
+            norm_sq += (*v as f64) * (*v as f64);
+        } else {
+            *v = 0.0;
+        }
+    }
+    if norm_sq > 0.0 {
+        let inv = (1.0 / norm_sq.sqrt()) as f32;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
     }
 }
 
@@ -403,6 +549,112 @@ mod tests {
             assert!((p - 1.0).abs() < 1e-6);
         }
         drop(p1);
+    }
+
+    #[test]
+    fn update_charges_only_changed_centers() {
+        // Three centers so an untouched one exists alongside a moved pair.
+        let data = toy_data();
+        let initial = DenseMatrix::from_vec(
+            3,
+            3,
+            vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0],
+        );
+        let mut c = Centers::from_initial(initial);
+        c.rebuild(&data, &[0, 0, 1, 2]);
+        // Rebuild dirties everything: all three non-empty centers charge.
+        assert_eq!(c.update(), 3);
+        // Nothing changed since: no p(j) recomputation, p exactly 1.
+        assert_eq!(c.update(), 0);
+        assert!(c.p().iter().all(|&p| p == 1.0));
+        // One move touches exactly two centers; the third stays clean.
+        let before = c.center(2).to_vec();
+        c.apply_move(data.row(1), 0, 1);
+        assert_eq!(c.update(), 2);
+        assert_eq!(c.p()[2], 1.0);
+        assert_eq!(c.center(2), &before[..], "clean center must not move");
+    }
+
+    #[test]
+    fn fold_point_and_update_partial_match_full_update() {
+        let data = toy_data();
+        let mut a = Centers::from_initial(initial_centers());
+        a.rebuild(&data, &[0, 0, 1, 1]);
+        a.update();
+        // Fold a batch point into cluster 0 and update partially…
+        a.fold_point(data.row(2), 0);
+        let dots = a.update_partial(None);
+        assert_eq!(dots, 1, "only the folded center recomputes");
+        assert_eq!(a.count(0), 3);
+        // …the untouched center reports p = 1, the folded one moved.
+        assert_eq!(a.p()[1], 1.0);
+        assert!(a.p()[0] < 1.0);
+        // The folded center matches a full update from the same sums.
+        let mut b = Centers::from_initial(initial_centers());
+        b.rebuild(&data, &[0, 0, 1, 1]);
+        b.update();
+        b.fold_point(data.row(2), 0);
+        b.update();
+        for (x, y) in a.center(0).iter().zip(b.center(0)) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // And the transposed copy stayed consistent: sims_all must agree
+        // with per-center gather dots.
+        let mut out = vec![0.0f64; 2];
+        a.sims_all(data.row(3), &mut out);
+        for (j, &s) in out.iter().enumerate() {
+            let direct = data.row(3).dot_dense(a.center(j));
+            assert!((s - direct).abs() < 1e-9, "center {j}: {s} vs {direct}");
+        }
+    }
+
+    #[test]
+    fn truncation_keeps_top_m_and_unit_norm() {
+        let mut row = vec![0.1f32, -0.5, 0.2, 0.0, 0.4, -0.1, 0.3];
+        truncate_unit_row(&mut row, 3);
+        // Survivors: |−0.5|, |0.4|, |0.3|.
+        assert_eq!(row.iter().filter(|&&v| v != 0.0).count(), 3);
+        assert_eq!(row[3], 0.0);
+        assert_eq!(row[0], 0.0);
+        assert_eq!(row[2], 0.0);
+        assert_eq!(row[5], 0.0);
+        let norm: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        assert!((norm - 1.0).abs() < 1e-6, "norm² = {norm}");
+        assert!(row[1] < 0.0, "signs survive truncation");
+        // Ties keep the lowest indices, deterministically.
+        let mut tied = vec![0.5f32, 0.5, 0.5, 0.5];
+        truncate_unit_row(&mut tied, 2);
+        assert!(tied[0] > 0.0 && tied[1] > 0.0);
+        assert_eq!(&tied[2..], &[0.0, 0.0]);
+        // m ≥ nnz and m = 0 are no-ops.
+        let mut short = vec![0.6f32, 0.8];
+        let copy = short.clone();
+        truncate_unit_row(&mut short, 5);
+        assert_eq!(short, copy);
+        truncate_unit_row(&mut short, 0);
+        assert_eq!(short, copy);
+    }
+
+    #[test]
+    fn truncate_centers_preserves_unit_norm_and_transpose() {
+        let data = toy_data();
+        let mut c = Centers::from_initial(initial_centers());
+        c.rebuild(&data, &[0, 0, 1, 1]);
+        c.update();
+        c.truncate_centers(1);
+        for j in 0..2 {
+            let norm: f64 = c
+                .center(j)
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum();
+            assert!((norm - 1.0).abs() < 1e-6);
+            assert!(c.center(j).iter().filter(|&&v| v != 0.0).count() <= 1);
+            // Transposed copy refreshed.
+            let mut out = vec![0.0f64; 2];
+            c.sims_all(data.row(0), &mut out);
+            assert!((out[j] - data.row(0).dot_dense(c.center(j))).abs() < 1e-9);
+        }
     }
 
     #[test]

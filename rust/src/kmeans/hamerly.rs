@@ -96,10 +96,17 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_>, cfg: &KMeansConfig, use_s_test: bool) 
                         continue;
                     }
                     // Tighten l(i) and re-test before the expensive full
-                    // scan.
+                    // scan. Book each post-tighten success into its own
+                    // channel: a u-test success is a bound skip, an s-test
+                    // success is a whole-loop skip (the Fig. 1 per-channel
+                    // pruning stats must not conflate the two).
                     l[li] = view.similarity(i, a, &mut out.iter);
-                    if l[li] >= u[li] || (use_s_test && l[li] >= s[a]) {
+                    if l[li] >= u[li] {
                         out.iter.bound_skips += 1;
+                        continue;
+                    }
+                    if use_s_test && l[li] >= s[a] {
+                        out.iter.loop_skips += 1;
                         continue;
                     }
                     // Bounds failed: recompute similarities to all other

@@ -1,0 +1,266 @@
+//! Mini-batch spherical k-means — the large-corpus workload engine.
+//!
+//! The exact variants (see [`crate::kmeans`]) pay at least one full
+//! `O(N·k)` assignment pass per iteration. For corpora far beyond what one
+//! pass can afford, mini-batch optimization (Sculley 2010; Knittel et al.
+//! 2021 for the sparse spherical regime) converges on a small **sampled
+//! batch** per step instead: assign only the batch against frozen centers,
+//! then fold each batch point into its center's cached sum — the running
+//! mean updated at the decayed per-center learning rate `η_j = 1/n_j` —
+//! and re-scale the touched centers to unit length. Quality is a bounded
+//! approximation of the full-batch objective (measure it with
+//! [`crate::metrics::objective_gap`]); the payoff is an order of magnitude
+//! fewer point×center similarities (`bench_minibatch` demonstrates the
+//! trade on a 100k-row corpus).
+//!
+//! **Determinism.** Results are bit-identical for every
+//! [`KMeansConfig::threads`] setting, by the same reasoning as the exact
+//! variants' shard contract:
+//!
+//! 1. Batches are sampled on the coordinating thread from a dedicated
+//!    [`Xoshiro256`] substream of [`KMeansConfig::seed`] — the sequence
+//!    never observes worker scheduling.
+//! 2. Batch assignment runs sharded over the batch with **frozen**
+//!    centers: each sampled point's nearest center is a pure function of
+//!    the last barrier's state.
+//! 3. The fold ([`Centers::fold_point`]) replays sequentially in batch
+//!    order at the barrier, and the partial center update
+//!    ([`Centers::update_partial`]) walks centers in ascending index
+//!    order.
+//!
+//! **Truncation.** With [`KMeansConfig::truncate`]` = Some(m)` every
+//! recomputed center keeps only its `m` largest-magnitude coordinates
+//! (renormalized to the sphere), bounding each center's support as in
+//! Knittel et al.'s sparsified centroids. Centers are still **stored
+//! dense** here, so truncation does not yet make a similarity cheaper —
+//! it pins the `m`-sparse/unit-norm invariant (the prerequisite for a
+//! sparse center layout with sparse×sparse similarity kernels, a ROADMAP
+//! follow-up) at a small additional objective cost.
+//!
+//! One epoch draws `ceil(n / batch_size)` distinct-sample batches (one
+//! corpus-worth); the run stops after [`KMeansConfig::epochs`] epochs or
+//! as soon as no center moved more than [`KMeansConfig::tol`] (cosine
+//! distance) across a whole epoch. A final sharded full assignment pass
+//! produces the reported assignments and objective.
+//!
+//! ```no_run
+//! use sphkm::data::synth::SynthConfig;
+//! use sphkm::kmeans::{minibatch, KMeansConfig};
+//! let ds = SynthConfig::small_demo().generate(1);
+//! let cfg = KMeansConfig::new(8).batch_size(256).epochs(8).threads(0);
+//! let r = minibatch::run(&ds.matrix, &cfg);
+//! println!("approx objective = {}", r.objective);
+//! ```
+
+use super::{Centers, IterStats, KMeansConfig, KMeansResult, RunStats, SimView};
+use crate::runtime::parallel::{split_mut, Plan, Pool};
+use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::util::rng::Xoshiro256;
+use crate::util::timer::Stopwatch;
+use std::ops::Range;
+
+/// Substream index separating the batch-sampling RNG from every other
+/// consumer of the master seed.
+const BATCH_STREAM: u64 = 0x4D42_5348; // "MBSH"
+
+/// Cluster `data` (rows must be unit-normalized) with the mini-batch
+/// engine, seeding initial centers with [`KMeansConfig::init`].
+pub fn run(data: &CsrMatrix, cfg: &KMeansConfig) -> KMeansResult {
+    let init = crate::init::seed_centers(data, cfg.k, &cfg.init, cfg.seed);
+    run_with_centers(data, init.centers, cfg)
+}
+
+/// Mini-batch clustering from explicit initial centers (rows will be
+/// normalized) — the entry point the benchmarks and tests use so the
+/// full-batch baseline sees identical initial centers.
+pub fn run_with_centers(
+    data: &CsrMatrix,
+    initial_centers: DenseMatrix,
+    cfg: &KMeansConfig,
+) -> KMeansResult {
+    assert_eq!(initial_centers.rows(), cfg.k, "initial centers vs k");
+    assert_eq!(initial_centers.cols(), data.cols(), "center dimensionality");
+    assert!(cfg.k >= 1, "need at least one cluster");
+    assert!(cfg.batch_size >= 1, "batch size must be positive");
+
+    let n = data.rows();
+    let k = cfg.k;
+    let b = cfg.batch_size.min(n.max(1));
+    let batches_per_epoch = n.div_ceil(b.max(1));
+    let mut centers = Centers::from_initial(initial_centers);
+    if let Some(m) = cfg.truncate {
+        // Establish the m-sparse invariant on the initial centers too.
+        centers.truncate_centers(m);
+    }
+    // A corpus whose *largest* plan (the final full pass) is a single
+    // shard can never use more than one worker — skip thread-pool
+    // construction, as `Ctx::new` does for the exact variants.
+    let pool = Pool::new(if Plan::for_rows(n).len() <= 1 { 1 } else { cfg.threads });
+    let mut rng = Xoshiro256::substream(cfg.seed, BATCH_STREAM);
+    let mut assign = vec![0u32; n];
+    let mut stats = RunStats::default();
+    let mut basg = vec![0u32; b];
+    let mut converged = false;
+    let mut epochs_run = 0usize;
+
+    for _epoch in 0..cfg.epochs {
+        let sw = Stopwatch::start();
+        let mut iter = IterStats::default();
+        // Epoch-start snapshot for the movement-based convergence test.
+        let snapshot = centers.centers().clone();
+        for _batch in 0..batches_per_epoch {
+            let batch = rng.sample_distinct(n, b);
+            // Sharded batch assignment against frozen centers.
+            let plan = Plan::for_rows(b);
+            let outs = {
+                let view = SimView { data, centers: &centers, k };
+                let batch_ref: &[usize] = &batch;
+                let mut works: Vec<(Range<usize>, &mut [u32])> =
+                    Vec::with_capacity(plan.len());
+                {
+                    let shards = split_mut(&plan, 1, &mut basg);
+                    for (r, a) in plan.ranges().iter().cloned().zip(shards) {
+                        works.push((r, a));
+                    }
+                }
+                pool.run(works, |_, (range, asg)| {
+                    let mut it = IterStats::default();
+                    let mut scratch = vec![0.0f64; k];
+                    for (li, pos) in range.enumerate() {
+                        let (bj, _, _) =
+                            view.similarities_full(batch_ref[pos], &mut it, &mut scratch);
+                        asg[li] = bj as u32;
+                    }
+                    it
+                })
+            };
+            for o in &outs {
+                iter.absorb(o);
+            }
+            // Sequential decayed-rate fold, in batch order, then a partial
+            // center update touching only the folded centers.
+            for (pos, &i) in batch.iter().enumerate() {
+                let j = basg[pos];
+                if assign[i] != j {
+                    assign[i] = j;
+                    iter.reassignments += 1;
+                }
+                centers.fold_point(data.row(i), j as usize);
+            }
+            iter.sims_center_center += centers.update_partial(cfg.truncate);
+        }
+        // Largest per-center movement over the whole epoch, in cosine
+        // distance (k center·center dots, charged).
+        let mut shift = 0.0f64;
+        for j in 0..k {
+            let s = centers.centers().row_dot(j, &snapshot, j);
+            shift = shift.max(1.0 - s);
+        }
+        iter.sims_center_center += k as u64;
+        iter.wall_ms = sw.ms();
+        stats.iters.push(iter);
+        epochs_run += 1;
+        if shift <= cfg.tol {
+            converged = true;
+            break;
+        }
+    }
+
+    // Final sharded full assignment pass: the reported clustering. The
+    // objective accumulates per shard from the best similarity the pass
+    // already computes (the shard grid is a pure function of `n`, so the
+    // reduction tree — and the resulting bits — never depend on the
+    // thread count).
+    let mut obj = 0.0f64;
+    {
+        let sw = Stopwatch::start();
+        let mut iter = IterStats::default();
+        let plan = Plan::for_rows(n);
+        let outs = {
+            let view = SimView { data, centers: &centers, k };
+            let mut works: Vec<(Range<usize>, &mut [u32])> = Vec::with_capacity(plan.len());
+            {
+                let shards = split_mut(&plan, 1, &mut assign);
+                for (r, a) in plan.ranges().iter().cloned().zip(shards) {
+                    works.push((r, a));
+                }
+            }
+            pool.run(works, |_, (range, asg)| {
+                let mut it = IterStats::default();
+                let mut scratch = vec![0.0f64; k];
+                let mut shard_obj = 0.0f64;
+                for (li, i) in range.enumerate() {
+                    let (bj, best, _) = view.similarities_full(i, &mut it, &mut scratch);
+                    if asg[li] != bj as u32 {
+                        asg[li] = bj as u32;
+                        it.reassignments += 1;
+                    }
+                    shard_obj += 1.0 - best;
+                }
+                (it, shard_obj)
+            })
+        };
+        for (it, shard_obj) in &outs {
+            iter.absorb(it);
+            obj += shard_obj;
+        }
+        iter.wall_ms = sw.ms();
+        stats.iters.push(iter);
+    }
+
+    KMeansResult {
+        mean_similarity: 1.0 - obj / n.max(1) as f64,
+        objective: obj,
+        assignments: assign,
+        centers: centers.centers().clone(),
+        iterations: epochs_run,
+        converged,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthConfig;
+    use crate::init::{seed_centers, InitMethod};
+
+    #[test]
+    fn runs_and_reports_consistent_result() {
+        let ds = SynthConfig::small_demo().generate(41);
+        let cfg = KMeansConfig::new(6).batch_size(64).epochs(4).seed(2);
+        let r = run(&ds.matrix, &cfg);
+        assert_eq!(r.assignments.len(), ds.matrix.rows());
+        assert!(r.assignments.iter().all(|&a| (a as usize) < 6));
+        assert!(r.iterations <= 4);
+        // One stats entry per epoch plus the final full pass.
+        assert_eq!(r.stats.iters.len(), r.iterations + 1);
+        // The reported objective matches a recomputation from the result.
+        let recomputed =
+            crate::metrics::objective(&ds.matrix, &r.assignments, &r.centers);
+        assert!((recomputed - r.objective).abs() < 1e-9 * (1.0 + r.objective));
+    }
+
+    #[test]
+    fn zero_epochs_degenerates_to_nearest_initial_center() {
+        let ds = SynthConfig::small_demo().generate(43);
+        let init = seed_centers(&ds.matrix, 5, &InitMethod::Uniform, 7);
+        let cfg = KMeansConfig::new(5).epochs(0);
+        let r = run_with_centers(&ds.matrix, init.centers.clone(), &cfg);
+        assert_eq!(r.iterations, 0);
+        assert!(!r.converged);
+        // Exactly the initial full assignment: n·k similarities.
+        assert_eq!(
+            r.stats.total_point_center(),
+            (ds.matrix.rows() * 5) as u64
+        );
+    }
+
+    #[test]
+    fn batch_size_larger_than_corpus_is_clamped() {
+        let ds = SynthConfig::small_demo().generate(47);
+        let cfg = KMeansConfig::new(4).batch_size(1 << 20).epochs(2).seed(5);
+        let r = run(&ds.matrix, &cfg);
+        assert_eq!(r.assignments.len(), ds.matrix.rows());
+    }
+}

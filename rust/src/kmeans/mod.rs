@@ -19,6 +19,16 @@
 //! produces the same assignment sequence as [`Variant::Standard`] (this is
 //! asserted by the `exactness` integration tests).
 //!
+//! Beyond the exact family, the [`minibatch`] submodule hosts the
+//! **mini-batch engine** for corpora too large for full-batch passes: it
+//! trades a bounded approximation of the objective for an order of
+//! magnitude fewer point×center similarity computations (deterministic,
+//! sharded, optionally with Knittel-style truncated sparse centroids). It
+//! is configured through the same [`KMeansConfig`] (`batch_size`, `epochs`,
+//! `tol`, `truncate`) but entered via [`minibatch::run`] /
+//! [`minibatch::run_with_centers`] — it is deliberately *not* a
+//! [`Variant`], because it does not satisfy the exactness contract above.
+//!
 //! # Parallel execution
 //!
 //! The assignment phase of every variant runs on the sharded executor of
@@ -55,6 +65,7 @@
 //! ```
 
 pub mod centers;
+pub mod minibatch;
 pub mod stats;
 
 mod elkan;
@@ -185,6 +196,24 @@ pub struct KMeansConfig {
     /// way; the guarded rule is provably the tightest single bound (an
     /// improvement over the paper — see `bench_bounds` for the ablation).
     pub tight_hamerly_bound: bool,
+    /// Mini-batch engine only ([`minibatch`]): points sampled per batch.
+    /// Clamped to the row count at run time. Ignored by the exact
+    /// full-batch variants.
+    pub batch_size: usize,
+    /// Mini-batch engine only: maximum number of epochs; each epoch draws
+    /// `ceil(n / batch_size)` deterministic batches (one corpus-worth of
+    /// samples).
+    pub epochs: usize,
+    /// Mini-batch engine only: convergence tolerance on the largest
+    /// per-epoch center movement `1 − ⟨c_j, c'_j⟩` (cosine distance);
+    /// the run stops early once every center moved less than this over a
+    /// whole epoch.
+    pub tol: f64,
+    /// Mini-batch engine only: optional center truncation — keep only the
+    /// `m` largest-magnitude coordinates of each center, renormalized to
+    /// unit length (Knittel et al. 2021's sparsified centroids). `None`
+    /// keeps exact dense centers.
+    pub truncate: Option<usize>,
 }
 
 impl KMeansConfig {
@@ -201,6 +230,10 @@ impl KMeansConfig {
             yinyang_groups: None,
             fast_standard: true,
             tight_hamerly_bound: false,
+            batch_size: 1024,
+            epochs: 10,
+            tol: 1e-4,
+            truncate: None,
         }
     }
 
@@ -244,6 +277,30 @@ impl KMeansConfig {
     /// Set the worker-thread count (see [`KMeansConfig::threads`]).
     pub fn threads(mut self, t: usize) -> Self {
         self.threads = t;
+        self
+    }
+
+    /// Set the mini-batch size (see [`KMeansConfig::batch_size`]).
+    pub fn batch_size(mut self, b: usize) -> Self {
+        self.batch_size = b;
+        self
+    }
+
+    /// Set the mini-batch epoch cap (see [`KMeansConfig::epochs`]).
+    pub fn epochs(mut self, e: usize) -> Self {
+        self.epochs = e;
+        self
+    }
+
+    /// Set the mini-batch convergence tolerance (see [`KMeansConfig::tol`]).
+    pub fn tol(mut self, t: f64) -> Self {
+        self.tol = t;
+        self
+    }
+
+    /// Set the center-truncation knob (see [`KMeansConfig::truncate`]).
+    pub fn truncate(mut self, m: Option<usize>) -> Self {
+        self.truncate = m;
         self
     }
 }
@@ -687,6 +744,16 @@ mod tests {
         assert_eq!(cfg.max_iter, 50);
         assert_eq!(cfg.threads, 4);
         assert_eq!(KMeansConfig::new(2).threads, 1, "serial by default");
+        let mb = KMeansConfig::new(3)
+            .batch_size(512)
+            .epochs(6)
+            .tol(1e-3)
+            .truncate(Some(64));
+        assert_eq!(mb.batch_size, 512);
+        assert_eq!(mb.epochs, 6);
+        assert_eq!(mb.tol, 1e-3);
+        assert_eq!(mb.truncate, Some(64));
+        assert_eq!(KMeansConfig::new(2).truncate, None, "dense by default");
     }
 
     #[test]

@@ -27,9 +27,13 @@ USAGE:
                 [--seed N] [--scale S] [--max-iter M] [--stats] [--labels]
                 [--threads T] # sharded assignment: 0 = all cores, 1 = serial
                 [--preinit]   # §7: pre-initialize bounds from k-means++
+                [--minibatch] # approximate mini-batch engine (large corpora)
+                [--batch-size B] [--epochs E] [--tol T]
+                [--truncate M] # keep top-M coords per center (0 = dense)
   sphkm sweep --config FILE.cfg   # cross-product runs from a config file
   sphkm gen --data <dataset> --out FILE.svm [--scale S] [--seed N]
   sphkm bench --exp table1|table2|table3|fig1|fig2|ablation-cc|ablation-preinit
+              |minibatch
               [--scale S] [--reps R] [--ks 2,10,20] [--quick] [--k K]
               [--threads T]
   sphkm info
@@ -208,7 +212,17 @@ fn main() {
                 variant.name()
             );
             let sw = sphkm::util::timer::Stopwatch::start();
-            let r = if args.flag("preinit") {
+            let r = if args.flag("minibatch") {
+                // Approximate mini-batch engine (ignores --algo).
+                let trunc: usize = args.get_or("truncate", 0).unwrap_or(0);
+                let mcfg = cfg
+                    .clone()
+                    .batch_size(args.get_or("batch-size", 1024).unwrap_or(1024))
+                    .epochs(args.get_or("epochs", 10).unwrap_or(10))
+                    .tol(args.get_or("tol", 1e-4).unwrap_or(1e-4))
+                    .truncate(if trunc == 0 { None } else { Some(trunc) });
+                sphkm::kmeans::minibatch::run(&ds.matrix, &mcfg)
+            } else if args.flag("preinit") {
                 // §7 synergy: consume the seeding's similarity matrix.
                 let outcome =
                     sphkm::init::seed_centers_with_bounds(&ds.matrix, k, &init, seed);
@@ -286,6 +300,7 @@ fn main() {
                 "fig2" => { experiments::fig2(&opts); }
                 "ablation-cc" => { experiments::ablation_cc(&opts, k.min(50)); }
                 "ablation-preinit" => { experiments::ablation_preinit(&opts, k.min(50)); }
+                "minibatch" => { experiments::minibatch(&opts, k.min(50)); }
                 other => {
                     eprintln!("unknown experiment: {other}");
                     usage()

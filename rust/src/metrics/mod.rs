@@ -7,6 +7,7 @@ mod silhouette;
 pub use silhouette::silhouette_sampled;
 
 use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::util::rng::Xoshiro256;
 
 /// The spherical k-means objective `Σᵢ (1 − ⟨xᵢ, c(a(i))⟩)` (lower is
 /// better) for an arbitrary assignment/centers pair.
@@ -17,6 +18,50 @@ pub fn objective(data: &CsrMatrix, assign: &[u32], centers: &DenseMatrix) -> f64
         obj += 1.0 - data.row(i).dot_dense(centers.row(assign[i] as usize));
     }
     obj
+}
+
+/// Seeded Monte-Carlo estimate of [`objective`] on a uniform sample of
+/// `sample` distinct rows, scaled up to the full-corpus value. With
+/// `sample ≥ rows` it computes the exact objective. Deterministic in
+/// `seed`, so approximate engines (the mini-batch subsystem) can be
+/// regression-tested on corpora where the exact `O(N)` evaluation is the
+/// dominant cost.
+pub fn objective_sampled(
+    data: &CsrMatrix,
+    assign: &[u32],
+    centers: &DenseMatrix,
+    sample: usize,
+    seed: u64,
+) -> f64 {
+    assert_eq!(assign.len(), data.rows());
+    let n = data.rows();
+    if n == 0 {
+        return 0.0;
+    }
+    if sample >= n {
+        return objective(data, assign, centers);
+    }
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let rows = rng.sample_distinct(n, sample.max(1));
+    let mut obj = 0.0;
+    for &i in &rows {
+        obj += 1.0 - data.row(i).dot_dense(centers.row(assign[i] as usize));
+    }
+    obj * n as f64 / rows.len() as f64
+}
+
+/// Relative objective gap of a candidate clustering against a reference
+/// objective: `(candidate − reference) / reference`. Positive means the
+/// candidate is worse (spherical k-means objectives decrease with
+/// quality); a mini-batch run within the acceptance bar satisfies
+/// `objective_gap(mb, full) ≤ 0.02`. Near-zero references (degenerate
+/// perfect clusterings) fall back to the absolute difference so the gap
+/// stays finite.
+pub fn objective_gap(candidate: f64, reference: f64) -> f64 {
+    if reference.abs() < 1e-12 {
+        return candidate - reference;
+    }
+    (candidate - reference) / reference
 }
 
 /// Contingency table between two labelings.
@@ -153,6 +198,36 @@ mod tests {
         let a = vec![0, 0, 1, 1, 2, 2, 0, 1];
         let b = vec![1, 1, 0, 0, 2, 1, 0, 1];
         assert!((nmi(&a, &b) - nmi(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn objective_sampled_estimates_exact_value() {
+        use crate::data::synth::SynthConfig;
+        let ds = SynthConfig::small_demo().generate(31);
+        let r = crate::kmeans::run(
+            &ds.matrix,
+            &crate::kmeans::KMeansConfig::new(6).seed(3),
+        );
+        let exact = objective(&ds.matrix, &r.assignments, &r.centers);
+        // sample ≥ rows: exact.
+        let full = objective_sampled(&ds.matrix, &r.assignments, &r.centers, 10_000, 1);
+        assert_eq!(full, exact);
+        // Seeded: same seed, same estimate.
+        let a = objective_sampled(&ds.matrix, &r.assignments, &r.centers, 100, 7);
+        let b = objective_sampled(&ds.matrix, &r.assignments, &r.centers, 100, 7);
+        assert_eq!(a, b);
+        // A third of the corpus estimates within a loose relative band.
+        assert!(
+            (a - exact).abs() < 0.5 * exact.max(1.0),
+            "estimate {a} too far from exact {exact}"
+        );
+    }
+
+    #[test]
+    fn objective_gap_signs_and_degenerate_reference() {
+        assert!((objective_gap(102.0, 100.0) - 0.02).abs() < 1e-12);
+        assert!((objective_gap(98.0, 100.0) + 0.02).abs() < 1e-12);
+        assert_eq!(objective_gap(0.5, 0.0), 0.5, "absolute fallback");
     }
 
     #[test]

@@ -51,7 +51,13 @@ impl<'a> RowView<'a> {
 }
 
 impl CsrMatrix {
-    /// Assemble from raw CSR parts (validated).
+    /// Assemble from raw CSR parts. Shape invariants (lengths, indptr end)
+    /// are always asserted; the per-row invariants (monotone indptr,
+    /// strictly increasing sorted indices, column bounds) are
+    /// `debug_assert`-only — this is the trusted constructor for parts
+    /// built by this crate. Untrusted parts (external files) must go
+    /// through [`CsrMatrix::try_from_parts`], which validates everything
+    /// with real errors in every build profile.
     pub fn from_parts(
         rows: usize,
         cols: usize,
@@ -69,6 +75,63 @@ impl CsrMatrix {
             debug_assert!(s.last().map(|&c| (c as usize) < cols).unwrap_or(true));
         }
         Self { rows, cols, indptr, indices, values }
+    }
+
+    /// Validating constructor for **untrusted** CSR parts: performs every
+    /// check [`CsrMatrix::from_parts`] only `debug_assert`s — indptr
+    /// length/monotonicity/end, parallel index/value lengths, strictly
+    /// increasing per-row indices (no duplicates), and column bounds —
+    /// returning a descriptive error instead of silently corrupting the
+    /// merge dot products in release builds.
+    pub fn try_from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<Self, String> {
+        if indptr.len() != rows + 1 {
+            return Err(format!(
+                "indptr length {} does not match rows {rows} + 1",
+                indptr.len()
+            ));
+        }
+        if *indptr.last().unwrap_or(&0) != indices.len() {
+            return Err(format!(
+                "indptr end {} does not match nnz {}",
+                indptr.last().unwrap_or(&0),
+                indices.len()
+            ));
+        }
+        if indices.len() != values.len() {
+            return Err(format!(
+                "index/value length mismatch: {} vs {}",
+                indices.len(),
+                values.len()
+            ));
+        }
+        if let Some(w) = indptr.windows(2).find(|w| w[0] > w[1]) {
+            return Err(format!("indptr not monotone: {} before {}", w[0], w[1]));
+        }
+        for r in 0..rows {
+            let s = &indices[indptr[r]..indptr[r + 1]];
+            for w in s.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!(
+                        "row {r}: indices not strictly increasing ({} then {})",
+                        w[0], w[1]
+                    ));
+                }
+            }
+            if let Some(&last) = s.last() {
+                if last as usize >= cols {
+                    return Err(format!(
+                        "row {r}: index {last} out of bounds for {cols} columns"
+                    ));
+                }
+            }
+        }
+        Ok(Self { rows, cols, indptr, indices, values })
     }
 
     /// Build from a list of sparse rows (all must share `cols`).
@@ -267,6 +330,50 @@ mod tests {
         assert_eq!(m.row(0).nnz(), 2);
         assert_eq!(m.row(1).nnz(), 0);
         assert!((m.density() - 4.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn try_from_parts_validates_untrusted_input() {
+        // The same parts `small()` trusts pass the validating path.
+        let ok = CsrMatrix::try_from_parts(
+            3,
+            3,
+            vec![0, 2, 2, 4],
+            vec![0, 2, 1, 2],
+            vec![1.0, 2.0, 3.0, 4.0],
+        );
+        assert_eq!(ok.unwrap(), small());
+        // Unsorted row.
+        assert!(CsrMatrix::try_from_parts(
+            1,
+            3,
+            vec![0, 2],
+            vec![2, 0],
+            vec![1.0, 2.0]
+        )
+        .unwrap_err()
+        .contains("strictly increasing"));
+        // Column out of bounds.
+        assert!(CsrMatrix::try_from_parts(
+            1,
+            3,
+            vec![0, 1],
+            vec![3],
+            vec![1.0]
+        )
+        .unwrap_err()
+        .contains("out of bounds"));
+        // Non-monotone indptr.
+        assert!(CsrMatrix::try_from_parts(
+            2,
+            3,
+            vec![0, 2, 1],
+            vec![0],
+            vec![1.0]
+        )
+        .is_err());
+        // indptr end disagrees with nnz.
+        assert!(CsrMatrix::try_from_parts(1, 3, vec![0, 2], vec![0], vec![1.0]).is_err());
     }
 
     #[test]

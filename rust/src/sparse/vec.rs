@@ -15,6 +15,13 @@ pub struct SparseVec {
 impl SparseVec {
     /// Build from parallel index/value arrays. Indices must be strictly
     /// increasing and `< dim`; zero values are dropped.
+    ///
+    /// Invariants are `debug_assert`-checked only — this is the trusted
+    /// hot-path constructor. Data arriving from **untrusted sources**
+    /// (external files, network) must go through [`SparseVec::try_new`],
+    /// which validates with real errors in every build profile: a
+    /// violated invariant silently corrupts the sorted-merge dot products
+    /// in release builds.
     pub fn new(dim: usize, idx: Vec<u32>, val: Vec<f32>) -> Self {
         assert_eq!(idx.len(), val.len(), "index/value length mismatch");
         debug_assert!(
@@ -34,6 +41,53 @@ impl SparseVec {
             return Self { dim, idx: i2, val: v2 };
         }
         Self { dim, idx, val }
+    }
+
+    /// Validating constructor for **untrusted** data (I/O ingestion
+    /// paths): checks the invariants [`SparseVec::new`] only
+    /// `debug_assert`s — equal lengths, strictly increasing indices (which
+    /// also rules out duplicates), and indices `< dim` — plus value
+    /// finiteness (a NaN/∞ would poison every downstream dot product and
+    /// reduction), and reports the first violation as a descriptive error
+    /// instead of corrupting the merge dot products downstream.
+    pub fn try_new(dim: usize, idx: Vec<u32>, val: Vec<f32>) -> Result<Self, String> {
+        if idx.len() != val.len() {
+            return Err(format!(
+                "index/value length mismatch: {} vs {}",
+                idx.len(),
+                val.len()
+            ));
+        }
+        for w in idx.windows(2) {
+            if w[0] >= w[1] {
+                return Err(if w[0] == w[1] {
+                    format!("duplicate index {}", w[0])
+                } else {
+                    format!("indices not sorted: {} before {}", w[0], w[1])
+                });
+            }
+        }
+        if let Some(&last) = idx.last() {
+            if last as usize >= dim {
+                return Err(format!("index {last} out of bounds for dimension {dim}"));
+            }
+        }
+        if let Some(v) = val.iter().find(|v| !v.is_finite()) {
+            return Err(format!("non-finite value {v}"));
+        }
+        Ok(Self::new(dim, idx, val))
+    }
+
+    /// Validating counterpart of [`SparseVec::from_pairs`] for
+    /// **untrusted** `(index, value)` pairs: sorts by index, then applies
+    /// every [`SparseVec::try_new`] check — in particular, duplicate
+    /// indices are rejected with an error where the trusted constructor
+    /// silently sums them. The single ingestion helper shared by the file
+    /// readers.
+    pub fn try_from_pairs(dim: usize, mut pairs: Vec<(u32, f32)>) -> Result<Self, String> {
+        pairs.sort_unstable_by_key(|p| p.0);
+        let (idx, val) = pairs.into_iter().unzip();
+        Self::try_new(dim, idx, val)
     }
 
     /// Build from unsorted `(index, value)` pairs, summing duplicates.
@@ -176,6 +230,46 @@ mod tests {
         assert_eq!(v.get(1), 2.0);
         assert_eq!(v.get(5), 0.0);
         assert_eq!(v.get(0), 0.0);
+    }
+
+    #[test]
+    fn try_new_validates_untrusted_input() {
+        // Valid input passes through (zeros still dropped).
+        let v = SparseVec::try_new(5, vec![0, 3], vec![1.0, 0.0]).unwrap();
+        assert_eq!(v.nnz(), 1);
+        // Duplicate, unsorted, out-of-bounds, and ragged inputs all error
+        // with a message (instead of debug-only assertions).
+        assert!(SparseVec::try_new(5, vec![2, 2], vec![1.0, 1.0])
+            .unwrap_err()
+            .contains("duplicate"));
+        assert!(SparseVec::try_new(5, vec![3, 1], vec![1.0, 1.0])
+            .unwrap_err()
+            .contains("sorted"));
+        assert!(SparseVec::try_new(5, vec![1, 5], vec![1.0, 1.0])
+            .unwrap_err()
+            .contains("out of bounds"));
+        assert!(SparseVec::try_new(5, vec![1], vec![1.0, 2.0])
+            .unwrap_err()
+            .contains("length mismatch"));
+        assert!(SparseVec::try_new(5, vec![1], vec![f32::NAN])
+            .unwrap_err()
+            .contains("non-finite"));
+        assert!(SparseVec::try_new(5, vec![1], vec![f32::INFINITY])
+            .unwrap_err()
+            .contains("non-finite"));
+    }
+
+    #[test]
+    fn try_from_pairs_sorts_and_rejects_duplicates() {
+        let v = SparseVec::try_from_pairs(6, vec![(4, 1.0), (1, 2.0)]).unwrap();
+        assert_eq!(v.indices(), &[1, 4]);
+        assert_eq!(v.values(), &[2.0, 1.0]);
+        assert!(SparseVec::try_from_pairs(6, vec![(3, 1.0), (3, 2.0)])
+            .unwrap_err()
+            .contains("duplicate"));
+        assert!(SparseVec::try_from_pairs(2, vec![(5, 1.0)])
+            .unwrap_err()
+            .contains("out of bounds"));
     }
 
     #[test]

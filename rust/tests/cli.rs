@@ -96,6 +96,22 @@ fn unknown_dataset_fails() {
 }
 
 #[test]
+fn cluster_with_minibatch_engine() {
+    let out = sphkm()
+        .args([
+            "cluster", "--data", "demo", "--k", "5", "--seed", "2",
+            "--minibatch", "--batch-size", "64", "--epochs", "4",
+            "--truncate", "32", "--stats",
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("objective="), "{text}");
+    assert!(text.contains("sims_pc"), "{text}");
+}
+
+#[test]
 fn cluster_with_preinit_bounds() {
     let out = sphkm()
         .args([

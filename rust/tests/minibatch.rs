@@ -1,0 +1,167 @@
+//! Integration tests for the mini-batch engine: seeded determinism across
+//! thread counts, objective gap against the exact full-batch baseline on
+//! synthetic blobs, and the truncated-centroid invariants.
+
+use sphkm::data::synth::SynthConfig;
+use sphkm::data::Dataset;
+use sphkm::init::{seed_centers, InitMethod};
+use sphkm::kmeans::{minibatch, run_with_centers, KMeansConfig, Variant};
+use sphkm::metrics;
+
+/// A blob corpus large enough for several row shards per batch and a
+/// meaningful full-batch baseline.
+fn blobs(n_docs: usize, seed: u64) -> Dataset {
+    let mut cfg = SynthConfig::small_demo();
+    cfg.name = "mb-blobs".into();
+    cfg.n_docs = n_docs;
+    cfg.topic_strength = 0.75;
+    cfg.generate(seed)
+}
+
+#[test]
+fn minibatch_is_deterministic_across_threads() {
+    let ds = blobs(1500, 51);
+    let k = 6;
+    let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 9);
+    let cfg = KMeansConfig::new(k).seed(13).batch_size(256).epochs(4);
+    let serial = minibatch::run_with_centers(
+        &ds.matrix,
+        init.centers.clone(),
+        &cfg.clone().threads(1),
+    );
+    for &threads in &[4usize, 0] {
+        let par = minibatch::run_with_centers(
+            &ds.matrix,
+            init.centers.clone(),
+            &cfg.clone().threads(threads),
+        );
+        assert_eq!(
+            par.assignments, serial.assignments,
+            "assignments diverge at threads={threads}"
+        );
+        assert_eq!(
+            par.objective.to_bits(),
+            serial.objective.to_bits(),
+            "objective not bit-identical at threads={threads}"
+        );
+        assert_eq!(par.iterations, serial.iterations);
+        assert_eq!(par.converged, serial.converged);
+        // Stats counters must not depend on scheduling either.
+        assert_eq!(
+            par.stats.total_point_center(),
+            serial.stats.total_point_center()
+        );
+    }
+}
+
+#[test]
+fn minibatch_is_reproducible_for_a_fixed_seed() {
+    let ds = blobs(900, 53);
+    let cfg = KMeansConfig::new(5).seed(7).batch_size(128).epochs(3);
+    let a = minibatch::run(&ds.matrix, &cfg);
+    let b = minibatch::run(&ds.matrix, &cfg);
+    assert_eq!(a.assignments, b.assignments);
+    assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    // A different seed draws different batches.
+    let c = minibatch::run(&ds.matrix, &cfg.clone().seed(8));
+    assert_ne!(
+        a.assignments, c.assignments,
+        "different seeds should explore different batch sequences"
+    );
+}
+
+#[test]
+fn minibatch_objective_is_close_to_full_batch() {
+    let ds = blobs(2000, 57);
+    let k = 8;
+    let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 5);
+    let full = run_with_centers(
+        &ds.matrix,
+        init.centers.clone(),
+        &KMeansConfig::new(k).variant(Variant::Standard),
+    );
+    let mb = minibatch::run_with_centers(
+        &ds.matrix,
+        init.centers.clone(),
+        &KMeansConfig::new(k).seed(11).batch_size(256).epochs(8).tol(1e-4),
+    );
+    let gap = metrics::objective_gap(mb.objective, full.objective);
+    // At this tiny scale the bar is looser than the bench's 2% (sampling
+    // noise dominates); what matters is the order of magnitude.
+    assert!(
+        gap < 0.05,
+        "mini-batch objective {:.2} more than 5% above full-batch {:.2} (gap {:.2}%)",
+        mb.objective,
+        full.objective,
+        gap * 100.0
+    );
+    // The seeded sampled evaluator agrees with the exact objective to
+    // within its own sampling error.
+    let est = metrics::objective_sampled(&ds.matrix, &mb.assignments, &mb.centers, 500, 3);
+    assert!(
+        (est - mb.objective).abs() < 0.25 * mb.objective.max(1.0),
+        "sampled estimate {est} vs exact {}",
+        mb.objective
+    );
+}
+
+#[test]
+fn truncation_keeps_centers_unit_norm_and_sparse() {
+    let ds = blobs(1200, 59);
+    let k = 6;
+    let m = 10;
+    let cfg = KMeansConfig::new(k)
+        .seed(17)
+        .batch_size(256)
+        .epochs(4)
+        .truncate(Some(m));
+    let r = minibatch::run(&ds.matrix, &cfg);
+    for j in 0..k {
+        let row = r.centers.row(j);
+        let nnz = row.iter().filter(|&&v| v != 0.0).count();
+        assert!(nnz <= m, "center {j} has {nnz} > {m} non-zeros");
+        let norm: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        assert!(
+            nnz == 0 || (norm - 1.0).abs() < 1e-4,
+            "center {j} norm² = {norm}"
+        );
+    }
+    // Truncated runs stay deterministic across thread counts too.
+    let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 21);
+    let serial =
+        minibatch::run_with_centers(&ds.matrix, init.centers.clone(), &cfg.clone().threads(1));
+    let par =
+        minibatch::run_with_centers(&ds.matrix, init.centers.clone(), &cfg.clone().threads(4));
+    assert_eq!(serial.assignments, par.assignments);
+    assert_eq!(serial.objective.to_bits(), par.objective.to_bits());
+}
+
+#[test]
+fn minibatch_uses_fewer_similarities_than_full_batch_standard() {
+    // On a corpus where Standard needs many iterations, the mini-batch
+    // run's total point–center budget (epochs + the final pass) must come
+    // in well under the full-batch total.
+    let ds = blobs(2000, 61);
+    let k = 8;
+    let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 23);
+    let full = run_with_centers(
+        &ds.matrix,
+        init.centers.clone(),
+        &KMeansConfig::new(k).variant(Variant::Standard),
+    );
+    let mb = minibatch::run_with_centers(
+        &ds.matrix,
+        init.centers.clone(),
+        &KMeansConfig::new(k).seed(3).batch_size(500).epochs(2).tol(0.0),
+    );
+    // 2 epochs + final pass = at most 3 corpus-worth of similarities
+    // (exactly, since every batch charges k per point).
+    let n = ds.matrix.rows() as u64;
+    assert!(mb.stats.total_point_center() <= 3 * n * k as u64);
+    assert!(
+        mb.stats.total_point_center() < full.stats.total_point_center(),
+        "mini-batch ({}) must undercut full batch ({})",
+        mb.stats.total_point_center(),
+        full.stats.total_point_center()
+    );
+}
