@@ -22,7 +22,6 @@ use sphkm::data::datasets::{self, Scale};
 use sphkm::init::{seed_centers, InitMethod};
 use sphkm::kmeans::{run_with_centers, KMeansConfig, Variant};
 use sphkm::metrics;
-use sphkm::runtime::{artifacts_available, AssignEngine};
 use sphkm::util::cli::Args;
 use sphkm::util::timer::Stopwatch;
 
@@ -93,54 +92,67 @@ fn main() {
     println!("\n{}", table.render());
 
     // ---- stage 2: the PJRT (L1/L2) path ------------------------------
-    let art = std::path::Path::new("artifacts");
-    if artifacts_available(art) {
-        // Dense-shaped dataset matching the compiled (256, 16, 512) artifact.
-        let ds = sphkm::data::synth::SynthConfig {
-            name: "pjrt-x-check".into(),
-            n_docs: 2048,
-            vocab: 512,
-            topics: 16,
-            doc_len_mean: 40.0,
-            doc_len_sigma: 0.4,
-            topic_strength: 0.7,
-            shared_vocab_frac: 0.25,
-            zipf_s: 1.1,
-            anomaly_frac: 0.0,
-            tfidf: Default::default(),
-        }
-        .generate(9);
-        let k = 16;
-        let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 5);
-        let r = run_with_centers(
-            &ds.matrix,
-            init.centers.clone(),
-            &KMeansConfig::new(k).variant(Variant::SimplifiedElkan),
-        );
-        let mut engine = AssignEngine::load_matching(art, k, 512).expect("artifact");
-        let tile = engine
-            .assign_all(&ds.matrix, r.centers.data())
-            .expect("PJRT execute");
-        let agree = tile
-            .best
-            .iter()
-            .zip(&r.assignments)
-            .filter(|(a, b)| a == b)
-            .count();
-        println!(
-            "PJRT cross-check: JAX/Pallas kernel agrees with Rust assignment on {}/{} rows ({})",
-            agree,
-            ds.matrix.rows(),
-            engine.manifest().filename()
-        );
-        assert!(agree * 1000 >= ds.matrix.rows() * 999, "PJRT/native disagreement");
-    } else {
-        println!("PJRT stage skipped (run `make artifacts` to enable)");
-    }
+    pjrt_stage();
 
     // ---- headline ----------------------------------------------------
     println!("\n=== headline ===");
     for (name, s) in &headline {
         println!("{name}: best accelerated variant is {s:.1}x faster than Standard (identical result)");
     }
+}
+
+/// Cross-check the Rust assignment against the AOT-compiled JAX/Pallas
+/// kernel executed over PJRT (only built with `--features pjrt`).
+#[cfg(feature = "pjrt")]
+fn pjrt_stage() {
+    use sphkm::runtime::{artifacts_available, AssignEngine};
+    let art = std::path::Path::new("artifacts");
+    if !artifacts_available(art) {
+        println!("PJRT stage skipped (run `make artifacts` to enable)");
+        return;
+    }
+    // Dense-shaped dataset matching the compiled (256, 16, 512) artifact.
+    let ds = sphkm::data::synth::SynthConfig {
+        name: "pjrt-x-check".into(),
+        n_docs: 2048,
+        vocab: 512,
+        topics: 16,
+        doc_len_mean: 40.0,
+        doc_len_sigma: 0.4,
+        topic_strength: 0.7,
+        shared_vocab_frac: 0.25,
+        zipf_s: 1.1,
+        anomaly_frac: 0.0,
+        tfidf: Default::default(),
+    }
+    .generate(9);
+    let k = 16;
+    let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 5);
+    let r = run_with_centers(
+        &ds.matrix,
+        init.centers.clone(),
+        &KMeansConfig::new(k).variant(Variant::SimplifiedElkan),
+    );
+    let mut engine = AssignEngine::load_matching(art, k, 512).expect("artifact");
+    let tile = engine
+        .assign_all(&ds.matrix, r.centers.data())
+        .expect("PJRT execute");
+    let agree = tile
+        .best
+        .iter()
+        .zip(&r.assignments)
+        .filter(|(a, b)| a == b)
+        .count();
+    println!(
+        "PJRT cross-check: JAX/Pallas kernel agrees with Rust assignment on {}/{} rows ({})",
+        agree,
+        ds.matrix.rows(),
+        engine.manifest().filename()
+    );
+    assert!(agree * 1000 >= ds.matrix.rows() * 999, "PJRT/native disagreement");
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_stage() {
+    println!("PJRT stage skipped (build with --features pjrt and run `make artifacts`)");
 }

@@ -8,7 +8,7 @@ use super::report::{fmt_ms, fmt_pct, Table};
 use crate::data::datasets::{self, Scale};
 use crate::data::Dataset;
 use crate::init::{seed_centers, InitMethod};
-use crate::kmeans::{run_with_centers, KMeansConfig, KMeansResult, Variant};
+use crate::kmeans::{run_with_centers, KMeansConfig, KMeansResult, KernelChoice, Variant};
 use crate::sparse::DenseMatrix;
 use crate::util::rng::SplitMix64;
 
@@ -29,6 +29,13 @@ pub struct ExperimentOpts {
     /// `1` = serial). Results are thread-count invariant, so this only
     /// changes wall times — the paper's tables default to serial.
     pub threads: usize,
+    /// Similarity-kernel override (`--kernel`). `None` keeps each driver's
+    /// default: the gather backend, the paper's cost model (identical
+    /// per-similarity work to the pruned variants' selective
+    /// computations). Results are kernel-invariant up to summation-order
+    /// rounding — Dense and Inverted are bit-identical — so this, too,
+    /// mainly changes wall times.
+    pub kernel: Option<KernelChoice>,
     /// Directory for CSV output.
     pub out_dir: std::path::PathBuf,
 }
@@ -42,6 +49,7 @@ impl Default for ExperimentOpts {
             ks: vec![2, 10, 20, 50, 100, 200],
             max_iter: 200,
             threads: 1,
+            kernel: None,
             out_dir: "results".into(),
         }
     }
@@ -49,7 +57,7 @@ impl Default for ExperimentOpts {
 
 impl ExperimentOpts {
     /// Parse overrides from CLI args (`--scale`, `--seed`, `--reps`,
-    /// `--ks`, `--max-iter`, `--threads`, `--quick`).
+    /// `--ks`, `--max-iter`, `--threads`, `--kernel`, `--quick`).
     pub fn from_args(args: &crate::util::cli::Args) -> Self {
         let mut o = Self::default();
         if args.flag("quick") {
@@ -62,6 +70,17 @@ impl ExperimentOpts {
         o.reps = args.get_or("reps", o.reps).unwrap_or(o.reps).max(1);
         o.max_iter = args.get_or("max-iter", o.max_iter).unwrap_or(o.max_iter);
         o.threads = args.get_or("threads", o.threads).unwrap_or(o.threads);
+        if let Some(raw) = args.get("kernel") {
+            // Reject hard, like the cluster/sweep parses: a typo silently
+            // falling back to the default would mislabel a whole sweep.
+            match raw.parse::<KernelChoice>() {
+                Ok(kc) => o.kernel = Some(kc),
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            }
+        }
         if let Ok(Some(ks)) = args.list::<usize>("ks") {
             o.ks = ks;
         }
@@ -92,39 +111,38 @@ impl ExperimentOpts {
 }
 
 /// Run one (dataset, variant, k, rep) cell from shared initial centers.
-/// The Standard variant runs with the **gather** similarity path so its
-/// per-similarity cost matches the pruned variants (the paper's cost
-/// model); the SIMD path is benchmarked separately as "Standard+SIMD".
+/// Unless `--kernel` overrides it, cells run the **gather** similarity
+/// kernel so per-similarity cost matches the pruned variants (the paper's
+/// cost model); the transposed SIMD path is benchmarked separately as
+/// "Standard+SIMD".
 fn run_cell(
     ds: &Dataset,
     variant: Variant,
     k: usize,
     initial: DenseMatrix,
-    max_iter: usize,
-    threads: usize,
+    opts: &ExperimentOpts,
 ) -> KMeansResult {
     let cfg = KMeansConfig::new(k)
         .variant(variant)
-        .max_iter(max_iter)
-        .threads(threads)
-        .fast_standard(false);
+        .max_iter(opts.max_iter)
+        .threads(opts.threads)
+        .kernel(opts.kernel.unwrap_or(KernelChoice::Gather));
     run_with_centers(&ds.matrix, initial, &cfg)
 }
 
-/// The extra beyond-paper baseline: Standard with the transposed-centers
-/// SIMD path (see EXPERIMENTS.md §Perf).
+/// The extra beyond-paper baseline: Standard with the dense
+/// transposed-centers SIMD kernel (see EXPERIMENTS.md §Perf).
 fn run_cell_simd_standard(
     ds: &Dataset,
     k: usize,
     initial: DenseMatrix,
-    max_iter: usize,
-    threads: usize,
+    opts: &ExperimentOpts,
 ) -> KMeansResult {
     let cfg = KMeansConfig::new(k)
         .variant(Variant::Standard)
-        .max_iter(max_iter)
-        .threads(threads)
-        .fast_standard(true);
+        .max_iter(opts.max_iter)
+        .threads(opts.threads)
+        .kernel(KernelChoice::Dense);
     run_with_centers(&ds.matrix, initial, &cfg)
 }
 
@@ -178,7 +196,7 @@ pub fn fig1(opts: &ExperimentOpts, k: usize) -> Table {
         // Average wall times over reps (sims are deterministic).
         let mut runs = Vec::new();
         for _ in 0..opts.reps {
-            runs.push(run_cell(&ds, variant, k, initial.clone(), opts.max_iter, opts.threads));
+            runs.push(run_cell(&ds, variant, k, initial.clone(), opts));
         }
         let r0 = &runs[0];
         for it in 0..r0.stats.iters.len() {
@@ -287,14 +305,7 @@ pub fn table2(opts: &ExperimentOpts) -> Table {
                 let initial = uniform_centers(&ds, k, seed);
                 // Simplified Hamerly: fastest reasonable default; the
                 // converged objective is variant-independent (exactness).
-                let r = run_cell(
-                    &ds,
-                    Variant::SimplifiedHamerly,
-                    k,
-                    initial,
-                    opts.max_iter,
-                    opts.threads,
-                );
+                let r = run_cell(&ds, Variant::SimplifiedHamerly, k, initial, opts);
                 base[ki][rep] = r.objective;
             }
         }
@@ -310,14 +321,7 @@ pub fn table2(opts: &ExperimentOpts) -> Table {
                 for rep in 0..opts.reps {
                     let seed = opts.cell_seed(&format!("t2-{}-{k}", ds.name), rep);
                     let init = seed_centers(&ds.matrix, k, method, seed);
-                    let r = run_cell(
-                        &ds,
-                        Variant::SimplifiedHamerly,
-                        k,
-                        init.centers,
-                        opts.max_iter,
-                        opts.threads,
-                    );
+                    let r = run_cell(&ds, Variant::SimplifiedHamerly, k, init.centers, opts);
                     rel_sum += r.objective / base[ki][rep] - 1.0;
                 }
                 cells.push(fmt_pct(rel_sum / opts.reps as f64));
@@ -371,7 +375,7 @@ pub fn table3(opts: &ExperimentOpts, extended: bool) -> Table {
                 let mut total_ms = 0.0;
                 for initial in &initials {
                     let sw = crate::util::timer::Stopwatch::start();
-                    let r = run_cell(&ds, variant, k, initial.clone(), opts.max_iter, opts.threads);
+                    let r = run_cell(&ds, variant, k, initial.clone(), opts);
                     total_ms += sw.ms();
                     std::hint::black_box(r.objective);
                 }
@@ -381,8 +385,7 @@ pub fn table3(opts: &ExperimentOpts, extended: bool) -> Table {
                 let mut total_ms = 0.0;
                 for initial in &initials {
                     let sw = crate::util::timer::Stopwatch::start();
-                    let r =
-                        run_cell_simd_standard(&ds, k, initial.clone(), opts.max_iter, opts.threads);
+                    let r = run_cell_simd_standard(&ds, k, initial.clone(), opts);
                     total_ms += sw.ms();
                     std::hint::black_box(r.objective);
                 }
@@ -440,7 +443,7 @@ pub fn fig2(opts: &ExperimentOpts) -> Table {
                 let mut iters = 0usize;
                 for initial in &initials {
                     let sw = crate::util::timer::Stopwatch::start();
-                    let r = run_cell(ds, variant, k, initial.clone(), opts.max_iter, opts.threads);
+                    let r = run_cell(ds, variant, k, initial.clone(), opts);
                     total_ms += sw.ms();
                     sims = r.stats.total_sims();
                     iters = r.iterations;
@@ -509,7 +512,7 @@ pub fn ablation_cc(opts: &ExperimentOpts, k: usize) -> Table {
             Variant::SimplifiedHamerly,
         ] {
             let sw = crate::util::timer::Stopwatch::start();
-            let r = run_cell(&ds, variant, k, initial.clone(), opts.max_iter, opts.threads);
+            let r = run_cell(&ds, variant, k, initial.clone(), opts);
             let ms = sw.ms();
             let cc: u64 = r.stats.iters.iter().map(|i| i.sims_center_center).sum();
             t.row(vec![
@@ -559,6 +562,7 @@ pub fn ablation_preinit(opts: &ExperimentOpts, k: usize) -> Table {
                     let cfg = KMeansConfig::new(k)
                         .variant(variant)
                         .threads(opts.threads)
+                        .kernel(opts.kernel.unwrap_or(KernelChoice::Gather))
                         .max_iter(opts.max_iter);
                     let r = if preinit {
                         run_seeded(&ds.matrix, init, &cfg)
@@ -616,7 +620,7 @@ pub fn minibatch(opts: &ExperimentOpts, k: usize) -> Table {
     let mut t = Table::new(&["mode", "ms", "pc_sims", "objective", "gap"]);
 
     let sw = crate::util::timer::Stopwatch::start();
-    let full = run_cell(&ds, Variant::Standard, k, initial.clone(), opts.max_iter, opts.threads);
+    let full = run_cell(&ds, Variant::Standard, k, initial.clone(), opts);
     t.row(vec![
         "Standard (full batch)".into(),
         fmt_ms(sw.ms()),
@@ -625,14 +629,7 @@ pub fn minibatch(opts: &ExperimentOpts, k: usize) -> Table {
         fmt_pct(0.0),
     ]);
     let sw = crate::util::timer::Stopwatch::start();
-    let pruned = run_cell(
-        &ds,
-        Variant::SimplifiedHamerly,
-        k,
-        initial.clone(),
-        opts.max_iter,
-        opts.threads,
-    );
+    let pruned = run_cell(&ds, Variant::SimplifiedHamerly, k, initial.clone(), opts);
     t.row(vec![
         "Simp.Hamerly (full batch)".into(),
         fmt_ms(sw.ms()),
@@ -645,6 +642,7 @@ pub fn minibatch(opts: &ExperimentOpts, k: usize) -> Table {
         let cfg = KMeansConfig::new(k)
             .seed(opts.seed)
             .threads(opts.threads)
+            .kernel(opts.kernel.unwrap_or(KernelChoice::Gather))
             .batch_size(batch)
             .epochs(8)
             .tol(1e-4)
@@ -680,6 +678,7 @@ mod tests {
             ks: vec![2, 5],
             max_iter: 30,
             threads: 1,
+            kernel: None,
             out_dir: std::env::temp_dir().join("sphkm-exp-tests"),
         }
     }
@@ -709,7 +708,7 @@ mod tests {
     #[test]
     fn opts_from_args() {
         let args = crate::util::cli::Args::parse(
-            ["--scale", "tiny", "--reps", "2", "--ks", "2,4"]
+            ["--scale", "tiny", "--reps", "2", "--ks", "2,4", "--kernel", "inverted"]
                 .iter()
                 .map(|s| s.to_string()),
         );
@@ -717,5 +716,7 @@ mod tests {
         assert_eq!(o.scale, Scale::Tiny);
         assert_eq!(o.reps, 2);
         assert_eq!(o.ks, vec![2, 4]);
+        assert_eq!(o.kernel, Some(KernelChoice::Inverted));
+        assert_eq!(ExperimentOpts::default().kernel, None, "driver default");
     }
 }

@@ -9,10 +9,36 @@
 //! Sums are accumulated in `f64`: the experiment drivers run thousands of
 //! incremental ± updates per cluster, and `f32` drift would break the
 //! "accelerated variants produce identical assignments" exactness tests.
+//!
+//! All-centers similarity passes go through the pluggable kernel layer
+//! ([`crate::kmeans::kernel`]): alongside the dense centers, `Centers`
+//! maintains exactly the derived structure its resolved
+//! [`Kernel`](crate::kmeans::kernel::Kernel) backend reads — the d×k
+//! transpose, the inverted-file postings index, or nothing — refreshing
+//! **only the centers that actually moved** at each update barrier (the
+//! same dirty-flag discipline the `p(j)` accounting uses).
 
+use super::kernel::{self, Kernel};
 use crate::runtime::parallel::{Plan, Pool, SHARD_ROWS};
-use crate::sparse::{CsrMatrix, DenseMatrix};
 use crate::sparse::csr::RowView;
+use crate::sparse::{CsrMatrix, DenseMatrix, InvertedIndex};
+
+/// The derived structure backing the active similarity kernel — see
+/// [`crate::kmeans::kernel`] for the backend trade-offs.
+#[derive(Debug, Clone)]
+enum CenterStore {
+    /// Transposed copy of the centers (d×k, f32): the all-centers
+    /// similarity pass reads `t[idx·k .. idx·k+k]` contiguously per
+    /// non-zero, which vectorizes — the §Perf transposed-gather
+    /// optimization (see EXPERIMENTS.md).
+    Dense(DenseMatrix),
+    /// No derived structure: per-center gather dots against the dense
+    /// center rows (the paper-faithful cost model).
+    Gather,
+    /// Inverted-file postings over the center non-zeros — skips every
+    /// (point, center) pair sharing no term and avoids the d×k footprint.
+    Inverted(InvertedIndex),
+}
 
 /// Cluster centers plus the cached unnormalized sums behind them.
 #[derive(Debug, Clone)]
@@ -25,11 +51,9 @@ pub struct Centers {
     counts: Vec<u64>,
     /// Current unit-normalized centers (k×d, f32).
     centers: DenseMatrix,
-    /// Transposed copy of the centers (d×k, f32): the all-centers
-    /// similarity pass reads `t[idx·k .. idx·k+k]` contiguously per
-    /// non-zero, which vectorizes — the §Perf transposed-gather
-    /// optimization (see EXPERIMENTS.md).
-    centers_t: DenseMatrix,
+    /// Kernel-specific derived structure over `centers`, kept in sync per
+    /// dirty center by [`Centers::update`] / [`Centers::update_partial`].
+    store: CenterStore,
     /// Centers of the previous iteration (for `p(j)`).
     prev: DenseMatrix,
     /// `p(j) = ⟨c(j), c'(j)⟩`: self-similarity of each center's last move.
@@ -39,68 +63,111 @@ pub struct Centers {
     /// [`Centers::fold_point`]). [`Centers::update`] and
     /// [`Centers::update_partial`] recompute (and charge a `p(j)` dot for)
     /// **only** dirty centers — a clean center provably did not move, so
-    /// its `p(j)` is exactly 1 with no computation.
+    /// its `p(j)` is exactly 1 with no computation, and its column of the
+    /// kernel store needs no rewrite.
     dirty: Vec<bool>,
 }
 
 impl Centers {
     /// Start from initial (unit-normalized) centers produced by a seeding
-    /// method. Sums start at zero; call [`Centers::rebuild`] once the first
-    /// assignment exists.
+    /// method, using the default dense-transpose kernel. Sums start at
+    /// zero; call [`Centers::rebuild`] once the first assignment exists.
     pub fn from_initial(initial: DenseMatrix) -> Self {
+        Self::from_initial_for(initial, Kernel::Dense)
+    }
+
+    /// Like [`Centers::from_initial`], but backing the given (resolved)
+    /// similarity kernel — only the structure that backend reads is built
+    /// and maintained.
+    pub fn from_initial_for(initial: DenseMatrix, kernel: Kernel) -> Self {
         let k = initial.rows();
         let d = initial.cols();
         let mut centers = initial;
         centers.normalize_rows();
+        let store = match kernel {
+            Kernel::Dense => CenterStore::Dense(DenseMatrix::zeros(d, k)),
+            Kernel::Gather => CenterStore::Gather,
+            Kernel::Inverted => CenterStore::Inverted(InvertedIndex::new(d, k)),
+        };
         let mut me = Self {
             k,
             d,
             sums: vec![0.0; k * d],
             counts: vec![0; k],
             prev: centers.clone(),
-            centers_t: DenseMatrix::zeros(d, k),
+            store,
             centers,
             p: vec![1.0; k],
             dirty: vec![false; k],
         };
-        me.refresh_transpose();
+        me.refresh_store_all();
         me
     }
 
-    /// Rewrite the d×k transposed copy from the current centers.
-    fn refresh_transpose(&mut self) {
-        let k = self.k;
-        let t = self.centers_t.data_mut();
-        for j in 0..k {
-            let row = self.centers.row(j);
-            for (c, &v) in row.iter().enumerate() {
-                t[c * k + j] = v;
+    /// The similarity kernel this instance is backing.
+    pub fn kernel(&self) -> Kernel {
+        match &self.store {
+            CenterStore::Dense(_) => Kernel::Dense,
+            CenterStore::Gather => Kernel::Gather,
+            CenterStore::Inverted(_) => Kernel::Inverted,
+        }
+    }
+
+    /// The inverted-file index, when that backend is active — diagnostic
+    /// introspection (the equivalence suite inspects it; report surfaces
+    /// can read its [`InvertedIndex::density`]).
+    pub fn inverted(&self) -> Option<&InvertedIndex> {
+        match &self.store {
+            CenterStore::Inverted(idx) => Some(idx),
+            _ => None,
+        }
+    }
+
+    /// Rewrite center `j`'s slice of the kernel store (its transpose
+    /// column or its postings) from the current center row. Clean centers
+    /// provably did not move, so the update barriers call this for dirty
+    /// centers only.
+    fn refresh_store_center(&mut self, j: usize) {
+        let row = self.centers.row(j);
+        match &mut self.store {
+            CenterStore::Dense(t) => {
+                let k = self.k;
+                let t = t.data_mut();
+                for (c, &v) in row.iter().enumerate() {
+                    t[c * k + j] = v;
+                }
             }
+            CenterStore::Gather => {}
+            CenterStore::Inverted(idx) => idx.refresh_center(j, row),
+        }
+    }
+
+    /// Rewrite the whole kernel store (construction and full-truncation
+    /// barriers, where every center changed). The inverted index rebuilds
+    /// from scratch — pure pushes, no per-posting list shifts — which is
+    /// bit-identical to k incremental refreshes.
+    fn refresh_store_all(&mut self) {
+        if let CenterStore::Inverted(idx) = &mut self.store {
+            *idx = InvertedIndex::from_centers(&self.centers);
+            return;
+        }
+        for j in 0..self.k {
+            self.refresh_store_center(j);
         }
     }
 
     /// Similarities of one sparse row to **all** centers at once, written
-    /// into `out[0..k]`. Uses the transposed layout: per non-zero, the k
-    /// center coordinates are contiguous, so the inner loop vectorizes —
-    /// several times faster than k separate gather dots for the Standard
-    /// algorithm and the full re-scans of Hamerly.
+    /// into `out[0..k]` through the active kernel backend; returns the
+    /// multiply-adds performed (the kernel-layer cost model — see
+    /// [`crate::kmeans::kernel`]). The Dense and Inverted backends are
+    /// bit-identical; Gather agrees to summation-order rounding.
     #[inline]
-    pub fn sims_all(&self, row: crate::sparse::csr::RowView<'_>, out: &mut [f64]) {
+    pub fn sims_all(&self, row: RowView<'_>, out: &mut [f64]) -> u64 {
         debug_assert_eq!(out.len(), self.k);
-        let k = self.k;
-        let t = self.centers_t.data();
-        // f64 accumulators (exactness), contiguous f32 center reads
-        // (speed): the contiguity is what buys the throughput.
-        for o in out.iter_mut() {
-            *o = 0.0;
-        }
-        for (t_i, &v) in row.indices.iter().zip(row.values.iter()) {
-            let base = *t_i as usize * k;
-            let col = &t[base..base + k];
-            let v = v as f64;
-            for (o, &cv) in out.iter_mut().zip(col.iter()) {
-                *o += v * cv as f64;
-            }
+        match &self.store {
+            CenterStore::Dense(t) => kernel::sims_transposed(t, self.k, row, out),
+            CenterStore::Gather => kernel::sims_gather(&self.centers, row, out),
+            CenterStore::Inverted(idx) => idx.sims_into(row, out),
         }
     }
 
@@ -239,12 +306,21 @@ impl Centers {
     /// at their previous position (`p = 1`). Only centers whose sums
     /// actually changed since the last update (per-center dirty flags) are
     /// recomputed; a clean center keeps its exact position and reports
-    /// `p(j) = 1` for free. Returns the number of center·center dot
-    /// products spent computing `p(j)` — exactly one per recomputed
-    /// center — so the `sims_center_center` counter (Fig. 1) reflects work
-    /// actually performed.
+    /// `p(j) = 1` for free — and its slice of the kernel store (transpose
+    /// column / postings) is left untouched, so store maintenance costs
+    /// `O(moved · d)` instead of `O(k · d)` per barrier. Returns the
+    /// number of center·center dot products spent computing `p(j)` —
+    /// exactly one per recomputed center — so the `sims_center_center`
+    /// counter (Fig. 1) reflects work actually performed.
     pub fn update(&mut self) -> u64 {
         std::mem::swap(&mut self.centers, &mut self.prev);
+        // Incremental postings maintenance pays a list-shift per posting;
+        // when most centers moved (early iterations reassign nearly
+        // everything) a from-scratch rebuild — pure pushes in ascending
+        // center order, the same structure the incremental path keeps — is
+        // strictly cheaper. Bit-identical either way.
+        let bulk_inverted = matches!(self.store, CenterStore::Inverted(_))
+            && 2 * self.dirty.iter().filter(|&&d| d).count() > self.k;
         let mut dots = 0u64;
         for j in 0..self.k {
             if !self.dirty[j] || self.counts[j] == 0 {
@@ -269,13 +345,23 @@ impl Centers {
                     *o = (s * inv) as f32;
                 }
             } else {
-                // Degenerate (sum cancelled to zero): keep previous center.
+                // Degenerate (sum cancelled to zero): keep previous center
+                // — position unchanged, so the store needs no rewrite.
                 dst.copy_from_slice(self.prev.row(j));
+                self.p[j] = 1.0;
+                continue;
             }
             self.p[j] = crate::bounds::clamp_sim(self.centers.row_dot(j, &self.prev, j));
             dots += 1;
+            if !bulk_inverted {
+                self.refresh_store_center(j);
+            }
         }
-        self.refresh_transpose();
+        if bulk_inverted {
+            if let CenterStore::Inverted(idx) = &mut self.store {
+                *idx = InvertedIndex::from_centers(&self.centers);
+            }
+        }
         dots
     }
 
@@ -283,7 +369,7 @@ impl Centers {
     /// dirty centers — recompute each from its sums, optionally truncate it
     /// to its `m` largest-magnitude coordinates (renormalized; Knittel
     /// et al. 2021's sparse centroids), record `p(j)` against its previous
-    /// position, and refresh just its column of the transposed copy.
+    /// position, and refresh just its slice of the kernel store.
     /// Untouched centers keep position and report `p(j) = 1`. Cost is
     /// `O(touched · d)` instead of `O(k · d)`, which is what makes small
     /// batches cheap. Returns the `p(j)` dot count, as [`Centers::update`].
@@ -327,11 +413,7 @@ impl Centers {
             }
             self.p[j] = crate::bounds::clamp_sim(self.centers.row_dot(j, &self.prev, j));
             dots += 1;
-            let row = self.centers.row(j);
-            let t = self.centers_t.data_mut();
-            for (c, &v) in row.iter().enumerate() {
-                t[c * k + j] = v;
-            }
+            self.refresh_store_center(j);
         }
         dots
     }
@@ -344,7 +426,7 @@ impl Centers {
         for j in 0..self.k {
             truncate_unit_row(self.centers.row_mut(j), m);
         }
-        self.refresh_transpose();
+        self.refresh_store_all();
     }
 
     /// Min and max of `p(j)` over `j ≠ excluded`, plus the same over all j.
@@ -702,6 +784,83 @@ mod tests {
             assert_eq!(plain.count(j), serial.count(j));
             for (a, b) in plain.center(j).iter().zip(serial.center(j)) {
                 assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_backends_stay_bit_identical_through_updates() {
+        // Drive each backend through the same rebuild → move → update →
+        // partial-update sequence; Dense and Inverted sims must match
+        // bitwise at every barrier (the kernel exactness contract), Gather
+        // to rounding.
+        let data = toy_data();
+        let mk = |kernel: Kernel| {
+            let mut c = Centers::from_initial_for(initial_centers(), kernel);
+            c.rebuild(&data, &[0, 0, 1, 1]);
+            c.update();
+            c.apply_move(data.row(1), 0, 1);
+            c.update();
+            c.fold_point(data.row(2), 0);
+            c.update_partial(Some(2));
+            c
+        };
+        let dense = mk(Kernel::Dense);
+        let gather = mk(Kernel::Gather);
+        let inverted = mk(Kernel::Inverted);
+        assert_eq!(dense.kernel(), Kernel::Dense);
+        assert_eq!(gather.kernel(), Kernel::Gather);
+        assert_eq!(inverted.kernel(), Kernel::Inverted);
+        assert!(inverted.inverted().is_some());
+        assert!(dense.inverted().is_none());
+        let mut sd = vec![0.0f64; 2];
+        let mut sg = vec![0.0f64; 2];
+        let mut si = vec![0.0f64; 2];
+        for i in 0..data.rows() {
+            let md = dense.sims_all(data.row(i), &mut sd);
+            let mg = gather.sims_all(data.row(i), &mut sg);
+            let mi = inverted.sims_all(data.row(i), &mut si);
+            assert_eq!(md, mg, "row {i}: dense/gather madd counts");
+            assert!(mi <= md, "row {i}: inverted must not do more madds");
+            for j in 0..2 {
+                assert_eq!(
+                    sd[j].to_bits(),
+                    si[j].to_bits(),
+                    "row {i} center {j}: dense vs inverted"
+                );
+                assert!((sd[j] - sg[j]).abs() < 1e-12, "row {i} center {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn store_refresh_touches_only_moved_centers() {
+        // Three centers; move mass between two of them. The clean third
+        // center must keep its exact transpose column (dirty-column-only
+        // refresh), which sims_all would expose if it went stale.
+        let data = toy_data();
+        let initial = DenseMatrix::from_vec(
+            3,
+            3,
+            vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0],
+        );
+        for kernel in [Kernel::Dense, Kernel::Inverted] {
+            let mut c = Centers::from_initial_for(initial.clone(), kernel);
+            c.rebuild(&data, &[0, 0, 1, 2]);
+            c.update();
+            c.apply_move(data.row(1), 0, 1);
+            c.update();
+            let mut out = vec![0.0f64; 3];
+            for i in 0..data.rows() {
+                c.sims_all(data.row(i), &mut out);
+                for j in 0..3 {
+                    let direct = data.row(i).dot_dense(c.center(j));
+                    assert!(
+                        (out[j] - direct).abs() < 1e-9,
+                        "{kernel:?} row {i} center {j}: {} vs {direct}",
+                        out[j]
+                    );
+                }
             }
         }
     }

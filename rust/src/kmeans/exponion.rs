@@ -113,7 +113,6 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
                     }
                     // Scan the annulus: neighbors of a with sim > 2l²−1.
                     let threshold = 2.0 * l[li] * l[li] - 1.0;
-                    let row = view.data.row(i);
                     let mut m1 = f64::MIN;
                     let mut m2 = f64::MIN;
                     let mut jm = a;
@@ -129,8 +128,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
                             scanned_all = false;
                             break;
                         }
-                        let s = row.dot_dense(view.centers.center(j as usize));
-                        out.iter.sims_point_center += 1;
+                        let s = view.similarity(i, j as usize, &mut out.iter);
                         if s > m1 {
                             m2 = m1;
                             m1 = s;

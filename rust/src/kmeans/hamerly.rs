@@ -110,10 +110,10 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_>, cfg: &KMeansConfig, use_s_test: bool) 
                         continue;
                     }
                     // Bounds failed: recompute similarities to all other
-                    // centers (transposed-centers fast path; the a-th entry
+                    // centers through the kernel backend (the a-th entry
                     // is ignored in the reduction).
                     let row = view.data.row(i);
-                    view.centers.sims_all(row, &mut scan);
+                    view.sims_row(row, &mut out.iter, &mut scan);
                     let mut m1 = f64::MIN;
                     let mut m2 = f64::MIN;
                     let mut jm = a;

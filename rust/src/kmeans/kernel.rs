@@ -1,0 +1,370 @@
+//! The pluggable point×center similarity-kernel layer.
+//!
+//! Every similarity the bounds cannot prune lands in an all-centers pass;
+//! this module owns the backends that compute it and the heuristic that
+//! picks one:
+//!
+//! | Backend | Memory | Multiply-adds per all-k pass | Sweet spot |
+//! |---|---|---|---|
+//! | [`Kernel::Dense`] | d×k f32 transpose | `nnz(row)·k` (contiguous, vectorizes) | dense-ish centers, modest d·k |
+//! | [`Kernel::Gather`] | none | `nnz(row)·k` (k gather dots) | paper-faithful cost model |
+//! | [`Kernel::Inverted`] | postings = nnz(centers) | `Σ_c∈row postings(c)` | sparse centers, huge d·k |
+//!
+//! The inverted-file backend ([`crate::sparse::InvertedIndex`]) skips every
+//! (point, center) pair that shares no term — the SIVF idea (Aoyama &
+//! Saito, arXiv:2103.16141) — and avoids materializing the d×k transpose
+//! altogether, which for a 100k-term vocabulary at k = 1000 is a 400 MB
+//! allocation the Dense backend cannot do without.
+//!
+//! **Exactness.** The Dense and Inverted backends accumulate each center's
+//! `f64` sum in ascending dimension order of the row's non-zeros, so their
+//! results are **bit-identical** to each other (terms the inverted file
+//! skips are exact ±0.0 products, which cannot change a
+//! `+0.0`-initialized accumulator) — and therefore so are assignments,
+//! objectives, and pruning statistics, for every thread count. The
+//! `kernel_equivalence` test suite asserts this across densities and
+//! truncation settings. The Gather backend reuses the unrolled gather dot
+//! the pruned variants charge for selective similarities; its four-lane
+//! summation tree differs, so it agrees to within summation-order
+//! rounding rather than bitwise.
+//!
+//! Selection is configured through [`crate::kmeans::KMeansConfig::kernel`]
+//! (CLI `--kernel`): [`KernelChoice::Auto`] resolves per run from the
+//! problem shape via [`KernelChoice::resolve`]; `dense`, `gather`, and
+//! `inverted` force a backend. The `bench_kernel` benchmark measures the
+//! Dense/Inverted crossover on synthetic text-like data.
+
+use crate::sparse::csr::RowView;
+use crate::sparse::{CsrMatrix, DenseMatrix};
+
+/// Which similarity kernel to use, as configured (CLI `--kernel`, sweep
+/// `kernel =`, [`crate::kmeans::KMeansConfig::kernel`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KernelChoice {
+    /// Pick per run from the problem shape ([`KernelChoice::resolve`]):
+    /// the inverted file when the centers are expected to stay sparse;
+    /// otherwise the dense transpose, degrading to gather when the d×k
+    /// footprint is prohibitive.
+    #[default]
+    Auto,
+    /// The d×k transposed-centers kernel (contiguous reads, vectorizes).
+    Dense,
+    /// Per-center gather dots — no derived structure at all. This is the
+    /// paper's cost model: identical per-similarity work to the pruned
+    /// variants' selective computations (c.f. Kriegel et al., "are we
+    /// comparing algorithms or implementations?"), which is why the
+    /// experiment drivers default to it.
+    Gather,
+    /// The inverted-file (CSC postings) kernel over sparse centers.
+    Inverted,
+}
+
+/// A resolved similarity backend — what [`KernelChoice`] becomes once the
+/// problem shape is known. Stored by [`super::Centers`], which maintains
+/// exactly the derived structure its backend needs (the d×k transpose,
+/// the postings index, or nothing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kernel {
+    /// Transposed-centers fast path.
+    Dense,
+    /// Per-center gather dots.
+    Gather,
+    /// Inverted-file postings walk.
+    Inverted,
+}
+
+/// Auto picks the inverted file below this estimated center density: the
+/// postings walk trades the dense kernel's contiguous SIMD reads for
+/// skipped work, which by measurement (`bench_kernel`) pays off once most
+/// center coordinates are zero. Deliberately conservative.
+const AUTO_DENSITY_CUTOFF: f64 = 0.15;
+
+/// Auto refuses to materialize a d×k f32 transpose larger than this.
+/// Above the density cutoff the fallback is the zero-memory gather path,
+/// not the inverted file — a postings index over *dense* centers stores
+/// the same d·k entries at triple the bytes plus per-refresh list shifts.
+const AUTO_FOOTPRINT_BYTES: usize = 256 << 20;
+
+/// The problem-shape statistics the Auto heuristic reads. A pure function
+/// of the inputs — never of runtime state — so the resolved kernel is
+/// deterministic for a given (data, config) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct DataShape {
+    /// Dimensionality (columns).
+    pub dims: usize,
+    /// Total data non-zeros.
+    pub nnz: usize,
+    /// Number of clusters.
+    pub k: usize,
+    /// Center truncation (top-m coordinates), if configured.
+    pub truncate: Option<usize>,
+}
+
+impl DataShape {
+    /// Collect the shape of one clustering problem.
+    pub fn of(data: &CsrMatrix, k: usize, truncate: Option<usize>) -> Self {
+        Self {
+            dims: data.cols(),
+            nnz: data.nnz(),
+            k,
+            truncate,
+        }
+    }
+
+    /// Upper estimate of the converged centers' density: a center's
+    /// support is at most the summed nnz of its points (`≈ nnz/k` under
+    /// balanced clusters, the union bound), at most `d`, and at most the
+    /// truncation budget `m` when sparse centroids are configured.
+    pub fn est_center_density(&self) -> f64 {
+        if self.dims == 0 {
+            return 1.0;
+        }
+        let mut support = self.dims.min(self.nnz / self.k.max(1) + 1);
+        if let Some(m) = self.truncate {
+            if m > 0 {
+                support = support.min(m);
+            }
+        }
+        support as f64 / self.dims as f64
+    }
+
+    /// Bytes of the d×k f32 transpose the Dense backend would allocate.
+    pub fn transpose_bytes(&self) -> usize {
+        self.dims
+            .saturating_mul(self.k)
+            .saturating_mul(std::mem::size_of::<f32>())
+    }
+}
+
+impl KernelChoice {
+    /// Resolve the configured choice against a problem shape. Explicit
+    /// choices pass through. `Auto` takes the inverted file when the
+    /// estimated center density falls under [`AUTO_DENSITY_CUTOFF`]; at
+    /// higher density it takes the dense transpose, unless that footprint
+    /// exceeds [`AUTO_FOOTPRINT_BYTES`] — for *dense* centers the postings
+    /// index would be even larger than the transpose it refused, so the
+    /// oversized case falls back to the zero-memory gather path.
+    pub fn resolve(self, shape: &DataShape) -> Kernel {
+        match self {
+            KernelChoice::Dense => Kernel::Dense,
+            KernelChoice::Gather => Kernel::Gather,
+            KernelChoice::Inverted => Kernel::Inverted,
+            KernelChoice::Auto => {
+                if shape.est_center_density() <= AUTO_DENSITY_CUTOFF {
+                    Kernel::Inverted
+                } else if shape.transpose_bytes() > AUTO_FOOTPRINT_BYTES {
+                    Kernel::Gather
+                } else {
+                    Kernel::Dense
+                }
+            }
+        }
+    }
+
+    /// Display name (CLI/report spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Dense => "dense",
+            KernelChoice::Gather => "gather",
+            KernelChoice::Inverted => "inverted",
+        }
+    }
+}
+
+impl Kernel {
+    /// Display name (report spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Dense => "dense",
+            Kernel::Gather => "gather",
+            Kernel::Inverted => "inverted",
+        }
+    }
+}
+
+impl std::str::FromStr for KernelChoice {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(KernelChoice::Auto),
+            "dense" | "transpose" => Ok(KernelChoice::Dense),
+            "gather" | "dots" => Ok(KernelChoice::Gather),
+            "inverted" | "ivf" | "csc" => Ok(KernelChoice::Inverted),
+            other => Err(format!("unknown kernel: {other}")),
+        }
+    }
+}
+
+/// Dense-transpose backend: per non-zero of the row, the k center
+/// coordinates are contiguous in the d×k transpose `t`, so the inner loop
+/// vectorizes. `f64` accumulators (exactness), contiguous f32 reads
+/// (speed). Returns the multiply-adds performed (`nnz(row)·k`).
+#[inline]
+pub(crate) fn sims_transposed(t: &DenseMatrix, k: usize, row: RowView<'_>, out: &mut [f64]) -> u64 {
+    debug_assert_eq!(out.len(), k);
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    let t = t.data();
+    for (t_i, &v) in row.indices.iter().zip(row.values.iter()) {
+        let base = *t_i as usize * k;
+        let col = &t[base..base + k];
+        let v = v as f64;
+        for (o, &cv) in out.iter_mut().zip(col.iter()) {
+            *o += v * cv as f64;
+        }
+    }
+    (row.nnz() * k) as u64
+}
+
+/// Gather backend: k separate sparse×dense dots against the center rows —
+/// the same per-similarity machinery the pruned variants use selectively.
+/// Returns the multiply-adds performed (`nnz(row)·k`).
+#[inline]
+pub(crate) fn sims_gather(centers: &DenseMatrix, row: RowView<'_>, out: &mut [f64]) -> u64 {
+    debug_assert_eq!(out.len(), centers.rows());
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = row.dot_dense(centers.row(j));
+    }
+    (row.nnz() * centers.rows()) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parsing_and_names() {
+        assert_eq!("auto".parse::<KernelChoice>().unwrap(), KernelChoice::Auto);
+        assert_eq!("Dense".parse::<KernelChoice>().unwrap(), KernelChoice::Dense);
+        assert_eq!(
+            "transpose".parse::<KernelChoice>().unwrap(),
+            KernelChoice::Dense
+        );
+        assert_eq!(
+            "gather".parse::<KernelChoice>().unwrap(),
+            KernelChoice::Gather
+        );
+        assert_eq!(
+            "inverted".parse::<KernelChoice>().unwrap(),
+            KernelChoice::Inverted
+        );
+        assert_eq!("IVF".parse::<KernelChoice>().unwrap(), KernelChoice::Inverted);
+        assert!("nope".parse::<KernelChoice>().is_err());
+        for c in [
+            KernelChoice::Auto,
+            KernelChoice::Dense,
+            KernelChoice::Gather,
+            KernelChoice::Inverted,
+        ] {
+            assert!(!c.name().is_empty());
+        }
+        assert_eq!(KernelChoice::default(), KernelChoice::Auto);
+    }
+
+    #[test]
+    fn explicit_choices_pass_through() {
+        let shape = DataShape { dims: 10, nnz: 100, k: 2, truncate: None };
+        assert_eq!(KernelChoice::Dense.resolve(&shape), Kernel::Dense);
+        assert_eq!(KernelChoice::Gather.resolve(&shape), Kernel::Gather);
+        assert_eq!(KernelChoice::Inverted.resolve(&shape), Kernel::Inverted);
+    }
+
+    #[test]
+    fn auto_prefers_dense_on_densifying_centers() {
+        // Small vocabulary, many points per cluster: centers densify
+        // (§5.2 of the paper), the transpose wins.
+        let shape = DataShape { dims: 800, nnz: 400_000, k: 8, truncate: None };
+        assert!(shape.est_center_density() > 0.5);
+        assert_eq!(KernelChoice::Auto.resolve(&shape), Kernel::Dense);
+    }
+
+    #[test]
+    fn auto_prefers_inverted_on_sparse_and_gather_on_oversized_problems() {
+        // 100k-term vocabulary: per-cluster mass covers a sliver of it.
+        let sparse = DataShape {
+            dims: 100_000,
+            nnz: 3_000_000,
+            k: 256,
+            truncate: None,
+        };
+        assert!(sparse.est_center_density() < AUTO_DENSITY_CUTOFF);
+        assert_eq!(KernelChoice::Auto.resolve(&sparse), Kernel::Inverted);
+        // Truncated centers cap the density regardless of the data.
+        let truncated = DataShape {
+            dims: 20_000,
+            nnz: 100_000_000,
+            k: 64,
+            truncate: Some(128),
+        };
+        assert!(truncated.est_center_density() <= 128.0 / 20_000.0 + 1e-12);
+        assert_eq!(KernelChoice::Auto.resolve(&truncated), Kernel::Inverted);
+        // Footprint guard at *high* density: the transpose is too large to
+        // materialize, and a postings index over dense centers would be
+        // larger still — Auto falls back to the zero-memory gather path.
+        let huge = DataShape {
+            dims: 500_000,
+            nnz: usize::MAX / 2,
+            k: 1_000,
+            truncate: None,
+        };
+        assert!(huge.est_center_density() > AUTO_DENSITY_CUTOFF);
+        assert!(huge.transpose_bytes() > AUTO_FOOTPRINT_BYTES);
+        assert_eq!(KernelChoice::Auto.resolve(&huge), Kernel::Gather);
+        // A huge-but-sparse problem still gets the inverted file: the
+        // density rule fires before the footprint fallback.
+        let huge_sparse = DataShape { nnz: 5_000_000, ..huge };
+        assert!(huge_sparse.est_center_density() <= AUTO_DENSITY_CUTOFF);
+        assert_eq!(KernelChoice::Auto.resolve(&huge_sparse), Kernel::Inverted);
+    }
+
+    #[test]
+    fn backends_agree_on_random_sparse_problems() {
+        use crate::sparse::{InvertedIndex, SparseVec};
+        use crate::util::prop::forall;
+        forall(60, 0x5EED, |g| {
+            let d = g.usize_in(1, 64);
+            let k = g.usize_in(1, 12);
+            let mut centers = DenseMatrix::zeros(k, d);
+            for j in 0..k {
+                let nnz = g.usize_in(0, d + 1);
+                for c in g.sparse_pattern(d, nnz) {
+                    centers.row_mut(j)[c] = g.f64_in(-1.0, 1.0) as f32;
+                }
+            }
+            let mut t = DenseMatrix::zeros(d, k);
+            for j in 0..k {
+                for (c, &v) in centers.row(j).iter().enumerate() {
+                    t.data_mut()[c * k + j] = v;
+                }
+            }
+            let idx = InvertedIndex::from_centers(&centers);
+            let nnz = g.usize_in(0, d + 1);
+            let pat = g.sparse_pattern(d, nnz);
+            let row = SparseVec::new(
+                d,
+                pat.iter().map(|&c| c as u32).collect(),
+                pat.iter().map(|_| g.f64_in(-1.0, 1.0) as f32).collect(),
+            );
+            let rv = RowView { indices: row.indices(), values: row.values() };
+            let mut dense = vec![0.0f64; k];
+            let mut inv = vec![0.0f64; k];
+            let mut gather = vec![0.0f64; k];
+            let md = sims_transposed(&t, k, rv, &mut dense);
+            let mi = idx.sims_into(rv, &mut inv);
+            let mg = sims_gather(&centers, rv, &mut gather);
+            // Dense ↔ Inverted: bit-identical, and the inverted file never
+            // does more multiply-adds.
+            assert!(mi <= md);
+            assert_eq!(md, mg);
+            for (x, y) in dense.iter().zip(&inv) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            // Gather: same values up to summation-order rounding.
+            for (x, y) in dense.iter().zip(&gather) {
+                assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+            }
+        });
+    }
+}

@@ -31,11 +31,13 @@
 //! **Truncation.** With [`KMeansConfig::truncate`]` = Some(m)` every
 //! recomputed center keeps only its `m` largest-magnitude coordinates
 //! (renormalized to the sphere), bounding each center's support as in
-//! Knittel et al.'s sparsified centroids. Centers are still **stored
-//! dense** here, so truncation does not yet make a similarity cheaper —
-//! it pins the `m`-sparse/unit-norm invariant (the prerequisite for a
-//! sparse center layout with sparse×sparse similarity kernels, a ROADMAP
-//! follow-up) at a small additional objective cost.
+//! Knittel et al.'s sparsified centroids. Combined with the inverted-file
+//! similarity kernel ([`crate::kmeans::kernel`] — which
+//! [`KernelChoice::Auto`](super::KernelChoice) picks automatically once
+//! `m/d` is small), the `m`-sparse invariant makes every batch similarity
+//! cheaper: the postings index holds at most `m·k` entries, so an
+//! all-centers pass costs `Σ_c∈row postings(c)` multiply-adds instead of
+//! `nnz(row)·k`.
 //!
 //! One epoch draws `ceil(n / batch_size)` distinct-sample batches (one
 //! corpus-worth); the run stops after [`KMeansConfig::epochs`] epochs or
@@ -52,6 +54,7 @@
 //! println!("approx objective = {}", r.objective);
 //! ```
 
+use super::kernel::DataShape;
 use super::{Centers, IterStats, KMeansConfig, KMeansResult, RunStats, SimView};
 use crate::runtime::parallel::{split_mut, Plan, Pool};
 use crate::sparse::{CsrMatrix, DenseMatrix};
@@ -87,7 +90,11 @@ pub fn run_with_centers(
     let k = cfg.k;
     let b = cfg.batch_size.min(n.max(1));
     let batches_per_epoch = n.div_ceil(b.max(1));
-    let mut centers = Centers::from_initial(initial_centers);
+    // Resolve the similarity kernel from the problem shape; truncated
+    // sparse centroids cap the center density, which is exactly the regime
+    // the inverted-file backend exists for.
+    let kernel = cfg.kernel.resolve(&DataShape::of(data, k, cfg.truncate));
+    let mut centers = Centers::from_initial_for(initial_centers, kernel);
     if let Some(m) = cfg.truncate {
         // Establish the m-sparse invariant on the initial centers too.
         centers.truncate_centers(m);
@@ -212,6 +219,7 @@ pub fn run_with_centers(
         mean_similarity: 1.0 - obj / n.max(1) as f64,
         objective: obj,
         assignments: assign,
+        kernel: centers.kernel(),
         centers: centers.centers().clone(),
         iterations: epochs_run,
         converged,

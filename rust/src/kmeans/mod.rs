@@ -58,13 +58,36 @@
 //! The `parallel_matches_serial` integration suite asserts the contract
 //! (bit-identical assignments and objectives) for all seven variants.
 //!
+//! # Similarity kernels
+//!
+//! Every similarity the bounds cannot prune lands in an all-centers pass,
+//! which runs on the pluggable kernel layer of [`kernel`]: the
+//! **dense-transpose** backend (d×k f32 copy, contiguous SIMD-friendly
+//! reads, `O(d·k)` memory), the **gather** backend (k separate sparse×dense
+//! dots — the paper's cost model, no derived structure), or the
+//! **inverted-file** backend (a CSC postings index over the center
+//! non-zeros, [`crate::sparse::InvertedIndex`]) that skips every
+//! (point, center) pair sharing no term and avoids the d×k footprint
+//! entirely — the right choice for 100k+-term vocabularies and truncated
+//! sparse centroids. [`KMeansConfig::kernel`] selects
+//! ([`KernelChoice::Auto`] resolves from the problem shape); the Dense and
+//! Inverted backends accumulate identically (ascending dimension order)
+//! and are **bit-identical**, extending the exactness contract across
+//! kernels. Derived structures are refreshed per update barrier for dirty
+//! centers only — clean centers provably did not move.
+//!
 //! ```no_run
-//! use sphkm::kmeans::{KMeansConfig, Variant};
-//! // Simplified Hamerly on 8 clusters, using every available core.
-//! let cfg = KMeansConfig::new(8).variant(Variant::SimplifiedHamerly).threads(0);
+//! use sphkm::kmeans::{KernelChoice, KMeansConfig, Variant};
+//! // Simplified Hamerly on 8 clusters, using every available core and
+//! // the inverted-file similarity kernel.
+//! let cfg = KMeansConfig::new(8)
+//!     .variant(Variant::SimplifiedHamerly)
+//!     .kernel(KernelChoice::Inverted)
+//!     .threads(0);
 //! ```
 
 pub mod centers;
+pub mod kernel;
 pub mod minibatch;
 pub mod stats;
 
@@ -79,10 +102,12 @@ mod yinyang;
 use crate::data::Dataset;
 use crate::init::InitMethod;
 use crate::runtime::parallel::{split_mut, Plan, Pool};
+use crate::sparse::csr::RowView;
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use crate::util::timer::Stopwatch;
 use std::ops::Range;
 pub use centers::Centers;
+pub use kernel::{DataShape, Kernel, KernelChoice};
 pub use stats::{IterStats, RunStats};
 
 /// Which algorithm variant to run.
@@ -182,14 +207,17 @@ pub struct KMeansConfig {
     /// Number of center groups for [`Variant::Yinyang`]; defaults to
     /// `max(1, k/10)` as in Ding et al. (2015) when `None`.
     pub yinyang_groups: Option<usize>,
-    /// Standard variant only: use the transposed-centers SIMD fast path
-    /// for the all-k similarity pass (§Perf). `true` is fastest; `false`
-    /// computes per-center gather dots — the **same per-similarity
-    /// machinery the pruned variants use**, which is what the paper's
-    /// Table 3/Fig. 1–2 comparisons assume (c.f. Kriegel et al., "are we
-    /// comparing algorithms or implementations?"). The experiment drivers
-    /// report both.
-    pub fast_standard: bool,
+    /// Which similarity-kernel backend computes the all-centers passes —
+    /// see [`kernel`]. [`KernelChoice::Auto`] (the default) resolves per
+    /// run from the problem shape: the inverted-file (CSC postings) kernel
+    /// when centers are expected to stay sparse; otherwise the dense
+    /// transpose, degrading to gather when the d×k footprint is
+    /// prohibitive.
+    /// [`KernelChoice::Gather`] is the paper-faithful cost model (identical
+    /// per-similarity machinery to the pruned variants' selective
+    /// computations — c.f. Kriegel et al., "are we comparing algorithms or
+    /// implementations?"), which the experiment drivers default to.
+    pub kernel: KernelChoice,
     /// Use the guarded min-p single-bound update
     /// ([`crate::bounds::hamerly_bound::update_min_p_guarded`]) instead of
     /// the paper's Eq. 9 in the Hamerly and Yinyang variants. Exact either
@@ -228,7 +256,7 @@ impl KMeansConfig {
             seed: 0,
             threads: 1,
             yinyang_groups: None,
-            fast_standard: true,
+            kernel: KernelChoice::Auto,
             tight_hamerly_bound: false,
             batch_size: 1024,
             epochs: 10,
@@ -237,10 +265,9 @@ impl KMeansConfig {
         }
     }
 
-    /// Select the Standard variant's similarity path (see
-    /// [`KMeansConfig::fast_standard`]).
-    pub fn fast_standard(mut self, on: bool) -> Self {
-        self.fast_standard = on;
+    /// Select the similarity-kernel backend (see [`KMeansConfig::kernel`]).
+    pub fn kernel(mut self, k: KernelChoice) -> Self {
+        self.kernel = k;
         self
     }
 
@@ -324,6 +351,9 @@ pub struct KMeansResult {
     pub iterations: usize,
     /// True if the run converged (no reassignments) before `max_iter`.
     pub converged: bool,
+    /// The similarity-kernel backend the run actually resolved and
+    /// executed (what [`KMeansConfig::kernel`] became — see [`kernel`]).
+    pub kernel: Kernel,
     /// Per-iteration instrumentation.
     pub stats: RunStats,
 }
@@ -350,7 +380,7 @@ pub fn run_seeded(
     if let Some(m) = &init.sim_matrix {
         assert_eq!(m.len(), data.rows() * cfg.k, "sim matrix shape");
     }
-    let mut ctx = Ctx::new(data, init.centers, cfg.threads);
+    let mut ctx = Ctx::new(data, init.centers, cfg);
     ctx.preinit = init.sim_matrix;
     let converged = dispatch(&mut ctx, cfg);
     ctx.into_result(converged)
@@ -367,7 +397,7 @@ pub fn run_with_centers(
     assert_eq!(initial_centers.rows(), cfg.k, "initial centers vs k");
     assert_eq!(initial_centers.cols(), data.cols(), "center dimensionality");
     assert!(cfg.k >= 1, "need at least one cluster");
-    let mut ctx = Ctx::new(data, initial_centers, cfg.threads);
+    let mut ctx = Ctx::new(data, initial_centers, cfg);
     let converged = dispatch(&mut ctx, cfg);
     ctx.into_result(converged)
 }
@@ -492,8 +522,9 @@ pub(crate) struct SimView<'a> {
 
 impl SimView<'_> {
     /// Compute similarities of row `i` to **all** centers into `scratch`
-    /// (length k) via the transposed-centers fast path; returns
-    /// `(argmax, best, second_best)`. Charges `k` similarity computations.
+    /// (length k) through the active kernel backend; returns
+    /// `(argmax, best, second_best)`. Charges `k` similarity computations
+    /// plus the backend's multiply-adds.
     #[inline]
     pub fn similarities_full(
         &self,
@@ -502,34 +533,28 @@ impl SimView<'_> {
         scratch: &mut [f64],
     ) -> (usize, f64, f64) {
         let row = self.data.row(i);
-        self.centers.sims_all(row, scratch);
+        iter.madds_point_center += self.centers.sims_all(row, scratch);
         iter.sims_point_center += self.k as u64;
         top2(scratch)
     }
 
-    /// Like [`SimView::similarities_full`] but with per-center gather dots —
-    /// the paper-faithful cost model (identical per-similarity work to the
-    /// pruned variants' selective computations).
+    /// All-centers similarity row through the active kernel, without the
+    /// `sims_point_center` charge — Hamerly-family re-scans ignore the
+    /// assigned center's entry and bill `k − 1` sims themselves. The
+    /// backend's multiply-adds are charged here.
     #[inline]
-    pub fn similarities_full_gather(
-        &self,
-        i: usize,
-        iter: &mut IterStats,
-        scratch: &mut [f64],
-    ) -> (usize, f64, f64) {
-        let row = self.data.row(i);
-        for (j, o) in scratch.iter_mut().enumerate() {
-            *o = row.dot_dense(self.centers.center(j));
-        }
-        iter.sims_point_center += self.k as u64;
-        top2(scratch)
+    pub fn sims_row(&self, row: RowView<'_>, iter: &mut IterStats, scratch: &mut [f64]) {
+        iter.madds_point_center += self.centers.sims_all(row, scratch);
     }
 
-    /// One point×center similarity, charged to `iter`.
+    /// One point×center similarity (gather dot — the selective-similarity
+    /// path every pruned variant uses), charged to `iter`.
     #[inline]
     pub fn similarity(&self, i: usize, j: usize, iter: &mut IterStats) -> f64 {
+        let row = self.data.row(i);
         iter.sims_point_center += 1;
-        self.data.row(i).dot_dense(self.centers.center(j))
+        iter.madds_point_center += row.nnz() as u64;
+        row.dot_dense(self.centers.center(j))
     }
 }
 
@@ -551,18 +576,21 @@ pub(crate) struct Ctx<'a> {
 }
 
 impl<'a> Ctx<'a> {
-    fn new(data: &'a CsrMatrix, initial_centers: DenseMatrix, threads: usize) -> Self {
+    fn new(data: &'a CsrMatrix, initial_centers: DenseMatrix, cfg: &KMeansConfig) -> Self {
         let k = initial_centers.rows();
         let plan = Plan::for_rows(data.rows());
         // A single-shard plan can never use more than one worker — skip
         // thread-pool construction entirely (runs on tiny inputs would
         // otherwise spawn threads that do no work).
-        let threads = if plan.len() <= 1 { 1 } else { threads };
+        let threads = if plan.len() <= 1 { 1 } else { cfg.threads };
+        // Resolve the similarity kernel once, from the problem shape (the
+        // exact variants keep dense centers, so no truncation estimate).
+        let kernel = cfg.kernel.resolve(&DataShape::of(data, k, None));
         Self {
             data,
             k,
             assign: vec![0; data.rows()],
-            centers: Centers::from_initial(initial_centers),
+            centers: Centers::from_initial_for(initial_centers, kernel),
             stats: RunStats::default(),
             plan,
             pool: Pool::new(threads),
@@ -695,6 +723,7 @@ impl<'a> Ctx<'a> {
             mean_similarity: 1.0 - obj / n,
             objective: obj,
             assignments: self.assign,
+            kernel: self.centers.kernel(),
             centers: self.centers.centers().clone(),
             iterations,
             converged,
@@ -754,6 +783,13 @@ mod tests {
         assert_eq!(mb.tol, 1e-3);
         assert_eq!(mb.truncate, Some(64));
         assert_eq!(KMeansConfig::new(2).truncate, None, "dense by default");
+        assert_eq!(
+            KMeansConfig::new(2).kernel,
+            KernelChoice::Auto,
+            "auto kernel by default"
+        );
+        let kc = KMeansConfig::new(2).kernel(KernelChoice::Inverted);
+        assert_eq!(kc.kernel, KernelChoice::Inverted);
     }
 
     #[test]

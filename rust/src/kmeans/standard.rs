@@ -1,9 +1,10 @@
 //! The baseline spherical k-means algorithm (Dhillon & Modha 2001) with the
 //! paper's §5 implementation optimizations: unit-normalized data (dot
-//! product = cosine), sparse×dense row–center dots, cached unnormalized
-//! sums updated incrementally, and sums scaled (not averaged) to unit
-//! length. No pruning — every iteration computes all `N·k` similarities,
-//! sharded across the worker pool (see the module docs of
+//! product = cosine), cached unnormalized sums updated incrementally, and
+//! sums scaled (not averaged) to unit length. No pruning — every iteration
+//! computes all `N·k` similarities through the configured kernel backend
+//! ([`crate::kmeans::kernel`]: dense transpose, gather dots, or the
+//! inverted file), sharded across the worker pool (see the module docs of
 //! [`crate::kmeans`] for the determinism contract).
 
 use super::{Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
@@ -23,7 +24,6 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
 
         let outs = {
             let view = SimView { data: ctx.data, centers: &ctx.centers, k };
-            let fast = cfg.fast_standard;
             let mut works: Vec<(Range<usize>, &mut [u32])> = Vec::with_capacity(shards);
             {
                 let assign = split_mut(&ctx.plan, 1, &mut ctx.assign);
@@ -35,11 +35,8 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
                 let mut out = ShardOut::default();
                 let mut scratch = vec![0.0f64; k];
                 for (li, i) in range.enumerate() {
-                    let (best_j, _, _) = if fast {
-                        view.similarities_full(i, &mut out.iter, &mut scratch)
-                    } else {
-                        view.similarities_full_gather(i, &mut out.iter, &mut scratch)
-                    };
+                    let (best_j, _, _) =
+                        view.similarities_full(i, &mut out.iter, &mut scratch);
                     let old = assign[li] as usize;
                     if best_j != old {
                         assign[li] = best_j as u32;

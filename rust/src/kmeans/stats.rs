@@ -7,6 +7,14 @@
 pub struct IterStats {
     /// Point×center similarity computations (sparse·dense dots).
     pub sims_point_center: u64,
+    /// Multiply-add operations spent inside point×center similarity
+    /// computations — the kernel-layer cost model: the dense-transpose and
+    /// gather backends charge `nnz(row)·k` per all-centers pass, the
+    /// inverted-file backend only the postings actually walked (see
+    /// [`crate::kmeans::kernel`]). `sims_point_center` counts similarities
+    /// regardless of backend; this counter is what separates the backends'
+    /// costs (`bench_kernel` plots the crossover).
+    pub madds_point_center: u64,
     /// Center×center similarity computations (dense·dense dots), including
     /// the `p(j) = ⟨c, c'⟩` movement self-similarities.
     pub sims_center_center: u64,
@@ -34,6 +42,7 @@ impl IterStats {
     /// instead.
     pub fn absorb(&mut self, shard: &IterStats) {
         self.sims_point_center += shard.sims_point_center;
+        self.madds_point_center += shard.madds_point_center;
         self.sims_center_center += shard.sims_center_center;
         self.reassignments += shard.reassignments;
         self.loop_skips += shard.loop_skips;
@@ -60,6 +69,12 @@ impl RunStats {
     /// Total point×center similarity computations.
     pub fn total_point_center(&self) -> u64 {
         self.iters.iter().map(|i| i.sims_point_center).sum()
+    }
+
+    /// Total multiply-adds spent in point×center similarity kernels (the
+    /// backend-sensitive cost — see [`IterStats::madds_point_center`]).
+    pub fn total_madds(&self) -> u64 {
+        self.iters.iter().map(|i| i.madds_point_center).sum()
     }
 
     /// Total wall time in milliseconds (sum of iteration laps).
@@ -136,6 +151,7 @@ mod tests {
             for _ in 0..shards {
                 let part = IterStats {
                     sims_point_center: g.usize_in(0, 10_000) as u64,
+                    madds_point_center: g.usize_in(0, 100_000) as u64,
                     sims_center_center: g.usize_in(0, 1_000) as u64,
                     reassignments: g.usize_in(0, 500) as u64,
                     loop_skips: g.usize_in(0, 500) as u64,
@@ -143,6 +159,7 @@ mod tests {
                     wall_ms: g.f64_in(0.0, 5.0),
                 };
                 serial.sims_point_center += part.sims_point_center;
+                serial.madds_point_center += part.madds_point_center;
                 serial.sims_center_center += part.sims_center_center;
                 serial.reassignments += part.reassignments;
                 serial.loop_skips += part.loop_skips;
@@ -150,6 +167,7 @@ mod tests {
                 merged.absorb(&part);
             }
             assert_eq!(merged.sims_point_center, serial.sims_point_center);
+            assert_eq!(merged.madds_point_center, serial.madds_point_center);
             assert_eq!(merged.sims_center_center, serial.sims_center_center);
             assert_eq!(merged.reassignments, serial.reassignments);
             assert_eq!(merged.loop_skips, serial.loop_skips);

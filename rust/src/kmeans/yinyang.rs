@@ -187,7 +187,6 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
                         gmax1[gi] = f64::MIN;
                         gmax2[gi] = f64::MIN;
                     }
-                    let data_row = view.data.row(i);
                     for (gi, members) in groups.iter().enumerate() {
                         if urow[gi] <= l[li] {
                             out.iter.bound_skips += 1;
@@ -198,8 +197,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
                             if j == a {
                                 continue;
                             }
-                            let s = data_row.dot_dense(view.centers.center(j));
-                            out.iter.sims_point_center += 1;
+                            let s = view.similarity(i, j, &mut out.iter);
                             if s > gmax1[gi] {
                                 gmax2[gi] = gmax1[gi];
                                 gmax1[gi] = s;

@@ -13,7 +13,7 @@ use sphkm::coordinator::experiments::{self, ExperimentOpts};
 use sphkm::data::datasets::{self, Scale, DATASET_NAMES};
 use sphkm::data::Dataset;
 use sphkm::init::InitMethod;
-use sphkm::kmeans::{KMeansConfig, Variant};
+use sphkm::kmeans::{KMeansConfig, KernelChoice, Variant};
 use sphkm::metrics;
 use sphkm::util::cli::Args;
 
@@ -26,6 +26,7 @@ USAGE:
   sphkm cluster --data <dataset> --k K [--algo VARIANT] [--init METHOD]
                 [--seed N] [--scale S] [--max-iter M] [--stats] [--labels]
                 [--threads T] # sharded assignment: 0 = all cores, 1 = serial
+                [--kernel X]  # similarity backend: auto|dense|gather|inverted
                 [--preinit]   # §7: pre-initialize bounds from k-means++
                 [--minibatch] # approximate mini-batch engine (large corpora)
                 [--batch-size B] [--epochs E] [--tol T]
@@ -35,12 +36,14 @@ USAGE:
   sphkm bench --exp table1|table2|table3|fig1|fig2|ablation-cc|ablation-preinit
               |minibatch
               [--scale S] [--reps R] [--ks 2,10,20] [--quick] [--k K]
-              [--threads T]
+              [--threads T] [--kernel X]
   sphkm info
 
   <dataset>: one of {names}, or a .svm/.libsvm/.mtx file path
   VARIANT:   standard | elkan | simp-elkan | hamerly | simp-hamerly | yinyang
-  METHOD:    uniform | kmeans++ | kmeans++1.5 | afkmc2 | afkmc2-1.5",
+  METHOD:    uniform | kmeans++ | kmeans++1.5 | afkmc2 | afkmc2-1.5
+  KERNEL:    auto (problem-shape heuristic) | dense (d×k transpose)
+             | gather (per-center dots) | inverted (CSC postings index)",
         names = DATASET_NAMES.join("|")
     );
     std::process::exit(2)
@@ -82,6 +85,9 @@ fn run_sweep(cfg: &sphkm::util::config::Config) {
     let reps: usize = cfg.get_or("reps", 1).unwrap_or(1).max(1);
     let max_iter: usize = cfg.get_or("max_iter", 200).unwrap_or(200);
     let threads: usize = cfg.get_or("threads", 1).unwrap_or(1);
+    let kernel: KernelChoice = cfg
+        .get_or("kernel", KernelChoice::Auto)
+        .unwrap_or_else(|e| { eprintln!("{e}"); usage() });
     let datasets_list: Vec<String> = {
         let l = cfg.list::<String>("datasets").unwrap_or_default();
         if l.is_empty() {
@@ -134,6 +140,7 @@ fn run_sweep(cfg: &sphkm::util::config::Config) {
                             .init(*init)
                             .seed(seed ^ rep as u64)
                             .threads(threads)
+                            .kernel(kernel)
                             .max_iter(max_iter);
                         let sw = sphkm::util::timer::Stopwatch::start();
                         last = Some(sphkm::kmeans::run(&ds.matrix, &c));
@@ -197,30 +204,38 @@ fn main() {
                 .parse()
                 .unwrap_or_else(|e| { eprintln!("{e}"); usage() });
             let threads: usize = args.get_or("threads", 1).unwrap_or(1);
+            let kernel: KernelChoice = args
+                .get("kernel")
+                .unwrap_or("auto")
+                .parse()
+                .unwrap_or_else(|e| { eprintln!("{e}"); usage() });
+            let trunc_cli: usize = args.get_or("truncate", 0).unwrap_or(0);
             let cfg = KMeansConfig::new(k)
                 .variant(variant)
                 .init(init)
                 .seed(seed)
                 .threads(threads)
+                .kernel(kernel)
                 .max_iter(args.get_or("max-iter", 200).unwrap_or(200));
             println!(
-                "dataset {} ({}×{}, {:.3}% nnz), k={k}, algo={}, seed={seed}, threads={threads}",
+                "dataset {} ({}×{}, {:.3}% nnz), k={k}, algo={}, seed={seed}, threads={threads}, \
+                 kernel={}",
                 ds.name,
                 ds.matrix.rows(),
                 ds.matrix.cols(),
                 ds.matrix.density() * 100.0,
-                variant.name()
+                variant.name(),
+                kernel.name()
             );
             let sw = sphkm::util::timer::Stopwatch::start();
             let r = if args.flag("minibatch") {
                 // Approximate mini-batch engine (ignores --algo).
-                let trunc: usize = args.get_or("truncate", 0).unwrap_or(0);
                 let mcfg = cfg
                     .clone()
                     .batch_size(args.get_or("batch-size", 1024).unwrap_or(1024))
                     .epochs(args.get_or("epochs", 10).unwrap_or(10))
                     .tol(args.get_or("tol", 1e-4).unwrap_or(1e-4))
-                    .truncate(if trunc == 0 { None } else { Some(trunc) });
+                    .truncate(if trunc_cli == 0 { None } else { Some(trunc_cli) });
                 sphkm::kmeans::minibatch::run(&ds.matrix, &mcfg)
             } else if args.flag("preinit") {
                 // §7 synergy: consume the seeding's similarity matrix.
@@ -239,8 +254,11 @@ fn main() {
                 r.mean_similarity
             );
             println!(
-                "similarity computations: {} point-center + {} center-center",
+                "similarity computations: {} point-center ({} kernel madds via {}) + \
+                 {} center-center",
                 r.stats.total_point_center(),
+                r.stats.total_madds(),
+                r.kernel.name(),
                 r.stats.total_sims() - r.stats.total_point_center()
             );
             if args.flag("labels") {
@@ -290,6 +308,14 @@ fn main() {
             );
         }
         "bench" => {
+            // Validate --kernel here so a typo gets the usage screen, as
+            // on `cluster` (from_args would exit 2 without it).
+            if let Some(raw) = args.get("kernel") {
+                if let Err(e) = raw.parse::<KernelChoice>() {
+                    eprintln!("{e}");
+                    usage();
+                }
+            }
             let opts = ExperimentOpts::from_args(&args);
             let k: usize = args.get_or("k", 100).unwrap_or(100);
             match args.get("exp").unwrap_or("table3") {

@@ -1,0 +1,283 @@
+//! Inverted-file (CSC-style) index over the cluster centers.
+//!
+//! The dense d×k transposed center matrix behind the default similarity
+//! kernel costs `O(d·k)` memory and `O(nnz(row)·k)` multiply-adds per
+//! all-centers pass — every (point, center) pair pays, even when the
+//! center is zero in all of the point's terms. For document workloads the
+//! sparse follow-up literature (Aoyama & Saito's SIVF, arXiv:2103.16141;
+//! Knittel et al., arXiv:2108.00895) inverts the centers instead: per
+//! dimension, a **postings list** of the centers with a non-zero there.
+//! An all-centers similarity pass then walks only the postings of the
+//! row's own terms, skipping every pair that shares no term.
+//!
+//! **Bit-exactness contract.** [`InvertedIndex::sims_into`] accumulates
+//! per-center contributions in ascending dimension order of the row's
+//! non-zeros — the same `f64` addition sequence the dense-transpose kernel
+//! produces for that center, minus terms whose product is an exact ±0.0
+//! (which cannot change a `+0.0`-initialized accumulator). Similarities
+//! are therefore bit-identical to the dense kernel's, which is what lets
+//! the two backends interchange under the exactness tests of
+//! [`crate::kmeans`].
+//!
+//! Maintenance is incremental: [`InvertedIndex::refresh_center`] rewrites
+//! only the postings of one (dirty) center, so an iteration that moves
+//! few centers pays for few centers — the same dirty-flag discipline
+//! [`crate::kmeans::Centers`] applies to its transpose columns.
+
+use super::csr::RowView;
+use super::dense::DenseMatrix;
+
+/// One center's non-zero value in one dimension's postings list.
+#[derive(Debug, Clone, Copy)]
+struct Posting {
+    /// Center id (row of the centers matrix).
+    center: u32,
+    /// The center's value at this dimension.
+    value: f32,
+}
+
+/// CSC-style inverted file over a k×d centers matrix: for each dimension,
+/// the centers with a non-zero coordinate there, sorted by center id.
+#[derive(Debug, Clone)]
+pub struct InvertedIndex {
+    k: usize,
+    /// Per-dimension postings, each sorted by center id ascending.
+    postings: Vec<Vec<Posting>>,
+    /// Per-center sorted list of dimensions where the center is non-zero
+    /// (its support) — what `refresh_center` must erase before rewriting.
+    support: Vec<Vec<u32>>,
+    /// Total postings across all dimensions.
+    nnz: usize,
+}
+
+impl InvertedIndex {
+    /// Empty index for `k` centers over `d` dimensions.
+    pub fn new(d: usize, k: usize) -> Self {
+        Self {
+            k,
+            postings: vec![Vec::new(); d],
+            support: vec![Vec::new(); k],
+            nnz: 0,
+        }
+    }
+
+    /// Build the full index from a k×d centers matrix.
+    pub fn from_centers(centers: &DenseMatrix) -> Self {
+        let mut me = Self::new(centers.cols(), centers.rows());
+        // Centers inserted in ascending id order keep every postings list
+        // sorted without searching.
+        for j in 0..me.k {
+            for (c, &v) in centers.row(j).iter().enumerate() {
+                if v != 0.0 {
+                    me.postings[c].push(Posting { center: j as u32, value: v });
+                    me.support[j].push(c as u32);
+                    me.nnz += 1;
+                }
+            }
+        }
+        me
+    }
+
+    /// Number of centers indexed.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of dimensions indexed.
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.postings.len()
+    }
+
+    /// Total postings (non-zero center coordinates) in the index.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Fraction of stored center coordinates: `nnz / (d·k)`.
+    pub fn density(&self) -> f64 {
+        let cells = self.postings.len() * self.k;
+        if cells == 0 {
+            return 0.0;
+        }
+        self.nnz as f64 / cells as f64
+    }
+
+    /// Rewrite the postings of center `j` from its current dense row —
+    /// the incremental maintenance step for a dirty center. `O(support +
+    /// d)` plus the postings-list shifts (lists hold at most k entries).
+    pub fn refresh_center(&mut self, j: usize, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.postings.len());
+        let jj = j as u32;
+        for &c in &self.support[j] {
+            let list = &mut self.postings[c as usize];
+            if let Ok(pos) = list.binary_search_by_key(&jj, |p| p.center) {
+                list.remove(pos);
+                self.nnz -= 1;
+            }
+        }
+        // Reuse the support allocation for the new pattern.
+        let mut support = std::mem::take(&mut self.support[j]);
+        support.clear();
+        for (c, &v) in row.iter().enumerate() {
+            if v != 0.0 {
+                support.push(c as u32);
+                let list = &mut self.postings[c];
+                let pos = list
+                    .binary_search_by_key(&jj, |p| p.center)
+                    .expect_err("center postings were just erased");
+                list.insert(pos, Posting { center: jj, value: v });
+                self.nnz += 1;
+            }
+        }
+        self.support[j] = support;
+    }
+
+    /// Similarities of one sparse row to **all** centers, written into
+    /// `out[0..k]`. Walks only the postings of the row's own dimensions;
+    /// returns the number of multiply-adds performed (the kernel-layer
+    /// cost model — strictly `≤ nnz(row)·k`, and far below it when the
+    /// centers are sparse). Bit-identical to the dense-transpose kernel —
+    /// see the module docs.
+    pub fn sims_into(&self, row: RowView<'_>, out: &mut [f64]) -> u64 {
+        debug_assert_eq!(out.len(), self.k);
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        let mut madds = 0u64;
+        for (c, &v) in row.indices.iter().zip(row.values.iter()) {
+            let list = &self.postings[*c as usize];
+            madds += list.len() as u64;
+            let v = v as f64;
+            for p in list {
+                out[p.center as usize] += v * p.value as f64;
+            }
+        }
+        madds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseVec;
+    use crate::util::prop::forall;
+
+    fn view(v: &SparseVec) -> RowView<'_> {
+        RowView { indices: v.indices(), values: v.values() }
+    }
+
+    fn toy_centers() -> DenseMatrix {
+        // 3 centers over 4 dims; center 2 is all-zero in dims {1, 3}.
+        DenseMatrix::from_vec(
+            3,
+            4,
+            vec![
+                0.6, 0.0, 0.8, 0.0, //
+                0.0, 1.0, 0.0, 0.0, //
+                0.5, 0.0, 0.5, 0.5,
+            ],
+        )
+    }
+
+    #[test]
+    fn builds_postings_and_counts() {
+        let idx = InvertedIndex::from_centers(&toy_centers());
+        assert_eq!(idx.k(), 3);
+        assert_eq!(idx.dims(), 4);
+        assert_eq!(idx.nnz(), 6);
+        assert!((idx.density() - 6.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sims_match_gather_dots() {
+        let centers = toy_centers();
+        let idx = InvertedIndex::from_centers(&centers);
+        let row = SparseVec::from_pairs(4, vec![(0, 0.5), (2, -0.25), (3, 1.0)]);
+        let mut out = vec![0.0f64; 3];
+        let madds = idx.sims_into(view(&row), &mut out);
+        // dims 0, 2 have 2 postings each, dim 3 has 1.
+        assert_eq!(madds, 5);
+        for (j, &s) in out.iter().enumerate() {
+            let direct = view(&row).dot_dense(centers.row(j));
+            assert_eq!(s.to_bits(), direct.to_bits(), "center {j}");
+        }
+    }
+
+    #[test]
+    fn refresh_center_rewrites_one_center_only() {
+        let centers = toy_centers();
+        let mut idx = InvertedIndex::from_centers(&centers);
+        // Move center 1 from dim 1 to dims {0, 3}.
+        let new_row = [0.6f32, 0.0, 0.0, 0.8];
+        idx.refresh_center(1, &new_row);
+        assert_eq!(idx.nnz(), 7);
+        let mut expect = centers.clone();
+        expect.row_mut(1).copy_from_slice(&new_row);
+        let row = SparseVec::from_pairs(4, vec![(0, 1.0), (1, 1.0), (3, 1.0)]);
+        let mut out = vec![0.0f64; 3];
+        idx.sims_into(view(&row), &mut out);
+        for (j, &s) in out.iter().enumerate() {
+            let direct = view(&row).dot_dense(expect.row(j));
+            assert_eq!(s.to_bits(), direct.to_bits(), "center {j}");
+        }
+        // Refreshing with the same row is idempotent.
+        idx.refresh_center(1, &new_row);
+        assert_eq!(idx.nnz(), 7);
+    }
+
+    #[test]
+    fn prop_incremental_refresh_equals_rebuild() {
+        forall(80, 0x1F5, |g| {
+            let d = g.usize_in(1, 40);
+            let k = g.usize_in(1, 10);
+            let mut centers = DenseMatrix::zeros(k, d);
+            let mut fill = |m: &mut DenseMatrix, g: &mut crate::util::prop::Gen| {
+                for j in 0..k {
+                    let nnz = g.usize_in(0, d + 1);
+                    let pat = g.sparse_pattern(d, nnz);
+                    let row = m.row_mut(j);
+                    row.fill(0.0);
+                    for c in pat {
+                        row[c] = g.f64_in(-1.0, 1.0) as f32;
+                    }
+                }
+            };
+            fill(&mut centers, g);
+            let mut idx = InvertedIndex::from_centers(&centers);
+            // Mutate a few random centers and refresh them incrementally.
+            for _ in 0..g.usize_in(1, 5) {
+                let j = g.usize_in(0, k);
+                let nnz = g.usize_in(0, d + 1);
+                let pat = g.sparse_pattern(d, nnz);
+                let row = centers.row_mut(j);
+                row.fill(0.0);
+                for c in pat {
+                    row[c] = g.f64_in(-1.0, 1.0) as f32;
+                }
+                idx.refresh_center(j, centers.row(j));
+            }
+            // The incrementally maintained index must equal a from-scratch
+            // rebuild: same nnz, and bit-identical similarities.
+            let rebuilt = InvertedIndex::from_centers(&centers);
+            assert_eq!(idx.nnz(), rebuilt.nnz());
+            let nnz = g.usize_in(0, d + 1);
+            let pat = g.sparse_pattern(d, nnz);
+            let row = SparseVec::new(
+                d,
+                pat.iter().map(|&c| c as u32).collect(),
+                pat.iter().map(|_| g.f64_in(-1.0, 1.0) as f32).collect(),
+            );
+            let mut a = vec![0.0f64; k];
+            let mut b = vec![0.0f64; k];
+            let ma = idx.sims_into(view(&row), &mut a);
+            let mb = rebuilt.sims_into(view(&row), &mut b);
+            assert_eq!(ma, mb);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        });
+    }
+}

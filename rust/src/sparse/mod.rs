@@ -3,14 +3,18 @@
 //! The paper (§2) stores documents as sorted `(index, value)` pairs and
 //! computes dot products by merging; cluster centers are dense because they
 //! aggregate many sparse rows (§5.2). This module provides exactly those
-//! representations plus the CSR matrix that holds a dataset.
+//! representations plus the CSR matrix that holds a dataset and the
+//! [`InvertedIndex`] — a CSC-style postings file over the centers that
+//! backs the sparse similarity kernel of [`crate::kmeans::kernel`].
 
 pub mod csr;
 mod dense;
+pub mod inverted;
 mod ops;
 mod vec;
 
 pub use csr::{CsrMatrix, RowView};
 pub use dense::DenseMatrix;
+pub use inverted::InvertedIndex;
 pub use ops::{dense_dot, normalize_dense, sparse_dense_dot, sparse_sparse_dot};
 pub use vec::SparseVec;

@@ -125,13 +125,38 @@ fn cluster_with_preinit_bounds() {
 }
 
 #[test]
+fn cluster_with_kernel_flag() {
+    // The similarity-kernel layer must plumb through the CLI; results are
+    // kernel-invariant, so this checks plumbing, reporting, and rejection.
+    for kernel in ["inverted", "dense", "gather", "auto"] {
+        let out = sphkm()
+            .args([
+                "cluster", "--data", "demo", "--k", "5", "--algo", "standard",
+                "--seed", "4", "--kernel", kernel,
+            ])
+            .output()
+            .expect("spawn");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains(&format!("kernel={kernel}")), "{text}");
+        assert!(text.contains("kernel madds"), "{text}");
+        assert!(text.contains("converged=true"), "{text}");
+    }
+    let out = sphkm()
+        .args(["cluster", "--data", "demo", "--kernel", "bogus"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success(), "unknown kernel must be rejected");
+}
+
+#[test]
 fn sweep_runs_from_config_file() {
     let dir = std::env::temp_dir().join("sphkm-cli-tests");
     std::fs::create_dir_all(&dir).unwrap();
     let cfg = dir.join("sweep.cfg");
     std::fs::write(
         &cfg,
-        "dataset = demo\nscale = tiny\nks = 3\nvariants = standard, exponion\ninits = uniform\nreps = 1\n",
+        "dataset = demo\nscale = tiny\nks = 3\nvariants = standard, exponion\ninits = uniform\nreps = 1\nkernel = inverted\n",
     )
     .unwrap();
     let out = sphkm()

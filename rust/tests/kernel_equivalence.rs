@@ -1,0 +1,322 @@
+//! The similarity-kernel exactness contract (see `kmeans::kernel`): the
+//! Dense (d×k transpose) and Inverted (CSC postings) backends accumulate
+//! per-center contributions in the same ascending-dimension order, so
+//! similarities — and therefore assignments, objectives, and pruning
+//! statistics — must be **bit-identical** across backends, for every
+//! thread count, at any data density, with truncated or dense centers.
+//! The Gather backend shares values up to summation-order rounding (its
+//! four-lane unrolled dot sums in a different tree).
+//!
+//! This suite asserts the contract with a randomized property sweep over
+//! densities (0.1%–50% nnz) plus full-run checks for all seven exact
+//! variants and the mini-batch engine.
+
+use sphkm::data::synth::SynthConfig;
+use sphkm::init::{seed_centers, InitMethod};
+use sphkm::kmeans::{
+    minibatch, run_with_centers, Centers, KMeansConfig, Kernel, KernelChoice, Variant,
+};
+use sphkm::sparse::{CsrMatrix, DenseMatrix, SparseVec};
+use sphkm::util::prop::{forall, Gen};
+
+/// A random unit-row corpus at (approximately) the given density.
+fn random_corpus(g: &mut Gen, rows: usize, d: usize, density: f64) -> CsrMatrix {
+    let nnz = ((d as f64 * density).ceil() as usize).clamp(1, d);
+    let mut svs = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let pat = g.sparse_pattern(d, nnz);
+        svs.push(SparseVec::new(
+            d,
+            pat.iter().map(|&i| i as u32).collect(),
+            pat.iter().map(|_| g.f64_in(0.05, 1.0) as f32).collect(),
+        ));
+    }
+    let mut m = CsrMatrix::from_rows(d, &svs);
+    m.normalize_rows();
+    m
+}
+
+/// Initial centers: k evenly spaced data rows, densified.
+fn initial_from_rows(data: &CsrMatrix, k: usize) -> DenseMatrix {
+    let mut m = DenseMatrix::zeros(k, data.cols());
+    for j in 0..k {
+        let r = data.row(j * data.rows() / k);
+        for (t, &c) in r.indices.iter().enumerate() {
+            m.row_mut(j)[c as usize] = r.values[t];
+        }
+    }
+    m
+}
+
+/// The density grid of the property sweep: 0.1% … 50% nnz.
+const DENSITIES: [f64; 6] = [0.001, 0.005, 0.02, 0.1, 0.3, 0.5];
+
+#[test]
+fn raw_similarities_bit_identical_across_backends_and_densities() {
+    forall(25, 0x5EED_01, |g| {
+        let d = g.usize_in(60, 1200);
+        let rows = g.usize_in(24, 72);
+        let k = g.usize_in(1, 9);
+        let density = DENSITIES[g.usize_in(0, DENSITIES.len())];
+        let data = random_corpus(g, rows, d, density);
+        let initial = initial_from_rows(&data, k);
+        let assign: Vec<u32> = (0..rows).map(|i| (i % k) as u32).collect();
+
+        // Drive each backend through the same lifecycle: rebuild, update,
+        // an incremental move, and (sometimes) a truncation barrier.
+        let truncate = if g.usize_in(0, 2) == 1 { Some(g.usize_in(1, 33)) } else { None };
+        let mk = |kernel: Kernel| {
+            let mut c = Centers::from_initial_for(initial.clone(), kernel);
+            c.rebuild(&data, &assign);
+            c.update();
+            if k > 1 && rows > 1 {
+                c.apply_move(data.row(1), assign[1] as usize, (assign[1] as usize + 1) % k);
+                c.update();
+            }
+            if let Some(m) = truncate {
+                c.truncate_centers(m);
+            }
+            c
+        };
+        let dense = mk(Kernel::Dense);
+        let gather = mk(Kernel::Gather);
+        let inverted = mk(Kernel::Inverted);
+
+        let mut sd = vec![0.0f64; k];
+        let mut sg = vec![0.0f64; k];
+        let mut si = vec![0.0f64; k];
+        for i in 0..rows {
+            let md = dense.sims_all(data.row(i), &mut sd);
+            let mg = gather.sims_all(data.row(i), &mut sg);
+            let mi = inverted.sims_all(data.row(i), &mut si);
+            assert_eq!(md, mg, "row {i}: dense and gather charge nnz·k");
+            assert!(mi <= md, "row {i}: inverted must not exceed dense madds");
+            for j in 0..k {
+                assert_eq!(
+                    sd[j].to_bits(),
+                    si[j].to_bits(),
+                    "row {i} center {j} (d={d}, density={density}, truncate={truncate:?})"
+                );
+                assert!((sd[j] - sg[j]).abs() < 1e-12, "row {i} center {j}");
+            }
+        }
+    });
+}
+
+#[test]
+fn full_runs_bit_identical_across_backends_and_densities() {
+    forall(12, 0x5EED_02, |g| {
+        let d = g.usize_in(80, 900);
+        let rows = g.usize_in(30, 80);
+        let k = g.usize_in(2, 8);
+        let density = DENSITIES[g.usize_in(0, DENSITIES.len())];
+        let data = random_corpus(g, rows, d, density);
+        let initial = initial_from_rows(&data, k);
+        for variant in [Variant::Standard, Variant::SimplifiedHamerly, Variant::Elkan] {
+            let cfg = KMeansConfig::new(k).variant(variant).max_iter(20);
+            let dense = run_with_centers(
+                &data,
+                initial.clone(),
+                &cfg.clone().kernel(KernelChoice::Dense),
+            );
+            let inv = run_with_centers(
+                &data,
+                initial.clone(),
+                &cfg.clone().kernel(KernelChoice::Inverted),
+            );
+            assert_eq!(
+                dense.assignments,
+                inv.assignments,
+                "{} (d={d}, density={density})",
+                variant.name()
+            );
+            assert_eq!(
+                dense.objective.to_bits(),
+                inv.objective.to_bits(),
+                "{}",
+                variant.name()
+            );
+            assert_eq!(dense.iterations, inv.iterations, "{}", variant.name());
+            assert_eq!(
+                dense.stats.total_point_center(),
+                inv.stats.total_point_center(),
+                "{}: pruning decisions must match",
+                variant.name()
+            );
+            assert!(
+                inv.stats.total_madds() <= dense.stats.total_madds(),
+                "{}: inverted did more madds",
+                variant.name()
+            );
+        }
+    });
+}
+
+/// Two contrasting corpora: the dense-ish demo (small vocabulary, centers
+/// densify) and a sparse high-dimensional one (the inverted file's home
+/// regime) — Auto resolves differently across them.
+fn corpora() -> Vec<sphkm::data::Dataset> {
+    let sparse = SynthConfig {
+        name: "sparse-synth".into(),
+        n_docs: 400,
+        vocab: 6_000,
+        topics: 8,
+        doc_len_mean: 15.0,
+        doc_len_sigma: 0.4,
+        topic_strength: 0.7,
+        shared_vocab_frac: 0.25,
+        zipf_s: 1.1,
+        anomaly_frac: 0.0,
+        tfidf: Default::default(),
+    }
+    .generate(7);
+    vec![SynthConfig::small_demo().generate(3), sparse]
+}
+
+#[test]
+fn auto_resolves_differently_across_the_corpora() {
+    // Sanity for the suite itself: the two corpora straddle the Auto
+    // heuristic, so the Auto legs above exercise both backends.
+    use sphkm::kmeans::DataShape;
+    let ds = corpora();
+    assert_eq!(
+        KernelChoice::Auto.resolve(&DataShape::of(&ds[0].matrix, 8, None)),
+        Kernel::Dense,
+        "small demo densifies its centers"
+    );
+    assert_eq!(
+        KernelChoice::Auto.resolve(&DataShape::of(&ds[1].matrix, 8, None)),
+        Kernel::Inverted,
+        "sparse corpus stays under the density cutoff"
+    );
+}
+
+#[test]
+fn all_seven_variants_bit_identical_on_every_kernel_and_thread_count() {
+    for ds in corpora() {
+        let k = 8;
+        let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 11);
+        for variant in Variant::ALL {
+            let base = KMeansConfig::new(k).variant(variant);
+            let reference = run_with_centers(
+                &ds.matrix,
+                init.centers.clone(),
+                &base.clone().kernel(KernelChoice::Dense).threads(1),
+            );
+            for choice in [KernelChoice::Dense, KernelChoice::Inverted, KernelChoice::Auto] {
+                for threads in [1usize, 0] {
+                    let r = run_with_centers(
+                        &ds.matrix,
+                        init.centers.clone(),
+                        &base.clone().kernel(choice).threads(threads),
+                    );
+                    assert_eq!(
+                        r.assignments,
+                        reference.assignments,
+                        "{}: {} kernel={choice:?} threads={threads}",
+                        ds.name,
+                        variant.name()
+                    );
+                    assert_eq!(
+                        r.objective.to_bits(),
+                        reference.objective.to_bits(),
+                        "{}: {} kernel={choice:?} threads={threads}",
+                        ds.name,
+                        variant.name()
+                    );
+                    assert_eq!(
+                        r.stats.total_point_center(),
+                        reference.stats.total_point_center(),
+                        "{}: {} kernel={choice:?} threads={threads}: pruning changed",
+                        ds.name,
+                        variant.name()
+                    );
+                }
+            }
+            // Gather shares the clustering on these corpora (the historic
+            // fast-vs-gather toggle), though only to rounding, not bitwise.
+            let gather = run_with_centers(
+                &ds.matrix,
+                init.centers.clone(),
+                &base.clone().kernel(KernelChoice::Gather),
+            );
+            assert_eq!(
+                gather.assignments,
+                reference.assignments,
+                "{}: {} gather",
+                ds.name,
+                variant.name()
+            );
+            assert!(
+                (gather.objective - reference.objective).abs()
+                    < 1e-9 * (1.0 + reference.objective),
+                "{}: {} gather objective",
+                ds.name,
+                variant.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn minibatch_bit_identical_across_kernels_truncation_and_threads() {
+    for ds in corpora() {
+        let k = 6;
+        let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 19);
+        for truncate in [None, Some(16usize)] {
+            let base = KMeansConfig::new(k)
+                .seed(5)
+                .batch_size(64)
+                .epochs(3)
+                .truncate(truncate);
+            let reference = minibatch::run_with_centers(
+                &ds.matrix,
+                init.centers.clone(),
+                &base.clone().kernel(KernelChoice::Dense).threads(1),
+            );
+            for choice in [KernelChoice::Dense, KernelChoice::Inverted, KernelChoice::Auto] {
+                for threads in [1usize, 0] {
+                    let r = minibatch::run_with_centers(
+                        &ds.matrix,
+                        init.centers.clone(),
+                        &base.clone().kernel(choice).threads(threads),
+                    );
+                    assert_eq!(
+                        r.assignments,
+                        reference.assignments,
+                        "{}: truncate={truncate:?} kernel={choice:?} threads={threads}",
+                        ds.name
+                    );
+                    assert_eq!(
+                        r.objective.to_bits(),
+                        reference.objective.to_bits(),
+                        "{}: truncate={truncate:?} kernel={choice:?} threads={threads}",
+                        ds.name
+                    );
+                    assert_eq!(
+                        r.stats.total_point_center(),
+                        reference.stats.total_point_center(),
+                        "{}: similarity counts are kernel-invariant",
+                        ds.name
+                    );
+                }
+            }
+            // Truncated sparse centroids are where the inverted file's
+            // madd advantage concentrates.
+            let inv = minibatch::run_with_centers(
+                &ds.matrix,
+                init.centers.clone(),
+                &base.clone().kernel(KernelChoice::Inverted),
+            );
+            if truncate.is_some() {
+                assert!(
+                    inv.stats.total_madds() < reference.stats.total_madds(),
+                    "{}: truncated inverted run must save madds",
+                    ds.name
+                );
+            } else {
+                assert!(inv.stats.total_madds() <= reference.stats.total_madds());
+            }
+        }
+    }
+}
