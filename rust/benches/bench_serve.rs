@@ -1,0 +1,146 @@
+//! Serving-path acceptance benchmark: the full train → persist → serve
+//! pipeline on sparse synthetic text, measuring queries/sec and
+//! multiply-adds for the MaxScore-pruned traversal against the exhaustive
+//! gather baseline.
+//!
+//! Acceptance bars (asserted):
+//! * `Model::save` → `Model::load` round-trips the centers **bit-exactly**.
+//! * The pruned top-p answers are **bit-identical** to exhaustive gather
+//!   for every thread count.
+//! * On <5%-density text at k = 64 the pruned traversal performs
+//!   **strictly fewer multiply-adds** than exhaustive gather.
+//!
+//! ```text
+//! cargo bench --bench bench_serve -- [--rows 8000] [--k 64] [--top 5]
+//!     [--seed 42] [--truncate 64]
+//! ```
+
+use sphkm::data::synth::SynthConfig;
+use sphkm::kmeans::{minibatch, KMeansConfig, KernelChoice};
+use sphkm::model::Model;
+use sphkm::serve::{QueryEngine, ServeConfig, ServeMode};
+use sphkm::util::cli::Args;
+use sphkm::util::timer::Stopwatch;
+
+fn main() {
+    let args = Args::from_env();
+    let rows: usize = args.get_or("rows", 8_000).unwrap_or(8_000);
+    let k: usize = args.get_or("k", 64).unwrap_or(64);
+    let p: usize = args.get_or("top", 5).unwrap_or(5);
+    let seed: u64 = args.get_or("seed", 42).unwrap_or(42);
+    let truncate: usize = args.get_or("truncate", 64).unwrap_or(64);
+
+    let ds = SynthConfig {
+        name: "serve-bench".into(),
+        n_docs: rows,
+        vocab: 24_000,
+        topics: k.max(2),
+        doc_len_mean: 60.0,
+        doc_len_sigma: 0.4,
+        topic_strength: 0.65,
+        shared_vocab_frac: 0.2,
+        zipf_s: 1.05,
+        anomaly_frac: 0.0,
+        tfidf: Default::default(),
+    }
+    .generate(seed);
+    let density = ds.matrix.density();
+    assert!(
+        density < 0.05,
+        "acceptance corpus must be <5% dense (got {:.3}%)",
+        density * 100.0
+    );
+    println!(
+        "# serve bench — {} rows × {} dims ({:.3}% nnz), k={k}, top-{p}",
+        ds.matrix.rows(),
+        ds.matrix.cols(),
+        density * 100.0
+    );
+
+    // Train a sparse-centroid model and round-trip it through persistence.
+    let train_cfg = KMeansConfig::new(k)
+        .seed(seed)
+        .threads(0)
+        .kernel(KernelChoice::Inverted)
+        .batch_size(1024)
+        .epochs(4)
+        .truncate(Some(truncate));
+    let sw = Stopwatch::start();
+    let r = minibatch::run(&ds.matrix, &train_cfg);
+    println!("# trained in {:.0} ms (objective {:.2})", sw.ms(), r.objective);
+    let saved = Model::from_run_named(&r, &train_cfg, "minibatch");
+    let path =
+        std::env::temp_dir().join(format!("sphkm-bench-serve-{}-{seed}.spkm", std::process::id()));
+    saved.save(&path).expect("save model");
+    let model = Model::load(&path).expect("load model");
+    std::fs::remove_file(&path).ok();
+    for j in 0..k {
+        for (a, b) in saved.centers().row(j).iter().zip(model.centers().row(j)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "center {j}: persistence round trip");
+        }
+    }
+    println!(
+        "# model: {} center nnz ({:.3}% dense), round trip bit-exact — OK",
+        model.center_nnz(),
+        model.center_density() * 100.0
+    );
+
+    println!(
+        "{:<10} {:>8} {:>10} {:>10} {:>16} {:>14}",
+        "mode", "threads", "ms", "qps", "madds", "pruned/query"
+    );
+    let mut baseline: Option<Vec<Vec<(u32, f64)>>> = None;
+    let mut madds = (0u64, 0u64); // (exhaustive, pruned) at threads = 1
+    for threads in [1usize, 0] {
+        let engine = QueryEngine::new(
+            model.clone(),
+            &ServeConfig { mode: ServeMode::Pruned, threads },
+        );
+        let sw = Stopwatch::start();
+        let (ex, ex_stats) = engine.top_p_batch_exhaustive(&ds.matrix, p);
+        let ex_ms = sw.ms();
+        let sw = Stopwatch::start();
+        let (pr, pr_stats) = engine.top_p_batch_pruned(&ds.matrix, p);
+        let pr_ms = sw.ms();
+
+        // Bit-identity of the pruned traversal, per thread count, and of
+        // every thread count against the serial baseline.
+        assert_eq!(ex.len(), pr.len());
+        for (i, (a, b)) in ex.iter().zip(&pr).enumerate() {
+            assert_eq!(a.len(), b.len(), "row {i}");
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.0, y.0, "row {i}: center ids");
+                assert_eq!(x.1.to_bits(), y.1.to_bits(), "row {i}: similarities");
+            }
+        }
+        if let Some(base) = baseline.as_ref() {
+            assert_eq!(base, &pr, "threads={threads} must match serial bitwise");
+            assert_eq!(madds, (ex_stats.madds, pr_stats.madds), "thread-invariant madds");
+        } else {
+            baseline = Some(pr.clone());
+            madds = (ex_stats.madds, pr_stats.madds);
+        }
+        let n = ex_stats.queries.max(1) as f64;
+        for (mode, ms, stats) in [("exhaustive", ex_ms, ex_stats), ("pruned", pr_ms, pr_stats)] {
+            println!(
+                "{:<10} {:>8} {:>10.1} {:>10.0} {:>16} {:>14.1}",
+                mode,
+                threads,
+                ms,
+                stats.queries as f64 / (ms / 1000.0).max(1e-9),
+                stats.madds,
+                stats.centers_pruned as f64 / n
+            );
+        }
+    }
+    let (ex_madds, pr_madds) = madds;
+    assert!(
+        pr_madds < ex_madds,
+        "pruned traversal must do strictly fewer madds ({pr_madds} vs {ex_madds})"
+    );
+    println!(
+        "# acceptance: bit-exact persistence; pruned top-{p} bit-identical to exhaustive \
+         at every thread count; {:.1}x fewer madds ({pr_madds} vs {ex_madds}) — OK",
+        ex_madds as f64 / pr_madds.max(1) as f64
+    );
+}

@@ -666,6 +666,89 @@ pub fn minibatch(opts: &ExperimentOpts, k: usize) -> Table {
     t
 }
 
+/// `bench --exp serve`: the train → persist → serve pipeline measured
+/// end-to-end. Trains a truncated mini-batch model on a sparse synthetic
+/// text corpus, round-trips it through [`crate::model::Model`]
+/// persistence, then queries the whole corpus through the
+/// [`crate::serve::QueryEngine`] — pruned vs exhaustive traversals at
+/// several top-p widths, reporting queries/sec and multiply-adds. The
+/// traversals are asserted bit-identical on every cell.
+pub fn serve(opts: &ExperimentOpts, k: usize) -> Table {
+    use crate::model::Model;
+    use crate::serve::{QueryEngine, ServeConfig, ServeMode};
+    println!(
+        "\n== Serving: pruned vs exhaustive top-p queries (k={k}, scale={}) ==",
+        opts.scale.name()
+    );
+    let ds = crate::data::synth::SynthConfig {
+        name: "serve-synth".into(),
+        n_docs: (opts.scale.factor() * 6000.0) as usize,
+        vocab: 20_000,
+        topics: k.max(2),
+        doc_len_mean: 60.0,
+        doc_len_sigma: 0.4,
+        topic_strength: 0.65,
+        shared_vocab_frac: 0.2,
+        zipf_s: 1.05,
+        anomaly_frac: 0.0,
+        tfidf: Default::default(),
+    }
+    .generate(opts.seed);
+    let k = k.min(ds.matrix.rows() / 2).max(2);
+    let train_cfg = KMeansConfig::new(k)
+        .seed(opts.seed)
+        .threads(opts.threads)
+        .kernel(opts.kernel.unwrap_or(KernelChoice::Inverted))
+        .batch_size(1024)
+        .epochs(4)
+        .truncate(Some(64));
+    let r = crate::kmeans::minibatch::run(&ds.matrix, &train_cfg);
+    // Persistence round trip: serve what was loaded, not what was trained.
+    // Keyed by pid as well as seed: concurrent runs sharing a seed must
+    // not race on the same save/load/remove cycle.
+    let path = std::env::temp_dir()
+        .join(format!("sphkm-serve-exp-{}-{}.spkm", std::process::id(), opts.seed));
+    Model::from_run_named(&r, &train_cfg, "minibatch")
+        .save(&path)
+        .expect("model save must succeed");
+    let model = Model::load(&path).expect("just-saved model must load");
+    let _ = std::fs::remove_file(&path);
+    println!(
+        "  model: k={k}, d={}, {} center nnz ({:.3}% dense)",
+        model.d(),
+        model.center_nnz(),
+        model.center_density() * 100.0
+    );
+    let engine = QueryEngine::new(
+        model,
+        &ServeConfig { mode: ServeMode::Pruned, threads: opts.threads },
+    );
+    let mut t = Table::new(&["top-p", "mode", "ms", "qps", "madds/query", "pruned/query"]);
+    for &p in &[1usize, 5, 10] {
+        let sw = crate::util::timer::Stopwatch::start();
+        let (ex, ex_stats) = engine.top_p_batch_exhaustive(&ds.matrix, p);
+        let ex_ms = sw.ms();
+        let sw = crate::util::timer::Stopwatch::start();
+        let (pr, pr_stats) = engine.top_p_batch_pruned(&ds.matrix, p);
+        let pr_ms = sw.ms();
+        assert_eq!(ex, pr, "pruned top-{p} must equal exhaustive bitwise");
+        let n = ex_stats.queries.max(1) as f64;
+        for (mode, ms, stats) in [("exhaustive", ex_ms, ex_stats), ("pruned", pr_ms, pr_stats)] {
+            t.row(vec![
+                p.to_string(),
+                mode.into(),
+                fmt_ms(ms),
+                format!("{:.0}", stats.queries as f64 / (ms / 1000.0).max(1e-9)),
+                format!("{:.1}", stats.madds as f64 / n),
+                format!("{:.1}", stats.centers_pruned as f64 / n),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    opts.save(&t, "serve.csv");
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -703,6 +786,13 @@ mod tests {
         let t = minibatch(&tiny_opts(), 8);
         // Two full-batch baselines + three mini-batch configurations.
         assert_eq!(t.len(), 5);
+    }
+
+    #[test]
+    fn serve_driver_reports_both_traversals_per_p() {
+        let t = serve(&tiny_opts(), 8);
+        // Three top-p widths × (exhaustive, pruned).
+        assert_eq!(t.len(), 6);
     }
 
     #[test]

@@ -111,6 +111,17 @@ impl DataShape {
         }
     }
 
+    /// Collect the shape of a *trained* model whose center non-zeros are
+    /// known exactly (`center_nnz` = total stored coordinates across the
+    /// k centers) — what [`crate::serve`] feeds the Auto heuristic when
+    /// it decides between the pruned inverted-file traversal and the
+    /// exhaustive gather pass. Setting `nnz = center_nnz` makes
+    /// [`DataShape::est_center_density`]'s `nnz/k` union bound collapse
+    /// to the *actual* per-center support.
+    pub fn of_centers(dims: usize, k: usize, center_nnz: usize) -> Self {
+        Self { dims, nnz: center_nnz, k, truncate: None }
+    }
+
     /// Upper estimate of the converged centers' density: a center's
     /// support is at most the summed nnz of its points (`≈ nnz/k` under
     /// balanced clusters, the union bound), at most `d`, and at most the

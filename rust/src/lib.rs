@@ -10,8 +10,11 @@
 //! plus every substrate it needs: sparse linear algebra, TF-IDF text
 //! pipelines, synthetic corpus generators, seeding algorithms
 //! (uniform, k-means++, AFK-MC²), cluster-quality metrics, a PJRT runtime
-//! that executes AOT-compiled JAX/Pallas dense kernels, and an experiment
-//! coordinator that regenerates every table and figure of the paper.
+//! that executes AOT-compiled JAX/Pallas dense kernels, an experiment
+//! coordinator that regenerates every table and figure of the paper, and a
+//! train → persist → serve pipeline: bit-exact model persistence
+//! ([`model`]) plus a high-throughput nearest-center query engine with a
+//! MaxScore-pruned inverted-file traversal ([`serve`]).
 //!
 //! ## Layers
 //!
@@ -47,6 +50,8 @@ pub mod data;
 pub mod init;
 pub mod kmeans;
 pub mod metrics;
+pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod sparse;
 pub mod util;

@@ -4,8 +4,11 @@
 //! sphkm datasets  [--scale small] [--seed 42]
 //! sphkm cluster   --data <name|path.svm|path.mtx> --k 20 [--algo simp-elkan]
 //!                 [--init kmeans++] [--seed 0] [--scale small] [--stats]
+//!                 [--save-model model.spkm]
+//! sphkm assign    --model model.spkm --data <name|path.svm|path.mtx>
+//!                 [--top 1] [--mode auto|pruned|exhaustive] [--out top.csv]
 //! sphkm gen       --data <name> --out file.svm [--scale small] [--seed 42]
-//! sphkm bench     --exp table1|table2|table3|fig1|fig2|ablation-cc [opts]
+//! sphkm bench     --exp table1|table2|table3|fig1|fig2|ablation-cc|serve [opts]
 //! sphkm info
 //! ```
 
@@ -15,6 +18,8 @@ use sphkm::data::Dataset;
 use sphkm::init::InitMethod;
 use sphkm::kmeans::{KMeansConfig, KernelChoice, Variant};
 use sphkm::metrics;
+use sphkm::model::Model;
+use sphkm::serve::{QueryEngine, ServeConfig, ServeMode};
 use sphkm::util::cli::Args;
 
 fn usage() -> ! {
@@ -24,17 +29,21 @@ fn usage() -> ! {
 USAGE:
   sphkm datasets [--scale tiny|small|medium] [--seed N]
   sphkm cluster --data <dataset> --k K [--algo VARIANT] [--init METHOD]
-                [--seed N] [--scale S] [--max-iter M] [--stats] [--labels]
+                [--seed N] [--scale S] [--max-iter M] [--stats]
                 [--threads T] # sharded assignment: 0 = all cores, 1 = serial
                 [--kernel X]  # similarity backend: auto|dense|gather|inverted
                 [--preinit]   # §7: pre-initialize bounds from k-means++
                 [--minibatch] # approximate mini-batch engine (large corpora)
                 [--batch-size B] [--epochs E] [--tol T]
                 [--truncate M] # keep top-M coords per center (0 = dense)
+                [--save-model FILE.spkm] # persist the trained model
+  sphkm assign --model FILE.spkm --data <dataset> [--top P] [--threads T]
+               [--mode auto|pruned|exhaustive] [--out FILE.csv]
+               [--scale S] [--seed N]   # answer nearest-center queries
   sphkm sweep --config FILE.cfg   # cross-product runs from a config file
   sphkm gen --data <dataset> --out FILE.svm [--scale S] [--seed N]
   sphkm bench --exp table1|table2|table3|fig1|fig2|ablation-cc|ablation-preinit
-              |minibatch
+              |minibatch|serve
               [--scale S] [--reps R] [--ks 2,10,20] [--quick] [--k K]
               [--threads T] [--kernel X]
   sphkm info
@@ -169,11 +178,90 @@ fn run_sweep(cfg: &sphkm::util::config::Config) {
     }
     println!("{}", t.render());
     if let Some(out) = cfg.get("out") {
+        // A sweep whose results cannot be saved has failed: propagate the
+        // error as a nonzero exit instead of burying it in stderr.
         if let Err(e) = t.save_csv(std::path::Path::new(out)) {
             eprintln!("could not save {out}: {e}");
-        } else {
-            println!("[csv] {out}");
+            std::process::exit(1);
         }
+        println!("[csv] {out}");
+    }
+}
+
+/// `sphkm assign`: load a persisted model and answer top-p nearest-center
+/// queries for every row of a dataset — the serving half of the
+/// train → persist → serve pipeline (see [`sphkm::serve`]).
+fn run_assign(args: &Args, scale: Scale, seed: u64) {
+    let model_path = args.get("model").unwrap_or_else(|| usage());
+    let model = Model::load(std::path::Path::new(model_path)).unwrap_or_else(|e| {
+        eprintln!("error loading model {model_path}: {e}");
+        std::process::exit(1)
+    });
+    println!(
+        "model {model_path}: k={}, d={}, {} center nnz ({:.3}% dense), trained by {} \
+         (kernel={}, {} iters, objective={:.4}, seed={})",
+        model.k(),
+        model.d(),
+        model.center_nnz(),
+        model.center_density() * 100.0,
+        model.meta().variant,
+        model.meta().kernel,
+        model.meta().iterations,
+        model.meta().objective,
+        model.meta().seed,
+    );
+    let ds = load_dataset(args, scale, seed);
+    if ds.matrix.cols() > model.d() {
+        eprintln!(
+            "error: {} has {} features but the model was trained on {}",
+            ds.name,
+            ds.matrix.cols(),
+            model.d()
+        );
+        std::process::exit(1);
+    }
+    let p: usize = args.get_or("top", 1).unwrap_or(1).max(1);
+    let threads: usize = args.get_or("threads", 0).unwrap_or(0);
+    let mode: ServeMode = args
+        .get("mode")
+        .unwrap_or("auto")
+        .parse()
+        .unwrap_or_else(|e| { eprintln!("{e}"); usage() });
+    let engine = QueryEngine::new(model, &ServeConfig { mode, threads });
+    let sw = sphkm::util::timer::Stopwatch::start();
+    let (top, stats) = engine.top_p_batch(&ds.matrix, p);
+    let ms = sw.ms();
+    let qps = stats.queries as f64 / (ms / 1000.0).max(1e-9);
+    println!(
+        "assigned {} rows (top-{p}, {} traversal, threads={threads}) in {ms:.1} ms: \
+         {qps:.0} queries/s, {} madds ({:.1} per query), {} centers pruned",
+        stats.queries,
+        engine.mode(),
+        stats.madds,
+        stats.madds as f64 / stats.queries.max(1) as f64,
+        stats.centers_pruned,
+    );
+    if let Some(truth) = &ds.labels {
+        let labels: Vec<u32> = top.iter().map(|r| r.first().map_or(0, |&(j, _)| j)).collect();
+        println!(
+            "vs ground-truth labels: NMI={:.4} ARI={:.4} purity={:.4}",
+            metrics::nmi(&labels, truth),
+            metrics::ari(&labels, truth),
+            metrics::purity(&labels, truth)
+        );
+    }
+    if let Some(out) = args.get("out") {
+        let mut csv = String::from("row,rank,center,similarity\n");
+        for (i, ranks) in top.iter().enumerate() {
+            for (rank, &(j, s)) in ranks.iter().enumerate() {
+                csv.push_str(&format!("{i},{rank},{j},{s}\n"));
+            }
+        }
+        if let Err(e) = std::fs::write(out, csv) {
+            eprintln!("could not save {out}: {e}");
+            std::process::exit(1);
+        }
+        println!("[csv] {out}");
     }
 }
 
@@ -261,15 +349,34 @@ fn main() {
                 r.kernel.name(),
                 r.stats.total_sims() - r.stats.total_point_center()
             );
-            if args.flag("labels") {
-                if let Some(truth) = &ds.labels {
-                    println!(
-                        "vs planted labels: NMI={:.4} ARI={:.4} purity={:.4}",
-                        metrics::nmi(&r.assignments, truth),
-                        metrics::ari(&r.assignments, truth),
-                        metrics::purity(&r.assignments, truth)
-                    );
+            // External quality is free whenever the input carries
+            // ground-truth labels — always report it.
+            if let Some(truth) = &ds.labels {
+                println!(
+                    "vs ground-truth labels: NMI={:.4} ARI={:.4} purity={:.4}",
+                    metrics::nmi(&r.assignments, truth),
+                    metrics::ari(&r.assignments, truth),
+                    metrics::purity(&r.assignments, truth)
+                );
+            }
+            if let Some(path) = args.get("save-model") {
+                // The mini-batch engine ignores --algo; record the
+                // engine, not the unused variant, as provenance.
+                let model = if args.flag("minibatch") {
+                    Model::from_run_named(&r, &cfg, "minibatch")
+                } else {
+                    Model::from_run(&r, &cfg)
+                };
+                if let Err(e) = model.save(std::path::Path::new(path)) {
+                    eprintln!("error saving model {path}: {e}");
+                    std::process::exit(1);
                 }
+                println!(
+                    "[model] {path} (k={}, d={}, {} center nnz)",
+                    model.k(),
+                    model.d(),
+                    model.center_nnz()
+                );
             }
             if args.flag("stats") {
                 println!("\niter  sims_pc  sims_cc  reassign  skips(loop/bound)  ms");
@@ -327,11 +434,15 @@ fn main() {
                 "ablation-cc" => { experiments::ablation_cc(&opts, k.min(50)); }
                 "ablation-preinit" => { experiments::ablation_preinit(&opts, k.min(50)); }
                 "minibatch" => { experiments::minibatch(&opts, k.min(50)); }
+                "serve" => { experiments::serve(&opts, k.min(64)); }
                 other => {
                     eprintln!("unknown experiment: {other}");
                     usage()
                 }
             }
+        }
+        "assign" => {
+            run_assign(&args, scale, seed);
         }
         "sweep" => {
             let path = args.get("config").unwrap_or_else(|| usage());

@@ -1,0 +1,405 @@
+//! Binary encoder/decoder for the `.spkm` model format (see the
+//! [module docs](super) for the layout). Everything is little-endian on
+//! every platform; the decoder trusts nothing it has not validated.
+
+use super::{Model, TrainingMeta};
+use crate::sparse::DenseMatrix;
+
+/// Leading magic of every `.spkm` file.
+pub(crate) const MAGIC: [u8; 8] = *b"SPHKMDL\0";
+/// Current (and only) format version this build reads and writes.
+pub(crate) const VERSION: u32 = 1;
+/// Ceiling on the dense k×d f32 center matrix a load will reconstruct
+/// (16 GiB). The file stores centers sparsely, so a hostile (or corrupt)
+/// header can claim a huge `d` with almost no bytes behind it — without
+/// this cap, `DenseMatrix::zeros(k, d)` would attempt a multi-TiB
+/// allocation and abort instead of returning a typed error. Any model
+/// that fits under it is served from that dense matrix anyway.
+const MAX_DENSE_BYTES: u128 = 16 << 30;
+
+/// Why a model file was rejected. Every failure mode of
+/// [`Model::load`](super::Model::load) is one of these — loading never
+/// panics on bad bytes and never returns a silently-wrong model.
+#[derive(Debug, thiserror::Error)]
+pub enum ModelError {
+    /// Underlying filesystem error.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    /// The file does not start with the `.spkm` magic — not a model file.
+    #[error("not a sphkm model file (bad magic)")]
+    BadMagic,
+    /// The file was written by a newer format version than this build
+    /// understands; guessing at an unknown layout would corrupt silently.
+    #[error("unsupported model format version {found} (this build reads ≤ {VERSION})")]
+    UnsupportedVersion {
+        /// Version recorded in the file.
+        found: u32,
+    },
+    /// The file ends before the named section is complete.
+    #[error("model file truncated in {section}")]
+    Truncated {
+        /// Which section the decoder was reading when the bytes ran out.
+        section: &'static str,
+    },
+    /// The bytes are structurally wrong: checksum mismatch, trailing
+    /// garbage, CSR invariant violations, non-UTF-8 metadata, …
+    #[error("corrupt model file: {0}")]
+    Corrupt(String),
+}
+
+/// FNV-1a 64-bit over `bytes` — the integrity checksum appended to every
+/// model file. Not cryptographic; it catches the realistic failure modes
+/// (bit rot, partial writes, concatenated/edited files).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+/// Encode `model` to the version-1 byte layout, checksum included. The
+/// encoding is a pure function of the model, so identical models produce
+/// byte-identical files.
+pub(crate) fn encode(model: &Model) -> Vec<u8> {
+    let (k, d) = (model.k(), model.d());
+    // Sparse CSR pass over the dense centers: a coordinate is stored iff
+    // its f32 bit pattern is non-zero, so -0.0 survives the round trip.
+    let mut indptr: Vec<u64> = Vec::with_capacity(k + 1);
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    indptr.push(0);
+    for j in 0..k {
+        for (c, &v) in model.centers().row(j).iter().enumerate() {
+            if v.to_bits() != 0 {
+                indices.push(c as u32);
+                values.push(v);
+            }
+        }
+        indptr.push(indices.len() as u64);
+    }
+    let meta = model.meta();
+    let mut buf = Vec::with_capacity(64 + 8 * k + 8 * indices.len());
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&0u32.to_le_bytes()); // flags (reserved)
+    buf.extend_from_slice(&(k as u64).to_le_bytes());
+    buf.extend_from_slice(&(d as u64).to_le_bytes());
+    buf.extend_from_slice(&(indices.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&meta.iterations.to_le_bytes());
+    buf.extend_from_slice(&meta.seed.to_le_bytes());
+    buf.extend_from_slice(&meta.objective.to_bits().to_le_bytes());
+    for s in [&meta.variant, &meta.kernel] {
+        let bytes = s.as_bytes();
+        buf.extend_from_slice(&(bytes.len() as u16).to_le_bytes());
+        buf.extend_from_slice(bytes);
+    }
+    for &n in model.norms() {
+        buf.extend_from_slice(&n.to_bits().to_le_bytes());
+    }
+    for &p in &indptr {
+        buf.extend_from_slice(&p.to_le_bytes());
+    }
+    for &i in &indices {
+        buf.extend_from_slice(&i.to_le_bytes());
+    }
+    for &v in &values {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    let sum = fnv1a(&buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+    buf
+}
+
+/// A bounds-checked cursor over the raw file bytes: every read names the
+/// section it serves so truncation errors point at the failure site.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize, section: &'static str) -> Result<&'a [u8], ModelError> {
+        if self.buf.len() - self.pos < n {
+            return Err(ModelError::Truncated { section });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u16(&mut self, section: &'static str) -> Result<u16, ModelError> {
+        Ok(u16::from_le_bytes(self.take(2, section)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, section: &'static str) -> Result<u32, ModelError> {
+        Ok(u32::from_le_bytes(self.take(4, section)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, section: &'static str) -> Result<u64, ModelError> {
+        Ok(u64::from_le_bytes(self.take(8, section)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self, section: &'static str) -> Result<String, ModelError> {
+        let len = self.u16(section)? as usize;
+        let bytes = self.take(len, section)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| ModelError::Corrupt(format!("{section} is not UTF-8")))
+    }
+}
+
+/// Decoded `usize` that must fit the platform and a sanity ceiling.
+fn checked_dim(v: u64, what: &str, cap: u64) -> Result<usize, ModelError> {
+    if v > cap {
+        return Err(ModelError::Corrupt(format!("{what} {v} is implausibly large")));
+    }
+    Ok(v as usize)
+}
+
+/// Decode a full `.spkm` byte buffer into a [`Model`], validating in
+/// order: magic → version → structure (typed truncation errors) → no
+/// trailing bytes → checksum → CSR invariants. Version is checked before
+/// the checksum so files from future versions report
+/// [`ModelError::UnsupportedVersion`] rather than a layout-dependent
+/// checksum mismatch.
+pub(crate) fn decode(buf: &[u8]) -> Result<Model, ModelError> {
+    let mut cur = Cur { buf, pos: 0 };
+    if cur.take(8, "magic")? != MAGIC {
+        return Err(ModelError::BadMagic);
+    }
+    let version = cur.u32("version")?;
+    if version != VERSION {
+        return Err(ModelError::UnsupportedVersion { found: version });
+    }
+    let flags = cur.u32("flags")?;
+    if flags != 0 {
+        return Err(ModelError::Corrupt(format!("reserved flags set: {flags:#x}")));
+    }
+    // Shape caps keep a corrupt header from driving a huge allocation
+    // before the checksum has had a chance to reject the file.
+    let k = checked_dim(cur.u64("shape")?, "k", 1 << 32)?;
+    let d = checked_dim(cur.u64("shape")?, "d", 1 << 40)?;
+    if 4 * k as u128 * d as u128 > MAX_DENSE_BYTES {
+        return Err(ModelError::Corrupt(format!(
+            "dense {k}×{d} centers would exceed the {} GiB reconstruction cap",
+            MAX_DENSE_BYTES >> 30
+        )));
+    }
+    let nnz = checked_dim(cur.u64("shape")?, "nnz", (k as u64).saturating_mul(d as u64))?;
+    let iterations = cur.u64("training metadata")?;
+    let seed = cur.u64("training metadata")?;
+    let objective = f64::from_bits(cur.u64("training metadata")?);
+    let variant = cur.string("variant name")?;
+    let kernel = cur.string("kernel name")?;
+    // Size the remainder up front so a corrupt header claiming a huge k or
+    // nnz reports Truncated instead of attempting a giant allocation: the
+    // arrays below must all fit in the bytes that are actually present.
+    // norms + indptr + (indices + values) + checksum, in u128 so a
+    // hostile header cannot overflow the accounting itself.
+    let needed = 8u128 * k as u128 + 8 * (k as u128 + 1) + 8 * nnz as u128 + 8;
+    if needed > (buf.len() - cur.pos) as u128 {
+        return Err(ModelError::Truncated { section: "center arrays" });
+    }
+    let mut norms = Vec::with_capacity(k);
+    for _ in 0..k {
+        norms.push(f64::from_bits(cur.u64("norms")?));
+    }
+    let mut indptr = Vec::with_capacity(k + 1);
+    for _ in 0..=k {
+        indptr.push(cur.u64("indptr")?);
+    }
+    let mut indices = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        indices.push(cur.u32("indices")?);
+    }
+    let mut values = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        values.push(f32::from_bits(cur.u32("values")?));
+    }
+    let stored_sum = u64::from_le_bytes(
+        cur.take(8, "checksum")?
+            .try_into()
+            .expect("checksum slice is 8 bytes"),
+    );
+    if cur.pos != buf.len() {
+        return Err(ModelError::Corrupt(format!(
+            "{} trailing bytes after checksum",
+            buf.len() - cur.pos
+        )));
+    }
+    let computed = fnv1a(&buf[..buf.len() - 8]);
+    if stored_sum != computed {
+        return Err(ModelError::Corrupt(format!(
+            "checksum mismatch (stored {stored_sum:#018x}, computed {computed:#018x})"
+        )));
+    }
+    // Payload sanity: a NaN/infinite center coordinate or norm would not
+    // fail here but would panic the serving comparators on the very first
+    // query — reject it at the boundary like every other corruption.
+    if let Some(i) = values.iter().position(|v| !v.is_finite()) {
+        return Err(ModelError::Corrupt(format!("non-finite center value at nnz {i}")));
+    }
+    // The encoder never stores a +0.0 (zero-bit) coordinate; accepting one
+    // would make the header nnz disagree with the reconstructed matrix's
+    // non-zero count and break the deterministic re-encoding guarantee.
+    if let Some(i) = values.iter().position(|v| v.to_bits() == 0) {
+        return Err(ModelError::Corrupt(format!(
+            "explicit +0.0 coordinate stored at nnz {i} (non-canonical encoding)"
+        )));
+    }
+    if let Some(j) = norms.iter().position(|n| !n.is_finite()) {
+        return Err(ModelError::Corrupt(format!("non-finite norm for center {j}")));
+    }
+    // CSR invariants: monotone indptr ending at nnz; strictly increasing
+    // in-bounds indices per row.
+    if indptr[0] != 0 || indptr[k] != nnz as u64 {
+        return Err(ModelError::Corrupt(format!(
+            "indptr endpoints [{}, {}] do not match nnz {nnz}",
+            indptr[0], indptr[k]
+        )));
+    }
+    if let Some(w) = indptr.windows(2).find(|w| w[0] > w[1]) {
+        return Err(ModelError::Corrupt(format!(
+            "indptr not monotone ({} before {})",
+            w[0], w[1]
+        )));
+    }
+    let mut centers = DenseMatrix::zeros(k, d);
+    for j in 0..k {
+        let (s, e) = (indptr[j] as usize, indptr[j + 1] as usize);
+        let row = centers.row_mut(j);
+        let mut prev: Option<u32> = None;
+        for t in s..e {
+            let c = indices[t];
+            if prev.is_some_and(|p| p >= c) {
+                return Err(ModelError::Corrupt(format!(
+                    "center {j}: indices not strictly increasing at {c}"
+                )));
+            }
+            if c as usize >= d {
+                return Err(ModelError::Corrupt(format!(
+                    "center {j}: index {c} out of bounds for d = {d}"
+                )));
+            }
+            prev = Some(c);
+            row[c as usize] = values[t];
+        }
+    }
+    Ok(Model::from_parts(
+        k,
+        d,
+        centers,
+        norms,
+        nnz,
+        TrainingMeta { variant, kernel, iterations, objective, seed },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model() -> Model {
+        let centers = DenseMatrix::from_vec(2, 3, vec![0.6, 0.0, 0.8, 0.0, -1.0, 0.0]);
+        Model::new(
+            centers,
+            TrainingMeta {
+                variant: "Standard".into(),
+                kernel: "gather".into(),
+                iterations: 4,
+                objective: 1.25,
+                seed: 42,
+            },
+        )
+    }
+
+    #[test]
+    fn encode_decode_round_trips_bitwise() {
+        let m = toy_model();
+        let bytes = encode(&m);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, m);
+        // Deterministic encoding.
+        assert_eq!(encode(&back), bytes);
+    }
+
+    #[test]
+    fn negative_zero_coordinates_survive() {
+        let mut centers = DenseMatrix::zeros(1, 2);
+        centers.row_mut(0)[0] = -0.0;
+        centers.row_mut(0)[1] = 1.0;
+        let m = Model::new(
+            centers,
+            TrainingMeta {
+                variant: "x".into(),
+                kernel: "y".into(),
+                iterations: 0,
+                objective: 0.0,
+                seed: 0,
+            },
+        );
+        assert_eq!(m.center_nnz(), 2, "-0.0 has a non-zero bit pattern");
+        let back = decode(&encode(&m)).unwrap();
+        assert_eq!(back.centers().row(0)[0].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_truncation_and_corruption() {
+        let good = encode(&toy_model());
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(decode(&bad), Err(ModelError::BadMagic)));
+        // Future version (checked before the checksum).
+        let mut future = good.clone();
+        future[8..12].copy_from_slice(&99u32.to_le_bytes());
+        assert!(matches!(
+            decode(&future),
+            Err(ModelError::UnsupportedVersion { found: 99 })
+        ));
+        // Truncation at every prefix length must be a typed error.
+        for cut in [0, 4, 11, 17, 40, good.len() / 2, good.len() - 1] {
+            let err = decode(&good[..cut]).unwrap_err();
+            assert!(
+                matches!(err, ModelError::Truncated { .. } | ModelError::BadMagic),
+                "cut at {cut}: {err}"
+            );
+        }
+        // A flipped body byte breaks the checksum.
+        let mut flipped = good.clone();
+        let mid = good.len() - 12; // inside the values section
+        flipped[mid] ^= 0x01;
+        assert!(matches!(decode(&flipped), Err(ModelError::Corrupt(_))));
+        // A hostile header claiming a huge d (with a recomputed, valid
+        // checksum) must be rejected with a typed error before any
+        // dense-reconstruction allocation is attempted.
+        let mut huge = good.clone();
+        huge[24..32].copy_from_slice(&(1u64 << 39).to_le_bytes()); // d
+        let body_end = huge.len() - 8;
+        let sum = fnv1a(&huge[..body_end]);
+        huge[body_end..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode(&huge).unwrap_err();
+        assert!(
+            matches!(&err, ModelError::Corrupt(msg) if msg.contains("reconstruction cap")),
+            "{err}"
+        );
+        // A checksum-valid file carrying a NaN center value must be
+        // rejected at load, not panic the first query.
+        let mut nan = good.clone();
+        let val_at = good.len() - 12; // last f32 of the values section
+        nan[val_at..val_at + 4].copy_from_slice(&f32::NAN.to_bits().to_le_bytes());
+        let body_end = nan.len() - 8;
+        let sum = fnv1a(&nan[..body_end]);
+        nan[body_end..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode(&nan).unwrap_err();
+        assert!(
+            matches!(&err, ModelError::Corrupt(msg) if msg.contains("non-finite")),
+            "{err}"
+        );
+        // Trailing garbage is rejected.
+        let mut padded = good.clone();
+        padded.push(0);
+        assert!(matches!(decode(&padded), Err(ModelError::Corrupt(_))));
+    }
+}

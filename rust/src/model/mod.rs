@@ -1,0 +1,232 @@
+//! Persistent trained-model artifacts: save a clustering's centers and
+//! training metadata, load them back bit-exactly, and serve queries from
+//! them long after the training process is gone.
+//!
+//! Until this module existed every trained clustering died with the
+//! process. A production deployment trains once and then answers "which
+//! cluster does this new document belong to?" millions of times — that
+//! split (train → persist → serve) is what [`Model`] enables: the bridge
+//! between [`crate::kmeans`] (which produces centers) and [`crate::serve`]
+//! (which answers nearest-center queries against them).
+//!
+//! # The `.spkm` binary format (version 1)
+//!
+//! Fixed little-endian encoding on every platform, single file, designed
+//! so that loading validates everything it cannot trust:
+//!
+//! | Section | Bytes | Contents |
+//! |---|---|---|
+//! | magic | 8 | `b"SPHKMDL\0"` |
+//! | version | 4 | `u32` = 1 (future versions are rejected, not guessed) |
+//! | flags | 4 | reserved, must be 0 |
+//! | shape | 24 | `k`, `d`, center `nnz` as `u64` |
+//! | training | 24 | iterations `u64`, seed `u64`, objective `f64` |
+//! | variant | 2 + len | `u16` length + UTF-8 name |
+//! | kernel | 2 + len | `u16` length + UTF-8 name |
+//! | norms | 8·k | per-center L2 norm, `f64` bits |
+//! | indptr | 8·(k+1) | CSR row pointers over the center non-zeros, `u64` |
+//! | indices | 4·nnz | column (term) ids, `u32`, strictly increasing per row |
+//! | values | 4·nnz | center coordinates, `f32` bits |
+//! | checksum | 8 | FNV-1a 64 over every preceding byte |
+//!
+//! Centers are stored **sparse** (CSR) because converged text centers —
+//! especially Knittel-style truncated ones — are mostly zeros; a coordinate
+//! is stored whenever its `f32` bit pattern is non-zero, so a negative
+//! zero survives the round trip and [`Model::save`] → [`Model::load`] is
+//! **bit-exact** (asserted by the randomized `model` test suite).
+//!
+//! Loading rejects, with a typed [`ModelError`] rather than garbage data:
+//! wrong magic ([`ModelError::BadMagic`]), files written by a future
+//! format version ([`ModelError::UnsupportedVersion`]), files cut short
+//! anywhere ([`ModelError::Truncated`]), and bodies whose checksum, CSR
+//! invariants, value finiteness, or dense-reconstruction size bounds do
+//! not hold ([`ModelError::Corrupt`]).
+
+mod format;
+
+pub use format::ModelError;
+
+use crate::kmeans::{KMeansConfig, KMeansResult};
+use crate::sparse::DenseMatrix;
+use std::path::Path;
+
+/// How a persisted model was trained — carried verbatim through
+/// save/load so a served model can always account for its provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainingMeta {
+    /// Algorithm variant name (e.g. `"Simp.Elkan"`, `"minibatch"`).
+    pub variant: String,
+    /// Resolved similarity-kernel backend the training run executed.
+    pub kernel: String,
+    /// Assignment iterations the run performed.
+    pub iterations: u64,
+    /// Final spherical k-means objective `Σᵢ (1 − ⟨xᵢ, c(a(i))⟩)`.
+    pub objective: f64,
+    /// RNG seed of the run.
+    pub seed: u64,
+}
+
+/// A trained spherical k-means model: the unit centers plus training
+/// metadata, with bit-exact binary persistence ([`Model::save`] /
+/// [`Model::load`] — see the [module docs](self) for the format).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Model {
+    k: usize,
+    d: usize,
+    centers: DenseMatrix,
+    norms: Vec<f64>,
+    /// Cached count of non-zero center coordinates (by f32 bit pattern),
+    /// so repeated [`Model::center_nnz`] calls never rescan the k×d
+    /// matrix.
+    nnz: usize,
+    meta: TrainingMeta,
+}
+
+impl Model {
+    /// Wrap explicit centers (k×d, rows assumed unit-normalized) and
+    /// metadata into a model. Per-center norms are computed here, once.
+    pub fn new(centers: DenseMatrix, meta: TrainingMeta) -> Self {
+        let (k, d) = (centers.rows(), centers.cols());
+        let norms = (0..k)
+            .map(|j| {
+                centers
+                    .row(j)
+                    .iter()
+                    .map(|&v| v as f64 * v as f64)
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .collect();
+        let nnz = centers.data().iter().filter(|v| v.to_bits() != 0).count();
+        Self { k, d, centers, norms, nnz, meta }
+    }
+
+    /// Build a model from a finished clustering run — what
+    /// `cluster --save-model` persists. Provenance records
+    /// `cfg.variant`; runs of the [`crate::kmeans::minibatch`] engine
+    /// (which ignores the variant) should use [`Model::from_run_named`]
+    /// with `"minibatch"` instead.
+    pub fn from_run(result: &KMeansResult, cfg: &KMeansConfig) -> Self {
+        Self::from_run_named(result, cfg, cfg.variant.name())
+    }
+
+    /// Like [`Model::from_run`], but recording an explicit engine name
+    /// as the variant provenance — for runs whose trainer is not named
+    /// by `cfg.variant` (the mini-batch engine).
+    pub fn from_run_named(result: &KMeansResult, cfg: &KMeansConfig, variant: &str) -> Self {
+        Self::new(
+            result.centers.clone(),
+            TrainingMeta {
+                variant: variant.to_string(),
+                kernel: result.kernel.name().to_string(),
+                iterations: result.iterations as u64,
+                objective: result.objective,
+                seed: cfg.seed,
+            },
+        )
+    }
+
+    /// Number of clusters.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Dimensionality (vocabulary size) the centers live in.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// The unit-normalized centers (k×d).
+    #[inline]
+    pub fn centers(&self) -> &DenseMatrix {
+        &self.centers
+    }
+
+    /// Per-center L2 norms recorded at construction (≈ 1 for unit
+    /// centers; exactly 0 for a center that never received mass).
+    #[inline]
+    pub fn norms(&self) -> &[f64] {
+        &self.norms
+    }
+
+    /// Training provenance.
+    #[inline]
+    pub fn meta(&self) -> &TrainingMeta {
+        &self.meta
+    }
+
+    /// Total non-zero center coordinates — what the sparse CSR encoding
+    /// stores, and what sizes the serving-side inverted index.
+    #[inline]
+    pub fn center_nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Fraction of stored center coordinates, `nnz / (k·d)`.
+    pub fn center_density(&self) -> f64 {
+        if self.k == 0 || self.d == 0 {
+            return 0.0;
+        }
+        self.nnz as f64 / (self.k as f64 * self.d as f64)
+    }
+
+    /// Serialize to `path` in the `.spkm` format (see the
+    /// [module docs](self)). The encoding is deterministic: saving the
+    /// same model twice produces byte-identical files.
+    pub fn save(&self, path: &Path) -> Result<(), ModelError> {
+        std::fs::write(path, format::encode(self))?;
+        Ok(())
+    }
+
+    /// Load a model saved by [`Model::save`], validating magic, version,
+    /// structure, checksum, and CSR invariants — see [`ModelError`] for
+    /// the rejection taxonomy. Center coordinates and norms round-trip
+    /// bit-exactly.
+    pub fn load(path: &Path) -> Result<Self, ModelError> {
+        format::decode(&std::fs::read(path)?)
+    }
+
+    /// Assemble from decoded parts (crate-internal: the format layer's
+    /// constructor after validation). `nnz` is the file's stored
+    /// coordinate count, which by construction equals the non-zero-bit
+    /// count of the reconstructed dense matrix.
+    pub(crate) fn from_parts(
+        k: usize,
+        d: usize,
+        centers: DenseMatrix,
+        norms: Vec<f64>,
+        nnz: usize,
+        meta: TrainingMeta,
+    ) -> Self {
+        Self { k, d, centers, norms, nnz, meta }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::{run, KMeansConfig, Variant};
+
+    #[test]
+    fn from_run_records_provenance() {
+        let ds = crate::data::synth::SynthConfig::small_demo().generate(7);
+        let cfg = KMeansConfig::new(5).variant(Variant::SimplifiedElkan).seed(11).max_iter(20);
+        let r = run(&ds.matrix, &cfg);
+        let m = Model::from_run(&r, &cfg);
+        assert_eq!(m.k(), 5);
+        assert_eq!(m.d(), ds.matrix.cols());
+        assert_eq!(m.meta().variant, "Simp.Elkan");
+        assert_eq!(m.meta().kernel, r.kernel.name());
+        assert_eq!(m.meta().seed, 11);
+        assert_eq!(m.meta().iterations, r.iterations as u64);
+        assert_eq!(m.meta().objective.to_bits(), r.objective.to_bits());
+        // Unit centers ⇒ norms ≈ 1 (or exactly 0 for empty clusters).
+        for &n in m.norms() {
+            assert!(n == 0.0 || (n - 1.0).abs() < 1e-3, "norm {n}");
+        }
+        assert!(m.center_nnz() <= 5 * ds.matrix.cols());
+        assert!(m.center_density() <= 1.0);
+    }
+}

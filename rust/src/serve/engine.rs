@@ -1,0 +1,565 @@
+//! The [`QueryEngine`]: top-p nearest-center queries against a frozen
+//! model, exhaustive or MaxScore-pruned — see the [module docs](super)
+//! for the traversal design and the bit-identity contract.
+
+use crate::kmeans::{DataShape, Kernel, KernelChoice};
+use crate::model::Model;
+use crate::runtime::parallel::{Plan, Pool};
+use crate::sparse::csr::RowView;
+use crate::sparse::{CsrMatrix, InvertedIndex};
+
+/// Float-safety margin added to every MaxScore bound. The bound pass
+/// accumulates partial similarities in descending-contribution order
+/// while the exact gather dot sums in its own order; both agree with the
+/// real-arithmetic value to far better than this margin (worst case
+/// `≈ nnz · ε · Σ|terms| ≲ 1e-12` for realistic rows), so inflating the
+/// pruning window by it keeps the candidate set a provable superset of
+/// the true top-p — bounds can only ever *widen*, never drop a winner.
+pub const BOUND_MARGIN: f64 = 1e-9;
+
+/// Which traversal the engine runs for dispatching queries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServeMode {
+    /// Resolve per model through the kernel layer's Auto heuristic
+    /// ([`KernelChoice::resolve`] on [`DataShape::of_centers`]): the
+    /// pruned inverted-file traversal when the trained centers are
+    /// sparse, exhaustive gather otherwise.
+    #[default]
+    Auto,
+    /// Always the MaxScore-pruned inverted-file traversal.
+    Pruned,
+    /// Always the exhaustive gather pass.
+    Exhaustive,
+}
+
+impl ServeMode {
+    /// Display name (CLI/report spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeMode::Auto => "auto",
+            ServeMode::Pruned => "pruned",
+            ServeMode::Exhaustive => "exhaustive",
+        }
+    }
+}
+
+impl std::str::FromStr for ServeMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(ServeMode::Auto),
+            "pruned" | "maxscore" | "inverted" => Ok(ServeMode::Pruned),
+            "exhaustive" | "gather" | "full" => Ok(ServeMode::Exhaustive),
+            other => Err(format!("unknown serve mode: {other}")),
+        }
+    }
+}
+
+/// Engine construction options.
+#[derive(Debug, Clone, Default)]
+pub struct ServeConfig {
+    /// Traversal selection — see [`ServeMode`].
+    pub mode: ServeMode,
+    /// Worker threads for batch queries (`0` = all cores, `1` = serial;
+    /// the [`crate::runtime::parallel`] convention). Results are
+    /// bit-identical for every setting: each query is a pure function of
+    /// the frozen model, and shard outputs are concatenated in row order.
+    pub threads: usize,
+}
+
+/// Work counters for a stream of queries. All integer sums, so merging
+/// shard-local stats is exact in any order.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Queries answered.
+    pub queries: u64,
+    /// Total multiply-adds (postings walked + gather re-scoring) — the
+    /// same cost model as [`crate::kmeans::stats::IterStats`]'s
+    /// `madds_point_center`, so serve and train costs are comparable.
+    pub madds: u64,
+    /// Centers that received an exact gather score.
+    pub candidates_scored: u64,
+    /// Centers the bound pass skipped without touching.
+    pub centers_pruned: u64,
+}
+
+impl ServeStats {
+    /// Fold shard-local counters into this accumulator.
+    pub fn absorb(&mut self, other: &ServeStats) {
+        self.queries += other.queries;
+        self.madds += other.madds;
+        self.candidates_scored += other.candidates_scored;
+        self.centers_pruned += other.centers_pruned;
+    }
+}
+
+/// Per-worker reusable buffers so the batch hot loop allocates nothing
+/// per query.
+struct Scratch {
+    /// Exact-so-far partial similarity per center (bound pass).
+    partial: Vec<f64>,
+    /// Selection copy of `partial` for the p-th-largest computation.
+    sel: Vec<f64>,
+    /// The query's terms as `(dim, value, contribution bound)`.
+    dims: Vec<(u32, f32, f64)>,
+    /// Suffix sums of the contribution bounds.
+    suffix: Vec<f64>,
+    /// Candidate center ids surviving the bound pass.
+    cands: Vec<u32>,
+}
+
+impl Scratch {
+    fn new(k: usize) -> Self {
+        Self {
+            partial: vec![0.0; k],
+            sel: vec![0.0; k],
+            dims: Vec::new(),
+            suffix: Vec::new(),
+            cands: Vec::new(),
+        }
+    }
+}
+
+/// Total order on `(center, similarity)` results: descending similarity,
+/// ties broken by ascending center id — the same winner rule the training
+/// argmax uses (`top2` keeps the lowest index among equal maxima), so a
+/// converged model's p = 1 answers reproduce its training assignments.
+#[inline]
+fn by_rank(a: &(u32, f64), b: &(u32, f64)) -> std::cmp::Ordering {
+    b.1.partial_cmp(&a.1).expect("similarities are finite").then(a.0.cmp(&b.0))
+}
+
+/// A loaded model plus the derived structures its traversals read: the
+/// inverted-file postings index and the per-dimension MaxScore bound
+/// table. Immutable after construction — queries take `&self`, so one
+/// engine serves any number of worker threads.
+#[derive(Debug)]
+pub struct QueryEngine {
+    model: Model,
+    /// Postings index plus the per-dimension MaxScore bound table
+    /// (`maxw[c] = max_j |centers[j][c]|`). Built only when the resolved
+    /// mode can prune — an exhaustive engine never reads either, and for
+    /// a dense model the postings would cost roughly twice the dense
+    /// matrix they mirror.
+    index: Option<(InvertedIndex, Vec<f32>)>,
+    /// What [`ServeMode`] resolved to: `true` = pruned traversal.
+    pruned: bool,
+    pool: Pool,
+}
+
+impl QueryEngine {
+    /// Build an engine over `model`, resolving [`ServeMode::Auto`]
+    /// through the similarity-kernel heuristic of
+    /// [`crate::kmeans::kernel`]. When the resolved traversal prunes,
+    /// the inverted-file index and bound table are constructed once
+    /// (`O(center nnz)`); an exhaustive engine builds nothing.
+    pub fn new(model: Model, cfg: &ServeConfig) -> Self {
+        let pruned = match cfg.mode {
+            ServeMode::Pruned => true,
+            ServeMode::Exhaustive => false,
+            ServeMode::Auto => {
+                let shape = DataShape::of_centers(model.d(), model.k(), model.center_nnz());
+                KernelChoice::Auto.resolve(&shape) == Kernel::Inverted
+            }
+        };
+        let index = pruned.then(|| {
+            let idx = InvertedIndex::from_centers(model.centers());
+            let maxw = idx.max_abs_weights();
+            (idx, maxw)
+        });
+        Self { model, index, pruned, pool: Pool::new(cfg.threads) }
+    }
+
+    /// The model being served.
+    #[inline]
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// Resolved traversal name (`"pruned"` or `"exhaustive"`).
+    pub fn mode(&self) -> &'static str {
+        if self.pruned { "pruned" } else { "exhaustive" }
+    }
+
+    /// Density of the serving-side postings index (the model's center
+    /// density when the engine resolved exhaustive and built none).
+    pub fn index_density(&self) -> f64 {
+        match &self.index {
+            Some((idx, _)) => idx.density(),
+            None => self.model.center_density(),
+        }
+    }
+
+    /// Top-p centers for one sparse query row (must be unit-normalized
+    /// for the similarities to be cosines, and its indices must lie
+    /// below [`Model::d`]), via the resolved traversal. Returns
+    /// `(center, similarity)` pairs in rank order (see the tie rule on
+    /// the [module docs](super)).
+    pub fn top_p(&self, row: RowView<'_>, p: usize) -> (Vec<(u32, f64)>, ServeStats) {
+        let mut stats = ServeStats::default();
+        let mut scratch = Scratch::new(self.model.k());
+        let out = if self.pruned {
+            self.top_p_pruned_into(row, p, &mut scratch, &mut stats)
+        } else {
+            self.top_p_exhaustive_into(row, p, &mut stats)
+        };
+        (out, stats)
+    }
+
+    /// Exhaustive gather traversal: `k` sparse×dense dots, then a top-p
+    /// selection under the deterministic rank order.
+    pub fn top_p_exhaustive(&self, row: RowView<'_>, p: usize) -> (Vec<(u32, f64)>, ServeStats) {
+        let mut stats = ServeStats::default();
+        let out = self.top_p_exhaustive_into(row, p, &mut stats);
+        (out, stats)
+    }
+
+    /// MaxScore-pruned traversal — bit-identical to
+    /// [`QueryEngine::top_p_exhaustive`] (see the [module docs](super)).
+    pub fn top_p_pruned(&self, row: RowView<'_>, p: usize) -> (Vec<(u32, f64)>, ServeStats) {
+        let mut stats = ServeStats::default();
+        let mut scratch = Scratch::new(self.model.k());
+        let out = self.top_p_pruned_into(row, p, &mut scratch, &mut stats);
+        (out, stats)
+    }
+
+    fn top_p_exhaustive_into(
+        &self,
+        row: RowView<'_>,
+        p: usize,
+        stats: &mut ServeStats,
+    ) -> Vec<(u32, f64)> {
+        let k = self.model.k();
+        stats.queries += 1;
+        if p == 0 || k == 0 {
+            return Vec::new();
+        }
+        let mut scored: Vec<(u32, f64)> = (0..k)
+            .map(|j| (j as u32, row.dot_dense(self.model.centers().row(j))))
+            .collect();
+        stats.madds += (row.nnz() * k) as u64;
+        stats.candidates_scored += k as u64;
+        let p = p.min(k);
+        if p < k {
+            scored.select_nth_unstable_by(p - 1, by_rank);
+            scored.truncate(p);
+        }
+        scored.sort_unstable_by(by_rank);
+        scored
+    }
+
+    fn top_p_pruned_into(
+        &self,
+        row: RowView<'_>,
+        p: usize,
+        scratch: &mut Scratch,
+        stats: &mut ServeStats,
+    ) -> Vec<(u32, f64)> {
+        let k = self.model.k();
+        // An engine resolved to exhaustive built no postings index; the
+        // pruned entry points degrade to the exhaustive pass, which is
+        // bit-identical anyway.
+        let Some((index, maxw)) = self.index.as_ref() else {
+            return self.top_p_exhaustive_into(row, p, stats);
+        };
+        stats.queries += 1;
+        if p == 0 || k == 0 {
+            return Vec::new();
+        }
+        if p >= k {
+            // Nothing to prune: every center must be scored exactly.
+            stats.queries -= 1;
+            return self.top_p_exhaustive_into(row, p, stats);
+        }
+        // The query's terms ordered by descending contribution bound
+        // |q_c|·maxw[c]; terms no center carries bound (and contribute)
+        // exactly zero and are dropped up front.
+        scratch.dims.clear();
+        for (&c, &v) in row.indices.iter().zip(row.values.iter()) {
+            let b = (v.abs() as f64) * (maxw[c as usize] as f64);
+            if b > 0.0 {
+                scratch.dims.push((c, v, b));
+            }
+        }
+        scratch.dims.sort_unstable_by(|a, b| {
+            b.2.partial_cmp(&a.2).expect("finite bounds").then(a.0.cmp(&b.0))
+        });
+        // suffix[t] = Σ_{i ≥ t} bound_i: the most the unprocessed terms
+        // can still add to (or subtract from) any center's similarity.
+        let n = scratch.dims.len();
+        scratch.suffix.clear();
+        scratch.suffix.resize(n + 1, 0.0);
+        for t in (0..n).rev() {
+            scratch.suffix[t] = scratch.suffix[t + 1] + scratch.dims[t].2;
+        }
+        scratch.partial[..k].fill(0.0);
+        // Bound pass: accumulate exact partial similarities term by term,
+        // stopping as soon as the suffix bound can no longer move any
+        // center into the top p. The stop test costs O(k) (a quickselect
+        // over the partials), so it runs at geometrically spaced terms —
+        // O(k log nnz) total — rather than after every one.
+        let mut t = 0;
+        let mut next_check = 1;
+        while t < n {
+            if t == next_check {
+                if self.candidate_count(p, scratch.suffix[t], scratch) <= p {
+                    break;
+                }
+                next_check *= 2;
+            }
+            let (c, v, _) = scratch.dims[t];
+            stats.madds += index.accumulate_dim(c as usize, v as f64, &mut scratch.partial);
+            t += 1;
+        }
+        let slack = 2.0 * scratch.suffix[t] + 2.0 * BOUND_MARGIN;
+        let cut = self.pth_largest(p, scratch) - slack;
+        scratch.cands.clear();
+        for (j, &s) in scratch.partial[..k].iter().enumerate() {
+            if s >= cut {
+                scratch.cands.push(j as u32);
+            }
+        }
+        // Exact re-scoring of the survivors with the same gather dot the
+        // exhaustive path uses — this is what makes the two traversals
+        // bit-identical.
+        stats.centers_pruned += (k - scratch.cands.len()) as u64;
+        stats.candidates_scored += scratch.cands.len() as u64;
+        stats.madds += (row.nnz() * scratch.cands.len()) as u64;
+        let mut scored: Vec<(u32, f64)> = scratch
+            .cands
+            .iter()
+            .map(|&j| (j, row.dot_dense(self.model.centers().row(j as usize))))
+            .collect();
+        if p < scored.len() {
+            scored.select_nth_unstable_by(p - 1, by_rank);
+            scored.truncate(p);
+        }
+        scored.sort_unstable_by(by_rank);
+        scored
+    }
+
+    /// p-th largest current partial similarity (the top-p lower-bound
+    /// threshold before margins). O(k) via quickselect on a scratch copy.
+    fn pth_largest(&self, p: usize, scratch: &mut Scratch) -> f64 {
+        let k = self.model.k();
+        scratch.sel[..k].copy_from_slice(&scratch.partial[..k]);
+        let (_, pth, _) = scratch.sel[..k]
+            .select_nth_unstable_by(p - 1, |a, b| b.partial_cmp(a).expect("finite partials"));
+        *pth
+    }
+
+    /// How many centers could still reach the top p if the walk stopped
+    /// now, with `s` of contribution bound left unprocessed: those whose
+    /// upper bound `partial + s + margin` meets the p-th best lower bound
+    /// `pth_partial − s − margin`.
+    fn candidate_count(&self, p: usize, s: f64, scratch: &mut Scratch) -> usize {
+        let cut = self.pth_largest(p, scratch) - 2.0 * s - 2.0 * BOUND_MARGIN;
+        scratch.partial[..self.model.k()].iter().filter(|&&v| v >= cut).count()
+    }
+
+    /// Top-p centers for every row of `data` (rows unit-normalized,
+    /// `data.cols() ≤ model.d()`), sharded across the engine's worker
+    /// pool on the [`Plan`] row grid. Output order matches row order and
+    /// is bit-identical for every thread count.
+    pub fn top_p_batch(&self, data: &CsrMatrix, p: usize) -> (Vec<Vec<(u32, f64)>>, ServeStats) {
+        self.batch(data, p, self.pruned)
+    }
+
+    /// Batch variant of [`QueryEngine::top_p_pruned`].
+    pub fn top_p_batch_pruned(
+        &self,
+        data: &CsrMatrix,
+        p: usize,
+    ) -> (Vec<Vec<(u32, f64)>>, ServeStats) {
+        self.batch(data, p, true)
+    }
+
+    /// Batch variant of [`QueryEngine::top_p_exhaustive`].
+    pub fn top_p_batch_exhaustive(
+        &self,
+        data: &CsrMatrix,
+        p: usize,
+    ) -> (Vec<Vec<(u32, f64)>>, ServeStats) {
+        self.batch(data, p, false)
+    }
+
+    /// Nearest-center label per row — the p = 1 batch query flattened to
+    /// an assignment vector (rows matching no center at all, e.g. empty
+    /// rows, get the rank winner center 0 like the training argmax).
+    pub fn assign_batch(&self, data: &CsrMatrix) -> (Vec<u32>, ServeStats) {
+        let (top, stats) = self.top_p_batch(data, 1);
+        let labels = top.iter().map(|r| r.first().map_or(0, |&(j, _)| j)).collect();
+        (labels, stats)
+    }
+
+    fn batch(
+        &self,
+        data: &CsrMatrix,
+        p: usize,
+        pruned: bool,
+    ) -> (Vec<Vec<(u32, f64)>>, ServeStats) {
+        assert!(
+            data.cols() <= self.model.d(),
+            "query data has {} features but the model serves {}",
+            data.cols(),
+            self.model.d()
+        );
+        let plan = Plan::for_rows(data.rows());
+        let k = self.model.k();
+        let outs = self.pool.run(plan.ranges().to_vec(), |_, range| {
+            let mut scratch = Scratch::new(k);
+            let mut stats = ServeStats::default();
+            let results: Vec<Vec<(u32, f64)>> = range
+                .map(|i| {
+                    let row = data.row(i);
+                    if pruned {
+                        self.top_p_pruned_into(row, p, &mut scratch, &mut stats)
+                    } else {
+                        self.top_p_exhaustive_into(row, p, &mut stats)
+                    }
+                })
+                .collect();
+            (results, stats)
+        });
+        let mut all = Vec::with_capacity(data.rows());
+        let mut stats = ServeStats::default();
+        for (results, s) in outs {
+            all.extend(results);
+            stats.absorb(&s);
+        }
+        (all, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Model, TrainingMeta};
+    use crate::sparse::{DenseMatrix, SparseVec};
+
+    fn meta() -> TrainingMeta {
+        TrainingMeta {
+            variant: "Standard".into(),
+            kernel: "gather".into(),
+            iterations: 1,
+            objective: 0.0,
+            seed: 0,
+        }
+    }
+
+    fn toy_engine(mode: ServeMode) -> QueryEngine {
+        // 4 sparse centers over 6 dims.
+        let centers = DenseMatrix::from_vec(
+            4,
+            6,
+            vec![
+                0.6, 0.0, 0.8, 0.0, 0.0, 0.0, //
+                0.0, 1.0, 0.0, 0.0, 0.0, 0.0, //
+                0.5, 0.0, 0.5, 0.5, 0.5, 0.0, //
+                0.0, 0.0, 0.0, 0.0, 0.6, 0.8,
+            ],
+        );
+        QueryEngine::new(Model::new(centers, meta()), &ServeConfig { mode, threads: 1 })
+    }
+
+    #[test]
+    fn mode_parsing_and_resolution() {
+        assert_eq!("auto".parse::<ServeMode>().unwrap(), ServeMode::Auto);
+        assert_eq!("MaxScore".parse::<ServeMode>().unwrap(), ServeMode::Pruned);
+        assert_eq!("full".parse::<ServeMode>().unwrap(), ServeMode::Exhaustive);
+        assert!("nope".parse::<ServeMode>().is_err());
+        assert_eq!(ServeMode::default(), ServeMode::Auto);
+        for m in [ServeMode::Auto, ServeMode::Pruned, ServeMode::Exhaustive] {
+            assert!(!m.name().is_empty());
+        }
+        assert_eq!(toy_engine(ServeMode::Pruned).mode(), "pruned");
+        assert_eq!(toy_engine(ServeMode::Exhaustive).mode(), "exhaustive");
+    }
+
+    #[test]
+    fn pruned_matches_exhaustive_on_toy_queries() {
+        let engine = toy_engine(ServeMode::Pruned);
+        let q = SparseVec::from_pairs(6, vec![(0, 0.6), (2, 0.64), (4, 0.48)]);
+        let row = RowView { indices: q.indices(), values: q.values() };
+        for p in [1usize, 2, 3, 4, 9] {
+            let (ex, _) = engine.top_p_exhaustive(row, p);
+            let (pr, _) = engine.top_p_pruned(row, p);
+            assert_eq!(ex.len(), p.min(4));
+            assert_eq!(pr.len(), ex.len(), "p={p}");
+            for (a, b) in ex.iter().zip(&pr) {
+                assert_eq!(a.0, b.0, "p={p}");
+                assert_eq!(a.1.to_bits(), b.1.to_bits(), "p={p}");
+            }
+        }
+        // Ranks are descending with the id tiebreak.
+        let (ex, _) = engine.top_p_exhaustive(row, 4);
+        for w in ex.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_queries() {
+        let engine = toy_engine(ServeMode::Pruned);
+        let empty = SparseVec::zeros(6);
+        let row = RowView { indices: empty.indices(), values: empty.values() };
+        let (pr, _) = engine.top_p_pruned(row, 2);
+        let (ex, _) = engine.top_p_exhaustive(row, 2);
+        assert_eq!(pr, ex);
+        assert_eq!(pr[0], (0, 0.0), "all-zero query: rank by center id");
+        let (none, _) = engine.top_p(row, 0);
+        assert!(none.is_empty());
+        // A query on a term no center carries prunes everything to a
+        // zero-score tie.
+        let oov = SparseVec::from_pairs(6, vec![(1, 1.0)]);
+        let row = RowView { indices: oov.indices(), values: oov.values() };
+        let (pr, _) = engine.top_p_pruned(row, 1);
+        let (ex, _) = engine.top_p_exhaustive(row, 1);
+        assert_eq!(pr, ex);
+        assert_eq!(pr[0].0, 1, "center 1 owns the term");
+    }
+
+    #[test]
+    fn batch_is_thread_count_invariant_and_matches_single() {
+        let data = crate::data::synth::SynthConfig::small_demo().generate(5).matrix;
+        let mk = |threads: usize| {
+            let ds = crate::data::synth::SynthConfig::small_demo().generate(9);
+            let cfg = crate::kmeans::KMeansConfig::new(6).seed(2).max_iter(10);
+            let r = crate::kmeans::run(&ds.matrix, &cfg);
+            let model = Model::from_run(&r, &cfg);
+            QueryEngine::new(model, &ServeConfig { mode: ServeMode::Pruned, threads })
+        };
+        let serial = mk(1);
+        let (base, bstats) = serial.top_p_batch(&data, 3);
+        assert_eq!(bstats.queries, data.rows() as u64);
+        for threads in [2usize, 0] {
+            let engine = mk(threads);
+            let (out, stats) = engine.top_p_batch(&data, 3);
+            assert_eq!(stats, bstats, "threads={threads}");
+            for (i, (a, b)) in base.iter().zip(&out).enumerate() {
+                assert_eq!(a.len(), b.len(), "row {i}");
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.0, y.0, "row {i}");
+                    assert_eq!(x.1.to_bits(), y.1.to_bits(), "row {i}");
+                }
+            }
+        }
+        // Pruned and exhaustive batches agree bitwise.
+        let (ex, _) = serial.top_p_batch_exhaustive(&data, 3);
+        let (pr, _) = serial.top_p_batch_pruned(&data, 3);
+        assert_eq!(ex, pr);
+        // assign_batch is the p = 1 column.
+        let (labels, _) = serial.assign_batch(&data);
+        for (i, row) in pr.iter().enumerate() {
+            assert_eq!(labels[i], row[0].0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "features")]
+    fn batch_rejects_wider_data_than_model() {
+        let engine = toy_engine(ServeMode::Pruned);
+        let wide = CsrMatrix::from_rows(9, &[SparseVec::from_pairs(9, vec![(8, 1.0)])]);
+        let _ = engine.top_p_batch(&wide, 1);
+    }
+}

@@ -1,0 +1,58 @@
+//! High-throughput nearest-center query serving over a persisted
+//! [`Model`](crate::model::Model).
+//!
+//! Training answers "where are the centers?" once; production serving
+//! answers "which center is this new document nearest?" millions of times
+//! against frozen centers. This module is that second half: load a model,
+//! build a [`QueryEngine`], and stream top-p cosine queries through it —
+//! single documents or whole corpora sharded across the
+//! [`crate::runtime::parallel`] Plan/Pool executor.
+//!
+//! # Two traversals, one answer
+//!
+//! * **Exhaustive gather** — `k` sparse×dense dots per query
+//!   (`nnz(q)·k` multiply-adds), the same machinery the training
+//!   variants charge for selective similarities. Always correct; the
+//!   reference the pruned path is tested against.
+//! * **MaxScore-pruned** ([`QueryEngine::top_p_pruned`]) — walks the
+//!   query's terms through the inverted-file postings index
+//!   ([`crate::sparse::InvertedIndex`]) in *descending contribution-bound
+//!   order*, where each term's bound is `|q_c| · maxw[c]` and `maxw` is
+//!   the per-dimension maximum absolute center weight (Turtle & Flood's
+//!   MaxScore idea, carried from document retrieval to center retrieval).
+//!   The suffix sum of unprocessed bounds caps every center's remaining
+//!   similarity, so the walk stops as soon as the top-p *set* is decided;
+//!   centers whose upper bound falls below the p-th best lower bound are
+//!   skipped without ever being touched. Survivors are then re-scored
+//!   with the exact same gather dot the exhaustive path uses.
+//!
+//! That re-scoring step is what makes the pruned path **bit-identical**
+//! to exhaustive gather: bounds only ever decide *which* centers get an
+//! exact score (a provable superset of the true top-p, with a
+//! [`float-safety margin`](engine::BOUND_MARGIN)), never what the score
+//! is. The `serve` test suite asserts identical `(center, similarity)`
+//! lists across both traversals, every thread count, and random sparse
+//! problems; `bench_serve` additionally asserts the pruned path performs
+//! strictly fewer multiply-adds on sparse text models.
+//!
+//! Pruning is a wager on sparsity: on a *dense* model the bound pass can
+//! walk nearly every posting and then re-score nearly every center,
+//! costing more than the exhaustive pass it tried to avoid — which is
+//! exactly why [`ServeMode::Auto`] (the default) resolves through the
+//! kernel layer's density heuristic and serves dense models exhaustively.
+//!
+//! ```no_run
+//! use sphkm::model::Model;
+//! use sphkm::serve::{QueryEngine, ServeConfig};
+//!
+//! let model = Model::load(std::path::Path::new("news.spkm")).unwrap();
+//! let engine = QueryEngine::new(model, &ServeConfig { threads: 0, ..Default::default() });
+//! # let corpus = sphkm::data::synth::SynthConfig::small_demo().generate(1).matrix;
+//! let (top, stats) = engine.top_p_batch(&corpus, 3);
+//! println!("{} queries, {} madds", stats.queries, stats.madds);
+//! println!("doc 0 best center: {:?}", top[0][0]);
+//! ```
+
+pub mod engine;
+
+pub use engine::{QueryEngine, ServeConfig, ServeMode, ServeStats};

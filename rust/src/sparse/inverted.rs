@@ -135,6 +135,32 @@ impl InvertedIndex {
         self.support[j] = support;
     }
 
+    /// Per-dimension maximum absolute center weight: `maxw[c] =
+    /// max_j |centers[j][c]|` (0 where no center has the term). This is
+    /// the MaxScore bound table (Turtle & Flood 1995) the serving layer
+    /// uses: the contribution of dimension `c` to any point×center cosine
+    /// is at most `|q_c| · maxw[c]`, so summing it over a query's
+    /// unprocessed terms bounds every center's remaining similarity.
+    pub fn max_abs_weights(&self) -> Vec<f32> {
+        self.postings
+            .iter()
+            .map(|list| list.iter().map(|p| p.value.abs()).fold(0.0f32, f32::max))
+            .collect()
+    }
+
+    /// Walk the postings of dimension `c`, folding `q · value` into
+    /// `out[center]` for every center with the term, in ascending center
+    /// id order (the same accumulation order [`InvertedIndex::sims_into`]
+    /// uses). Returns the postings touched (= multiply-adds performed).
+    #[inline]
+    pub fn accumulate_dim(&self, c: usize, q: f64, out: &mut [f64]) -> u64 {
+        let list = &self.postings[c];
+        for p in list {
+            out[p.center as usize] += q * p.value as f64;
+        }
+        list.len() as u64
+    }
+
     /// Similarities of one sparse row to **all** centers, written into
     /// `out[0..k]`. Walks only the postings of the row's own dimensions;
     /// returns the number of multiply-adds performed (the kernel-layer

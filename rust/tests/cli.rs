@@ -150,6 +150,63 @@ fn cluster_with_kernel_flag() {
 }
 
 #[test]
+fn cluster_save_model_then_assign_end_to_end() {
+    let dir = std::env::temp_dir().join("sphkm-cli-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let data = dir.join("serve-corpus.svm");
+    let model = dir.join("serve-corpus.spkm");
+    let csv = dir.join("serve-top.csv");
+    // gen (labeled) → cluster --save-model → assign, all as subprocesses.
+    let out = sphkm()
+        .args(["gen", "--data", "demo", "--out", data.to_str().unwrap(), "--seed", "8"])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = sphkm()
+        .args([
+            "cluster", "--data", data.to_str().unwrap(), "--k", "6", "--algo",
+            "standard", "--kernel", "gather", "--seed", "4",
+            "--save-model", model.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("[model]"), "{text}");
+    assert!(
+        text.contains("NMI="),
+        "labeled input must report external quality unprompted: {text}"
+    );
+    let out = sphkm()
+        .args([
+            "assign", "--model", model.to_str().unwrap(), "--data",
+            data.to_str().unwrap(), "--top", "3", "--threads", "2",
+            "--out", csv.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("queries/s"), "{text}");
+    assert!(text.contains("NMI="), "labeled queries must report quality: {text}");
+    let csv_text = std::fs::read_to_string(&csv).unwrap();
+    assert!(csv_text.starts_with("row,rank,center,similarity"), "{csv_text}");
+    assert!(csv_text.lines().count() > 3, "per-query top-p rows expected");
+    // A corrupt model file must be rejected with a nonzero exit.
+    let garbage = dir.join("garbage.spkm");
+    std::fs::write(&garbage, b"not a model").unwrap();
+    let out = sphkm()
+        .args([
+            "assign", "--model", garbage.to_str().unwrap(), "--data",
+            data.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("error loading model"));
+}
+
+#[test]
 fn sweep_runs_from_config_file() {
     let dir = std::env::temp_dir().join("sphkm-cli-tests");
     std::fs::create_dir_all(&dir).unwrap();

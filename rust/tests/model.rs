@@ -1,0 +1,147 @@
+//! Model persistence integration tests: randomized save/load bit-exactness
+//! and the corrupt-file rejection taxonomy.
+
+use sphkm::kmeans::{run, KMeansConfig, Variant};
+use sphkm::model::{Model, ModelError, TrainingMeta};
+use sphkm::sparse::DenseMatrix;
+use sphkm::util::prop::forall;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("sphkm-model-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn prop_save_load_round_trips_bit_exactly() {
+    forall(40, 0x40DE1, |g| {
+        let k = g.usize_in(1, 12);
+        let d = g.usize_in(1, 80);
+        let mut centers = DenseMatrix::zeros(k, d);
+        for j in 0..k {
+            let nnz = g.usize_in(0, d + 1);
+            for c in g.sparse_pattern(d, nnz) {
+                // Raw values (not unit rows) on purpose: persistence must
+                // not assume normalization. Include exact zeros from the
+                // generator range edge and negative values.
+                centers.row_mut(j)[c] = g.f64_in(-2.0, 2.0) as f32;
+            }
+        }
+        // Occasionally plant a negative zero — its bit pattern must survive.
+        if k * d > 2 {
+            centers.row_mut(0)[0] = -0.0;
+        }
+        let meta = TrainingMeta {
+            variant: ["Standard", "minibatch", "Simp.Elkan"][g.usize_in(0, 3)].to_string(),
+            kernel: ["dense", "gather", "inverted"][g.usize_in(0, 3)].to_string(),
+            iterations: g.usize_in(0, 1000) as u64,
+            objective: g.f64_in(0.0, 1e6),
+            seed: g.usize_in(0, 1 << 30) as u64,
+        };
+        let model = Model::new(centers, meta);
+        let path = tmp(&format!("prop-{}.spkm", g.case));
+        model.save(&path).unwrap();
+        let back = Model::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.k(), model.k());
+        assert_eq!(back.d(), model.d());
+        assert_eq!(back.meta(), model.meta());
+        assert_eq!(
+            back.meta().objective.to_bits(),
+            model.meta().objective.to_bits()
+        );
+        for (a, b) in back.norms().iter().zip(model.norms()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "norms must round-trip bitwise");
+        }
+        for j in 0..model.k() {
+            for (c, (a, b)) in back
+                .centers()
+                .row(j)
+                .iter()
+                .zip(model.centers().row(j))
+                .enumerate()
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "center {j} dim {c}");
+            }
+        }
+    });
+}
+
+#[test]
+fn trained_model_round_trips_through_disk() {
+    let ds = sphkm::data::synth::SynthConfig::small_demo().generate(3);
+    let cfg = KMeansConfig::new(6).variant(Variant::Hamerly).seed(5).max_iter(30);
+    let r = run(&ds.matrix, &cfg);
+    let model = Model::from_run(&r, &cfg);
+    let path = tmp("trained.spkm");
+    model.save(&path).unwrap();
+    let back = Model::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back, model);
+    for j in 0..model.k() {
+        for (a, b) in back.centers().row(j).iter().zip(r.centers.row(j)) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}
+
+#[test]
+fn load_rejects_missing_bad_magic_version_truncated_and_corrupt() {
+    let centers = DenseMatrix::from_vec(2, 3, vec![0.6, 0.0, 0.8, 0.0, 1.0, 0.0]);
+    let model = Model::new(
+        centers,
+        TrainingMeta {
+            variant: "Standard".into(),
+            kernel: "gather".into(),
+            iterations: 3,
+            objective: 0.5,
+            seed: 7,
+        },
+    );
+    let path = tmp("victim.spkm");
+    model.save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Missing file → Io.
+    let missing = Model::load(&tmp("does-not-exist.spkm")).unwrap_err();
+    assert!(matches!(missing, ModelError::Io(_)), "{missing}");
+
+    // Bad magic → BadMagic.
+    let mut bytes = good.clone();
+    bytes[0] = b'X';
+    std::fs::write(&path, &bytes).unwrap();
+    let err = Model::load(&path).unwrap_err();
+    assert!(matches!(err, ModelError::BadMagic), "{err}");
+
+    // Future version → UnsupportedVersion, reported before any checksum
+    // complaint so the message tells the user what is actually wrong.
+    let mut bytes = good.clone();
+    bytes[8..12].copy_from_slice(&7u32.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    let err = Model::load(&path).unwrap_err();
+    assert!(
+        matches!(err, ModelError::UnsupportedVersion { found: 7 }),
+        "{err}"
+    );
+
+    // Truncated body → Truncated, at any cut point past the magic.
+    for frac in [0.3, 0.6, 0.95] {
+        let cut = (good.len() as f64 * frac) as usize;
+        std::fs::write(&path, &good[..cut]).unwrap();
+        let err = Model::load(&path).unwrap_err();
+        assert!(matches!(err, ModelError::Truncated { .. }), "cut {cut}: {err}");
+    }
+
+    // A flipped payload byte → Corrupt (checksum mismatch).
+    let mut bytes = good.clone();
+    let mid = good.len() - 12;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = Model::load(&path).unwrap_err();
+    assert!(matches!(err, ModelError::Corrupt(_)), "{err}");
+
+    // The pristine bytes still load after all that.
+    std::fs::write(&path, &good).unwrap();
+    assert_eq!(Model::load(&path).unwrap(), model);
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,147 @@
+//! Query-engine integration tests: the MaxScore-pruned traversal must be
+//! bit-identical to exhaustive gather on random sparse problems, across
+//! top-p widths and thread counts, and a converged model's p = 1 answers
+//! must reproduce its training assignments.
+
+use sphkm::kmeans::{run, KMeansConfig, KernelChoice, Variant};
+use sphkm::model::{Model, TrainingMeta};
+use sphkm::serve::{QueryEngine, ServeConfig, ServeMode};
+use sphkm::sparse::{CsrMatrix, DenseMatrix, SparseVec};
+use sphkm::util::prop::forall;
+
+fn meta() -> TrainingMeta {
+    TrainingMeta {
+        variant: "Standard".into(),
+        kernel: "gather".into(),
+        iterations: 0,
+        objective: 0.0,
+        seed: 0,
+    }
+}
+
+#[test]
+fn prop_pruned_top_p_is_bit_identical_to_exhaustive() {
+    forall(60, 0x5E4E, |g| {
+        let d = g.usize_in(1, 100);
+        let k = g.usize_in(1, 16);
+        let mut centers = DenseMatrix::zeros(k, d);
+        for j in 0..k {
+            let nnz = g.usize_in(0, d + 1);
+            for c in g.sparse_pattern(d, nnz) {
+                centers.row_mut(j)[c] = g.f64_in(-1.0, 1.0) as f32;
+            }
+        }
+        let engine = QueryEngine::new(
+            Model::new(centers, meta()),
+            &ServeConfig { mode: ServeMode::Pruned, threads: 1 },
+        );
+        let rows: Vec<SparseVec> = (0..g.usize_in(1, 20))
+            .map(|_| {
+                let nnz = g.usize_in(0, d + 1);
+                let pat = g.sparse_pattern(d, nnz);
+                SparseVec::new(
+                    d,
+                    pat.iter().map(|&c| c as u32).collect(),
+                    pat.iter().map(|_| g.f64_in(-1.0, 1.0) as f32).collect(),
+                )
+            })
+            .collect();
+        let data = CsrMatrix::from_rows(d, &rows);
+        for p in [1usize, 2, k, k + 3] {
+            let (ex, ex_stats) = engine.top_p_batch_exhaustive(&data, p);
+            let (pr, pr_stats) = engine.top_p_batch_pruned(&data, p);
+            assert_eq!(ex.len(), pr.len());
+            for (i, (a, b)) in ex.iter().zip(&pr).enumerate() {
+                assert_eq!(a.len(), b.len(), "row {i} p={p}");
+                assert_eq!(a.len(), p.min(k));
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.0, y.0, "row {i} p={p}: center order");
+                    assert_eq!(x.1.to_bits(), y.1.to_bits(), "row {i} p={p}: sims");
+                }
+            }
+            // Correctness never depends on the cost: on adversarial dense
+            // centers the bound pass can even cost extra (which is why
+            // Auto serves dense models exhaustively), so only the query
+            // accounting is asserted here; the strict madds win on sparse
+            // text models is asserted by `bench_serve`.
+            assert_eq!(pr_stats.queries, ex_stats.queries);
+        }
+    });
+}
+
+#[test]
+fn batch_queries_are_thread_count_invariant() {
+    let ds = sphkm::data::synth::SynthConfig::small_demo().generate(11);
+    let cfg = KMeansConfig::new(8).seed(3).max_iter(25);
+    let r = run(&ds.matrix, &cfg);
+    let model = Model::from_run(&r, &cfg);
+    let serial = QueryEngine::new(
+        model.clone(),
+        &ServeConfig { mode: ServeMode::Pruned, threads: 1 },
+    );
+    let (base, base_stats) = serial.top_p_batch(&ds.matrix, 4);
+    for threads in [2usize, 4, 0] {
+        let engine = QueryEngine::new(
+            model.clone(),
+            &ServeConfig { mode: ServeMode::Pruned, threads },
+        );
+        let (out, stats) = engine.top_p_batch(&ds.matrix, 4);
+        assert_eq!(stats, base_stats, "threads={threads}: stats");
+        assert_eq!(out.len(), base.len());
+        for (i, (a, b)) in base.iter().zip(&out).enumerate() {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.0, y.0, "threads={threads} row {i}");
+                assert_eq!(x.1.to_bits(), y.1.to_bits(), "threads={threads} row {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn converged_model_reproduces_training_assignments() {
+    // A converged run assigns every point to its most-similar center; the
+    // gather kernel computes training similarities with the very dot the
+    // serving engine uses, so p = 1 answers must reproduce the training
+    // assignments exactly — through a disk round trip.
+    let ds = sphkm::data::synth::SynthConfig::small_demo().generate(21);
+    let cfg = KMeansConfig::new(6)
+        .variant(Variant::Standard)
+        .kernel(KernelChoice::Gather)
+        .seed(9)
+        .max_iter(200);
+    let r = run(&ds.matrix, &cfg);
+    assert!(r.converged, "demo corpus must converge");
+    let path =
+        std::env::temp_dir().join(format!("sphkm-serve-e2e-{}.spkm", std::process::id()));
+    Model::from_run(&r, &cfg).save(&path).unwrap();
+    let model = Model::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    for mode in [ServeMode::Pruned, ServeMode::Exhaustive, ServeMode::Auto] {
+        let engine = QueryEngine::new(model.clone(), &ServeConfig { mode, threads: 0 });
+        let (labels, stats) = engine.assign_batch(&ds.matrix);
+        assert_eq!(labels, r.assignments, "mode={}", mode.name());
+        assert_eq!(stats.queries, ds.matrix.rows() as u64);
+    }
+}
+
+#[test]
+fn auto_mode_resolves_by_center_density() {
+    // Sparse centers over a large vocabulary → pruned; dense centers over
+    // a tiny one → exhaustive (mirrors the kernel layer's Auto heuristic).
+    let mut sparse = DenseMatrix::zeros(8, 10_000);
+    for j in 0..8 {
+        sparse.row_mut(j)[j * 7] = 1.0;
+    }
+    let engine = QueryEngine::new(
+        Model::new(sparse, meta()),
+        &ServeConfig { mode: ServeMode::Auto, threads: 1 },
+    );
+    assert_eq!(engine.mode(), "pruned");
+    assert!(engine.index_density() < 0.01);
+    let dense = DenseMatrix::from_vec(2, 2, vec![0.6, 0.8, 0.8, 0.6]);
+    let engine = QueryEngine::new(
+        Model::new(dense, meta()),
+        &ServeConfig { mode: ServeMode::Auto, threads: 1 },
+    );
+    assert_eq!(engine.mode(), "exhaustive");
+}
