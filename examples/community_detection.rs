@@ -13,7 +13,7 @@
 
 use sphkm::data::datasets::{self, Scale};
 use sphkm::init::{seed_centers, InitMethod};
-use sphkm::kmeans::{run_with_centers, KMeansConfig, Variant};
+use sphkm::kmeans::{SphericalKMeans, Variant};
 use sphkm::metrics;
 use sphkm::util::cli::Args;
 use sphkm::util::timer::Stopwatch;
@@ -34,9 +34,13 @@ fn main() {
     let mut standard_ms = 0.0;
     println!("\n{:<14} {:>9} {:>6} {:>14} {:>8}", "variant", "ms", "iters", "sims", "speedup");
     for variant in Variant::ALL {
-        let cfg = KMeansConfig::new(k).variant(variant);
         let sw = Stopwatch::start();
-        let r = run_with_centers(&ds.matrix, init.centers.clone(), &cfg);
+        let r = SphericalKMeans::new(k)
+            .variant(variant)
+            .warm_start_centers(init.centers.clone())
+            .fit(&ds.matrix)
+            .expect("valid configuration")
+            .into_result();
         let ms = sw.ms();
         if variant == Variant::Standard {
             standard_ms = ms;

@@ -20,7 +20,7 @@
 use sphkm::coordinator::report::{fmt_ms, Table};
 use sphkm::data::datasets::{self, Scale};
 use sphkm::init::{seed_centers, InitMethod};
-use sphkm::kmeans::{run_with_centers, KMeansConfig, Variant};
+use sphkm::kmeans::{SphericalKMeans, Variant};
 use sphkm::metrics;
 use sphkm::util::cli::Args;
 use sphkm::util::timer::Stopwatch;
@@ -53,9 +53,13 @@ fn main() {
         let mut baseline_assign: Vec<u32> = Vec::new();
         let mut best_speedup: f64 = 1.0;
         for variant in Variant::ALL {
-            let cfg = KMeansConfig::new(k).variant(variant);
             let sw = Stopwatch::start();
-            let r = run_with_centers(&ds.matrix, init.centers.clone(), &cfg);
+            let r = SphericalKMeans::new(k)
+                .variant(variant)
+                .warm_start_centers(init.centers.clone())
+                .fit(&ds.matrix)
+                .expect("valid configuration")
+                .into_result();
             let ms = sw.ms();
             let exact = if variant == Variant::Standard {
                 baseline_ms = ms;
@@ -128,11 +132,12 @@ fn pjrt_stage() {
     .generate(9);
     let k = 16;
     let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 5);
-    let r = run_with_centers(
-        &ds.matrix,
-        init.centers.clone(),
-        &KMeansConfig::new(k).variant(Variant::SimplifiedElkan),
-    );
+    let r = SphericalKMeans::new(k)
+        .variant(Variant::SimplifiedElkan)
+        .warm_start_centers(init.centers.clone())
+        .fit(&ds.matrix)
+        .expect("valid configuration")
+        .into_result();
     let mut engine = AssignEngine::load_matching(art, k, 512).expect("artifact");
     let tile = engine
         .assign_all(&ds.matrix, r.centers.data())

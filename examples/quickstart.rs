@@ -7,7 +7,7 @@
 
 use sphkm::data::synth::SynthConfig;
 use sphkm::init::InitMethod;
-use sphkm::kmeans::{run, KMeansConfig, Variant};
+use sphkm::kmeans::{SphericalKMeans, Variant};
 use sphkm::metrics;
 
 fn main() {
@@ -22,34 +22,38 @@ fn main() {
 
     // Cluster with the paper's recommended default (Simplified Elkan for
     // modest k) and k-means++ seeding.
-    let cfg = KMeansConfig::new(8)
+    let result = SphericalKMeans::new(8)
         .variant(Variant::SimplifiedElkan)
         .init(InitMethod::KMeansPP { alpha: 1.0 })
-        .seed(1);
-    let result = run(&ds.matrix, &cfg);
+        .seed(1)
+        .fit(&ds.matrix)
+        .expect("valid configuration");
 
     println!(
         "converged={} after {} iterations, objective={:.3}, mean cosine={:.3}",
-        result.converged, result.iterations, result.objective, result.mean_similarity
+        result.converged(),
+        result.iterations(),
+        result.objective(),
+        result.mean_similarity()
     );
     println!(
         "similarity computations: {} (a standard run would need ~{})",
-        result.stats.total_point_center(),
-        (result.iterations + 1) * ds.matrix.rows() * 8
+        result.stats().total_point_center(),
+        (result.iterations() + 1) * ds.matrix.rows() * 8
     );
 
     if let Some(truth) = &ds.labels {
         println!(
             "vs planted topics: NMI={:.3} ARI={:.3} purity={:.3}",
-            metrics::nmi(&result.assignments, truth),
-            metrics::ari(&result.assignments, truth),
-            metrics::purity(&result.assignments, truth)
+            metrics::nmi(result.assignments(), truth),
+            metrics::ari(result.assignments(), truth),
+            metrics::purity(result.assignments(), truth)
         );
     }
 
     // Cluster sizes.
     let mut sizes = vec![0usize; 8];
-    for &a in &result.assignments {
+    for &a in result.assignments() {
         sizes[a as usize] += 1;
     }
     println!("cluster sizes: {sizes:?}");

@@ -10,7 +10,7 @@
 
 use sphkm::data::text::{demo_corpus, TextPipeline};
 use sphkm::init::InitMethod;
-use sphkm::kmeans::{run, KMeansConfig, Variant};
+use sphkm::kmeans::{SphericalKMeans, Variant};
 use sphkm::util::cli::Args;
 
 fn load_docs(args: &Args) -> Vec<String> {
@@ -50,19 +50,22 @@ fn main() {
         ds.matrix.cols()
     );
 
-    let cfg = KMeansConfig::new(k)
+    let r = SphericalKMeans::new(k)
         .variant(Variant::SimplifiedElkan)
         .init(InitMethod::KMeansPP { alpha: 1.0 })
-        .seed(11);
-    let r = run(&ds.matrix, &cfg);
+        .seed(11)
+        .fit(&ds.matrix)
+        .expect("valid configuration");
     println!(
         "converged={} in {} iterations, mean cosine {:.3}\n",
-        r.converged, r.iterations, r.mean_similarity
+        r.converged(),
+        r.iterations(),
+        r.mean_similarity()
     );
 
     // Top terms per cluster = largest center weights.
     for j in 0..k {
-        let center = r.centers.row(j);
+        let center = r.centers().row(j);
         let mut weighted: Vec<(usize, f32)> = center
             .iter()
             .enumerate()
@@ -70,7 +73,7 @@ fn main() {
             .map(|(t, &w)| (t, w))
             .collect();
         weighted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        let members = r.assignments.iter().filter(|&&a| a as usize == j).count();
+        let members = r.assignments().iter().filter(|&&a| a as usize == j).count();
         let top: Vec<&str> = weighted
             .iter()
             .take(6)

@@ -17,7 +17,7 @@ use sphkm::bounds::hamerly_bound::{update_eq8, update_eq9, update_min_p_guarded,
 use sphkm::bounds::{sim_lower, sim_lower_arc, sim_upper, update_upper};
 use sphkm::data::datasets::{self, Scale};
 use sphkm::init::{seed_centers, InitMethod};
-use sphkm::kmeans::{run_with_centers, KMeansConfig, Variant};
+use sphkm::kmeans::{Engine, ExactParams, SphericalKMeans, Variant};
 use sphkm::util::benchkit::{bench, black_box, BenchOpts};
 use sphkm::util::cli::Args;
 use sphkm::util::rng::Xoshiro256;
@@ -126,14 +126,20 @@ fn main() {
     let k = 50.min(ds.matrix.rows() / 2);
     let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 9);
     for (name, tight) in [("hamerly/eq9", false), ("hamerly/guarded-min-p", true)] {
-        let cfg = KMeansConfig::new(k)
-            .variant(Variant::SimplifiedHamerly)
-            .tight_bound(tight);
+        let est = SphericalKMeans::new(k).engine(Engine::Exact(ExactParams {
+            variant: Variant::SimplifiedHamerly,
+            tight_bound: tight,
+            ..Default::default()
+        }));
         let mut sims = 0u64;
         let r = bench(name, opts, || {
-            let res = run_with_centers(&ds.matrix, init.centers.clone(), &cfg);
-            sims = res.stats.total_point_center();
-            black_box(res.objective);
+            let res = est
+                .clone()
+                .warm_start_centers(init.centers.clone())
+                .fit(&ds.matrix)
+                .expect("bench configuration is valid");
+            sims = res.stats().total_point_center();
+            black_box(res.objective());
         });
         println!("    -> {} point-center sims ({})", sims, r.name);
     }

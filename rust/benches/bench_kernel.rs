@@ -17,7 +17,7 @@
 
 use sphkm::data::synth::SynthConfig;
 use sphkm::init::{seed_centers, InitMethod};
-use sphkm::kmeans::{minibatch, run_with_centers, KMeansConfig, KernelChoice, Variant};
+use sphkm::kmeans::{Engine, KernelChoice, MiniBatchParams, SphericalKMeans, Variant};
 use sphkm::util::cli::Args;
 use sphkm::util::timer::Stopwatch;
 
@@ -61,24 +61,27 @@ fn main() {
         let ds = corpus(vocab, rows, k, seed);
         let density = ds.matrix.density();
         let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, seed ^ 1);
-        let base = KMeansConfig::new(k)
-            .variant(Variant::Standard)
-            .threads(threads)
-            .max_iter(max_iter);
+        let base = || {
+            SphericalKMeans::new(k)
+                .variant(Variant::Standard)
+                .threads(threads)
+                .max_iter(max_iter)
+                .warm_start_centers(init.centers.clone())
+        };
 
         let sw = Stopwatch::start();
-        let dense = run_with_centers(
-            &ds.matrix,
-            init.centers.clone(),
-            &base.clone().kernel(KernelChoice::Dense),
-        );
+        let dense = base()
+            .kernel(KernelChoice::Dense)
+            .fit(&ds.matrix)
+            .expect("bench configuration is valid")
+            .into_result();
         let dense_ms = sw.ms();
         let sw = Stopwatch::start();
-        let inv = run_with_centers(
-            &ds.matrix,
-            init.centers.clone(),
-            &base.clone().kernel(KernelChoice::Inverted),
-        );
+        let inv = base()
+            .kernel(KernelChoice::Inverted)
+            .fit(&ds.matrix)
+            .expect("bench configuration is valid")
+            .into_result();
         let inv_ms = sw.ms();
 
         // Kernel exactness contract: identical clustering, bit for bit.
@@ -125,25 +128,31 @@ fn main() {
     if truncate > 0 {
         let ds = corpus(24_000, rows, k, seed);
         let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, seed ^ 1);
-        let base = KMeansConfig::new(k)
-            .seed(seed)
-            .threads(threads)
-            .batch_size(1024)
-            .epochs(4)
-            .truncate(Some(truncate));
+        let base = || {
+            SphericalKMeans::new(k)
+                .engine(Engine::MiniBatch(MiniBatchParams {
+                    batch_size: 1024,
+                    epochs: 4,
+                    truncate: Some(truncate),
+                    ..Default::default()
+                }))
+                .seed(seed)
+                .threads(threads)
+                .warm_start_centers(init.centers.clone())
+        };
         let sw = Stopwatch::start();
-        let dense = minibatch::run_with_centers(
-            &ds.matrix,
-            init.centers.clone(),
-            &base.clone().kernel(KernelChoice::Dense),
-        );
+        let dense = base()
+            .kernel(KernelChoice::Dense)
+            .fit(&ds.matrix)
+            .expect("bench configuration is valid")
+            .into_result();
         let dense_ms = sw.ms();
         let sw = Stopwatch::start();
-        let inv = minibatch::run_with_centers(
-            &ds.matrix,
-            init.centers.clone(),
-            &base.clone().kernel(KernelChoice::Inverted),
-        );
+        let inv = base()
+            .kernel(KernelChoice::Inverted)
+            .fit(&ds.matrix)
+            .expect("bench configuration is valid")
+            .into_result();
         let inv_ms = sw.ms();
         assert_eq!(dense.assignments, inv.assignments, "minibatch assignments");
         assert_eq!(

@@ -11,7 +11,7 @@
 
 use sphkm::data::synth::SynthConfig;
 use sphkm::init::{seed_centers, InitMethod};
-use sphkm::kmeans::{minibatch, run_with_centers, KMeansConfig, Variant};
+use sphkm::kmeans::{Engine, MiniBatchParams, SphericalKMeans, Variant};
 use sphkm::metrics;
 use sphkm::util::cli::Args;
 use sphkm::util::timer::Stopwatch;
@@ -54,14 +54,14 @@ fn main() {
     let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, seed ^ 1);
 
     let sw = Stopwatch::start();
-    let full = run_with_centers(
-        &ds.matrix,
-        init.centers.clone(),
-        &KMeansConfig::new(k)
-            .variant(Variant::Standard)
-            .threads(threads)
-            .max_iter(max_iter),
-    );
+    let full = SphericalKMeans::new(k)
+        .variant(Variant::Standard)
+        .threads(threads)
+        .max_iter(max_iter)
+        .warm_start_centers(init.centers.clone())
+        .fit(&ds.matrix)
+        .expect("bench configuration is valid")
+        .into_result();
     let full_ms = sw.ms();
     println!(
         "full-batch Standard : obj={:.2}  pc_sims={}  iters={}  converged={}  {:.0} ms",
@@ -72,15 +72,20 @@ fn main() {
         full_ms,
     );
 
-    let cfg = KMeansConfig::new(k)
+    let sw = Stopwatch::start();
+    let mb = SphericalKMeans::new(k)
+        .engine(Engine::MiniBatch(MiniBatchParams {
+            batch_size: batch,
+            epochs,
+            tol,
+            truncate: if truncate == 0 { None } else { Some(truncate) },
+        }))
         .seed(seed)
         .threads(threads)
-        .batch_size(batch)
-        .epochs(epochs)
-        .tol(tol)
-        .truncate(if truncate == 0 { None } else { Some(truncate) });
-    let sw = Stopwatch::start();
-    let mb = minibatch::run_with_centers(&ds.matrix, init.centers.clone(), &cfg);
+        .warm_start_centers(init.centers.clone())
+        .fit(&ds.matrix)
+        .expect("bench configuration is valid")
+        .into_result();
     let mb_ms = sw.ms();
     let gap = metrics::objective_gap(mb.objective, full.objective);
     let ratio =

@@ -13,7 +13,7 @@
 
 use sphkm::data::datasets::{self, Scale};
 use sphkm::init::{seed_centers, InitMethod};
-use sphkm::kmeans::{run_with_centers, KMeansConfig, Variant};
+use sphkm::kmeans::{SphericalKMeans, Variant};
 use sphkm::util::benchkit::{bench, black_box, BenchOpts};
 use sphkm::util::cli::Args;
 
@@ -49,7 +49,7 @@ fn main() {
     ] {
         let mut base_ms = f64::NAN;
         for &t in &threads_grid {
-            let cfg = KMeansConfig::new(k)
+            let est = SphericalKMeans::new(k)
                 .variant(variant)
                 .max_iter(max_iter)
                 .threads(t);
@@ -57,8 +57,12 @@ fn main() {
                 &format!("parallel/{}/threads={t}", variant.name()),
                 opts,
                 || {
-                    let out = run_with_centers(&ds.matrix, init.centers.clone(), &cfg);
-                    black_box(out.objective);
+                    let out = est
+                        .clone()
+                        .warm_start_centers(init.centers.clone())
+                        .fit(&ds.matrix)
+                        .expect("bench configuration is valid");
+                    black_box(out.objective());
                 },
             );
             if t == threads_grid[0] {
@@ -75,17 +79,18 @@ fn main() {
 
     // Determinism spot check (the exactness suite covers this per variant;
     // here it guards the bench itself against measuring diverging runs).
-    let serial = run_with_centers(
-        &ds.matrix,
-        init.centers.clone(),
-        &KMeansConfig::new(k).variant(Variant::SimplifiedHamerly).max_iter(max_iter).threads(1),
-    );
-    let par = run_with_centers(
-        &ds.matrix,
-        init.centers.clone(),
-        &KMeansConfig::new(k).variant(Variant::SimplifiedHamerly).max_iter(max_iter).threads(4),
-    );
-    assert_eq!(serial.assignments, par.assignments, "determinism violation");
-    assert_eq!(serial.objective.to_bits(), par.objective.to_bits());
+    let check = |threads: usize| {
+        SphericalKMeans::new(k)
+            .variant(Variant::SimplifiedHamerly)
+            .max_iter(max_iter)
+            .threads(threads)
+            .warm_start_centers(init.centers.clone())
+            .fit(&ds.matrix)
+            .expect("bench configuration is valid")
+    };
+    let serial = check(1);
+    let par = check(4);
+    assert_eq!(serial.assignments(), par.assignments(), "determinism violation");
+    assert_eq!(serial.objective().to_bits(), par.objective().to_bits());
     println!("# determinism check passed (threads=1 vs threads=4 bit-identical)");
 }

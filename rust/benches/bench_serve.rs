@@ -16,7 +16,7 @@
 //! ```
 
 use sphkm::data::synth::SynthConfig;
-use sphkm::kmeans::{minibatch, KMeansConfig, KernelChoice};
+use sphkm::kmeans::{Engine, KernelChoice, MiniBatchParams, SphericalKMeans};
 use sphkm::model::Model;
 use sphkm::serve::{QueryEngine, ServeConfig, ServeMode};
 use sphkm::util::cli::Args;
@@ -58,17 +58,21 @@ fn main() {
     );
 
     // Train a sparse-centroid model and round-trip it through persistence.
-    let train_cfg = KMeansConfig::new(k)
+    let sw = Stopwatch::start();
+    let fitted = SphericalKMeans::new(k)
+        .engine(Engine::MiniBatch(MiniBatchParams {
+            batch_size: 1024,
+            epochs: 4,
+            truncate: Some(truncate),
+            ..Default::default()
+        }))
         .seed(seed)
         .threads(0)
         .kernel(KernelChoice::Inverted)
-        .batch_size(1024)
-        .epochs(4)
-        .truncate(Some(truncate));
-    let sw = Stopwatch::start();
-    let r = minibatch::run(&ds.matrix, &train_cfg);
-    println!("# trained in {:.0} ms (objective {:.2})", sw.ms(), r.objective);
-    let saved = Model::from_run_named(&r, &train_cfg, "minibatch");
+        .fit(&ds.matrix)
+        .expect("bench configuration is valid");
+    println!("# trained in {:.0} ms (objective {:.2})", sw.ms(), fitted.objective());
+    let saved = fitted.to_model();
     let path =
         std::env::temp_dir().join(format!("sphkm-bench-serve-{}-{seed}.spkm", std::process::id()));
     saved.save(&path).expect("save model");

@@ -8,7 +8,9 @@ use super::report::{fmt_ms, fmt_pct, Table};
 use crate::data::datasets::{self, Scale};
 use crate::data::Dataset;
 use crate::init::{seed_centers, InitMethod};
-use crate::kmeans::{run_with_centers, KMeansConfig, KMeansResult, KernelChoice, Variant};
+use crate::kmeans::{
+    Engine, ExactParams, KMeansResult, KernelChoice, MiniBatchParams, SphericalKMeans, Variant,
+};
 use crate::sparse::DenseMatrix;
 use crate::util::rng::SplitMix64;
 
@@ -122,12 +124,15 @@ fn run_cell(
     initial: DenseMatrix,
     opts: &ExperimentOpts,
 ) -> KMeansResult {
-    let cfg = KMeansConfig::new(k)
+    SphericalKMeans::new(k)
         .variant(variant)
         .max_iter(opts.max_iter)
         .threads(opts.threads)
-        .kernel(opts.kernel.unwrap_or(KernelChoice::Gather));
-    run_with_centers(&ds.matrix, initial, &cfg)
+        .kernel(opts.kernel.unwrap_or(KernelChoice::Gather))
+        .warm_start_centers(initial)
+        .fit(&ds.matrix)
+        .expect("experiment cell configuration is valid")
+        .into_result()
 }
 
 /// The extra beyond-paper baseline: Standard with the dense
@@ -138,12 +143,15 @@ fn run_cell_simd_standard(
     initial: DenseMatrix,
     opts: &ExperimentOpts,
 ) -> KMeansResult {
-    let cfg = KMeansConfig::new(k)
+    SphericalKMeans::new(k)
         .variant(Variant::Standard)
         .max_iter(opts.max_iter)
         .threads(opts.threads)
-        .kernel(KernelChoice::Dense);
-    run_with_centers(&ds.matrix, initial, &cfg)
+        .kernel(KernelChoice::Dense)
+        .warm_start_centers(initial)
+        .fit(&ds.matrix)
+        .expect("experiment cell configuration is valid")
+        .into_result()
 }
 
 /// Uniform initial centers for a cell (shared across variants so the
@@ -534,8 +542,6 @@ pub fn ablation_cc(opts: &ExperimentOpts, k: usize) -> Table {
 /// them removes the initial `O(N·k)` assignment pass. Compares plain vs
 /// pre-initialized runs per variant.
 pub fn ablation_preinit(opts: &ExperimentOpts, k: usize) -> Table {
-    use crate::init::{seed_centers_with_bounds, InitMethod};
-    use crate::kmeans::run_seeded;
     println!("\n== Ablation: bound pre-initialization from k-means++ (k={k}) ==");
     let mut t = Table::new(&[
         "Data set", "Variant", "mode", "ms", "pc sims", "iters",
@@ -558,20 +564,25 @@ pub fn ablation_preinit(opts: &ExperimentOpts, k: usize) -> Table {
                 for rep in 0..opts.reps {
                     let seed = opts.cell_seed(&format!("pre-{}-{k}", ds.name), rep);
                     let sw = crate::util::timer::Stopwatch::start();
-                    let init = seed_centers_with_bounds(&ds.matrix, k, &method, seed);
-                    let cfg = KMeansConfig::new(k)
-                        .variant(variant)
+                    // Seeding runs inside `fit` either way (same seed ⇒
+                    // identical centers); `preinit` flips only the §7
+                    // bound pre-initialization.
+                    let r = SphericalKMeans::new(k)
+                        .engine(Engine::Exact(ExactParams {
+                            variant,
+                            preinit,
+                            ..Default::default()
+                        }))
+                        .init(method)
+                        .seed(seed)
                         .threads(opts.threads)
                         .kernel(opts.kernel.unwrap_or(KernelChoice::Gather))
-                        .max_iter(opts.max_iter);
-                    let r = if preinit {
-                        run_seeded(&ds.matrix, init, &cfg)
-                    } else {
-                        run_with_centers(&ds.matrix, init.centers, &cfg)
-                    };
+                        .max_iter(opts.max_iter)
+                        .fit(&ds.matrix)
+                        .expect("ablation cell configuration is valid");
                     ms += sw.ms();
-                    sims = r.stats.total_point_center();
-                    iters = r.iterations;
+                    sims = r.stats().total_point_center();
+                    iters = r.iterations();
                 }
                 t.row(vec![
                     ds.name.clone(),
@@ -639,16 +650,21 @@ pub fn minibatch(opts: &ExperimentOpts, k: usize) -> Table {
     ]);
 
     for &(batch, truncate) in &[(256usize, None), (1024, None), (1024, Some(128usize))] {
-        let cfg = KMeansConfig::new(k)
+        let sw = crate::util::timer::Stopwatch::start();
+        let r = SphericalKMeans::new(k)
+            .engine(Engine::MiniBatch(MiniBatchParams {
+                batch_size: batch,
+                epochs: 8,
+                tol: 1e-4,
+                truncate,
+            }))
             .seed(opts.seed)
             .threads(opts.threads)
             .kernel(opts.kernel.unwrap_or(KernelChoice::Gather))
-            .batch_size(batch)
-            .epochs(8)
-            .tol(1e-4)
-            .truncate(truncate);
-        let sw = crate::util::timer::Stopwatch::start();
-        let r = crate::kmeans::minibatch::run_with_centers(&ds.matrix, initial.clone(), &cfg);
+            .warm_start_centers(initial.clone())
+            .fit(&ds.matrix)
+            .expect("mini-batch cell configuration is valid")
+            .into_result();
         let label = match truncate {
             Some(m) => format!("MiniBatch b={batch} top-{m}"),
             None => format!("MiniBatch b={batch}"),
@@ -695,22 +711,24 @@ pub fn serve(opts: &ExperimentOpts, k: usize) -> Table {
     }
     .generate(opts.seed);
     let k = k.min(ds.matrix.rows() / 2).max(2);
-    let train_cfg = KMeansConfig::new(k)
+    let fitted = SphericalKMeans::new(k)
+        .engine(Engine::MiniBatch(MiniBatchParams {
+            batch_size: 1024,
+            epochs: 4,
+            truncate: Some(64),
+            ..Default::default()
+        }))
         .seed(opts.seed)
         .threads(opts.threads)
         .kernel(opts.kernel.unwrap_or(KernelChoice::Inverted))
-        .batch_size(1024)
-        .epochs(4)
-        .truncate(Some(64));
-    let r = crate::kmeans::minibatch::run(&ds.matrix, &train_cfg);
+        .fit(&ds.matrix)
+        .expect("serve experiment configuration is valid");
     // Persistence round trip: serve what was loaded, not what was trained.
     // Keyed by pid as well as seed: concurrent runs sharing a seed must
     // not race on the same save/load/remove cycle.
     let path = std::env::temp_dir()
         .join(format!("sphkm-serve-exp-{}-{}.spkm", std::process::id(), opts.seed));
-    Model::from_run_named(&r, &train_cfg, "minibatch")
-        .save(&path)
-        .expect("model save must succeed");
+    fitted.save(&path).expect("model save must succeed");
     let model = Model::load(&path).expect("just-saved model must load");
     let _ = std::fs::remove_file(&path);
     println!(

@@ -83,8 +83,10 @@ pub struct InitOutcome {
     pub chosen: Vec<usize>,
     /// Row-major `N × k` matrix of point-to-seed similarities collected
     /// *during* seeding (k-means++ computes them anyway — the §7 synergy).
-    /// When present, [`crate::kmeans::run_seeded`] initializes all bound
-    /// structures from it and skips the initial `O(N·k)` assignment pass.
+    /// When present, a fit with
+    /// [`ExactParams::preinit`](crate::kmeans::ExactParams) initializes
+    /// all bound structures from it and skips the initial `O(N·k)`
+    /// assignment pass.
     pub sim_matrix: Option<Vec<f32>>,
 }
 

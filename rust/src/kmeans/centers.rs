@@ -104,6 +104,58 @@ impl Centers {
         me
     }
 
+    /// Restore an instance mid-run from persisted training state: the
+    /// centers are adopted **bit-for-bit** (no renormalization — a resumed
+    /// run must see exactly the coordinates the interrupted run saved) and
+    /// the cached f64 sums / counts are the interrupted run's accumulator
+    /// state, so subsequent incremental updates replay the exact
+    /// floating-point sequence an uninterrupted run would have produced.
+    /// All centers start clean with `p(j) = 1` (they have not moved since
+    /// the state was captured).
+    pub(crate) fn restore(
+        centers: DenseMatrix,
+        sums: Vec<f64>,
+        counts: Vec<u64>,
+        kernel: Kernel,
+    ) -> Self {
+        let k = centers.rows();
+        let d = centers.cols();
+        debug_assert_eq!(sums.len(), k * d);
+        debug_assert_eq!(counts.len(), k);
+        let store = match kernel {
+            Kernel::Dense => CenterStore::Dense(DenseMatrix::zeros(d, k)),
+            Kernel::Gather => CenterStore::Gather,
+            Kernel::Inverted => CenterStore::Inverted(InvertedIndex::new(d, k)),
+        };
+        let mut me = Self {
+            k,
+            d,
+            sums,
+            counts,
+            prev: centers.clone(),
+            store,
+            centers,
+            p: vec![1.0; k],
+            dirty: vec![false; k],
+        };
+        me.refresh_store_all();
+        me
+    }
+
+    /// The cached unnormalized per-cluster sums (k×d, row-major) — the
+    /// incremental-update accumulator state a resumable run persists.
+    #[inline]
+    pub(crate) fn sums(&self) -> &[f64] {
+        &self.sums
+    }
+
+    /// Per-cluster point counts, all clusters at once (see
+    /// [`Centers::count`] for a single one).
+    #[inline]
+    pub(crate) fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
     /// The similarity kernel this instance is backing.
     pub fn kernel(&self) -> Kernel {
         match &self.store {

@@ -1,0 +1,884 @@
+//! The crate's front door: the [`SphericalKMeans`] estimator and the
+//! [`FittedModel`] it produces.
+//!
+//! The paper's central observation is that the exact accelerated variants
+//! and their approximate mini-batch cousins are *interchangeable engines
+//! over one similarity substrate* — so the API says exactly that: **one
+//! estimator** owning the shared knobs (k, seed, init, threads, kernel,
+//! iteration budget) plus an [`Engine`] selector whose typed payloads
+//! ([`ExactParams`], [`MiniBatchParams`]) make invalid combinations —
+//! `truncate` on Elkan, `tight_bound` on mini-batch — unrepresentable
+//! instead of silently ignored.
+//!
+//! ```no_run
+//! use sphkm::data::synth::SynthConfig;
+//! use sphkm::kmeans::{Engine, ExactParams, SphericalKMeans, Variant};
+//!
+//! let ds = SynthConfig::small_demo().generate(42);
+//! let fitted = SphericalKMeans::new(8)
+//!     .engine(Engine::Exact(ExactParams {
+//!         variant: Variant::SimplifiedElkan,
+//!         ..Default::default()
+//!     }))
+//!     .seed(1)
+//!     .fit(&ds.matrix)
+//!     .expect("valid configuration");
+//! println!("objective = {}", fitted.objective());
+//! ```
+//!
+//! [`SphericalKMeans::fit`] is **fallible**: misconfigurations (k = 0,
+//! k > n, `batch_size` = 0, negative `tol`, warm-start dimension
+//! mismatches) return a typed [`FitError`] up front instead of panicking
+//! deep inside an engine.
+//!
+//! # Train → persist → serve → resume
+//!
+//! A [`FittedModel`] unifies the training result and the persistence
+//! artifact: it carries the centers, assignments, [`RunStats`], and
+//! training metadata; [`FittedModel::save`] / [`FittedModel::load`]
+//! round-trip it through the `.spkm` format **including the training
+//! state** (the f64 center-sum accumulators, counts, and assignments), so
+//! [`SphericalKMeans::warm_start`] can *resume* an interrupted run — the
+//! resumed trajectory is bit-for-bit the one the uninterrupted run would
+//! have taken, because the incremental-update accumulators are restored
+//! exactly (asserted by the `warm_start` integration suite).
+//! [`FittedModel::query_engine`] bridges straight into the serving layer.
+//!
+//! # Observers
+//!
+//! [`SphericalKMeans::fit_observed`] threads an [`Observer`] through the
+//! exact iteration loop and the mini-batch epochs: after every iteration
+//! it receives an [`IterSnapshot`] and can return
+//! [`ControlFlow::Break`](std::ops::ControlFlow::Break) to stop training
+//! within one iteration — user-side progress reporting and early stopping
+//! without polling.
+
+use std::ops::ControlFlow;
+use std::path::Path;
+
+use super::kernel::DataShape;
+use super::{
+    fit_exact, ExactStart, IterStats, KMeansConfig, KMeansResult, Kernel, KernelChoice, RunStats,
+    Variant,
+};
+use crate::data::Dataset;
+use crate::init::InitMethod;
+use crate::model::{Model, ModelError, TrainingMeta};
+use crate::serve::{QueryEngine, ServeConfig, ServeMode};
+use crate::sparse::{CsrMatrix, DenseMatrix};
+
+/// Engine name recorded as variant provenance for mini-batch runs (which
+/// have no [`Variant`]).
+pub(crate) const MINIBATCH_ENGINE: &str = "minibatch";
+
+/// Parameters of the **exact** full-batch engines — the seven accelerated
+/// variants sharing the exactness contract of [`crate::kmeans`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExactParams {
+    /// Which accelerated variant runs the iteration loop.
+    pub variant: Variant,
+    /// Use the guarded min-p single-bound update instead of the paper's
+    /// Eq. 9 in the Hamerly-bound family (beyond-paper improvement; exact
+    /// either way).
+    pub tight_bound: bool,
+    /// Number of center groups for [`Variant::Yinyang`]; `None` defaults
+    /// to `max(1, k/10)` as in Ding et al. (2015).
+    pub yinyang_groups: Option<usize>,
+    /// §7 synergy: seed with [`crate::init::seed_centers_with_bounds`] and
+    /// pre-initialize the bound structures from the similarities the
+    /// seeding already computed, skipping the initial `O(N·k)` assignment
+    /// pass (only k-means++ collects them; other inits run plainly).
+    pub preinit: bool,
+}
+
+impl Default for ExactParams {
+    /// Simplified Hamerly — the paper's "reasonable default choice"
+    /// across data-set shapes (§6) — with the paper-faithful Eq. 9 bound.
+    fn default() -> Self {
+        Self {
+            variant: Variant::SimplifiedHamerly,
+            tight_bound: false,
+            yinyang_groups: None,
+            preinit: false,
+        }
+    }
+}
+
+/// Parameters of the approximate **mini-batch** engine
+/// ([`crate::kmeans::minibatch`]) for corpora too large for full passes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MiniBatchParams {
+    /// Points sampled per batch (clamped to the row count at run time).
+    pub batch_size: usize,
+    /// Maximum epochs; each draws `ceil(n / batch_size)` batches.
+    pub epochs: usize,
+    /// Convergence tolerance on the largest per-epoch center movement in
+    /// cosine distance (`1 − ⟨c, c'⟩`); must be ≥ 0.
+    pub tol: f64,
+    /// Optional Knittel-style sparse centroids: keep only the `m`
+    /// largest-magnitude coordinates per center, renormalized.
+    pub truncate: Option<usize>,
+}
+
+impl Default for MiniBatchParams {
+    fn default() -> Self {
+        Self {
+            batch_size: 1024,
+            epochs: 10,
+            tol: 1e-4,
+            truncate: None,
+        }
+    }
+}
+
+/// Which training engine a [`SphericalKMeans`] runs: the exact
+/// full-batch family or the approximate mini-batch optimizer. The typed
+/// payloads keep each engine's knobs where they apply — a `truncate` on
+/// Elkan or a `tight_bound` on mini-batch cannot even be expressed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Engine {
+    /// One of the seven exact accelerated variants.
+    Exact(ExactParams),
+    /// The deterministic sharded mini-batch engine.
+    MiniBatch(MiniBatchParams),
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::Exact(ExactParams::default())
+    }
+}
+
+/// Why [`SphericalKMeans::fit`] refused to run. Every rejection happens
+/// **before** any engine starts: a `FitError` never leaves partial state
+/// behind.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum FitError {
+    /// A parameter combination that cannot produce a meaningful run
+    /// (k = 0, k > n, `batch_size` = 0, negative or non-finite `tol`, …).
+    #[error("invalid configuration: {0}")]
+    InvalidConfig(String),
+    /// Warm-start centers live in a different vector space than the data.
+    #[error("dimension mismatch: warm-start centers have {found} columns but the data has {expected}")]
+    DimensionMismatch {
+        /// Columns of the data matrix.
+        expected: usize,
+        /// Columns of the warm-start centers.
+        found: usize,
+    },
+    /// The warm-start model's cluster count disagrees with the
+    /// estimator's `k`.
+    #[error("warm-start k mismatch: the model has {model_k} centers but the estimator wants {k}")]
+    KMismatch {
+        /// Clusters in the warm-start model.
+        model_k: usize,
+        /// Clusters the estimator was configured for.
+        k: usize,
+    },
+}
+
+/// What an [`Observer`] sees after each iteration (exact engines) or
+/// epoch (mini-batch): enough to report progress and decide on early
+/// stopping, cheap enough to hand out unconditionally.
+#[derive(Debug, Clone, Copy)]
+pub struct IterSnapshot<'a> {
+    /// Index of the completed iteration within this `fit` call. Exact
+    /// engines: `0` is the initial full assignment pass (or the bound
+    /// re-initialization pass of a resumed run). Mini-batch: epochs count
+    /// from 0 and the final full assignment pass comes last.
+    pub iteration: usize,
+    /// The iteration's instrumentation counters.
+    pub stats: &'a IterStats,
+    /// True when this iteration concluded convergence (no reassignments /
+    /// center movement under `tol`); the run stops after delivering it.
+    pub converged: bool,
+    /// Mini-batch epochs only: the largest per-center movement of the
+    /// epoch in cosine distance (the quantity `tol` tests). `None` for
+    /// exact iterations and the final mini-batch assignment pass.
+    pub center_shift: Option<f64>,
+}
+
+/// Per-iteration hook threaded through every engine's loop by
+/// [`SphericalKMeans::fit_observed`]. Return
+/// [`ControlFlow::Break`](std::ops::ControlFlow::Break) to stop training
+/// after the current iteration — the fit still returns a complete
+/// [`FittedModel`] (marked unconverged) that can be saved and resumed.
+///
+/// Any `FnMut(&IterSnapshot) -> ControlFlow<()>` closure is an observer.
+pub trait Observer {
+    /// Called once per completed iteration/epoch, in order.
+    fn on_iteration(&mut self, snapshot: &IterSnapshot<'_>) -> ControlFlow<()>;
+}
+
+impl<F> Observer for F
+where
+    F: FnMut(&IterSnapshot<'_>) -> ControlFlow<()>,
+{
+    fn on_iteration(&mut self, snapshot: &IterSnapshot<'_>) -> ControlFlow<()> {
+        self(snapshot)
+    }
+}
+
+/// Resumable training state: the exact accumulators a run needs to
+/// continue as if it had never stopped. The exact engines maintain center
+/// sums *incrementally* (the paper's optimization iii), so the f32
+/// centers alone cannot reproduce the trajectory — the f64 sums, counts,
+/// and current assignments are what make a resumed run bit-identical to
+/// an uninterrupted one. Persisted by [`FittedModel::save`] as the
+/// version-2 `.spkm` training-state section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainState {
+    /// Cumulative optimization steps across all fits of this lineage:
+    /// assignment iterations (exact) or epochs (mini-batch — what the
+    /// resumed batch sampler fast-forwards past).
+    pub steps_done: u64,
+    /// Whether the last fit converged.
+    pub converged: bool,
+    /// Assignment per training row at capture time.
+    pub assignments: Vec<u32>,
+    /// Per-cluster point counts (exact: members; mini-batch: folds).
+    pub counts: Vec<u64>,
+    /// Unnormalized per-cluster coordinate sums (k×d, row-major f64) —
+    /// the incremental-update accumulators.
+    pub sums: Vec<f64>,
+    /// The mini-batch hyperparameters the state was trained under
+    /// (`None` for exact engines). A bit-identical continuation must use
+    /// the same `batch_size` (the sampler fast-forward depends on it)
+    /// and `truncate` (the sparse-centroid invariant); persisting them
+    /// lets `cluster --resume` default to the original schedule instead
+    /// of whatever the CLI defaults happen to be.
+    pub minibatch: Option<MiniBatchParams>,
+}
+
+/// How a [`SphericalKMeans`] starts: from scratch, from explicit centers,
+/// or from a prior fitted model (with resumable state when available).
+#[derive(Debug, Clone)]
+enum Start {
+    /// Seed with the configured [`InitMethod`].
+    Fresh,
+    /// Explicit initial centers (rows are normalized) — a fresh run that
+    /// skips seeding; what the exactness tests and experiment drivers use
+    /// so every variant sees identical initial centers.
+    Centers(DenseMatrix),
+    /// Continue from a fitted model: its centers, plus its training state
+    /// when the engines match (bit-identical resume).
+    Warm {
+        centers: DenseMatrix,
+        engine: String,
+        state: Option<TrainState>,
+    },
+}
+
+/// The estimator: shared knobs + a typed [`Engine`]. Build with the
+/// consuming `#[must_use]` setters, then call [`SphericalKMeans::fit`].
+/// See the [module docs](self) for the design.
+#[derive(Debug, Clone)]
+pub struct SphericalKMeans {
+    k: usize,
+    engine: Engine,
+    init: InitMethod,
+    max_iter: usize,
+    seed: u64,
+    threads: usize,
+    kernel: KernelChoice,
+    start: Start,
+}
+
+impl SphericalKMeans {
+    /// Estimator for `k` clusters with defaults: the exact Simplified
+    /// Hamerly engine, uniform init, seed 0, 200-iteration cap, serial
+    /// execution, auto kernel.
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            engine: Engine::default(),
+            init: InitMethod::Uniform,
+            max_iter: 200,
+            seed: 0,
+            threads: 1,
+            kernel: KernelChoice::Auto,
+            start: Start::Fresh,
+        }
+    }
+
+    /// Select the training engine (see [`Engine`]).
+    #[must_use]
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Shorthand: the exact engine running `variant` with default
+    /// [`ExactParams`] otherwise.
+    #[must_use]
+    pub fn variant(mut self, variant: Variant) -> Self {
+        self.engine = Engine::Exact(ExactParams {
+            variant,
+            ..match self.engine {
+                Engine::Exact(p) => p,
+                Engine::MiniBatch(_) => ExactParams::default(),
+            }
+        });
+        self
+    }
+
+    /// Set the seeding method.
+    #[must_use]
+    pub fn init(mut self, init: InitMethod) -> Self {
+        self.init = init;
+        self
+    }
+
+    /// Set the RNG seed (seeding and mini-batch sampling substreams).
+    #[must_use]
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Iteration budget **per fit call**: assignment iterations for the
+    /// exact engines. (The mini-batch engine's budget is
+    /// [`MiniBatchParams::epochs`].) A resumed fit gets a fresh budget.
+    #[must_use]
+    pub fn max_iter(mut self, max_iter: usize) -> Self {
+        self.max_iter = max_iter;
+        self
+    }
+
+    /// Worker threads for the sharded phases: `0` = all cores, `1`
+    /// (default) = serial. Results are bit-identical for every setting.
+    #[must_use]
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Select the similarity-kernel backend
+    /// (see [`crate::kmeans::kernel`]).
+    #[must_use]
+    pub fn kernel(mut self, kernel: KernelChoice) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Start from explicit initial centers instead of seeding (rows are
+    /// normalized). Used wherever several runs must share identical
+    /// starting points — the exactness tests, the experiment drivers.
+    #[must_use]
+    pub fn warm_start_centers(mut self, centers: DenseMatrix) -> Self {
+        self.start = Start::Centers(centers);
+        self
+    }
+
+    /// Continue from a prior [`FittedModel`] — persisted or in-memory.
+    /// When the model carries training state for the *same engine kind*
+    /// (exact ↔ exact, mini-batch ↔ mini-batch), the data has the same
+    /// row count, and — for mini-batch — the configured `batch_size` and
+    /// `truncate` match the persisted schedule, the fit **resumes**:
+    /// accumulators are restored and the continued trajectory is
+    /// bit-identical to an uninterrupted run. Otherwise the model's
+    /// centers serve as plain initial centers (a legitimate transfer
+    /// workflow onto new data or a new schedule).
+    #[must_use]
+    pub fn warm_start(mut self, model: &FittedModel) -> Self {
+        self.start = Start::Warm {
+            centers: model.centers().clone(),
+            engine: model.meta().variant.clone(),
+            state: model.state.clone(),
+        };
+        self
+    }
+
+    /// Validate the configuration against the data shape. Everything
+    /// [`FitError`] documents is caught here, before any engine starts.
+    fn validate(&self, data: &CsrMatrix) -> Result<(), FitError> {
+        let n = data.rows();
+        if self.k == 0 {
+            return Err(FitError::InvalidConfig("k must be at least 1".into()));
+        }
+        if self.k > n {
+            return Err(FitError::InvalidConfig(format!(
+                "k = {} exceeds the {n} data rows",
+                self.k
+            )));
+        }
+        match &self.engine {
+            Engine::Exact(p) => {
+                if p.yinyang_groups == Some(0) {
+                    return Err(FitError::InvalidConfig(
+                        "yinyang_groups must be at least 1 when set".into(),
+                    ));
+                }
+            }
+            Engine::MiniBatch(p) => {
+                if p.batch_size == 0 {
+                    return Err(FitError::InvalidConfig("batch_size must be at least 1".into()));
+                }
+                if !p.tol.is_finite() || p.tol < 0.0 {
+                    return Err(FitError::InvalidConfig(format!(
+                        "tol must be finite and non-negative, got {}",
+                        p.tol
+                    )));
+                }
+                if p.truncate == Some(0) {
+                    return Err(FitError::InvalidConfig(
+                        "truncate must keep at least 1 coordinate (use None for dense centers)"
+                            .into(),
+                    ));
+                }
+            }
+        }
+        let centers = match &self.start {
+            Start::Fresh => None,
+            Start::Centers(c) => Some(c),
+            Start::Warm { centers, .. } => Some(centers),
+        };
+        if let Some(c) = centers {
+            if c.cols() != data.cols() {
+                return Err(FitError::DimensionMismatch {
+                    expected: data.cols(),
+                    found: c.cols(),
+                });
+            }
+            if c.rows() != self.k {
+                return Err(FitError::KMismatch { model_k: c.rows(), k: self.k });
+            }
+        }
+        Ok(())
+    }
+
+    /// The internal [`KMeansConfig`] every engine still consumes — the
+    /// single place the typed estimator surface maps onto it.
+    fn config(&self) -> KMeansConfig {
+        let mut cfg = KMeansConfig::new(self.k)
+            .init(self.init)
+            .seed(self.seed)
+            .max_iter(self.max_iter)
+            .threads(self.threads)
+            .kernel(self.kernel);
+        match &self.engine {
+            Engine::Exact(p) => {
+                cfg = cfg.variant(p.variant).tight_bound(p.tight_bound);
+                cfg.yinyang_groups = p.yinyang_groups;
+            }
+            Engine::MiniBatch(p) => {
+                cfg = cfg
+                    .batch_size(p.batch_size)
+                    .epochs(p.epochs)
+                    .tol(p.tol)
+                    .truncate(p.truncate);
+            }
+        }
+        cfg
+    }
+
+    /// Cluster `data` (rows must be unit-normalized — see
+    /// [`CsrMatrix::normalize_rows`]). This is the **only** entry point
+    /// to every engine: all seven exact variants and the mini-batch
+    /// optimizer run behind it.
+    pub fn fit(&self, data: &CsrMatrix) -> Result<FittedModel, FitError> {
+        self.fit_inner(data, None)
+    }
+
+    /// Like [`SphericalKMeans::fit`], with an [`Observer`] notified after
+    /// every iteration/epoch (progress reporting, early stopping).
+    pub fn fit_observed(
+        &self,
+        data: &CsrMatrix,
+        observer: &mut dyn Observer,
+    ) -> Result<FittedModel, FitError> {
+        self.fit_inner(data, Some(observer))
+    }
+
+    fn fit_inner(
+        &self,
+        data: &CsrMatrix,
+        obs: Option<&mut dyn Observer>,
+    ) -> Result<FittedModel, FitError> {
+        self.validate(data)?;
+        let cfg = self.config();
+        let is_minibatch = matches!(self.engine, Engine::MiniBatch(_));
+        // Resolve the start into (initial centers, optional preinit
+        // similarity matrix, optional resume state).
+        let mut sim_matrix = None;
+        let mut resume: Option<TrainState> = None;
+        let centers = match &self.start {
+            Start::Fresh => match &self.engine {
+                Engine::Exact(p) if p.preinit => {
+                    let init =
+                        crate::init::seed_centers_with_bounds(data, self.k, &self.init, self.seed);
+                    sim_matrix = init.sim_matrix;
+                    init.centers
+                }
+                _ => crate::init::seed_centers(data, self.k, &self.init, self.seed).centers,
+            },
+            Start::Centers(c) => c.clone(),
+            Start::Warm { centers, engine, state } => {
+                let engine_matches = (engine == MINIBATCH_ENGINE) == is_minibatch;
+                if engine_matches {
+                    // Resume only with state whose accumulators match this
+                    // problem's shape exactly (rows, and k×d sums/counts —
+                    // a hand-built model could carry anything), and — for
+                    // mini-batch — whose persisted schedule agrees on the
+                    // trajectory-defining knobs: the sampler fast-forward
+                    // depends on `batch_size` and the sparse-centroid
+                    // invariant on `truncate` (`epochs`/`tol` are stopping
+                    // budgets and may differ). Everything else is a plain
+                    // transfer warm start — engines never see state they
+                    // cannot continue bit-identically.
+                    // (`as_ref().filter(…).cloned()`: the k·d f64 sums are
+                    // only copied when the state will actually be used.)
+                    resume = state
+                        .as_ref()
+                        .filter(|s| {
+                            let shape_ok = s.assignments.len() == data.rows()
+                                && s.counts.len() == self.k
+                                && s.sums.len() == self.k * data.cols();
+                            let schedule_ok = match (&self.engine, s.minibatch) {
+                                (Engine::MiniBatch(cur), Some(orig)) => {
+                                    cur.batch_size == orig.batch_size
+                                        && cur.truncate == orig.truncate
+                                }
+                                (Engine::MiniBatch(_), None) => false,
+                                (Engine::Exact(_), _) => true,
+                            };
+                            shape_ok && schedule_ok
+                        })
+                        .cloned();
+                }
+                centers.clone()
+            }
+        };
+        let prior_steps = resume.as_ref().map_or(0, |s| s.steps_done);
+        let (result, state) = match &self.engine {
+            Engine::Exact(_) => fit_exact(
+                data,
+                &cfg,
+                ExactStart { centers, sim_matrix, resume, prior_steps, obs },
+            ),
+            Engine::MiniBatch(_) => {
+                super::minibatch::fit_minibatch(data, &cfg, centers, resume, prior_steps, obs)
+            }
+        };
+        let meta = TrainingMeta {
+            variant: if is_minibatch {
+                MINIBATCH_ENGINE.to_string()
+            } else {
+                cfg.variant.name().to_string()
+            },
+            kernel: result.kernel.name().to_string(),
+            iterations: state.steps_done,
+            objective: result.objective,
+            seed: self.seed,
+        };
+        Ok(FittedModel { result, meta, state: Some(state) })
+    }
+
+    /// Convenience: fit a [`Dataset`] (which carries its matrix plus
+    /// metadata).
+    pub fn fit_dataset(&self, ds: &Dataset) -> Result<FittedModel, FitError> {
+        self.fit(&ds.matrix)
+    }
+}
+
+/// A fitted spherical k-means model: the unified successor of the old
+/// `KMeansResult` + `Model` pair. It carries the full training outcome
+/// (centers, assignments, objective, [`RunStats`]), persists itself
+/// bit-exactly — training state included, so a saved model can *resume*
+/// — and opens directly into the serving layer. See the
+/// [module docs](self).
+#[derive(Debug, Clone)]
+pub struct FittedModel {
+    result: KMeansResult,
+    meta: TrainingMeta,
+    state: Option<TrainState>,
+}
+
+impl FittedModel {
+    /// Number of clusters.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.result.centers.rows()
+    }
+
+    /// Dimensionality (vocabulary size) the centers live in.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.result.centers.cols()
+    }
+
+    /// The unit-normalized centers (k × d).
+    #[inline]
+    pub fn centers(&self) -> &DenseMatrix {
+        &self.result.centers
+    }
+
+    /// Cluster assignment per training row. Empty for a model loaded
+    /// from a file without training state.
+    #[inline]
+    pub fn assignments(&self) -> &[u32] {
+        &self.result.assignments
+    }
+
+    /// The spherical k-means objective `Σᵢ (1 − ⟨xᵢ, c(a(i))⟩)` (lower is
+    /// better).
+    #[inline]
+    pub fn objective(&self) -> f64 {
+        self.result.objective
+    }
+
+    /// Mean cosine similarity of points to their centers (higher is
+    /// better).
+    #[inline]
+    pub fn mean_similarity(&self) -> f64 {
+        self.result.mean_similarity
+    }
+
+    /// Iterations (exact) or epochs (mini-batch) this fit performed.
+    #[inline]
+    pub fn iterations(&self) -> usize {
+        self.result.iterations
+    }
+
+    /// True if the fit converged within its budget.
+    #[inline]
+    pub fn converged(&self) -> bool {
+        self.result.converged
+    }
+
+    /// The similarity-kernel backend the run resolved and executed.
+    #[inline]
+    pub fn kernel(&self) -> Kernel {
+        self.result.kernel
+    }
+
+    /// Per-iteration instrumentation of this fit. Empty for a model
+    /// loaded from a file.
+    #[inline]
+    pub fn stats(&self) -> &RunStats {
+        &self.result.stats
+    }
+
+    /// Training provenance (engine, kernel, cumulative steps, seed).
+    #[inline]
+    pub fn meta(&self) -> &TrainingMeta {
+        &self.meta
+    }
+
+    /// The resumable training state, when this model carries one (fits
+    /// always do; loads only from state-bearing files).
+    #[inline]
+    pub fn state(&self) -> Option<&TrainState> {
+        self.state.as_ref()
+    }
+
+    /// The raw training result — the legacy `KMeansResult` view the
+    /// deprecated `run*` shims return.
+    #[inline]
+    pub fn result(&self) -> &KMeansResult {
+        &self.result
+    }
+
+    /// Unwrap into the legacy `KMeansResult`.
+    pub fn into_result(self) -> KMeansResult {
+        self.result
+    }
+
+    /// The persistence-layer [`Model`] view: centers + metadata +
+    /// training state.
+    pub fn to_model(&self) -> Model {
+        Model::new(self.result.centers.clone(), self.meta.clone()).with_state(self.state.clone())
+    }
+
+    /// Serialize to `path` in the `.spkm` format, **training state
+    /// included** (version-2 layout — see [`crate::model`]), so the file
+    /// can be loaded and resumed via [`SphericalKMeans::warm_start`].
+    pub fn save(&self, path: &Path) -> Result<(), ModelError> {
+        self.to_model().save(path)
+    }
+
+    /// Load a model saved by [`FittedModel::save`] (or a legacy
+    /// state-free [`Model::save`] file). Assignments and the resume
+    /// state are restored when the file carries them; per-iteration
+    /// [`RunStats`] are not persisted and come back empty.
+    pub fn load(path: &Path) -> Result<Self, ModelError> {
+        Ok(Self::from_model(Model::load(path)?))
+    }
+
+    /// Adopt a persistence-layer [`Model`] (e.g. one already loaded for
+    /// serving) as a fitted model.
+    pub fn from_model(model: Model) -> Self {
+        let meta = model.meta().clone();
+        let state = model.state().cloned();
+        let centers = model.centers().clone();
+        let n = state.as_ref().map_or(0, |s| s.assignments.len());
+        // Reuse the shared kernel parser (aliases included); anything
+        // unrecognized — or a hypothetical stored "auto" — reports the
+        // zero-structure gather backend rather than guessing.
+        let kernel = match meta.kernel.parse::<KernelChoice>() {
+            Ok(KernelChoice::Dense) => Kernel::Dense,
+            Ok(KernelChoice::Inverted) => Kernel::Inverted,
+            _ => Kernel::Gather,
+        };
+        let result = KMeansResult {
+            assignments: state.as_ref().map(|s| s.assignments.clone()).unwrap_or_default(),
+            mean_similarity: if n > 0 {
+                1.0 - meta.objective / n as f64
+            } else {
+                0.0
+            },
+            objective: meta.objective,
+            iterations: meta.iterations as usize,
+            converged: state.as_ref().is_some_and(|s| s.converged),
+            kernel,
+            centers,
+            stats: RunStats::default(),
+        };
+        Self { result, meta, state }
+    }
+
+    /// Open this model for serving: a [`QueryEngine`] answering top-p
+    /// nearest-center queries against the frozen centers. `mode` picks
+    /// the traversal ([`ServeMode::Auto`] resolves from the centers'
+    /// density); batches shard across all cores.
+    pub fn query_engine(&self, mode: ServeMode) -> QueryEngine {
+        // Serving needs no training state — hand over a stateless model.
+        let model = Model::new(self.result.centers.clone(), self.meta.clone());
+        QueryEngine::new(model, &ServeConfig { mode, threads: 0 })
+    }
+
+    /// The problem shape the serving Auto heuristic reads — exposed so
+    /// callers can inspect what [`ServeMode::Auto`] would resolve to.
+    pub fn serve_shape(&self) -> DataShape {
+        let nnz = self
+            .result
+            .centers
+            .data()
+            .iter()
+            .filter(|v| v.to_bits() != 0)
+            .count();
+        DataShape::of_centers(self.d(), self.k(), nnz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthConfig;
+
+    fn data() -> CsrMatrix {
+        SynthConfig::small_demo().generate(3).matrix
+    }
+
+    #[test]
+    fn rejects_invalid_configurations() {
+        let m = data();
+        let n = m.rows();
+        // k = 0 and k > n are invalid for every engine.
+        assert!(matches!(
+            SphericalKMeans::new(0).fit(&m),
+            Err(FitError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            SphericalKMeans::new(n + 1).fit(&m),
+            Err(FitError::InvalidConfig(_))
+        ));
+        // Mini-batch knobs.
+        let mb = |p: MiniBatchParams| {
+            SphericalKMeans::new(4)
+                .engine(Engine::MiniBatch(p))
+                .fit(&m)
+        };
+        assert!(matches!(
+            mb(MiniBatchParams { batch_size: 0, ..Default::default() }),
+            Err(FitError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            mb(MiniBatchParams { tol: -1e-3, ..Default::default() }),
+            Err(FitError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            mb(MiniBatchParams { tol: f64::NAN, ..Default::default() }),
+            Err(FitError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            mb(MiniBatchParams { truncate: Some(0), ..Default::default() }),
+            Err(FitError::InvalidConfig(_))
+        ));
+        // Exact knobs.
+        assert!(matches!(
+            SphericalKMeans::new(4)
+                .engine(Engine::Exact(ExactParams {
+                    yinyang_groups: Some(0),
+                    ..Default::default()
+                }))
+                .fit(&m),
+            Err(FitError::InvalidConfig(_))
+        ));
+        // Warm-start shape mismatches.
+        let bad_d = DenseMatrix::zeros(4, m.cols() + 1);
+        assert_eq!(
+            SphericalKMeans::new(4).warm_start_centers(bad_d).fit(&m).unwrap_err(),
+            FitError::DimensionMismatch { expected: m.cols(), found: m.cols() + 1 }
+        );
+        let bad_k = DenseMatrix::zeros(5, m.cols());
+        assert_eq!(
+            SphericalKMeans::new(4).warm_start_centers(bad_k).fit(&m).unwrap_err(),
+            FitError::KMismatch { model_k: 5, k: 4 }
+        );
+    }
+
+    #[test]
+    fn fit_produces_consistent_model() {
+        let m = data();
+        let fitted = SphericalKMeans::new(6).seed(7).fit(&m).unwrap();
+        assert_eq!(fitted.k(), 6);
+        assert_eq!(fitted.d(), m.cols());
+        assert_eq!(fitted.assignments().len(), m.rows());
+        assert!(fitted.converged());
+        assert_eq!(fitted.meta().variant, "Simp.Hamerly");
+        let st = fitted.state().expect("fits carry state");
+        assert_eq!(st.assignments, fitted.assignments());
+        assert_eq!(st.steps_done as usize, fitted.iterations());
+        assert_eq!(st.counts.iter().sum::<u64>(), m.rows() as u64);
+        // The objective matches a recomputation from the artifacts.
+        let recomputed =
+            crate::metrics::objective(&m, fitted.assignments(), fitted.centers());
+        assert!((recomputed - fitted.objective()).abs() < 1e-9 * (1.0 + fitted.objective()));
+    }
+
+    #[test]
+    fn observer_sees_every_iteration_and_can_stop() {
+        let m = data();
+        // Count iterations of an unobserved run first.
+        let full = SphericalKMeans::new(5).seed(11).fit(&m).unwrap();
+        let total = full.stats().iters.len();
+        assert!(total >= 3, "need a few iterations for the test");
+        // A pass-through observer sees every iteration, in order.
+        let mut seen = Vec::new();
+        let mut obs = |s: &IterSnapshot<'_>| {
+            seen.push(s.iteration);
+            ControlFlow::Continue(())
+        };
+        let observed = SphericalKMeans::new(5)
+            .seed(11)
+            .fit_observed(&m, &mut obs)
+            .unwrap();
+        assert_eq!(seen, (0..total).collect::<Vec<_>>());
+        assert_eq!(observed.assignments(), full.assignments());
+        // Early stop: break after iteration 1 → at most 2 entries.
+        let mut stopper = |s: &IterSnapshot<'_>| {
+            if s.iteration >= 1 {
+                ControlFlow::Break(())
+            } else {
+                ControlFlow::Continue(())
+            }
+        };
+        let stopped = SphericalKMeans::new(5)
+            .seed(11)
+            .fit_observed(&m, &mut stopper)
+            .unwrap();
+        assert_eq!(stopped.stats().iters.len(), 2, "halts within one iteration");
+        assert!(!stopped.converged());
+    }
+}

@@ -21,18 +21,21 @@ use crate::util::timer::Stopwatch;
 
 /// Shared implementation: `use_s_test = true` for full Hamerly,
 /// `false` for Simplified Hamerly (§5.4).
-pub(crate) fn run_impl(ctx: &mut Ctx<'_>, cfg: &KMeansConfig, use_s_test: bool) -> bool {
+pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bool) -> bool {
     let n = ctx.data.rows();
     let k = ctx.k;
     let mut l = vec![0.0f64; n];
     let mut u = vec![0.0f64; n];
 
-    {
+    let stop = {
         let states = bound_states(&ctx.plan, &mut l, 1, &mut u, 1);
         ctx.initial_assignment(false, states, |(l, u), li, _bj, best, second, _| {
             l[li] = best;
             u[li] = second;
-        });
+        })
+    };
+    if stop {
+        return false;
     }
     ctx.stats.bound_bytes = 2 * n * std::mem::size_of::<f64>();
 
@@ -149,16 +152,18 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_>, cfg: &KMeansConfig, use_s_test: bool) 
 
         if iter.reassignments == 0 {
             iter.wall_ms = sw.ms();
-            ctx.stats.iters.push(iter);
+            ctx.push_iter(iter, true);
             return true;
         }
         iter.sims_center_center += ctx.centers.update();
         iter.wall_ms = sw.ms();
-        ctx.stats.iters.push(iter);
+        if ctx.push_iter(iter, false) {
+            return false;
+        }
     }
     false
 }
 
-pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
+pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
     run_impl(ctx, cfg, true)
 }

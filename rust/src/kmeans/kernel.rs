@@ -194,6 +194,21 @@ impl Kernel {
     }
 }
 
+impl std::fmt::Display for KernelChoice {
+    /// The CLI/report spelling of [`KernelChoice::name`]; round-trips
+    /// through [`FromStr`](std::str::FromStr).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::fmt::Display for Kernel {
+    /// The report spelling of [`Kernel::name`].
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 impl std::str::FromStr for KernelChoice {
     type Err = String;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
@@ -270,6 +285,12 @@ mod tests {
             KernelChoice::Inverted,
         ] {
             assert!(!c.name().is_empty());
+            // Display ↔ FromStr round trip, exhaustively.
+            assert_eq!(c.to_string(), c.name());
+            assert_eq!(c.to_string().parse::<KernelChoice>().unwrap(), c);
+        }
+        for k in [Kernel::Dense, Kernel::Gather, Kernel::Inverted] {
+            assert_eq!(k.to_string(), k.name());
         }
         assert_eq!(KernelChoice::default(), KernelChoice::Auto);
     }

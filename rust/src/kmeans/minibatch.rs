@@ -13,12 +13,19 @@
 //! fewer point×center similarities (`bench_minibatch` demonstrates the
 //! trade on a 100k-row corpus).
 //!
+//! The engine is selected through the estimator front door:
+//! [`Engine::MiniBatch`](super::Engine) with typed
+//! [`MiniBatchParams`](super::MiniBatchParams) (`batch_size`, `epochs`,
+//! `tol`, `truncate`) — it is deliberately *not* a
+//! [`Variant`](super::Variant), because it does not satisfy the exactness
+//! contract of the full-batch family.
+//!
 //! **Determinism.** Results are bit-identical for every
-//! [`KMeansConfig::threads`] setting, by the same reasoning as the exact
+//! `threads` setting, by the same reasoning as the exact
 //! variants' shard contract:
 //!
 //! 1. Batches are sampled on the coordinating thread from a dedicated
-//!    [`Xoshiro256`] substream of [`KMeansConfig::seed`] — the sequence
+//!    [`Xoshiro256`] substream of the seed — the sequence
 //!    never observes worker scheduling.
 //! 2. Batch assignment runs sharded over the batch with **frozen**
 //!    centers: each sampled point's nearest center is a pure function of
@@ -28,7 +35,13 @@
 //!    ([`Centers::update_partial`]) walks centers in ascending index
 //!    order.
 //!
-//! **Truncation.** With [`KMeansConfig::truncate`]` = Some(m)` every
+//! A **resumed** run ([`super::SphericalKMeans::warm_start`]) restores the
+//! fold accumulators (sums, counts) bit-for-bit and fast-forwards the
+//! batch-sampling substream past the epochs already taken, so
+//! interrupted + resumed training draws exactly the batches — and folds
+//! exactly the floating-point sequence — an uninterrupted run would have.
+//!
+//! **Truncation.** With `truncate = Some(m)` every
 //! recomputed center keeps only its `m` largest-magnitude coordinates
 //! (renormalized to the sphere), bounding each center's support as in
 //! Knittel et al.'s sparsified centroids. Combined with the inverted-file
@@ -40,22 +53,32 @@
 //! `nnz(row)·k`.
 //!
 //! One epoch draws `ceil(n / batch_size)` distinct-sample batches (one
-//! corpus-worth); the run stops after [`KMeansConfig::epochs`] epochs or
-//! as soon as no center moved more than [`KMeansConfig::tol`] (cosine
-//! distance) across a whole epoch. A final sharded full assignment pass
+//! corpus-worth); the run stops after the configured epochs, as soon as no
+//! center moved more than `tol` (cosine distance) across a whole epoch, or
+//! when an [`Observer`] breaks. A final sharded full assignment pass
 //! produces the reported assignments and objective.
 //!
 //! ```no_run
 //! use sphkm::data::synth::SynthConfig;
-//! use sphkm::kmeans::{minibatch, KMeansConfig};
+//! use sphkm::kmeans::{Engine, MiniBatchParams, SphericalKMeans};
 //! let ds = SynthConfig::small_demo().generate(1);
-//! let cfg = KMeansConfig::new(8).batch_size(256).epochs(8).threads(0);
-//! let r = minibatch::run(&ds.matrix, &cfg);
-//! println!("approx objective = {}", r.objective);
+//! let fitted = SphericalKMeans::new(8)
+//!     .engine(Engine::MiniBatch(MiniBatchParams {
+//!         batch_size: 256,
+//!         epochs: 8,
+//!         ..Default::default()
+//!     }))
+//!     .threads(0)
+//!     .fit(&ds.matrix)
+//!     .expect("valid configuration");
+//! println!("approx objective = {}", fitted.objective());
 //! ```
 
 use super::kernel::DataShape;
-use super::{Centers, IterStats, KMeansConfig, KMeansResult, RunStats, SimView};
+use super::{
+    Centers, IterSnapshot, IterStats, KMeansConfig, KMeansResult, Observer, RunStats, SimView,
+    TrainState,
+};
 use crate::runtime::parallel::{split_mut, Plan, Pool};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use crate::util::rng::Xoshiro256;
@@ -68,24 +91,54 @@ const BATCH_STREAM: u64 = 0x4D42_5348; // "MBSH"
 
 /// Cluster `data` (rows must be unit-normalized) with the mini-batch
 /// engine, seeding initial centers with [`KMeansConfig::init`].
+#[deprecated(
+    since = "0.2.0",
+    note = "use `SphericalKMeans::fit` with `Engine::MiniBatch` (see the README migration table)"
+)]
 pub fn run(data: &CsrMatrix, cfg: &KMeansConfig) -> KMeansResult {
     let init = crate::init::seed_centers(data, cfg.k, &cfg.init, cfg.seed);
-    run_with_centers(data, init.centers, cfg)
+    minibatch_shim(data, init.centers, cfg)
 }
 
 /// Mini-batch clustering from explicit initial centers (rows will be
-/// normalized) — the entry point the benchmarks and tests use so the
-/// full-batch baseline sees identical initial centers.
+/// normalized).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `SphericalKMeans::fit` with `Engine::MiniBatch` and `warm_start_centers` \
+            (see the README migration table)"
+)]
 pub fn run_with_centers(
     data: &CsrMatrix,
     initial_centers: DenseMatrix,
     cfg: &KMeansConfig,
 ) -> KMeansResult {
-    assert_eq!(initial_centers.rows(), cfg.k, "initial centers vs k");
-    assert_eq!(initial_centers.cols(), data.cols(), "center dimensionality");
+    minibatch_shim(data, initial_centers, cfg)
+}
+
+/// Shared body of the deprecated mini-batch shims: the old entry points'
+/// assertions, then the consolidated [`fit_minibatch`] path (bit-identical
+/// to the estimator — asserted by the `shims` integration suite).
+fn minibatch_shim(data: &CsrMatrix, centers: DenseMatrix, cfg: &KMeansConfig) -> KMeansResult {
+    assert_eq!(centers.rows(), cfg.k, "initial centers vs k");
+    assert_eq!(centers.cols(), data.cols(), "center dimensionality");
     assert!(cfg.k >= 1, "need at least one cluster");
     assert!(cfg.batch_size >= 1, "batch size must be positive");
+    fit_minibatch(data, cfg, centers, None, 0, None).0
+}
 
+/// Run one mini-batch fit. The consolidated internal path behind
+/// [`super::SphericalKMeans::fit`] and the deprecated shims above.
+/// `resume` restores an interrupted run's accumulators (see the
+/// [module docs](self)); `prior_steps` is the epoch count the restored
+/// batch sampler fast-forwards past.
+pub(crate) fn fit_minibatch(
+    data: &CsrMatrix,
+    cfg: &KMeansConfig,
+    initial_centers: DenseMatrix,
+    resume: Option<TrainState>,
+    prior_steps: u64,
+    mut obs: Option<&mut dyn Observer>,
+) -> (KMeansResult, TrainState) {
     let n = data.rows();
     let k = cfg.k;
     let b = cfg.batch_size.min(n.max(1));
@@ -94,17 +147,42 @@ pub fn run_with_centers(
     // sparse centroids cap the center density, which is exactly the regime
     // the inverted-file backend exists for.
     let kernel = cfg.kernel.resolve(&DataShape::of(data, k, cfg.truncate));
-    let mut centers = Centers::from_initial_for(initial_centers, kernel);
-    if let Some(m) = cfg.truncate {
-        // Establish the m-sparse invariant on the initial centers too.
-        centers.truncate_centers(m);
-    }
+    let resuming = resume.is_some();
+    let (mut centers, mut assign) = match resume {
+        Some(state) => (
+            // Bit-for-bit restore of the fold accumulators; the centers
+            // already satisfy any truncation invariant they were trained
+            // under, so nothing is renormalized or re-truncated here.
+            Centers::restore(initial_centers, state.sums, state.counts, kernel),
+            state.assignments,
+        ),
+        None => {
+            let mut centers = Centers::from_initial_for(initial_centers, kernel);
+            if let Some(m) = cfg.truncate {
+                // Establish the m-sparse invariant on the initial centers.
+                centers.truncate_centers(m);
+            }
+            (centers, vec![0u32; n])
+        }
+    };
     // A corpus whose *largest* plan (the final full pass) is a single
     // shard can never use more than one worker — skip thread-pool
-    // construction, as `Ctx::new` does for the exact variants.
+    // construction, as the exact engines do.
     let pool = Pool::new(if Plan::for_rows(n).len() <= 1 { 1 } else { cfg.threads });
     let mut rng = Xoshiro256::substream(cfg.seed, BATCH_STREAM);
-    let mut assign = vec![0u32; n];
+    if resuming {
+        // Fast-forward the sampling substream past the epochs already
+        // taken, so the resumed run draws exactly the batches an
+        // uninterrupted run would draw next. Each prior epoch consumed
+        // `batches_per_epoch` deterministic draws. This replays the draws
+        // (O(prior_epochs · n) RNG work, one corpus-worth of sampling per
+        // prior epoch) — a deliberate trade: the `.spkm` format stays free
+        // of RNG internals, and the cost is paid once per resume, before
+        // any training.
+        for _ in 0..prior_steps.saturating_mul(batches_per_epoch as u64) {
+            let _ = rng.sample_distinct(n, b);
+        }
+    }
     let mut stats = RunStats::default();
     let mut basg = vec![0u32; b];
     let mut converged = false;
@@ -169,6 +247,10 @@ pub fn run_with_centers(
         epochs_run += 1;
         if shift <= cfg.tol {
             converged = true;
+            notify(&mut obs, &stats, true, Some(shift));
+            break;
+        }
+        if notify(&mut obs, &stats, false, Some(shift)) {
             break;
         }
     }
@@ -213,9 +295,27 @@ pub fn run_with_centers(
         }
         iter.wall_ms = sw.ms();
         stats.iters.push(iter);
+        // The final pass is reported to the observer for completeness; the
+        // run is over either way, so its stop request is moot.
+        let _ = notify(&mut obs, &stats, converged, None);
     }
 
-    KMeansResult {
+    let state = TrainState {
+        steps_done: prior_steps + epochs_run as u64,
+        converged,
+        assignments: assign.clone(),
+        counts: centers.counts().to_vec(),
+        sums: centers.sums().to_vec(),
+        // Record the schedule this state was trained under, so a resume
+        // can reproduce it (the sampler fast-forward depends on it).
+        minibatch: Some(super::MiniBatchParams {
+            batch_size: cfg.batch_size,
+            epochs: cfg.epochs,
+            tol: cfg.tol,
+            truncate: cfg.truncate,
+        }),
+    };
+    let result = KMeansResult {
         mean_similarity: 1.0 - obj / n.max(1) as f64,
         objective: obj,
         assignments: assign,
@@ -224,42 +324,72 @@ pub fn run_with_centers(
         iterations: epochs_run,
         converged,
         stats,
-    }
+    };
+    (result, state)
+}
+
+/// Deliver the newest stats entry to the observer (when one is attached);
+/// returns `true` on an early-stop request.
+fn notify(
+    obs: &mut Option<&mut dyn Observer>,
+    stats: &RunStats,
+    converged: bool,
+    center_shift: Option<f64>,
+) -> bool {
+    let Some(obs) = obs.as_deref_mut() else {
+        return false;
+    };
+    let iteration = stats.iters.len() - 1;
+    let snap = IterSnapshot {
+        iteration,
+        stats: &stats.iters[iteration],
+        converged,
+        center_shift,
+    };
+    obs.on_iteration(&snap).is_break()
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
+    use super::super::{Engine, MiniBatchParams, SphericalKMeans};
     use crate::data::synth::SynthConfig;
     use crate::init::{seed_centers, InitMethod};
+
+    fn minibatch(params: MiniBatchParams) -> SphericalKMeans {
+        SphericalKMeans::new(6).engine(Engine::MiniBatch(params))
+    }
 
     #[test]
     fn runs_and_reports_consistent_result() {
         let ds = SynthConfig::small_demo().generate(41);
-        let cfg = KMeansConfig::new(6).batch_size(64).epochs(4).seed(2);
-        let r = run(&ds.matrix, &cfg);
-        assert_eq!(r.assignments.len(), ds.matrix.rows());
-        assert!(r.assignments.iter().all(|&a| (a as usize) < 6));
-        assert!(r.iterations <= 4);
+        let r = minibatch(MiniBatchParams { batch_size: 64, epochs: 4, ..Default::default() })
+            .seed(2)
+            .fit(&ds.matrix)
+            .unwrap();
+        assert_eq!(r.assignments().len(), ds.matrix.rows());
+        assert!(r.assignments().iter().all(|&a| (a as usize) < 6));
+        assert!(r.iterations() <= 4);
         // One stats entry per epoch plus the final full pass.
-        assert_eq!(r.stats.iters.len(), r.iterations + 1);
+        assert_eq!(r.stats().iters.len(), r.iterations() + 1);
         // The reported objective matches a recomputation from the result.
-        let recomputed =
-            crate::metrics::objective(&ds.matrix, &r.assignments, &r.centers);
-        assert!((recomputed - r.objective).abs() < 1e-9 * (1.0 + r.objective));
+        let recomputed = crate::metrics::objective(&ds.matrix, r.assignments(), r.centers());
+        assert!((recomputed - r.objective()).abs() < 1e-9 * (1.0 + r.objective()));
     }
 
     #[test]
     fn zero_epochs_degenerates_to_nearest_initial_center() {
         let ds = SynthConfig::small_demo().generate(43);
         let init = seed_centers(&ds.matrix, 5, &InitMethod::Uniform, 7);
-        let cfg = KMeansConfig::new(5).epochs(0);
-        let r = run_with_centers(&ds.matrix, init.centers.clone(), &cfg);
-        assert_eq!(r.iterations, 0);
-        assert!(!r.converged);
-        // Exactly the initial full assignment: n·k similarities.
+        let r = SphericalKMeans::new(5)
+            .engine(Engine::MiniBatch(MiniBatchParams { epochs: 0, ..Default::default() }))
+            .warm_start_centers(init.centers.clone())
+            .fit(&ds.matrix)
+            .unwrap();
+        assert_eq!(r.iterations(), 0);
+        assert!(!r.converged());
+        // Exactly the final full assignment: n·k similarities.
         assert_eq!(
-            r.stats.total_point_center(),
+            r.stats().iters.iter().map(|i| i.sims_point_center).sum::<u64>(),
             (ds.matrix.rows() * 5) as u64
         );
     }
@@ -267,8 +397,15 @@ mod tests {
     #[test]
     fn batch_size_larger_than_corpus_is_clamped() {
         let ds = SynthConfig::small_demo().generate(47);
-        let cfg = KMeansConfig::new(4).batch_size(1 << 20).epochs(2).seed(5);
-        let r = run(&ds.matrix, &cfg);
-        assert_eq!(r.assignments.len(), ds.matrix.rows());
+        let r = SphericalKMeans::new(4)
+            .engine(Engine::MiniBatch(MiniBatchParams {
+                batch_size: 1 << 20,
+                epochs: 2,
+                ..Default::default()
+            }))
+            .seed(5)
+            .fit(&ds.matrix)
+            .unwrap();
+        assert_eq!(r.assignments().len(), ds.matrix.rows());
     }
 }

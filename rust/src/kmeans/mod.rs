@@ -24,10 +24,22 @@
 //! trades a bounded approximation of the objective for an order of
 //! magnitude fewer point×center similarity computations (deterministic,
 //! sharded, optionally with Knittel-style truncated sparse centroids). It
-//! is configured through the same [`KMeansConfig`] (`batch_size`, `epochs`,
-//! `tol`, `truncate`) but entered via [`minibatch::run`] /
-//! [`minibatch::run_with_centers`] — it is deliberately *not* a
+//! is selected through [`Engine::MiniBatch`] with typed
+//! [`MiniBatchParams`] — it is deliberately *not* a
 //! [`Variant`], because it does not satisfy the exactness contract above.
+//!
+//! # Front door
+//!
+//! Every engine is reached through the [`SphericalKMeans`] estimator
+//! ([`estimator`] module): shared knobs on the builder, per-engine knobs
+//! in the typed [`Engine`] payloads, a fallible
+//! [`SphericalKMeans::fit`] returning a [`FittedModel`] that persists,
+//! serves, and resumes, plus [`Observer`] hooks for progress and early
+//! stopping. The free functions `run` / `run_seeded` /
+//! `run_with_centers` / `run_dataset` / `minibatch::run` /
+//! `minibatch::run_with_centers` survive one release as deprecated shims
+//! delegating to the same internal path (bit-identical results — see the
+//! `shims` integration suite and the README migration table).
 //!
 //! # Parallel execution
 //!
@@ -77,16 +89,20 @@
 //! centers only — clean centers provably did not move.
 //!
 //! ```no_run
-//! use sphkm::kmeans::{KernelChoice, KMeansConfig, Variant};
+//! use sphkm::kmeans::{KernelChoice, SphericalKMeans, Variant};
+//! # let data = sphkm::data::synth::SynthConfig::small_demo().generate(1).matrix;
 //! // Simplified Hamerly on 8 clusters, using every available core and
 //! // the inverted-file similarity kernel.
-//! let cfg = KMeansConfig::new(8)
+//! let fitted = SphericalKMeans::new(8)
 //!     .variant(Variant::SimplifiedHamerly)
 //!     .kernel(KernelChoice::Inverted)
-//!     .threads(0);
+//!     .threads(0)
+//!     .fit(&data)
+//!     .expect("valid configuration");
 //! ```
 
 pub mod centers;
+pub mod estimator;
 pub mod kernel;
 pub mod minibatch;
 pub mod stats;
@@ -107,6 +123,10 @@ use crate::sparse::{CsrMatrix, DenseMatrix};
 use crate::util::timer::Stopwatch;
 use std::ops::Range;
 pub use centers::Centers;
+pub use estimator::{
+    Engine, ExactParams, FitError, FittedModel, IterSnapshot, MiniBatchParams, Observer,
+    SphericalKMeans, TrainState,
+};
 pub use kernel::{DataShape, Kernel, KernelChoice};
 pub use stats::{IterStats, RunStats};
 
@@ -166,6 +186,14 @@ impl Variant {
             Variant::Yinyang => "Yinyang",
             Variant::Exponion => "Exponion",
         }
+    }
+}
+
+impl std::fmt::Display for Variant {
+    /// The paper-table spelling of [`Variant::name`]; round-trips through
+    /// [`FromStr`](std::str::FromStr).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -266,66 +294,77 @@ impl KMeansConfig {
     }
 
     /// Select the similarity-kernel backend (see [`KMeansConfig::kernel`]).
+    #[must_use]
     pub fn kernel(mut self, k: KernelChoice) -> Self {
         self.kernel = k;
         self
     }
 
     /// Enable the guarded min-p Hamerly bound (beyond-paper improvement).
+    #[must_use]
     pub fn tight_bound(mut self, on: bool) -> Self {
         self.tight_hamerly_bound = on;
         self
     }
 
     /// Set the variant.
+    #[must_use]
     pub fn variant(mut self, v: Variant) -> Self {
         self.variant = v;
         self
     }
 
     /// Set the seeding method.
+    #[must_use]
     pub fn init(mut self, i: InitMethod) -> Self {
         self.init = i;
         self
     }
 
     /// Set the RNG seed.
+    #[must_use]
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = s;
         self
     }
 
     /// Set the iteration cap.
+    #[must_use]
     pub fn max_iter(mut self, m: usize) -> Self {
         self.max_iter = m;
         self
     }
 
     /// Set the worker-thread count (see [`KMeansConfig::threads`]).
+    #[must_use]
     pub fn threads(mut self, t: usize) -> Self {
         self.threads = t;
         self
     }
 
     /// Set the mini-batch size (see [`KMeansConfig::batch_size`]).
+    #[must_use]
     pub fn batch_size(mut self, b: usize) -> Self {
         self.batch_size = b;
         self
     }
 
     /// Set the mini-batch epoch cap (see [`KMeansConfig::epochs`]).
+    #[must_use]
     pub fn epochs(mut self, e: usize) -> Self {
         self.epochs = e;
         self
     }
 
     /// Set the mini-batch convergence tolerance (see [`KMeansConfig::tol`]).
+    #[must_use]
     pub fn tol(mut self, t: f64) -> Self {
         self.tol = t;
         self
     }
 
     /// Set the center-truncation knob (see [`KMeansConfig::truncate`]).
+    #[must_use]
     pub fn truncate(mut self, m: Option<usize>) -> Self {
         self.truncate = m;
         self
@@ -358,11 +397,50 @@ pub struct KMeansResult {
     pub stats: RunStats,
 }
 
+/// How an exact-engine fit starts — the one internal entry every public
+/// surface (the [`SphericalKMeans`] estimator and the deprecated `run*`
+/// shims) funnels into.
+pub(crate) struct ExactStart<'o> {
+    /// Initial centers. Normalized on a fresh start; adopted bit-for-bit
+    /// when `resume` is set (a resumed run must see exactly the
+    /// coordinates the interrupted run saved).
+    pub centers: DenseMatrix,
+    /// Row-major N×k point-to-seed similarities from the seeding method
+    /// (§7 synergy); pre-initializes the bounds and skips the initial
+    /// `O(N·k)` assignment pass.
+    pub sim_matrix: Option<Vec<f32>>,
+    /// Training state of an interrupted run: restores the f64 sum
+    /// accumulators, counts, and assignments so the continued trajectory
+    /// is bit-identical to an uninterrupted one.
+    pub resume: Option<TrainState>,
+    /// Steps completed by prior fits of this lineage (provenance).
+    pub prior_steps: u64,
+    /// Per-iteration hook (progress reporting / early stopping).
+    pub obs: Option<&'o mut dyn Observer>,
+}
+
+/// Run one exact-engine fit. The consolidated internal path behind
+/// [`SphericalKMeans::fit`] and the deprecated `run`/`run_seeded`/
+/// `run_with_centers`/`run_dataset` shims.
+pub(crate) fn fit_exact(
+    data: &CsrMatrix,
+    cfg: &KMeansConfig,
+    start: ExactStart<'_>,
+) -> (KMeansResult, TrainState) {
+    let mut ctx = Ctx::new(data, start, cfg);
+    let converged = dispatch(&mut ctx, cfg);
+    ctx.into_result(converged)
+}
+
 /// Cluster `data` (rows must be unit-normalized — see
 /// [`CsrMatrix::normalize_rows`]) according to `cfg`.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `SphericalKMeans::fit` (see the README migration table)"
+)]
 pub fn run(data: &CsrMatrix, cfg: &KMeansConfig) -> KMeansResult {
     let init = crate::init::seed_centers(data, cfg.k, &cfg.init, cfg.seed);
-    run_with_centers(data, init.centers, cfg)
+    exact_shim(data, init.centers, None, cfg)
 }
 
 /// Cluster `data` from a seeding outcome, consuming the point-to-seed
@@ -371,38 +449,57 @@ pub fn run(data: &CsrMatrix, cfg: &KMeansConfig) -> KMeansResult {
 /// bounds** and skip the initial `O(N·k)` assignment pass entirely: the
 /// paper's §7 synergy. A conservative margin (±1e-5) is applied to the
 /// collected f32 similarities so they remain valid f64 bounds.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `SphericalKMeans::fit` with `ExactParams::preinit` (see the README migration table)"
+)]
 pub fn run_seeded(
     data: &CsrMatrix,
     init: crate::init::InitOutcome,
     cfg: &KMeansConfig,
 ) -> KMeansResult {
-    assert_eq!(init.centers.rows(), cfg.k, "initial centers vs k");
     if let Some(m) = &init.sim_matrix {
         assert_eq!(m.len(), data.rows() * cfg.k, "sim matrix shape");
     }
-    let mut ctx = Ctx::new(data, init.centers, cfg);
-    ctx.preinit = init.sim_matrix;
-    let converged = dispatch(&mut ctx, cfg);
-    ctx.into_result(converged)
+    exact_shim(data, init.centers, init.sim_matrix, cfg)
 }
 
 /// Cluster `data` starting from explicit initial centers (rows will be
-/// normalized). This is the entry point the exactness tests and the
-/// experiment drivers use so every variant sees identical initial centers.
+/// normalized).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `SphericalKMeans::fit` with `warm_start_centers` (see the README migration table)"
+)]
 pub fn run_with_centers(
     data: &CsrMatrix,
     initial_centers: DenseMatrix,
     cfg: &KMeansConfig,
 ) -> KMeansResult {
-    assert_eq!(initial_centers.rows(), cfg.k, "initial centers vs k");
-    assert_eq!(initial_centers.cols(), data.cols(), "center dimensionality");
-    assert!(cfg.k >= 1, "need at least one cluster");
-    let mut ctx = Ctx::new(data, initial_centers, cfg);
-    let converged = dispatch(&mut ctx, cfg);
-    ctx.into_result(converged)
+    exact_shim(data, initial_centers, None, cfg)
 }
 
-fn dispatch(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
+/// Shared body of the deprecated exact shims: the old entry points'
+/// assertions, then straight into the consolidated [`fit_exact`] path —
+/// which is why they stay bit-identical to the estimator (asserted by
+/// the `shims` integration suite).
+fn exact_shim(
+    data: &CsrMatrix,
+    centers: DenseMatrix,
+    sim_matrix: Option<Vec<f32>>,
+    cfg: &KMeansConfig,
+) -> KMeansResult {
+    assert_eq!(centers.rows(), cfg.k, "initial centers vs k");
+    assert_eq!(centers.cols(), data.cols(), "center dimensionality");
+    assert!(cfg.k >= 1, "need at least one cluster");
+    fit_exact(
+        data,
+        cfg,
+        ExactStart { centers, sim_matrix, resume: None, prior_steps: 0, obs: None },
+    )
+    .0
+}
+
+fn dispatch(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
     match cfg.variant {
         Variant::Standard => standard::run(ctx, cfg),
         Variant::Elkan => elkan::run(ctx, cfg),
@@ -559,7 +656,7 @@ impl SimView<'_> {
 }
 
 /// Shared mutable state threaded through every algorithm implementation.
-pub(crate) struct Ctx<'a> {
+pub(crate) struct Ctx<'a, 'o> {
     pub data: &'a CsrMatrix,
     pub k: usize,
     pub assign: Vec<u32>,
@@ -573,11 +670,19 @@ pub(crate) struct Ctx<'a> {
     /// Row-major N×k point-to-seed similarities from the seeding method
     /// (§7 synergy); consumed by [`Ctx::initial_assignment`].
     pub preinit: Option<Vec<f32>>,
+    /// True when this run continues an interrupted one from restored
+    /// accumulator state: [`Ctx::initial_assignment`] then re-derives the
+    /// bound structures *without* reassigning or rebuilding sums.
+    resume: bool,
+    /// Steps completed by prior fits of this lineage.
+    prior_steps: u64,
+    /// Per-iteration hook, notified by [`Ctx::push_iter`].
+    obs: Option<&'o mut dyn Observer>,
 }
 
-impl<'a> Ctx<'a> {
-    fn new(data: &'a CsrMatrix, initial_centers: DenseMatrix, cfg: &KMeansConfig) -> Self {
-        let k = initial_centers.rows();
+impl<'a, 'o> Ctx<'a, 'o> {
+    fn new(data: &'a CsrMatrix, start: ExactStart<'o>, cfg: &KMeansConfig) -> Self {
+        let k = start.centers.rows();
         let plan = Plan::for_rows(data.rows());
         // A single-shard plan can never use more than one worker — skip
         // thread-pool construction entirely (runs on tiny inputs would
@@ -586,16 +691,70 @@ impl<'a> Ctx<'a> {
         // Resolve the similarity kernel once, from the problem shape (the
         // exact variants keep dense centers, so no truncation estimate).
         let kernel = cfg.kernel.resolve(&DataShape::of(data, k, None));
+        let (assign, centers, resume) = match start.resume {
+            Some(state) => (
+                state.assignments,
+                // Restored bit-for-bit: centers, f64 sums, counts.
+                Centers::restore(start.centers, state.sums, state.counts, kernel),
+                true,
+            ),
+            None => (
+                vec![0; data.rows()],
+                Centers::from_initial_for(start.centers, kernel),
+                false,
+            ),
+        };
         Self {
             data,
             k,
-            assign: vec![0; data.rows()],
-            centers: Centers::from_initial_for(initial_centers, kernel),
+            assign,
+            centers,
             stats: RunStats::default(),
             plan,
             pool: Pool::new(threads),
-            preinit: None,
+            preinit: if resume { None } else { start.sim_matrix },
+            resume,
+            prior_steps: start.prior_steps,
+            obs: start.obs,
         }
+    }
+
+    /// Whether this run resumes restored state (variants without bound
+    /// structures skip their initial pass entirely — see
+    /// [`Ctx::resume_marker`]).
+    #[inline]
+    pub fn resuming(&self) -> bool {
+        self.resume
+    }
+
+    /// Record a completed iteration and notify the observer. Returns
+    /// `true` when the observer requests an early stop — the variant loop
+    /// must then return without starting another iteration.
+    pub(crate) fn push_iter(&mut self, iter: IterStats, converged: bool) -> bool {
+        self.stats.iters.push(iter);
+        self.notify(converged)
+    }
+
+    fn notify(&mut self, converged: bool) -> bool {
+        let Some(obs) = self.obs.as_deref_mut() else {
+            return false;
+        };
+        let iteration = self.stats.iters.len() - 1;
+        let snap = IterSnapshot {
+            iteration,
+            stats: &self.stats.iters[iteration],
+            converged,
+            center_shift: None,
+        };
+        obs.on_iteration(&snap).is_break()
+    }
+
+    /// Iteration-0 placeholder for resumed runs of variants that keep no
+    /// bound state (Standard): records an empty stats entry so resumed
+    /// and fresh runs count iterations alike, and notifies the observer.
+    /// Returns `true` on an early-stop request.
+    pub(crate) fn resume_marker(&mut self) -> bool {
+        self.push_iter(IterStats::default(), false)
     }
 
     /// The initial full assignment pass shared by all variants: assigns
@@ -609,11 +768,28 @@ impl<'a> Ctx<'a> {
     /// lets the variant record whatever bound state it needs. `local_i`
     /// indexes into the shard's slices; `sims_row` is only filled when
     /// `want_sims_row` is set.
-    pub fn initial_assignment<S, F>(&mut self, want_sims_row: bool, states: Vec<S>, on_point: F)
+    ///
+    /// **Resumed runs** ([`Ctx::resuming`]) re-derive bound state without
+    /// touching the restored assignments or sums: `on_point` then receives
+    /// the point's *current* cluster `a` with `best = sim(i, a)` and
+    /// `second = max_{j≠a} sim(i, j)` — exact values, hence valid (tight)
+    /// bounds — and no rebuild/update barrier runs, so the first real
+    /// iteration continues the interrupted trajectory bit-for-bit.
+    ///
+    /// Returns `true` when the observer requested an early stop.
+    pub fn initial_assignment<S, F>(
+        &mut self,
+        want_sims_row: bool,
+        states: Vec<S>,
+        on_point: F,
+    ) -> bool
     where
         S: Send,
         F: Fn(&mut S, usize, usize, f64, f64, &[f64]) + Sync + Send,
     {
+        if self.resume {
+            return self.resume_bound_init(states, on_point);
+        }
         assert_eq!(states.len(), self.plan.len(), "one state per shard");
         let sw = Stopwatch::start();
         let k = self.k;
@@ -688,7 +864,53 @@ impl<'a> Ctx<'a> {
             .rebuild_sharded(self.data, &self.assign, &self.pool);
         iter.sims_center_center += self.centers.update();
         iter.wall_ms = sw.ms();
-        self.stats.iters.push(iter);
+        self.push_iter(iter, false)
+    }
+
+    /// Resume-mode counterpart of [`Ctx::initial_assignment`]: one full
+    /// similarity pass that only (re)derives bound state — assignments,
+    /// sums, and centers are the restored accumulators and must not move.
+    fn resume_bound_init<S, F>(&mut self, states: Vec<S>, on_point: F) -> bool
+    where
+        S: Send,
+        F: Fn(&mut S, usize, usize, f64, f64, &[f64]) + Sync + Send,
+    {
+        assert_eq!(states.len(), self.plan.len(), "one state per shard");
+        let sw = Stopwatch::start();
+        let k = self.k;
+        let mut iter = IterStats::default();
+        {
+            let view = SimView { data: self.data, centers: &self.centers, k };
+            let assign: &[u32] = &self.assign;
+            let mut works: Vec<(Range<usize>, S)> = Vec::with_capacity(self.plan.len());
+            for (r, s) in self.plan.ranges().iter().cloned().zip(states) {
+                works.push((r, s));
+            }
+            let outs = self.pool.run(works, |_, (range, mut state)| {
+                let mut it = IterStats::default();
+                let mut sims_row = vec![0.0f64; k];
+                for (li, i) in range.enumerate() {
+                    let (_, _, _) = view.similarities_full(i, &mut it, &mut sims_row);
+                    let a = assign[i] as usize;
+                    // Exact values are the tightest valid bounds: the
+                    // assigned-center similarity and the best among the
+                    // *other* centers (cosine floor when k = 1).
+                    let mut other = f64::MIN;
+                    for (j, &s) in sims_row.iter().enumerate() {
+                        if j != a && s > other {
+                            other = s;
+                        }
+                    }
+                    on_point(&mut state, li, a, sims_row[a], other.max(-1.0), &sims_row);
+                }
+                it
+            });
+            for o in &outs {
+                iter.absorb(o);
+            }
+        }
+        iter.wall_ms = sw.ms();
+        self.push_iter(iter, false)
     }
 
     /// Barrier after a sharded assignment pass: fold every shard's
@@ -707,8 +929,10 @@ impl<'a> Ctx<'a> {
         }
     }
 
-    /// Finalize: compute the objective and assemble the result.
-    fn into_result(self, converged: bool) -> KMeansResult {
+    /// Finalize: compute the objective and assemble the result plus the
+    /// resumable training state (the accumulators a continued fit
+    /// restores — see [`TrainState`]).
+    fn into_result(self, converged: bool) -> (KMeansResult, TrainState) {
         let mut obj = 0.0f64;
         for i in 0..self.data.rows() {
             let s = self
@@ -719,7 +943,15 @@ impl<'a> Ctx<'a> {
         }
         let n = self.data.rows().max(1) as f64;
         let iterations = self.stats.iters.len().saturating_sub(1);
-        KMeansResult {
+        let state = TrainState {
+            steps_done: self.prior_steps + iterations as u64,
+            converged,
+            assignments: self.assign.clone(),
+            counts: self.centers.counts().to_vec(),
+            sums: self.centers.sums().to_vec(),
+            minibatch: None,
+        };
+        let result = KMeansResult {
             mean_similarity: 1.0 - obj / n,
             objective: obj,
             assignments: self.assign,
@@ -728,14 +960,20 @@ impl<'a> Ctx<'a> {
             iterations,
             converged,
             stats: self.stats,
-        }
+        };
+        (result, state)
     }
 }
 
 /// Convenience: cluster a [`Dataset`] (which carries its matrix plus
 /// metadata) and return the result.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `SphericalKMeans::fit_dataset` (see the README migration table)"
+)]
 pub fn run_dataset(ds: &Dataset, cfg: &KMeansConfig) -> KMeansResult {
-    run(&ds.matrix, cfg)
+    let init = crate::init::seed_centers(&ds.matrix, cfg.k, &cfg.init, cfg.seed);
+    exact_shim(&ds.matrix, init.centers, None, cfg)
 }
 
 #[cfg(test)]
@@ -757,6 +995,9 @@ mod tests {
         assert!("nope".parse::<Variant>().is_err());
         for v in Variant::ALL {
             assert!(!v.name().is_empty());
+            // Display ↔ FromStr round trip, exhaustively over ALL.
+            assert_eq!(v.to_string(), v.name());
+            assert_eq!(v.to_string().parse::<Variant>().unwrap(), v);
         }
     }
 

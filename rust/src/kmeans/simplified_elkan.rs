@@ -13,18 +13,21 @@ use super::{bound_states, bound_works, Ctx, IterStats, KMeansConfig, Move, Shard
 use crate::bounds::{update_lower_pre, update_upper_pre};
 use crate::util::timer::Stopwatch;
 
-pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
+pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
     let n = ctx.data.rows();
     let k = ctx.k;
     let mut l = vec![0.0f64; n];
     let mut u = vec![0.0f64; n * k];
 
-    {
+    let stop = {
         let states = bound_states(&ctx.plan, &mut l, 1, &mut u, k);
         ctx.initial_assignment(true, states, |(l, u), li, _bj, best, _second, sims| {
             l[li] = best;
             u[li * k..(li + 1) * k].copy_from_slice(sims);
-        });
+        })
+    };
+    if stop {
+        return false;
     }
     ctx.stats.bound_bytes = (n + n * k) * std::mem::size_of::<f64>();
 
@@ -85,12 +88,14 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
 
         if iter.reassignments == 0 {
             iter.wall_ms = sw.ms();
-            ctx.stats.iters.push(iter);
+            ctx.push_iter(iter, true);
             return true;
         }
         iter.sims_center_center += ctx.centers.update();
         iter.wall_ms = sw.ms();
-        ctx.stats.iters.push(iter);
+        if ctx.push_iter(iter, false) {
+            return false;
+        }
     }
     false
 }

@@ -7,6 +7,6 @@
 
 use super::{Ctx, KMeansConfig};
 
-pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
+pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
     super::hamerly::run_impl(ctx, cfg, false)
 }

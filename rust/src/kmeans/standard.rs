@@ -12,10 +12,18 @@ use crate::runtime::parallel::split_mut;
 use crate::util::timer::Stopwatch;
 use std::ops::Range;
 
-pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
-    // Iteration 0: full assignment to the initial centers.
+pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
+    // Iteration 0: full assignment to the initial centers. Standard keeps
+    // no bound state, so a resumed run records only the placeholder entry.
     let shards = ctx.plan.len();
-    ctx.initial_assignment(false, vec![(); shards], |_, _, _, _, _, _| {});
+    let stop = if ctx.resuming() {
+        ctx.resume_marker()
+    } else {
+        ctx.initial_assignment(false, vec![(); shards], |_, _, _, _, _, _| {})
+    };
+    if stop {
+        return false;
+    }
 
     let k = ctx.k;
     for _ in 0..cfg.max_iter {
@@ -55,12 +63,14 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
 
         if iter.reassignments == 0 {
             iter.wall_ms = sw.ms();
-            ctx.stats.iters.push(iter);
+            ctx.push_iter(iter, true);
             return true;
         }
         iter.sims_center_center += ctx.centers.update();
         iter.wall_ms = sw.ms();
-        ctx.stats.iters.push(iter);
+        if ctx.push_iter(iter, false) {
+            return false;
+        }
     }
     false
 }

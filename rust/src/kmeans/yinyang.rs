@@ -75,7 +75,7 @@ fn group_centers(centers: &DenseMatrix, g: usize) -> Vec<Vec<usize>> {
     groups
 }
 
-pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
+pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
     let n = ctx.data.rows();
     let k = ctx.k;
     let groups = group_centers(
@@ -94,7 +94,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
     let mut l = vec![0.0f64; n];
     let mut ug = vec![0.0f64; n * ng]; // u(i, g)
 
-    {
+    let stop = {
         let groups = &groups;
         let states = bound_states(&ctx.plan, &mut l, 1, &mut ug, ng);
         ctx.initial_assignment(true, states, |(l, ug), li, bj, best, _second, sims| {
@@ -109,7 +109,10 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
                 }
                 row[gi] = m;
             }
-        });
+        })
+    };
+    if stop {
+        return false;
     }
     ctx.stats.bound_bytes = (n + n * ng) * std::mem::size_of::<f64>();
 
@@ -258,12 +261,14 @@ pub(crate) fn run(ctx: &mut Ctx<'_>, cfg: &KMeansConfig) -> bool {
 
         if iter.reassignments == 0 {
             iter.wall_ms = sw.ms();
-            ctx.stats.iters.push(iter);
+            ctx.push_iter(iter, true);
             return true;
         }
         iter.sims_center_center += ctx.centers.update();
         iter.wall_ms = sw.ms();
-        ctx.stats.iters.push(iter);
+        if ctx.push_iter(iter, false) {
+            return false;
+        }
     }
     false
 }

@@ -30,17 +30,28 @@
 //!
 //! ## Quickstart
 //!
+//! The front door is the [`SphericalKMeans`] estimator: one builder for
+//! every engine (the seven exact accelerated variants and the mini-batch
+//! optimizer), a fallible [`SphericalKMeans::fit`], and a [`FittedModel`]
+//! that persists (`.spkm`), serves ([`FittedModel::query_engine`]), and
+//! resumes ([`SphericalKMeans::warm_start`]).
+//!
 //! ```no_run
 //! use sphkm::data::synth::SynthConfig;
-//! use sphkm::kmeans::{KMeansConfig, Variant, run};
-//! use sphkm::init::InitMethod;
+//! use sphkm::{Engine, ExactParams, SphericalKMeans};
+//! use sphkm::kmeans::Variant;
 //!
 //! let ds = SynthConfig::small_demo().generate(42);
-//! let cfg = KMeansConfig::new(8)
-//!     .variant(Variant::SimplifiedElkan)
-//!     .seed(1);
-//! let result = run(&ds.matrix, &cfg);
-//! println!("objective = {}", result.objective);
+//! let fitted = SphericalKMeans::new(8)
+//!     .engine(Engine::Exact(ExactParams {
+//!         variant: Variant::SimplifiedElkan,
+//!         ..Default::default()
+//!     }))
+//!     .seed(1)
+//!     .fit(&ds.matrix)
+//!     .expect("valid configuration");
+//! println!("objective = {}", fitted.objective());
+//! fitted.save(std::path::Path::new("model.spkm")).unwrap();
 //! ```
 #![deny(missing_docs)]
 
@@ -55,3 +66,8 @@ pub mod runtime;
 pub mod serve;
 pub mod sparse;
 pub mod util;
+
+pub use kmeans::{
+    Engine, ExactParams, FitError, FittedModel, IterSnapshot, MiniBatchParams, Observer,
+    SphericalKMeans,
+};

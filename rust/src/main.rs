@@ -4,7 +4,7 @@
 //! sphkm datasets  [--scale small] [--seed 42]
 //! sphkm cluster   --data <name|path.svm|path.mtx> --k 20 [--algo simp-elkan]
 //!                 [--init kmeans++] [--seed 0] [--scale small] [--stats]
-//!                 [--save-model model.spkm]
+//!                 [--save-model model.spkm] [--resume model.spkm]
 //! sphkm assign    --model model.spkm --data <name|path.svm|path.mtx>
 //!                 [--top 1] [--mode auto|pruned|exhaustive] [--out top.csv]
 //! sphkm gen       --data <name> --out file.svm [--scale small] [--seed 42]
@@ -12,15 +12,18 @@
 //! sphkm info
 //! ```
 
+use std::ops::ControlFlow;
+
 use sphkm::coordinator::experiments::{self, ExperimentOpts};
 use sphkm::data::datasets::{self, Scale, DATASET_NAMES};
 use sphkm::data::Dataset;
 use sphkm::init::InitMethod;
-use sphkm::kmeans::{KMeansConfig, KernelChoice, Variant};
+use sphkm::kmeans::{IterSnapshot, KernelChoice, Variant};
 use sphkm::metrics;
 use sphkm::model::Model;
 use sphkm::serve::{QueryEngine, ServeConfig, ServeMode};
 use sphkm::util::cli::Args;
+use sphkm::{Engine, ExactParams, FittedModel, MiniBatchParams, SphericalKMeans};
 
 fn usage() -> ! {
     eprintln!(
@@ -36,7 +39,10 @@ USAGE:
                 [--minibatch] # approximate mini-batch engine (large corpora)
                 [--batch-size B] [--epochs E] [--tol T]
                 [--truncate M] # keep top-M coords per center (0 = dense)
-                [--save-model FILE.spkm] # persist the trained model
+                [--save-model FILE.spkm] # persist the trained model + state
+                [--resume FILE.spkm]     # continue training a saved model
+                                         # (k, engine, schedule and seed
+                                         # default from the file)
   sphkm assign --model FILE.spkm --data <dataset> [--top P] [--threads T]
                [--mode auto|pruned|exhaustive] [--out FILE.csv]
                [--scale S] [--seed N]   # answer nearest-center queries
@@ -142,9 +148,9 @@ fn run_sweep(cfg: &sphkm::util::config::Config) {
             for variant in &variants {
                 for init in &inits {
                     let mut ms = 0.0;
-                    let mut last: Option<sphkm::kmeans::KMeansResult> = None;
+                    let mut last: Option<FittedModel> = None;
                     for rep in 0..reps {
-                        let c = KMeansConfig::new(k)
+                        let estimator = SphericalKMeans::new(k)
                             .variant(*variant)
                             .init(*init)
                             .seed(seed ^ rep as u64)
@@ -152,14 +158,17 @@ fn run_sweep(cfg: &sphkm::util::config::Config) {
                             .kernel(kernel)
                             .max_iter(max_iter);
                         let sw = sphkm::util::timer::Stopwatch::start();
-                        last = Some(sphkm::kmeans::run(&ds.matrix, &c));
+                        last = Some(estimator.fit(&ds.matrix).unwrap_or_else(|e| {
+                            eprintln!("sweep cell failed: {e}");
+                            std::process::exit(1)
+                        }));
                         ms += sw.ms();
                     }
                     let r = last.unwrap();
                     let nmi = ds
                         .labels
                         .as_ref()
-                        .map(|l| format!("{:.3}", metrics::nmi(&r.assignments, l)))
+                        .map(|l| format!("{:.3}", metrics::nmi(r.assignments(), l)))
                         .unwrap_or_else(|| "-".into());
                     t.row(vec![
                         ds.name.clone(),
@@ -167,8 +176,8 @@ fn run_sweep(cfg: &sphkm::util::config::Config) {
                         init.name(),
                         k.to_string(),
                         fmt_ms(ms / reps as f64),
-                        r.iterations.to_string(),
-                        format!("{:.2}", r.objective),
+                        r.iterations().to_string(),
+                        format!("{:.2}", r.objective()),
                         nmi,
                     ]);
                 }
@@ -279,13 +288,23 @@ fn main() {
             experiments::table1(&opts);
         }
         "cluster" => {
+            // --resume: continue training a persisted model. k and the
+            // engine come from the model (CLI knobs still budget the run).
+            // Loaded *before* the dataset: a bit-identical continuation
+            // must reuse the original run's seed — both for the sampler
+            // substream and for regenerating the very same named
+            // synthetic corpus. An explicit --seed still overrides.
+            let resume_model = args.get("resume").map(|path| {
+                FittedModel::load(std::path::Path::new(path)).unwrap_or_else(|e| {
+                    eprintln!("error loading model {path}: {e}");
+                    std::process::exit(1)
+                })
+            });
+            let seed: u64 = match (&resume_model, args.get("seed")) {
+                (Some(m), None) => m.meta().seed,
+                _ => seed,
+            };
             let ds = load_dataset(&args, scale, seed);
-            let k: usize = args.get_or("k", 10).unwrap_or(10);
-            let variant: Variant = args
-                .get("algo")
-                .unwrap_or("simp-elkan")
-                .parse()
-                .unwrap_or_else(|e| { eprintln!("{e}"); usage() });
             let init: InitMethod = args
                 .get("init")
                 .unwrap_or("uniform")
@@ -298,100 +317,172 @@ fn main() {
                 .parse()
                 .unwrap_or_else(|e| { eprintln!("{e}"); usage() });
             let trunc_cli: usize = args.get_or("truncate", 0).unwrap_or(0);
-            let cfg = KMeansConfig::new(k)
-                .variant(variant)
+            let k: usize = match &resume_model {
+                Some(m) => m.k(),
+                None => args.get_or("k", 10).unwrap_or(10),
+            };
+            let minibatch = match &resume_model {
+                Some(m) => m.meta().variant == "minibatch",
+                None => args.flag("minibatch"),
+            };
+            let variant: Variant = match &resume_model {
+                // The model's variant, unless --algo explicitly overrides
+                // (any exact variant continues any exact run — exactness).
+                Some(m) if args.get("algo").is_none() => {
+                    m.meta().variant.parse().unwrap_or(Variant::SimplifiedElkan)
+                }
+                _ => args
+                    .get("algo")
+                    .unwrap_or("simp-elkan")
+                    .parse()
+                    .unwrap_or_else(|e| { eprintln!("{e}"); usage() }),
+            };
+            let engine = if minibatch {
+                // Approximate mini-batch engine (ignores --algo). When
+                // resuming, defaults come from the schedule persisted in
+                // the model's training state — an exact continuation must
+                // reuse the original batch size and truncation — and CLI
+                // flags override only when passed explicitly.
+                let base = resume_model
+                    .as_ref()
+                    .and_then(|m| m.state())
+                    .and_then(|s| s.minibatch)
+                    .unwrap_or_default();
+                Engine::MiniBatch(MiniBatchParams {
+                    batch_size: args.get_or("batch-size", base.batch_size).unwrap_or(base.batch_size),
+                    epochs: args.get_or("epochs", base.epochs).unwrap_or(base.epochs),
+                    tol: args.get_or("tol", base.tol).unwrap_or(base.tol),
+                    truncate: if args.get("truncate").is_none() {
+                        base.truncate
+                    } else if trunc_cli == 0 {
+                        None
+                    } else {
+                        Some(trunc_cli)
+                    },
+                })
+            } else {
+                Engine::Exact(ExactParams {
+                    variant,
+                    // §7 synergy: pre-initialize bounds from the seeding.
+                    preinit: args.flag("preinit"),
+                    ..Default::default()
+                })
+            };
+            let mut estimator = SphericalKMeans::new(k)
+                .engine(engine)
                 .init(init)
                 .seed(seed)
                 .threads(threads)
                 .kernel(kernel)
                 .max_iter(args.get_or("max-iter", 200).unwrap_or(200));
+            if let Some(m) = &resume_model {
+                estimator = estimator.warm_start(m);
+                // Honest reporting: state for a different corpus — or a
+                // mini-batch schedule overridden away from the persisted
+                // one — cannot be continued; the estimator falls back to
+                // transferring the centers into a fresh run, and the user
+                // should know which of the two is happening. Mirrors the
+                // estimator's own resume conditions.
+                let resumable = m.state().is_some_and(|s| {
+                    s.assignments.len() == ds.matrix.rows()
+                        && match (&engine, s.minibatch) {
+                            (Engine::MiniBatch(cur), Some(orig)) => {
+                                cur.batch_size == orig.batch_size
+                                    && cur.truncate == orig.truncate
+                            }
+                            (Engine::MiniBatch(_), None) => false,
+                            (Engine::Exact(_), _) => true,
+                        }
+                });
+                if resumable {
+                    println!(
+                        "resuming {} model (k={k}, {} prior steps, objective={:.4})",
+                        m.meta().variant,
+                        m.meta().iterations,
+                        m.meta().objective
+                    );
+                } else {
+                    println!(
+                        "warning: model carries no resumable state for this corpus \
+                         ({} rows); transferring its centers into a fresh run",
+                        ds.matrix.rows()
+                    );
+                }
+            }
             println!(
                 "dataset {} ({}×{}, {:.3}% nnz), k={k}, algo={}, seed={seed}, threads={threads}, \
-                 kernel={}",
+                 kernel={kernel}",
                 ds.name,
                 ds.matrix.rows(),
                 ds.matrix.cols(),
                 ds.matrix.density() * 100.0,
-                variant.name(),
-                kernel.name()
+                if minibatch { "minibatch" } else { variant.name() },
             );
             let sw = sphkm::util::timer::Stopwatch::start();
-            let r = if args.flag("minibatch") {
-                // Approximate mini-batch engine (ignores --algo).
-                let mcfg = cfg
-                    .clone()
-                    .batch_size(args.get_or("batch-size", 1024).unwrap_or(1024))
-                    .epochs(args.get_or("epochs", 10).unwrap_or(10))
-                    .tol(args.get_or("tol", 1e-4).unwrap_or(1e-4))
-                    .truncate(if trunc_cli == 0 { None } else { Some(trunc_cli) });
-                sphkm::kmeans::minibatch::run(&ds.matrix, &mcfg)
-            } else if args.flag("preinit") {
-                // §7 synergy: consume the seeding's similarity matrix.
-                let outcome =
-                    sphkm::init::seed_centers_with_bounds(&ds.matrix, k, &init, seed);
-                sphkm::kmeans::run_seeded(&ds.matrix, outcome, &cfg)
+            let fitted = if args.flag("stats") {
+                // Live per-iteration progress through the observer hook.
+                println!("\niter  sims_pc  sims_cc  reassign  skips(loop/bound)  ms");
+                let mut observer = |s: &IterSnapshot<'_>| {
+                    println!(
+                        "{:>4}  {:>8} {:>8} {:>9}  {:>7}/{:<9} {:>8.2}",
+                        s.iteration,
+                        s.stats.sims_point_center,
+                        s.stats.sims_center_center,
+                        s.stats.reassignments,
+                        s.stats.loop_skips,
+                        s.stats.bound_skips,
+                        s.stats.wall_ms
+                    );
+                    ControlFlow::Continue(())
+                };
+                estimator.fit_observed(&ds.matrix, &mut observer)
             } else {
-                sphkm::kmeans::run(&ds.matrix, &cfg)
+                estimator.fit(&ds.matrix)
             };
+            let r = fitted.unwrap_or_else(|e| {
+                eprintln!("error: {e}");
+                std::process::exit(1)
+            });
             println!(
                 "done in {:.1} ms: {} iterations, converged={}, objective={:.4}, mean similarity={:.4}",
                 sw.ms(),
-                r.iterations,
-                r.converged,
-                r.objective,
-                r.mean_similarity
+                r.iterations(),
+                r.converged(),
+                r.objective(),
+                r.mean_similarity()
             );
             println!(
                 "similarity computations: {} point-center ({} kernel madds via {}) + \
                  {} center-center",
-                r.stats.total_point_center(),
-                r.stats.total_madds(),
-                r.kernel.name(),
-                r.stats.total_sims() - r.stats.total_point_center()
+                r.stats().total_point_center(),
+                r.stats().total_madds(),
+                r.kernel(),
+                r.stats().total_sims() - r.stats().total_point_center()
             );
             // External quality is free whenever the input carries
             // ground-truth labels — always report it.
             if let Some(truth) = &ds.labels {
                 println!(
                     "vs ground-truth labels: NMI={:.4} ARI={:.4} purity={:.4}",
-                    metrics::nmi(&r.assignments, truth),
-                    metrics::ari(&r.assignments, truth),
-                    metrics::purity(&r.assignments, truth)
+                    metrics::nmi(r.assignments(), truth),
+                    metrics::ari(r.assignments(), truth),
+                    metrics::purity(r.assignments(), truth)
                 );
             }
             if let Some(path) = args.get("save-model") {
-                // The mini-batch engine ignores --algo; record the
-                // engine, not the unused variant, as provenance.
-                let model = if args.flag("minibatch") {
-                    Model::from_run_named(&r, &cfg, "minibatch")
-                } else {
-                    Model::from_run(&r, &cfg)
-                };
-                if let Err(e) = model.save(std::path::Path::new(path)) {
+                // FittedModel::save persists the training state too, so
+                // the file can be resumed with `cluster --resume`.
+                if let Err(e) = r.save(std::path::Path::new(path)) {
                     eprintln!("error saving model {path}: {e}");
                     std::process::exit(1);
                 }
                 println!(
-                    "[model] {path} (k={}, d={}, {} center nnz)",
-                    model.k(),
-                    model.d(),
-                    model.center_nnz()
+                    "[model] {path} (k={}, d={}, trained by {}, {} steps)",
+                    r.k(),
+                    r.d(),
+                    r.meta().variant,
+                    r.meta().iterations
                 );
-            }
-            if args.flag("stats") {
-                println!("\niter  sims_pc  sims_cc  reassign  skips(loop/bound)  ms");
-                for (i, s) in r.stats.iters.iter().enumerate() {
-                    println!(
-                        "{:>4}  {:>8} {:>8} {:>9}  {:>7}/{:<9} {:>8.2}",
-                        i,
-                        s.sims_point_center,
-                        s.sims_center_center,
-                        s.reassignments,
-                        s.loop_skips,
-                        s.bound_skips,
-                        s.wall_ms
-                    );
-                }
             }
         }
         "gen" => {

@@ -204,10 +204,12 @@ mod tests {
     fn objective_sampled_estimates_exact_value() {
         use crate::data::synth::SynthConfig;
         let ds = SynthConfig::small_demo().generate(31);
-        let r = crate::kmeans::run(
-            &ds.matrix,
-            &crate::kmeans::KMeansConfig::new(6).seed(3),
-        );
+        let r = crate::kmeans::SphericalKMeans::new(6)
+            .variant(crate::kmeans::Variant::Standard)
+            .seed(3)
+            .fit(&ds.matrix)
+            .unwrap()
+            .into_result();
         let exact = objective(&ds.matrix, &r.assignments, &r.centers);
         // sample ≥ rows: exact.
         let full = objective_sampled(&ds.matrix, &r.assignments, &r.centers, 10_000, 1);

@@ -3,12 +3,18 @@
 //! every platform; the decoder trusts nothing it has not validated.
 
 use super::{Model, TrainingMeta};
+use crate::kmeans::{MiniBatchParams, TrainState};
 use crate::sparse::DenseMatrix;
 
 /// Leading magic of every `.spkm` file.
 pub(crate) const MAGIC: [u8; 8] = *b"SPHKMDL\0";
-/// Current (and only) format version this build reads and writes.
+/// Serve-only format version: centers + metadata, no training state.
+/// State-free models still encode exactly these bytes, so files written
+/// by earlier builds are byte-identical to what this build writes.
 pub(crate) const VERSION: u32 = 1;
+/// State-bearing format version: version 1 plus the resumable
+/// [`TrainState`] section (see the [module docs](super)).
+pub(crate) const VERSION_STATE: u32 = 2;
 /// Ceiling on the dense k×d f32 center matrix a load will reconstruct
 /// (16 GiB). The file stores centers sparsely, so a hostile (or corrupt)
 /// header can claim a huge `d` with almost no bytes behind it — without
@@ -30,7 +36,7 @@ pub enum ModelError {
     BadMagic,
     /// The file was written by a newer format version than this build
     /// understands; guessing at an unknown layout would corrupt silently.
-    #[error("unsupported model format version {found} (this build reads ≤ {VERSION})")]
+    #[error("unsupported model format version {found} (this build reads ≤ {VERSION_STATE})")]
     UnsupportedVersion {
         /// Version recorded in the file.
         found: u32,
@@ -59,9 +65,10 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Encode `model` to the version-1 byte layout, checksum included. The
-/// encoding is a pure function of the model, so identical models produce
-/// byte-identical files.
+/// Encode `model` to the `.spkm` byte layout (version 1 without training
+/// state, version 2 with), checksum included. The encoding is a pure
+/// function of the model, so identical models produce byte-identical
+/// files.
 pub(crate) fn encode(model: &Model) -> Vec<u8> {
     let (k, d) = (model.k(), model.d());
     // Sparse CSR pass over the dense centers: a coordinate is stored iff
@@ -80,9 +87,11 @@ pub(crate) fn encode(model: &Model) -> Vec<u8> {
         indptr.push(indices.len() as u64);
     }
     let meta = model.meta();
+    let state = model.state();
+    let version = if state.is_some() { VERSION_STATE } else { VERSION };
     let mut buf = Vec::with_capacity(64 + 8 * k + 8 * indices.len());
     buf.extend_from_slice(&MAGIC);
-    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&version.to_le_bytes());
     buf.extend_from_slice(&0u32.to_le_bytes()); // flags (reserved)
     buf.extend_from_slice(&(k as u64).to_le_bytes());
     buf.extend_from_slice(&(d as u64).to_le_bytes());
@@ -106,6 +115,33 @@ pub(crate) fn encode(model: &Model) -> Vec<u8> {
     }
     for &v in &values {
         buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    if let Some(state) = state {
+        buf.extend_from_slice(&state.steps_done.to_le_bytes());
+        buf.push(u8::from(state.converged));
+        buf.extend_from_slice(&(state.assignments.len() as u64).to_le_bytes());
+        for &a in &state.assignments {
+            buf.extend_from_slice(&a.to_le_bytes());
+        }
+        for &c in &state.counts {
+            buf.extend_from_slice(&c.to_le_bytes());
+        }
+        for &s in &state.sums {
+            buf.extend_from_slice(&s.to_bits().to_le_bytes());
+        }
+        // Mini-batch schedule the state was trained under (flag byte,
+        // then the four knobs; truncate stores 0 for None — Some(0) is
+        // rejected at fit time, so the encoding is unambiguous).
+        match &state.minibatch {
+            None => buf.push(0),
+            Some(p) => {
+                buf.push(1);
+                buf.extend_from_slice(&(p.batch_size as u64).to_le_bytes());
+                buf.extend_from_slice(&(p.epochs as u64).to_le_bytes());
+                buf.extend_from_slice(&p.tol.to_bits().to_le_bytes());
+                buf.extend_from_slice(&(p.truncate.unwrap_or(0) as u64).to_le_bytes());
+            }
+        }
     }
     let sum = fnv1a(&buf);
     buf.extend_from_slice(&sum.to_le_bytes());
@@ -169,9 +205,10 @@ pub(crate) fn decode(buf: &[u8]) -> Result<Model, ModelError> {
         return Err(ModelError::BadMagic);
     }
     let version = cur.u32("version")?;
-    if version != VERSION {
+    if version != VERSION && version != VERSION_STATE {
         return Err(ModelError::UnsupportedVersion { found: version });
     }
+    let has_state = version == VERSION_STATE;
     let flags = cur.u32("flags")?;
     if flags != 0 {
         return Err(ModelError::Corrupt(format!("reserved flags set: {flags:#x}")));
@@ -196,7 +233,9 @@ pub(crate) fn decode(buf: &[u8]) -> Result<Model, ModelError> {
     // nnz reports Truncated instead of attempting a giant allocation: the
     // arrays below must all fit in the bytes that are actually present.
     // norms + indptr + (indices + values) + checksum, in u128 so a
-    // hostile header cannot overflow the accounting itself.
+    // hostile header cannot overflow the accounting itself. (The
+    // variable-length version-2 state section accounts for itself the
+    // same way once its row count is known.)
     let needed = 8u128 * k as u128 + 8 * (k as u128 + 1) + 8 * nnz as u128 + 8;
     if needed > (buf.len() - cur.pos) as u128 {
         return Err(ModelError::Truncated { section: "center arrays" });
@@ -217,6 +256,70 @@ pub(crate) fn decode(buf: &[u8]) -> Result<Model, ModelError> {
     for _ in 0..nnz {
         values.push(f32::from_bits(cur.u32("values")?));
     }
+    let state = if has_state {
+        let steps_done = cur.u64("training state")?;
+        let converged = match cur.take(1, "training state")?[0] {
+            0 => false,
+            1 => true,
+            other => {
+                return Err(ModelError::Corrupt(format!(
+                    "converged flag must be 0 or 1, got {other}"
+                )))
+            }
+        };
+        let n = checked_dim(cur.u64("training state")?, "state rows", 1 << 40)?;
+        // Up-front size accounting for the variable-length section, as for
+        // the center arrays above: assignments + counts + sums + checksum.
+        let needed =
+            4u128 * n as u128 + 8 * k as u128 + 8 * (k as u128 * d as u128) + 8;
+        if needed > (buf.len() - cur.pos) as u128 {
+            return Err(ModelError::Truncated { section: "training state" });
+        }
+        let mut assignments = Vec::with_capacity(n);
+        for _ in 0..n {
+            assignments.push(cur.u32("state assignments")?);
+        }
+        let mut counts = Vec::with_capacity(k);
+        for _ in 0..k {
+            counts.push(cur.u64("state counts")?);
+        }
+        let mut sums = Vec::with_capacity(k * d);
+        for _ in 0..k * d {
+            sums.push(f64::from_bits(cur.u64("state sums")?));
+        }
+        let minibatch = match cur.take(1, "state schedule")?[0] {
+            0 => None,
+            1 => {
+                let batch_size =
+                    checked_dim(cur.u64("state schedule")?, "batch_size", 1 << 40)?;
+                let epochs = checked_dim(cur.u64("state schedule")?, "epochs", 1 << 40)?;
+                let tol = f64::from_bits(cur.u64("state schedule")?);
+                let truncate = checked_dim(cur.u64("state schedule")?, "truncate", 1 << 40)?;
+                if batch_size == 0 {
+                    return Err(ModelError::Corrupt("state batch_size is 0".into()));
+                }
+                if !tol.is_finite() || tol < 0.0 {
+                    return Err(ModelError::Corrupt(format!(
+                        "state tol {tol} is not a valid tolerance"
+                    )));
+                }
+                Some(MiniBatchParams {
+                    batch_size,
+                    epochs,
+                    tol,
+                    truncate: if truncate == 0 { None } else { Some(truncate) },
+                })
+            }
+            other => {
+                return Err(ModelError::Corrupt(format!(
+                    "state schedule flag must be 0 or 1, got {other}"
+                )))
+            }
+        };
+        Some(TrainState { steps_done, converged, assignments, counts, sums, minibatch })
+    } else {
+        None
+    };
     let stored_sum = u64::from_le_bytes(
         cur.take(8, "checksum")?
             .try_into()
@@ -250,6 +353,22 @@ pub(crate) fn decode(buf: &[u8]) -> Result<Model, ModelError> {
     }
     if let Some(j) = norms.iter().position(|n| !n.is_finite()) {
         return Err(ModelError::Corrupt(format!("non-finite norm for center {j}")));
+    }
+    if let Some(state) = &state {
+        // Training-state sanity: every assignment must name an existing
+        // cluster and every sum accumulator must be a finite number — a
+        // resumed run would otherwise corrupt silently or panic later.
+        if let Some(i) = state.assignments.iter().position(|&a| a as usize >= k) {
+            return Err(ModelError::Corrupt(format!(
+                "state assignment {} at row {i} out of bounds for k = {k}",
+                state.assignments[i]
+            )));
+        }
+        if let Some(i) = state.sums.iter().position(|s| !s.is_finite()) {
+            return Err(ModelError::Corrupt(format!(
+                "non-finite state sum at coordinate {i}"
+            )));
+        }
     }
     // CSR invariants: monotone indptr ending at nnz; strictly increasing
     // in-bounds indices per row.
@@ -293,6 +412,7 @@ pub(crate) fn decode(buf: &[u8]) -> Result<Model, ModelError> {
         norms,
         nnz,
         TrainingMeta { variant, kernel, iterations, objective, seed },
+        state,
     ))
 }
 
@@ -342,6 +462,57 @@ mod tests {
         assert_eq!(m.center_nnz(), 2, "-0.0 has a non-zero bit pattern");
         let back = decode(&encode(&m)).unwrap();
         assert_eq!(back.centers().row(0)[0].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn state_bearing_models_round_trip_as_version_2() {
+        let state = TrainState {
+            steps_done: 3,
+            converged: true,
+            assignments: vec![0, 1, 1],
+            counts: vec![1, 2],
+            sums: vec![0.5, -0.25, 0.0, 1.5, 0.0, 2.0],
+            minibatch: Some(MiniBatchParams {
+                batch_size: 256,
+                epochs: 7,
+                tol: 1e-3,
+                truncate: Some(16),
+            }),
+        };
+        let m = toy_model().with_state(Some(state));
+        let bytes = encode(&m);
+        assert_eq!(&bytes[8..12], &2u32.to_le_bytes(), "state ⇒ version 2");
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(encode(&back), bytes, "deterministic encoding");
+        // Stateless models keep writing byte-stable version-1 files.
+        let v1 = encode(&toy_model());
+        assert_eq!(&v1[8..12], &1u32.to_le_bytes());
+        assert!(decode(&v1).unwrap().state().is_none());
+        // Truncating inside the state section is a typed error.
+        for cut in [v1.len(), v1.len() + 5, bytes.len() - 9] {
+            assert!(matches!(
+                decode(&bytes[..cut]),
+                Err(ModelError::Truncated { .. })
+            ));
+        }
+        // An out-of-bounds state assignment (valid checksum) is Corrupt.
+        let mut bad = encode(&toy_model().with_state(Some(TrainState {
+            steps_done: 0,
+            converged: false,
+            assignments: vec![9, 0, 0],
+            counts: vec![1, 2],
+            sums: vec![0.0; 6],
+            minibatch: None,
+        })));
+        let body_end = bad.len() - 8;
+        let sum = fnv1a(&bad[..body_end]);
+        bad[body_end..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode(&bad).unwrap_err();
+        assert!(
+            matches!(&err, ModelError::Corrupt(msg) if msg.contains("out of bounds")),
+            "{err}"
+        );
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! between [`crate::kmeans`] (which produces centers) and [`crate::serve`]
 //! (which answers nearest-center queries against them).
 //!
-//! # The `.spkm` binary format (version 1)
+//! # The `.spkm` binary format (versions 1 and 2)
 //!
 //! Fixed little-endian encoding on every platform, single file, designed
 //! so that loading validates everything it cannot trust:
@@ -17,7 +17,7 @@
 //! | Section | Bytes | Contents |
 //! |---|---|---|
 //! | magic | 8 | `b"SPHKMDL\0"` |
-//! | version | 4 | `u32` = 1 (future versions are rejected, not guessed) |
+//! | version | 4 | `u32` = 1 or 2 (future versions are rejected, not guessed) |
 //! | flags | 4 | reserved, must be 0 |
 //! | shape | 24 | `k`, `d`, center `nnz` as `u64` |
 //! | training | 24 | iterations `u64`, seed `u64`, objective `f64` |
@@ -27,7 +27,21 @@
 //! | indptr | 8·(k+1) | CSR row pointers over the center non-zeros, `u64` |
 //! | indices | 4·nnz | column (term) ids, `u32`, strictly increasing per row |
 //! | values | 4·nnz | center coordinates, `f32` bits |
+//! | state (v2) | 18 + 4·n + 8·k + 8·k·d (+32) | resumable training state, below |
 //! | checksum | 8 | FNV-1a 64 over every preceding byte |
+//!
+//! **Version 2** carries the resumable [`TrainState`] between values and
+//! checksum: `steps_done` (`u64`), `converged` (`u8`), `n` (`u64`), the
+//! per-row assignments (`u32` each, all `< k`), per-cluster counts
+//! (`u64` each), the unnormalized f64 sum accumulators (k·d `f64`
+//! bits), and a schedule flag byte followed — for mini-batch states — by
+//! the training schedule (`batch_size`, `epochs`, `tol`, `truncate`, 32
+//! bytes) a resume must reproduce. The sums are what make a resumed run
+//! **bit-identical** to an
+//! uninterrupted one — the exact engines maintain them incrementally, so
+//! they cannot be reconstructed from the f32 centers. Version-1 files
+//! (serve-only models) remain byte-identical to what earlier builds
+//! wrote and load with `state = None`.
 //!
 //! Centers are stored **sparse** (CSR) because converged text centers —
 //! especially Knittel-style truncated ones — are mostly zeros; a coordinate
@@ -46,7 +60,7 @@ mod format;
 
 pub use format::ModelError;
 
-use crate::kmeans::{KMeansConfig, KMeansResult};
+use crate::kmeans::{KMeansConfig, KMeansResult, TrainState};
 use crate::sparse::DenseMatrix;
 use std::path::Path;
 
@@ -80,6 +94,10 @@ pub struct Model {
     /// matrix.
     nnz: usize,
     meta: TrainingMeta,
+    /// Resumable training state (f64 sum accumulators, counts,
+    /// assignments). `None` for serve-only models; persisted as the
+    /// version-2 `.spkm` layout when present.
+    state: Option<TrainState>,
 }
 
 impl Model {
@@ -98,7 +116,22 @@ impl Model {
             })
             .collect();
         let nnz = centers.data().iter().filter(|v| v.to_bits() != 0).count();
-        Self { k, d, centers, norms, nnz, meta }
+        Self { k, d, centers, norms, nnz, meta, state: None }
+    }
+
+    /// Attach (or remove) resumable training state. State-bearing models
+    /// save in the version-2 `.spkm` layout; `None` keeps the version-1
+    /// serve-only encoding.
+    #[must_use]
+    pub fn with_state(mut self, state: Option<TrainState>) -> Self {
+        self.state = state;
+        self
+    }
+
+    /// The resumable training state, when this model carries one.
+    #[inline]
+    pub fn state(&self) -> Option<&TrainState> {
+        self.state.as_ref()
     }
 
     /// Build a model from a finished clustering run — what
@@ -199,21 +232,28 @@ impl Model {
         norms: Vec<f64>,
         nnz: usize,
         meta: TrainingMeta,
+        state: Option<TrainState>,
     ) -> Self {
-        Self { k, d, centers, norms, nnz, meta }
+        Self { k, d, centers, norms, nnz, meta, state }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kmeans::{run, KMeansConfig, Variant};
+    use crate::kmeans::{KMeansConfig, SphericalKMeans, Variant};
 
     #[test]
     fn from_run_records_provenance() {
         let ds = crate::data::synth::SynthConfig::small_demo().generate(7);
         let cfg = KMeansConfig::new(5).variant(Variant::SimplifiedElkan).seed(11).max_iter(20);
-        let r = run(&ds.matrix, &cfg);
+        let r = SphericalKMeans::new(5)
+            .variant(Variant::SimplifiedElkan)
+            .seed(11)
+            .max_iter(20)
+            .fit(&ds.matrix)
+            .unwrap()
+            .into_result();
         let m = Model::from_run(&r, &cfg);
         assert_eq!(m.k(), 5);
         assert_eq!(m.d(), ds.matrix.cols());

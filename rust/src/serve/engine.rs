@@ -43,6 +43,14 @@ impl ServeMode {
     }
 }
 
+impl std::fmt::Display for ServeMode {
+    /// The CLI/report spelling of [`ServeMode::name`]; round-trips
+    /// through [`FromStr`](std::str::FromStr).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 impl std::str::FromStr for ServeMode {
     type Err = String;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
@@ -471,6 +479,9 @@ mod tests {
         assert_eq!(ServeMode::default(), ServeMode::Auto);
         for m in [ServeMode::Auto, ServeMode::Pruned, ServeMode::Exhaustive] {
             assert!(!m.name().is_empty());
+            // Display ↔ FromStr round trip, exhaustively.
+            assert_eq!(m.to_string(), m.name());
+            assert_eq!(m.to_string().parse::<ServeMode>().unwrap(), m);
         }
         assert_eq!(toy_engine(ServeMode::Pruned).mode(), "pruned");
         assert_eq!(toy_engine(ServeMode::Exhaustive).mode(), "exhaustive");
@@ -524,9 +535,12 @@ mod tests {
         let data = crate::data::synth::SynthConfig::small_demo().generate(5).matrix;
         let mk = |threads: usize| {
             let ds = crate::data::synth::SynthConfig::small_demo().generate(9);
-            let cfg = crate::kmeans::KMeansConfig::new(6).seed(2).max_iter(10);
-            let r = crate::kmeans::run(&ds.matrix, &cfg);
-            let model = Model::from_run(&r, &cfg);
+            let fitted = crate::kmeans::SphericalKMeans::new(6)
+                .seed(2)
+                .max_iter(10)
+                .fit(&ds.matrix)
+                .unwrap();
+            let model = Model::new(fitted.centers().clone(), fitted.meta().clone());
             QueryEngine::new(model, &ServeConfig { mode: ServeMode::Pruned, threads })
         };
         let serial = mk(1);

@@ -1,0 +1,85 @@
+//! Public-API surface snapshot: every `pub` item declaration line in
+//! `src/` is recorded in the committed `rust/api-surface.txt`. A PR that
+//! changes the public surface — adds, removes, renames, or re-signs an
+//! item — fails this test until the snapshot is regenerated, which makes
+//! API diffs explicit in review instead of buried in implementation
+//! hunks.
+//!
+//! Regenerate after an intentional change with:
+//!
+//! ```text
+//! UPDATE_API_SURFACE=1 cargo test -q --test api_surface
+//! ```
+//!
+//! The scan is deliberately simple (first line of each `pub fn` /
+//! `pub struct` / `pub enum` / `pub trait` / `pub const` / `pub type` /
+//! `pub mod` / `pub use` declaration, path-sorted): it is a tripwire for
+//! review, not a semantic API model. `pub(crate)` items are internal and
+//! excluded.
+
+use std::path::{Path, PathBuf};
+
+/// Declaration prefixes that constitute the public surface.
+const KINDS: [&str; 8] = [
+    "pub fn ", "pub struct ", "pub enum ", "pub trait ", "pub const ", "pub type ", "pub mod ",
+    "pub use ",
+];
+
+fn collect(dir: &Path, base: &Path, out: &mut Vec<String>) {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("read_dir {}: {e}", dir.display()))
+        .map(|e| e.expect("dir entry").path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect(&p, base, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            let rel = p
+                .strip_prefix(base)
+                .expect("src-relative path")
+                .to_string_lossy()
+                .replace('\\', "/");
+            let text = std::fs::read_to_string(&p)
+                .unwrap_or_else(|e| panic!("read {}: {e}", p.display()));
+            for line in text.lines() {
+                let t = line.trim();
+                if KINDS.iter().any(|k| t.starts_with(k)) {
+                    out.push(format!("{rel}: {t}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn public_api_surface_matches_committed_snapshot() {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let src = manifest.join("src");
+    let snap_path = manifest.join("api-surface.txt");
+    let mut lines = Vec::new();
+    collect(&src, &src, &mut lines);
+    let current = lines.join("\n") + "\n";
+    if std::env::var("UPDATE_API_SURFACE").is_ok() {
+        std::fs::write(&snap_path, &current).expect("write snapshot");
+        return;
+    }
+    let committed = std::fs::read_to_string(&snap_path).unwrap_or_default();
+    if committed == current {
+        return;
+    }
+    // Readable failure: show what changed, not two multi-hundred-line
+    // blobs.
+    let old: std::collections::BTreeSet<&str> = committed.lines().collect();
+    let new: std::collections::BTreeSet<&str> = current.lines().collect();
+    let added: Vec<&&str> = new.difference(&old).collect();
+    let removed: Vec<&&str> = old.difference(&new).collect();
+    panic!(
+        "public API surface changed ({} added, {} removed).\n\nAdded:\n{}\n\nRemoved:\n{}\n\n\
+         If intentional, regenerate the snapshot:\n  UPDATE_API_SURFACE=1 cargo test -q --test api_surface\n",
+        added.len(),
+        removed.len(),
+        added.iter().map(|s| format!("  + {s}")).collect::<Vec<_>>().join("\n"),
+        removed.iter().map(|s| format!("  - {s}")).collect::<Vec<_>>().join("\n"),
+    );
+}

@@ -207,6 +207,81 @@ fn cluster_save_model_then_assign_end_to_end() {
 }
 
 #[test]
+fn cluster_resume_continues_a_saved_model() {
+    let dir = std::env::temp_dir().join("sphkm-cli-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let data = dir.join("resume-corpus.svm");
+    let model = dir.join("resume-model.spkm");
+    let out = sphkm()
+        .args(["gen", "--data", "demo", "--out", data.to_str().unwrap(), "--seed", "6"])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    // Train for only 1 iteration and persist the (unconverged) state.
+    let out = sphkm()
+        .args([
+            "cluster", "--data", data.to_str().unwrap(), "--k", "5", "--algo",
+            "simp-hamerly", "--seed", "4", "--max-iter", "1",
+            "--save-model", model.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("converged=false"), "{text}");
+    // Resume from the file: k and engine come from the model; the run
+    // finishes what the interrupted one started.
+    let out = sphkm()
+        .args([
+            "cluster", "--data", data.to_str().unwrap(), "--seed", "4",
+            "--resume", model.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("resuming Simp.Hamerly model"), "{text}");
+    assert!(text.contains("k=5"), "{text}");
+    assert!(text.contains("converged=true"), "{text}");
+    // Mini-batch models resume too, defaulting to the schedule persisted
+    // in the file (batch size / truncation), with the engine inferred.
+    let mb_model = dir.join("resume-mb.spkm");
+    let out = sphkm()
+        .args([
+            "cluster", "--data", data.to_str().unwrap(), "--k", "4", "--seed", "9",
+            "--minibatch", "--batch-size", "64", "--epochs", "2", "--truncate", "16",
+            "--save-model", mb_model.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = sphkm()
+        .args([
+            "cluster", "--data", data.to_str().unwrap(), "--seed", "9",
+            "--resume", mb_model.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("resuming minibatch model"), "{text}");
+    assert!(text.contains("k=4"), "{text}");
+
+    // A corrupt resume file is rejected with a nonzero exit.
+    let garbage = dir.join("garbage-resume.spkm");
+    std::fs::write(&garbage, b"not a model").unwrap();
+    let out = sphkm()
+        .args([
+            "cluster", "--data", data.to_str().unwrap(),
+            "--resume", garbage.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("error loading model"));
+}
+
+#[test]
 fn sweep_runs_from_config_file() {
     let dir = std::env::temp_dir().join("sphkm-cli-tests");
     std::fs::create_dir_all(&dir).unwrap();

@@ -4,23 +4,35 @@
 //! converge to the same assignment and objective as the standard algorithm.
 //!
 //! These tests run the full matrix of (dataset kind × k × seed × variant)
-//! at tiny scale and compare against Standard.
+//! at tiny scale and compare against Standard, all through the
+//! `SphericalKMeans` estimator front door.
 
 use sphkm::data::datasets::{self, Scale};
 use sphkm::data::synth::SynthConfig;
 use sphkm::data::Dataset;
 use sphkm::init::{seed_centers, InitMethod};
-use sphkm::kmeans::{run_with_centers, KMeansConfig, Variant};
+use sphkm::kmeans::{Engine, ExactParams, KMeansResult, Variant};
+use sphkm::sparse::{CsrMatrix, DenseMatrix};
+use sphkm::SphericalKMeans;
+
+/// One estimator fit from shared explicit centers — the migration of the
+/// old `run_with_centers` test idiom.
+fn fit_from(data: &CsrMatrix, centers: DenseMatrix, est: SphericalKMeans) -> KMeansResult {
+    est.warm_start_centers(centers)
+        .fit(data)
+        .expect("test configuration is valid")
+        .into_result()
+}
 
 fn exactness_on(ds: &Dataset, ks: &[usize], seeds: &[u64]) {
     for &k in ks {
         let k = k.min(ds.matrix.rows() / 2).max(2);
         for &seed in seeds {
             let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, seed);
-            let baseline = run_with_centers(
+            let baseline = fit_from(
                 &ds.matrix,
                 init.centers.clone(),
-                &KMeansConfig::new(k).variant(Variant::Standard),
+                SphericalKMeans::new(k).variant(Variant::Standard),
             );
             assert!(
                 baseline.converged,
@@ -35,10 +47,10 @@ fn exactness_on(ds: &Dataset, ks: &[usize], seeds: &[u64]) {
                 Variant::Yinyang,
                 Variant::Exponion,
             ] {
-                let r = run_with_centers(
+                let r = fit_from(
                     &ds.matrix,
                     init.centers.clone(),
-                    &KMeansConfig::new(k).variant(variant),
+                    SphericalKMeans::new(k).variant(variant),
                 );
                 assert!(
                     r.converged,
@@ -106,16 +118,16 @@ fn exact_with_kmeanspp_seeding() {
         InitMethod::AfkMc2 { alpha: 1.0, chain: 30 },
     ] {
         let init = seed_centers(&ds.matrix, 8, &method, 21);
-        let baseline = run_with_centers(
+        let baseline = fit_from(
             &ds.matrix,
             init.centers.clone(),
-            &KMeansConfig::new(8).variant(Variant::Standard),
+            SphericalKMeans::new(8).variant(Variant::Standard),
         );
         for variant in [Variant::Elkan, Variant::SimplifiedHamerly, Variant::Yinyang, Variant::Exponion] {
-            let r = run_with_centers(
+            let r = fit_from(
                 &ds.matrix,
                 init.centers.clone(),
-                &KMeansConfig::new(8).variant(variant),
+                SphericalKMeans::new(8).variant(variant),
             );
             assert_eq!(r.assignments, baseline.assignments, "{:?}", variant);
         }
@@ -128,23 +140,27 @@ fn exact_with_tight_hamerly_bound() {
     let ds = datasets::dblp_author_conf(Scale::Tiny, 9);
     for &k in &[2usize, 10, 30] {
         let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 31);
-        let baseline = run_with_centers(
+        let baseline = fit_from(
             &ds.matrix,
             init.centers.clone(),
-            &KMeansConfig::new(k).variant(Variant::Standard),
+            SphericalKMeans::new(k).variant(Variant::Standard),
         );
         for variant in [Variant::Hamerly, Variant::SimplifiedHamerly, Variant::Yinyang, Variant::Exponion] {
-            let tight = run_with_centers(
+            let tight = fit_from(
                 &ds.matrix,
                 init.centers.clone(),
-                &KMeansConfig::new(k).variant(variant).tight_bound(true),
+                SphericalKMeans::new(k).engine(Engine::Exact(ExactParams {
+                    variant,
+                    tight_bound: true,
+                    ..Default::default()
+                })),
             );
             assert_eq!(tight.assignments, baseline.assignments);
             // The tight rule must prune at least as well as Eq. 9.
-            let loose = run_with_centers(
+            let loose = fit_from(
                 &ds.matrix,
                 init.centers.clone(),
-                &KMeansConfig::new(k).variant(variant),
+                SphericalKMeans::new(k).variant(variant),
             );
             assert!(
                 tight.stats.total_point_center() <= loose.stats.total_point_center(),
@@ -174,17 +190,17 @@ fn parallel_matches_serial() {
     for &k in &[2usize, 8] {
         let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 3);
         for variant in Variant::ALL {
-            let serial = run_with_centers(
+            let serial = fit_from(
                 &ds.matrix,
                 init.centers.clone(),
-                &KMeansConfig::new(k).variant(variant).threads(1),
+                SphericalKMeans::new(k).variant(variant).threads(1),
             );
             assert!(serial.converged, "{} did not converge", variant.name());
             for &threads in &[4usize, 0] {
-                let par = run_with_centers(
+                let par = fit_from(
                     &ds.matrix,
                     init.centers.clone(),
-                    &KMeansConfig::new(k).variant(variant).threads(threads),
+                    SphericalKMeans::new(k).variant(variant).threads(threads),
                 );
                 assert_eq!(
                     par.assignments,
@@ -214,15 +230,15 @@ fn parallel_shard_merged_stats_equal_serial_counts() {
     let k = 10;
     let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 5);
     for variant in Variant::ALL {
-        let serial = run_with_centers(
+        let serial = fit_from(
             &ds.matrix,
             init.centers.clone(),
-            &KMeansConfig::new(k).variant(variant).threads(1),
+            SphericalKMeans::new(k).variant(variant).threads(1),
         );
-        let par = run_with_centers(
+        let par = fit_from(
             &ds.matrix,
             init.centers.clone(),
-            &KMeansConfig::new(k).variant(variant).threads(4),
+            SphericalKMeans::new(k).variant(variant).threads(4),
         );
         assert_eq!(
             par.stats.iters.len(),
@@ -246,23 +262,22 @@ fn parallel_shard_merged_stats_equal_serial_counts() {
 fn parallel_matches_serial_with_preinit_bounds() {
     // The §7 preinit path (seeded bounds, skipped initial pass) must obey
     // the same thread-count invariance.
-    use sphkm::init::seed_centers_with_bounds;
-    use sphkm::kmeans::run_seeded;
     let ds = parallel_test_corpus(37);
     let k = 9;
-    let init = seed_centers_with_bounds(&ds.matrix, k, &InitMethod::KMeansPP { alpha: 1.0 }, 11);
-    assert!(init.sim_matrix.is_some());
+    let preinit_est = |variant, threads| {
+        SphericalKMeans::new(k)
+            .engine(Engine::Exact(ExactParams {
+                variant,
+                preinit: true,
+                ..Default::default()
+            }))
+            .init(InitMethod::KMeansPP { alpha: 1.0 })
+            .seed(11)
+            .threads(threads)
+    };
     for variant in [Variant::SimplifiedElkan, Variant::SimplifiedHamerly, Variant::Yinyang] {
-        let serial = run_seeded(
-            &ds.matrix,
-            init.clone(),
-            &KMeansConfig::new(k).variant(variant).threads(1),
-        );
-        let par = run_seeded(
-            &ds.matrix,
-            init.clone(),
-            &KMeansConfig::new(k).variant(variant).threads(4),
-        );
+        let serial = preinit_est(variant, 1).fit(&ds.matrix).unwrap().into_result();
+        let par = preinit_est(variant, 4).fit(&ds.matrix).unwrap().into_result();
         assert_eq!(par.assignments, serial.assignments, "{}", variant.name());
         assert_eq!(
             par.objective.to_bits(),
@@ -283,21 +298,24 @@ fn degenerate_k_equals_one_and_k_equals_n() {
         // top2 runner-up clamp (cosine floor, no sentinel) must hold on
         // both the serial and the sharded parallel path.
         for threads in [1usize, 4] {
-            let r = sphkm::kmeans::run(
-                &ds.matrix,
-                &KMeansConfig::new(1).variant(variant).seed(3).threads(threads),
-            );
-            assert!(r.converged, "{} threads={threads}", variant.name());
-            assert!(r.assignments.iter().all(|&a| a == 0));
+            let r = SphericalKMeans::new(1)
+                .variant(variant)
+                .seed(3)
+                .threads(threads)
+                .fit(&ds.matrix)
+                .unwrap();
+            assert!(r.converged(), "{} threads={threads}", variant.name());
+            assert!(r.assignments().iter().all(|&a| a == 0));
         }
         // k = n/3 (large k relative to n).
         let k = n / 3;
-        let r = sphkm::kmeans::run(
-            &ds.matrix,
-            &KMeansConfig::new(k).variant(variant).seed(3),
-        );
-        assert!(r.converged, "{} large-k", variant.name());
-        assert!(r.assignments.iter().all(|&a| (a as usize) < k));
+        let r = SphericalKMeans::new(k)
+            .variant(variant)
+            .seed(3)
+            .fit(&ds.matrix)
+            .unwrap();
+        assert!(r.converged(), "{} large-k", variant.name());
+        assert!(r.assignments().iter().all(|&a| (a as usize) < k));
     }
 }
 
@@ -306,33 +324,39 @@ fn bounds_hold_during_entire_run() {
     // White-box invariant via public API: after convergence the lower
     // bound equality l(i) = ⟨x, c⟩ must reproduce the reported objective.
     let ds = SynthConfig::small_demo().generate(19);
-    let r = sphkm::kmeans::run(
-        &ds.matrix,
-        &KMeansConfig::new(6).variant(Variant::Elkan).seed(5),
-    );
-    let recomputed = sphkm::metrics::objective(&ds.matrix, &r.assignments, &r.centers);
-    assert!((recomputed - r.objective).abs() < 1e-9 * (1.0 + r.objective));
+    let r = SphericalKMeans::new(6)
+        .variant(Variant::Elkan)
+        .seed(5)
+        .fit(&ds.matrix)
+        .unwrap();
+    let recomputed = sphkm::metrics::objective(&ds.matrix, r.assignments(), r.centers());
+    assert!((recomputed - r.objective()).abs() < 1e-9 * (1.0 + r.objective()));
 }
 
 #[test]
 fn preinit_bounds_from_kmeanspp_are_exact_and_cheaper() {
     // §7 synergy: k-means++ collects the N×k similarity matrix during
-    // seeding; run_seeded consumes it, skips the initial O(N·k) pass, and
-    // must still produce exactly the same clustering as the plain path.
+    // seeding; the preinit engine knob consumes it, skips the initial
+    // O(N·k) pass, and must still produce exactly the same clustering as
+    // the plain path.
     use sphkm::init::seed_centers_with_bounds;
-    use sphkm::kmeans::run_seeded;
     let ds = datasets::simpsons_wiki(Scale::Tiny, 7);
     let k = 12;
     let method = InitMethod::KMeansPP { alpha: 1.0 };
     let init = seed_centers_with_bounds(&ds.matrix, k, &method, 17);
     assert!(init.sim_matrix.is_some(), "k-means++ should collect bounds");
 
+    let seeded_est = |variant, preinit| {
+        SphericalKMeans::new(k)
+            .engine(Engine::Exact(ExactParams { variant, preinit, ..Default::default() }))
+            .init(method)
+            .seed(17)
+    };
     // Baseline: same seeded assignment, standard algorithm.
-    let baseline = run_seeded(
-        &ds.matrix,
-        init.clone(),
-        &KMeansConfig::new(k).variant(Variant::Standard),
-    );
+    let baseline = seeded_est(Variant::Standard, true)
+        .fit(&ds.matrix)
+        .unwrap()
+        .into_result();
     for variant in [
         Variant::Elkan,
         Variant::SimplifiedElkan,
@@ -341,7 +365,7 @@ fn preinit_bounds_from_kmeanspp_are_exact_and_cheaper() {
         Variant::Yinyang,
         Variant::Exponion,
     ] {
-        let seeded = run_seeded(&ds.matrix, init.clone(), &KMeansConfig::new(k).variant(variant));
+        let seeded = seeded_est(variant, true).fit(&ds.matrix).unwrap().into_result();
         assert_eq!(
             seeded.assignments,
             baseline.assignments,
@@ -354,11 +378,12 @@ fn preinit_bounds_from_kmeanspp_are_exact_and_cheaper() {
             "{}: initial pass was not skipped",
             variant.name()
         );
-        // And the whole run must be cheaper than the non-seeded variant.
-        let plain = run_with_centers(
+        // And the whole run must be cheaper than the non-seeded variant
+        // (same seeding, plain bound initialization).
+        let plain = fit_from(
             &ds.matrix,
             init.centers.clone(),
-            &KMeansConfig::new(k).variant(variant),
+            SphericalKMeans::new(k).variant(variant),
         );
         assert!(
             seeded.stats.total_point_center() < plain.stats.total_point_center(),
@@ -374,11 +399,16 @@ fn preinit_absent_for_uniform_seeding() {
     let ds = SynthConfig::small_demo().generate(23);
     let init = seed_centers_with_bounds(&ds.matrix, 5, &InitMethod::Uniform, 3);
     assert!(init.sim_matrix.is_none());
-    // run_seeded still works, just without the skip.
-    let r = sphkm::kmeans::run_seeded(
-        &ds.matrix,
-        init,
-        &KMeansConfig::new(5).variant(Variant::SimplifiedElkan),
-    );
-    assert!(r.converged);
+    // The preinit knob is a no-op for seedings that collect no bounds —
+    // the fit still works, just without the skip.
+    let r = SphericalKMeans::new(5)
+        .engine(Engine::Exact(ExactParams {
+            variant: Variant::SimplifiedElkan,
+            preinit: true,
+            ..Default::default()
+        }))
+        .seed(3)
+        .fit(&ds.matrix)
+        .unwrap();
+    assert!(r.converged());
 }

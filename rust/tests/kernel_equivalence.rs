@@ -13,11 +13,18 @@
 
 use sphkm::data::synth::SynthConfig;
 use sphkm::init::{seed_centers, InitMethod};
-use sphkm::kmeans::{
-    minibatch, run_with_centers, Centers, KMeansConfig, Kernel, KernelChoice, Variant,
-};
+use sphkm::kmeans::{Centers, KMeansResult, Kernel, KernelChoice, Variant};
 use sphkm::sparse::{CsrMatrix, DenseMatrix, SparseVec};
 use sphkm::util::prop::{forall, Gen};
+use sphkm::{Engine, MiniBatchParams, SphericalKMeans};
+
+/// Fit from shared explicit centers, unwrapped to the result view.
+fn fit_from(data: &CsrMatrix, centers: DenseMatrix, est: SphericalKMeans) -> KMeansResult {
+    est.warm_start_centers(centers)
+        .fit(data)
+        .expect("test configuration is valid")
+        .into_result()
+}
 
 /// A random unit-row corpus at (approximately) the given density.
 fn random_corpus(g: &mut Gen, rows: usize, d: usize, density: f64) -> CsrMatrix {
@@ -113,17 +120,9 @@ fn full_runs_bit_identical_across_backends_and_densities() {
         let data = random_corpus(g, rows, d, density);
         let initial = initial_from_rows(&data, k);
         for variant in [Variant::Standard, Variant::SimplifiedHamerly, Variant::Elkan] {
-            let cfg = KMeansConfig::new(k).variant(variant).max_iter(20);
-            let dense = run_with_centers(
-                &data,
-                initial.clone(),
-                &cfg.clone().kernel(KernelChoice::Dense),
-            );
-            let inv = run_with_centers(
-                &data,
-                initial.clone(),
-                &cfg.clone().kernel(KernelChoice::Inverted),
-            );
+            let est = || SphericalKMeans::new(k).variant(variant).max_iter(20);
+            let dense = fit_from(&data, initial.clone(), est().kernel(KernelChoice::Dense));
+            let inv = fit_from(&data, initial.clone(), est().kernel(KernelChoice::Inverted));
             assert_eq!(
                 dense.assignments,
                 inv.assignments,
@@ -197,18 +196,18 @@ fn all_seven_variants_bit_identical_on_every_kernel_and_thread_count() {
         let k = 8;
         let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 11);
         for variant in Variant::ALL {
-            let base = KMeansConfig::new(k).variant(variant);
-            let reference = run_with_centers(
+            let base = || SphericalKMeans::new(k).variant(variant);
+            let reference = fit_from(
                 &ds.matrix,
                 init.centers.clone(),
-                &base.clone().kernel(KernelChoice::Dense).threads(1),
+                base().kernel(KernelChoice::Dense).threads(1),
             );
             for choice in [KernelChoice::Dense, KernelChoice::Inverted, KernelChoice::Auto] {
                 for threads in [1usize, 0] {
-                    let r = run_with_centers(
+                    let r = fit_from(
                         &ds.matrix,
                         init.centers.clone(),
-                        &base.clone().kernel(choice).threads(threads),
+                        base().kernel(choice).threads(threads),
                     );
                     assert_eq!(
                         r.assignments,
@@ -235,10 +234,10 @@ fn all_seven_variants_bit_identical_on_every_kernel_and_thread_count() {
             }
             // Gather shares the clustering on these corpora (the historic
             // fast-vs-gather toggle), though only to rounding, not bitwise.
-            let gather = run_with_centers(
+            let gather = fit_from(
                 &ds.matrix,
                 init.centers.clone(),
-                &base.clone().kernel(KernelChoice::Gather),
+                base().kernel(KernelChoice::Gather),
             );
             assert_eq!(
                 gather.assignments,
@@ -264,22 +263,27 @@ fn minibatch_bit_identical_across_kernels_truncation_and_threads() {
         let k = 6;
         let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 19);
         for truncate in [None, Some(16usize)] {
-            let base = KMeansConfig::new(k)
-                .seed(5)
-                .batch_size(64)
-                .epochs(3)
-                .truncate(truncate);
-            let reference = minibatch::run_with_centers(
+            let base = || {
+                SphericalKMeans::new(k)
+                    .engine(Engine::MiniBatch(MiniBatchParams {
+                        batch_size: 64,
+                        epochs: 3,
+                        truncate,
+                        ..Default::default()
+                    }))
+                    .seed(5)
+            };
+            let reference = fit_from(
                 &ds.matrix,
                 init.centers.clone(),
-                &base.clone().kernel(KernelChoice::Dense).threads(1),
+                base().kernel(KernelChoice::Dense).threads(1),
             );
             for choice in [KernelChoice::Dense, KernelChoice::Inverted, KernelChoice::Auto] {
                 for threads in [1usize, 0] {
-                    let r = minibatch::run_with_centers(
+                    let r = fit_from(
                         &ds.matrix,
                         init.centers.clone(),
-                        &base.clone().kernel(choice).threads(threads),
+                        base().kernel(choice).threads(threads),
                     );
                     assert_eq!(
                         r.assignments,
@@ -303,10 +307,10 @@ fn minibatch_bit_identical_across_kernels_truncation_and_threads() {
             }
             // Truncated sparse centroids are where the inverted file's
             // madd advantage concentrates.
-            let inv = minibatch::run_with_centers(
+            let inv = fit_from(
                 &ds.matrix,
                 init.centers.clone(),
-                &base.clone().kernel(KernelChoice::Inverted),
+                base().kernel(KernelChoice::Inverted),
             );
             if truncate.is_some() {
                 assert!(

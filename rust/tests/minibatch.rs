@@ -1,12 +1,15 @@
 //! Integration tests for the mini-batch engine: seeded determinism across
 //! thread counts, objective gap against the exact full-batch baseline on
-//! synthetic blobs, and the truncated-centroid invariants.
+//! synthetic blobs, and the truncated-centroid invariants — all through
+//! the `SphericalKMeans` estimator with `Engine::MiniBatch`.
 
 use sphkm::data::synth::SynthConfig;
 use sphkm::data::Dataset;
 use sphkm::init::{seed_centers, InitMethod};
-use sphkm::kmeans::{minibatch, run_with_centers, KMeansConfig, Variant};
+use sphkm::kmeans::{KMeansResult, Variant};
 use sphkm::metrics;
+use sphkm::sparse::DenseMatrix;
+use sphkm::{Engine, MiniBatchParams, SphericalKMeans};
 
 /// A blob corpus large enough for several row shards per batch and a
 /// meaningful full-batch baseline.
@@ -18,23 +21,28 @@ fn blobs(n_docs: usize, seed: u64) -> Dataset {
     cfg.generate(seed)
 }
 
+/// Mini-batch estimator with the given engine params.
+fn mb(k: usize, params: MiniBatchParams) -> SphericalKMeans {
+    SphericalKMeans::new(k).engine(Engine::MiniBatch(params))
+}
+
+/// Fit from shared explicit centers, unwrapped to the result view.
+fn fit_from(ds: &Dataset, centers: DenseMatrix, est: SphericalKMeans) -> KMeansResult {
+    est.warm_start_centers(centers)
+        .fit(&ds.matrix)
+        .expect("test configuration is valid")
+        .into_result()
+}
+
 #[test]
 fn minibatch_is_deterministic_across_threads() {
     let ds = blobs(1500, 51);
     let k = 6;
     let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 9);
-    let cfg = KMeansConfig::new(k).seed(13).batch_size(256).epochs(4);
-    let serial = minibatch::run_with_centers(
-        &ds.matrix,
-        init.centers.clone(),
-        &cfg.clone().threads(1),
-    );
+    let params = MiniBatchParams { batch_size: 256, epochs: 4, ..Default::default() };
+    let serial = fit_from(&ds, init.centers.clone(), mb(k, params).seed(13).threads(1));
     for &threads in &[4usize, 0] {
-        let par = minibatch::run_with_centers(
-            &ds.matrix,
-            init.centers.clone(),
-            &cfg.clone().threads(threads),
-        );
+        let par = fit_from(&ds, init.centers.clone(), mb(k, params).seed(13).threads(threads));
         assert_eq!(
             par.assignments, serial.assignments,
             "assignments diverge at threads={threads}"
@@ -57,15 +65,16 @@ fn minibatch_is_deterministic_across_threads() {
 #[test]
 fn minibatch_is_reproducible_for_a_fixed_seed() {
     let ds = blobs(900, 53);
-    let cfg = KMeansConfig::new(5).seed(7).batch_size(128).epochs(3);
-    let a = minibatch::run(&ds.matrix, &cfg);
-    let b = minibatch::run(&ds.matrix, &cfg);
-    assert_eq!(a.assignments, b.assignments);
-    assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    let params = MiniBatchParams { batch_size: 128, epochs: 3, ..Default::default() };
+    let a = mb(5, params).seed(7).fit(&ds.matrix).unwrap();
+    let b = mb(5, params).seed(7).fit(&ds.matrix).unwrap();
+    assert_eq!(a.assignments(), b.assignments());
+    assert_eq!(a.objective().to_bits(), b.objective().to_bits());
     // A different seed draws different batches.
-    let c = minibatch::run(&ds.matrix, &cfg.clone().seed(8));
+    let c = mb(5, params).seed(8).fit(&ds.matrix).unwrap();
     assert_ne!(
-        a.assignments, c.assignments,
+        a.assignments(),
+        c.assignments(),
         "different seeds should explore different batch sequences"
     );
 }
@@ -75,33 +84,33 @@ fn minibatch_objective_is_close_to_full_batch() {
     let ds = blobs(2000, 57);
     let k = 8;
     let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 5);
-    let full = run_with_centers(
-        &ds.matrix,
+    let full = fit_from(
+        &ds,
         init.centers.clone(),
-        &KMeansConfig::new(k).variant(Variant::Standard),
+        SphericalKMeans::new(k).variant(Variant::Standard),
     );
-    let mb = minibatch::run_with_centers(
-        &ds.matrix,
+    let mbr = fit_from(
+        &ds,
         init.centers.clone(),
-        &KMeansConfig::new(k).seed(11).batch_size(256).epochs(8).tol(1e-4),
+        mb(k, MiniBatchParams { batch_size: 256, epochs: 8, tol: 1e-4, truncate: None }).seed(11),
     );
-    let gap = metrics::objective_gap(mb.objective, full.objective);
+    let gap = metrics::objective_gap(mbr.objective, full.objective);
     // At this tiny scale the bar is looser than the bench's 2% (sampling
     // noise dominates); what matters is the order of magnitude.
     assert!(
         gap < 0.05,
         "mini-batch objective {:.2} more than 5% above full-batch {:.2} (gap {:.2}%)",
-        mb.objective,
+        mbr.objective,
         full.objective,
         gap * 100.0
     );
     // The seeded sampled evaluator agrees with the exact objective to
     // within its own sampling error.
-    let est = metrics::objective_sampled(&ds.matrix, &mb.assignments, &mb.centers, 500, 3);
+    let est = metrics::objective_sampled(&ds.matrix, &mbr.assignments, &mbr.centers, 500, 3);
     assert!(
-        (est - mb.objective).abs() < 0.25 * mb.objective.max(1.0),
+        (est - mbr.objective).abs() < 0.25 * mbr.objective.max(1.0),
         "sampled estimate {est} vs exact {}",
-        mb.objective
+        mbr.objective
     );
 }
 
@@ -110,14 +119,15 @@ fn truncation_keeps_centers_unit_norm_and_sparse() {
     let ds = blobs(1200, 59);
     let k = 6;
     let m = 10;
-    let cfg = KMeansConfig::new(k)
-        .seed(17)
-        .batch_size(256)
-        .epochs(4)
-        .truncate(Some(m));
-    let r = minibatch::run(&ds.matrix, &cfg);
+    let params = MiniBatchParams {
+        batch_size: 256,
+        epochs: 4,
+        truncate: Some(m),
+        ..Default::default()
+    };
+    let r = mb(k, params).seed(17).fit(&ds.matrix).unwrap();
     for j in 0..k {
-        let row = r.centers.row(j);
+        let row = r.centers().row(j);
         let nnz = row.iter().filter(|&&v| v != 0.0).count();
         assert!(nnz <= m, "center {j} has {nnz} > {m} non-zeros");
         let norm: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum();
@@ -128,10 +138,8 @@ fn truncation_keeps_centers_unit_norm_and_sparse() {
     }
     // Truncated runs stay deterministic across thread counts too.
     let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 21);
-    let serial =
-        minibatch::run_with_centers(&ds.matrix, init.centers.clone(), &cfg.clone().threads(1));
-    let par =
-        minibatch::run_with_centers(&ds.matrix, init.centers.clone(), &cfg.clone().threads(4));
+    let serial = fit_from(&ds, init.centers.clone(), mb(k, params).seed(17).threads(1));
+    let par = fit_from(&ds, init.centers.clone(), mb(k, params).seed(17).threads(4));
     assert_eq!(serial.assignments, par.assignments);
     assert_eq!(serial.objective.to_bits(), par.objective.to_bits());
 }
@@ -144,24 +152,24 @@ fn minibatch_uses_fewer_similarities_than_full_batch_standard() {
     let ds = blobs(2000, 61);
     let k = 8;
     let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 23);
-    let full = run_with_centers(
-        &ds.matrix,
+    let full = fit_from(
+        &ds,
         init.centers.clone(),
-        &KMeansConfig::new(k).variant(Variant::Standard),
+        SphericalKMeans::new(k).variant(Variant::Standard),
     );
-    let mb = minibatch::run_with_centers(
-        &ds.matrix,
+    let mbr = fit_from(
+        &ds,
         init.centers.clone(),
-        &KMeansConfig::new(k).seed(3).batch_size(500).epochs(2).tol(0.0),
+        mb(k, MiniBatchParams { batch_size: 500, epochs: 2, tol: 0.0, truncate: None }).seed(3),
     );
     // 2 epochs + final pass = at most 3 corpus-worth of similarities
     // (exactly, since every batch charges k per point).
     let n = ds.matrix.rows() as u64;
-    assert!(mb.stats.total_point_center() <= 3 * n * k as u64);
+    assert!(mbr.stats.total_point_center() <= 3 * n * k as u64);
     assert!(
-        mb.stats.total_point_center() < full.stats.total_point_center(),
+        mbr.stats.total_point_center() < full.stats.total_point_center(),
         "mini-batch ({}) must undercut full batch ({})",
-        mb.stats.total_point_center(),
+        mbr.stats.total_point_center(),
         full.stats.total_point_center()
     );
 }

@@ -1,8 +1,9 @@
 //! Model persistence integration tests: randomized save/load bit-exactness
 //! and the corrupt-file rejection taxonomy.
 
-use sphkm::kmeans::{run, KMeansConfig, Variant};
+use sphkm::kmeans::Variant;
 use sphkm::model::{Model, ModelError, TrainingMeta};
+use sphkm::SphericalKMeans;
 use sphkm::sparse::DenseMatrix;
 use sphkm::util::prop::forall;
 
@@ -70,16 +71,24 @@ fn prop_save_load_round_trips_bit_exactly() {
 #[test]
 fn trained_model_round_trips_through_disk() {
     let ds = sphkm::data::synth::SynthConfig::small_demo().generate(3);
-    let cfg = KMeansConfig::new(6).variant(Variant::Hamerly).seed(5).max_iter(30);
-    let r = run(&ds.matrix, &cfg);
-    let model = Model::from_run(&r, &cfg);
+    let fitted = SphericalKMeans::new(6)
+        .variant(Variant::Hamerly)
+        .seed(5)
+        .max_iter(30)
+        .fit(&ds.matrix)
+        .unwrap();
     let path = tmp("trained.spkm");
-    model.save(&path).unwrap();
+    fitted.save(&path).unwrap();
     let back = Model::load(&path).unwrap();
     std::fs::remove_file(&path).ok();
-    assert_eq!(back, model);
-    for j in 0..model.k() {
-        for (a, b) in back.centers().row(j).iter().zip(r.centers.row(j)) {
+    assert_eq!(&back, &fitted.to_model());
+    // The state-bearing round trip restores assignments and accumulators
+    // bit-for-bit.
+    let state = back.state().expect("fitted saves carry training state");
+    assert_eq!(state.assignments, fitted.assignments());
+    assert_eq!(state.converged, fitted.converged());
+    for j in 0..back.k() {
+        for (a, b) in back.centers().row(j).iter().zip(fitted.centers().row(j)) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
     }

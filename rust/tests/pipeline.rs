@@ -6,8 +6,9 @@ use sphkm::data::datasets::{self, Scale};
 use sphkm::data::synth::SynthConfig;
 use sphkm::data::text::{demo_corpus, TextPipeline};
 use sphkm::init::InitMethod;
-use sphkm::kmeans::{run, KMeansConfig, Variant};
+use sphkm::kmeans::Variant;
 use sphkm::metrics;
+use sphkm::SphericalKMeans;
 
 #[test]
 fn clustering_recovers_planted_topics() {
@@ -18,14 +19,13 @@ fn clustering_recovers_planted_topics() {
     let ds = cfg.generate(3);
     let truth = ds.labels.as_ref().unwrap();
     for variant in [Variant::Standard, Variant::SimplifiedElkan, Variant::Yinyang] {
-        let r = run(
-            &ds.matrix,
-            &KMeansConfig::new(8)
-                .variant(variant)
-                .init(InitMethod::KMeansPP { alpha: 1.0 })
-                .seed(5),
-        );
-        let nmi = metrics::nmi(&r.assignments, truth);
+        let r = SphericalKMeans::new(8)
+            .variant(variant)
+            .init(InitMethod::KMeansPP { alpha: 1.0 })
+            .seed(5)
+            .fit(&ds.matrix)
+            .unwrap();
+        let nmi = metrics::nmi(r.assignments(), truth);
         assert!(
             nmi > 0.5,
             "{}: NMI {nmi} too low for strong planted topics",
@@ -46,14 +46,13 @@ fn text_pipeline_clusters_demo_corpus() {
     let truth: Vec<u32> = (0..18).map(|i| (i / 6) as u32).collect();
     let best_purity = (0..5)
         .map(|seed| {
-            let r = run(
-                &ds.matrix,
-                &KMeansConfig::new(3)
-                    .variant(Variant::Elkan)
-                    .init(InitMethod::KMeansPP { alpha: 1.0 })
-                    .seed(seed),
-            );
-            metrics::purity(&r.assignments, &truth)
+            let r = SphericalKMeans::new(3)
+                .variant(Variant::Elkan)
+                .init(InitMethod::KMeansPP { alpha: 1.0 })
+                .seed(seed)
+                .fit(&ds.matrix)
+                .unwrap();
+            metrics::purity(r.assignments(), &truth)
         })
         .fold(0.0f64, f64::max);
     assert!(best_purity > 0.9, "theme purity {best_purity} too low");
@@ -66,14 +65,13 @@ fn better_seeding_never_explodes_objective() {
     let ds = datasets::simpsons_wiki(Scale::Tiny, 9);
     let mut objectives = Vec::new();
     for init in InitMethod::paper_set() {
-        let r = run(
-            &ds.matrix,
-            &KMeansConfig::new(10)
-                .variant(Variant::SimplifiedHamerly)
-                .init(init)
-                .seed(13),
-        );
-        objectives.push(r.objective);
+        let r = SphericalKMeans::new(10)
+            .variant(Variant::SimplifiedHamerly)
+            .init(init)
+            .seed(13)
+            .fit(&ds.matrix)
+            .unwrap();
+        objectives.push(r.objective());
     }
     let min = objectives.iter().cloned().fold(f64::MAX, f64::min);
     let max = objectives.iter().cloned().fold(f64::MIN, f64::max);
@@ -93,12 +91,12 @@ fn libsvm_round_trip_preserves_clustering() {
     let (mut loaded, labels) = sphkm::data::io::read_libsvm(&path).unwrap();
     loaded.normalize_rows();
     assert_eq!(labels.unwrap(), ds.labels.clone().unwrap());
-    let cfg = KMeansConfig::new(6).variant(Variant::SimplifiedElkan).seed(2);
-    let a = run(&ds.matrix, &cfg);
+    let est = SphericalKMeans::new(6).variant(Variant::SimplifiedElkan).seed(2);
+    let a = est.fit(&ds.matrix).unwrap();
     // Column count may differ (trailing empty columns dropped) but the
     // geometry is identical, so the clustering must be too.
-    let b = run(&loaded, &cfg);
-    assert_eq!(a.assignments, b.assignments);
+    let b = est.fit(&loaded).unwrap();
+    assert_eq!(a.assignments(), b.assignments());
 }
 
 #[test]
@@ -129,12 +127,14 @@ fn report_tables_render_all_experiments_shapes() {
 #[test]
 fn max_iter_cap_reports_unconverged() {
     let ds = datasets::newsgroups(Scale::Tiny, 3);
-    let r = run(
-        &ds.matrix,
-        &KMeansConfig::new(10).variant(Variant::Standard).seed(1).max_iter(1),
-    );
-    assert!(!r.converged);
-    assert_eq!(r.iterations, 1);
+    let r = SphericalKMeans::new(10)
+        .variant(Variant::Standard)
+        .seed(1)
+        .max_iter(1)
+        .fit(&ds.matrix)
+        .unwrap();
+    assert!(!r.converged());
+    assert_eq!(r.iterations(), 1);
 }
 
 #[test]
@@ -144,17 +144,19 @@ fn objective_decreases_monotonically_iteration_to_iteration() {
     let ds = SynthConfig::small_demo().generate(33);
     let mut prev = f64::MAX;
     for cap in [1usize, 2, 4, 8, 32] {
-        let r = run(
-            &ds.matrix,
-            &KMeansConfig::new(5).variant(Variant::Standard).seed(3).max_iter(cap),
-        );
+        let r = SphericalKMeans::new(5)
+            .variant(Variant::Standard)
+            .seed(3)
+            .max_iter(cap)
+            .fit(&ds.matrix)
+            .unwrap();
         assert!(
-            r.objective <= prev + 1e-9,
+            r.objective() <= prev + 1e-9,
             "objective rose from {prev} to {} at cap {cap}",
-            r.objective
+            r.objective()
         );
-        prev = r.objective;
-        if r.converged {
+        prev = r.objective();
+        if r.converged() {
             break;
         }
     }

@@ -3,11 +3,12 @@
 //! top-p widths and thread counts, and a converged model's p = 1 answers
 //! must reproduce its training assignments.
 
-use sphkm::kmeans::{run, KMeansConfig, KernelChoice, Variant};
+use sphkm::kmeans::{KernelChoice, Variant};
 use sphkm::model::{Model, TrainingMeta};
 use sphkm::serve::{QueryEngine, ServeConfig, ServeMode};
 use sphkm::sparse::{CsrMatrix, DenseMatrix, SparseVec};
 use sphkm::util::prop::forall;
+use sphkm::SphericalKMeans;
 
 fn meta() -> TrainingMeta {
     TrainingMeta {
@@ -72,9 +73,8 @@ fn prop_pruned_top_p_is_bit_identical_to_exhaustive() {
 #[test]
 fn batch_queries_are_thread_count_invariant() {
     let ds = sphkm::data::synth::SynthConfig::small_demo().generate(11);
-    let cfg = KMeansConfig::new(8).seed(3).max_iter(25);
-    let r = run(&ds.matrix, &cfg);
-    let model = Model::from_run(&r, &cfg);
+    let fitted = SphericalKMeans::new(8).seed(3).max_iter(25).fit(&ds.matrix).unwrap();
+    let model = fitted.to_model();
     let serial = QueryEngine::new(
         model.clone(),
         &ServeConfig { mode: ServeMode::Pruned, threads: 1 },
@@ -104,24 +104,29 @@ fn converged_model_reproduces_training_assignments() {
     // serving engine uses, so p = 1 answers must reproduce the training
     // assignments exactly — through a disk round trip.
     let ds = sphkm::data::synth::SynthConfig::small_demo().generate(21);
-    let cfg = KMeansConfig::new(6)
+    let fitted = SphericalKMeans::new(6)
         .variant(Variant::Standard)
         .kernel(KernelChoice::Gather)
         .seed(9)
-        .max_iter(200);
-    let r = run(&ds.matrix, &cfg);
-    assert!(r.converged, "demo corpus must converge");
+        .max_iter(200)
+        .fit(&ds.matrix)
+        .unwrap();
+    assert!(fitted.converged(), "demo corpus must converge");
     let path =
         std::env::temp_dir().join(format!("sphkm-serve-e2e-{}.spkm", std::process::id()));
-    Model::from_run(&r, &cfg).save(&path).unwrap();
+    fitted.save(&path).unwrap();
     let model = Model::load(&path).unwrap();
     std::fs::remove_file(&path).ok();
     for mode in [ServeMode::Pruned, ServeMode::Exhaustive, ServeMode::Auto] {
         let engine = QueryEngine::new(model.clone(), &ServeConfig { mode, threads: 0 });
         let (labels, stats) = engine.assign_batch(&ds.matrix);
-        assert_eq!(labels, r.assignments, "mode={}", mode.name());
+        assert_eq!(labels, fitted.assignments(), "mode={}", mode.name());
         assert_eq!(stats.queries, ds.matrix.rows() as u64);
     }
+    // The FittedModel's own serving bridge answers identically.
+    let engine = fitted.query_engine(ServeMode::Auto);
+    let (labels, _) = engine.assign_batch(&ds.matrix);
+    assert_eq!(labels, fitted.assignments());
 }
 
 #[test]

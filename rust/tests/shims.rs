@@ -1,0 +1,138 @@
+//! Deprecated-shim coverage: the legacy `run*` free functions survive one
+//! release as thin shims over the `SphericalKMeans` estimator, and they
+//! must produce **bit-identical** results to the estimator they delegate
+//! to. This is the only place in the repository allowed to call them.
+#![allow(deprecated)]
+
+use sphkm::data::synth::SynthConfig;
+use sphkm::init::{seed_centers, seed_centers_with_bounds, InitMethod};
+use sphkm::kmeans::{
+    self, minibatch, Engine, ExactParams, KMeansConfig, KMeansResult, MiniBatchParams, Variant,
+};
+use sphkm::SphericalKMeans;
+
+fn assert_bit_identical(a: &KMeansResult, b: &KMeansResult, what: &str) {
+    assert_eq!(a.assignments, b.assignments, "{what}: assignments");
+    assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{what}: objective");
+    assert_eq!(a.iterations, b.iterations, "{what}: iterations");
+    assert_eq!(a.converged, b.converged, "{what}: converged");
+    assert_eq!(a.kernel, b.kernel, "{what}: resolved kernel");
+    assert_eq!(
+        a.stats.total_point_center(),
+        b.stats.total_point_center(),
+        "{what}: pruning decisions"
+    );
+    for j in 0..a.centers.rows() {
+        for (x, y) in a.centers.row(j).iter().zip(b.centers.row(j)) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: center {j}");
+        }
+    }
+}
+
+#[test]
+fn run_matches_estimator_fit() {
+    let ds = SynthConfig::small_demo().generate(5);
+    for variant in [Variant::Standard, Variant::SimplifiedHamerly, Variant::Elkan] {
+        let cfg = KMeansConfig::new(7).variant(variant).seed(3);
+        let shim = kmeans::run(&ds.matrix, &cfg);
+        let est = SphericalKMeans::new(7)
+            .variant(variant)
+            .seed(3)
+            .fit(&ds.matrix)
+            .unwrap()
+            .into_result();
+        assert_bit_identical(&shim, &est, variant.name());
+    }
+}
+
+#[test]
+fn run_with_centers_matches_warm_start_centers() {
+    let ds = SynthConfig::small_demo().generate(7);
+    let init = seed_centers(&ds.matrix, 6, &InitMethod::Uniform, 9);
+    for threads in [1usize, 0] {
+        let cfg = KMeansConfig::new(6)
+            .variant(Variant::Exponion)
+            .threads(threads);
+        let shim = kmeans::run_with_centers(&ds.matrix, init.centers.clone(), &cfg);
+        let est = SphericalKMeans::new(6)
+            .variant(Variant::Exponion)
+            .threads(threads)
+            .warm_start_centers(init.centers.clone())
+            .fit(&ds.matrix)
+            .unwrap()
+            .into_result();
+        assert_bit_identical(&shim, &est, &format!("threads={threads}"));
+    }
+}
+
+#[test]
+fn run_seeded_matches_preinit_engine() {
+    let ds = SynthConfig::small_demo().generate(9);
+    let k = 8;
+    let method = InitMethod::KMeansPP { alpha: 1.0 };
+    let outcome = seed_centers_with_bounds(&ds.matrix, k, &method, 17);
+    let cfg = KMeansConfig::new(k)
+        .variant(Variant::SimplifiedElkan)
+        .init(method)
+        .seed(17);
+    let shim = kmeans::run_seeded(&ds.matrix, outcome, &cfg);
+    let est = SphericalKMeans::new(k)
+        .engine(Engine::Exact(ExactParams {
+            variant: Variant::SimplifiedElkan,
+            preinit: true,
+            ..Default::default()
+        }))
+        .init(method)
+        .seed(17)
+        .fit(&ds.matrix)
+        .unwrap()
+        .into_result();
+    assert_bit_identical(&shim, &est, "preinit");
+}
+
+#[test]
+fn run_dataset_matches_fit_dataset() {
+    let ds = SynthConfig::small_demo().generate(11);
+    let cfg = KMeansConfig::new(5).variant(Variant::Yinyang).seed(1);
+    let shim = kmeans::run_dataset(&ds, &cfg);
+    let est = SphericalKMeans::new(5)
+        .variant(Variant::Yinyang)
+        .seed(1)
+        .fit_dataset(&ds)
+        .unwrap()
+        .into_result();
+    assert_bit_identical(&shim, &est, "run_dataset");
+}
+
+#[test]
+fn minibatch_shims_match_minibatch_engine() {
+    let ds = SynthConfig::small_demo().generate(13);
+    let k = 6;
+    let cfg = KMeansConfig::new(k)
+        .seed(21)
+        .batch_size(64)
+        .epochs(3)
+        .truncate(Some(16));
+    let est = || {
+        SphericalKMeans::new(k)
+            .engine(Engine::MiniBatch(MiniBatchParams {
+                batch_size: 64,
+                epochs: 3,
+                truncate: Some(16),
+                ..Default::default()
+            }))
+            .seed(21)
+    };
+    let shim = minibatch::run(&ds.matrix, &cfg);
+    let fit = est().fit(&ds.matrix).unwrap().into_result();
+    assert_bit_identical(&shim, &fit, "minibatch::run");
+
+    let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 21);
+    let shim = minibatch::run_with_centers(&ds.matrix, init.centers.clone(), &cfg);
+    let fit = est()
+        .warm_start_centers(init.centers.clone())
+        .fit(&ds.matrix)
+        .unwrap()
+        .into_result();
+    assert_bit_identical(&shim, &fit, "minibatch::run_with_centers");
+}

@@ -1,0 +1,273 @@
+//! Warm-start / resume integration: `fit → save → load → warm_start →
+//! fit` must converge to **bit-identical** centers, assignments, and
+//! objective versus an uninterrupted run with the same total iteration
+//! budget — across thread counts {1, 0} and the Dense/Inverted kernels.
+//!
+//! This works because `FittedModel::save` persists the training state
+//! (the f64 center-sum accumulators, counts, and assignments) alongside
+//! the f32 centers: the exact engines maintain their sums incrementally,
+//! so a resumed run restores the exact accumulator bits and replays the
+//! identical floating-point sequence the uninterrupted run would have.
+
+use sphkm::data::synth::SynthConfig;
+use sphkm::data::Dataset;
+use sphkm::kmeans::{Engine, KernelChoice, MiniBatchParams, Variant};
+use sphkm::{FittedModel, SphericalKMeans};
+
+fn corpus() -> Dataset {
+    let mut cfg = SynthConfig::small_demo();
+    cfg.name = "warm-synth".into();
+    cfg.n_docs = 700;
+    cfg.generate(77)
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("sphkm-warm-tests-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn assert_models_bit_identical(a: &FittedModel, b: &FittedModel, what: &str) {
+    assert_eq!(a.assignments(), b.assignments(), "{what}: assignments");
+    assert_eq!(
+        a.objective().to_bits(),
+        b.objective().to_bits(),
+        "{what}: objective"
+    );
+    assert_eq!(a.converged(), b.converged(), "{what}: converged");
+    for j in 0..a.k() {
+        for (c, (x, y)) in a
+            .centers()
+            .row(j)
+            .iter()
+            .zip(b.centers().row(j))
+            .enumerate()
+        {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: center {j} dim {c}");
+        }
+    }
+}
+
+#[test]
+fn exact_resume_is_bit_identical_to_uninterrupted() {
+    let ds = corpus();
+    let k = 8;
+    let interrupt_at = 2usize;
+    for kernel in [KernelChoice::Dense, KernelChoice::Inverted] {
+        for threads in [1usize, 0] {
+            // All seven variants: each registers its own bound-state
+            // closure against the resume path, so each needs coverage.
+            for variant in Variant::ALL {
+                let est = || {
+                    SphericalKMeans::new(k)
+                        .variant(variant)
+                        .seed(5)
+                        .threads(threads)
+                        .kernel(kernel)
+                };
+                let what = format!("{} kernel={kernel:?} threads={threads}", variant.name());
+                // Uninterrupted reference: run to convergence.
+                let full = est().max_iter(200).fit(&ds.matrix).unwrap();
+                assert!(full.converged(), "{what}: reference must converge");
+                assert!(
+                    full.iterations() > interrupt_at,
+                    "{what}: corpus converges too fast for a meaningful split"
+                );
+                // Interrupted run: stop after `interrupt_at` iterations,
+                // round-trip through disk, resume with the remaining budget.
+                let part = est().max_iter(interrupt_at).fit(&ds.matrix).unwrap();
+                assert!(!part.converged(), "{what}: partial run must not converge");
+                let path = tmp(&format!(
+                    "exact-{}-{kernel:?}-{threads}.spkm",
+                    variant.name().replace('.', "_")
+                ));
+                part.save(&path).unwrap();
+                let loaded = FittedModel::load(&path).unwrap();
+                std::fs::remove_file(&path).ok();
+                assert_eq!(loaded.assignments(), part.assignments());
+                let resumed = est()
+                    .max_iter(200)
+                    .warm_start(&loaded)
+                    .fit(&ds.matrix)
+                    .unwrap();
+                assert_models_bit_identical(&full, &resumed, &what);
+                // Same total iteration budget: the split spends exactly
+                // what the uninterrupted run spent.
+                assert_eq!(
+                    part.iterations() + resumed.iterations(),
+                    full.iterations(),
+                    "{what}: split budget"
+                );
+                // Cumulative provenance survives the round trip.
+                assert_eq!(
+                    resumed.meta().iterations,
+                    full.iterations() as u64,
+                    "{what}: cumulative steps"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn exact_resume_works_across_variants() {
+    // Any exact variant continues any exact run: exactness makes the
+    // assignment trajectory variant-independent, so a Standard run
+    // resumed with Elkan converges to the same clustering as the
+    // uninterrupted Standard reference. (Only the clustering — Elkan's
+    // within-pass multi-hop move replay can perturb the f64 sums in the
+    // last bits, so the *bitwise* guarantee holds per variant, which is
+    // what `exact_resume_is_bit_identical_to_uninterrupted` asserts.)
+    let ds = corpus();
+    let k = 6;
+    let est = |variant: Variant| SphericalKMeans::new(k).variant(variant).seed(9);
+    let full = est(Variant::Standard).max_iter(200).fit(&ds.matrix).unwrap();
+    assert!(full.converged());
+    let part = est(Variant::Standard).max_iter(2).fit(&ds.matrix).unwrap();
+    let path = tmp("cross-variant.spkm");
+    part.save(&path).unwrap();
+    let loaded = FittedModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let resumed = est(Variant::Elkan)
+        .max_iter(200)
+        .warm_start(&loaded)
+        .fit(&ds.matrix)
+        .unwrap();
+    assert!(resumed.converged(), "standard→elkan resume converges");
+    assert_eq!(
+        resumed.assignments(),
+        full.assignments(),
+        "standard→elkan: clustering"
+    );
+    assert!(
+        (resumed.objective() - full.objective()).abs() < 1e-6 * (1.0 + full.objective()),
+        "standard→elkan: objective {} vs {}",
+        resumed.objective(),
+        full.objective()
+    );
+}
+
+#[test]
+fn minibatch_resume_is_bit_identical_to_uninterrupted() {
+    let ds = corpus();
+    let k = 6;
+    let total_epochs = 6usize;
+    let interrupt_at = 2usize;
+    let mb = |epochs: usize, kernel: KernelChoice, threads: usize| {
+        SphericalKMeans::new(k)
+            .engine(Engine::MiniBatch(MiniBatchParams {
+                batch_size: 128,
+                epochs,
+                tol: 0.0,
+                truncate: Some(24),
+            }))
+            .seed(31)
+            .threads(threads)
+            .kernel(kernel)
+    };
+    for kernel in [KernelChoice::Dense, KernelChoice::Inverted] {
+        for threads in [1usize, 0] {
+            let what = format!("minibatch kernel={kernel:?} threads={threads}");
+            let full = mb(total_epochs, kernel, threads).fit(&ds.matrix).unwrap();
+            let part = mb(interrupt_at, kernel, threads).fit(&ds.matrix).unwrap();
+            let path = tmp(&format!("mb-{kernel:?}-{threads}.spkm"));
+            part.save(&path).unwrap();
+            let loaded = FittedModel::load(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            assert_eq!(loaded.meta().variant, "minibatch");
+            // The training schedule rides along, so a CLI resume can
+            // reproduce it without re-passing the flags.
+            assert_eq!(
+                loaded.state().and_then(|s| s.minibatch),
+                Some(MiniBatchParams {
+                    batch_size: 128,
+                    epochs: interrupt_at,
+                    tol: 0.0,
+                    truncate: Some(24),
+                })
+            );
+            let resumed = mb(total_epochs - interrupt_at, kernel, threads)
+                .warm_start(&loaded)
+                .fit(&ds.matrix)
+                .unwrap();
+            assert_models_bit_identical(&full, &resumed, &what);
+            assert_eq!(
+                resumed.meta().iterations,
+                total_epochs as u64,
+                "{what}: cumulative epochs"
+            );
+        }
+    }
+}
+
+#[test]
+fn warm_start_without_state_is_a_plain_transfer() {
+    // An exact-engine warm start from a mini-batch model (engine
+    // mismatch) must not try to resume: the centers seed a fresh run.
+    let ds = corpus();
+    let k = 5;
+    let mb = SphericalKMeans::new(k)
+        .engine(Engine::MiniBatch(MiniBatchParams {
+            batch_size: 128,
+            epochs: 2,
+            ..Default::default()
+        }))
+        .seed(3)
+        .fit(&ds.matrix)
+        .unwrap();
+    let refined = SphericalKMeans::new(k)
+        .variant(Variant::SimplifiedHamerly)
+        .warm_start(&mb)
+        .fit(&ds.matrix)
+        .unwrap();
+    assert!(refined.converged(), "full-batch refinement converges");
+    // Refinement can only improve (or match) the mini-batch objective.
+    assert!(refined.objective() <= mb.objective() + 1e-9);
+    // And it matches a fresh run from the same explicit centers.
+    let from_centers = SphericalKMeans::new(k)
+        .variant(Variant::SimplifiedHamerly)
+        .warm_start_centers(mb.centers().clone())
+        .fit(&ds.matrix)
+        .unwrap();
+    assert_models_bit_identical(&refined, &from_centers, "transfer");
+}
+
+#[test]
+fn observer_early_stop_then_resume_recovers_the_full_run() {
+    // The acceptance-path combination: stop training via the observer,
+    // save, resume, and land bit-identically on the uninterrupted result.
+    use std::ops::ControlFlow;
+    let ds = corpus();
+    let k = 7;
+    let est = || SphericalKMeans::new(k).variant(Variant::SimplifiedHamerly).seed(13);
+    let full = est().max_iter(200).fit(&ds.matrix).unwrap();
+    assert!(full.converged());
+    assert!(full.iterations() > 3);
+    let mut stopper = |s: &sphkm::IterSnapshot<'_>| {
+        if s.iteration >= 3 {
+            ControlFlow::Break(())
+        } else {
+            ControlFlow::Continue(())
+        }
+    };
+    let stopped = est()
+        .max_iter(200)
+        .fit_observed(&ds.matrix, &mut stopper)
+        .unwrap();
+    assert!(!stopped.converged());
+    assert_eq!(
+        stopped.stats().iters.len(),
+        4,
+        "early stop halts within one iteration of the signal"
+    );
+    let path = tmp("observer-stop.spkm");
+    stopped.save(&path).unwrap();
+    let loaded = FittedModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let resumed = est()
+        .max_iter(200)
+        .warm_start(&loaded)
+        .fit(&ds.matrix)
+        .unwrap();
+    assert_models_bit_identical(&full, &resumed, "observer-stop → resume");
+}
