@@ -11,6 +11,10 @@
 //! cargo run --release --example community_detection -- [--scale small] [--k 40]
 //! ```
 
+// Example code favours readable literal casts; the workspace clippy
+// warnings on those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::data::datasets::{self, Scale};
 use sphkm::init::{seed_centers, InitMethod};
 use sphkm::kmeans::{SphericalKMeans, Variant};

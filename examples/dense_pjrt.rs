@@ -8,6 +8,10 @@
 //! cargo run --release --example dense_pjrt
 //! ```
 
+// Example code favours readable literal casts; the workspace clippy
+// warnings on those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::data::synth::SynthConfig;
 use sphkm::runtime::{artifacts_available, AssignEngine, Manifest};
 use sphkm::util::timer::Stopwatch;

@@ -17,6 +17,10 @@
 //!
 //! The output of one run is recorded in EXPERIMENTS.md §End-to-end.
 
+// Example code favours readable literal casts; the workspace clippy
+// warnings on those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::coordinator::report::{fmt_ms, Table};
 use sphkm::data::datasets::{self, Scale};
 use sphkm::init::{seed_centers, InitMethod};

@@ -5,6 +5,10 @@
 //! cargo run --release --example quickstart
 //! ```
 
+// Example code favours readable literal casts; the workspace clippy
+// warnings on those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::data::synth::SynthConfig;
 use sphkm::init::InitMethod;
 use sphkm::kmeans::{SphericalKMeans, Variant};

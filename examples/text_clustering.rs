@@ -8,6 +8,10 @@
 //! cargo run --release --example text_clustering -- [--dir path/] [--k 3]
 //! ```
 
+// Example code favours readable literal casts; the workspace clippy
+// warnings on those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::data::text::{demo_corpus, TextPipeline};
 use sphkm::init::InitMethod;
 use sphkm::kmeans::{SphericalKMeans, Variant};

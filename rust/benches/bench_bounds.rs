@@ -13,6 +13,11 @@
 //! cargo bench --bench bench_bounds -- [--runs 10]
 //! ```
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::bounds::hamerly_bound::{update_eq8, update_eq9, update_min_p_guarded, update_safe};
 use sphkm::bounds::{sim_lower, sim_lower_arc, sim_upper, update_upper};
 use sphkm::data::datasets::{self, Scale};

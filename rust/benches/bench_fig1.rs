@@ -7,6 +7,11 @@
 //! cargo bench --bench bench_fig1 -- [--scale S] [--k 100] [--reps 10]
 //! ```
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::coordinator::experiments::{self, ExperimentOpts};
 use sphkm::util::cli::Args;
 

@@ -8,6 +8,11 @@
 //!     [--ablation]   # adds the cc-cost-vs-dimensionality ablation
 //! ```
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::coordinator::experiments::{self, ExperimentOpts};
 use sphkm::util::cli::Args;
 

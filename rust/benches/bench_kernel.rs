@@ -15,6 +15,11 @@
 //!     [--max-iter 8] [--threads 0] [--seed 42] [--truncate 64]
 //! ```
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::data::synth::SynthConfig;
 use sphkm::init::{seed_centers, InitMethod};
 use sphkm::kmeans::{Engine, KernelChoice, MiniBatchParams, SphericalKMeans, Variant};

@@ -11,6 +11,11 @@
 //! Also spot-checks the determinism contract at the end: the parallel run
 //! must produce bit-identical assignments to the serial one.
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::data::datasets::{self, Scale};
 use sphkm::init::{seed_centers, InitMethod};
 use sphkm::kmeans::{SphericalKMeans, Variant};

@@ -7,6 +7,11 @@
 //! cargo bench --bench bench_sparse -- [--runs 20]
 //! ```
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::sparse::{CsrMatrix, DenseMatrix, SparseVec};
 use sphkm::util::benchkit::{bench, black_box, BenchOpts};
 use sphkm::util::cli::Args;

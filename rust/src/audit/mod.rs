@@ -1,0 +1,276 @@
+//! Bound-certification audit layer: runtime cross-checking of every
+//! pruning decision and deep data-structure invariant checking.
+//!
+//! Every speedup in the paper rests on one silent assumption: the adapted
+//! Elkan/Hamerly cosine bounds really do bound the true similarities, so
+//! every skipped dot product was safe to skip. The equivalence test suites
+//! catch a wrong bound only when it happens to change a final assignment
+//! on the sampled inputs; this module instead *certifies each pruning
+//! decision at the moment it is taken*. Under the `audit` cargo feature,
+//! every bound-based skip in the seven exact engines and in the serve-side
+//! MaxScore traversal is cross-checked against the exactly recomputed
+//! cosine, and the shared data structures ([`crate::sparse::CsrMatrix`],
+//! [`crate::kmeans::Centers`], [`crate::sparse::InvertedIndex`]) re-verify
+//! their invariants at every iteration barrier.
+//!
+//! # What a violation carries
+//!
+//! A failed check produces a typed [`AuditViolation`] with full context —
+//! component, check name, iteration, point, center, the bound the engine
+//! trusted, and the exactly recomputed value. Violations surface through
+//! [`FitError::AuditViolation`](crate::kmeans::FitError) from
+//! [`SphericalKMeans::fit`](crate::kmeans::SphericalKMeans), through the
+//! [`Observer`](crate::kmeans::Observer) hook
+//! ([`IterSnapshot::audit_violations`](crate::kmeans::IterSnapshot)), and
+//! through the `cluster --audit` CLI flag. The serve-side traversal has no
+//! error channel, so a pruning violation there panics with the violation's
+//! [`Display`](std::fmt::Display) rendering (a query answer built on an
+//! unsound prune must not be returned).
+//!
+//! # Zero cost when off
+//!
+//! Instrumentation is gated on the compile-time constant
+//! [`AUDIT_ENABLED`] (`cfg!(feature = "audit")`) rather than on `#[cfg]`
+//! blocks: the audit code type-checks in every build, and when the feature
+//! is off every check sits behind `if false` and is compiled out — the
+//! collection `Vec`s stay empty (an empty `Vec` never allocates) and the
+//! hot loops are bit-for-bit the instructions of an unaudited build. With
+//! the feature **on**, audited runs still produce bit-identical results,
+//! assignments, and instrumentation counters to unaudited runs, because
+//! every cross-check recomputes its reference cosine outside the counted
+//! similarity paths; only wall-clock changes (an audited run does strictly
+//! more floating-point work — it is a verification mode, not a production
+//! mode).
+//!
+//! # The audit margin
+//!
+//! Cross-checks tolerate [`AUDIT_MARGIN`] (`1e-7`) of float slack: the
+//! engines' bound maintenance accumulates rounding of that order across
+//! iterations, while a genuinely broken bound — the mutation-test bar is
+//! a margin loosened by `1e-3` — overshoots it by four orders of
+//! magnitude. The margin separates arithmetic noise from unsound algebra.
+
+/// True when the crate was compiled with the `audit` cargo feature —
+/// the single gate every instrumentation site branches on. A constant,
+/// so disabled audit code is removed at compile time.
+pub const AUDIT_ENABLED: bool = cfg!(feature = "audit");
+
+/// Float tolerance applied by every bound cross-check: an exactly
+/// recomputed cosine may exceed an upper bound (or undershoot a lower
+/// bound) by at most this much before the check reports a violation.
+/// Large enough for accumulated f64 rounding in the bound-update chains,
+/// four orders of magnitude below the `1e-3` mutation-test bar.
+pub const AUDIT_MARGIN: f64 = 1e-7;
+
+/// One failed audit check, with enough context to localize the unsound
+/// bound or broken invariant: which component and check, at which
+/// iteration, for which point/center pair, what the engine believed
+/// (`bound`) and what is actually true (`actual`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditViolation {
+    /// The component that took the audited decision: an engine name
+    /// (`"elkan"`, `"yinyang"`, …), `"serve"` for the MaxScore traversal,
+    /// or a data-structure name (`"csr"`, `"centers"`, `"inverted"`) for
+    /// invariant checks.
+    pub component: &'static str,
+    /// Which check failed (e.g. `"upper-bound-prune"`, `"lower-bound"`,
+    /// `"unsafe-prune"`, `"sums-centers-coherence"`).
+    pub check: &'static str,
+    /// Iteration (or epoch) at which the violation was detected;
+    /// iteration 0 is the initial assignment pass. Zero for checks with
+    /// no iteration context (ingestion-time invariants).
+    pub iteration: usize,
+    /// Row index of the point whose pruning decision failed, when the
+    /// check concerns a specific point.
+    pub point: Option<usize>,
+    /// Center index the failed check concerns, when applicable.
+    pub center: Option<usize>,
+    /// The bound value the pruning decision trusted (`0.0` for pure
+    /// invariant checks, which have no bound).
+    pub bound: f64,
+    /// The exactly recomputed value that contradicts the bound (`0.0`
+    /// for pure invariant checks).
+    pub actual: f64,
+    /// Free-form context: what the invariant expected, indices involved,
+    /// or which structural property broke.
+    pub detail: String,
+}
+
+impl AuditViolation {
+    /// A bound-certification violation: `bound` was trusted, but the
+    /// exactly recomputed `actual` contradicts it beyond [`AUDIT_MARGIN`].
+    pub fn bound(
+        component: &'static str,
+        check: &'static str,
+        iteration: usize,
+        point: Option<usize>,
+        center: Option<usize>,
+        bound: f64,
+        actual: f64,
+    ) -> Self {
+        Self {
+            component,
+            check,
+            iteration,
+            point,
+            center,
+            bound,
+            actual,
+            detail: String::new(),
+        }
+    }
+
+    /// A data-structure invariant violation (no bound/actual pair; the
+    /// broken property is described by `detail`).
+    pub fn invariant(component: &'static str, check: &'static str, detail: String) -> Self {
+        Self {
+            component,
+            check,
+            iteration: 0,
+            point: None,
+            center: None,
+            bound: 0.0,
+            actual: 0.0,
+            detail,
+        }
+    }
+
+    /// Attach the iteration at which the violation was detected.
+    #[must_use]
+    pub fn at_iteration(mut self, iteration: usize) -> Self {
+        self.iteration = iteration;
+        self
+    }
+}
+
+impl std::fmt::Display for AuditViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "audit violation [{}/{}] at iteration {}",
+            self.component, self.check, self.iteration
+        )?;
+        if let Some(p) = self.point {
+            write!(f, ", point {p}")?;
+        }
+        if let Some(c) = self.center {
+            write!(f, ", center {c}")?;
+        }
+        if self.bound != 0.0 || self.actual != 0.0 {
+            write!(
+                f,
+                ": bound {:.9} vs exact {:.9} (excess {:.3e}, margin {AUDIT_MARGIN:.0e})",
+                self.bound,
+                self.actual,
+                (self.actual - self.bound).abs()
+            )?;
+        }
+        if !self.detail.is_empty() {
+            write!(f, ": {}", self.detail)?;
+        }
+        Ok(())
+    }
+}
+
+/// Does an exactly recomputed similarity `actual` contradict the upper
+/// bound `bound` beyond the audit margin?
+#[inline]
+pub fn exceeds_upper(bound: f64, actual: f64) -> bool {
+    actual > bound + AUDIT_MARGIN
+}
+
+/// Does an exactly recomputed similarity `actual` contradict the lower
+/// bound `bound` beyond the audit margin?
+#[inline]
+pub fn below_lower(bound: f64, actual: f64) -> bool {
+    actual < bound - AUDIT_MARGIN
+}
+
+/// Debug-build invariant assertion with audit context: the replacement for
+/// the bare `debug_assert!`s that used to guard internal preconditions in
+/// the bound algebra. On failure it panics with an [`AuditViolation`]'s
+/// rendering — component, check, and a detail string built lazily — so a
+/// tripped precondition says *which* invariant broke and with what values,
+/// instead of pointing at an assertion line. Compiled out of release
+/// builds exactly like `debug_assert!`.
+#[inline]
+pub fn debug_invariant<F: FnOnce() -> String>(
+    cond: bool,
+    component: &'static str,
+    check: &'static str,
+    detail: F,
+) {
+    if cfg!(debug_assertions) && !cond {
+        let v = AuditViolation::invariant(component, check, detail());
+        panic!("{v}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn margin_separates_rounding_noise_from_mutations() {
+        // Accumulated float rounding (≤ ~1e-9 on these chains) passes…
+        assert!(!exceeds_upper(0.5, 0.5 + 1e-9));
+        assert!(!below_lower(0.5, 0.5 - 1e-9));
+        assert!(!exceeds_upper(0.5, 0.5));
+        // …while the mutation-test bar (a bound loosened by 1e-3) trips
+        // with four orders of magnitude to spare.
+        assert!(exceeds_upper(0.5, 0.5 + 1e-3));
+        assert!(below_lower(0.5, 0.5 - 1e-3));
+        assert!(exceeds_upper(0.5, 0.5 + 10.0 * AUDIT_MARGIN));
+    }
+
+    #[test]
+    fn display_carries_full_context() {
+        let v = AuditViolation::bound("elkan", "upper-bound-prune", 3, Some(17), Some(4), 0.25, 0.5);
+        let s = v.to_string();
+        assert!(s.contains("elkan/upper-bound-prune"), "{s}");
+        assert!(s.contains("iteration 3"), "{s}");
+        assert!(s.contains("point 17"), "{s}");
+        assert!(s.contains("center 4"), "{s}");
+        assert!(s.contains("0.250000000"), "{s}");
+        assert!(s.contains("0.500000000"), "{s}");
+    }
+
+    #[test]
+    fn invariant_violations_render_their_detail() {
+        let v = AuditViolation::invariant("csr", "indptr-monotone", "indptr[3]=7 > indptr[4]=5".to_string());
+        let s = v.to_string();
+        assert!(s.contains("csr/indptr-monotone"), "{s}");
+        assert!(s.contains("indptr[3]=7 > indptr[4]=5"), "{s}");
+        // Clone + PartialEq: the FitError payload contract.
+        assert_eq!(v.clone(), v);
+    }
+
+    #[test]
+    fn at_iteration_stamps_context() {
+        let v = AuditViolation::invariant("centers", "unit-norm", "norm=0.9".to_string()).at_iteration(7);
+        assert_eq!(v.iteration, 7);
+        assert!(v.to_string().contains("iteration 7"));
+    }
+
+    #[test]
+    fn debug_invariant_passes_silently() {
+        debug_invariant(true, "bounds::hamerly", "p_min<=p_max", || unreachable!());
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "debug_invariant is compiled out in release")]
+    fn debug_invariant_panics_with_context() {
+        let err = std::panic::catch_unwind(|| {
+            debug_invariant(false, "bounds::cc", "k-matches-rows", || {
+                "rows=3 expected k=4".to_string()
+            });
+        })
+        .expect_err("must panic under debug assertions");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("bounds::cc/k-matches-rows"), "{msg}");
+        assert!(msg.contains("rows=3 expected k=4"), "{msg}");
+    }
+}

@@ -48,7 +48,9 @@ impl CenterBounds {
     /// performed, `k·(k−1)/2`, so callers can account for them (Fig. 1a).
     pub fn recompute(&mut self, centers: &DenseMatrix) -> u64 {
         let k = self.k;
-        debug_assert_eq!(centers.rows(), k);
+        crate::audit::debug_invariant(centers.rows() == k, "bounds::cc", "center-count", || {
+            format!("table sized for k = {k} but {} centers supplied", centers.rows())
+        });
         let mut sims = 0u64;
         for i in 0..k {
             self.cc[i * k + i] = 1.0;

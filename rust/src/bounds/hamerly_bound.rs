@@ -95,7 +95,9 @@ pub fn update_eq9(u: f64, p_min: f64) -> f64 {
 pub fn update_safe(u: f64, p_min: f64, p_max: f64) -> f64 {
     let u = clamp_sim(u);
     let (p_min, p_max) = (clamp_sim(p_min), clamp_sim(p_max));
-    debug_assert!(p_min <= p_max);
+    crate::audit::debug_invariant(p_min <= p_max, "bounds::hamerly", "p-interval-order", || {
+        format!("p_min {p_min} exceeds p_max {p_max}")
+    });
     if p_min <= u {
         // Some center may have moved past the bound angle: saturate
         // (see `crate::bounds::update_upper`).

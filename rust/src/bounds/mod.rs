@@ -218,6 +218,91 @@ mod tests {
         assert!(u1 < u2, "smaller p should raise the upper bound");
     }
 
+    /// Random sparse unit vector: `nnz` active coordinates on a random
+    /// pattern with Gaussian weights, normalized. Returned dense so the
+    /// test-side reference dot stays trivial.
+    fn sparse_unit(g: &mut crate::util::prop::Gen, d: usize, nnz: usize) -> Vec<f64> {
+        loop {
+            let pat = g.sparse_pattern(d, nnz.max(1));
+            let mut v = vec![0.0f64; d];
+            for &c in &pat {
+                v[c] = g.rng().next_gaussian();
+            }
+            let n = dot(&v, &v).sqrt();
+            if n > 1e-9 {
+                for x in &mut v {
+                    *x /= n;
+                }
+                return v;
+            }
+        }
+    }
+
+    #[test]
+    fn triangle_inequality_holds_for_sparse_inputs() {
+        // The engines run on sparse TF-IDF-like rows whose dots
+        // concentrate on few shared coordinates — exercise the bounds in
+        // that regime, not just on dense Gaussian directions.
+        forall(300, 0x7126, |g| {
+            let d = g.usize_in(8, 200);
+            let x = sparse_unit(g, d, g.usize_in(1, d.min(12)));
+            let y = sparse_unit(g, d, g.usize_in(1, d.min(12)));
+            let z = sparse_unit(g, d, g.usize_in(1, d.min(12)));
+            let (sxy, sxz, szy) = (dot(&x, &y), dot(&x, &z), dot(&z, &y));
+            let lo = sim_lower(sxz, szy);
+            let hi = sim_upper(sxz, szy);
+            assert!(sxy >= lo - 1e-9, "lower bound violated: sim={sxy}, bound={lo}");
+            assert!(sxy <= hi + 1e-9, "upper bound violated: sim={sxy}, bound={hi}");
+        });
+    }
+
+    #[test]
+    fn maintained_bounds_bracket_true_sims_across_k_centers() {
+        // The Elkan/Hamerly maintenance loop in miniature: per-center
+        // upper bounds and an own-center lower bound, carried through
+        // Eq. 6/7 while every center drifts independently, must keep
+        // bracketing the true cosines — for a singleton, a pair, and a
+        // Yinyang-scale center set.
+        for &k in &[1usize, 2, 64] {
+            forall(40, 0x7127 ^ ((k as u64) << 8), |g| {
+                let d = g.usize_in(4, 32);
+                let x = sparse_unit(g, d, g.usize_in(1, d));
+                let mut centers: Vec<Vec<f64>> = (0..k).map(|_| g.unit(d)).collect();
+                let mut u: Vec<f64> = centers.iter().map(|c| dot(&x, c)).collect();
+                let a = (0..k).fold(0, |b, j| if u[j] > u[b] { j } else { b });
+                let mut l = u[a];
+                for _ in 0..4 {
+                    for (j, c) in centers.iter_mut().enumerate() {
+                        let step = g.f64_in(0.0, 0.4);
+                        let dir = g.unit(d);
+                        let mut c2: Vec<f64> =
+                            c.iter().zip(&dir).map(|(ci, di)| ci + step * di).collect();
+                        let n = dot(&c2, &c2).sqrt();
+                        for v in &mut c2 {
+                            *v /= n;
+                        }
+                        let p = clamp_sim(dot(c, &c2));
+                        u[j] = update_upper(u[j], p);
+                        if j == a {
+                            l = update_lower(l, p);
+                        }
+                        *c = c2;
+                    }
+                    for (j, c) in centers.iter().enumerate() {
+                        let s = dot(&x, c);
+                        assert!(
+                            u[j] >= s - 1e-9,
+                            "k={k}: u[{j}]={} below true sim {s}",
+                            u[j]
+                        );
+                    }
+                    let sa = dot(&x, &centers[a]);
+                    assert!(l <= sa + 1e-9, "k={k}: l={l} above own-center sim {sa}");
+                }
+            });
+        }
+    }
+
     #[test]
     fn chained_updates_remain_valid_bounds() {
         // Simulate a center drifting over several iterations and check the

@@ -19,6 +19,7 @@
 //! same dirty-flag discipline the `p(j)` accounting uses).
 
 use super::kernel::{self, Kernel};
+use crate::audit::AuditViolation;
 use crate::runtime::parallel::{Plan, Pool, SHARD_ROWS};
 use crate::sparse::csr::RowView;
 use crate::sparse::{CsrMatrix, DenseMatrix, InvertedIndex};
@@ -489,6 +490,109 @@ impl Centers {
     pub fn p_extremes(&self) -> PExtremes {
         PExtremes::from_p(&self.p)
     }
+
+    /// Deep invariant check for the audit layer ([`crate::audit`]): the
+    /// coherence chain f64 sums ↔ f32 centers ↔ unit norms ↔ kernel store
+    /// (transpose columns / postings) that every bound computation
+    /// silently relies on. Checked: buffer shapes, `p(j) ∈ [−1, 1]`,
+    /// non-zero centers unit-normalized, every *clean* non-empty center
+    /// bit-coherent with its normalized f64 sum (skipped with
+    /// `truncated = true` — a Knittel-truncated center is deliberately
+    /// not the normalized sum), and the derived kernel structure exactly
+    /// mirroring the dense centers. Run at iteration barriers under audit
+    /// and callable from tests; returns the first broken invariant.
+    pub fn check_invariants(&self, truncated: bool) -> Result<(), AuditViolation> {
+        let fail = |check: &'static str, detail: String| {
+            Err(AuditViolation::invariant("centers", check, detail))
+        };
+        let (k, d) = (self.k, self.d);
+        if self.sums.len() != k * d
+            || self.counts.len() != k
+            || self.p.len() != k
+            || self.dirty.len() != k
+            || self.centers.rows() != k
+            || self.centers.cols() != d
+            || self.prev.rows() != k
+            || self.prev.cols() != d
+        {
+            return fail(
+                "shape",
+                format!(
+                    "k={k} d={d}: sums {}, counts {}, p {}, dirty {}, centers {}×{}, prev {}×{}",
+                    self.sums.len(),
+                    self.counts.len(),
+                    self.p.len(),
+                    self.dirty.len(),
+                    self.centers.rows(),
+                    self.centers.cols(),
+                    self.prev.rows(),
+                    self.prev.cols()
+                ),
+            );
+        }
+        for (j, &p) in self.p.iter().enumerate() {
+            if !(-1.0..=1.0).contains(&p) {
+                return fail("p-range", format!("p[{j}] = {p} outside [-1, 1]"));
+            }
+        }
+        for j in 0..k {
+            let row = self.centers.row(j);
+            let norm_sq: f64 = row.iter().map(|&v| v as f64 * v as f64).sum();
+            if norm_sq == 0.0 {
+                continue; // all-zero centers are legal (zero seed rows)
+            }
+            // f32 per-coordinate rounding bounds the norm deviation.
+            if (norm_sq.sqrt() - 1.0).abs() > 1e-3 {
+                return fail("unit-norm", format!("center {j}: ‖c‖ = {}", norm_sq.sqrt()));
+            }
+            // A clean non-empty, non-degenerate center must be exactly the
+            // f32 cast of its normalized f64 sum — the recomputation below
+            // replays `update`'s arithmetic, so bit-equality is expected.
+            if truncated || self.dirty[j] || self.counts[j] == 0 {
+                continue;
+            }
+            let base = j * d;
+            let sum = &self.sums[base..base + d];
+            let snorm = sum.iter().map(|&v| v * v).sum::<f64>().sqrt();
+            if snorm <= 0.0 {
+                continue; // degenerate sum: the center legitimately held position
+            }
+            let inv = 1.0 / snorm;
+            for (c, (&cv, &sv)) in row.iter().zip(sum.iter()).enumerate() {
+                let expect = (sv * inv) as f32;
+                if (cv - expect).abs() > 1e-6 {
+                    return fail(
+                        "sums-centers-coherence",
+                        format!("center {j}, dim {c}: center {cv} vs normalized sum {expect}"),
+                    );
+                }
+            }
+        }
+        match &self.store {
+            CenterStore::Dense(t) => {
+                if t.rows() != d || t.cols() != k {
+                    return fail(
+                        "store-coherence",
+                        format!("transpose is {}×{}, want {d}×{k}", t.rows(), t.cols()),
+                    );
+                }
+                for j in 0..k {
+                    for (c, &v) in self.centers.row(j).iter().enumerate() {
+                        let tv = t.row(c)[j];
+                        if tv.to_bits() != v.to_bits() {
+                            return fail(
+                                "store-coherence",
+                                format!("transpose[{c}][{j}] = {tv} vs center {v}"),
+                            );
+                        }
+                    }
+                }
+            }
+            CenterStore::Gather => {}
+            CenterStore::Inverted(idx) => idx.check_invariants(&self.centers)?,
+        }
+        Ok(())
+    }
 }
 
 /// Truncate one unit row to its `m` largest-magnitude coordinates and
@@ -925,5 +1029,40 @@ mod tests {
         assert_eq!(e.min_excluding(1), 0.7);
         assert_eq!(e.max_excluding(3), 0.9);
         assert_eq!(e.max_excluding(0), 0.99);
+    }
+
+    #[test]
+    fn check_invariants_accepts_valid_states() {
+        let data = toy_data();
+        let mut c = Centers::from_initial(initial_centers());
+        assert!(c.check_invariants(false).is_ok());
+        c.rebuild(&data, &[0, 0, 1, 1]);
+        c.update();
+        assert!(c.check_invariants(false).is_ok());
+        c.apply_move(data.row(1), 0, 1);
+        c.update();
+        assert!(c.check_invariants(false).is_ok());
+    }
+
+    #[test]
+    fn check_invariants_names_broken_coherence() {
+        let data = toy_data();
+        let mut c = Centers::from_initial(initial_centers());
+        c.rebuild(&data, &[0, 0, 1, 1]);
+        c.update();
+
+        // Drifted sums no longer normalize to the stored center. The
+        // truncated relaxation skips exactly this check — a truncated
+        // center is *intentionally* not the normalized sum.
+        c.sums[0] += 0.5;
+        assert_eq!(
+            c.check_invariants(false).unwrap_err().check,
+            "sums-centers-coherence"
+        );
+        assert!(c.check_invariants(true).is_ok());
+
+        // A denormalized center row is caught regardless of truncation.
+        c.centers.row_mut(0)[0] = 2.0;
+        assert_eq!(c.check_invariants(true).unwrap_err().check, "unit-norm");
     }
 }

@@ -11,7 +11,11 @@
 //! (the `cc`/`s` table is rebuilt serially before the pass; it reads only
 //! the frozen centers).
 
-use super::{bound_states, bound_works, Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
+use super::{
+    audit_center_prune, audit_loop_prune, bound_states, bound_works, Ctx, IterStats, KMeansConfig,
+    Move, ShardOut, SimView,
+};
+use crate::audit::AUDIT_ENABLED;
 use crate::bounds::cc::CenterBounds;
 use crate::bounds::{update_lower_pre, update_upper_pre};
 use crate::util::timer::Stopwatch;
@@ -38,6 +42,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
     for _ in 0..cfg.max_iter {
         let sw = Stopwatch::start();
         let mut iter = IterStats::default();
+        let iteration = ctx.stats.iters.len();
 
         // Center–center half-angle bounds for the current centers.
         iter.sims_center_center += cb.recompute(ctx.centers.centers());
@@ -65,6 +70,17 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                     // Whole-loop test: no other center can beat l(i).
                     if l[li] >= cb.s(a) {
                         out.iter.loop_skips += 1;
+                        if AUDIT_ENABLED {
+                            audit_loop_prune(
+                                &view,
+                                &mut out.violations,
+                                "elkan",
+                                iteration,
+                                i,
+                                a,
+                                l[li],
+                            );
+                        }
                         continue;
                     }
                     let mut tight = false;
@@ -75,6 +91,19 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                         let uij = u[li * k + j];
                         if uij <= l[li] || cb.cc(a, j) <= l[li] {
                             out.iter.bound_skips += 1;
+                            if AUDIT_ENABLED {
+                                audit_center_prune(
+                                    &view,
+                                    &mut out.violations,
+                                    "elkan",
+                                    iteration,
+                                    i,
+                                    a,
+                                    j,
+                                    Some(uij),
+                                    l[li],
+                                );
+                            }
                             continue;
                         }
                         if !tight {
@@ -83,6 +112,19 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                             tight = true;
                             if uij <= l[li] || cb.cc(a, j) <= l[li] {
                                 out.iter.bound_skips += 1;
+                                if AUDIT_ENABLED {
+                                    audit_center_prune(
+                                        &view,
+                                        &mut out.violations,
+                                        "elkan",
+                                        iteration,
+                                        i,
+                                        a,
+                                        j,
+                                        Some(uij),
+                                        l[li],
+                                    );
+                                }
                                 continue;
                             }
                         }

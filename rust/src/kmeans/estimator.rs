@@ -61,6 +61,7 @@ use super::{
     fit_exact, ExactStart, IterStats, KMeansConfig, KMeansResult, Kernel, KernelChoice, RunStats,
     Variant,
 };
+use crate::audit::AuditViolation;
 use crate::data::Dataset;
 use crate::init::InitMethod;
 use crate::model::{Model, ModelError, TrainingMeta};
@@ -175,6 +176,15 @@ pub enum FitError {
         /// Clusters the estimator was configured for.
         k: usize,
     },
+    /// The bound-certification audit ([`crate::audit`], `audit` feature
+    /// only) caught a pruning decision or data-structure invariant the
+    /// exact similarity contradicts. The fit still ran to completion —
+    /// results are computed identically with auditing on — but the
+    /// exactness contract is broken and the result must not be trusted.
+    /// The payload is the **first** violation recorded, with full
+    /// point/center/iteration/bound context.
+    #[error("bound-certification audit failed: {0}")]
+    AuditViolation(AuditViolation),
 }
 
 /// What an [`Observer`] sees after each iteration (exact engines) or
@@ -196,6 +206,12 @@ pub struct IterSnapshot<'a> {
     /// epoch in cosine distance (the quantity `tol` tests). `None` for
     /// exact iterations and the final mini-batch assignment pass.
     pub center_shift: Option<f64>,
+    /// All audit violations recorded **so far** in this fit (the
+    /// certification trail of [`crate::audit`]). Always empty without the
+    /// `audit` feature; under it, an observer can stop the run on the
+    /// first violation instead of waiting for the fit to finish and
+    /// return [`FitError::AuditViolation`].
+    pub audit_violations: &'a [AuditViolation],
 }
 
 /// Per-iteration hook threaded through every engine's loop by
@@ -550,7 +566,7 @@ impl SphericalKMeans {
             }
         };
         let prior_steps = resume.as_ref().map_or(0, |s| s.steps_done);
-        let (result, state) = match &self.engine {
+        let (result, state, violations) = match &self.engine {
             Engine::Exact(_) => fit_exact(
                 data,
                 &cfg,
@@ -560,6 +576,12 @@ impl SphericalKMeans {
                 super::minibatch::fit_minibatch(data, &cfg, centers, resume, prior_steps, obs)
             }
         };
+        // Under the `audit` feature a recorded certification failure makes
+        // the whole fit an error: the engines computed the same result they
+        // always would, but the exactness contract it rests on is broken.
+        if let Some(v) = violations.into_iter().next() {
+            return Err(FitError::AuditViolation(v));
+        }
         let meta = TrainingMeta {
             variant: if is_minibatch {
                 MINIBATCH_ENGINE.to_string()

@@ -21,7 +21,11 @@
 //! rebuilt serially from the frozen centers; the per-point annulus scans
 //! run on the sharded executor (see [`crate::kmeans`]).
 
-use super::{bound_states, bound_works, Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
+use super::{
+    audit_set_prune, bound_states, bound_works, Ctx, IterStats, KMeansConfig, Move, ShardOut,
+    SimView,
+};
+use crate::audit::AUDIT_ENABLED;
 use crate::bounds::hamerly_bound::{update_eq9_pre, update_min_p_guarded, update_safe};
 use crate::bounds::{sim_upper, update_lower};
 use crate::util::timer::Stopwatch;
@@ -54,6 +58,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
     for _ in 0..cfg.max_iter {
         let sw = Stopwatch::start();
         let mut iter = IterStats::default();
+        let iteration = ctx.stats.iters.len();
 
         // Maintain-bound inputs across the last center movement (same
         // machinery as Hamerly §5.3).
@@ -107,11 +112,37 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                     };
                     if l[li] >= u[li] {
                         out.iter.bound_skips += 1;
+                        if AUDIT_ENABLED {
+                            audit_set_prune(
+                                &view,
+                                &mut out.violations,
+                                "exponion",
+                                iteration,
+                                i,
+                                a,
+                                0..k,
+                                Some(u[li]),
+                                Some(l[li]),
+                            );
+                        }
                         continue;
                     }
                     l[li] = view.similarity(i, a, &mut out.iter);
                     if l[li] >= u[li] {
                         out.iter.bound_skips += 1;
+                        if AUDIT_ENABLED {
+                            audit_set_prune(
+                                &view,
+                                &mut out.violations,
+                                "exponion",
+                                iteration,
+                                i,
+                                a,
+                                0..k,
+                                Some(u[li]),
+                                Some(l[li]),
+                            );
+                        }
                         continue;
                     }
                     // Scan the annulus: neighbors of a with sim > 2l²−1.
@@ -121,6 +152,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                     let mut jm = a;
                     let mut outside = -1.0f64; // sim(ca, c_first-unscanned)
                     let mut scanned_all = true;
+                    let mut prefix = 0usize; // neighbors scanned before the cut
                     for &(s_aj, j) in &neighbors[a] {
                         // Only prune by the annulus when l ≥ 0 (the
                         // double-angle threshold needs 2θ ≤ 2π guarded by
@@ -132,6 +164,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                             break;
                         }
                         let s = view.similarity(i, j as usize, &mut out.iter);
+                        prefix += 1;
                         if s > m1 {
                             m2 = m1;
                             m1 = s;
@@ -147,6 +180,23 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                     } else {
                         sim_upper(outside, l[li])
                     };
+                    if AUDIT_ENABLED && !scanned_all {
+                        // The unscanned tail was pruned by the annulus
+                        // test; outside_bound (Eq. 5 on the first
+                        // unscanned neighbor) is its shared upper bound.
+                        // l(i) is exact here, so no lower check is needed.
+                        audit_set_prune(
+                            &view,
+                            &mut out.violations,
+                            "exponion",
+                            iteration,
+                            i,
+                            a,
+                            neighbors[a][prefix..].iter().map(|&(_, j)| j as usize),
+                            Some(outside_bound),
+                            None,
+                        );
+                    }
                     if m1 > l[li] {
                         // Reassign. Others now include the old center
                         // (tight l_old) and the unscanned tail

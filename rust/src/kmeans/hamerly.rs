@@ -13,7 +13,11 @@
 //! per-point pass: both depend only on the point's own state and the
 //! frozen centers (see [`crate::kmeans`]'s parallel-execution docs).
 
-use super::{bound_states, bound_works, Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
+use super::{
+    audit_loop_prune, audit_set_prune, bound_states, bound_works, Ctx, IterStats, KMeansConfig,
+    Move, ShardOut, SimView,
+};
+use crate::audit::AUDIT_ENABLED;
 use crate::bounds::cc::nearest_center_bounds;
 use crate::bounds::hamerly_bound::{update_eq9_pre, update_min_p_guarded, update_safe};
 use crate::bounds::update_lower;
@@ -45,9 +49,11 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bo
     let mut one_minus_pmin_sq = vec![0.0f64; k];
     let mut s = Vec::new();
 
+    let engine = if use_s_test { "hamerly" } else { "simplified-hamerly" };
     for _ in 0..cfg.max_iter {
         let sw = Stopwatch::start();
         let mut iter = IterStats::default();
+        let iteration = ctx.stats.iters.len();
 
         {
             let ex = ctx.centers.p_extremes();
@@ -92,10 +98,36 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bo
                     };
                     if use_s_test && l[li] >= s[a] {
                         out.iter.loop_skips += 1;
+                        if AUDIT_ENABLED {
+                            audit_loop_prune(
+                                &view,
+                                &mut out.violations,
+                                engine,
+                                iteration,
+                                i,
+                                a,
+                                l[li],
+                            );
+                        }
                         continue;
                     }
                     if l[li] >= u[li] {
                         out.iter.bound_skips += 1;
+                        if AUDIT_ENABLED {
+                            // u(i) is one shared upper bound on every
+                            // other center.
+                            audit_set_prune(
+                                &view,
+                                &mut out.violations,
+                                engine,
+                                iteration,
+                                i,
+                                a,
+                                0..k,
+                                Some(u[li]),
+                                Some(l[li]),
+                            );
+                        }
                         continue;
                     }
                     // Tighten l(i) and re-test before the expensive full
@@ -106,10 +138,34 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bo
                     l[li] = view.similarity(i, a, &mut out.iter);
                     if l[li] >= u[li] {
                         out.iter.bound_skips += 1;
+                        if AUDIT_ENABLED {
+                            audit_set_prune(
+                                &view,
+                                &mut out.violations,
+                                engine,
+                                iteration,
+                                i,
+                                a,
+                                0..k,
+                                Some(u[li]),
+                                Some(l[li]),
+                            );
+                        }
                         continue;
                     }
                     if use_s_test && l[li] >= s[a] {
                         out.iter.loop_skips += 1;
+                        if AUDIT_ENABLED {
+                            audit_loop_prune(
+                                &view,
+                                &mut out.violations,
+                                engine,
+                                iteration,
+                                i,
+                                a,
+                                l[li],
+                            );
+                        }
                         continue;
                     }
                     // Bounds failed: recompute similarities to all other

@@ -79,6 +79,7 @@ use super::{
     Centers, IterSnapshot, IterStats, KMeansConfig, KMeansResult, Observer, RunStats, SimView,
     TrainState,
 };
+use crate::audit::{AuditViolation, AUDIT_ENABLED};
 use crate::runtime::parallel::{split_mut, Plan, Pool};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use crate::util::rng::Xoshiro256;
@@ -123,14 +124,22 @@ fn minibatch_shim(data: &CsrMatrix, centers: DenseMatrix, cfg: &KMeansConfig) ->
     assert_eq!(centers.cols(), data.cols(), "center dimensionality");
     assert!(cfg.k >= 1, "need at least one cluster");
     assert!(cfg.batch_size >= 1, "batch size must be positive");
-    fit_minibatch(data, cfg, centers, None, 0, None).0
+    let (result, _, violations) = fit_minibatch(data, cfg, centers, None, 0, None);
+    // The deprecated infallible entry points have no error channel; a
+    // certification failure under the `audit` feature is a hard stop.
+    if let Some(v) = violations.first() {
+        panic!("{v}");
+    }
+    result
 }
 
 /// Run one mini-batch fit. The consolidated internal path behind
 /// [`super::SphericalKMeans::fit`] and the deprecated shims above.
 /// `resume` restores an interrupted run's accumulators (see the
 /// [module docs](self)); `prior_steps` is the epoch count the restored
-/// batch sampler fast-forwards past.
+/// batch sampler fast-forwards past. The third return is the audit
+/// violations collected at the epoch barriers (always empty without the
+/// `audit` feature).
 pub(crate) fn fit_minibatch(
     data: &CsrMatrix,
     cfg: &KMeansConfig,
@@ -138,7 +147,7 @@ pub(crate) fn fit_minibatch(
     resume: Option<TrainState>,
     prior_steps: u64,
     mut obs: Option<&mut dyn Observer>,
-) -> (KMeansResult, TrainState) {
+) -> (KMeansResult, TrainState, Vec<AuditViolation>) {
     let n = data.rows();
     let k = cfg.k;
     let b = cfg.batch_size.min(n.max(1));
@@ -187,6 +196,15 @@ pub(crate) fn fit_minibatch(
     let mut basg = vec![0u32; b];
     let mut converged = false;
     let mut epochs_run = 0usize;
+    // Audit trail (empty Vec never allocates; stays empty when off). The
+    // input matrix is certified once up front — a CSR that breaks its own
+    // invariants invalidates every similarity computed from it.
+    let mut violations: Vec<AuditViolation> = Vec::new();
+    if AUDIT_ENABLED {
+        if let Err(v) = data.check_invariants() {
+            violations.push(v);
+        }
+    }
 
     for _epoch in 0..cfg.epochs {
         let sw = Stopwatch::start();
@@ -245,12 +263,21 @@ pub(crate) fn fit_minibatch(
         iter.wall_ms = sw.ms();
         stats.iters.push(iter);
         epochs_run += 1;
+        if AUDIT_ENABLED {
+            // Epoch barrier: re-verify the center bank. Truncated runs
+            // deliberately break the sums↔centers coherence (the stored
+            // center keeps only the m largest coordinates), so that one
+            // check is relaxed for them.
+            if let Err(v) = centers.check_invariants(cfg.truncate.is_some()) {
+                violations.push(v.at_iteration(stats.iters.len() - 1));
+            }
+        }
         if shift <= cfg.tol {
             converged = true;
-            notify(&mut obs, &stats, true, Some(shift));
+            notify(&mut obs, &stats, true, Some(shift), &violations);
             break;
         }
-        if notify(&mut obs, &stats, false, Some(shift)) {
+        if notify(&mut obs, &stats, false, Some(shift), &violations) {
             break;
         }
     }
@@ -297,7 +324,7 @@ pub(crate) fn fit_minibatch(
         stats.iters.push(iter);
         // The final pass is reported to the observer for completeness; the
         // run is over either way, so its stop request is moot.
-        let _ = notify(&mut obs, &stats, converged, None);
+        let _ = notify(&mut obs, &stats, converged, None, &violations);
     }
 
     let state = TrainState {
@@ -325,7 +352,7 @@ pub(crate) fn fit_minibatch(
         converged,
         stats,
     };
-    (result, state)
+    (result, state, violations)
 }
 
 /// Deliver the newest stats entry to the observer (when one is attached);
@@ -335,6 +362,7 @@ fn notify(
     stats: &RunStats,
     converged: bool,
     center_shift: Option<f64>,
+    audit_violations: &[AuditViolation],
 ) -> bool {
     let Some(obs) = obs.as_deref_mut() else {
         return false;
@@ -345,6 +373,7 @@ fn notify(
         stats: &stats.iters[iteration],
         converged,
         center_shift,
+        audit_violations,
     };
     obs.on_iteration(&snap).is_break()
 }

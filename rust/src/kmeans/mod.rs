@@ -88,6 +88,16 @@
 //! kernels. Derived structures are refreshed per update barrier for dirty
 //! centers only — clean centers provably did not move.
 //!
+//! # Audit mode
+//!
+//! Under the `audit` cargo feature ([`crate::audit`]) every bound-based
+//! skip the variants take is cross-checked against the exactly recomputed
+//! cosine, and [`Centers::check_invariants`] re-verifies the center bank
+//! at every iteration barrier. Violations surface as
+//! [`FitError::AuditViolation`] from [`SphericalKMeans::fit`] and through
+//! [`IterSnapshot::audit_violations`]; results stay bit-identical to an
+//! unaudited run either way.
+//!
 //! ```no_run
 //! use sphkm::kmeans::{KernelChoice, SphericalKMeans, Variant};
 //! # let data = sphkm::data::synth::SynthConfig::small_demo().generate(1).matrix;
@@ -115,6 +125,7 @@ mod simplified_hamerly;
 mod standard;
 mod yinyang;
 
+use crate::audit::AuditViolation;
 use crate::data::Dataset;
 use crate::init::InitMethod;
 use crate::runtime::parallel::{split_mut, Plan, Pool};
@@ -421,12 +432,15 @@ pub(crate) struct ExactStart<'o> {
 
 /// Run one exact-engine fit. The consolidated internal path behind
 /// [`SphericalKMeans::fit`] and the deprecated `run`/`run_seeded`/
-/// `run_with_centers`/`run_dataset` shims.
+/// `run_with_centers`/`run_dataset` shims. The third element carries the
+/// bound-certification findings of an audited run ([`crate::audit`]):
+/// always empty unless the `audit` cargo feature is on, and empty on a
+/// clean audited run.
 pub(crate) fn fit_exact(
     data: &CsrMatrix,
     cfg: &KMeansConfig,
     start: ExactStart<'_>,
-) -> (KMeansResult, TrainState) {
+) -> (KMeansResult, TrainState, Vec<AuditViolation>) {
     let mut ctx = Ctx::new(data, start, cfg);
     let converged = dispatch(&mut ctx, cfg);
     ctx.into_result(converged)
@@ -491,12 +505,17 @@ fn exact_shim(
     assert_eq!(centers.rows(), cfg.k, "initial centers vs k");
     assert_eq!(centers.cols(), data.cols(), "center dimensionality");
     assert!(cfg.k >= 1, "need at least one cluster");
-    fit_exact(
+    let (result, _state, violations) = fit_exact(
         data,
         cfg,
         ExactStart { centers, sim_matrix, resume: None, prior_steps: 0, obs: None },
-    )
-    .0
+    );
+    // The deprecated shims have no error channel; under the `audit`
+    // feature a certification failure must not be silently dropped.
+    if let Some(v) = violations.first() {
+        panic!("{v}");
+    }
+    result
 }
 
 fn dispatch(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
@@ -553,11 +572,15 @@ pub(crate) struct Move {
 }
 
 /// Everything a shard produces during one assignment pass: its counter
-/// accumulator and its deferred reassignments (in processing order).
+/// accumulator, its deferred reassignments (in processing order), and —
+/// under the `audit` feature — the bound-certification violations its
+/// rows produced (always empty otherwise; an empty `Vec` never
+/// allocates).
 #[derive(Default)]
 pub(crate) struct ShardOut {
     pub iter: IterStats,
     pub moves: Vec<Move>,
+    pub violations: Vec<AuditViolation>,
 }
 
 /// Work list for a sharded assignment pass of the bound-keeping variants:
@@ -655,6 +678,151 @@ impl SimView<'_> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Bound-certification helpers (`audit` feature — see `crate::audit`).
+//
+// Every call site sits behind `if crate::audit::AUDIT_ENABLED`, a
+// compile-time constant, so the unaudited build compiles these calls out
+// of the hot loops entirely. The reference similarities are recomputed
+// with a direct gather dot — never through `SimView::similarity` — so
+// the `IterStats` counters (and therefore the run's recorded trajectory)
+// stay bit-identical between audited and unaudited runs.
+// ---------------------------------------------------------------------------
+
+/// Exactly recompute `sim(i, j)` against the frozen barrier centers,
+/// outside the counted similarity paths.
+#[inline]
+pub(crate) fn audit_sim(view: &SimView<'_>, i: usize, j: usize) -> f64 {
+    view.data.row(i).dot_dense(view.centers.center(j))
+}
+
+/// Certify a **per-center** skip: the engine declined to compute
+/// `sim(i, j)` because a bound proved center `j` cannot beat the assigned
+/// center `a`. Checks, against exactly recomputed similarities:
+/// `upper`-validity (`sim(i, j) ≤ upper`, when the decision used one),
+/// `lower`-validity (`sim(i, a) ≥ lower`), and decision safety (`j` does
+/// not actually beat `a` — the check that catches a mutated *comparison*
+/// even when both bounds are individually valid).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn audit_center_prune(
+    view: &SimView<'_>,
+    out: &mut Vec<AuditViolation>,
+    engine: &'static str,
+    iteration: usize,
+    i: usize,
+    a: usize,
+    j: usize,
+    upper: Option<f64>,
+    lower: f64,
+) {
+    let sj = audit_sim(view, i, j);
+    let sa = audit_sim(view, i, a);
+    if let Some(u) = upper {
+        if crate::audit::exceeds_upper(u, sj) {
+            out.push(AuditViolation::bound(
+                engine,
+                "upper-bound-prune",
+                iteration,
+                Some(i),
+                Some(j),
+                u,
+                sj,
+            ));
+        }
+    }
+    if crate::audit::below_lower(lower, sa) {
+        out.push(AuditViolation::bound(
+            engine,
+            "lower-bound",
+            iteration,
+            Some(i),
+            Some(a),
+            lower,
+            sa,
+        ));
+    }
+    if sj > sa + 2.0 * crate::audit::AUDIT_MARGIN {
+        let mut v =
+            AuditViolation::bound(engine, "unsafe-prune", iteration, Some(i), Some(j), sa, sj);
+        v.detail = format!("pruned center {j} actually beats assigned center {a}");
+        out.push(v);
+    }
+}
+
+/// Certify a **set** skip: the engine declined to scan every center in
+/// `members` (a whole-point skip, a Yinyang group, Exponion's
+/// out-of-annulus tail, …). For each member `j ≠ a`: `upper`-validity
+/// when the decision used a shared upper bound, and decision safety
+/// (`j` does not actually beat `a`). `lower`-validity on the assigned
+/// center is checked once when `lower` is given.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn audit_set_prune(
+    view: &SimView<'_>,
+    out: &mut Vec<AuditViolation>,
+    engine: &'static str,
+    iteration: usize,
+    i: usize,
+    a: usize,
+    members: impl IntoIterator<Item = usize>,
+    upper: Option<f64>,
+    lower: Option<f64>,
+) {
+    let sa = audit_sim(view, i, a);
+    if let Some(l) = lower {
+        if crate::audit::below_lower(l, sa) {
+            out.push(AuditViolation::bound(
+                engine,
+                "lower-bound",
+                iteration,
+                Some(i),
+                Some(a),
+                l,
+                sa,
+            ));
+        }
+    }
+    for j in members {
+        if j == a {
+            continue;
+        }
+        let sj = audit_sim(view, i, j);
+        if let Some(u) = upper {
+            if crate::audit::exceeds_upper(u, sj) {
+                out.push(AuditViolation::bound(
+                    engine,
+                    "upper-bound-prune",
+                    iteration,
+                    Some(i),
+                    Some(j),
+                    u,
+                    sj,
+                ));
+            }
+        }
+        if sj > sa + 2.0 * crate::audit::AUDIT_MARGIN {
+            let mut v =
+                AuditViolation::bound(engine, "unsafe-prune", iteration, Some(i), Some(j), sa, sj);
+            v.detail = format!("skipped center {j} actually beats assigned center {a}");
+            out.push(v);
+        }
+    }
+}
+
+/// Certify a **whole-loop** skip: the engine kept point `i` on center `a`
+/// without scanning any other center (Elkan's `s`-test, the Hamerly
+/// `u ≤ l` test). Equivalent to [`audit_set_prune`] over all `k` centers.
+pub(crate) fn audit_loop_prune(
+    view: &SimView<'_>,
+    out: &mut Vec<AuditViolation>,
+    engine: &'static str,
+    iteration: usize,
+    i: usize,
+    a: usize,
+    lower: f64,
+) {
+    audit_set_prune(view, out, engine, iteration, i, a, 0..view.k, None, Some(lower));
+}
+
 /// Shared mutable state threaded through every algorithm implementation.
 pub(crate) struct Ctx<'a, 'o> {
     pub data: &'a CsrMatrix,
@@ -662,6 +830,11 @@ pub(crate) struct Ctx<'a, 'o> {
     pub assign: Vec<u32>,
     pub centers: Centers,
     pub stats: RunStats,
+    /// Bound-certification findings collected by an audited run
+    /// ([`crate::audit`]): shard findings merged at every barrier plus
+    /// data-structure invariant failures. Always empty without the
+    /// `audit` feature.
+    pub violations: Vec<AuditViolation>,
     /// Row-shard grid for the assignment phase (a function of the row
     /// count only — see the module docs).
     pub plan: Plan,
@@ -704,12 +877,22 @@ impl<'a, 'o> Ctx<'a, 'o> {
                 false,
             ),
         };
+        // Audit mode certifies the training input once up front: a CSR
+        // matrix that breaks its own invariants invalidates every bound
+        // derived from it.
+        let mut violations = Vec::new();
+        if crate::audit::AUDIT_ENABLED {
+            if let Err(v) = data.check_invariants() {
+                violations.push(v);
+            }
+        }
         Self {
             data,
             k,
             assign,
             centers,
             stats: RunStats::default(),
+            violations,
             plan,
             pool: Pool::new(threads),
             preinit: if resume { None } else { start.sim_matrix },
@@ -730,8 +913,20 @@ impl<'a, 'o> Ctx<'a, 'o> {
     /// Record a completed iteration and notify the observer. Returns
     /// `true` when the observer requests an early stop — the variant loop
     /// must then return without starting another iteration.
+    ///
+    /// Under the `audit` feature this is also the **iteration barrier**
+    /// at which the deep data-structure invariants re-verify: the center
+    /// bank has just completed its update, so the f64 sums, f32 centers,
+    /// norms, and derived kernel structures must all cohere
+    /// ([`Centers::check_invariants`]).
     pub(crate) fn push_iter(&mut self, iter: IterStats, converged: bool) -> bool {
         self.stats.iters.push(iter);
+        if crate::audit::AUDIT_ENABLED {
+            let iteration = self.stats.iters.len() - 1;
+            if let Err(v) = self.centers.check_invariants(false) {
+                self.violations.push(v.at_iteration(iteration));
+            }
+        }
         self.notify(converged)
     }
 
@@ -745,6 +940,7 @@ impl<'a, 'o> Ctx<'a, 'o> {
             stats: &self.stats.iters[iteration],
             converged,
             center_shift: None,
+            audit_violations: &self.violations,
         };
         obs.on_iteration(&snap).is_break()
     }
@@ -922,6 +1118,7 @@ impl<'a, 'o> Ctx<'a, 'o> {
     pub(crate) fn merge_shards(&mut self, outs: Vec<ShardOut>, iter: &mut IterStats) {
         for out in outs {
             iter.absorb(&out.iter);
+            self.violations.extend(out.violations);
             for mv in out.moves {
                 self.centers
                     .apply_move(self.data.row(mv.i as usize), mv.from as usize, mv.to as usize);
@@ -931,8 +1128,9 @@ impl<'a, 'o> Ctx<'a, 'o> {
 
     /// Finalize: compute the objective and assemble the result plus the
     /// resumable training state (the accumulators a continued fit
-    /// restores — see [`TrainState`]).
-    fn into_result(self, converged: bool) -> (KMeansResult, TrainState) {
+    /// restores — see [`TrainState`]) and any audit violations the run
+    /// collected (empty unless the `audit` feature found a problem).
+    fn into_result(self, converged: bool) -> (KMeansResult, TrainState, Vec<AuditViolation>) {
         let mut obj = 0.0f64;
         for i in 0..self.data.rows() {
             let s = self
@@ -961,7 +1159,7 @@ impl<'a, 'o> Ctx<'a, 'o> {
             converged,
             stats: self.stats,
         };
-        (result, state)
+        (result, state, self.violations)
     }
 }
 

@@ -9,7 +9,11 @@
 //! Bound maintenance and the bound scan are fused into one sharded
 //! per-point pass (see [`crate::kmeans`]'s parallel-execution docs).
 
-use super::{bound_states, bound_works, Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
+use super::{
+    audit_center_prune, bound_states, bound_works, Ctx, IterStats, KMeansConfig, Move, ShardOut,
+    SimView,
+};
+use crate::audit::AUDIT_ENABLED;
 use crate::bounds::{update_lower_pre, update_upper_pre};
 use crate::util::timer::Stopwatch;
 
@@ -34,6 +38,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
     for _ in 0..cfg.max_iter {
         let sw = Stopwatch::start();
         let mut iter = IterStats::default();
+        let iteration = ctx.stats.iters.len();
 
         let outs = {
             let view = SimView { data: ctx.data, centers: &ctx.centers, k };
@@ -59,6 +64,19 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                         }
                         if u[li * k + j] <= l[li] {
                             out.iter.bound_skips += 1;
+                            if AUDIT_ENABLED {
+                                audit_center_prune(
+                                    &view,
+                                    &mut out.violations,
+                                    "simplified-elkan",
+                                    iteration,
+                                    i,
+                                    a,
+                                    j,
+                                    Some(u[li * k + j]),
+                                    l[li],
+                                );
+                            }
                             continue;
                         }
                         if !tight {
@@ -66,6 +84,19 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                             tight = true;
                             if u[li * k + j] <= l[li] {
                                 out.iter.bound_skips += 1;
+                                if AUDIT_ENABLED {
+                                    audit_center_prune(
+                                        &view,
+                                        &mut out.violations,
+                                        "simplified-elkan",
+                                        iteration,
+                                        i,
+                                        a,
+                                        j,
+                                        Some(u[li * k + j]),
+                                        l[li],
+                                    );
+                                }
                                 continue;
                             }
                         }

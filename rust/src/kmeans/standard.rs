@@ -7,7 +7,8 @@
 //! inverted file), sharded across the worker pool (see the module docs of
 //! [`crate::kmeans`] for the determinism contract).
 
-use super::{Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
+use super::{audit_sim, Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
+use crate::audit::{AuditViolation, AUDIT_ENABLED, AUDIT_MARGIN};
 use crate::runtime::parallel::split_mut;
 use crate::util::timer::Stopwatch;
 use std::ops::Range;
@@ -29,6 +30,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
     for _ in 0..cfg.max_iter {
         let sw = Stopwatch::start();
         let mut iter = IterStats::default();
+        let iteration = ctx.stats.iters.len();
 
         let outs = {
             let view = SimView { data: ctx.data, centers: &ctx.centers, k };
@@ -45,6 +47,28 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                 for (li, i) in range.enumerate() {
                     let (best_j, _, _) =
                         view.similarities_full(i, &mut out.iter, &mut scratch);
+                    if AUDIT_ENABLED {
+                        // Standard takes no pruning decisions; what audit
+                        // certifies here is the kernel layer itself — the
+                        // configured backend's similarity row must agree
+                        // with directly recomputed gather dots, or every
+                        // bound the accelerated variants derive from the
+                        // same backend is suspect.
+                        for (j, &sj) in scratch.iter().enumerate() {
+                            let exact = audit_sim(&view, i, j);
+                            if (sj - exact).abs() > AUDIT_MARGIN {
+                                out.violations.push(AuditViolation::bound(
+                                    "standard",
+                                    "kernel-sim-coherence",
+                                    iteration,
+                                    Some(i),
+                                    Some(j),
+                                    sj,
+                                    exact,
+                                ));
+                            }
+                        }
+                    }
                     let old = assign[li] as usize;
                     if best_j != old {
                         assign[li] = best_j as u32;

@@ -14,7 +14,11 @@
 //! per-point pass (see [`crate::kmeans`]'s parallel-execution docs); the
 //! per-group movement extremes are computed serially (`O(k)`) before it.
 
-use super::{bound_states, bound_works, Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
+use super::{
+    audit_set_prune, bound_states, bound_works, Ctx, IterStats, KMeansConfig, Move, ShardOut,
+    SimView,
+};
+use crate::audit::AUDIT_ENABLED;
 use crate::bounds::hamerly_bound::{update_eq9_pre, update_min_p_guarded, update_safe};
 use crate::bounds::update_lower;
 use crate::sparse::DenseMatrix;
@@ -124,6 +128,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
     for _ in 0..cfg.max_iter {
         let sw = Stopwatch::start();
         let mut iter = IterStats::default();
+        let iteration = ctx.stats.iters.len();
 
         {
             let p = ctx.centers.p();
@@ -173,12 +178,40 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                     let global_u = urow.iter().cloned().fold(f64::MIN, f64::max);
                     if l[li] >= global_u {
                         out.iter.bound_skips += 1;
+                        if AUDIT_ENABLED {
+                            // max over group bounds upper-bounds every
+                            // other center.
+                            audit_set_prune(
+                                &view,
+                                &mut out.violations,
+                                "yinyang",
+                                iteration,
+                                i,
+                                a,
+                                0..k,
+                                Some(global_u),
+                                Some(l[li]),
+                            );
+                        }
                         continue;
                     }
                     // Tighten l(i) and re-test.
                     l[li] = view.similarity(i, a, &mut out.iter);
                     if l[li] >= global_u {
                         out.iter.bound_skips += 1;
+                        if AUDIT_ENABLED {
+                            audit_set_prune(
+                                &view,
+                                &mut out.violations,
+                                "yinyang",
+                                iteration,
+                                i,
+                                a,
+                                0..k,
+                                Some(global_u),
+                                Some(l[li]),
+                            );
+                        }
                         continue;
                     }
                     // Scan failing groups.
@@ -193,6 +226,22 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                     for (gi, members) in groups.iter().enumerate() {
                         if urow[gi] <= l[li] {
                             out.iter.bound_skips += 1;
+                            if AUDIT_ENABLED {
+                                // l(i) is exact here (tightened above), so
+                                // only the group bound's validity and the
+                                // decision itself need certifying.
+                                audit_set_prune(
+                                    &view,
+                                    &mut out.violations,
+                                    "yinyang",
+                                    iteration,
+                                    i,
+                                    a,
+                                    members.iter().copied(),
+                                    Some(urow[gi]),
+                                    None,
+                                );
+                            }
                             continue;
                         }
                         scanned[gi] = true;

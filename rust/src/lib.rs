@@ -54,19 +54,40 @@
 //! fitted.save(std::path::Path::new("model.spkm")).unwrap();
 //! ```
 #![deny(missing_docs)]
+#![forbid(unsafe_code)]
 
+// The workspace `[lints]` table keeps `clippy::cast_possible_truncation`
+// and `clippy::float_cmp` live crate-wide (they guard the `model/` codec
+// and every future ingestion path); the numeric kernel subtrees below
+// carry documented allows instead: their index casts are bounded by the
+// matrix shapes they were derived from, and exact float comparison
+// against 0.0 / stored sentinels is the sparse-representation contract
+// (a coordinate is present iff its bit pattern is non-zero).
+#[allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+pub mod audit;
+#[allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 pub mod bounds;
+#[allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 pub mod coordinator;
+#[allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 pub mod data;
+#[allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 pub mod init;
+#[allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 pub mod kmeans;
+#[allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 pub mod metrics;
 pub mod model;
+#[allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 pub mod runtime;
+#[allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 pub mod serve;
+#[allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 pub mod sparse;
+#[allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 pub mod util;
 
+pub use audit::AuditViolation;
 pub use kmeans::{
     Engine, ExactParams, FitError, FittedModel, IterSnapshot, MiniBatchParams, Observer,
     SphericalKMeans,

@@ -12,6 +12,10 @@
 //! sphkm info
 //! ```
 
+// CLI reporting casts counters to floats for display; the workspace
+// clippy warnings on truncating casts target library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use std::ops::ControlFlow;
 
 use sphkm::coordinator::experiments::{self, ExperimentOpts};
@@ -39,6 +43,8 @@ USAGE:
                 [--minibatch] # approximate mini-batch engine (large corpora)
                 [--batch-size B] [--epochs E] [--tol T]
                 [--truncate M] # keep top-M coords per center (0 = dense)
+                [--audit]     # certify every bound-based skip against the
+                              # exact cosine (needs --features audit)
                 [--save-model FILE.spkm] # persist the trained model + state
                 [--resume FILE.spkm]     # continue training a saved model
                                          # (k, engine, schedule and seed
@@ -418,10 +424,29 @@ fn main() {
                 ds.matrix.density() * 100.0,
                 if minibatch { "minibatch" } else { variant.name() },
             );
+            // --audit: bound certification (see the `sphkm::audit` module).
+            // The checks only exist in binaries compiled with the `audit`
+            // cargo feature; in a plain build the flag is an error rather
+            // than a silent no-op that would report an uncertified run as
+            // certified.
+            if args.flag("audit") {
+                if !sphkm::audit::AUDIT_ENABLED {
+                    eprintln!(
+                        "error: --audit requires a binary built with the `audit` feature\n\
+                         (cargo run --features audit -- cluster ...)"
+                    );
+                    std::process::exit(2);
+                }
+                println!(
+                    "[audit] bound certification active: every bound-based skip is \
+                     cross-checked against the exact cosine"
+                );
+            }
             let sw = sphkm::util::timer::Stopwatch::start();
             let fitted = if args.flag("stats") {
                 // Live per-iteration progress through the observer hook.
                 println!("\niter  sims_pc  sims_cc  reassign  skips(loop/bound)  ms");
+                let mut reported = 0usize;
                 let mut observer = |s: &IterSnapshot<'_>| {
                     println!(
                         "{:>4}  {:>8} {:>8} {:>9}  {:>7}/{:<9} {:>8.2}",
@@ -433,6 +458,12 @@ fn main() {
                         s.stats.bound_skips,
                         s.stats.wall_ms
                     );
+                    // Surface audit violations as they are recorded (the
+                    // fit also fails at the end with the first of them).
+                    for v in &s.audit_violations[reported..] {
+                        eprintln!("[audit] {v}");
+                    }
+                    reported = s.audit_violations.len();
                     ControlFlow::Continue(())
                 };
                 estimator.fit_observed(&ds.matrix, &mut observer)

@@ -51,6 +51,19 @@ pub enum ModelError {
     /// garbage, CSR invariant violations, non-UTF-8 metadata, …
     #[error("corrupt model file: {0}")]
     Corrupt(String),
+    /// A model field is too large for the `.spkm` layout's fixed-width
+    /// encoding (a center column index beyond `u32`, a metadata string
+    /// beyond `u16`). Writing it through a lossy `as` cast would corrupt
+    /// the file silently; saving fails with this error instead.
+    #[error("{field} = {value} exceeds the .spkm format limit of {max}")]
+    FieldOverflow {
+        /// Which field overflowed.
+        field: &'static str,
+        /// The value that did not fit.
+        value: u64,
+        /// The largest value the layout can represent.
+        max: u64,
+    },
 }
 
 /// FNV-1a 64-bit over `bytes` — the integrity checksum appended to every
@@ -68,8 +81,9 @@ fn fnv1a(bytes: &[u8]) -> u64 {
 /// Encode `model` to the `.spkm` byte layout (version 1 without training
 /// state, version 2 with), checksum included. The encoding is a pure
 /// function of the model, so identical models produce byte-identical
-/// files.
-pub(crate) fn encode(model: &Model) -> Vec<u8> {
+/// files. Fails with [`ModelError::FieldOverflow`] when a field exceeds
+/// the layout's fixed-width encoding instead of truncating it silently.
+pub(crate) fn encode(model: &Model) -> Result<Vec<u8>, ModelError> {
     let (k, d) = (model.k(), model.d());
     // Sparse CSR pass over the dense centers: a coordinate is stored iff
     // its f32 bit pattern is non-zero, so -0.0 survives the round trip.
@@ -80,7 +94,12 @@ pub(crate) fn encode(model: &Model) -> Vec<u8> {
     for j in 0..k {
         for (c, &v) in model.centers().row(j).iter().enumerate() {
             if v.to_bits() != 0 {
-                indices.push(c as u32);
+                let c = u32::try_from(c).map_err(|_| ModelError::FieldOverflow {
+                    field: "center column index",
+                    value: c as u64,
+                    max: u32::MAX as u64,
+                })?;
+                indices.push(c);
                 values.push(v);
             }
         }
@@ -101,7 +120,12 @@ pub(crate) fn encode(model: &Model) -> Vec<u8> {
     buf.extend_from_slice(&meta.objective.to_bits().to_le_bytes());
     for s in [&meta.variant, &meta.kernel] {
         let bytes = s.as_bytes();
-        buf.extend_from_slice(&(bytes.len() as u16).to_le_bytes());
+        let len = u16::try_from(bytes.len()).map_err(|_| ModelError::FieldOverflow {
+            field: "metadata string length",
+            value: bytes.len() as u64,
+            max: u16::MAX as u64,
+        })?;
+        buf.extend_from_slice(&len.to_le_bytes());
         buf.extend_from_slice(bytes);
     }
     for &n in model.norms() {
@@ -145,7 +169,7 @@ pub(crate) fn encode(model: &Model) -> Vec<u8> {
     }
     let sum = fnv1a(&buf);
     buf.extend_from_slice(&sum.to_le_bytes());
-    buf
+    Ok(buf)
 }
 
 /// A bounds-checked cursor over the raw file bytes: every read names the
@@ -190,7 +214,9 @@ fn checked_dim(v: u64, what: &str, cap: u64) -> Result<usize, ModelError> {
     if v > cap {
         return Err(ModelError::Corrupt(format!("{what} {v} is implausibly large")));
     }
-    Ok(v as usize)
+    usize::try_from(v).map_err(|_| {
+        ModelError::Corrupt(format!("{what} {v} does not fit this platform's address space"))
+    })
 }
 
 /// Decode a full `.spkm` byte buffer into a [`Model`], validating in
@@ -386,7 +412,10 @@ pub(crate) fn decode(buf: &[u8]) -> Result<Model, ModelError> {
     }
     let mut centers = DenseMatrix::zeros(k, d);
     for j in 0..k {
-        let (s, e) = (indptr[j] as usize, indptr[j + 1] as usize);
+        // Lossless: the endpoint/monotonicity checks above cap every
+        // indptr entry at nnz, which is already a usize.
+        let s = usize::try_from(indptr[j]).expect("indptr bounded by nnz");
+        let e = usize::try_from(indptr[j + 1]).expect("indptr bounded by nnz");
         let row = centers.row_mut(j);
         let mut prev: Option<u32> = None;
         for t in s..e {
@@ -437,11 +466,31 @@ mod tests {
     #[test]
     fn encode_decode_round_trips_bitwise() {
         let m = toy_model();
-        let bytes = encode(&m);
+        let bytes = encode(&m).unwrap();
         let back = decode(&bytes).unwrap();
         assert_eq!(back, m);
         // Deterministic encoding.
-        assert_eq!(encode(&back), bytes);
+        assert_eq!(encode(&back).unwrap(), bytes);
+    }
+
+    #[test]
+    fn oversized_metadata_string_is_a_typed_overflow() {
+        let centers = DenseMatrix::from_vec(1, 2, vec![0.6, 0.8]);
+        let m = Model::new(
+            centers,
+            TrainingMeta {
+                variant: "v".repeat(usize::from(u16::MAX) + 1),
+                kernel: "gather".into(),
+                iterations: 0,
+                objective: 0.0,
+                seed: 0,
+            },
+        );
+        let err = encode(&m).unwrap_err();
+        assert!(
+            matches!(err, ModelError::FieldOverflow { field: "metadata string length", .. }),
+            "{err}"
+        );
     }
 
     #[test]
@@ -460,7 +509,7 @@ mod tests {
             },
         );
         assert_eq!(m.center_nnz(), 2, "-0.0 has a non-zero bit pattern");
-        let back = decode(&encode(&m)).unwrap();
+        let back = decode(&encode(&m).unwrap()).unwrap();
         assert_eq!(back.centers().row(0)[0].to_bits(), (-0.0f32).to_bits());
     }
 
@@ -480,13 +529,13 @@ mod tests {
             }),
         };
         let m = toy_model().with_state(Some(state));
-        let bytes = encode(&m);
+        let bytes = encode(&m).unwrap();
         assert_eq!(&bytes[8..12], &2u32.to_le_bytes(), "state ⇒ version 2");
         let back = decode(&bytes).unwrap();
         assert_eq!(back, m);
-        assert_eq!(encode(&back), bytes, "deterministic encoding");
+        assert_eq!(encode(&back).unwrap(), bytes, "deterministic encoding");
         // Stateless models keep writing byte-stable version-1 files.
-        let v1 = encode(&toy_model());
+        let v1 = encode(&toy_model()).unwrap();
         assert_eq!(&v1[8..12], &1u32.to_le_bytes());
         assert!(decode(&v1).unwrap().state().is_none());
         // Truncating inside the state section is a typed error.
@@ -504,7 +553,8 @@ mod tests {
             counts: vec![1, 2],
             sums: vec![0.0; 6],
             minibatch: None,
-        })));
+        })))
+        .unwrap();
         let body_end = bad.len() - 8;
         let sum = fnv1a(&bad[..body_end]);
         bad[body_end..].copy_from_slice(&sum.to_le_bytes());
@@ -517,7 +567,7 @@ mod tests {
 
     #[test]
     fn rejects_bad_magic_version_truncation_and_corruption() {
-        let good = encode(&toy_model());
+        let good = encode(&toy_model()).unwrap();
         // Bad magic.
         let mut bad = good.clone();
         bad[0] ^= 0xFF;

@@ -209,7 +209,7 @@ impl Model {
     /// [module docs](self)). The encoding is deterministic: saving the
     /// same model twice produces byte-identical files.
     pub fn save(&self, path: &Path) -> Result<(), ModelError> {
-        std::fs::write(path, format::encode(self))?;
+        std::fs::write(path, format::encode(self)?)?;
         Ok(())
     }
 

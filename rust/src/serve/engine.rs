@@ -2,6 +2,7 @@
 //! model, exhaustive or MaxScore-pruned — see the [module docs](super)
 //! for the traversal design and the bit-identity contract.
 
+use crate::audit::{AuditViolation, AUDIT_ENABLED};
 use crate::kmeans::{DataShape, Kernel, KernelChoice};
 use crate::model::Model;
 use crate::runtime::parallel::{Plan, Pool};
@@ -343,6 +344,38 @@ impl QueryEngine {
             scored.truncate(p);
         }
         scored.sort_unstable_by(by_rank);
+        if AUDIT_ENABLED {
+            // Bound certification ([`crate::audit`]): re-answer the query
+            // exhaustively (into throwaway counters, so the reported stats
+            // stay identical to an unaudited run) and demand the pruned
+            // answer bit-for-bit. Serving has no error channel to thread a
+            // violation through, so a divergence is a hard stop.
+            let mut audit_stats = ServeStats::default();
+            let exact = self.top_p_exhaustive_into(row, p, &mut audit_stats);
+            let diverges = exact.len() != scored.len()
+                || exact
+                    .iter()
+                    .zip(&scored)
+                    .any(|(a, b)| a.0 != b.0 || a.1.to_bits() != b.1.to_bits());
+            if diverges {
+                let rank = exact
+                    .iter()
+                    .zip(&scored)
+                    .position(|(a, b)| a.0 != b.0 || a.1.to_bits() != b.1.to_bits())
+                    .unwrap_or_else(|| exact.len().min(scored.len()));
+                let v = AuditViolation::invariant(
+                    "serve",
+                    "pruned-vs-exhaustive",
+                    format!(
+                        "MaxScore traversal diverges from the exhaustive pass at rank {rank}: \
+                         pruned {:?} vs exhaustive {:?} (top-{p} query, k = {k})",
+                        scored.get(rank),
+                        exact.get(rank)
+                    ),
+                );
+                panic!("{v}");
+            }
+        }
         scored
     }
 

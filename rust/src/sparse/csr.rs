@@ -2,6 +2,7 @@
 
 use super::ops::{sparse_dense_dot, sparse_sparse_dot};
 use super::vec::SparseVec;
+use crate::audit::AuditViolation;
 
 /// A read-optimized CSR matrix of `f32` values with `u32` column indices.
 ///
@@ -224,6 +225,13 @@ impl CsrMatrix {
     /// conference–author experiments (Fig. 2), where the paper transposes
     /// the bipartite matrix before TF-IDF.
     pub fn transpose(&self) -> CsrMatrix {
+        // Row ids become column indices of the transpose, which the CSR
+        // layout stores as u32 — a lossy cast would silently alias rows.
+        assert!(
+            self.rows == 0 || u32::try_from(self.rows - 1).is_ok(),
+            "transpose: {} rows exceed the u32 index space",
+            self.rows
+        );
         let mut counts = vec![0usize; self.cols + 1];
         for &c in &self.indices {
             counts[c as usize + 1] += 1;
@@ -288,6 +296,71 @@ impl CsrMatrix {
             }
         }
         out
+    }
+
+    /// Deep invariant check for the audit layer ([`crate::audit`]): every
+    /// structural property the merge dot products and the incremental
+    /// center maintenance silently rely on — indptr shape/monotonicity,
+    /// parallel index/value arrays, strictly increasing in-bounds row
+    /// indices, and finite values (a NaN row poisons every bound derived
+    /// from it). Run once per audited fit and callable from tests; returns
+    /// the first broken invariant with full context.
+    pub fn check_invariants(&self) -> Result<(), AuditViolation> {
+        let fail = |check: &'static str, detail: String| {
+            Err(AuditViolation::invariant("csr", check, detail))
+        };
+        if self.indptr.len() != self.rows + 1 {
+            return fail(
+                "indptr-shape",
+                format!("indptr length {} != rows {} + 1", self.indptr.len(), self.rows),
+            );
+        }
+        if self.indptr.first() != Some(&0) {
+            return fail("indptr-shape", format!("indptr[0] = {:?} != 0", self.indptr.first()));
+        }
+        if *self.indptr.last().unwrap_or(&0) != self.indices.len() {
+            return fail(
+                "indptr-end",
+                format!(
+                    "indptr end {} != nnz {}",
+                    self.indptr.last().unwrap_or(&0),
+                    self.indices.len()
+                ),
+            );
+        }
+        if self.indices.len() != self.values.len() {
+            return fail(
+                "parallel-arrays",
+                format!("{} indices vs {} values", self.indices.len(), self.values.len()),
+            );
+        }
+        if let Some(r) = (0..self.rows).find(|&r| self.indptr[r] > self.indptr[r + 1]) {
+            return fail(
+                "indptr-monotone",
+                format!("indptr[{r}]={} > indptr[{}]={}", self.indptr[r], r + 1, self.indptr[r + 1]),
+            );
+        }
+        for r in 0..self.rows {
+            let s = &self.indices[self.indptr[r]..self.indptr[r + 1]];
+            if let Some(w) = s.windows(2).find(|w| w[0] >= w[1]) {
+                return fail(
+                    "row-indices-sorted",
+                    format!("row {r}: index {} then {}", w[0], w[1]),
+                );
+            }
+            if let Some(&last) = s.last() {
+                if last as usize >= self.cols {
+                    return fail(
+                        "column-bounds",
+                        format!("row {r}: index {last} out of bounds for {} columns", self.cols),
+                    );
+                }
+            }
+        }
+        if let Some((t, &v)) = self.values.iter().enumerate().find(|(_, v)| !v.is_finite()) {
+            return fail("finite-values", format!("values[{t}] = {v}"));
+        }
+        Ok(())
     }
 
     /// Dense materialization of a contiguous row range `[start, end)` into
@@ -442,5 +515,31 @@ mod tests {
             let tt = m.transpose().transpose();
             assert_eq!(tt, m);
         });
+    }
+
+    #[test]
+    fn check_invariants_accepts_valid_and_names_broken_structure() {
+        assert!(small().check_invariants().is_ok());
+
+        // Unsorted indices within a row.
+        let mut m = small();
+        m.indices.swap(0, 1);
+        assert_eq!(m.check_invariants().unwrap_err().check, "row-indices-sorted");
+
+        // Non-finite stored value.
+        let mut m = small();
+        m.values[0] = f32::NAN;
+        assert_eq!(m.check_invariants().unwrap_err().check, "finite-values");
+
+        // Decreasing row pointer.
+        let mut m = small();
+        m.indptr[1] = 3;
+        m.indptr[2] = 1;
+        assert_eq!(m.check_invariants().unwrap_err().check, "indptr-monotone");
+
+        // Column index out of bounds.
+        let mut m = small();
+        m.indices[3] = 7;
+        assert_eq!(m.check_invariants().unwrap_err().check, "column-bounds");
     }
 }

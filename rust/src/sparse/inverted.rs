@@ -26,6 +26,7 @@
 
 use super::csr::RowView;
 use super::dense::DenseMatrix;
+use crate::audit::AuditViolation;
 
 /// One center's non-zero value in one dimension's postings list.
 #[derive(Debug, Clone, Copy)]
@@ -159,6 +160,92 @@ impl InvertedIndex {
             out[p.center as usize] += q * p.value as f64;
         }
         list.len() as u64
+    }
+
+    /// Deep invariant check for the audit layer ([`crate::audit`]): the
+    /// incrementally maintained index must be **exactly** the index a
+    /// from-scratch build of `centers` would produce — postings sorted by
+    /// center id with in-range ids and bit-identical non-zero values,
+    /// support lists matching each center's non-zero pattern, and the
+    /// `nnz` count agreeing with both. Run at iteration barriers under
+    /// audit (via [`crate::kmeans::Centers::check_invariants`]) and
+    /// callable from tests; returns the first broken invariant.
+    pub fn check_invariants(&self, centers: &DenseMatrix) -> Result<(), AuditViolation> {
+        let fail = |check: &'static str, detail: String| {
+            Err(AuditViolation::invariant("inverted", check, detail))
+        };
+        if self.k != centers.rows() || self.postings.len() != centers.cols() {
+            return fail(
+                "shape",
+                format!(
+                    "index is {} centers × {} dims, centers matrix is {} × {}",
+                    self.k,
+                    self.postings.len(),
+                    centers.rows(),
+                    centers.cols()
+                ),
+            );
+        }
+        if self.support.len() != self.k {
+            return fail(
+                "shape",
+                format!("{} support lists for {} centers", self.support.len(), self.k),
+            );
+        }
+        let mut counted = 0usize;
+        for (c, list) in self.postings.iter().enumerate() {
+            counted += list.len();
+            for w in list.windows(2) {
+                if w[0].center >= w[1].center {
+                    return fail(
+                        "postings-sorted",
+                        format!("dim {c}: center {} then {}", w[0].center, w[1].center),
+                    );
+                }
+            }
+            for p in list {
+                let j = p.center as usize;
+                if j >= self.k {
+                    return fail("postings-center-range", format!("dim {c}: center {j} >= k"));
+                }
+                let actual = centers.row(j)[c];
+                if p.value.to_bits() != actual.to_bits() {
+                    return fail(
+                        "postings-value-coherence",
+                        format!("dim {c}, center {j}: posting {} vs center {actual}", p.value),
+                    );
+                }
+                if p.value == 0.0 {
+                    return fail("postings-nonzero", format!("dim {c}, center {j}: stored zero"));
+                }
+            }
+        }
+        if counted != self.nnz {
+            return fail(
+                "nnz-coherence",
+                format!("nnz counter {} vs {} postings", self.nnz, counted),
+            );
+        }
+        for (j, support) in self.support.iter().enumerate() {
+            let expect: Vec<u32> = centers
+                .row(j)
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(c, _)| c as u32)
+                .collect();
+            if support != &expect {
+                return fail(
+                    "support-coherence",
+                    format!(
+                        "center {j}: support has {} dims, center row has {} non-zeros",
+                        support.len(),
+                        expect.len()
+                    ),
+                );
+            }
+        }
+        Ok(())
     }
 
     /// Similarities of one sparse row to **all** centers, written into
@@ -305,5 +392,29 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         });
+    }
+
+    #[test]
+    fn check_invariants_accepts_valid_and_names_broken_coherence() {
+        let centers = toy_centers();
+        assert!(InvertedIndex::from_centers(&centers).check_invariants(&centers).is_ok());
+
+        // A posting diverging from the centers matrix it claims to mirror.
+        let mut idx = InvertedIndex::from_centers(&centers);
+        idx.postings[0][0].value += 1.0;
+        assert_eq!(
+            idx.check_invariants(&centers).unwrap_err().check,
+            "postings-value-coherence"
+        );
+
+        // Checked against a differently shaped center bank.
+        let idx = InvertedIndex::from_centers(&centers);
+        let other = DenseMatrix::from_vec(2, 4, vec![0.0; 8]);
+        assert_eq!(idx.check_invariants(&other).unwrap_err().check, "shape");
+
+        // Stale total-postings counter.
+        let mut idx = InvertedIndex::from_centers(&centers);
+        idx.nnz += 1;
+        assert_eq!(idx.check_invariants(&centers).unwrap_err().check, "nnz-coherence");
     }
 }

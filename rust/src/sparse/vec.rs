@@ -106,13 +106,15 @@ impl SparseVec {
         Self::new(dim, idx, val)
     }
 
-    /// Build a dense vector's sparse view (dropping zeros).
+    /// Build a dense vector's sparse view (dropping zeros). Panics if the
+    /// vector is longer than the `u32` index space — a lossy cast here
+    /// would silently alias distinct coordinates instead.
     pub fn from_dense(v: &[f32]) -> Self {
         let mut idx = Vec::new();
         let mut val = Vec::new();
         for (i, &x) in v.iter().enumerate() {
             if x != 0.0 {
-                idx.push(i as u32);
+                idx.push(u32::try_from(i).expect("dimension exceeds the u32 index space"));
                 val.push(x);
             }
         }

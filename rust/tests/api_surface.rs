@@ -17,6 +17,11 @@
 //! review, not a semantic API model. `pub(crate)` items are internal and
 //! excluded.
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use std::path::{Path, PathBuf};
 
 /// Declaration prefixes that constitute the public surface.

@@ -1,0 +1,150 @@
+//! Clean-run certification of the audit layer (`--features audit`): an
+//! unmutated tree must pass fully audited fits of every engine — all
+//! seven exact variants, the mini-batch optimizer (dense and truncated
+//! centers), and the MaxScore-pruned serve traversal — with zero
+//! violations. The mutation half of the contract (loosening any engine's
+//! bound maintenance by 1e-3 makes these same runs fail with a
+//! contextful `AuditViolation`) is what the checks in `sphkm::audit`
+//! exist to catch; this suite pins the false-positive rate at zero.
+
+#![cfg(feature = "audit")]
+
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
+use std::ops::ControlFlow;
+
+use sphkm::data::datasets::{self, Scale};
+use sphkm::data::synth::SynthConfig;
+use sphkm::init::{seed_centers, InitMethod};
+use sphkm::kmeans::{KernelChoice, Variant};
+use sphkm::serve::ServeMode;
+use sphkm::{Engine, ExactParams, IterSnapshot, MiniBatchParams, SphericalKMeans};
+
+const VARIANTS: [Variant; 7] = [
+    Variant::Standard,
+    Variant::Elkan,
+    Variant::SimplifiedElkan,
+    Variant::Hamerly,
+    Variant::SimplifiedHamerly,
+    Variant::Yinyang,
+    Variant::Exponion,
+];
+
+#[test]
+fn audited_runs_of_all_exact_variants_are_clean() {
+    for gen_seed in [3u64, 17] {
+        let ds = SynthConfig::small_demo().generate(gen_seed);
+        for k in [2usize, 8] {
+            let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, 7);
+            for variant in VARIANTS {
+                let fitted = SphericalKMeans::new(k)
+                    .variant(variant)
+                    .warm_start_centers(init.centers.clone())
+                    .fit(&ds.matrix);
+                assert!(
+                    fitted.is_ok(),
+                    "{} (k={k}, gen {gen_seed}) audited run failed: {}",
+                    variant.name(),
+                    fitted.unwrap_err()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn audited_tight_bound_and_kernel_backends_are_clean() {
+    // The guarded min-p single-bound update (Hamerly-bound family) and
+    // every similarity-kernel backend take different code paths through
+    // the same certified skip sites.
+    let ds = datasets::newsgroups(Scale::Tiny, 5);
+    for variant in [Variant::Hamerly, Variant::SimplifiedHamerly, Variant::Exponion] {
+        let fitted = SphericalKMeans::new(6)
+            .engine(Engine::Exact(ExactParams {
+                variant,
+                tight_bound: true,
+                ..Default::default()
+            }))
+            .seed(11)
+            .fit(&ds.matrix);
+        assert!(
+            fitted.is_ok(),
+            "{} tight-bound audited run failed: {}",
+            variant.name(),
+            fitted.unwrap_err()
+        );
+    }
+    for kernel in [KernelChoice::Dense, KernelChoice::Gather, KernelChoice::Inverted] {
+        let fitted = SphericalKMeans::new(6)
+            .variant(Variant::Elkan)
+            .kernel(kernel)
+            .seed(11)
+            .fit(&ds.matrix);
+        assert!(
+            fitted.is_ok(),
+            "elkan on {kernel:?} audited run failed: {}",
+            fitted.unwrap_err()
+        );
+    }
+}
+
+#[test]
+fn audited_minibatch_runs_are_clean() {
+    let ds = SynthConfig::small_demo().generate(23);
+    for truncate in [None, Some(8)] {
+        let fitted = SphericalKMeans::new(5)
+            .engine(Engine::MiniBatch(MiniBatchParams {
+                batch_size: 64,
+                epochs: 4,
+                truncate,
+                ..Default::default()
+            }))
+            .seed(3)
+            .fit(&ds.matrix);
+        assert!(
+            fitted.is_ok(),
+            "mini-batch (truncate {truncate:?}) audited run failed: {}",
+            fitted.unwrap_err()
+        );
+    }
+}
+
+#[test]
+fn audited_pruned_serve_matches_exhaustive() {
+    // Under audit, every pruned query internally re-answers itself
+    // exhaustively and panics on divergence — so simply driving the
+    // pruned traversal over a query stream certifies it.
+    let ds = datasets::newsgroups(Scale::Tiny, 5);
+    let fitted = SphericalKMeans::new(8)
+        .variant(Variant::SimplifiedElkan)
+        .seed(2)
+        .fit(&ds.matrix)
+        .expect("audited training run is clean");
+    let engine = fitted.query_engine(ServeMode::Pruned);
+    let (top, stats) = engine.top_p_batch(&ds.matrix, 3);
+    assert_eq!(top.len(), ds.matrix.rows());
+    assert_eq!(stats.queries, ds.matrix.rows() as u64);
+    // Single-query entry points run through the same certified path.
+    let (one, _) = engine.top_p_pruned(ds.matrix.row(0), 2);
+    assert_eq!(one.len(), 2);
+}
+
+#[test]
+fn observer_sees_an_empty_violation_trail_on_clean_runs() {
+    let ds = SynthConfig::small_demo().generate(9);
+    let mut max_seen = usize::MAX;
+    let mut obs = |s: &IterSnapshot<'_>| {
+        max_seen = s.audit_violations.len();
+        ControlFlow::Continue(())
+    };
+    let fitted = SphericalKMeans::new(4)
+        .variant(Variant::Yinyang)
+        .seed(5)
+        .fit_observed(&ds.matrix, &mut obs)
+        .expect("audited run is clean");
+    assert_eq!(max_seen, 0, "clean run must record no violations");
+    assert!(fitted.converged());
+}

@@ -1,5 +1,10 @@
 //! CLI smoke tests: run the `sphkm` binary end-to-end as a subprocess.
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use std::process::Command;
 
 fn sphkm() -> Command {

@@ -7,6 +7,11 @@
 //! at tiny scale and compare against Standard, all through the
 //! `SphericalKMeans` estimator front door.
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::data::datasets::{self, Scale};
 use sphkm::data::synth::SynthConfig;
 use sphkm::data::Dataset;

@@ -11,6 +11,11 @@
 //! densities (0.1%–50% nnz) plus full-run checks for all seven exact
 //! variants and the mini-batch engine.
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::data::synth::SynthConfig;
 use sphkm::init::{seed_centers, InitMethod};
 use sphkm::kmeans::{Centers, KMeansResult, Kernel, KernelChoice, Variant};

@@ -3,6 +3,11 @@
 //! synthetic blobs, and the truncated-centroid invariants — all through
 //! the `SphericalKMeans` estimator with `Engine::MiniBatch`.
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::data::synth::SynthConfig;
 use sphkm::data::Dataset;
 use sphkm::init::{seed_centers, InitMethod};

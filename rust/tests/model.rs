@@ -1,6 +1,11 @@
 //! Model persistence integration tests: randomized save/load bit-exactness
 //! and the corrupt-file rejection taxonomy.
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::kmeans::Variant;
 use sphkm::model::{Model, ModelError, TrainingMeta};
 use sphkm::SphericalKMeans;

@@ -1,6 +1,11 @@
 //! Cross-module pipeline tests: data generation → seeding → clustering →
 //! metrics → reporting, plus failure-injection on the I/O path.
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::coordinator::report::Table;
 use sphkm::data::datasets::{self, Scale};
 use sphkm::data::synth::SynthConfig;

@@ -6,6 +6,11 @@
 //! library are unavailable on clean machines).
 #![cfg(feature = "pjrt")]
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::data::synth::SynthConfig;
 use sphkm::data::tfidf::TfIdf;
 use sphkm::runtime::{artifacts_available, AssignEngine, Manifest};

@@ -3,6 +3,11 @@
 //! top-p widths and thread counts, and a converged model's p = 1 answers
 //! must reproduce its training assignments.
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::kmeans::{KernelChoice, Variant};
 use sphkm::model::{Model, TrainingMeta};
 use sphkm::serve::{QueryEngine, ServeConfig, ServeMode};

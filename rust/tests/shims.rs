@@ -4,6 +4,11 @@
 //! to. This is the only place in the repository allowed to call them.
 #![allow(deprecated)]
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::data::synth::SynthConfig;
 use sphkm::init::{seed_centers, seed_centers_with_bounds, InitMethod};
 use sphkm::kmeans::{

@@ -9,6 +9,11 @@
 //! so a resumed run restores the exact accumulator bits and replays the
 //! identical floating-point sequence the uninterrupted run would have.
 
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
 use sphkm::data::synth::SynthConfig;
 use sphkm::data::Dataset;
 use sphkm::kmeans::{Engine, KernelChoice, MiniBatchParams, Variant};
