@@ -10,6 +10,9 @@
 //! actually wins — the dense kernel's contiguous SIMD reads buy it more
 //! per madd, so its crossover sits below the madd crossover.
 //!
+//! Results are written to `BENCH_kernel.json` at the repository root
+//! (one record per corpus; schema documented in that file).
+//!
 //! ```text
 //! cargo bench --bench bench_kernel -- [--rows 8000] [--k 64]
 //!     [--max-iter 8] [--threads 0] [--seed 42] [--truncate 64]
@@ -62,6 +65,7 @@ fn main() {
     );
 
     let mut sparse_checked = 0usize;
+    let mut json_rows: Vec<String> = Vec::new();
     for &vocab in &[1_500usize, 6_000, 24_000] {
         let ds = corpus(vocab, rows, k, seed);
         let density = ds.matrix.density();
@@ -114,6 +118,11 @@ fn main() {
             dense_ms,
             inv_ms
         );
+        json_rows.push(format!(
+            "    {{\"corpus\": \"{}\", \"density\": {:.6}, \"dense_madds\": {dm}, \
+             \"inverted_madds\": {im}, \"dense_ms\": {dense_ms:.2}, \"inverted_ms\": {inv_ms:.2}}}",
+            ds.name, density
+        ));
         if density < 0.05 {
             assert!(
                 im < dm,
@@ -168,6 +177,10 @@ fn main() {
         let (dm, im) = (dense.stats.total_madds(), inv.stats.total_madds());
         assert!(im < dm, "truncated minibatch: {im} vs {dm} madds");
         let label = format!("mb top-{truncate}");
+        json_rows.push(format!(
+            "    {{\"corpus\": \"{label}\", \"density\": null, \"dense_madds\": {dm}, \
+             \"inverted_madds\": {im}, \"dense_ms\": {dense_ms:.2}, \"inverted_ms\": {inv_ms:.2}}}"
+        ));
         println!(
             "{:<14} {:>8} {:>16} {:>16} {:>6.1}x {:>10.1} {:>10.1}",
             label,
@@ -178,6 +191,20 @@ fn main() {
             dense_ms,
             inv_ms
         );
+    }
+
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_kernel.json");
+    let json = format!(
+        "{{\n  \"bench\": \"kernel_crossover\",\n  \"config\": {{\"rows\": {rows}, \
+         \"k\": {k}, \"max_iter\": {max_iter}, \"threads\": {threads}, \"seed\": {seed}, \
+         \"truncate\": {truncate}}},\n  \"results\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("# wrote {}", json_path.display()),
+        Err(e) => println!("# could not write {}: {e}", json_path.display()),
     }
 
     println!(

@@ -1,0 +1,179 @@
+//! Out-of-core training benchmark: fit a corpus from the chunked on-disk
+//! shard store under a resident-memory budget far below the full matrix,
+//! and prove the result is **bit-identical** to the in-memory fit.
+//!
+//! The corpus is written to a `.sks` shard file, reopened with a small
+//! reader-side chunk budget, and trained with the same seeded estimator
+//! as the in-memory reference. Hard assertions: (1) assignments,
+//! objective bits, and every center coordinate agree across backends;
+//! (2) the peak resident point data (tracked by the chunk cursors) stays
+//! **strictly below** the full in-memory matrix footprint — i.e. the run
+//! really was out-of-core, not a buffered copy.
+//!
+//! Results are appended to `BENCH_out_of_core.json` at the repository
+//! root (schema documented in that file).
+//!
+//! ```text
+//! cargo bench --bench bench_out_of_core -- [--rows 20000] [--k 16]
+//!     [--vocab 30000] [--max-iter 6] [--chunk-rows 256] [--threads 0]
+//!     [--seed 42] [--variant simp-elkan]
+//! ```
+
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
+use sphkm::data::synth::SynthConfig;
+use sphkm::kmeans::{SphericalKMeans, Variant};
+use sphkm::sparse::chunked::{reset_resident_peak, resident_peak_bytes};
+use sphkm::sparse::{RowSource, ShardStore};
+use sphkm::util::cli::Args;
+use sphkm::util::mem::peak_rss_bytes;
+use sphkm::util::timer::Stopwatch;
+
+fn corpus(vocab: usize, rows: usize, k: usize, seed: u64) -> sphkm::data::Dataset {
+    SynthConfig {
+        name: format!("ooc-v{vocab}"),
+        n_docs: rows,
+        vocab,
+        topics: k.max(2),
+        doc_len_mean: 60.0,
+        doc_len_sigma: 0.4,
+        topic_strength: 0.65,
+        shared_vocab_frac: 0.2,
+        zipf_s: 1.05,
+        anomaly_frac: 0.0,
+        tfidf: Default::default(),
+    }
+    .generate(seed)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let rows: usize = args.get_or("rows", 20_000).unwrap_or(20_000);
+    let k: usize = args.get_or("k", 16).unwrap_or(16);
+    let vocab: usize = args.get_or("vocab", 30_000).unwrap_or(30_000);
+    let max_iter: usize = args.get_or("max-iter", 6).unwrap_or(6);
+    let chunk_rows: usize = args.get_or("chunk-rows", 256).unwrap_or(256);
+    let threads: usize = args.get_or("threads", 0).unwrap_or(0);
+    let seed: u64 = args.get_or("seed", 42).unwrap_or(42);
+    let variant: Variant = args
+        .get("variant")
+        .map(|v| v.parse().expect("valid variant name"))
+        .unwrap_or(Variant::SimplifiedElkan);
+
+    println!(
+        "# out-of-core bench — {}, k={k}, {rows} rows, vocab={vocab}, \
+         chunk-rows={chunk_rows}, {max_iter}-iteration cap, threads={threads}",
+        variant.name()
+    );
+
+    let ds = corpus(vocab, rows, k, seed);
+    let shard_path = std::env::temp_dir().join(format!(
+        "sphkm-bench-ooc-{}.sks",
+        std::process::id()
+    ));
+    let sw = Stopwatch::start();
+    ShardStore::write_from_matrix(&shard_path, &ds.matrix).expect("shard write");
+    let convert_ms = sw.ms();
+    let store = ShardStore::open(&shard_path)
+        .expect("shard open")
+        .with_chunk_rows(chunk_rows);
+
+    let est = || {
+        SphericalKMeans::new(k)
+            .variant(variant)
+            .seed(seed ^ 1)
+            .threads(threads)
+            .max_iter(max_iter)
+    };
+
+    let sw = Stopwatch::start();
+    let mem = est().fit(&ds.matrix).expect("bench configuration is valid");
+    let mem_ms = sw.ms();
+
+    reset_resident_peak();
+    let sw = Stopwatch::start();
+    let disk = est()
+        .fit_source(RowSource::Disk(&store))
+        .expect("bench configuration is valid");
+    let disk_ms = sw.ms();
+    let peak_resident = resident_peak_bytes();
+    let full_bytes = store.in_memory_bytes();
+    std::fs::remove_file(&shard_path).ok();
+
+    // Exactness across backends: bit for bit.
+    assert_eq!(mem.assignments(), disk.assignments(), "assignments");
+    assert_eq!(
+        mem.objective().to_bits(),
+        disk.objective().to_bits(),
+        "objective"
+    );
+    for j in 0..k {
+        for (x, y) in mem.centers().row(j).iter().zip(disk.centers().row(j)) {
+            assert_eq!(x.to_bits(), y.to_bits(), "center {j}");
+        }
+    }
+    // Out-of-core for real: resident point data strictly below the
+    // full-matrix footprint (with room to spare at any sane chunk size).
+    assert!(
+        peak_resident < full_bytes,
+        "peak resident point data {peak_resident} B must stay strictly below \
+         the {full_bytes} B in-memory matrix"
+    );
+
+    let mib = |b: u64| b as f64 / (1024.0 * 1024.0);
+    println!(
+        "{:<26} {:>12} {:>12} {:>12}",
+        "", "in-memory", "out-of-core", "ratio"
+    );
+    println!(
+        "{:<26} {:>10.1}ms {:>10.1}ms {:>11.2}x",
+        "train wall-clock", mem_ms, disk_ms, disk_ms / mem_ms.max(1e-9)
+    );
+    println!(
+        "{:<26} {:>9.2}MiB {:>9.2}MiB {:>11.2}x",
+        "resident point data",
+        mib(full_bytes),
+        mib(peak_resident),
+        peak_resident as f64 / full_bytes.max(1) as f64
+    );
+    println!(
+        "# convert {convert_ms:.1}ms, shard file {:.2}MiB, objective {:.6}, {} iterations",
+        mib(store.file_len()),
+        disk.objective(),
+        disk.iterations()
+    );
+
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_out_of_core.json");
+    let rss = peak_rss_bytes().map_or("null".to_string(), |b| b.to_string());
+    let json = format!(
+        "{{\n  \"bench\": \"out_of_core\",\n  \"config\": {{\n    \"variant\": \"{}\",\n    \
+         \"rows\": {rows},\n    \"vocab\": {vocab},\n    \"k\": {k},\n    \
+         \"max_iter\": {max_iter},\n    \"chunk_rows\": {chunk_rows},\n    \
+         \"threads\": {threads},\n    \"seed\": {seed}\n  }},\n  \"results\": {{\n    \
+         \"convert_ms\": {convert_ms:.2},\n    \"mem_train_ms\": {mem_ms:.2},\n    \
+         \"disk_train_ms\": {disk_ms:.2},\n    \"full_matrix_bytes\": {full_bytes},\n    \
+         \"peak_resident_bytes\": {peak_resident},\n    \
+         \"resident_ratio\": {:.6},\n    \"peak_rss_bytes\": {rss},\n    \
+         \"objective\": {:.9},\n    \"iterations\": {},\n    \
+         \"bit_identical_to_in_memory\": true\n  }}\n}}\n",
+        variant.name(),
+        peak_resident as f64 / full_bytes.max(1) as f64,
+        disk.objective(),
+        disk.iterations()
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("# wrote {}", json_path.display()),
+        Err(e) => println!("# could not write {}: {e}", json_path.display()),
+    }
+
+    println!(
+        "# acceptance: bit-identical clustering from shards at {:.1}% of the \
+         in-memory footprint — OK",
+        100.0 * peak_resident as f64 / full_bytes.max(1) as f64
+    );
+}

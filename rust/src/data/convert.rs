@@ -1,0 +1,349 @@
+//! Bounded-memory libsvm → shard-store converter.
+//!
+//! [`convert_libsvm_to_shards`] streams an SVMlight/libsvm text file into
+//! the binary CSR shard format of [`crate::sparse::chunked`] without ever
+//! materializing the matrix: transient memory is one text line, one row of
+//! `(index, value)` pairs, and the set of **distinct** label values — so a
+//! corpus far larger than RAM converts in a single pass. The parse and
+//! per-row validation are the exact helpers behind
+//! [`read_libsvm`](crate::data::io::read_libsvm), so the converter accepts
+//! and rejects exactly the same files, and the optional unit-normalization
+//! shares its arithmetic with [`CsrMatrix::normalize_rows`] — the two
+//! ingestion pipelines produce bit-identical rows.
+//!
+//! # How the single pass works
+//!
+//! The shard header needs `rows`/`cols`/`nnz`, and the 0-vs-1-based index
+//! auto-detection needs the full file — both known only at the end. The
+//! converter therefore streams three sibling temp files (running row
+//! pointers, raw unshifted indices, values) plus the raw labels, then
+//! assembles the final store in one buffered concatenation that applies
+//! the index-base shift per `u32` and folds the FNV-1a checksum as it
+//! copies. Temp files are deleted afterwards.
+//!
+//! If every row carried a label, a `<output>.labels` text sidecar is
+//! written with one dense class id per line, remapped in ascending numeric
+//! order — the same ids [`read_libsvm`](crate::data::io::read_libsvm)
+//! returns — so quality metrics (NMI etc.) work on the out-of-core path.
+
+use super::io::{parse_libsvm_line, validate_row_pairs, IoError, ParsedLine};
+use crate::sparse::chunked::{HashWrite, SHARD_MAGIC, SHARD_VERSION};
+use crate::sparse::normalize_row_values;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Summary of a completed conversion.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvertReport {
+    /// Rows written to the store.
+    pub rows: usize,
+    /// Column count (after 0/1-based auto-detection).
+    pub cols: usize,
+    /// Stored non-zeros.
+    pub nnz: usize,
+    /// True when every row carried a label and the `.labels` sidecar was
+    /// written.
+    pub labeled: bool,
+    /// Rows that could not be unit-normalized (all-zero); 0 when
+    /// `normalize` was off.
+    pub normalize_failures: usize,
+}
+
+/// Path of the labels sidecar for a shard store at `output`.
+pub fn labels_sidecar_path(output: &Path) -> PathBuf {
+    let mut os = output.as_os_str().to_owned();
+    os.push(".labels");
+    PathBuf::from(os)
+}
+
+/// Read a `.labels` sidecar (one dense class id per line).
+pub fn read_labels_sidecar(path: &Path) -> Result<Vec<u32>, IoError> {
+    let reader = BufReader::new(File::open(path)?);
+    let mut out = Vec::new();
+    for (lno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        out.push(t.parse::<u32>().map_err(|_| IoError::Parse {
+            line: lno + 1,
+            msg: format!("bad label id {t:?}"),
+        })?);
+    }
+    Ok(out)
+}
+
+/// Stream a libsvm file at `input` into a shard store at `output` in
+/// bounded memory (see the [module docs](self)). With `normalize`, every
+/// row is unit-normalized as it streams through — bit-identical to
+/// loading with [`read_libsvm`](crate::data::io::read_libsvm) and calling
+/// [`CsrMatrix::normalize_rows`].
+///
+/// [`CsrMatrix::normalize_rows`]: crate::sparse::CsrMatrix::normalize_rows
+pub fn convert_libsvm_to_shards(
+    input: &Path,
+    output: &Path,
+    normalize: bool,
+) -> Result<ConvertReport, IoError> {
+    let reader = BufReader::new(File::open(input)?);
+    convert_libsvm_reader_to_shards(reader, output, normalize)
+}
+
+/// [`convert_libsvm_to_shards`] over any [`BufRead`] (the path-based entry
+/// point opens the file and delegates here).
+pub fn convert_libsvm_reader_to_shards<R: BufRead>(
+    mut reader: R,
+    output: &Path,
+    normalize: bool,
+) -> Result<ConvertReport, IoError> {
+    let tmp = |suffix: &str| -> PathBuf {
+        let mut os = output.as_os_str().to_owned();
+        os.push(".tmp.");
+        os.push(suffix);
+        PathBuf::from(os)
+    };
+    let (t_indptr, t_indices, t_values, t_labels) =
+        (tmp("indptr"), tmp("indices"), tmp("values"), tmp("labels"));
+    let result = (|| -> Result<ConvertReport, IoError> {
+        let mut w_indptr = BufWriter::new(File::create(&t_indptr)?);
+        let mut w_indices = BufWriter::new(File::create(&t_indices)?);
+        let mut w_values = BufWriter::new(File::create(&t_values)?);
+        let mut w_labels = BufWriter::new(File::create(&t_labels)?);
+
+        let mut rows = 0usize;
+        let mut running = 0u64; // stored nnz so far
+        let mut saw_zero = false;
+        let mut max_idx = 0u32;
+        let mut all_labeled = true;
+        // Distinct label values, sorted — O(distinct classes) memory, the
+        // only state that grows with content rather than line length.
+        let mut distinct: Vec<f64> = Vec::new();
+        let mut normalize_failures = 0usize;
+
+        let mut line = String::new();
+        let mut pairs: Vec<(u32, f32)> = Vec::new();
+        let mut vals: Vec<f32> = Vec::new();
+        let mut lno = 0usize;
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            lno += 1;
+            pairs.clear();
+            let label = match parse_libsvm_line(&line, lno, &mut pairs)? {
+                ParsedLine::Skip => continue,
+                ParsedLine::Row { label } => label,
+            };
+            // Column-space detection over the raw pairs, before explicit
+            // zeros are dropped — same rule as the in-memory reader.
+            for &(i, _) in &pairs {
+                saw_zero |= i == 0;
+                max_idx = max_idx.max(i);
+            }
+            validate_row_pairs(&mut pairs, lno)?;
+            vals.clear();
+            vals.extend(pairs.iter().map(|p| p.1));
+            if normalize && !normalize_row_values(&mut vals) {
+                normalize_failures += 1;
+            }
+            for (&(i, _), &v) in pairs.iter().zip(&vals) {
+                w_indices.write_all(&i.to_le_bytes())?;
+                w_values.write_all(&v.to_le_bytes())?;
+            }
+            running += pairs.len() as u64;
+            w_indptr.write_all(&running.to_le_bytes())?;
+            all_labeled &= label.is_some();
+            let l = label.unwrap_or(0.0);
+            w_labels.write_all(&l.to_le_bytes())?;
+            if all_labeled {
+                if let Err(pos) = distinct.binary_search_by(|x| x.total_cmp(&l)) {
+                    distinct.insert(pos, l);
+                }
+            }
+            rows += 1;
+        }
+        w_indptr.flush()?;
+        w_indices.flush()?;
+        w_values.flush()?;
+        w_labels.flush()?;
+        drop((w_indptr, w_indices, w_values, w_labels));
+
+        let nnz = usize::try_from(running).expect("nnz fits usize");
+        let offset: u32 = if saw_zero { 0 } else { 1 };
+        let cols = usize::try_from((max_idx as u64 + 1).saturating_sub(offset as u64))
+            .expect("column count fits usize")
+            .max(1);
+
+        // Assemble the store: header, 0-prefixed row pointers, indices
+        // (base-shifted per u32), values — all hashed as they stream.
+        let mut out = HashWrite::new(BufWriter::new(File::create(output)?));
+        out.put(&SHARD_MAGIC)?;
+        out.put(&SHARD_VERSION.to_le_bytes())?;
+        out.put(&0u32.to_le_bytes())?;
+        out.put(&(rows as u64).to_le_bytes())?;
+        out.put(&(cols as u64).to_le_bytes())?;
+        out.put(&(nnz as u64).to_le_bytes())?;
+        out.put(&0u64.to_le_bytes())?;
+        copy_hashed(&t_indptr, &mut out, 8 * rows as u64, 0)?;
+        copy_hashed(&t_indices, &mut out, 4 * nnz as u64, offset)?;
+        copy_hashed(&t_values, &mut out, 4 * nnz as u64, 0)?;
+        let hash = out.hash;
+        let mut inner = out.w;
+        inner.write_all(&hash.to_le_bytes())?;
+        inner.flush()?;
+        drop(inner);
+
+        if all_labeled && rows > 0 {
+            let mut r = BufReader::new(File::open(&t_labels)?);
+            let mut w = BufWriter::new(File::create(labels_sidecar_path(output))?);
+            let mut b = [0u8; 8];
+            for _ in 0..rows {
+                r.read_exact(&mut b)?;
+                let l = f64::from_le_bytes(b);
+                let id = distinct
+                    .binary_search_by(|x| x.total_cmp(&l))
+                    .expect("label seen during the pass");
+                writeln!(w, "{id}")?;
+            }
+            w.flush()?;
+        }
+
+        Ok(ConvertReport {
+            rows,
+            cols,
+            nnz,
+            labeled: all_labeled && rows > 0,
+            normalize_failures,
+        })
+    })();
+    for t in [&t_indptr, &t_indices, &t_values, &t_labels] {
+        let _ = std::fs::remove_file(t);
+    }
+    result
+}
+
+/// Stream `len` bytes from `src` into the hashing writer in 64 KiB
+/// chunks; a nonzero `index_offset` reinterprets the stream as LE u32s
+/// and subtracts the offset from each (the 1-based → 0-based shift).
+fn copy_hashed<W: Write>(
+    src: &Path,
+    out: &mut HashWrite<W>,
+    len: u64,
+    index_offset: u32,
+) -> Result<(), IoError> {
+    let mut r = File::open(src)?;
+    let mut buf = vec![0u8; 1 << 16];
+    let mut remaining = len;
+    while remaining > 0 {
+        let take = (buf.len() as u64).min(remaining) as usize;
+        r.read_exact(&mut buf[..take])?;
+        if index_offset != 0 {
+            for c in buf[..take].chunks_exact_mut(4) {
+                let shifted =
+                    u32::from_le_bytes(c.try_into().expect("4 bytes")) - index_offset;
+                c.copy_from_slice(&shifted.to_le_bytes());
+            }
+        }
+        out.put(&buf[..take])?;
+        remaining -= take as u64;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::io::{read_libsvm, write_libsvm};
+    use crate::data::synth::SynthConfig;
+    use crate::sparse::{RowSource, ShardStore};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("sphkm-convert-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn converted_store_matches_in_memory_reader_bit_for_bit() {
+        let ds = SynthConfig::small_demo().generate(21);
+        let svm = tmp("conv.svm");
+        write_libsvm(&svm, &ds.matrix, ds.labels.as_deref()).unwrap();
+        let sks = tmp("conv.sks");
+        let report = convert_libsvm_to_shards(&svm, &sks, false).unwrap();
+        let (m, labels) = read_libsvm(&svm).unwrap();
+        assert_eq!(report.rows, m.rows());
+        assert_eq!(report.cols, m.cols());
+        assert_eq!(report.nnz, m.nnz());
+        assert!(report.labeled);
+        let store = ShardStore::open(&sks).unwrap().with_chunk_rows(7);
+        store.verify().unwrap();
+        let mut cur = RowSource::from(&store).cursor();
+        for i in 0..m.rows() {
+            assert_eq!(m.row(i).indices, cur.row(i).indices, "row {i}");
+            assert_eq!(m.row(i).values, cur.row(i).values, "row {i}");
+        }
+        let sidecar = read_labels_sidecar(&labels_sidecar_path(&sks)).unwrap();
+        assert_eq!(sidecar, labels.unwrap());
+    }
+
+    #[test]
+    fn normalize_matches_in_memory_normalize_rows() {
+        let ds = SynthConfig::small_demo().generate(22);
+        let svm = tmp("norm.svm");
+        write_libsvm(&svm, &ds.matrix, ds.labels.as_deref()).unwrap();
+        let sks = tmp("norm.sks");
+        let report = convert_libsvm_to_shards(&svm, &sks, true).unwrap();
+        let (mut m, _) = read_libsvm(&svm).unwrap();
+        let failures = m.normalize_rows();
+        assert_eq!(report.normalize_failures, failures);
+        let store = ShardStore::open(&sks).unwrap();
+        let mut cur = RowSource::from(&store).cursor();
+        for i in 0..m.rows() {
+            assert_eq!(m.row(i).values, cur.row(i).values, "row {i}");
+        }
+    }
+
+    #[test]
+    fn unlabeled_input_writes_no_sidecar() {
+        let sks = tmp("nolabel.sks");
+        let text = "1:0.5 3:1.5\n2:2.0\n";
+        let report =
+            convert_libsvm_reader_to_shards(std::io::Cursor::new(text), &sks, false).unwrap();
+        assert!(!report.labeled);
+        assert_eq!(report.rows, 2);
+        assert!(!labels_sidecar_path(&sks).exists());
+        ShardStore::open(&sks).unwrap().verify().unwrap();
+    }
+
+    #[test]
+    fn rejects_same_files_as_reader_and_cleans_temps() {
+        let sks = tmp("bad.sks");
+        for bad in ["1 3:1.0 3:2.0\n", "1 1:nan\n", "1 4294967296:1.0\n"] {
+            assert!(
+                convert_libsvm_reader_to_shards(std::io::Cursor::new(bad), &sks, false).is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
+        let dir = sks.parent().unwrap();
+        for e in std::fs::read_dir(dir).unwrap() {
+            let name = e.unwrap().file_name().to_string_lossy().into_owned();
+            assert!(!name.contains(".tmp."), "temp file {name} left behind");
+        }
+    }
+
+    #[test]
+    fn empty_input_yields_empty_store() {
+        let sks = tmp("empty.sks");
+        let report =
+            convert_libsvm_reader_to_shards(std::io::Cursor::new(""), &sks, false).unwrap();
+        assert_eq!(report.rows, 0);
+        assert_eq!(report.nnz, 0);
+        assert!(!report.labeled);
+        let store = ShardStore::open(&sks).unwrap();
+        assert_eq!(store.rows(), 0);
+        store.verify().unwrap();
+    }
+}

@@ -20,10 +20,113 @@ pub enum IoError {
         /// Description.
         msg: String,
     },
+    /// A feature index too large for the `u32` column space the CSR
+    /// containers (and the shard store) use. Rejected with the exact value
+    /// instead of a lossy cast silently aliasing columns.
+    #[error("parse error at line {line}: feature index {index} exceeds the u32 index space")]
+    IndexOverflow {
+        /// 1-based line number.
+        line: usize,
+        /// The offending index as written in the file.
+        index: u64,
+    },
 }
 
 fn perr<T>(line: usize, msg: impl Into<String>) -> Result<T, IoError> {
     Err(IoError::Parse { line, msg: msg.into() })
+}
+
+/// Outcome of parsing one libsvm line (see [`parse_libsvm_line`]).
+pub(crate) enum ParsedLine {
+    /// Blank or comment-only line — contributes no row.
+    Skip,
+    /// A data row; its `(index, value)` pairs were appended to the
+    /// caller's buffer.
+    Row {
+        /// The leading label token, if the line carried one.
+        label: Option<f64>,
+    },
+}
+
+/// Parse one libsvm line (`[label] idx:val idx:val … [# comment]`) into
+/// `pairs`, which the caller clears and reuses across lines — the single
+/// bounded-memory parse path shared by [`read_libsvm_from`] and the shard
+/// converter ([`crate::data::convert`]). Indices are parsed in `u64` and
+/// values above `u32::MAX` rejected as [`IoError::IndexOverflow`]; `lno`
+/// is 1-based.
+pub(crate) fn parse_libsvm_line(
+    line: &str,
+    lno: usize,
+    pairs: &mut Vec<(u32, f32)>,
+) -> Result<ParsedLine, IoError> {
+    let line = line.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(ParsedLine::Skip);
+    }
+    let mut label: Option<f64> = None;
+    for (t, tok) in line.split_whitespace().enumerate() {
+        if let Some((i, v)) = tok.split_once(':') {
+            let idx: u64 = match i.parse() {
+                Ok(x) => x,
+                Err(_) => return perr(lno, format!("bad index {i:?}")),
+            };
+            if idx > u32::MAX as u64 {
+                return Err(IoError::IndexOverflow { line: lno, index: idx });
+            }
+            let val: f32 = match v.parse() {
+                Ok(x) => x,
+                Err(_) => return perr(lno, format!("bad value {v:?}")),
+            };
+            pairs.push((idx as u32, val));
+        } else if t == 0 {
+            match tok.parse::<f64>() {
+                // Normalize -0.0 so it cannot split into its own class.
+                Ok(x) if x.is_finite() => label = Some(if x == 0.0 { 0.0 } else { x }),
+                _ => return perr(lno, format!("bad label {tok:?}")),
+            }
+        } else {
+            return perr(lno, format!("unexpected token {tok:?}"));
+        }
+    }
+    Ok(ParsedLine::Row { label })
+}
+
+/// Validate one parsed row in place: sort by index, reject duplicates and
+/// non-finite values (same contract as [`SparseVec::try_from_pairs`], same
+/// error substrings), then drop explicit zeros. Shared by the reader and
+/// the shard converter so both ingest paths accept exactly the same files.
+pub(crate) fn validate_row_pairs(
+    pairs: &mut Vec<(u32, f32)>,
+    lno: usize,
+) -> Result<(), IoError> {
+    pairs.sort_unstable_by_key(|p| p.0);
+    for w in pairs.windows(2) {
+        if w[0].0 == w[1].0 {
+            return perr(lno, format!("duplicate index {}", w[0].0));
+        }
+    }
+    if let Some(&(_, v)) = pairs.iter().find(|&&(_, v)| !v.is_finite()) {
+        return perr(lno, format!("non-finite value {v}"));
+    }
+    pairs.retain(|&(_, v)| v != 0.0);
+    Ok(())
+}
+
+/// Remap arbitrary numeric labels to dense `0..k` class ids in ascending
+/// numeric order; `None` unless every row carried a label.
+pub(crate) fn remap_labels(labels: &[f64], all_labeled: bool) -> Option<Vec<u32>> {
+    if !all_labeled || labels.is_empty() {
+        return None;
+    }
+    let mut uniq: Vec<f64> = labels.to_vec();
+    uniq.sort_unstable_by(f64::total_cmp);
+    uniq.dedup();
+    Some(
+        labels
+            .iter()
+            .map(|l| uniq.binary_search_by(|x| x.total_cmp(l)).unwrap() as u32)
+            .collect(),
+    )
 }
 
 /// Read an SVMlight/libsvm file: `[label] idx:val idx:val …` per line.
@@ -34,79 +137,78 @@ fn perr<T>(line: usize, msg: impl Into<String>) -> Result<T, IoError> {
 /// Labels are parsed as **floats** — standard libsvm files carry class
 /// labels like `1.0` / `-1.0` (and regression targets) — and remapped to
 /// dense `0..k` class ids in ascending numeric order. Duplicate feature
-/// indices within a line and non-finite values are rejected with a parse
-/// error: silently accepting them would hide corrupt files, and the
-/// resulting rows feed the sorted-merge dot products, so every row goes
-/// through the validating [`SparseVec::try_from_pairs`] constructor.
+/// indices within a line, non-finite values, and feature indices beyond
+/// `u32::MAX` are rejected with typed errors: silently accepting them
+/// would hide corrupt files, and the resulting rows feed the sorted-merge
+/// dot products.
+///
+/// The parse is fully streaming — see [`read_libsvm_from`].
 pub fn read_libsvm(path: &Path) -> Result<(CsrMatrix, Option<Vec<u32>>), IoError> {
-    let file = std::fs::File::open(path)?;
-    let reader = BufReader::new(file);
-    let mut raw_rows: Vec<Vec<(u32, f32)>> = Vec::new();
-    let mut line_nos: Vec<usize> = Vec::new();
+    read_libsvm_from(BufReader::new(std::fs::File::open(path)?))
+}
+
+/// Streaming core of [`read_libsvm`]: one pass over any [`BufRead`],
+/// building the CSR arrays directly. Transient memory is one line and one
+/// row of pairs — no whole-file slurp and no per-row `Vec` graph — so
+/// peak memory is the output matrix plus O(longest line). The shard
+/// converter ([`crate::data::convert`]) shares the same per-line parse
+/// and validation helpers but streams the arrays to disk instead of
+/// collecting them, in truly bounded memory.
+pub fn read_libsvm_from<R: BufRead>(
+    mut reader: R,
+) -> Result<(CsrMatrix, Option<Vec<u32>>), IoError> {
+    let mut indptr: Vec<usize> = vec![0];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
     let mut labels: Vec<f64> = Vec::new();
     let mut all_labeled = true;
     let mut saw_zero = false;
     let mut max_idx = 0u32;
-    for (lno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
-            continue;
+    let mut line = String::new();
+    let mut pairs: Vec<(u32, f32)> = Vec::new();
+    let mut lno = 0usize;
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break;
         }
-        let mut pairs = Vec::new();
-        let mut label: Option<f64> = None;
-        for (t, tok) in line.split_whitespace().enumerate() {
-            if let Some((i, v)) = tok.split_once(':') {
-                let idx: u32 = match i.parse() {
-                    Ok(x) => x,
-                    Err(_) => return perr(lno + 1, format!("bad index {i:?}")),
-                };
-                let val: f32 = match v.parse() {
-                    Ok(x) => x,
-                    Err(_) => return perr(lno + 1, format!("bad value {v:?}")),
-                };
-                saw_zero |= idx == 0;
-                max_idx = max_idx.max(idx);
-                pairs.push((idx, val));
-            } else if t == 0 {
-                match tok.parse::<f64>() {
-                    // Normalize -0.0 so it cannot split into its own class.
-                    Ok(x) if x.is_finite() => label = Some(if x == 0.0 { 0.0 } else { x }),
-                    _ => return perr(lno + 1, format!("bad label {tok:?}")),
-                }
-            } else {
-                return perr(lno + 1, format!("unexpected token {tok:?}"));
-            }
+        lno += 1;
+        pairs.clear();
+        let label = match parse_libsvm_line(&line, lno, &mut pairs)? {
+            ParsedLine::Skip => continue,
+            ParsedLine::Row { label } => label,
+        };
+        // Column-space detection looks at the raw pairs *before* explicit
+        // zeros are dropped: a `7:0` entry still widens the matrix, as it
+        // always has.
+        for &(i, _) in &pairs {
+            saw_zero |= i == 0;
+            max_idx = max_idx.max(i);
         }
+        validate_row_pairs(&mut pairs, lno)?;
         all_labeled &= label.is_some();
         labels.push(label.unwrap_or(0.0));
-        raw_rows.push(pairs);
-        line_nos.push(lno + 1);
+        for &(i, v) in &pairs {
+            indices.push(i);
+            values.push(v);
+        }
+        indptr.push(indices.len());
     }
-    let offset = if saw_zero { 0 } else { 1 };
-    let cols = ((max_idx + 1 - offset) as usize).max(1);
-    let mut rows: Vec<SparseVec> = Vec::with_capacity(raw_rows.len());
-    for (pairs, lno) in raw_rows.into_iter().zip(line_nos) {
-        let shifted: Vec<(u32, f32)> = pairs.into_iter().map(|(i, v)| (i - offset, v)).collect();
-        let row = SparseVec::try_from_pairs(cols, shifted)
-            .map_err(|msg| IoError::Parse { line: lno, msg })?;
-        rows.push(row);
+    // Auto-detect 1-based indexing; the subtraction below is safe because
+    // `offset == 1` implies no index was 0. Computed in u64 so a file
+    // using index u32::MAX cannot overflow the width calculation.
+    let offset: u32 = if saw_zero { 0 } else { 1 };
+    let cols = usize::try_from((max_idx as u64 + 1).saturating_sub(offset as u64))
+        .expect("column count fits usize")
+        .max(1);
+    if offset == 1 {
+        for i in &mut indices {
+            *i -= 1;
+        }
     }
-    let matrix = CsrMatrix::from_rows(cols, &rows);
-    let labels = if all_labeled && !labels.is_empty() {
-        // Remap arbitrary numeric labels to 0..k (ascending order).
-        let mut uniq: Vec<f64> = labels.clone();
-        uniq.sort_unstable_by(f64::total_cmp);
-        uniq.dedup();
-        Some(
-            labels
-                .iter()
-                .map(|l| uniq.binary_search_by(|x| x.total_cmp(l)).unwrap() as u32)
-                .collect(),
-        )
-    } else {
-        None
-    };
+    let rows = indptr.len() - 1;
+    let matrix = CsrMatrix::from_parts(rows, cols, indptr, indices, values);
+    let labels = remap_labels(&labels, all_labeled);
     Ok((matrix, labels))
 }
 
@@ -355,6 +457,49 @@ mod tests {
             let err = read_libsvm(&path).unwrap_err();
             assert!(format!("{err}").contains("non-finite"), "{bad}: {err}");
         }
+    }
+
+    #[test]
+    fn libsvm_rejects_index_beyond_u32() {
+        // 4294967296 == u32::MAX + 1: must surface as the typed overflow
+        // error, not a lossy cast aliasing column 0.
+        let path = tmp("overflow.svm");
+        std::fs::write(&path, "1 4294967296:1.0\n").unwrap();
+        match read_libsvm(&path) {
+            Err(IoError::IndexOverflow { line: 1, index }) => {
+                assert_eq!(index, u32::MAX as u64 + 1);
+            }
+            other => panic!("expected IndexOverflow, got {other:?}"),
+        }
+        // u32::MAX itself is the last representable index and must parse.
+        std::fs::write(&path, &format!("1 {}:1.0\n", u32::MAX)).unwrap();
+        let (m, _) = read_libsvm(&path).unwrap();
+        assert_eq!(m.cols(), u32::MAX as usize);
+        assert_eq!(m.row(0).indices, &[u32::MAX - 1]);
+    }
+
+    #[test]
+    fn libsvm_streams_from_any_bufread() {
+        // The streaming core accepts any BufRead — no file required — and
+        // matches the path-based reader exactly.
+        let text = "2.0 1:0.5 3:1.5\n# full-line comment\n-1 2:2.0\n";
+        let (m, labels) = read_libsvm_from(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(labels.unwrap(), vec![1, 0]);
+        let path = tmp("stream-eq.svm");
+        std::fs::write(&path, text).unwrap();
+        let (m2, _) = read_libsvm(&path).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn libsvm_zero_valued_entry_still_widens_matrix() {
+        // `5:0` stores nothing but has always determined the column count;
+        // the streaming rewrite must preserve that.
+        let (m, _) = read_libsvm_from(std::io::Cursor::new("1:1.0 5:0\n")).unwrap();
+        assert_eq!(m.cols(), 5);
+        assert_eq!(m.nnz(), 1);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! injected anomalous documents — at configurable scale. DESIGN.md §4
 //! documents each substitution.
 
+pub mod convert;
 pub mod datasets;
 pub mod io;
 pub mod synth;

@@ -14,17 +14,41 @@
 //! built once from the first (uniform) seed; each subsequent center costs
 //! `O(m · k)` similarities instead of `O(N)`.
 
-use crate::sparse::CsrMatrix;
+use crate::sparse::csr::RowView;
+use crate::sparse::{RowCursor, RowSource, SparseVec};
 use crate::util::rng::Xoshiro256;
 
+/// `dis(x, C) = α − max_{c∈C} sim(x, c)` against the materialized chosen
+/// seeds, charged to `sims`. A free function (not a closure) so the row
+/// cursor can also be used directly between chain steps.
+fn dis_to_set(
+    rows: &mut RowCursor<'_>,
+    i: usize,
+    chosen: &[SparseVec],
+    alpha: f64,
+    sims: &mut u64,
+) -> f64 {
+    let row = rows.row(i);
+    let mut best = f64::MIN;
+    for c in chosen {
+        let s = row.dot(&RowView { indices: c.indices(), values: c.values() });
+        if s > best {
+            best = s;
+        }
+    }
+    *sims += chosen.len() as u64;
+    (alpha - best).max(0.0)
+}
+
 pub(crate) fn choose(
-    data: &CsrMatrix,
+    src: RowSource<'_>,
     k: usize,
     alpha: f64,
     chain: usize,
     rng: &mut Xoshiro256,
 ) -> (Vec<usize>, u64) {
-    let n = data.rows();
+    let n = src.rows();
+    let mut rows = src.cursor();
     let chain = chain.max(1);
     let mut sims = 0u64;
     let mut chosen = Vec::with_capacity(k);
@@ -32,13 +56,20 @@ pub(crate) fn choose(
     chosen.push(first);
     let mut is_chosen = vec![false; n];
     is_chosen[first] = true;
+    // Chosen seed rows, materialized as owned sparse vectors: the MCMC
+    // chain reads them against random rows, which a single chunked cursor
+    // could not serve for both sides at once. Same sorted-merge dot as the
+    // in-memory path, so the walk is bit-identical between backends.
+    let mut seeds: Vec<SparseVec> = Vec::with_capacity(k);
+    seeds.push(rows.row_vec(first));
 
     // Proposal distribution q from the first seed (one full pass).
-    let c1 = data.row(first);
+    let c1 = &seeds[0];
+    let c1v = RowView { indices: c1.indices(), values: c1.values() };
     let mut q = vec![0.0f64; n];
     let mut total = 0.0f64;
     for i in 0..n {
-        let dis = (alpha - data.row(i).dot(&c1)).max(0.0);
+        let dis = (alpha - rows.row(i).dot(&c1v)).max(0.0);
         q[i] = dis;
         total += dis;
     }
@@ -48,27 +79,13 @@ pub(crate) fn choose(
         *qi += 0.5 / n as f64;
     }
 
-    // dis(x, C) = α − max_{c∈C} sim(x, c), computed on demand.
-    let dis_to_set = |i: usize, chosen: &[usize], sims: &mut u64| -> f64 {
-        let row = data.row(i);
-        let mut best = f64::MIN;
-        for &c in chosen {
-            let s = row.dot(&data.row(c));
-            if s > best {
-                best = s;
-            }
-        }
-        *sims += chosen.len() as u64;
-        (alpha - best).max(0.0)
-    };
-
     for _ in 1..k {
         // Initialize the chain at a proposal draw.
         let mut x = sample_q(&q, rng);
-        let mut dx = dis_to_set(x, &chosen, &mut sims);
+        let mut dx = dis_to_set(&mut rows, x, &seeds, alpha, &mut sims);
         for _ in 1..chain {
             let y = sample_q(&q, rng);
-            let dy = dis_to_set(y, &chosen, &mut sims);
+            let dy = dis_to_set(&mut rows, y, &seeds, alpha, &mut sims);
             // Metropolis–Hastings acceptance for target ∝ dis(·, C).
             let accept = if dx * q[y] <= 0.0 {
                 // Current state has zero mass (e.g. x already chosen):
@@ -97,6 +114,7 @@ pub(crate) fn choose(
         }
         is_chosen[x] = true;
         chosen.push(x);
+        seeds.push(rows.row_vec(x));
     }
     (chosen, sims)
 }
@@ -116,7 +134,7 @@ fn sample_q(q: &[f64], rng: &mut Xoshiro256) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sparse::SparseVec;
+    use crate::sparse::CsrMatrix;
 
     fn orthogonal_groups() -> CsrMatrix {
         let mut rows = Vec::new();
@@ -140,7 +158,7 @@ mod tests {
         let trials = 40;
         for seed in 0..trials {
             let mut rng = Xoshiro256::seed_from_u64(seed);
-            let (chosen, _) = choose(&data, 3, 1.0, 50, &mut rng);
+            let (chosen, _) = choose(RowSource::Mem(&data), 3, 1.0, 50, &mut rng);
             let groups: std::collections::HashSet<usize> =
                 chosen.iter().map(|&i| i / 30).collect();
             if groups.len() == 3 {
@@ -176,7 +194,7 @@ mod tests {
         let data = orthogonal_groups();
         for seed in 0..10 {
             let mut rng = Xoshiro256::seed_from_u64(seed);
-            let (chosen, _) = choose(&data, 12, 1.5, 30, &mut rng);
+            let (chosen, _) = choose(RowSource::Mem(&data), 12, 1.5, 30, &mut rng);
             let set: std::collections::HashSet<_> = chosen.iter().collect();
             assert_eq!(set.len(), 12);
         }

@@ -9,20 +9,27 @@
 //! refreshed with one sparse dot per point per new center (the "caching
 //! the previous maximum" optimization the paper describes).
 
-use crate::sparse::CsrMatrix;
+use crate::sparse::csr::RowView;
+use crate::sparse::RowSource;
 use crate::util::rng::Xoshiro256;
 
 /// k-means++ seeding, optionally recording every point-to-seed similarity in
 /// a row-major `N × k` matrix (`collect`) — the similarities are computed
 /// anyway, which is exactly the §7 bound-pre-initialization synergy.
+///
+/// Generic over the row backend: the most recent seed is copied out as an
+/// owned sparse vector and every refresh dot runs through the same
+/// sorted-merge kernel, so the chosen rows — and the collected similarity
+/// matrix — are bit-identical between memory and disk shards.
 pub(crate) fn choose_collecting(
-    data: &CsrMatrix,
+    src: RowSource<'_>,
     k: usize,
     alpha: f64,
     rng: &mut Xoshiro256,
     mut collect: Option<&mut [f32]>,
 ) -> (Vec<usize>, u64) {
-    let n = data.rows();
+    let n = src.rows();
+    let mut rows = src.cursor();
     let mut chosen = Vec::with_capacity(k);
     let mut sims = 0u64;
 
@@ -36,11 +43,14 @@ pub(crate) fn choose_collecting(
     is_chosen[first] = true;
 
     for _ in 1..k {
-        // Refresh the cache with the most recently chosen center.
-        let c = data.row(*chosen.last().unwrap());
+        // Refresh the cache with the most recently chosen center (owned
+        // copy: the cursor's chunk buffer is about to be re-used by the
+        // refresh scan).
+        let c = rows.row_vec(*chosen.last().unwrap());
+        let cv = RowView { indices: c.indices(), values: c.values() };
         let col = chosen.len() - 1;
         for i in 0..n {
-            let s = data.row(i).dot(&c);
+            let s = rows.row(i).dot(&cv);
             if let Some(m) = collect.as_deref_mut() {
                 m[i * k + col] = s as f32;
             }
@@ -76,7 +86,7 @@ pub(crate) fn choose_collecting(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sparse::SparseVec;
+    use crate::sparse::{CsrMatrix, SparseVec};
 
     /// Three well-separated orthogonal groups: k-means++ should pick one
     /// seed from each group far more often than uniform would.
@@ -104,7 +114,7 @@ mod tests {
         let trials = 40;
         for seed in 0..trials {
             let mut rng = Xoshiro256::seed_from_u64(seed);
-            let (chosen, _) = choose_collecting(&data, 3, 1.0, &mut rng, None);
+            let (chosen, _) = choose_collecting(RowSource::Mem(&data), 3, 1.0, &mut rng, None);
             let groups: std::collections::HashSet<usize> =
                 chosen.iter().map(|&i| i / 30).collect();
             if groups.len() == 3 {
@@ -120,7 +130,7 @@ mod tests {
     fn weights_zero_for_chosen_points() {
         let data = orthogonal_groups();
         let mut rng = Xoshiro256::seed_from_u64(1);
-        let (chosen, _) = choose_collecting(&data, 10, 1.5, &mut rng, None);
+        let (chosen, _) = choose_collecting(RowSource::Mem(&data), 10, 1.5, &mut rng, None);
         let set: std::collections::HashSet<_> = chosen.iter().collect();
         assert_eq!(set.len(), 10, "α=1.5 must not re-pick chosen seeds");
     }
@@ -129,7 +139,7 @@ mod tests {
     fn sims_accounting() {
         let data = orthogonal_groups();
         let mut rng = Xoshiro256::seed_from_u64(2);
-        let (_, sims) = choose_collecting(&data, 4, 1.0, &mut rng, None);
+        let (_, sims) = choose_collecting(RowSource::Mem(&data), 4, 1.0, &mut rng, None);
         assert_eq!(sims, (3 * data.rows()) as u64);
     }
 }

@@ -12,7 +12,7 @@ mod afkmc2;
 mod kmeanspp;
 mod uniform;
 
-use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::sparse::{CsrMatrix, DenseMatrix, RowSource};
 use crate::util::rng::Xoshiro256;
 
 /// Seeding method selector.
@@ -92,7 +92,20 @@ pub struct InitOutcome {
 
 /// Seed `k` centers from `data` with `method` and `seed`.
 pub fn seed_centers(data: &CsrMatrix, k: usize, method: &InitMethod, seed: u64) -> InitOutcome {
-    seed_centers_impl(data, k, method, seed, false)
+    seed_centers_impl(RowSource::Mem(data), k, method, seed, false)
+}
+
+/// [`seed_centers`] over either row backend ([`RowSource`]): the seeding
+/// RNG walk and every similarity run through the same code path, so the
+/// chosen rows — and therefore the initial centers — are bit-identical
+/// whether the data lives in memory or in chunked disk shards.
+pub fn seed_centers_source(
+    src: RowSource<'_>,
+    k: usize,
+    method: &InitMethod,
+    seed: u64,
+) -> InitOutcome {
+    seed_centers_impl(src, k, method, seed, false)
 }
 
 /// Like [`seed_centers`], additionally collecting the `N × k` similarity
@@ -105,11 +118,22 @@ pub fn seed_centers_with_bounds(
     method: &InitMethod,
     seed: u64,
 ) -> InitOutcome {
-    seed_centers_impl(data, k, method, seed, true)
+    seed_centers_impl(RowSource::Mem(data), k, method, seed, true)
+}
+
+/// [`seed_centers_with_bounds`] over either row backend — see
+/// [`seed_centers_source`] for the bit-identity contract.
+pub fn seed_centers_with_bounds_source(
+    src: RowSource<'_>,
+    k: usize,
+    method: &InitMethod,
+    seed: u64,
+) -> InitOutcome {
+    seed_centers_impl(src, k, method, seed, true)
 }
 
 fn seed_centers_impl(
-    data: &CsrMatrix,
+    src: RowSource<'_>,
     k: usize,
     method: &InitMethod,
     seed: u64,
@@ -117,36 +141,37 @@ fn seed_centers_impl(
 ) -> InitOutcome {
     assert!(k >= 1, "k must be positive");
     assert!(
-        k <= data.rows(),
+        k <= src.rows(),
         "cannot seed k={k} centers from {} rows",
-        data.rows()
+        src.rows()
     );
     let sw = crate::util::timer::Stopwatch::start();
     let mut rng = Xoshiro256::seed_from_u64(seed);
     let mut sim_matrix = if collect && matches!(method, InitMethod::KMeansPP { .. }) {
-        Some(vec![0.0f32; data.rows() * k])
+        Some(vec![0.0f32; src.rows() * k])
     } else {
         None
     };
     let (chosen, mut sims) = match method {
-        InitMethod::Uniform => (uniform::choose(data, k, &mut rng), 0),
+        InitMethod::Uniform => (uniform::choose(src.rows(), k, &mut rng), 0),
         InitMethod::KMeansPP { alpha } => {
-            kmeanspp::choose_collecting(data, k, *alpha, &mut rng, sim_matrix.as_deref_mut())
+            kmeanspp::choose_collecting(src, k, *alpha, &mut rng, sim_matrix.as_deref_mut())
         }
-        InitMethod::AfkMc2 { alpha, chain } => afkmc2::choose(data, k, *alpha, *chain, &mut rng),
+        InitMethod::AfkMc2 { alpha, chain } => afkmc2::choose(src, k, *alpha, *chain, &mut rng),
     };
+    let mut rows = src.cursor();
     if let Some(m) = sim_matrix.as_deref_mut() {
         // The last chosen seed's column was never needed by the seeding
         // loop itself; fill it so the matrix is complete.
-        let last = data.row_vec(chosen[k - 1]).to_dense();
-        for i in 0..data.rows() {
-            m[i * k + (k - 1)] = data.row(i).dot_dense(&last) as f32;
+        let last = rows.row_vec(chosen[k - 1]).to_dense();
+        for i in 0..src.rows() {
+            m[i * k + (k - 1)] = rows.row(i).dot_dense(&last) as f32;
         }
-        sims += data.rows() as u64;
+        sims += src.rows() as u64;
     }
-    let mut centers = DenseMatrix::zeros(k, data.cols());
+    let mut centers = DenseMatrix::zeros(k, src.cols());
     for (c, &row) in chosen.iter().enumerate() {
-        let v = data.row(row);
+        let v = rows.row(row);
         let dst = centers.row_mut(c);
         for (t, &col) in v.indices.iter().enumerate() {
             dst[col as usize] = v.values[t];

@@ -1,9 +1,9 @@
 //! Uniform random seeding: k distinct rows, nearly free (§6 of the paper:
-//! "The uniform initialization is nearly instantaneous").
+//! "The uniform initialization is nearly instantaneous"). Needs only the
+//! row count, so it never touches the data — in-memory or on-disk.
 
-use crate::sparse::CsrMatrix;
 use crate::util::rng::Xoshiro256;
 
-pub(crate) fn choose(data: &CsrMatrix, k: usize, rng: &mut Xoshiro256) -> Vec<usize> {
-    rng.sample_distinct(data.rows(), k)
+pub(crate) fn choose(rows: usize, k: usize, rng: &mut Xoshiro256) -> Vec<usize> {
+    rng.sample_distinct(rows, k)
 }

@@ -22,7 +22,7 @@ use super::kernel::{self, Kernel};
 use crate::audit::AuditViolation;
 use crate::runtime::parallel::{Plan, Pool, SHARD_ROWS};
 use crate::sparse::csr::RowView;
-use crate::sparse::{CsrMatrix, DenseMatrix, InvertedIndex};
+use crate::sparse::{CsrMatrix, DenseMatrix, InvertedIndex, RowSource};
 
 /// The derived structure backing the active similarity kernel — see
 /// [`crate::kmeans::kernel`] for the backend trade-offs.
@@ -263,14 +263,23 @@ impl Centers {
     /// Rebuild sums and counts from scratch for a full assignment
     /// (deterministic order: ascending point index).
     pub fn rebuild(&mut self, data: &CsrMatrix, assign: &[u32]) {
-        debug_assert_eq!(assign.len(), data.rows());
+        self.rebuild_source(RowSource::Mem(data), assign);
+    }
+
+    /// [`Centers::rebuild`] over either row backend: ascending-index
+    /// accumulation through a row cursor, so the floating-point sequence —
+    /// and therefore every downstream center coordinate — is bit-identical
+    /// whether the rows come from memory or from disk shards.
+    pub fn rebuild_source(&mut self, src: RowSource<'_>, assign: &[u32]) {
+        debug_assert_eq!(assign.len(), src.rows());
         self.sums.fill(0.0);
         self.counts.fill(0);
         self.dirty.fill(true);
+        let mut rows = src.cursor();
         for (i, &a) in assign.iter().enumerate() {
             let a = a as usize;
             self.counts[a] += 1;
-            let row = data.row(i);
+            let row = rows.row(i);
             let base = a * self.d;
             for (t, &c) in row.indices.iter().enumerate() {
                 self.sums[base + c as usize] += row.values[t] as f64;
@@ -289,21 +298,31 @@ impl Centers {
     /// budget on the `k×d` f64 partials, degenerating to the plain serial
     /// rebuild when even two partials would be too large to be worth it.
     pub fn rebuild_sharded(&mut self, data: &CsrMatrix, assign: &[u32], pool: &Pool) {
-        debug_assert_eq!(assign.len(), data.rows());
-        let bands = rebuild_bands(data.rows(), self.k * self.d);
+        self.rebuild_sharded_source(RowSource::Mem(data), assign, pool);
+    }
+
+    /// [`Centers::rebuild_sharded`] over either row backend. The band grid
+    /// is the same pure function of the problem shape for both backends
+    /// (and each band opens its own cursor), so the reduction tree — hence
+    /// every center coordinate — is bit-identical between memory and disk
+    /// shards at every thread count.
+    pub fn rebuild_sharded_source(&mut self, src: RowSource<'_>, assign: &[u32], pool: &Pool) {
+        debug_assert_eq!(assign.len(), src.rows());
+        let bands = rebuild_bands(src.rows(), self.k * self.d);
         if bands <= 1 {
-            self.rebuild(data, assign);
+            self.rebuild_source(src, assign);
             return;
         }
-        let plan = Plan::with_parts(data.rows(), bands);
+        let plan = Plan::with_parts(src.rows(), bands);
         let (k, d) = (self.k, self.d);
         let parts: Vec<(Vec<f64>, Vec<u64>)> = pool.run(plan.ranges().to_vec(), |_, range| {
             let mut sums = vec![0.0f64; k * d];
             let mut counts = vec![0u64; k];
+            let mut rows = src.cursor();
             for i in range {
                 let a = assign[i] as usize;
                 counts[a] += 1;
-                let row = data.row(i);
+                let row = rows.row(i);
                 let base = a * d;
                 for (t, &c) in row.indices.iter().enumerate() {
                     sums[base + c as usize] += row.values[t] as f64;

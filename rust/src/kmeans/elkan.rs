@@ -21,7 +21,7 @@ use crate::bounds::{update_lower_pre, update_upper_pre};
 use crate::util::timer::Stopwatch;
 
 pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
-    let n = ctx.data.rows();
+    let n = ctx.src.rows();
     let k = ctx.k;
     let mut l = vec![0.0f64; n];
     let mut u = vec![0.0f64; n * k];
@@ -48,7 +48,8 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
         iter.sims_center_center += cb.recompute(ctx.centers.centers());
 
         let outs = {
-            let view = SimView { data: ctx.data, centers: &ctx.centers, k };
+            let src = ctx.src;
+            let centers = &ctx.centers;
             // Movement self-similarities of the last center update.
             let p = ctx.centers.p();
             let sin_p: Vec<f64> = p.iter().map(|&v| crate::bounds::sin_from_cos(v)).collect();
@@ -57,6 +58,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
             let works = bound_works(&ctx.plan, &mut ctx.assign, &mut l, 1, &mut u, k);
             ctx.pool.run(works, |_, (range, assign, l, u)| {
                 let mut out = ShardOut::default();
+                let mut view = SimView::new(src, centers, k);
                 for (li, i) in range.enumerate() {
                     let mut a = assign[li] as usize;
                     // Maintain bounds across the last center movement.
@@ -72,7 +74,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                         out.iter.loop_skips += 1;
                         if AUDIT_ENABLED {
                             audit_loop_prune(
-                                &view,
+                                &mut view,
                                 &mut out.violations,
                                 "elkan",
                                 iteration,
@@ -93,7 +95,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                             out.iter.bound_skips += 1;
                             if AUDIT_ENABLED {
                                 audit_center_prune(
-                                    &view,
+                                    &mut view,
                                     &mut out.violations,
                                     "elkan",
                                     iteration,
@@ -114,7 +116,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                                 out.iter.bound_skips += 1;
                                 if AUDIT_ENABLED {
                                     audit_center_prune(
-                                        &view,
+                                        &mut view,
                                         &mut out.violations,
                                         "elkan",
                                         iteration,

@@ -66,7 +66,7 @@ use crate::data::Dataset;
 use crate::init::InitMethod;
 use crate::model::{Model, ModelError, TrainingMeta};
 use crate::serve::{QueryEngine, ServeConfig, ServeMode};
-use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::sparse::{CsrMatrix, DenseMatrix, RowSource};
 
 /// Engine name recorded as variant provenance for mini-batch runs (which
 /// have no [`Variant`]).
@@ -407,7 +407,7 @@ impl SphericalKMeans {
 
     /// Validate the configuration against the data shape. Everything
     /// [`FitError`] documents is caught here, before any engine starts.
-    fn validate(&self, data: &CsrMatrix) -> Result<(), FitError> {
+    fn validate(&self, data: RowSource<'_>) -> Result<(), FitError> {
         let n = data.rows();
         if self.k == 0 {
             return Err(FitError::InvalidConfig("k must be at least 1".into()));
@@ -493,7 +493,7 @@ impl SphericalKMeans {
     /// to every engine: all seven exact variants and the mini-batch
     /// optimizer run behind it.
     pub fn fit(&self, data: &CsrMatrix) -> Result<FittedModel, FitError> {
-        self.fit_inner(data, None)
+        self.fit_inner(RowSource::Mem(data), None)
     }
 
     /// Like [`SphericalKMeans::fit`], with an [`Observer`] notified after
@@ -503,12 +503,31 @@ impl SphericalKMeans {
         data: &CsrMatrix,
         observer: &mut dyn Observer,
     ) -> Result<FittedModel, FitError> {
-        self.fit_inner(data, Some(observer))
+        self.fit_inner(RowSource::Mem(data), Some(observer))
+    }
+
+    /// Cluster either row backend through the same validated path:
+    /// [`RowSource::Mem`] behaves exactly like [`SphericalKMeans::fit`],
+    /// and [`RowSource::Disk`] streams chunked shard reads (see
+    /// [`crate::sparse::ShardStore`]) through every engine —
+    /// **bit-identical** to the in-memory fit of the same rows, for every
+    /// thread count and chunk size (the `out_of_core` suite asserts it).
+    pub fn fit_source(&self, src: RowSource<'_>) -> Result<FittedModel, FitError> {
+        self.fit_inner(src, None)
+    }
+
+    /// [`SphericalKMeans::fit_source`] with an [`Observer`] attached.
+    pub fn fit_source_observed(
+        &self,
+        src: RowSource<'_>,
+        observer: &mut dyn Observer,
+    ) -> Result<FittedModel, FitError> {
+        self.fit_inner(src, Some(observer))
     }
 
     fn fit_inner(
         &self,
-        data: &CsrMatrix,
+        data: RowSource<'_>,
         obs: Option<&mut dyn Observer>,
     ) -> Result<FittedModel, FitError> {
         self.validate(data)?;
@@ -521,12 +540,13 @@ impl SphericalKMeans {
         let centers = match &self.start {
             Start::Fresh => match &self.engine {
                 Engine::Exact(p) if p.preinit => {
-                    let init =
-                        crate::init::seed_centers_with_bounds(data, self.k, &self.init, self.seed);
+                    let init = crate::init::seed_centers_with_bounds_source(
+                        data, self.k, &self.init, self.seed,
+                    );
                     sim_matrix = init.sim_matrix;
                     init.centers
                 }
-                _ => crate::init::seed_centers(data, self.k, &self.init, self.seed).centers,
+                _ => crate::init::seed_centers_source(data, self.k, &self.init, self.seed).centers,
             },
             Start::Centers(c) => c.clone(),
             Start::Warm { centers, engine, state } => {

@@ -31,7 +31,7 @@ use crate::bounds::{sim_upper, update_lower};
 use crate::util::timer::Stopwatch;
 
 pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
-    let n = ctx.data.rows();
+    let n = ctx.src.rows();
     let k = ctx.k;
     let mut l = vec![0.0f64; n];
     let mut u = vec![0.0f64; n];
@@ -89,7 +89,8 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
         }
 
         let outs = {
-            let view = SimView { data: ctx.data, centers: &ctx.centers, k };
+            let src = ctx.src;
+            let centers = &ctx.centers;
             let p = ctx.centers.p();
             let tight = cfg.tight_hamerly_bound;
             let neighbors = &neighbors;
@@ -99,6 +100,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
             let works = bound_works(&ctx.plan, &mut ctx.assign, &mut l, 1, &mut u, 1);
             ctx.pool.run(works, |_, (range, assign, l, u)| {
                 let mut out = ShardOut::default();
+                let mut view = SimView::new(src, centers, k);
                 for (li, i) in range.enumerate() {
                     let a = assign[li] as usize;
                     // Maintain bounds across the last center movement.
@@ -114,7 +116,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                         out.iter.bound_skips += 1;
                         if AUDIT_ENABLED {
                             audit_set_prune(
-                                &view,
+                                &mut view,
                                 &mut out.violations,
                                 "exponion",
                                 iteration,
@@ -132,7 +134,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                         out.iter.bound_skips += 1;
                         if AUDIT_ENABLED {
                             audit_set_prune(
-                                &view,
+                                &mut view,
                                 &mut out.violations,
                                 "exponion",
                                 iteration,
@@ -186,7 +188,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                         // unscanned neighbor) is its shared upper bound.
                         // l(i) is exact here, so no lower check is needed.
                         audit_set_prune(
-                            &view,
+                            &mut view,
                             &mut out.violations,
                             "exponion",
                             iteration,

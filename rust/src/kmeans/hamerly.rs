@@ -26,7 +26,7 @@ use crate::util::timer::Stopwatch;
 /// Shared implementation: `use_s_test = true` for full Hamerly,
 /// `false` for Simplified Hamerly (§5.4).
 pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bool) -> bool {
-    let n = ctx.data.rows();
+    let n = ctx.src.rows();
     let k = ctx.k;
     let mut l = vec![0.0f64; n];
     let mut u = vec![0.0f64; n];
@@ -72,7 +72,8 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bo
         }
 
         let outs = {
-            let view = SimView { data: ctx.data, centers: &ctx.centers, k };
+            let src = ctx.src;
+            let centers = &ctx.centers;
             let p = ctx.centers.p();
             let tight = cfg.tight_hamerly_bound;
             let s = &s;
@@ -83,6 +84,7 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bo
             ctx.pool.run(works, |_, (range, assign, l, u)| {
                 let mut out = ShardOut::default();
                 let mut scan = vec![0.0f64; k];
+                let mut view = SimView::new(src, centers, k);
                 for (li, i) in range.enumerate() {
                     let a = assign[li] as usize;
                     // Maintain bounds across the last center movement.
@@ -100,7 +102,7 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bo
                         out.iter.loop_skips += 1;
                         if AUDIT_ENABLED {
                             audit_loop_prune(
-                                &view,
+                                &mut view,
                                 &mut out.violations,
                                 engine,
                                 iteration,
@@ -117,7 +119,7 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bo
                             // u(i) is one shared upper bound on every
                             // other center.
                             audit_set_prune(
-                                &view,
+                                &mut view,
                                 &mut out.violations,
                                 engine,
                                 iteration,
@@ -140,7 +142,7 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bo
                         out.iter.bound_skips += 1;
                         if AUDIT_ENABLED {
                             audit_set_prune(
-                                &view,
+                                &mut view,
                                 &mut out.violations,
                                 engine,
                                 iteration,
@@ -157,7 +159,7 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bo
                         out.iter.loop_skips += 1;
                         if AUDIT_ENABLED {
                             audit_loop_prune(
-                                &view,
+                                &mut view,
                                 &mut out.violations,
                                 engine,
                                 iteration,
@@ -171,8 +173,7 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bo
                     // Bounds failed: recompute similarities to all other
                     // centers through the kernel backend (the a-th entry
                     // is ignored in the reduction).
-                    let row = view.data.row(i);
-                    view.sims_row(row, &mut out.iter, &mut scan);
+                    view.sims_row(i, &mut out.iter, &mut scan);
                     let mut m1 = f64::MIN;
                     let mut m2 = f64::MIN;
                     let mut jm = a;

@@ -35,7 +35,7 @@
 //! Dense/Inverted crossover on synthetic text-like data.
 
 use crate::sparse::csr::RowView;
-use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::sparse::{CsrMatrix, DenseMatrix, RowSource};
 
 /// Which similarity kernel to use, as configured (CLI `--kernel`, sweep
 /// `kernel =`, [`crate::kmeans::KMeansConfig::kernel`]).
@@ -103,9 +103,16 @@ pub struct DataShape {
 impl DataShape {
     /// Collect the shape of one clustering problem.
     pub fn of(data: &CsrMatrix, k: usize, truncate: Option<usize>) -> Self {
+        Self::of_source(RowSource::Mem(data), k, truncate)
+    }
+
+    /// Collect the shape of one clustering problem from either data
+    /// backend ([`RowSource`]) — the shape statistics (dims, nnz) are
+    /// header fields of the shard store, so no row data is read.
+    pub fn of_source(src: RowSource<'_>, k: usize, truncate: Option<usize>) -> Self {
         Self {
-            dims: data.cols(),
-            nnz: data.nnz(),
+            dims: src.cols(),
+            nnz: src.nnz(),
             k,
             truncate,
         }

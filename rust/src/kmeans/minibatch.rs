@@ -81,7 +81,7 @@ use super::{
 };
 use crate::audit::{AuditViolation, AUDIT_ENABLED};
 use crate::runtime::parallel::{split_mut, Plan, Pool};
-use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::sparse::{CsrMatrix, DenseMatrix, RowSource};
 use crate::util::rng::Xoshiro256;
 use crate::util::timer::Stopwatch;
 use std::ops::Range;
@@ -124,7 +124,8 @@ fn minibatch_shim(data: &CsrMatrix, centers: DenseMatrix, cfg: &KMeansConfig) ->
     assert_eq!(centers.cols(), data.cols(), "center dimensionality");
     assert!(cfg.k >= 1, "need at least one cluster");
     assert!(cfg.batch_size >= 1, "batch size must be positive");
-    let (result, _, violations) = fit_minibatch(data, cfg, centers, None, 0, None);
+    let (result, _, violations) =
+        fit_minibatch(RowSource::Mem(data), cfg, centers, None, 0, None);
     // The deprecated infallible entry points have no error channel; a
     // certification failure under the `audit` feature is a hard stop.
     if let Some(v) = violations.first() {
@@ -141,21 +142,21 @@ fn minibatch_shim(data: &CsrMatrix, centers: DenseMatrix, cfg: &KMeansConfig) ->
 /// violations collected at the epoch barriers (always empty without the
 /// `audit` feature).
 pub(crate) fn fit_minibatch(
-    data: &CsrMatrix,
+    src: RowSource<'_>,
     cfg: &KMeansConfig,
     initial_centers: DenseMatrix,
     resume: Option<TrainState>,
     prior_steps: u64,
     mut obs: Option<&mut dyn Observer>,
 ) -> (KMeansResult, TrainState, Vec<AuditViolation>) {
-    let n = data.rows();
+    let n = src.rows();
     let k = cfg.k;
     let b = cfg.batch_size.min(n.max(1));
     let batches_per_epoch = n.div_ceil(b.max(1));
     // Resolve the similarity kernel from the problem shape; truncated
     // sparse centroids cap the center density, which is exactly the regime
     // the inverted-file backend exists for.
-    let kernel = cfg.kernel.resolve(&DataShape::of(data, k, cfg.truncate));
+    let kernel = cfg.kernel.resolve(&DataShape::of_source(src, k, cfg.truncate));
     let resuming = resume.is_some();
     let (mut centers, mut assign) = match resume {
         Some(state) => (
@@ -201,8 +202,12 @@ pub(crate) fn fit_minibatch(
     // invariants invalidates every similarity computed from it.
     let mut violations: Vec<AuditViolation> = Vec::new();
     if AUDIT_ENABLED {
-        if let Err(v) = data.check_invariants() {
-            violations.push(v);
+        // Disk shards were length- and monotonicity-checked at open time;
+        // the deep CSR invariant check applies to the in-memory backend.
+        if let RowSource::Mem(data) = src {
+            if let Err(v) = data.check_invariants() {
+                violations.push(v);
+            }
         }
     }
 
@@ -216,7 +221,7 @@ pub(crate) fn fit_minibatch(
             // Sharded batch assignment against frozen centers.
             let plan = Plan::for_rows(b);
             let outs = {
-                let view = SimView { data, centers: &centers, k };
+                let centers = &centers;
                 let batch_ref: &[usize] = &batch;
                 let mut works: Vec<(Range<usize>, &mut [u32])> =
                     Vec::with_capacity(plan.len());
@@ -229,6 +234,7 @@ pub(crate) fn fit_minibatch(
                 pool.run(works, |_, (range, asg)| {
                     let mut it = IterStats::default();
                     let mut scratch = vec![0.0f64; k];
+                    let mut view = SimView::new(src, centers, k);
                     for (li, pos) in range.enumerate() {
                         let (bj, _, _) =
                             view.similarities_full(batch_ref[pos], &mut it, &mut scratch);
@@ -242,14 +248,16 @@ pub(crate) fn fit_minibatch(
             }
             // Sequential decayed-rate fold, in batch order, then a partial
             // center update touching only the folded centers.
+            let mut rows = src.cursor();
             for (pos, &i) in batch.iter().enumerate() {
                 let j = basg[pos];
                 if assign[i] != j {
                     assign[i] = j;
                     iter.reassignments += 1;
                 }
-                centers.fold_point(data.row(i), j as usize);
+                centers.fold_point(rows.row(i), j as usize);
             }
+            drop(rows);
             iter.sims_center_center += centers.update_partial(cfg.truncate);
         }
         // Largest per-center movement over the whole epoch, in cosine
@@ -293,7 +301,7 @@ pub(crate) fn fit_minibatch(
         let mut iter = IterStats::default();
         let plan = Plan::for_rows(n);
         let outs = {
-            let view = SimView { data, centers: &centers, k };
+            let centers = &centers;
             let mut works: Vec<(Range<usize>, &mut [u32])> = Vec::with_capacity(plan.len());
             {
                 let shards = split_mut(&plan, 1, &mut assign);
@@ -305,6 +313,7 @@ pub(crate) fn fit_minibatch(
                 let mut it = IterStats::default();
                 let mut scratch = vec![0.0f64; k];
                 let mut shard_obj = 0.0f64;
+                let mut view = SimView::new(src, centers, k);
                 for (li, i) in range.enumerate() {
                     let (bj, best, _) = view.similarities_full(i, &mut it, &mut scratch);
                     if asg[li] != bj as u32 {

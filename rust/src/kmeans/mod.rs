@@ -88,6 +88,19 @@
 //! kernels. Derived structures are refreshed per update barrier for dirty
 //! centers only — clean centers provably did not move.
 //!
+//! # Out-of-core data
+//!
+//! Every engine consumes point data through
+//! [`RowSource`](crate::sparse::RowSource): either the in-memory
+//! [`CsrMatrix`] or a chunked on-disk shard store
+//! ([`crate::sparse::chunked`]) read chunk-at-a-time through per-shard
+//! cursors. The shard grid is a pure function of the row count — never of
+//! the backend or chunk size — and the deferred-move replay at the
+//! barrier is backend-agnostic, so results are **bit-identical** between
+//! backends for every thread count and chunk size (asserted by the
+//! `out_of_core` integration suite). Reach the disk backend through
+//! [`SphericalKMeans::fit_source`].
+//!
 //! # Audit mode
 //!
 //! Under the `audit` cargo feature ([`crate::audit`]) every bound-based
@@ -130,7 +143,7 @@ use crate::data::Dataset;
 use crate::init::InitMethod;
 use crate::runtime::parallel::{split_mut, Plan, Pool};
 use crate::sparse::csr::RowView;
-use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::sparse::{CsrMatrix, DenseMatrix, RowCursor, RowSource};
 use crate::util::timer::Stopwatch;
 use std::ops::Range;
 pub use centers::Centers;
@@ -430,18 +443,19 @@ pub(crate) struct ExactStart<'o> {
     pub obs: Option<&'o mut dyn Observer>,
 }
 
-/// Run one exact-engine fit. The consolidated internal path behind
-/// [`SphericalKMeans::fit`] and the deprecated `run`/`run_seeded`/
+/// Run one exact-engine fit over either data backend. The consolidated
+/// internal path behind [`SphericalKMeans::fit`] /
+/// [`SphericalKMeans::fit_source`] and the deprecated `run`/`run_seeded`/
 /// `run_with_centers`/`run_dataset` shims. The third element carries the
 /// bound-certification findings of an audited run ([`crate::audit`]):
 /// always empty unless the `audit` cargo feature is on, and empty on a
 /// clean audited run.
 pub(crate) fn fit_exact(
-    data: &CsrMatrix,
+    src: RowSource<'_>,
     cfg: &KMeansConfig,
     start: ExactStart<'_>,
 ) -> (KMeansResult, TrainState, Vec<AuditViolation>) {
-    let mut ctx = Ctx::new(data, start, cfg);
+    let mut ctx = Ctx::new(src, start, cfg);
     let converged = dispatch(&mut ctx, cfg);
     ctx.into_result(converged)
 }
@@ -506,7 +520,7 @@ fn exact_shim(
     assert_eq!(centers.cols(), data.cols(), "center dimensionality");
     assert!(cfg.k >= 1, "need at least one cluster");
     let (result, _state, violations) = fit_exact(
-        data,
+        RowSource::Mem(data),
         cfg,
         ExactStart { centers, sim_matrix, resume: None, prior_steps: 0, obs: None },
     );
@@ -628,53 +642,72 @@ pub(crate) fn bound_states<'w>(
         .collect()
 }
 
-/// Read-only similarity engine shared by every shard of one assignment
-/// pass: the data matrix, the centers **frozen at the last barrier**, and
-/// `k`. Similarities computed through the view are pure functions of those
-/// centers — they cannot observe other shards' work, which is what makes
-/// the row shards independent.
-#[derive(Clone, Copy)]
+/// Per-shard similarity engine of one assignment pass: a row cursor over
+/// the data backend ([`RowSource`]), the centers **frozen at the last
+/// barrier**, and `k`. Similarities computed through the view are pure
+/// functions of those centers — they cannot observe other shards' work,
+/// which is what makes the row shards independent.
+///
+/// Each shard constructs its own view inside its worker closure
+/// ([`SimView::new`] is cheap for the in-memory backend; for the disk
+/// backend it opens the shard file and buffers one chunk at a time),
+/// which is why the methods take `&mut self`: the disk cursor reloads its
+/// chunk on access. Row reads are index-based so the engines never touch
+/// the backend directly.
 pub(crate) struct SimView<'a> {
-    pub data: &'a CsrMatrix,
+    rows: RowCursor<'a>,
     pub centers: &'a Centers,
     pub k: usize,
 }
 
-impl SimView<'_> {
+impl<'a> SimView<'a> {
+    /// Open a view over `src` against the frozen `centers`.
+    pub fn new(src: RowSource<'a>, centers: &'a Centers, k: usize) -> Self {
+        Self { rows: src.cursor(), centers, k }
+    }
+
+    /// Borrow row `i` of the data backend.
+    #[inline]
+    pub fn row(&mut self, i: usize) -> RowView<'_> {
+        self.rows.row(i)
+    }
+
     /// Compute similarities of row `i` to **all** centers into `scratch`
     /// (length k) through the active kernel backend; returns
     /// `(argmax, best, second_best)`. Charges `k` similarity computations
     /// plus the backend's multiply-adds.
     #[inline]
     pub fn similarities_full(
-        &self,
+        &mut self,
         i: usize,
         iter: &mut IterStats,
         scratch: &mut [f64],
     ) -> (usize, f64, f64) {
-        let row = self.data.row(i);
+        let row = self.rows.row(i);
         iter.madds_point_center += self.centers.sims_all(row, scratch);
         iter.sims_point_center += self.k as u64;
         top2(scratch)
     }
 
-    /// All-centers similarity row through the active kernel, without the
-    /// `sims_point_center` charge — Hamerly-family re-scans ignore the
-    /// assigned center's entry and bill `k − 1` sims themselves. The
-    /// backend's multiply-adds are charged here.
+    /// All-centers similarity row of point `i` through the active kernel,
+    /// without the `sims_point_center` charge — Hamerly-family re-scans
+    /// ignore the assigned center's entry and bill `k − 1` sims
+    /// themselves. The backend's multiply-adds are charged here.
     #[inline]
-    pub fn sims_row(&self, row: RowView<'_>, iter: &mut IterStats, scratch: &mut [f64]) {
+    pub fn sims_row(&mut self, i: usize, iter: &mut IterStats, scratch: &mut [f64]) {
+        let row = self.rows.row(i);
         iter.madds_point_center += self.centers.sims_all(row, scratch);
     }
 
     /// One point×center similarity (gather dot — the selective-similarity
     /// path every pruned variant uses), charged to `iter`.
     #[inline]
-    pub fn similarity(&self, i: usize, j: usize, iter: &mut IterStats) -> f64 {
-        let row = self.data.row(i);
+    pub fn similarity(&mut self, i: usize, j: usize, iter: &mut IterStats) -> f64 {
+        let centers = self.centers;
+        let row = self.rows.row(i);
         iter.sims_point_center += 1;
         iter.madds_point_center += row.nnz() as u64;
-        row.dot_dense(self.centers.center(j))
+        row.dot_dense(centers.center(j))
     }
 }
 
@@ -692,8 +725,9 @@ impl SimView<'_> {
 /// Exactly recompute `sim(i, j)` against the frozen barrier centers,
 /// outside the counted similarity paths.
 #[inline]
-pub(crate) fn audit_sim(view: &SimView<'_>, i: usize, j: usize) -> f64 {
-    view.data.row(i).dot_dense(view.centers.center(j))
+pub(crate) fn audit_sim(view: &mut SimView<'_>, i: usize, j: usize) -> f64 {
+    let centers = view.centers;
+    view.row(i).dot_dense(centers.center(j))
 }
 
 /// Certify a **per-center** skip: the engine declined to compute
@@ -705,7 +739,7 @@ pub(crate) fn audit_sim(view: &SimView<'_>, i: usize, j: usize) -> f64 {
 /// even when both bounds are individually valid).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn audit_center_prune(
-    view: &SimView<'_>,
+    view: &mut SimView<'_>,
     out: &mut Vec<AuditViolation>,
     engine: &'static str,
     iteration: usize,
@@ -757,7 +791,7 @@ pub(crate) fn audit_center_prune(
 /// center is checked once when `lower` is given.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn audit_set_prune(
-    view: &SimView<'_>,
+    view: &mut SimView<'_>,
     out: &mut Vec<AuditViolation>,
     engine: &'static str,
     iteration: usize,
@@ -812,7 +846,7 @@ pub(crate) fn audit_set_prune(
 /// without scanning any other center (Elkan's `s`-test, the Hamerly
 /// `u ≤ l` test). Equivalent to [`audit_set_prune`] over all `k` centers.
 pub(crate) fn audit_loop_prune(
-    view: &SimView<'_>,
+    view: &mut SimView<'_>,
     out: &mut Vec<AuditViolation>,
     engine: &'static str,
     iteration: usize,
@@ -820,12 +854,15 @@ pub(crate) fn audit_loop_prune(
     a: usize,
     lower: f64,
 ) {
-    audit_set_prune(view, out, engine, iteration, i, a, 0..view.k, None, Some(lower));
+    let k = view.k;
+    audit_set_prune(view, out, engine, iteration, i, a, 0..k, None, Some(lower));
 }
 
 /// Shared mutable state threaded through every algorithm implementation.
 pub(crate) struct Ctx<'a, 'o> {
-    pub data: &'a CsrMatrix,
+    /// The point data, behind either backend ([`RowSource`] is `Copy`:
+    /// shard closures copy it and open their own cursors).
+    pub src: RowSource<'a>,
     pub k: usize,
     pub assign: Vec<u32>,
     pub centers: Centers,
@@ -854,16 +891,16 @@ pub(crate) struct Ctx<'a, 'o> {
 }
 
 impl<'a, 'o> Ctx<'a, 'o> {
-    fn new(data: &'a CsrMatrix, start: ExactStart<'o>, cfg: &KMeansConfig) -> Self {
+    fn new(src: RowSource<'a>, start: ExactStart<'o>, cfg: &KMeansConfig) -> Self {
         let k = start.centers.rows();
-        let plan = Plan::for_rows(data.rows());
+        let plan = Plan::for_rows(src.rows());
         // A single-shard plan can never use more than one worker — skip
         // thread-pool construction entirely (runs on tiny inputs would
         // otherwise spawn threads that do no work).
         let threads = if plan.len() <= 1 { 1 } else { cfg.threads };
         // Resolve the similarity kernel once, from the problem shape (the
         // exact variants keep dense centers, so no truncation estimate).
-        let kernel = cfg.kernel.resolve(&DataShape::of(data, k, None));
+        let kernel = cfg.kernel.resolve(&DataShape::of_source(src, k, None));
         let (assign, centers, resume) = match start.resume {
             Some(state) => (
                 state.assignments,
@@ -872,22 +909,26 @@ impl<'a, 'o> Ctx<'a, 'o> {
                 true,
             ),
             None => (
-                vec![0; data.rows()],
+                vec![0; src.rows()],
                 Centers::from_initial_for(start.centers, kernel),
                 false,
             ),
         };
         // Audit mode certifies the training input once up front: a CSR
         // matrix that breaks its own invariants invalidates every bound
-        // derived from it.
+        // derived from it. The disk backend's structure was validated at
+        // `ShardStore::open` (header/length) and is spot-checked per
+        // chunk load; there is no resident matrix to deep-verify.
         let mut violations = Vec::new();
         if crate::audit::AUDIT_ENABLED {
-            if let Err(v) = data.check_invariants() {
-                violations.push(v);
+            if let RowSource::Mem(m) = src {
+                if let Err(v) = m.check_invariants() {
+                    violations.push(v);
+                }
             }
         }
         Self {
-            data,
+            src,
             k,
             assign,
             centers,
@@ -992,7 +1033,8 @@ impl<'a, 'o> Ctx<'a, 'o> {
         let pre = self.preinit.take();
         let mut iter = IterStats::default();
         {
-            let view = SimView { data: self.data, centers: &self.centers, k };
+            let src = self.src;
+            let centers = &self.centers;
             let pre = pre.as_deref();
             let mut works: Vec<(Range<usize>, &mut [u32], S)> =
                 Vec::with_capacity(self.plan.len());
@@ -1042,6 +1084,7 @@ impl<'a, 'o> Ctx<'a, 'o> {
                         );
                     }
                 } else {
+                    let mut view = SimView::new(src, centers, k);
                     for (li, i) in range.enumerate() {
                         let (bj, b, s) = view.similarities_full(i, &mut it, &mut sims_row);
                         assign[li] = bj as u32;
@@ -1054,10 +1097,10 @@ impl<'a, 'o> Ctx<'a, 'o> {
                 iter.absorb(o);
             }
         }
-        iter.reassignments = self.data.rows() as u64;
+        iter.reassignments = self.src.rows() as u64;
         // Build sums for the initial assignment and move centers once.
         self.centers
-            .rebuild_sharded(self.data, &self.assign, &self.pool);
+            .rebuild_sharded_source(self.src, &self.assign, &self.pool);
         iter.sims_center_center += self.centers.update();
         iter.wall_ms = sw.ms();
         self.push_iter(iter, false)
@@ -1076,7 +1119,8 @@ impl<'a, 'o> Ctx<'a, 'o> {
         let k = self.k;
         let mut iter = IterStats::default();
         {
-            let view = SimView { data: self.data, centers: &self.centers, k };
+            let src = self.src;
+            let centers = &self.centers;
             let assign: &[u32] = &self.assign;
             let mut works: Vec<(Range<usize>, S)> = Vec::with_capacity(self.plan.len());
             for (r, s) in self.plan.ranges().iter().cloned().zip(states) {
@@ -1085,6 +1129,7 @@ impl<'a, 'o> Ctx<'a, 'o> {
             let outs = self.pool.run(works, |_, (range, mut state)| {
                 let mut it = IterStats::default();
                 let mut sims_row = vec![0.0f64; k];
+                let mut view = SimView::new(src, centers, k);
                 for (li, i) in range.enumerate() {
                     let (_, _, _) = view.similarities_full(i, &mut it, &mut sims_row);
                     let a = assign[i] as usize;
@@ -1116,12 +1161,16 @@ impl<'a, 'o> Ctx<'a, 'o> {
     /// *is* the serial order). After this returns, `iter.reassignments`
     /// holds the pass's total move count.
     pub(crate) fn merge_shards(&mut self, outs: Vec<ShardOut>, iter: &mut IterStats) {
+        // One local cursor replays every move; on the disk backend the
+        // ascending replay order makes this a sequential chunk walk.
+        let src = self.src;
+        let mut rows = src.cursor();
         for out in outs {
             iter.absorb(&out.iter);
             self.violations.extend(out.violations);
             for mv in out.moves {
                 self.centers
-                    .apply_move(self.data.row(mv.i as usize), mv.from as usize, mv.to as usize);
+                    .apply_move(rows.row(mv.i as usize), mv.from as usize, mv.to as usize);
             }
         }
     }
@@ -1132,14 +1181,16 @@ impl<'a, 'o> Ctx<'a, 'o> {
     /// collected (empty unless the `audit` feature found a problem).
     fn into_result(self, converged: bool) -> (KMeansResult, TrainState, Vec<AuditViolation>) {
         let mut obj = 0.0f64;
-        for i in 0..self.data.rows() {
-            let s = self
-                .data
-                .row(i)
-                .dot_dense(self.centers.center(self.assign[i] as usize));
-            obj += 1.0 - s;
+        {
+            let mut rows = self.src.cursor();
+            for i in 0..self.src.rows() {
+                let s = rows
+                    .row(i)
+                    .dot_dense(self.centers.center(self.assign[i] as usize));
+                obj += 1.0 - s;
+            }
         }
-        let n = self.data.rows().max(1) as f64;
+        let n = self.src.rows().max(1) as f64;
         let iterations = self.stats.iters.len().saturating_sub(1);
         let state = TrainState {
             steps_done: self.prior_steps + iterations as u64,

@@ -18,7 +18,7 @@ use crate::bounds::{update_lower_pre, update_upper_pre};
 use crate::util::timer::Stopwatch;
 
 pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
-    let n = ctx.data.rows();
+    let n = ctx.src.rows();
     let k = ctx.k;
     let mut l = vec![0.0f64; n];
     let mut u = vec![0.0f64; n * k];
@@ -41,13 +41,15 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
         let iteration = ctx.stats.iters.len();
 
         let outs = {
-            let view = SimView { data: ctx.data, centers: &ctx.centers, k };
+            let src = ctx.src;
+            let centers = &ctx.centers;
             let p = ctx.centers.p();
             let sin_p: Vec<f64> = p.iter().map(|&v| crate::bounds::sin_from_cos(v)).collect();
             let sin_p = &sin_p;
             let works = bound_works(&ctx.plan, &mut ctx.assign, &mut l, 1, &mut u, k);
             ctx.pool.run(works, |_, (range, assign, l, u)| {
                 let mut out = ShardOut::default();
+                let mut view = SimView::new(src, centers, k);
                 for (li, i) in range.enumerate() {
                     let mut a = assign[li] as usize;
                     l[li] = update_lower_pre(l[li], p[a], sin_p[a]);
@@ -66,7 +68,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                             out.iter.bound_skips += 1;
                             if AUDIT_ENABLED {
                                 audit_center_prune(
-                                    &view,
+                                    &mut view,
                                     &mut out.violations,
                                     "simplified-elkan",
                                     iteration,
@@ -86,7 +88,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                                 out.iter.bound_skips += 1;
                                 if AUDIT_ENABLED {
                                     audit_center_prune(
-                                        &view,
+                                        &mut view,
                                         &mut out.violations,
                                         "simplified-elkan",
                                         iteration,

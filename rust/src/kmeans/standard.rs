@@ -33,7 +33,8 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
         let iteration = ctx.stats.iters.len();
 
         let outs = {
-            let view = SimView { data: ctx.data, centers: &ctx.centers, k };
+            let src = ctx.src;
+            let centers = &ctx.centers;
             let mut works: Vec<(Range<usize>, &mut [u32])> = Vec::with_capacity(shards);
             {
                 let assign = split_mut(&ctx.plan, 1, &mut ctx.assign);
@@ -44,6 +45,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
             ctx.pool.run(works, |_, (range, assign)| {
                 let mut out = ShardOut::default();
                 let mut scratch = vec![0.0f64; k];
+                let mut view = SimView::new(src, centers, k);
                 for (li, i) in range.enumerate() {
                     let (best_j, _, _) =
                         view.similarities_full(i, &mut out.iter, &mut scratch);
@@ -55,7 +57,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                         // bound the accelerated variants derive from the
                         // same backend is suspect.
                         for (j, &sj) in scratch.iter().enumerate() {
-                            let exact = audit_sim(&view, i, j);
+                            let exact = audit_sim(&mut view, i, j);
                             if (sj - exact).abs() > AUDIT_MARGIN {
                                 out.violations.push(AuditViolation::bound(
                                     "standard",

@@ -80,7 +80,7 @@ fn group_centers(centers: &DenseMatrix, g: usize) -> Vec<Vec<usize>> {
 }
 
 pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
-    let n = ctx.data.rows();
+    let n = ctx.src.rows();
     let k = ctx.k;
     let groups = group_centers(
         ctx.centers.centers(),
@@ -146,7 +146,8 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
         }
 
         let outs = {
-            let view = SimView { data: ctx.data, centers: &ctx.centers, k };
+            let src = ctx.src;
+            let centers = &ctx.centers;
             let p = ctx.centers.p();
             let tight = cfg.tight_hamerly_bound;
             let groups = &groups;
@@ -157,6 +158,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
             let works = bound_works(&ctx.plan, &mut ctx.assign, &mut l, 1, &mut ug, ng);
             ctx.pool.run(works, |_, (range, assign, l, ug)| {
                 let mut out = ShardOut::default();
+                let mut view = SimView::new(src, centers, k);
                 // Per-group scan temporaries.
                 let mut gmax1 = vec![f64::MIN; ng];
                 let mut gmax2 = vec![f64::MIN; ng];
@@ -182,7 +184,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                             // max over group bounds upper-bounds every
                             // other center.
                             audit_set_prune(
-                                &view,
+                                &mut view,
                                 &mut out.violations,
                                 "yinyang",
                                 iteration,
@@ -201,7 +203,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                         out.iter.bound_skips += 1;
                         if AUDIT_ENABLED {
                             audit_set_prune(
-                                &view,
+                                &mut view,
                                 &mut out.violations,
                                 "yinyang",
                                 iteration,
@@ -231,7 +233,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                                 // only the group bound's validity and the
                                 // decision itself need certifying.
                                 audit_set_prune(
-                                    &view,
+                                    &mut view,
                                     &mut out.violations,
                                     "yinyang",
                                     iteration,

@@ -36,6 +36,13 @@
 //! that persists (`.spkm`), serves ([`FittedModel::query_engine`]), and
 //! resumes ([`SphericalKMeans::warm_start`]).
 //!
+//! Corpora larger than memory train **out-of-core**: stream them into a
+//! chunked on-disk shard store ([`sparse::ShardStore`], built by
+//! [`data::convert`]) and fit through [`SphericalKMeans::fit_source`] —
+//! bit-identical to the in-memory fit of the same rows, for every
+//! thread count and chunk size. Models load back in a low-memory
+//! streaming mode ([`model::Model::load_low_mem`]) for serving.
+//!
 //! ```no_run
 //! use sphkm::data::synth::SynthConfig;
 //! use sphkm::{Engine, ExactParams, SphericalKMeans};

@@ -2,11 +2,15 @@
 //!
 //! ```text
 //! sphkm datasets  [--scale small] [--seed 42]
-//! sphkm cluster   --data <name|path.svm|path.mtx> --k 20 [--algo simp-elkan]
-//!                 [--init kmeans++] [--seed 0] [--scale small] [--stats]
+//! sphkm cluster   --data <name|path.svm|path.mtx|path.sks> --k 20
+//!                 [--algo simp-elkan] [--init kmeans++] [--seed 0]
+//!                 [--scale small] [--stats] [--mmap] [--chunk-rows N]
 //!                 [--save-model model.spkm] [--resume model.spkm]
+//!                 [--save-assign assign.csv]
 //! sphkm assign    --model model.spkm --data <name|path.svm|path.mtx>
 //!                 [--top 1] [--mode auto|pruned|exhaustive] [--out top.csv]
+//!                 [--mmap]
+//! sphkm convert   --data file.svm --out file.sks [--normalize]
 //! sphkm gen       --data <name> --out file.svm [--scale small] [--seed 42]
 //! sphkm bench     --exp table1|table2|table3|fig1|fig2|ablation-cc|serve [opts]
 //! sphkm info
@@ -26,6 +30,7 @@ use sphkm::kmeans::{IterSnapshot, KernelChoice, Variant};
 use sphkm::metrics;
 use sphkm::model::Model;
 use sphkm::serve::{QueryEngine, ServeConfig, ServeMode};
+use sphkm::sparse::{RowSource, ShardStore};
 use sphkm::util::cli::Args;
 use sphkm::{Engine, ExactParams, FittedModel, MiniBatchParams, SphericalKMeans};
 
@@ -43,6 +48,11 @@ USAGE:
                 [--minibatch] # approximate mini-batch engine (large corpora)
                 [--batch-size B] [--epochs E] [--tol T]
                 [--truncate M] # keep top-M coords per center (0 = dense)
+                [--mmap]      # out-of-core: train from chunked disk shards
+                              # (a .svm input is converted to a sibling
+                              # .sks store first; a .sks input implies it)
+                [--chunk-rows N] # rows buffered per chunk in --mmap mode
+                [--save-assign FILE.csv] # write row,cluster assignments
                 [--audit]     # certify every bound-based skip against the
                               # exact cosine (needs --features audit)
                 [--save-model FILE.spkm] # persist the trained model + state
@@ -51,7 +61,12 @@ USAGE:
                                          # default from the file)
   sphkm assign --model FILE.spkm --data <dataset> [--top P] [--threads T]
                [--mode auto|pruned|exhaustive] [--out FILE.csv]
+               [--mmap]                 # low-memory streaming model load
                [--scale S] [--seed N]   # answer nearest-center queries
+  sphkm convert --data FILE.svm --out FILE.sks [--normalize]
+               # stream a libsvm file into the chunked shard store the
+               # --mmap trainer reads (bounded memory at any corpus size);
+               # fully labeled inputs also get a FILE.sks.labels sidecar
   sphkm sweep --config FILE.cfg   # cross-product runs from a config file
   sphkm gen --data <dataset> --out FILE.svm [--scale S] [--seed N]
   sphkm bench --exp table1|table2|table3|fig1|fig2|ablation-cc|ablation-preinit
@@ -93,6 +108,128 @@ fn load_dataset(args: &Args, scale: Scale, seed: u64) -> Dataset {
             eprintln!("unknown dataset: {spec}");
             usage()
         })
+    }
+}
+
+/// The `cluster` command's training data, behind either backend: a fully
+/// loaded in-memory dataset, or an on-disk chunked shard store streamed
+/// through training (`--mmap` / a `.sks` path). Results are bit-identical
+/// between the two (the `out_of_core` integration suite asserts it).
+enum TrainData {
+    Mem(Dataset),
+    Disk {
+        store: ShardStore,
+        name: String,
+        labels: Option<Vec<u32>>,
+    },
+}
+
+impl TrainData {
+    fn rows(&self) -> usize {
+        match self {
+            TrainData::Mem(d) => d.matrix.rows(),
+            TrainData::Disk { store, .. } => store.rows(),
+        }
+    }
+
+    fn cols(&self) -> usize {
+        match self {
+            TrainData::Mem(d) => d.matrix.cols(),
+            TrainData::Disk { store, .. } => store.cols(),
+        }
+    }
+
+    fn density(&self) -> f64 {
+        match self {
+            TrainData::Mem(d) => d.matrix.density(),
+            TrainData::Disk { store, .. } => {
+                let cells = store.rows() as f64 * store.cols() as f64;
+                if cells > 0.0 { store.nnz() as f64 / cells } else { 0.0 }
+            }
+        }
+    }
+
+    fn name(&self) -> &str {
+        match self {
+            TrainData::Mem(d) => &d.name,
+            TrainData::Disk { name, .. } => name,
+        }
+    }
+
+    fn labels(&self) -> Option<&[u32]> {
+        match self {
+            TrainData::Mem(d) => d.labels.as_deref(),
+            TrainData::Disk { labels, .. } => labels.as_deref(),
+        }
+    }
+
+    fn source(&self) -> RowSource<'_> {
+        match self {
+            TrainData::Mem(d) => RowSource::Mem(&d.matrix),
+            TrainData::Disk { store, .. } => RowSource::Disk(store),
+        }
+    }
+}
+
+/// Resolve the `cluster` data spec into a backend: a `.sks` path opens
+/// the shard store directly; `--mmap` on a `.svm`/`.libsvm` path first
+/// converts it to a sibling `.sks` store (reusing one that already
+/// exists); everything else loads in memory via [`load_dataset`].
+fn load_train_data(args: &Args, scale: Scale, seed: u64) -> TrainData {
+    let spec = args.get("data").unwrap_or("demo").to_string();
+    let mmap = args.flag("mmap");
+    let shard_path: Option<std::path::PathBuf> = if spec.ends_with(".sks") {
+        Some(spec.clone().into())
+    } else if mmap && (spec.ends_with(".svm") || spec.ends_with(".libsvm")) {
+        let sks = std::path::Path::new(&spec).with_extension("sks");
+        if sks.exists() {
+            println!("[convert] reusing existing shard store {}", sks.display());
+        } else {
+            // Normalization during conversion is bit-identical to the
+            // normalize_rows() call the in-memory .svm path performs.
+            let rep =
+                sphkm::data::convert::convert_libsvm_to_shards(std::path::Path::new(&spec), &sks, true)
+                    .unwrap_or_else(|e| {
+                        eprintln!("error converting {spec}: {e}");
+                        std::process::exit(1)
+                    });
+            println!(
+                "[convert] {spec} -> {} ({}x{}, nnz={}{})",
+                sks.display(),
+                rep.rows,
+                rep.cols,
+                rep.nnz,
+                if rep.labeled { ", labels sidecar" } else { "" }
+            );
+        }
+        Some(sks)
+    } else if mmap {
+        eprintln!("error: --mmap needs a .svm/.libsvm or .sks data path (named synthetic datasets are generated in memory; `gen` one to a file first)");
+        std::process::exit(2);
+    } else {
+        None
+    };
+    match shard_path {
+        Some(p) => {
+            let mut store = ShardStore::open(&p).unwrap_or_else(|e| {
+                eprintln!("error opening shard store {}: {e}", p.display());
+                std::process::exit(1)
+            });
+            if let Some(c) = args.get("chunk-rows") {
+                let c: usize = c.parse().unwrap_or_else(|_| {
+                    eprintln!("error: --chunk-rows must be a positive integer");
+                    std::process::exit(2)
+                });
+                store = store.with_chunk_rows(c);
+            }
+            let labels = sphkm::data::convert::read_labels_sidecar(
+                &sphkm::data::convert::labels_sidecar_path(&p),
+            )
+            .ok()
+            .filter(|l| l.len() == store.rows());
+            TrainData::Disk { name: p.display().to_string(), store, labels }
+        }
+        None => TrainData::Mem(load_dataset(args, scale, seed)),
     }
 }
 
@@ -208,10 +345,21 @@ fn run_sweep(cfg: &sphkm::util::config::Config) {
 /// train → persist → serve pipeline (see [`sphkm::serve`]).
 fn run_assign(args: &Args, scale: Scale, seed: u64) {
     let model_path = args.get("model").unwrap_or_else(|| usage());
-    let model = Model::load(std::path::Path::new(model_path)).unwrap_or_else(|e| {
+    // --mmap: low-memory streaming load — the training-state section of a
+    // version-2 file is checksummed but never materialized (serve-only).
+    let low_mem = args.flag("mmap");
+    let model = if low_mem {
+        Model::load_low_mem(std::path::Path::new(model_path))
+    } else {
+        Model::load(std::path::Path::new(model_path))
+    }
+    .unwrap_or_else(|e| {
         eprintln!("error loading model {model_path}: {e}");
         std::process::exit(1)
     });
+    if low_mem {
+        println!("[mmap] low-memory model load: training state skipped, O(k·d) peak");
+    }
     println!(
         "model {model_path}: k={}, d={}, {} center nnz ({:.3}% dense), trained by {} \
          (kernel={}, {} iters, objective={:.4}, seed={})",
@@ -256,6 +404,9 @@ fn run_assign(args: &Args, scale: Scale, seed: u64) {
         stats.madds as f64 / stats.queries.max(1) as f64,
         stats.centers_pruned,
     );
+    if let Some(rss) = sphkm::util::mem::peak_rss_bytes() {
+        println!("peak RSS: {:.2} MiB", rss as f64 / (1024.0 * 1024.0));
+    }
     if let Some(truth) = &ds.labels {
         let labels: Vec<u32> = top.iter().map(|r| r.first().map_or(0, |&(j, _)| j)).collect();
         println!(
@@ -310,7 +461,7 @@ fn main() {
                 (Some(m), None) => m.meta().seed,
                 _ => seed,
             };
-            let ds = load_dataset(&args, scale, seed);
+            let td = load_train_data(&args, scale, seed);
             let init: InitMethod = args
                 .get("init")
                 .unwrap_or("uniform")
@@ -390,7 +541,7 @@ fn main() {
                 // should know which of the two is happening. Mirrors the
                 // estimator's own resume conditions.
                 let resumable = m.state().is_some_and(|s| {
-                    s.assignments.len() == ds.matrix.rows()
+                    s.assignments.len() == td.rows()
                         && match (&engine, s.minibatch) {
                             (Engine::MiniBatch(cur), Some(orig)) => {
                                 cur.batch_size == orig.batch_size
@@ -411,17 +562,18 @@ fn main() {
                     println!(
                         "warning: model carries no resumable state for this corpus \
                          ({} rows); transferring its centers into a fresh run",
-                        ds.matrix.rows()
+                        td.rows()
                     );
                 }
             }
             println!(
-                "dataset {} ({}×{}, {:.3}% nnz), k={k}, algo={}, seed={seed}, threads={threads}, \
-                 kernel={kernel}",
-                ds.name,
-                ds.matrix.rows(),
-                ds.matrix.cols(),
-                ds.matrix.density() * 100.0,
+                "dataset {} ({}×{}, {:.3}% nnz{}), k={k}, algo={}, seed={seed}, \
+                 threads={threads}, kernel={kernel}",
+                td.name(),
+                td.rows(),
+                td.cols(),
+                td.density() * 100.0,
+                if td.source().is_disk() { ", out-of-core" } else { "" },
                 if minibatch { "minibatch" } else { variant.name() },
             );
             // --audit: bound certification (see the `sphkm::audit` module).
@@ -442,6 +594,7 @@ fn main() {
                      cross-checked against the exact cosine"
                 );
             }
+            sphkm::sparse::chunked::reset_resident_peak();
             let sw = sphkm::util::timer::Stopwatch::start();
             let fitted = if args.flag("stats") {
                 // Live per-iteration progress through the observer hook.
@@ -466,9 +619,9 @@ fn main() {
                     reported = s.audit_violations.len();
                     ControlFlow::Continue(())
                 };
-                estimator.fit_observed(&ds.matrix, &mut observer)
+                estimator.fit_source_observed(td.source(), &mut observer)
             } else {
-                estimator.fit(&ds.matrix)
+                estimator.fit_source(td.source())
             };
             let r = fitted.unwrap_or_else(|e| {
                 eprintln!("error: {e}");
@@ -490,15 +643,48 @@ fn main() {
                 r.kernel(),
                 r.stats().total_sims() - r.stats().total_point_center()
             );
+            // Memory accounting: chunk-buffer high-water mark of the
+            // shard cursors (out-of-core runs only) next to what the full
+            // matrix would have cost resident, plus the process-level
+            // peak RSS — the headline numbers of the out-of-core path.
+            if let TrainData::Disk { store, .. } = &td {
+                let peak = sphkm::sparse::chunked::resident_peak_bytes();
+                println!(
+                    "out-of-core: {:.2} MiB peak resident point data \
+                     (chunks of {} rows) vs {:.2} MiB as an in-memory matrix; \
+                     {:.2} MiB shard file",
+                    peak as f64 / (1024.0 * 1024.0),
+                    store.chunk_rows(),
+                    store.in_memory_bytes() as f64 / (1024.0 * 1024.0),
+                    store.file_len() as f64 / (1024.0 * 1024.0),
+                );
+            }
+            if let Some(rss) = sphkm::util::mem::peak_rss_bytes() {
+                println!("peak RSS: {:.2} MiB", rss as f64 / (1024.0 * 1024.0));
+            }
             // External quality is free whenever the input carries
             // ground-truth labels — always report it.
-            if let Some(truth) = &ds.labels {
+            if let Some(truth) = td.labels() {
                 println!(
                     "vs ground-truth labels: NMI={:.4} ARI={:.4} purity={:.4}",
                     metrics::nmi(r.assignments(), truth),
                     metrics::ari(r.assignments(), truth),
                     metrics::purity(r.assignments(), truth)
                 );
+            }
+            // --save-assign: the final row -> cluster mapping as CSV (what
+            // the CI out-of-core smoke diffs between backends).
+            if let Some(path) = args.get("save-assign") {
+                let mut csv = String::with_capacity(12 * r.assignments().len() + 16);
+                csv.push_str("row,cluster\n");
+                for (i, &a) in r.assignments().iter().enumerate() {
+                    csv.push_str(&format!("{i},{a}\n"));
+                }
+                if let Err(e) = std::fs::write(path, csv) {
+                    eprintln!("could not save {path}: {e}");
+                    std::process::exit(1);
+                }
+                println!("[csv] {path}");
             }
             if let Some(path) = args.get("save-model") {
                 // FittedModel::save persists the training state too, so
@@ -513,6 +699,51 @@ fn main() {
                     r.d(),
                     r.meta().variant,
                     r.meta().iterations
+                );
+            }
+        }
+        "convert" => {
+            // Stream a libsvm text file into the chunked binary shard
+            // store (`.sks`) that `cluster --mmap` trains from — bounded
+            // memory at any corpus size (see sphkm::data::convert).
+            let input = args.get("data").unwrap_or_else(|| usage());
+            if !(input.ends_with(".svm") || input.ends_with(".libsvm")) {
+                eprintln!("error: convert reads .svm/.libsvm files, got {input}");
+                std::process::exit(2);
+            }
+            let derived;
+            let out = match args.get("out") {
+                Some(o) => o,
+                None => {
+                    derived = std::path::Path::new(input)
+                        .with_extension("sks")
+                        .display()
+                        .to_string();
+                    &derived
+                }
+            };
+            let normalize = args.flag("normalize");
+            let rep = sphkm::data::convert::convert_libsvm_to_shards(
+                std::path::Path::new(input),
+                std::path::Path::new(out),
+                normalize,
+            )
+            .unwrap_or_else(|e| {
+                eprintln!("error converting {input}: {e}");
+                std::process::exit(1)
+            });
+            println!(
+                "wrote {out} ({}×{}, nnz={}{}{})",
+                rep.rows,
+                rep.cols,
+                rep.nnz,
+                if rep.labeled { ", labels sidecar" } else { "" },
+                if normalize { ", rows unit-normalized" } else { "" },
+            );
+            if rep.normalize_failures > 0 {
+                eprintln!(
+                    "warning: {} all-zero rows could not be normalized",
+                    rep.normalize_failures
                 );
             }
         }

@@ -172,6 +172,264 @@ pub(crate) fn encode(model: &Model) -> Result<Vec<u8>, ModelError> {
     Ok(buf)
 }
 
+/// Streaming counterpart of [`Cur`] for [`decode_low_mem`]: reads from
+/// any [`Read`](std::io::Read) while folding every byte into an
+/// incremental FNV-1a-64, so the checksum can be verified without ever
+/// holding the file in memory. Truncation surfaces as the same typed
+/// [`ModelError::Truncated`] the in-memory decoder reports.
+struct HashRead<R> {
+    inner: R,
+    hash: u64,
+    /// Total bytes consumed (hashed or raw) — for trailing-byte checks.
+    consumed: u64,
+}
+
+impl<R: std::io::Read> HashRead<R> {
+    fn new(inner: R) -> Self {
+        Self { inner, hash: 0xcbf2_9ce4_8422_2325, consumed: 0 }
+    }
+
+    /// Read exactly `buf.len()` bytes and fold them into the checksum.
+    fn fill(&mut self, buf: &mut [u8], section: &'static str) -> Result<(), ModelError> {
+        self.fill_raw(buf, section)?;
+        for &b in buf.iter() {
+            self.hash ^= b as u64;
+            self.hash = self.hash.wrapping_mul(0x1_0000_0000_01b3);
+        }
+        Ok(())
+    }
+
+    /// Read exactly `buf.len()` bytes *without* hashing them — only the
+    /// trailing checksum itself is read this way.
+    fn fill_raw(&mut self, buf: &mut [u8], section: &'static str) -> Result<(), ModelError> {
+        self.inner.read_exact(buf).map_err(|e| match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => ModelError::Truncated { section },
+            _ => ModelError::Io(e),
+        })?;
+        self.consumed += buf.len() as u64;
+        Ok(())
+    }
+
+    fn byte(&mut self, section: &'static str) -> Result<u8, ModelError> {
+        let mut b = [0u8; 1];
+        self.fill(&mut b, section)?;
+        Ok(b[0])
+    }
+
+    fn u16(&mut self, section: &'static str) -> Result<u16, ModelError> {
+        let mut b = [0u8; 2];
+        self.fill(&mut b, section)?;
+        Ok(u16::from_le_bytes(b))
+    }
+
+    fn u32(&mut self, section: &'static str) -> Result<u32, ModelError> {
+        let mut b = [0u8; 4];
+        self.fill(&mut b, section)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self, section: &'static str) -> Result<u64, ModelError> {
+        let mut b = [0u8; 8];
+        self.fill(&mut b, section)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn string(&mut self, section: &'static str) -> Result<String, ModelError> {
+        let len = self.u16(section)? as usize;
+        let mut bytes = vec![0u8; len];
+        self.fill(&mut bytes, section)?;
+        String::from_utf8(bytes)
+            .map_err(|_| ModelError::Corrupt(format!("{section} is not UTF-8")))
+    }
+
+    /// Consume (and hash) `n` bytes in bounded 64 KiB steps — how the
+    /// low-memory loader walks past the training-state arrays it does not
+    /// materialize while keeping the whole-file checksum honest.
+    fn skip(&mut self, mut n: u64, section: &'static str) -> Result<(), ModelError> {
+        let mut chunk = vec![0u8; 64 * 1024];
+        while n > 0 {
+            let take = usize::try_from(n.min(chunk.len() as u64)).expect("≤ 64 KiB");
+            self.fill(&mut chunk[..take], section)?;
+            n -= take as u64;
+        }
+        Ok(())
+    }
+}
+
+/// Low-memory streaming decode of a `.spkm` file: the same validation
+/// order and rejection taxonomy as [`decode`], but the file is never
+/// materialized as one buffer and the version-2 training-state section —
+/// the dominant cost for large corpora (`4·n` assignment bytes plus
+/// `8·k·d` sum bytes) — is checksummed and *skipped*, never allocated.
+/// Peak transient memory is `O(k·d)` (the dense centers plus one `u32`
+/// index per stored coordinate) regardless of file size; the returned
+/// model is serve-only (`state() == None`), so the per-state sanity
+/// checks of the in-memory decoder do not apply to it.
+pub(crate) fn decode_low_mem(path: &std::path::Path) -> Result<Model, ModelError> {
+    let file = std::fs::File::open(path)?;
+    let total = file.metadata()?.len();
+    let mut r = HashRead::new(std::io::BufReader::new(file));
+    let mut magic = [0u8; 8];
+    r.fill(&mut magic, "magic")?;
+    if magic != MAGIC {
+        return Err(ModelError::BadMagic);
+    }
+    let version = r.u32("version")?;
+    if version != VERSION && version != VERSION_STATE {
+        return Err(ModelError::UnsupportedVersion { found: version });
+    }
+    let has_state = version == VERSION_STATE;
+    let flags = r.u32("flags")?;
+    if flags != 0 {
+        return Err(ModelError::Corrupt(format!("reserved flags set: {flags:#x}")));
+    }
+    let k = checked_dim(r.u64("shape")?, "k", 1 << 32)?;
+    let d = checked_dim(r.u64("shape")?, "d", 1 << 40)?;
+    if 4 * k as u128 * d as u128 > MAX_DENSE_BYTES {
+        return Err(ModelError::Corrupt(format!(
+            "dense {k}×{d} centers would exceed the {} GiB reconstruction cap",
+            MAX_DENSE_BYTES >> 30
+        )));
+    }
+    let nnz = checked_dim(r.u64("shape")?, "nnz", (k as u64).saturating_mul(d as u64))?;
+    let iterations = r.u64("training metadata")?;
+    let seed = r.u64("training metadata")?;
+    let objective = f64::from_bits(r.u64("training metadata")?);
+    let variant = r.string("variant name")?;
+    let kernel = r.string("kernel name")?;
+    // Same up-front accounting as the in-memory decoder, against the file
+    // length instead of a buffer: a corrupt header claiming a huge k or
+    // nnz must report Truncated before driving a giant allocation.
+    let needed = 8u128 * k as u128 + 8 * (k as u128 + 1) + 8 * nnz as u128 + 8;
+    if needed > (total as u128).saturating_sub(r.consumed as u128) {
+        return Err(ModelError::Truncated { section: "center arrays" });
+    }
+    let mut norms = Vec::with_capacity(k);
+    for _ in 0..k {
+        norms.push(f64::from_bits(r.u64("norms")?));
+    }
+    if let Some(j) = norms.iter().position(|n| !n.is_finite()) {
+        return Err(ModelError::Corrupt(format!("non-finite norm for center {j}")));
+    }
+    let mut indptr = Vec::with_capacity(k + 1);
+    for _ in 0..=k {
+        indptr.push(r.u64("indptr")?);
+    }
+    if indptr[0] != 0 || indptr[k] != nnz as u64 {
+        return Err(ModelError::Corrupt(format!(
+            "indptr endpoints [{}, {}] do not match nnz {nnz}",
+            indptr[0], indptr[k]
+        )));
+    }
+    if let Some(w) = indptr.windows(2).find(|w| w[0] > w[1]) {
+        return Err(ModelError::Corrupt(format!(
+            "indptr not monotone ({} before {})",
+            w[0], w[1]
+        )));
+    }
+    // Lossless: the endpoint/monotonicity checks cap every entry at nnz.
+    let ptr: Vec<usize> = indptr
+        .iter()
+        .map(|&p| usize::try_from(p).expect("indptr bounded by nnz"))
+        .collect();
+    // Indices are buffered (4 bytes per stored coordinate) and validated
+    // per row; values then stream straight into the dense matrix.
+    let mut indices = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        indices.push(r.u32("indices")?);
+    }
+    for j in 0..k {
+        let mut prev: Option<u32> = None;
+        for &c in &indices[ptr[j]..ptr[j + 1]] {
+            if prev.is_some_and(|p| p >= c) {
+                return Err(ModelError::Corrupt(format!(
+                    "center {j}: indices not strictly increasing at {c}"
+                )));
+            }
+            if c as usize >= d {
+                return Err(ModelError::Corrupt(format!(
+                    "center {j}: index {c} out of bounds for d = {d}"
+                )));
+            }
+            prev = Some(c);
+        }
+    }
+    let mut centers = DenseMatrix::zeros(k, d);
+    {
+        let mut j = 0usize;
+        for (t, &c) in indices.iter().enumerate() {
+            let v = f32::from_bits(r.u32("values")?);
+            if !v.is_finite() {
+                return Err(ModelError::Corrupt(format!("non-finite center value at nnz {t}")));
+            }
+            if v.to_bits() == 0 {
+                return Err(ModelError::Corrupt(format!(
+                    "explicit +0.0 coordinate stored at nnz {t} (non-canonical encoding)"
+                )));
+            }
+            while ptr[j + 1] <= t {
+                j += 1;
+            }
+            centers.row_mut(j)[c as usize] = v;
+        }
+    }
+    if has_state {
+        // Structural walk of the state section: fixed-width prefix, then
+        // the variable-length arrays are hashed and discarded.
+        let _steps_done = r.u64("training state")?;
+        match r.byte("training state")? {
+            0 | 1 => {}
+            other => {
+                return Err(ModelError::Corrupt(format!(
+                    "converged flag must be 0 or 1, got {other}"
+                )))
+            }
+        }
+        let n = checked_dim(r.u64("training state")?, "state rows", 1 << 40)?;
+        let body = 4u128 * n as u128 + 8 * k as u128 + 8 * (k as u128 * d as u128);
+        if body + 8 > (total as u128).saturating_sub(r.consumed as u128) {
+            return Err(ModelError::Truncated { section: "training state" });
+        }
+        r.skip(
+            u64::try_from(body).expect("bounded by the file length"),
+            "training state",
+        )?;
+        match r.byte("state schedule")? {
+            0 => {}
+            1 => r.skip(32, "state schedule")?,
+            other => {
+                return Err(ModelError::Corrupt(format!(
+                    "state schedule flag must be 0 or 1, got {other}"
+                )))
+            }
+        }
+    }
+    let computed = r.hash;
+    let mut sum = [0u8; 8];
+    r.fill_raw(&mut sum, "checksum")?;
+    let stored_sum = u64::from_le_bytes(sum);
+    if r.consumed != total {
+        return Err(ModelError::Corrupt(format!(
+            "{} trailing bytes after checksum",
+            total - r.consumed
+        )));
+    }
+    if stored_sum != computed {
+        return Err(ModelError::Corrupt(format!(
+            "checksum mismatch (stored {stored_sum:#018x}, computed {computed:#018x})"
+        )));
+    }
+    Ok(Model::from_parts(
+        k,
+        d,
+        centers,
+        norms,
+        nnz,
+        TrainingMeta { variant, kernel, iterations, objective, seed },
+        None,
+    ))
+}
+
 /// A bounds-checked cursor over the raw file bytes: every read names the
 /// section it serves so truncation errors point at the failure site.
 struct Cur<'a> {
@@ -563,6 +821,61 @@ mod tests {
             matches!(&err, ModelError::Corrupt(msg) if msg.contains("out of bounds")),
             "{err}"
         );
+    }
+
+    #[test]
+    fn low_mem_load_matches_in_memory_load() {
+        let state = TrainState {
+            steps_done: 5,
+            converged: false,
+            assignments: vec![1, 0, 1],
+            counts: vec![1, 2],
+            sums: vec![0.25, -0.5, 0.0, 1.0, 0.0, -2.0],
+            minibatch: Some(MiniBatchParams {
+                batch_size: 64,
+                epochs: 3,
+                tol: 1e-4,
+                truncate: None,
+            }),
+        };
+        let m = toy_model().with_state(Some(state));
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("sphkm-lowmem-{}.spkm", std::process::id()));
+        std::fs::write(&path, encode(&m).unwrap()).unwrap();
+        // Streaming load: state skipped, everything else bit-identical.
+        let low = decode_low_mem(&path).unwrap();
+        assert!(low.state().is_none(), "low-mem loads are serve-only");
+        assert_eq!(low.centers(), m.centers());
+        assert_eq!(low.norms(), m.norms());
+        assert_eq!(low.meta(), m.meta());
+        assert_eq!(low.center_nnz(), m.center_nnz());
+        // Version-1 (stateless) files decode identically through both.
+        let v1 = toy_model();
+        std::fs::write(&path, encode(&v1).unwrap()).unwrap();
+        assert_eq!(decode_low_mem(&path).unwrap(), v1);
+        // The streaming decoder rejects the same failure modes: a flipped
+        // body byte (checksum), a truncated file, bad magic.
+        let good = encode(&m).unwrap();
+        let mut flipped = good.clone();
+        let mid = good.len() / 2;
+        flipped[mid] ^= 0x01;
+        std::fs::write(&path, &flipped).unwrap();
+        assert!(matches!(decode_low_mem(&path), Err(ModelError::Corrupt(_))));
+        std::fs::write(&path, &good[..good.len() - 3]).unwrap();
+        assert!(matches!(
+            decode_low_mem(&path),
+            Err(ModelError::Truncated { .. })
+        ));
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(matches!(decode_low_mem(&path), Err(ModelError::BadMagic)));
+        // Trailing garbage is rejected.
+        let mut padded = good.clone();
+        padded.push(0);
+        std::fs::write(&path, &padded).unwrap();
+        assert!(matches!(decode_low_mem(&path), Err(ModelError::Corrupt(_))));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

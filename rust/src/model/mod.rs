@@ -221,6 +221,21 @@ impl Model {
         format::decode(&std::fs::read(path)?)
     }
 
+    /// Load a model in **low-memory streaming mode**: the same format,
+    /// validation order, and rejection taxonomy as [`Model::load`], but
+    /// the file is decoded through a buffered reader instead of being
+    /// materialized whole, and the version-2 training-state section —
+    /// the dominant cost of a large state-bearing file (`4·n` assignment
+    /// bytes plus `8·k·d` f64 sum bytes) — is checksum-verified and
+    /// *skipped*. Peak transient memory is `O(k·d)` regardless of file
+    /// size. The result is **serve-only**: [`Model::state`] is `None`,
+    /// so it cannot seed a bit-identical resume — use [`Model::load`]
+    /// for that. Centers, norms, and metadata are bit-identical to a
+    /// full load of the same file.
+    pub fn load_low_mem(path: &Path) -> Result<Self, ModelError> {
+        format::decode_low_mem(path)
+    }
+
     /// Assemble from decoded parts (crate-internal: the format layer's
     /// constructor after validation). `nnz` is the file's stored
     /// coordinate count, which by construction equals the non-zero-bit

@@ -1,0 +1,736 @@
+//! Chunked on-disk CSR shard store — the out-of-core backend behind
+//! [`RowSource`].
+//!
+//! Every training engine in this crate consumes point data through
+//! [`RowSource`], an abstraction with two backends:
+//!
+//! * [`RowSource::Mem`] — the existing in-memory [`CsrMatrix`]; and
+//! * [`RowSource::Disk`] — a [`ShardStore`]: the same CSR arrays laid out
+//!   in one binary file, read back **chunk-at-a-time** through a
+//!   [`ChunkCursor`] that keeps only `chunk_rows` rows resident.
+//!
+//! The hot loops never see the difference: a [`RowCursor`] yields the
+//! same [`RowView`] borrow either way, and the shard/band grids of the
+//! parallel executor ([`crate::runtime::parallel::Plan`]) are pure
+//! functions of the row count — never of the storage backend or the chunk
+//! size — so results are **bit-identical** between backends for every
+//! thread count and chunk size (asserted by the `out_of_core` integration
+//! suite).
+//!
+//! # On-disk format (version 1, little-endian)
+//!
+//! | section  | bytes          | contents                                  |
+//! |----------|----------------|-------------------------------------------|
+//! | magic    | 8              | `SPHKSHD\0`                               |
+//! | version  | 4              | format version (`1`)                      |
+//! | flags    | 4              | reserved, must be `0`                     |
+//! | rows     | 8              | row count (u64)                           |
+//! | cols     | 8              | column count (u64)                        |
+//! | nnz      | 8              | total stored non-zeros (u64)              |
+//! | indptr   | 8·(rows+1)     | row pointers (u64, cumulative)            |
+//! | indices  | 4·nnz          | column indices (u32, sorted per row)      |
+//! | values   | 4·nnz          | values (f32 bit patterns)                 |
+//! | checksum | 8              | FNV-1a-64 over every preceding byte       |
+//!
+//! [`ShardStore::open`] validates the header and the exact file length
+//! (fully determined by `rows` and `nnz`); [`ShardStore::verify`] streams
+//! the full checksum. The layout is produced either by
+//! [`ShardStore::write_from_matrix`] (from an in-memory matrix) or by the
+//! bounded-memory libsvm converter
+//! ([`crate::data::convert::convert_libsvm_to_shards`]), which never
+//! materializes the matrix at all.
+//!
+//! # Memory model
+//!
+//! A cursor's resident footprint is one chunk: `O(chunk_rows ·
+//! avg_row_nnz)` plus the `(chunk_rows + 1)` row pointers. Each shard of a
+//! parallel assignment pass owns its own cursor, so a training run keeps
+//! at most `threads × chunk_rows` rows of point data resident — the rest
+//! lives in the OS page cache at the kernel's discretion. The module
+//! tracks the high-water mark of all live chunk buffers
+//! ([`resident_peak_bytes`]) so benches and the CI smoke job can assert
+//! the out-of-core path really stays under its budget.
+//!
+//! I/O errors *after* open (a file truncated or deleted mid-training)
+//! panic with a contextful message: the hot loops return borrowed
+//! [`RowView`]s and have no error channel, and a half-read chunk must
+//! never silently feed the similarity kernels.
+
+use super::csr::{CsrMatrix, RowView};
+use super::vec::SparseVec;
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// File magic of the shard-store format.
+pub const SHARD_MAGIC: [u8; 8] = *b"SPHKSHD\0";
+/// Current shard-store format version.
+pub const SHARD_VERSION: u32 = 1;
+/// Header size in bytes (magic + version + flags + rows + cols + nnz).
+pub const SHARD_HEADER_BYTES: u64 = 40;
+/// Default rows kept resident per cursor chunk
+/// (see [`ShardStore::with_chunk_rows`]).
+pub const DEFAULT_CHUNK_ROWS: usize = 4096;
+
+/// FNV-1a 64-bit offset basis (same constants as the `.spkm` codec).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+const FNV_PRIME: u64 = 0x1_0000_0000_01b3;
+
+#[inline]
+fn fnv1a_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+// Aggregate resident-chunk accounting across every live cursor: the
+// current total and its high-water mark since the last reset. Plain
+// atomics — cursors live on worker threads.
+static RESIDENT_NOW: AtomicU64 = AtomicU64::new(0);
+static RESIDENT_PEAK: AtomicU64 = AtomicU64::new(0);
+
+/// Bytes of shard-chunk buffers currently resident across all live
+/// [`ChunkCursor`]s.
+pub fn resident_bytes_now() -> u64 {
+    RESIDENT_NOW.load(Ordering::SeqCst)
+}
+
+/// High-water mark of [`resident_bytes_now`] since the last
+/// [`reset_resident_peak`] — what the out-of-core benches assert against
+/// their memory budget.
+pub fn resident_peak_bytes() -> u64 {
+    RESIDENT_PEAK.load(Ordering::SeqCst)
+}
+
+/// Reset the resident high-water mark to the current resident total.
+pub fn reset_resident_peak() {
+    RESIDENT_PEAK.store(RESIDENT_NOW.load(Ordering::SeqCst), Ordering::SeqCst);
+}
+
+fn recharge(old: u64, new: u64) {
+    if new >= old {
+        let cur = RESIDENT_NOW.fetch_add(new - old, Ordering::SeqCst) + (new - old);
+        RESIDENT_PEAK.fetch_max(cur, Ordering::SeqCst);
+    } else {
+        RESIDENT_NOW.fetch_sub(old - new, Ordering::SeqCst);
+    }
+}
+
+/// Errors opening, writing, or verifying a shard store.
+#[derive(Debug, thiserror::Error)]
+pub enum ShardError {
+    /// Underlying filesystem error.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    /// The file does not start with [`SHARD_MAGIC`].
+    #[error("not a shard store (bad magic)")]
+    BadMagic,
+    /// The file's format version is newer than this build understands.
+    #[error("unsupported shard-store version {found} (this build reads {SHARD_VERSION})")]
+    UnsupportedVersion {
+        /// Version field found in the header.
+        found: u32,
+    },
+    /// Structurally invalid contents (size mismatch, bad checksum, …).
+    #[error("corrupt shard store: {0}")]
+    Corrupt(String),
+}
+
+/// Handle to an on-disk CSR shard store (see the [module docs](self)).
+///
+/// The handle itself holds only the validated header fields and the path
+/// — `O(1)` memory. Row data is read through [`ShardStore::cursor`], one
+/// bounded chunk at a time. Cloning the handle is cheap; the clone shares
+/// nothing but the path.
+#[derive(Debug, Clone)]
+pub struct ShardStore {
+    path: PathBuf,
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    chunk_rows: usize,
+}
+
+impl ShardStore {
+    /// Open and validate a shard-store file: magic, version, flags, and
+    /// the exact file length implied by the header's `rows`/`nnz` (the
+    /// layout has no variable-length sections). Does **not** stream the
+    /// checksum — call [`ShardStore::verify`] for full integrity.
+    pub fn open(path: &Path) -> Result<Self, ShardError> {
+        let mut file = File::open(path)?;
+        let mut header = [0u8; SHARD_HEADER_BYTES as usize];
+        file.read_exact(&mut header)
+            .map_err(|_| ShardError::Corrupt("file shorter than the 40-byte header".into()))?;
+        if header[..8] != SHARD_MAGIC {
+            return Err(ShardError::BadMagic);
+        }
+        let version = u32::from_le_bytes(header[8..12].try_into().expect("4 bytes"));
+        if version != SHARD_VERSION {
+            return Err(ShardError::UnsupportedVersion { found: version });
+        }
+        let flags = u32::from_le_bytes(header[12..16].try_into().expect("4 bytes"));
+        if flags != 0 {
+            return Err(ShardError::Corrupt(format!("unknown flags {flags:#x}")));
+        }
+        let rows_u = u64::from_le_bytes(header[16..24].try_into().expect("8 bytes"));
+        let cols_u = u64::from_le_bytes(header[24..32].try_into().expect("8 bytes"));
+        let nnz_u = u64::from_le_bytes(header[32..40].try_into().expect("8 bytes"));
+        // Column ids are stored as u32, so a valid store cannot name more
+        // than 2^32 columns; the cast guards also keep usize conversions
+        // honest on 32-bit targets.
+        if cols_u > 1 << 32 {
+            return Err(ShardError::Corrupt(format!(
+                "cols {cols_u} exceeds the u32 index space"
+            )));
+        }
+        let rows = usize::try_from(rows_u)
+            .map_err(|_| ShardError::Corrupt(format!("rows {rows_u} exceeds usize")))?;
+        let cols = usize::try_from(cols_u)
+            .map_err(|_| ShardError::Corrupt(format!("cols {cols_u} exceeds usize")))?;
+        let nnz = usize::try_from(nnz_u)
+            .map_err(|_| ShardError::Corrupt(format!("nnz {nnz_u} exceeds usize")))?;
+        let expected = Self::expected_len(rows, nnz);
+        let actual = file.metadata()?.len() as u128;
+        if actual != expected {
+            return Err(ShardError::Corrupt(format!(
+                "file length {actual} does not match header (rows {rows}, nnz {nnz} \
+                 imply {expected} bytes)"
+            )));
+        }
+        Ok(Self {
+            path: path.to_path_buf(),
+            rows,
+            cols,
+            nnz,
+            chunk_rows: DEFAULT_CHUNK_ROWS,
+        })
+    }
+
+    fn expected_len(rows: usize, nnz: usize) -> u128 {
+        SHARD_HEADER_BYTES as u128
+            + 8 * (rows as u128 + 1)
+            + 4 * nnz as u128
+            + 4 * nnz as u128
+            + 8
+    }
+
+    /// Set the cursor chunk size: how many rows each [`ChunkCursor`] keeps
+    /// resident at a time (clamped to at least 1). Smaller chunks mean a
+    /// smaller memory footprint and more seeks; results are bit-identical
+    /// for every setting.
+    #[must_use]
+    pub fn with_chunk_rows(mut self, chunk_rows: usize) -> Self {
+        self.chunk_rows = chunk_rows.max(1);
+        self
+    }
+
+    /// Number of rows (samples).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns (features).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total stored non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Rows per resident cursor chunk (see [`ShardStore::with_chunk_rows`]).
+    #[inline]
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// Path of the backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Total on-disk size in bytes (header + arrays + checksum) — the
+    /// "bytes mapped" figure the CLI reports for out-of-core runs.
+    pub fn file_len(&self) -> u64 {
+        Self::expected_len(self.rows, self.nnz) as u64
+    }
+
+    /// The full-matrix resident footprint this store avoids: what the
+    /// CSR arrays would occupy decoded in memory (`usize` indptr entries,
+    /// u32 indices, f32 values).
+    pub fn in_memory_bytes(&self) -> u64 {
+        (self.rows as u64 + 1) * std::mem::size_of::<usize>() as u64 + 8 * self.nnz as u64
+    }
+
+    fn indptr_off(&self) -> u64 {
+        SHARD_HEADER_BYTES
+    }
+
+    fn indices_off(&self) -> u64 {
+        SHARD_HEADER_BYTES + 8 * (self.rows as u64 + 1)
+    }
+
+    fn values_off(&self) -> u64 {
+        self.indices_off() + 4 * self.nnz as u64
+    }
+
+    /// Open a cursor over this store. Each cursor opens its own file
+    /// handle (seek positions are per-handle, so concurrent shard workers
+    /// never interfere) and owns one chunk's worth of decode buffers.
+    pub fn cursor(&self) -> Result<ChunkCursor<'_>, ShardError> {
+        let file = File::open(&self.path)?;
+        Ok(ChunkCursor {
+            store: self,
+            file,
+            start: 0,
+            end: 0,
+            base: 0,
+            indptr: Vec::new(),
+            indices: Vec::new(),
+            values: Vec::new(),
+            buf: Vec::new(),
+            charged: 0,
+        })
+    }
+
+    /// Stream the whole file and check the trailing FNV-1a-64 checksum.
+    pub fn verify(&self) -> Result<(), ShardError> {
+        let mut file = File::open(&self.path)?;
+        let total = self.file_len();
+        let body = total - 8;
+        let mut hash = FNV_OFFSET;
+        let mut remaining = body;
+        let mut buf = vec![0u8; 1 << 16];
+        while remaining > 0 {
+            let take = (buf.len() as u64).min(remaining) as usize;
+            file.read_exact(&mut buf[..take])?;
+            hash = fnv1a_update(hash, &buf[..take]);
+            remaining -= take as u64;
+        }
+        let mut trailer = [0u8; 8];
+        file.read_exact(&mut trailer)?;
+        let stored = u64::from_le_bytes(trailer);
+        if stored != hash {
+            return Err(ShardError::Corrupt(format!(
+                "checksum mismatch: stored {stored:#018x}, computed {hash:#018x}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Write `m` to `path` in shard-store format (streaming; the only
+    /// full-size buffer is the matrix itself, which the caller already
+    /// holds). For corpora that do not fit in memory, use the libsvm
+    /// converter ([`crate::data::convert::convert_libsvm_to_shards`])
+    /// instead — it never materializes the matrix.
+    pub fn write_from_matrix(path: &Path, m: &CsrMatrix) -> Result<(), ShardError> {
+        let mut w = HashWrite::new(BufWriter::new(File::create(path)?));
+        w.put(&SHARD_MAGIC)?;
+        w.put(&SHARD_VERSION.to_le_bytes())?;
+        w.put(&0u32.to_le_bytes())?;
+        w.put(&(m.rows() as u64).to_le_bytes())?;
+        w.put(&(m.cols() as u64).to_le_bytes())?;
+        w.put(&(m.nnz() as u64).to_le_bytes())?;
+        let mut running = 0u64;
+        w.put(&running.to_le_bytes())?;
+        for r in 0..m.rows() {
+            running += m.row(r).nnz() as u64;
+            w.put(&running.to_le_bytes())?;
+        }
+        for r in 0..m.rows() {
+            for &c in m.row(r).indices {
+                w.put(&c.to_le_bytes())?;
+            }
+        }
+        for r in 0..m.rows() {
+            for &v in m.row(r).values {
+                w.put(&v.to_le_bytes())?;
+            }
+        }
+        let hash = w.hash;
+        let mut inner = w.w;
+        inner.write_all(&hash.to_le_bytes())?;
+        inner.flush()?;
+        Ok(())
+    }
+}
+
+/// A [`Write`] adapter that folds every byte into a running FNV-1a-64
+/// hash before forwarding — how the writer and converter produce the
+/// trailing checksum in one pass.
+pub(crate) struct HashWrite<W: Write> {
+    pub(crate) w: W,
+    pub(crate) hash: u64,
+}
+
+impl<W: Write> HashWrite<W> {
+    pub(crate) fn new(w: W) -> Self {
+        Self { w, hash: FNV_OFFSET }
+    }
+
+    pub(crate) fn put(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.hash = fnv1a_update(self.hash, bytes);
+        self.w.write_all(bytes)
+    }
+}
+
+/// Bounded-memory reader over a [`ShardStore`]: keeps one
+/// `chunk_rows`-row chunk of the CSR arrays resident and reloads on
+/// demand. Supports both the ascending scans of the assignment hot loops
+/// (each chunk is loaded exactly once per pass) and the random accesses
+/// of mini-batch sampling and AFK-MC² seeding (the chunk containing the
+/// requested row is loaded).
+///
+/// # Panics
+///
+/// [`ChunkCursor::row`] panics if the backing file fails to read or its
+/// contents went structurally invalid after [`ShardStore::open`]
+/// validated it — the hot loops return borrowed views and have no error
+/// channel (see the [module docs](self)).
+pub struct ChunkCursor<'a> {
+    store: &'a ShardStore,
+    file: File,
+    /// First row of the loaded chunk.
+    start: usize,
+    /// One past the last loaded row (`start == end` ⇒ nothing loaded).
+    end: usize,
+    /// nnz offset of the loaded chunk within the store.
+    base: u64,
+    indptr: Vec<u64>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    buf: Vec<u8>,
+    /// Bytes charged to the global resident accounting.
+    charged: u64,
+}
+
+impl ChunkCursor<'_> {
+    /// Borrow row `i`, loading the chunk that contains it if needed.
+    #[inline]
+    pub fn row(&mut self, i: usize) -> RowView<'_> {
+        assert!(i < self.store.rows, "row {i} out of {} rows", self.store.rows);
+        if i < self.start || i >= self.end {
+            let chunk = i / self.store.chunk_rows;
+            if let Err(e) = self.load_chunk(chunk) {
+                panic!(
+                    "shard store {}: chunk read failed mid-run: {e}",
+                    self.store.path.display()
+                );
+            }
+        }
+        let local = i - self.start;
+        let s = (self.indptr[local] - self.base) as usize;
+        let e = (self.indptr[local + 1] - self.base) as usize;
+        RowView { indices: &self.indices[s..e], values: &self.values[s..e] }
+    }
+
+    /// Copy row `i` into an owned [`SparseVec`] (mirrors
+    /// [`CsrMatrix::row_vec`]).
+    pub fn row_vec(&mut self, i: usize) -> SparseVec {
+        let cols = self.store.cols;
+        let v = self.row(i);
+        SparseVec::new(cols, v.indices.to_vec(), v.values.to_vec())
+    }
+
+    fn load_chunk(&mut self, chunk: usize) -> std::io::Result<()> {
+        let corrupt = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+        let start = chunk * self.store.chunk_rows;
+        let end = (start + self.store.chunk_rows).min(self.store.rows);
+        let nrows = end - start;
+        // Row pointers for the chunk (one extra to close the last row).
+        self.buf.resize((nrows + 1) * 8, 0);
+        self.file
+            .seek(SeekFrom::Start(self.store.indptr_off() + 8 * start as u64))?;
+        self.file.read_exact(&mut self.buf)?;
+        self.indptr.clear();
+        for c in self.buf.chunks_exact(8) {
+            self.indptr.push(u64::from_le_bytes(c.try_into().expect("8 bytes")));
+        }
+        let base = self.indptr[0];
+        let last = self.indptr[nrows];
+        if last < base
+            || last > self.store.nnz as u64
+            || self.indptr.windows(2).any(|w| w[0] > w[1])
+        {
+            return Err(corrupt(format!(
+                "non-monotone row pointers in chunk {chunk} (rows {start}..{end})"
+            )));
+        }
+        let cnnz = (last - base) as usize;
+        // Column indices.
+        self.buf.resize(cnnz * 4, 0);
+        self.file
+            .seek(SeekFrom::Start(self.store.indices_off() + 4 * base))?;
+        self.file.read_exact(&mut self.buf)?;
+        self.indices.clear();
+        for c in self.buf.chunks_exact(4) {
+            self.indices.push(u32::from_le_bytes(c.try_into().expect("4 bytes")));
+        }
+        // Values.
+        self.file
+            .seek(SeekFrom::Start(self.store.values_off() + 4 * base))?;
+        self.file.read_exact(&mut self.buf)?;
+        self.values.clear();
+        for c in self.buf.chunks_exact(4) {
+            self.values.push(f32::from_le_bytes(c.try_into().expect("4 bytes")));
+        }
+        self.start = start;
+        self.end = end;
+        self.base = base;
+        let charge = (self.indptr.capacity() as u64) * 8
+            + (self.indices.capacity() as u64) * 4
+            + (self.values.capacity() as u64) * 4
+            + self.buf.capacity() as u64;
+        recharge(self.charged, charge);
+        self.charged = charge;
+        Ok(())
+    }
+}
+
+impl Drop for ChunkCursor<'_> {
+    fn drop(&mut self) {
+        recharge(self.charged, 0);
+    }
+}
+
+/// A borrowed handle to point data, abstracting over the in-memory and
+/// on-disk backends. `Copy` by design: every shard of a parallel pass
+/// copies the source and opens its own [`RowCursor`] inside its worker
+/// closure.
+#[derive(Clone, Copy)]
+pub enum RowSource<'a> {
+    /// In-memory CSR matrix.
+    Mem(&'a CsrMatrix),
+    /// Chunked on-disk shard store.
+    Disk(&'a ShardStore),
+}
+
+impl<'a> RowSource<'a> {
+    /// Number of rows (samples).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match self {
+            RowSource::Mem(m) => m.rows(),
+            RowSource::Disk(s) => s.rows(),
+        }
+    }
+
+    /// Number of columns (features).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match self {
+            RowSource::Mem(m) => m.cols(),
+            RowSource::Disk(s) => s.cols(),
+        }
+    }
+
+    /// Total stored non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        match self {
+            RowSource::Mem(m) => m.nnz(),
+            RowSource::Disk(s) => s.nnz(),
+        }
+    }
+
+    /// True when this source reads from disk.
+    pub fn is_disk(&self) -> bool {
+        matches!(self, RowSource::Disk(_))
+    }
+
+    /// Open a row cursor. For the in-memory backend this is free; for the
+    /// disk backend it opens a file handle and allocates chunk buffers
+    /// lazily on first access.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the disk backend's file cannot be reopened — consistent
+    /// with the mid-run I/O contract of [`ChunkCursor::row`]; the store
+    /// was validated at [`ShardStore::open`] time.
+    pub fn cursor(self) -> RowCursor<'a> {
+        match self {
+            RowSource::Mem(m) => RowCursor::Mem(m),
+            RowSource::Disk(s) => RowCursor::Disk(s.cursor().unwrap_or_else(|e| {
+                panic!("shard store {}: reopen failed: {e}", s.path().display())
+            })),
+        }
+    }
+}
+
+impl<'a> From<&'a CsrMatrix> for RowSource<'a> {
+    fn from(m: &'a CsrMatrix) -> Self {
+        RowSource::Mem(m)
+    }
+}
+
+impl<'a> From<&'a ShardStore> for RowSource<'a> {
+    fn from(s: &'a ShardStore) -> Self {
+        RowSource::Disk(s)
+    }
+}
+
+/// A row reader over either backend (see [`RowSource::cursor`]). Mutable
+/// because the disk backend reloads its chunk buffers on access; the
+/// in-memory arm borrows rows directly with zero cost.
+pub enum RowCursor<'a> {
+    /// Zero-cost views into an in-memory matrix.
+    Mem(&'a CsrMatrix),
+    /// Chunk-buffered reads from a shard store.
+    Disk(ChunkCursor<'a>),
+}
+
+impl RowCursor<'_> {
+    /// Borrow row `i`. Disk-backed cursors load the containing chunk on
+    /// demand (and panic on mid-run I/O failure — see [`ChunkCursor::row`]).
+    #[inline]
+    pub fn row(&mut self, i: usize) -> RowView<'_> {
+        match self {
+            RowCursor::Mem(m) => m.row(i),
+            RowCursor::Disk(c) => c.row(i),
+        }
+    }
+
+    /// Copy row `i` into an owned [`SparseVec`].
+    pub fn row_vec(&mut self, i: usize) -> SparseVec {
+        match self {
+            RowCursor::Mem(m) => m.row_vec(i),
+            RowCursor::Disk(c) => c.row_vec(i),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthConfig;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("sphkm-chunked-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn demo_matrix() -> CsrMatrix {
+        SynthConfig::small_demo().generate(11).matrix
+    }
+
+    #[test]
+    fn round_trip_matches_matrix_for_every_chunk_size() {
+        let m = demo_matrix();
+        let path = tmp("rt.sks");
+        ShardStore::write_from_matrix(&path, &m).unwrap();
+        let store = ShardStore::open(&path).unwrap();
+        assert_eq!(store.rows(), m.rows());
+        assert_eq!(store.cols(), m.cols());
+        assert_eq!(store.nnz(), m.nnz());
+        store.verify().unwrap();
+        for chunk in [1usize, 7, 64, m.rows(), m.rows() + 100] {
+            let s = store.clone().with_chunk_rows(chunk);
+            let mut cur = s.cursor().unwrap();
+            // Ascending scan plus a few random revisits.
+            for i in 0..m.rows() {
+                let a = m.row(i);
+                let b = cur.row(i);
+                assert_eq!(a.indices, b.indices, "chunk {chunk} row {i}");
+                assert_eq!(a.values, b.values, "chunk {chunk} row {i}");
+            }
+            for &i in &[m.rows() - 1, 0, m.rows() / 2, 1 % m.rows()] {
+                assert_eq!(m.row(i).indices, cur.row(i).indices);
+            }
+        }
+    }
+
+    #[test]
+    fn row_source_uniform_over_backends() {
+        let m = demo_matrix();
+        let path = tmp("src.sks");
+        ShardStore::write_from_matrix(&path, &m).unwrap();
+        let store = ShardStore::open(&path).unwrap().with_chunk_rows(13);
+        let mem = RowSource::Mem(&m);
+        let disk = RowSource::Disk(&store);
+        assert_eq!(mem.rows(), disk.rows());
+        assert_eq!(mem.cols(), disk.cols());
+        assert_eq!(mem.nnz(), disk.nnz());
+        assert!(!mem.is_disk());
+        assert!(disk.is_disk());
+        let mut cm = mem.cursor();
+        let mut cd = disk.cursor();
+        for i in (0..m.rows()).rev() {
+            assert_eq!(cm.row(i).values, cd.row(i).values);
+            assert_eq!(cm.row_vec(i), cd.row_vec(i));
+        }
+    }
+
+    #[test]
+    fn open_rejects_bad_magic_version_and_length() {
+        let m = demo_matrix();
+        let path = tmp("bad.sks");
+        ShardStore::write_from_matrix(&path, &m).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(matches!(ShardStore::open(&path), Err(ShardError::BadMagic)));
+
+        let mut bad = good.clone();
+        bad[8] = 9; // version
+        std::fs::write(&path, &bad).unwrap();
+        assert!(matches!(
+            ShardStore::open(&path),
+            Err(ShardError::UnsupportedVersion { found: 9 })
+        ));
+
+        std::fs::write(&path, &good[..good.len() - 3]).unwrap();
+        assert!(matches!(ShardStore::open(&path), Err(ShardError::Corrupt(_))));
+    }
+
+    #[test]
+    fn verify_catches_flipped_payload_byte() {
+        let m = demo_matrix();
+        let path = tmp("flip.sks");
+        ShardStore::write_from_matrix(&path, &m).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let store = ShardStore::open(&path).unwrap();
+        assert!(matches!(store.verify(), Err(ShardError::Corrupt(_))));
+    }
+
+    #[test]
+    fn resident_accounting_tracks_live_cursors() {
+        let m = demo_matrix();
+        let path = tmp("resident.sks");
+        ShardStore::write_from_matrix(&path, &m).unwrap();
+        let store = ShardStore::open(&path).unwrap().with_chunk_rows(8);
+        let before = resident_bytes_now();
+        {
+            let mut cur = store.cursor().unwrap();
+            let _ = cur.row(0);
+            assert!(resident_bytes_now() > before, "chunk load must charge");
+            assert!(resident_peak_bytes() >= resident_bytes_now());
+        }
+        // Cursor dropped: its charge is released.
+        assert_eq!(resident_bytes_now(), before);
+    }
+
+    #[test]
+    fn empty_matrix_round_trips() {
+        let m = CsrMatrix::from_parts(0, 4, vec![0], vec![], vec![]);
+        let path = tmp("empty.sks");
+        ShardStore::write_from_matrix(&path, &m).unwrap();
+        let store = ShardStore::open(&path).unwrap();
+        assert_eq!(store.rows(), 0);
+        assert_eq!(store.nnz(), 0);
+        store.verify().unwrap();
+    }
+}

@@ -1,6 +1,6 @@
 //! Compressed Sparse Row matrix — the container for a whole dataset.
 
-use super::ops::{sparse_dense_dot, sparse_sparse_dot};
+use super::ops::{normalize_row_values, sparse_dense_dot, sparse_sparse_dot};
 use super::vec::SparseVec;
 use crate::audit::AuditViolation;
 
@@ -199,22 +199,15 @@ impl CsrMatrix {
     }
 
     /// L2-normalize every row in place; all-zero rows are left untouched.
-    /// Returns the number of rows that could not be normalized.
+    /// Returns the number of rows that could not be normalized. Shares its
+    /// arithmetic with the streaming shard converter via
+    /// [`normalize_row_values`] so both pipelines produce bit-identical
+    /// unit rows.
     pub fn normalize_rows(&mut self) -> usize {
         let mut failures = 0;
         for r in 0..self.rows {
             let (s, e) = (self.indptr[r], self.indptr[r + 1]);
-            let norm: f64 = self.values[s..e]
-                .iter()
-                .map(|&v| v as f64 * v as f64)
-                .sum::<f64>()
-                .sqrt();
-            if norm > 0.0 {
-                let inv = (1.0 / norm) as f32;
-                for v in &mut self.values[s..e] {
-                    *v *= inv;
-                }
-            } else {
+            if !normalize_row_values(&mut self.values[s..e]) {
                 failures += 1;
             }
         }

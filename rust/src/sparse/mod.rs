@@ -7,14 +7,18 @@
 //! [`InvertedIndex`] — a CSC-style postings file over the centers that
 //! backs the sparse similarity kernel of [`crate::kmeans::kernel`].
 
+pub mod chunked;
 pub mod csr;
 mod dense;
 pub mod inverted;
 mod ops;
 mod vec;
 
+pub use chunked::{ChunkCursor, RowCursor, RowSource, ShardError, ShardStore};
 pub use csr::{CsrMatrix, RowView};
 pub use dense::DenseMatrix;
 pub use inverted::InvertedIndex;
-pub use ops::{dense_dot, normalize_dense, sparse_dense_dot, sparse_sparse_dot};
+pub use ops::{
+    dense_dot, normalize_dense, normalize_row_values, sparse_dense_dot, sparse_sparse_dot,
+};
 pub use vec::SparseVec;

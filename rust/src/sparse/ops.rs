@@ -116,6 +116,29 @@ pub fn dense_dot(a: &[f32], b: &[f32]) -> f64 {
     acc0 + acc1
 }
 
+/// Normalize one sparse row's stored values to unit L2 norm in place.
+///
+/// Returns `false` (leaving the values untouched) when the norm is not
+/// strictly positive — an all-zero row. The arithmetic (f64 sum of
+/// squares, `sqrt`, one f32 reciprocal multiplied through) is the single
+/// definition shared by [`CsrMatrix::normalize_rows`] and the streaming
+/// shard converter, so in-memory and out-of-core pipelines produce
+/// bit-identical unit rows.
+///
+/// [`CsrMatrix::normalize_rows`]: crate::sparse::CsrMatrix::normalize_rows
+pub fn normalize_row_values(vals: &mut [f32]) -> bool {
+    let norm: f64 = vals.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        let inv = (1.0 / norm) as f32;
+        for v in vals.iter_mut() {
+            *v *= inv;
+        }
+        true
+    } else {
+        false
+    }
+}
+
 /// Normalize a dense vector to unit length in place; returns the original
 /// norm, or 0.0 (leaving the vector untouched) if it was all-zero.
 pub fn normalize_dense(v: &mut [f32]) -> f64 {

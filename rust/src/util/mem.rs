@@ -1,0 +1,46 @@
+//! Process-memory introspection for CLI reporting: the peak resident
+//! set size (`VmHWM`) read from `/proc/self/status`. Linux-only by
+//! nature — on platforms without procfs the probe returns `None` and
+//! callers simply omit the figure instead of failing.
+
+use std::path::Path;
+
+/// Peak resident set size of this process in **bytes** (`VmHWM`, the
+/// high-water mark the kernel tracks since process start), or `None`
+/// when the platform does not expose `/proc/self/status` or the field
+/// cannot be parsed.
+pub fn peak_rss_bytes() -> Option<u64> {
+    parse_vm_hwm(&std::fs::read_to_string(Path::new("/proc/self/status")).ok()?)
+}
+
+/// Extract `VmHWM` (reported by the kernel in kB) from the text of
+/// `/proc/self/status`.
+fn parse_vm_hwm(status: &str) -> Option<u64> {
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb.saturating_mul(1024));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_vm_hwm_line() {
+        let status = "Name:\tsphkm\nVmPeak:\t  999 kB\nVmHWM:\t    1234 kB\nThreads:\t1\n";
+        assert_eq!(parse_vm_hwm(status), Some(1234 * 1024));
+        assert_eq!(parse_vm_hwm("Name:\tx\n"), None);
+        assert_eq!(parse_vm_hwm("VmHWM:\tgarbage kB\n"), None);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn probe_reports_a_positive_peak_on_linux() {
+        let rss = peak_rss_bytes().expect("procfs available on linux");
+        assert!(rss > 0);
+    }
+}

@@ -5,6 +5,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod config;
+pub mod mem;
 pub mod prop;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,336 @@
+//! Out-of-core integration: training from the chunked on-disk shard
+//! store ([`ShardStore`]) must be **bit-for-bit identical** to training
+//! from the in-memory [`CsrMatrix`] holding the same rows — assignments,
+//! objective bits, and every center coordinate — for all seven exact
+//! variants and the mini-batch engine, for thread counts {1, 0}, and for
+//! chunk sizes from one row per chunk through the whole corpus in one
+//! chunk. Save → resume round trips may *cross* backends freely: a run
+//! interrupted in memory resumes from disk shards (and vice versa) onto
+//! the uninterrupted trajectory.
+//!
+//! Why this holds by construction: the shard grid is a pure function of
+//! the row count (never the backend or chunk size), rows are materialized
+//! as identical index/value slices by both cursors, and every similarity
+//! runs through the same kernels in the same order — see the
+//! "Out-of-core data" section of the `sphkm::kmeans` module docs.
+
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
+use sphkm::data::synth::SynthConfig;
+use sphkm::data::Dataset;
+use sphkm::init::InitMethod;
+use sphkm::kmeans::{Engine, ExactParams, MiniBatchParams, Variant};
+use sphkm::sparse::{CsrMatrix, RowSource, ShardStore, SparseVec};
+use sphkm::util::prop::forall;
+use sphkm::{FittedModel, SphericalKMeans};
+
+/// The resident-chunk accounting in `sphkm::sparse::chunked` is
+/// process-global; serialize the tests in this binary so one test's live
+/// cursors never pollute another's high-water mark (the budget test
+/// compares that mark against a single corpus's footprint).
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::OnceLock<std::sync::Mutex<()>> = std::sync::OnceLock::new();
+    LOCK.get_or_init(|| std::sync::Mutex::new(()))
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn corpus(n_docs: usize, seed: u64) -> Dataset {
+    let mut cfg = SynthConfig::small_demo();
+    cfg.name = "ooc-synth".into();
+    cfg.n_docs = n_docs;
+    cfg.generate(seed)
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("sphkm-ooc-tests-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Write `m` to a shard store at a fresh temp path and open it with the
+/// given reader-side chunk budget.
+fn store_for(m: &CsrMatrix, name: &str, chunk_rows: usize) -> (ShardStore, std::path::PathBuf) {
+    let path = tmp(name);
+    ShardStore::write_from_matrix(&path, m).unwrap();
+    let store = ShardStore::open(&path).unwrap().with_chunk_rows(chunk_rows);
+    (store, path)
+}
+
+fn assert_models_bit_identical(a: &FittedModel, b: &FittedModel, what: &str) {
+    assert_eq!(a.assignments(), b.assignments(), "{what}: assignments");
+    assert_eq!(
+        a.objective().to_bits(),
+        b.objective().to_bits(),
+        "{what}: objective"
+    );
+    assert_eq!(a.converged(), b.converged(), "{what}: converged");
+    for j in 0..a.k() {
+        for (c, (x, y)) in a
+            .centers()
+            .row(j)
+            .iter()
+            .zip(b.centers().row(j))
+            .enumerate()
+        {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: center {j} dim {c}");
+        }
+    }
+}
+
+#[test]
+fn exact_variants_bit_identical_across_backends() {
+    let _serial = serial();
+    let ds = corpus(450, 71);
+    let n = ds.matrix.rows();
+    let k = 7;
+    // k-means++ seeding so the disk cursor also drives the init path.
+    let init = InitMethod::KMeansPP { alpha: 1.0 };
+    for variant in Variant::ALL {
+        for threads in [1usize, 0] {
+            // One row per chunk, a chunk size that does not divide the
+            // row count, and the whole corpus in a single chunk.
+            for chunk_rows in [1usize, 37, n] {
+                let what =
+                    format!("{} threads={threads} chunk_rows={chunk_rows}", variant.name());
+                let est = || {
+                    SphericalKMeans::new(k)
+                        .variant(variant)
+                        .init(init)
+                        .seed(17)
+                        .threads(threads)
+                        .max_iter(60)
+                };
+                let mem = est().fit(&ds.matrix).unwrap();
+                let (store, path) = store_for(
+                    &ds.matrix,
+                    &format!(
+                        "exact-{}-{threads}-{chunk_rows}.sks",
+                        variant.name().replace('.', "_")
+                    ),
+                    chunk_rows,
+                );
+                let disk = est().fit_source(RowSource::Disk(&store)).unwrap();
+                std::fs::remove_file(&path).ok();
+                assert_models_bit_identical(&mem, &disk, &what);
+            }
+        }
+    }
+}
+
+#[test]
+fn minibatch_bit_identical_across_backends() {
+    let _serial = serial();
+    let ds = corpus(500, 23);
+    let n = ds.matrix.rows();
+    let k = 6;
+    for threads in [1usize, 0] {
+        for chunk_rows in [1usize, 37, n] {
+            let what = format!("minibatch threads={threads} chunk_rows={chunk_rows}");
+            let est = || {
+                SphericalKMeans::new(k)
+                    .engine(Engine::MiniBatch(MiniBatchParams {
+                        batch_size: 96,
+                        epochs: 4,
+                        tol: 0.0,
+                        truncate: Some(24),
+                    }))
+                    .seed(29)
+                    .threads(threads)
+            };
+            let mem = est().fit(&ds.matrix).unwrap();
+            let (store, path) =
+                store_for(&ds.matrix, &format!("mb-{threads}-{chunk_rows}.sks"), chunk_rows);
+            let disk = est().fit_source(RowSource::Disk(&store)).unwrap();
+            std::fs::remove_file(&path).ok();
+            assert_models_bit_identical(&mem, &disk, &what);
+        }
+    }
+}
+
+#[test]
+fn preinit_seeding_bit_identical_across_backends() {
+    let _serial = serial();
+    // The §7 preinit synergy runs the seeding similarity collection and
+    // the bound initialization over the row source too.
+    let ds = corpus(300, 41);
+    let k = 5;
+    for variant in [Variant::Elkan, Variant::Yinyang] {
+        let est = || {
+            SphericalKMeans::new(k)
+                .engine(Engine::Exact(ExactParams {
+                    variant,
+                    preinit: true,
+                    ..Default::default()
+                }))
+                .init(InitMethod::KMeansPP { alpha: 1.0 })
+                .seed(3)
+                .max_iter(60)
+        };
+        let mem = est().fit(&ds.matrix).unwrap();
+        let (store, path) = store_for(
+            &ds.matrix,
+            &format!("preinit-{}.sks", variant.name().replace('.', "_")),
+            19,
+        );
+        let disk = est().fit_source(RowSource::Disk(&store)).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_models_bit_identical(&mem, &disk, &format!("preinit {}", variant.name()));
+    }
+}
+
+#[test]
+fn randomized_backend_equivalence() {
+    let _serial = serial();
+    // Random corpora × random engine configurations: memory and disk
+    // must agree bit-for-bit on every draw.
+    forall(10, 0x00C_0FFE, |g| {
+        let rows = g.usize_in(30, 160);
+        let d = g.usize_in(20, 120);
+        let k = g.usize_in(2, 8);
+        let mut sv = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            let nnz = g.usize_in(1, 12);
+            let pattern = g.sparse_pattern(d, nnz);
+            let pairs: Vec<(u32, f32)> = pattern
+                .iter()
+                .map(|&c| (c as u32, g.f64_in(0.05, 1.0) as f32))
+                .collect();
+            sv.push(SparseVec::from_pairs(d, pairs));
+        }
+        let mut m = CsrMatrix::from_rows(d, &sv);
+        m.normalize_rows();
+        let variant = Variant::ALL[g.usize_in(0, Variant::ALL.len())];
+        let threads = [1usize, 0][g.usize_in(0, 2)];
+        let chunk_rows = g.usize_in(1, rows + 1);
+        let init = [
+            InitMethod::Uniform,
+            InitMethod::KMeansPP { alpha: 1.0 },
+            InitMethod::AfkMc2 { alpha: 1.0, chain: 20 },
+        ][g.usize_in(0, 3)];
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let est = || {
+            SphericalKMeans::new(k)
+                .variant(variant)
+                .init(init)
+                .seed(seed)
+                .threads(threads)
+                .max_iter(40)
+        };
+        let mem = est().fit(&m).unwrap();
+        let (store, path) = store_for(&m, &format!("rand-{}.sks", g.case), chunk_rows);
+        let disk = est().fit_source(RowSource::Disk(&store)).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_models_bit_identical(
+            &mem,
+            &disk,
+            &format!(
+                "case {}: {} init={init:?} threads={threads} chunk_rows={chunk_rows}",
+                g.case,
+                variant.name()
+            ),
+        );
+    });
+}
+
+#[test]
+fn resume_crosses_backends_bit_identically() {
+    let _serial = serial();
+    // Interrupt in one backend, save, resume in the other: the stitched
+    // trajectory must equal the uninterrupted single-backend run.
+    let ds = corpus(600, 77);
+    let k = 8;
+    let interrupt_at = 2usize;
+    let (store, path) = store_for(&ds.matrix, "resume-cross.sks", 53);
+    for variant in [Variant::Standard, Variant::SimplifiedElkan, Variant::Hamerly] {
+        let est = || SphericalKMeans::new(k).variant(variant).seed(5);
+        let what = |leg: &str| format!("{} {leg}", variant.name());
+        let full = est().max_iter(200).fit(&ds.matrix).unwrap();
+        assert!(full.converged() && full.iterations() > interrupt_at);
+
+        // Memory → disk.
+        let part = est().max_iter(interrupt_at).fit(&ds.matrix).unwrap();
+        let spkm = tmp(&format!("cross-{}.spkm", variant.name().replace('.', "_")));
+        part.save(&spkm).unwrap();
+        let loaded = FittedModel::load(&spkm).unwrap();
+        let resumed = est()
+            .max_iter(200)
+            .warm_start(&loaded)
+            .fit_source(RowSource::Disk(&store))
+            .unwrap();
+        assert_models_bit_identical(&full, &resumed, &what("mem→disk"));
+
+        // Disk → memory.
+        let part = est()
+            .max_iter(interrupt_at)
+            .fit_source(RowSource::Disk(&store))
+            .unwrap();
+        part.save(&spkm).unwrap();
+        let loaded = FittedModel::load(&spkm).unwrap();
+        std::fs::remove_file(&spkm).ok();
+        let resumed = est().max_iter(200).warm_start(&loaded).fit(&ds.matrix).unwrap();
+        assert_models_bit_identical(&full, &resumed, &what("disk→mem"));
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn minibatch_resume_crosses_backends_bit_identically() {
+    let _serial = serial();
+    let ds = corpus(500, 13);
+    let k = 6;
+    let total_epochs = 6usize;
+    let interrupt_at = 2usize;
+    let mb = |epochs: usize| {
+        SphericalKMeans::new(k)
+            .engine(Engine::MiniBatch(MiniBatchParams {
+                batch_size: 128,
+                epochs,
+                tol: 0.0,
+                truncate: Some(16),
+            }))
+            .seed(31)
+    };
+    let (store, path) = store_for(&ds.matrix, "mb-resume-cross.sks", 41);
+    let full = mb(total_epochs).fit(&ds.matrix).unwrap();
+    let part = mb(interrupt_at).fit_source(RowSource::Disk(&store)).unwrap();
+    let spkm = tmp("mb-cross.spkm");
+    part.save(&spkm).unwrap();
+    let loaded = FittedModel::load(&spkm).unwrap();
+    std::fs::remove_file(&spkm).ok();
+    let resumed = mb(total_epochs - interrupt_at)
+        .warm_start(&loaded)
+        .fit(&ds.matrix)
+        .unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_models_bit_identical(&full, &resumed, "minibatch disk→mem resume");
+}
+
+#[test]
+fn chunked_reads_stay_within_their_budget() {
+    let _serial = serial();
+    // The resident-bytes accounting that the out-of-core bench asserts
+    // against: a small chunk budget must keep the peak resident point
+    // data strictly below the full-matrix footprint.
+    let ds = corpus(800, 3);
+    let (store, path) = store_for(&ds.matrix, "resident.sks", 32);
+    sphkm::sparse::chunked::reset_resident_peak();
+    let fitted = SphericalKMeans::new(6)
+        .variant(Variant::SimplifiedHamerly)
+        .seed(1)
+        .max_iter(30)
+        .fit_source(RowSource::Disk(&store))
+        .unwrap();
+    let peak = sphkm::sparse::chunked::resident_peak_bytes();
+    std::fs::remove_file(&path).ok();
+    assert!(fitted.iterations() > 0);
+    assert!(peak > 0, "cursor accounting must observe the chunk buffers");
+    assert!(
+        peak < store.in_memory_bytes(),
+        "peak resident {peak} must undercut the {}-byte full matrix",
+        store.in_memory_bytes()
+    );
+}
