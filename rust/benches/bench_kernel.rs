@@ -1,14 +1,16 @@
 //! Similarity-kernel crossover benchmark: dense-transpose vs inverted-file
-//! backends on synthetic text-like corpora of decreasing density.
+//! vs MaxScore-pruned backends on synthetic text-like corpora of
+//! decreasing density.
 //!
-//! For every corpus both kernels run the Standard variant from identical
+//! For every corpus all kernels run the Standard variant from identical
 //! initial centers; assignments and objectives must be **bit-identical**
 //! (the kernel exactness contract), so the comparison isolates cost. The
-//! acceptance bar: on sparse (< 5% density) text data at k ≥ 64 the
+//! acceptance bars: on sparse (< 5% density) text data at k ≥ 64 the
 //! inverted file must perform **strictly fewer multiply-adds** than the
-//! dense transpose (asserted). Wall-clock columns show where each backend
-//! actually wins — the dense kernel's contiguous SIMD reads buy it more
-//! per madd, so its crossover sits below the madd crossover.
+//! dense transpose, and the pruned walk strictly fewer again than the
+//! inverted file (both asserted). Wall-clock columns show where each
+//! backend actually wins — the dense kernel's contiguous SIMD reads buy
+//! it more per madd, so its crossover sits below the madd crossover.
 //!
 //! Results are written to `BENCH_kernel.json` at the repository root
 //! (one record per corpus; schema documented in that file).
@@ -60,8 +62,8 @@ fn main() {
          {max_iter}-iteration cap, threads={threads}"
     );
     println!(
-        "{:<14} {:>8} {:>16} {:>16} {:>7} {:>10} {:>10}",
-        "corpus", "density", "dense madds", "inverted madds", "ratio", "dense ms", "inv ms"
+        "{:<14} {:>8} {:>16} {:>16} {:>16} {:>10} {:>10} {:>10}",
+        "corpus", "density", "dense madds", "inverted madds", "pruned madds", "dense ms", "inv ms", "pruned ms"
     );
 
     let mut sparse_checked = 0usize;
@@ -92,41 +94,66 @@ fn main() {
             .expect("bench configuration is valid")
             .into_result();
         let inv_ms = sw.ms();
+        let sw = Stopwatch::start();
+        let pruned = base()
+            .kernel(KernelChoice::Pruned)
+            .fit(&ds.matrix)
+            .expect("bench configuration is valid")
+            .into_result();
+        let pruned_ms = sw.ms();
 
         // Kernel exactness contract: identical clustering, bit for bit.
-        assert_eq!(dense.assignments, inv.assignments, "{vocab}: assignments");
-        assert_eq!(
-            dense.objective.to_bits(),
-            inv.objective.to_bits(),
-            "{vocab}: objective"
-        );
-        assert_eq!(
-            dense.stats.total_point_center(),
-            inv.stats.total_point_center(),
-            "{vocab}: similarity counts"
-        );
+        for (other, what) in [(&inv, "inverted"), (&pruned, "pruned")] {
+            assert_eq!(
+                dense.assignments, other.assignments,
+                "{vocab}: {what} assignments"
+            );
+            assert_eq!(
+                dense.objective.to_bits(),
+                other.objective.to_bits(),
+                "{vocab}: {what} objective"
+            );
+            assert_eq!(
+                dense.stats.total_point_center(),
+                other.stats.total_point_center(),
+                "{vocab}: {what} similarity counts"
+            );
+        }
 
         let dm = dense.stats.total_madds();
         let im = inv.stats.total_madds();
+        let pm = pruned.stats.total_madds();
         println!(
-            "{:<14} {:>7.3}% {:>16} {:>16} {:>6.1}x {:>10.1} {:>10.1}",
+            "{:<14} {:>7.3}% {:>16} {:>16} {:>16} {:>10.1} {:>10.1} {:>10.1}",
             ds.name,
             density * 100.0,
             dm,
             im,
-            dm as f64 / im.max(1) as f64,
+            pm,
             dense_ms,
-            inv_ms
+            inv_ms,
+            pruned_ms
         );
         json_rows.push(format!(
             "    {{\"corpus\": \"{}\", \"density\": {:.6}, \"dense_madds\": {dm}, \
-             \"inverted_madds\": {im}, \"dense_ms\": {dense_ms:.2}, \"inverted_ms\": {inv_ms:.2}}}",
-            ds.name, density
+             \"inverted_madds\": {im}, \"pruned_madds\": {pm}, \"dense_ms\": {dense_ms:.2}, \
+             \"inverted_ms\": {inv_ms:.2}, \"pruned_ms\": {pruned_ms:.2}, \
+             \"prune_terms\": {}, \"prune_survivors\": {}}}",
+            ds.name,
+            density,
+            pruned.stats.total_prune_terms(),
+            pruned.stats.total_prune_survivors()
         ));
         if density < 0.05 {
             assert!(
                 im < dm,
                 "{}: inverted file must do strictly fewer madds ({im} vs {dm})",
+                ds.name
+            );
+            assert!(
+                pm < im,
+                "{}: pruned walk must do strictly fewer madds than the \
+                 inverted file ({pm} vs {im})",
                 ds.name
             );
             sparse_checked += 1;
@@ -209,6 +236,7 @@ fn main() {
 
     println!(
         "# acceptance: bit-identical clusterings; inverted file strictly fewer \
-         madds on every <5% density corpus at k={k} — OK"
+         madds than dense, pruned walk strictly fewer than inverted, on every \
+         <5% density corpus at k={k} — OK"
     );
 }

@@ -39,6 +39,12 @@ enum CenterStore {
     /// Inverted-file postings over the center non-zeros — skips every
     /// (point, center) pair sharing no term and avoids the d×k footprint.
     Inverted(InvertedIndex),
+    /// The same postings index, but assignment walks it MaxScore-style
+    /// (descending `|q_c|·maxw[c]` term order with suffix upper bounds)
+    /// and re-scores the surviving centers exactly — see
+    /// `crate::kmeans::pruned`. The full-row `sims_all` path is identical
+    /// to [`CenterStore::Inverted`].
+    Pruned(InvertedIndex),
 }
 
 /// Cluster centers plus the cached unnormalized sums behind them.
@@ -89,6 +95,7 @@ impl Centers {
             Kernel::Dense => CenterStore::Dense(DenseMatrix::zeros(d, k)),
             Kernel::Gather => CenterStore::Gather,
             Kernel::Inverted => CenterStore::Inverted(InvertedIndex::new(d, k)),
+            Kernel::Pruned => CenterStore::Pruned(InvertedIndex::new(d, k)),
         };
         let mut me = Self {
             k,
@@ -127,6 +134,7 @@ impl Centers {
             Kernel::Dense => CenterStore::Dense(DenseMatrix::zeros(d, k)),
             Kernel::Gather => CenterStore::Gather,
             Kernel::Inverted => CenterStore::Inverted(InvertedIndex::new(d, k)),
+            Kernel::Pruned => CenterStore::Pruned(InvertedIndex::new(d, k)),
         };
         let mut me = Self {
             k,
@@ -163,6 +171,7 @@ impl Centers {
             CenterStore::Dense(_) => Kernel::Dense,
             CenterStore::Gather => Kernel::Gather,
             CenterStore::Inverted(_) => Kernel::Inverted,
+            CenterStore::Pruned(_) => Kernel::Pruned,
         }
     }
 
@@ -171,7 +180,7 @@ impl Centers {
     /// can read its [`InvertedIndex::density`]).
     pub fn inverted(&self) -> Option<&InvertedIndex> {
         match &self.store {
-            CenterStore::Inverted(idx) => Some(idx),
+            CenterStore::Inverted(idx) | CenterStore::Pruned(idx) => Some(idx),
             _ => None,
         }
     }
@@ -191,7 +200,7 @@ impl Centers {
                 }
             }
             CenterStore::Gather => {}
-            CenterStore::Inverted(idx) => idx.refresh_center(j, row),
+            CenterStore::Inverted(idx) | CenterStore::Pruned(idx) => idx.refresh_center(j, row),
         }
     }
 
@@ -200,7 +209,7 @@ impl Centers {
     /// from scratch — pure pushes, no per-posting list shifts — which is
     /// bit-identical to k incremental refreshes.
     fn refresh_store_all(&mut self) {
-        if let CenterStore::Inverted(idx) = &mut self.store {
+        if let CenterStore::Inverted(idx) | CenterStore::Pruned(idx) = &mut self.store {
             *idx = InvertedIndex::from_centers(&self.centers);
             return;
         }
@@ -220,7 +229,7 @@ impl Centers {
         match &self.store {
             CenterStore::Dense(t) => kernel::sims_transposed(t, self.k, row, out),
             CenterStore::Gather => kernel::sims_gather(&self.centers, row, out),
-            CenterStore::Inverted(idx) => idx.sims_into(row, out),
+            CenterStore::Inverted(idx) | CenterStore::Pruned(idx) => idx.sims_into(row, out),
         }
     }
 
@@ -391,7 +400,10 @@ impl Centers {
         // everything) a from-scratch rebuild — pure pushes in ascending
         // center order, the same structure the incremental path keeps — is
         // strictly cheaper. Bit-identical either way.
-        let bulk_inverted = matches!(self.store, CenterStore::Inverted(_))
+        let bulk_inverted = matches!(
+            self.store,
+            CenterStore::Inverted(_) | CenterStore::Pruned(_)
+        )
             && 2 * self.dirty.iter().filter(|&&d| d).count() > self.k;
         let mut dots = 0u64;
         for j in 0..self.k {
@@ -430,7 +442,7 @@ impl Centers {
             }
         }
         if bulk_inverted {
-            if let CenterStore::Inverted(idx) = &mut self.store {
+            if let CenterStore::Inverted(idx) | CenterStore::Pruned(idx) = &mut self.store {
                 *idx = InvertedIndex::from_centers(&self.centers);
             }
         }
@@ -608,7 +620,9 @@ impl Centers {
                 }
             }
             CenterStore::Gather => {}
-            CenterStore::Inverted(idx) => idx.check_invariants(&self.centers)?,
+            CenterStore::Inverted(idx) | CenterStore::Pruned(idx) => {
+                idx.check_invariants(&self.centers)?
+            }
         }
         Ok(())
     }
@@ -983,25 +997,36 @@ mod tests {
         let dense = mk(Kernel::Dense);
         let gather = mk(Kernel::Gather);
         let inverted = mk(Kernel::Inverted);
+        let pruned = mk(Kernel::Pruned);
         assert_eq!(dense.kernel(), Kernel::Dense);
         assert_eq!(gather.kernel(), Kernel::Gather);
         assert_eq!(inverted.kernel(), Kernel::Inverted);
+        assert_eq!(pruned.kernel(), Kernel::Pruned);
         assert!(inverted.inverted().is_some());
+        assert!(pruned.inverted().is_some());
         assert!(dense.inverted().is_none());
         let mut sd = vec![0.0f64; 2];
         let mut sg = vec![0.0f64; 2];
         let mut si = vec![0.0f64; 2];
+        let mut sp = vec![0.0f64; 2];
         for i in 0..data.rows() {
             let md = dense.sims_all(data.row(i), &mut sd);
             let mg = gather.sims_all(data.row(i), &mut sg);
             let mi = inverted.sims_all(data.row(i), &mut si);
+            let mp = pruned.sims_all(data.row(i), &mut sp);
             assert_eq!(md, mg, "row {i}: dense/gather madd counts");
             assert!(mi <= md, "row {i}: inverted must not do more madds");
+            assert_eq!(mi, mp, "row {i}: pruned sims_all is the inverted pass");
             for j in 0..2 {
                 assert_eq!(
                     sd[j].to_bits(),
                     si[j].to_bits(),
                     "row {i} center {j}: dense vs inverted"
+                );
+                assert_eq!(
+                    sd[j].to_bits(),
+                    sp[j].to_bits(),
+                    "row {i} center {j}: dense vs pruned"
                 );
                 assert!((sd[j] - sg[j]).abs() < 1e-12, "row {i} center {j}");
             }
@@ -1019,7 +1044,7 @@ mod tests {
             3,
             vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0],
         );
-        for kernel in [Kernel::Dense, Kernel::Inverted] {
+        for kernel in [Kernel::Dense, Kernel::Inverted, Kernel::Pruned] {
             let mut c = Centers::from_initial_for(initial.clone(), kernel);
             c.rebuild(&data, &[0, 0, 1, 2]);
             c.update();

@@ -760,6 +760,7 @@ impl FittedModel {
         let kernel = match meta.kernel.parse::<KernelChoice>() {
             Ok(KernelChoice::Dense) => Kernel::Dense,
             Ok(KernelChoice::Inverted) => Kernel::Inverted,
+            Ok(KernelChoice::Pruned) => Kernel::Pruned,
             _ => Kernel::Gather,
         };
         let result = KMeansResult {

@@ -170,26 +170,23 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bo
                         }
                         continue;
                     }
-                    // Bounds failed: recompute similarities to all other
-                    // centers through the kernel backend (the a-th entry
-                    // is ignored in the reduction).
-                    view.sims_row(i, &mut out.iter, &mut scan);
-                    let mut m1 = f64::MIN;
-                    let mut m2 = f64::MIN;
-                    let mut jm = a;
-                    for (j, &sj) in scan.iter().enumerate() {
-                        if j == a {
-                            continue;
-                        }
-                        if sj > m1 {
-                            m2 = m1;
-                            m1 = sj;
-                            jm = j;
-                        } else if sj > m2 {
-                            m2 = sj;
-                        }
-                    }
-                    out.iter.sims_point_center += (k - 1) as u64;
+                    // Bounds failed: find the best center other than `a`
+                    // through the kernel backend. The exact l(i) = sim(i, a)
+                    // just computed seeds the pruned kernel's traversal
+                    // threshold — a center that cannot beat the current
+                    // assignment cannot cause a reassignment, so the
+                    // postings walk may stop as soon as its suffix bound
+                    // drops below it (m2 may then understate only below
+                    // l(i), which `u = l.max(m2)` masks).
+                    let (jm, m1, m2) = view.best_other(
+                        i,
+                        a,
+                        l[li],
+                        iteration,
+                        &mut out.iter,
+                        &mut out.violations,
+                        &mut scan,
+                    );
                     if m1 > l[li] {
                         // Reassign; the old center becomes the best "other"
                         // unless the runner-up among the others beats it.

@@ -9,12 +9,23 @@
 //! | [`Kernel::Dense`] | d×k f32 transpose | `nnz(row)·k` (contiguous, vectorizes) | dense-ish centers, modest d·k |
 //! | [`Kernel::Gather`] | none | `nnz(row)·k` (k gather dots) | paper-faithful cost model |
 //! | [`Kernel::Inverted`] | postings = nnz(centers) | `Σ_c∈row postings(c)` | sparse centers, huge d·k |
+//! | [`Kernel::Pruned`] | postings + maxw table | `≤ Σ_c∈row postings(c)` walked + survivors rescored | sparse centers **and** many clusters |
 //!
 //! The inverted-file backend ([`crate::sparse::InvertedIndex`]) skips every
 //! (point, center) pair that shares no term — the SIVF idea (Aoyama &
 //! Saito, arXiv:2103.16141) — and avoids materializing the d×k transpose
 //! altogether, which for a 100k-term vocabulary at k = 1000 is a 400 MB
 //! allocation the Dense backend cannot do without.
+//!
+//! The **pruned backend** (the `pruned` submodule of [`super`]) walks the
+//! same postings in
+//! MaxScore order (descending `|q_c|·maxw[c]`) with suffix upper bounds,
+//! stops once the candidate set is small, and re-scores only the
+//! survivors exactly — composing the inverted file with per-point
+//! similarity bounds the way Aoyama & Saito (arXiv:2411.11300) accelerate
+//! the training assignment itself. The bounds only ever decide *which*
+//! centers get an exact score, never what the score is, so results stay
+//! bit-identical to Dense/Inverted while the madds drop further.
 //!
 //! **Exactness.** The Dense and Inverted backends accumulate each center's
 //! `f64` sum in ascending dimension order of the row's non-zeros, so their
@@ -57,6 +68,10 @@ pub enum KernelChoice {
     Gather,
     /// The inverted-file (CSC postings) kernel over sparse centers.
     Inverted,
+    /// The bound-pruned inverted-file kernel: a MaxScore-ordered postings
+    /// walk with suffix upper bounds that exactly re-scores only the
+    /// surviving candidates. Bit-identical to Dense/Inverted.
+    Pruned,
 }
 
 /// A resolved similarity backend — what [`KernelChoice`] becomes once the
@@ -71,6 +86,9 @@ pub enum Kernel {
     Gather,
     /// Inverted-file postings walk.
     Inverted,
+    /// Bound-pruned inverted-file walk (MaxScore order + suffix bounds,
+    /// exact rescore of survivors).
+    Pruned,
 }
 
 /// Auto picks the inverted file below this estimated center density: the
@@ -84,6 +102,14 @@ const AUTO_DENSITY_CUTOFF: f64 = 0.15;
 /// not the inverted file — a postings index over *dense* centers stores
 /// the same d·k entries at triple the bytes plus per-refresh list shifts.
 const AUTO_FOOTPRINT_BYTES: usize = 256 << 20;
+
+/// Below the density cutoff, Auto upgrades the inverted file to the
+/// bound-pruned walk once there are at least this many clusters: the
+/// MaxScore suffix bounds prune *centers*, so their bookkeeping (term
+/// sort, checkpoint counts, survivor rescore) only amortizes when there
+/// are enough centers to prune. At tiny k the plain postings walk is
+/// already near-optimal.
+const AUTO_PRUNED_MIN_K: usize = 8;
 
 /// The problem-shape statistics the Auto heuristic reads. A pure function
 /// of the inputs — never of runtime state — so the resolved kernel is
@@ -157,7 +183,9 @@ impl DataShape {
 impl KernelChoice {
     /// Resolve the configured choice against a problem shape. Explicit
     /// choices pass through. `Auto` takes the inverted file when the
-    /// estimated center density falls under [`AUTO_DENSITY_CUTOFF`]; at
+    /// estimated center density falls under [`AUTO_DENSITY_CUTOFF`] —
+    /// upgraded to the bound-pruned walk at [`AUTO_PRUNED_MIN_K`] or more
+    /// clusters, where per-center pruning has something to prune; at
     /// higher density it takes the dense transpose, unless that footprint
     /// exceeds [`AUTO_FOOTPRINT_BYTES`] — for *dense* centers the postings
     /// index would be even larger than the transpose it refused, so the
@@ -167,9 +195,14 @@ impl KernelChoice {
             KernelChoice::Dense => Kernel::Dense,
             KernelChoice::Gather => Kernel::Gather,
             KernelChoice::Inverted => Kernel::Inverted,
+            KernelChoice::Pruned => Kernel::Pruned,
             KernelChoice::Auto => {
                 if shape.est_center_density() <= AUTO_DENSITY_CUTOFF {
-                    Kernel::Inverted
+                    if shape.k >= AUTO_PRUNED_MIN_K {
+                        Kernel::Pruned
+                    } else {
+                        Kernel::Inverted
+                    }
                 } else if shape.transpose_bytes() > AUTO_FOOTPRINT_BYTES {
                     Kernel::Gather
                 } else {
@@ -186,6 +219,7 @@ impl KernelChoice {
             KernelChoice::Dense => "dense",
             KernelChoice::Gather => "gather",
             KernelChoice::Inverted => "inverted",
+            KernelChoice::Pruned => "pruned",
         }
     }
 }
@@ -197,6 +231,7 @@ impl Kernel {
             Kernel::Dense => "dense",
             Kernel::Gather => "gather",
             Kernel::Inverted => "inverted",
+            Kernel::Pruned => "pruned",
         }
     }
 }
@@ -224,6 +259,7 @@ impl std::str::FromStr for KernelChoice {
             "dense" | "transpose" => Ok(KernelChoice::Dense),
             "gather" | "dots" => Ok(KernelChoice::Gather),
             "inverted" | "ivf" | "csc" => Ok(KernelChoice::Inverted),
+            "pruned" | "maxscore" => Ok(KernelChoice::Pruned),
             other => Err(format!("unknown kernel: {other}")),
         }
     }
@@ -284,19 +320,25 @@ mod tests {
             KernelChoice::Inverted
         );
         assert_eq!("IVF".parse::<KernelChoice>().unwrap(), KernelChoice::Inverted);
+        assert_eq!("pruned".parse::<KernelChoice>().unwrap(), KernelChoice::Pruned);
+        assert_eq!(
+            "maxscore".parse::<KernelChoice>().unwrap(),
+            KernelChoice::Pruned
+        );
         assert!("nope".parse::<KernelChoice>().is_err());
         for c in [
             KernelChoice::Auto,
             KernelChoice::Dense,
             KernelChoice::Gather,
             KernelChoice::Inverted,
+            KernelChoice::Pruned,
         ] {
             assert!(!c.name().is_empty());
             // Display ↔ FromStr round trip, exhaustively.
             assert_eq!(c.to_string(), c.name());
             assert_eq!(c.to_string().parse::<KernelChoice>().unwrap(), c);
         }
-        for k in [Kernel::Dense, Kernel::Gather, Kernel::Inverted] {
+        for k in [Kernel::Dense, Kernel::Gather, Kernel::Inverted, Kernel::Pruned] {
             assert_eq!(k.to_string(), k.name());
         }
         assert_eq!(KernelChoice::default(), KernelChoice::Auto);
@@ -308,6 +350,7 @@ mod tests {
         assert_eq!(KernelChoice::Dense.resolve(&shape), Kernel::Dense);
         assert_eq!(KernelChoice::Gather.resolve(&shape), Kernel::Gather);
         assert_eq!(KernelChoice::Inverted.resolve(&shape), Kernel::Inverted);
+        assert_eq!(KernelChoice::Pruned.resolve(&shape), Kernel::Pruned);
     }
 
     #[test]
@@ -320,8 +363,9 @@ mod tests {
     }
 
     #[test]
-    fn auto_prefers_inverted_on_sparse_and_gather_on_oversized_problems() {
-        // 100k-term vocabulary: per-cluster mass covers a sliver of it.
+    fn auto_prefers_pruned_on_sparse_and_gather_on_oversized_problems() {
+        // 100k-term vocabulary: per-cluster mass covers a sliver of it,
+        // and 256 clusters give the MaxScore bounds plenty to prune.
         let sparse = DataShape {
             dims: 100_000,
             nnz: 3_000_000,
@@ -329,7 +373,15 @@ mod tests {
             truncate: None,
         };
         assert!(sparse.est_center_density() < AUTO_DENSITY_CUTOFF);
-        assert_eq!(KernelChoice::Auto.resolve(&sparse), Kernel::Inverted);
+        assert_eq!(KernelChoice::Auto.resolve(&sparse), Kernel::Pruned);
+        // At tiny k the plain postings walk is already near-optimal: the
+        // same sparse shape with few clusters keeps the inverted file.
+        let sparse_small_k = DataShape { k: AUTO_PRUNED_MIN_K - 1, ..sparse };
+        assert!(sparse_small_k.est_center_density() < AUTO_DENSITY_CUTOFF);
+        assert_eq!(
+            KernelChoice::Auto.resolve(&sparse_small_k),
+            Kernel::Inverted
+        );
         // Truncated centers cap the density regardless of the data.
         let truncated = DataShape {
             dims: 20_000,
@@ -338,7 +390,7 @@ mod tests {
             truncate: Some(128),
         };
         assert!(truncated.est_center_density() <= 128.0 / 20_000.0 + 1e-12);
-        assert_eq!(KernelChoice::Auto.resolve(&truncated), Kernel::Inverted);
+        assert_eq!(KernelChoice::Auto.resolve(&truncated), Kernel::Pruned);
         // Footprint guard at *high* density: the transpose is too large to
         // materialize, and a postings index over dense centers would be
         // larger still — Auto falls back to the zero-memory gather path.
@@ -351,11 +403,11 @@ mod tests {
         assert!(huge.est_center_density() > AUTO_DENSITY_CUTOFF);
         assert!(huge.transpose_bytes() > AUTO_FOOTPRINT_BYTES);
         assert_eq!(KernelChoice::Auto.resolve(&huge), Kernel::Gather);
-        // A huge-but-sparse problem still gets the inverted file: the
+        // A huge-but-sparse problem still gets the postings index: the
         // density rule fires before the footprint fallback.
         let huge_sparse = DataShape { nnz: 5_000_000, ..huge };
         assert!(huge_sparse.est_center_density() <= AUTO_DENSITY_CUTOFF);
-        assert_eq!(KernelChoice::Auto.resolve(&huge_sparse), Kernel::Inverted);
+        assert_eq!(KernelChoice::Auto.resolve(&huge_sparse), Kernel::Pruned);
     }
 
     #[test]

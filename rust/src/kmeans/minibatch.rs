@@ -231,20 +231,28 @@ pub(crate) fn fit_minibatch(
                         works.push((r, a));
                     }
                 }
+                let iteration = stats.iters.len();
                 pool.run(works, |_, (range, asg)| {
                     let mut it = IterStats::default();
+                    let mut viol: Vec<AuditViolation> = Vec::new();
                     let mut scratch = vec![0.0f64; k];
                     let mut view = SimView::new(src, centers, k);
                     for (li, pos) in range.enumerate() {
-                        let (bj, _, _) =
-                            view.similarities_full(batch_ref[pos], &mut it, &mut scratch);
+                        let (bj, _, _) = view.assign_top2(
+                            batch_ref[pos],
+                            iteration,
+                            &mut it,
+                            &mut viol,
+                            &mut scratch,
+                        );
                         asg[li] = bj as u32;
                     }
-                    it
+                    (it, viol)
                 })
             };
-            for o in &outs {
-                iter.absorb(o);
+            for (o, v) in outs {
+                iter.absorb(&o);
+                violations.extend(v);
             }
             // Sequential decayed-rate fold, in batch order, then a partial
             // center update touching only the folded centers.
@@ -309,25 +317,29 @@ pub(crate) fn fit_minibatch(
                     works.push((r, a));
                 }
             }
+            let iteration = stats.iters.len();
             pool.run(works, |_, (range, asg)| {
                 let mut it = IterStats::default();
+                let mut viol: Vec<AuditViolation> = Vec::new();
                 let mut scratch = vec![0.0f64; k];
                 let mut shard_obj = 0.0f64;
                 let mut view = SimView::new(src, centers, k);
                 for (li, i) in range.enumerate() {
-                    let (bj, best, _) = view.similarities_full(i, &mut it, &mut scratch);
+                    let (bj, best, _) =
+                        view.assign_top2(i, iteration, &mut it, &mut viol, &mut scratch);
                     if asg[li] != bj as u32 {
                         asg[li] = bj as u32;
                         it.reassignments += 1;
                     }
                     shard_obj += 1.0 - best;
                 }
-                (it, shard_obj)
+                (it, shard_obj, viol)
             })
         };
-        for (it, shard_obj) in &outs {
-            iter.absorb(it);
+        for (it, shard_obj, v) in outs {
+            iter.absorb(&it);
             obj += shard_obj;
+            violations.extend(v);
         }
         iter.wall_ms = sw.ms();
         stats.iters.push(iter);

@@ -81,12 +81,18 @@
 //! non-zeros, [`crate::sparse::InvertedIndex`]) that skips every
 //! (point, center) pair sharing no term and avoids the d×k footprint
 //! entirely — the right choice for 100k+-term vocabularies and truncated
-//! sparse centroids. [`KMeansConfig::kernel`] selects
-//! ([`KernelChoice::Auto`] resolves from the problem shape); the Dense and
-//! Inverted backends accumulate identically (ascending dimension order)
-//! and are **bit-identical**, extending the exactness contract across
-//! kernels. Derived structures are refreshed per update barrier for dirty
-//! centers only — clean centers provably did not move.
+//! sparse centroids. The **pruned** backend (the `pruned` submodule) keeps
+//! the same postings index but walks it MaxScore-style — terms in
+//! descending `|q_c|·maxw[c]` order with suffix upper bounds, seeded from
+//! the caller's Elkan/Hamerly cosine lower bound where one exists — and
+//! re-scores the few surviving centers with the exact gather dot, so the
+//! all-centers pass itself is pruned while results stay bit-identical.
+//! [`KMeansConfig::kernel`] selects
+//! ([`KernelChoice::Auto`] resolves from the problem shape); the Dense,
+//! Inverted, and Pruned backends accumulate identically (ascending
+//! dimension order) and are **bit-identical**, extending the exactness
+//! contract across kernels. Derived structures are refreshed per update
+//! barrier for dirty centers only — clean centers provably did not move.
 //!
 //! # Out-of-core data
 //!
@@ -133,6 +139,7 @@ pub mod stats;
 mod elkan;
 mod exponion;
 mod hamerly;
+mod pruned;
 mod simplified_elkan;
 mod simplified_hamerly;
 mod standard;
@@ -658,12 +665,16 @@ pub(crate) struct SimView<'a> {
     rows: RowCursor<'a>,
     pub centers: &'a Centers,
     pub k: usize,
+    /// Scratch for the bound-pruned kernel, allocated lazily on first use
+    /// and reused across every point this shard processes — the pruned hot
+    /// loop performs no per-point allocations.
+    prune: Option<pruned::PruneScratch>,
 }
 
 impl<'a> SimView<'a> {
     /// Open a view over `src` against the frozen `centers`.
     pub fn new(src: RowSource<'a>, centers: &'a Centers, k: usize) -> Self {
-        Self { rows: src.cursor(), centers, k }
+        Self { rows: src.cursor(), centers, k, prune: None }
     }
 
     /// Borrow row `i` of the data backend.
@@ -708,6 +719,122 @@ impl<'a> SimView<'a> {
         iter.sims_point_center += 1;
         iter.madds_point_center += row.nnz() as u64;
         row.dot_dense(centers.center(j))
+    }
+
+    /// Kernel-dispatched full assignment of point `i`: `(argmax, best,
+    /// second_best)`, bit-identical to [`SimView::similarities_full`] on
+    /// every backend and charged identically (`k` sims). Under
+    /// [`Kernel::Pruned`] the all-centers scan is replaced by the
+    /// MaxScore-style postings walk of [`pruned::top2_pruned`]; `scratch`
+    /// then holds *partial* scores, not similarities — callers needing the
+    /// full similarity row must use `similarities_full` instead. Each
+    /// pruned decision is certified through [`audit_set_prune`] when the
+    /// `audit` feature is on.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub fn assign_top2(
+        &mut self,
+        i: usize,
+        iteration: usize,
+        iter: &mut IterStats,
+        violations: &mut Vec<AuditViolation>,
+        scratch: &mut [f64],
+    ) -> (usize, f64, f64) {
+        if self.centers.kernel() != Kernel::Pruned {
+            return self.similarities_full(i, iter, scratch);
+        }
+        let centers = self.centers;
+        let idx = centers.inverted().expect("pruned kernel keeps a postings index");
+        let ps = self.prune.get_or_insert_with(pruned::PruneScratch::default);
+        let row = self.rows.row(i);
+        let (bj, best, second) =
+            pruned::top2_pruned(idx, centers.centers(), row, scratch, ps, iter);
+        iter.sims_point_center += self.k as u64;
+        if crate::audit::AUDIT_ENABLED {
+            let (members, theta) = {
+                let ps = self.prune.as_ref().expect("just populated");
+                (ps.pruned_members(self.k), ps.theta())
+            };
+            audit_set_prune(
+                self,
+                violations,
+                "pruned-kernel",
+                iteration,
+                i,
+                bj,
+                members,
+                Some(theta),
+                Some(best),
+            );
+        }
+        (bj, best, second)
+    }
+
+    /// Kernel-dispatched "best center other than `a`" for the Hamerly
+    /// rescan: `(argmax_other, m1, m2)` over `j ≠ a`, charged `k − 1` sims
+    /// on every backend. `l` must be the caller's exact `sim(i, a)` (the
+    /// tightened cosine lower bound); under [`Kernel::Pruned`] it seeds
+    /// the traversal threshold so already-tight points stop after a few
+    /// terms. `m1`/`jm` are always exact; `m2` may understate only below
+    /// `l`, which the caller's `u = l.max(m2)` update masks — trajectories
+    /// stay bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub fn best_other(
+        &mut self,
+        i: usize,
+        a: usize,
+        l: f64,
+        iteration: usize,
+        iter: &mut IterStats,
+        violations: &mut Vec<AuditViolation>,
+        scratch: &mut [f64],
+    ) -> (usize, f64, f64) {
+        if self.centers.kernel() != Kernel::Pruned {
+            self.sims_row(i, iter, scratch);
+            iter.sims_point_center += (self.k - 1) as u64;
+            let mut m1 = f64::MIN;
+            let mut m2 = f64::MIN;
+            let mut jm = a;
+            for (j, &sj) in scratch.iter().enumerate() {
+                if j == a {
+                    continue;
+                }
+                if sj > m1 {
+                    m2 = m1;
+                    m1 = sj;
+                    jm = j;
+                } else if sj > m2 {
+                    m2 = sj;
+                }
+            }
+            return (jm, m1, m2);
+        }
+        let centers = self.centers;
+        let idx = centers.inverted().expect("pruned kernel keeps a postings index");
+        let ps = self.prune.get_or_insert_with(pruned::PruneScratch::default);
+        let row = self.rows.row(i);
+        let (jm, m1, m2) =
+            pruned::best_other_pruned(idx, centers.centers(), row, a, l, scratch, ps, iter);
+        iter.sims_point_center += (self.k - 1) as u64;
+        if crate::audit::AUDIT_ENABLED {
+            let (members, theta) = {
+                let ps = self.prune.as_ref().expect("just populated");
+                (ps.pruned_members(self.k), ps.theta())
+            };
+            audit_set_prune(
+                self,
+                violations,
+                "pruned-kernel",
+                iteration,
+                i,
+                a,
+                members,
+                Some(theta),
+                Some(l),
+            );
+        }
+        (jm, m1, m2)
     }
 }
 
@@ -1046,6 +1173,7 @@ impl<'a, 'o> Ctx<'a, 'o> {
             }
             let outs = self.pool.run(works, |_, (range, assign, mut state)| {
                 let mut it = IterStats::default();
+                let mut viol: Vec<AuditViolation> = Vec::new();
                 let mut sims_row = vec![0.0f64; k];
                 if let Some(pre) = pre {
                     // §7 synergy: bounds come from the seeding pass for
@@ -1085,16 +1213,30 @@ impl<'a, 'o> Ctx<'a, 'o> {
                     }
                 } else {
                     let mut view = SimView::new(src, centers, k);
-                    for (li, i) in range.enumerate() {
-                        let (bj, b, s) = view.similarities_full(i, &mut it, &mut sims_row);
-                        assign[li] = bj as u32;
-                        on_point(&mut state, li, bj, b, s, &sims_row);
+                    if want_sims_row {
+                        // Bound-seeding engines consume the full similarity
+                        // row, so the pruned kernel cannot skip any center
+                        // here; the exhaustive backends all land in
+                        // `similarities_full`.
+                        for (li, i) in range.enumerate() {
+                            let (bj, b, s) = view.similarities_full(i, &mut it, &mut sims_row);
+                            assign[li] = bj as u32;
+                            on_point(&mut state, li, bj, b, s, &sims_row);
+                        }
+                    } else {
+                        for (li, i) in range.enumerate() {
+                            let (bj, b, s) =
+                                view.assign_top2(i, 0, &mut it, &mut viol, &mut sims_row);
+                            assign[li] = bj as u32;
+                            on_point(&mut state, li, bj, b, s, &sims_row);
+                        }
                     }
                 }
-                it
+                (it, viol)
             });
-            for o in &outs {
-                iter.absorb(o);
+            for (o, v) in outs {
+                iter.absorb(&o);
+                self.violations.extend(v);
             }
         }
         iter.reassignments = self.src.rows() as u64;

@@ -1,0 +1,397 @@
+//! MaxScore-style bound-pruned assignment traversal for [`Kernel::Pruned`].
+//!
+//! The dense and inverted kernels score every center for every surviving
+//! point. This module instead walks the [`InvertedIndex`] postings in
+//! descending `|q_c| · maxw[c]` term order (the classic MaxScore ordering
+//! from text retrieval, as applied to k-means assignment by Aoyama & Saito,
+//! arXiv 2411.11300): after walking a prefix of the query's terms, every
+//! center's partial dot plus the *suffix bound* — the sum of the unwalked
+//! terms' per-dimension contribution bounds — is a valid upper bound on its
+//! exact similarity. Centers whose upper bound cannot reach the running
+//! threshold are pruned; the few survivors are re-scored with the exact
+//! ascending-dimension gather dot so the returned similarities are
+//! **bit-identical** to what the dense or inverted kernel would have
+//! produced.
+//!
+//! Two traversal modes serve the engines:
+//!
+//! * **top-2** ([`top2_pruned`]) — the full-assignment path used by the
+//!   standard loop, mini-batch, and bound-free initial assignment. The
+//!   threshold is the second-largest partial-score lower bound, so the
+//!   exact top-2 (including all ties) always survive and the returned
+//!   `(argmin-index, best, second)` triple matches the exhaustive scan.
+//! * **best-other** ([`best_other_pruned`]) — Hamerly's rescan, which
+//!   needs the best center *other than* the current assignment `a`. The
+//!   threshold is additionally seeded with the caller's exact `sim(i, a)`
+//!   (the paper's cosine lower bound, already tightened before the rescan):
+//!   a center that cannot beat the current assignment can never cause a
+//!   reassignment, so the walk may stop as soon as the suffix bound drops
+//!   below that seed. The returned `m2` may then understate the true
+//!   second-best, but only below the seed — exactly the regime where
+//!   Hamerly's update `u = l.max(m2)` masks it, so trajectories are
+//!   unchanged.
+//!
+//! The walk stops early at geometric checkpoints (t = 1, 2, 4, 8, …) once
+//! the candidate count is at most two or finishing the survivors by exact
+//! gather is provably cheaper than draining the remaining postings, which
+//! keeps the total multiply-adds at or below the plain inverted kernel's.
+//! All floating-point cuts are widened by `2 ·`[`BOUND_MARGIN`] on the
+//! pessimistic side, mirroring the serve-side MaxScore discipline, and the
+//! final threshold is retained so the audit layer
+//! (`audit_set_prune`) can certify every pruned center against an
+//! exhaustive throwaway pass.
+//!
+//! [`Kernel::Pruned`]: super::kernel::Kernel::Pruned
+//! [`InvertedIndex`]: crate::sparse::InvertedIndex
+//! [`BOUND_MARGIN`]: crate::serve::engine::BOUND_MARGIN
+
+use super::stats::IterStats;
+use crate::serve::engine::BOUND_MARGIN;
+use crate::sparse::{DenseMatrix, InvertedIndex, RowView};
+
+/// Per-shard scratch for the pruned traversal, reused across every point a
+/// Pool worker processes so the hot loop performs no allocations.
+#[derive(Default)]
+pub(crate) struct PruneScratch {
+    /// Query terms as `(dim, value, bound)` where `bound = |value|·maxw[dim]`,
+    /// sorted by descending bound (ties: ascending dim). Terms whose bound is
+    /// exactly zero are dropped — no center carries them.
+    terms: Vec<(u32, f32, f64)>,
+    /// `suffix[t]` = sum of `terms[t..]` bounds: the maximum similarity mass
+    /// any center can still gain from the unwalked terms.
+    suffix: Vec<f64>,
+    /// `rem[t]` = total postings length of `terms[t..]`: what a full
+    /// inverted-kernel drain of the remaining terms would cost in madds.
+    rem: Vec<u64>,
+    /// Centers that survived the final cut, ascending.
+    survivors: Vec<u32>,
+    /// Final similarity-space threshold: every pruned center's exact
+    /// similarity is provably `< theta` (up to the widened margin).
+    theta: f64,
+}
+
+impl PruneScratch {
+    /// The threshold the last traversal pruned against, for audit.
+    pub(crate) fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    /// Complement of the survivor set over `0..k`, ascending, for audit.
+    pub(crate) fn pruned_members(&self, k: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(k - self.survivors.len());
+        let mut s = 0;
+        for j in 0..k {
+            if s < self.survivors.len() && self.survivors[s] as usize == j {
+                s += 1;
+            } else {
+                out.push(j);
+            }
+        }
+        out
+    }
+}
+
+/// Similarity-space threshold after walking `t` terms: the best lower bound
+/// we hold on the score the traversal must preserve exactly. With no
+/// `exclude`, that is the second-largest partial minus the suffix (the top-2
+/// must both survive); with `exclude = Some(a)` it is the largest partial
+/// among `j != a`, additionally capped by the caller's `seed` bound.
+fn theta_at(partial: &[f64], exclude: Option<usize>, seed: f64, suffix: f64) -> f64 {
+    let mut mx1 = f64::MIN;
+    let mut mx2 = f64::MIN;
+    for (j, &p) in partial.iter().enumerate() {
+        if Some(j) == exclude {
+            continue;
+        }
+        if p > mx1 {
+            mx2 = mx1;
+            mx1 = p;
+        } else if p > mx2 {
+            mx2 = p;
+        }
+    }
+    let reference = if exclude.is_some() { mx1 } else { mx2 };
+    seed.min(reference - suffix)
+}
+
+/// Walk postings until the stop rule fires, then collect into
+/// `ps.survivors` every center whose upper bound clears the threshold.
+/// `partial` (len k) holds each center's exact partial dot on return.
+fn select_survivors(
+    idx: &InvertedIndex,
+    row: RowView<'_>,
+    partial: &mut [f64],
+    ps: &mut PruneScratch,
+    iter: &mut IterStats,
+    exclude: Option<usize>,
+    seed: f64,
+) {
+    partial.fill(0.0);
+    let maxw = idx.max_abs_weights();
+    ps.terms.clear();
+    for (&c, &v) in row.indices.iter().zip(row.values.iter()) {
+        let b = (v.abs() as f64) * (maxw[c as usize] as f64);
+        if b > 0.0 {
+            ps.terms.push((c, v, b));
+        }
+    }
+    ps.terms
+        .sort_unstable_by(|x, y| y.2.partial_cmp(&x.2).expect("finite bounds").then(x.0.cmp(&y.0)));
+    let n = ps.terms.len();
+    ps.suffix.clear();
+    ps.suffix.resize(n + 1, 0.0);
+    ps.rem.clear();
+    ps.rem.resize(n + 1, 0);
+    for t in (0..n).rev() {
+        ps.suffix[t] = ps.suffix[t + 1] + ps.terms[t].2;
+        ps.rem[t] = ps.rem[t + 1] + idx.dim_len(ps.terms[t].0 as usize) as u64;
+    }
+
+    let nnz = row.nnz() as u64;
+    let mut t = 0;
+    let mut next_check = 1;
+    while t < n {
+        if t == next_check {
+            let cut = theta_at(partial, exclude, seed, ps.suffix[t]) - ps.suffix[t]
+                - 2.0 * BOUND_MARGIN;
+            let count = partial
+                .iter()
+                .enumerate()
+                .filter(|&(j, &p)| Some(j) != exclude && p >= cut)
+                .count();
+            // Stop once only the provably-exact survivors remain, or once
+            // rescoring every candidate by exact gather is no more expensive
+            // than draining the remaining postings lists.
+            if count <= 2 || count as u64 * nnz <= ps.rem[t] {
+                break;
+            }
+            next_check *= 2;
+        }
+        let (c, v, _) = ps.terms[t];
+        iter.madds_point_center += idx.accumulate_dim(c as usize, v as f64, partial);
+        t += 1;
+    }
+    iter.prune_terms += t as u64;
+
+    let theta = theta_at(partial, exclude, seed, ps.suffix[t]);
+    let cut = theta - ps.suffix[t] - 2.0 * BOUND_MARGIN;
+    ps.theta = theta;
+    ps.survivors.clear();
+    for (j, &p) in partial.iter().enumerate() {
+        if Some(j) != exclude && p >= cut {
+            ps.survivors.push(j as u32);
+        }
+    }
+    iter.prune_survivors += ps.survivors.len() as u64;
+}
+
+/// Exact gather dot between a sparse row and a dense center row, skipping
+/// zero center coordinates. Bit-identical to the inverted kernel's
+/// accumulation for this center: both add the same `f64` products in the
+/// same ascending-dimension order, and the skipped products are exact
+/// `+0.0` no-ops (an `f32×f32` product in `f64` cannot round to zero unless
+/// an operand is zero).
+fn rescore(row: RowView<'_>, center: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for (&c, &v) in row.indices.iter().zip(row.values.iter()) {
+        let cv = center[c as usize];
+        if cv != 0.0 {
+            acc += v as f64 * cv as f64;
+        }
+    }
+    acc
+}
+
+/// Pruned equivalent of scoring all k centers and reducing with `top2`:
+/// returns `(best_j, best, second)` bit-identical to the exhaustive scan,
+/// with `second` clamped to `-1.0` when fewer than two centers exist.
+pub(crate) fn top2_pruned(
+    idx: &InvertedIndex,
+    centers: &DenseMatrix,
+    row: RowView<'_>,
+    partial: &mut [f64],
+    ps: &mut PruneScratch,
+    iter: &mut IterStats,
+) -> (usize, f64, f64) {
+    select_survivors(idx, row, partial, ps, iter, None, f64::INFINITY);
+    iter.madds_point_center += row.nnz() as u64 * ps.survivors.len() as u64;
+    let mut best = f64::MIN;
+    let mut second = f64::MIN;
+    let mut best_j = 0;
+    for &j in &ps.survivors {
+        let s = rescore(row, centers.row(j as usize));
+        if s > best {
+            second = best;
+            best = s;
+            best_j = j as usize;
+        } else if s > second {
+            second = s;
+        }
+    }
+    (best_j, best, second.max(-1.0))
+}
+
+/// Pruned equivalent of Hamerly's rescan reduction: the best and
+/// second-best similarity among centers `j != a`, seeded with the exact
+/// `l = sim(i, a)` so the walk can stop once nothing can beat the current
+/// assignment. `m1` (and its argmax `jm`, first-wins on ties) is always
+/// exact; `m2` may understate only below `l`, which the caller's
+/// `u = l.max(m2)` masks.
+pub(crate) fn best_other_pruned(
+    idx: &InvertedIndex,
+    centers: &DenseMatrix,
+    row: RowView<'_>,
+    a: usize,
+    l: f64,
+    partial: &mut [f64],
+    ps: &mut PruneScratch,
+    iter: &mut IterStats,
+) -> (usize, f64, f64) {
+    select_survivors(idx, row, partial, ps, iter, Some(a), l);
+    iter.madds_point_center += row.nnz() as u64 * ps.survivors.len() as u64;
+    let mut m1 = f64::MIN;
+    let mut m2 = f64::MIN;
+    let mut jm = a;
+    for &j in &ps.survivors {
+        let s = rescore(row, centers.row(j as usize));
+        if s > m1 {
+            m2 = m1;
+            m1 = s;
+            jm = j as usize;
+        } else if s > m2 {
+            m2 = s;
+        }
+    }
+    (jm, m1, m2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CsrMatrix;
+
+    fn gen_problem(seed: u64, rows: usize, d: usize, k: usize, density: f64) -> (CsrMatrix, DenseMatrix) {
+        let mut state = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for _ in 0..rows {
+            let mut nnz = 0;
+            for c in 0..d {
+                if (next() % 10_000) as f64 / 10_000.0 < density {
+                    indices.push(c as u32);
+                    values.push(((next() % 2000) as f32 / 1000.0) - 1.0);
+                    nnz += 1;
+                }
+            }
+            if nnz == 0 {
+                indices.push((next() % d as u64) as u32);
+                values.push(1.0);
+            }
+            indptr.push(indices.len());
+        }
+        let m = CsrMatrix::from_parts(rows, d, indptr, indices, values);
+        let mut cm = DenseMatrix::zeros(k, d);
+        for j in 0..k {
+            for c in 0..d {
+                if (next() % 10_000) as f64 / 10_000.0 < density * 2.0 {
+                    cm.row_mut(j)[c] = ((next() % 2000) as f32 / 1000.0) - 1.0;
+                }
+            }
+        }
+        (m, cm)
+    }
+
+    fn exhaustive(row: RowView<'_>, cm: &DenseMatrix, k: usize) -> Vec<f64> {
+        (0..k).map(|j| rescore(row, cm.row(j))).collect()
+    }
+
+    #[test]
+    fn top2_matches_exhaustive_scan_bit_for_bit() {
+        for seed in 0..6u64 {
+            for &(d, k, density) in &[(64usize, 3usize, 0.3f64), (256, 16, 0.05), (512, 40, 0.01)] {
+                let (m, cm) = gen_problem(seed, 24, d, k, density);
+                let idx = InvertedIndex::from_centers(&cm);
+                let mut ps = PruneScratch::default();
+                let mut partial = vec![0.0f64; k];
+                let mut iter = IterStats::default();
+                for i in 0..m.rows() {
+                    let row = m.row(i);
+                    let sims = exhaustive(row, &cm, k);
+                    let (ebj, eb, es) = crate::kmeans::top2(&sims);
+                    let (bj, b, s) =
+                        top2_pruned(&idx, &cm, row, &mut partial, &mut ps, &mut iter);
+                    assert_eq!((bj, b.to_bits(), s.to_bits()), (ebj, eb.to_bits(), es.to_bits()));
+                    // Every pruned center must be provably below theta.
+                    for &pj in &ps.pruned_members(k) {
+                        assert!(
+                            sims[pj] < ps.theta() + 2.0 * BOUND_MARGIN,
+                            "pruned center {pj} beats theta"
+                        );
+                    }
+                }
+                assert!(iter.prune_survivors > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn best_other_keeps_m1_exact_and_m2_masked() {
+        for seed in 0..6u64 {
+            let (m, cm) = gen_problem(seed, 24, 256, 12, 0.05);
+            let k = 12;
+            let idx = InvertedIndex::from_centers(&cm);
+            let mut ps = PruneScratch::default();
+            let mut partial = vec![0.0f64; k];
+            let mut iter = IterStats::default();
+            for i in 0..m.rows() {
+                let row = m.row(i);
+                let sims = exhaustive(row, &cm, k);
+                for a in 0..k {
+                    let l = sims[a];
+                    let (mut em1, mut em2, mut ejm) = (f64::MIN, f64::MIN, a);
+                    for (j, &sj) in sims.iter().enumerate() {
+                        if j == a {
+                            continue;
+                        }
+                        if sj > em1 {
+                            em2 = em1;
+                            em1 = sj;
+                            ejm = j;
+                        } else if sj > em2 {
+                            em2 = sj;
+                        }
+                    }
+                    let (jm, m1, m2) =
+                        best_other_pruned(&idx, &cm, row, a, l, &mut partial, &mut ps, &mut iter);
+                    // m1/jm drive reassignment and must be exact.
+                    assert_eq!((jm, m1.to_bits()), (ejm, em1.to_bits()));
+                    // m2 only feeds `u = l.max(m2)`: either exact, or hidden
+                    // below the seed.
+                    assert_eq!(l.max(m2).to_bits(), l.max(em2).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_k_and_empty_rows_take_the_generic_path() {
+        let (m, cm) = gen_problem(9, 8, 32, 1, 0.2);
+        let idx = InvertedIndex::from_centers(&cm);
+        let mut ps = PruneScratch::default();
+        let mut partial = vec![0.0f64; 1];
+        let mut iter = IterStats::default();
+        let (bj, _b, s) = top2_pruned(&idx, &cm, m.row(0), &mut partial, &mut ps, &mut iter);
+        assert_eq!(bj, 0);
+        assert_eq!(s, -1.0);
+        let (jm, m1, m2) =
+            best_other_pruned(&idx, &cm, m.row(0), 0, 0.5, &mut partial, &mut ps, &mut iter);
+        assert_eq!((jm, m1, m2), (0, f64::MIN, f64::MIN));
+    }
+}

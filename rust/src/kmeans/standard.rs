@@ -7,7 +7,7 @@
 //! inverted file), sharded across the worker pool (see the module docs of
 //! [`crate::kmeans`] for the determinism contract).
 
-use super::{audit_sim, Ctx, IterStats, KMeansConfig, Move, ShardOut, SimView};
+use super::{audit_sim, Ctx, IterStats, KMeansConfig, Kernel, Move, ShardOut, SimView};
 use crate::audit::{AuditViolation, AUDIT_ENABLED, AUDIT_MARGIN};
 use crate::runtime::parallel::split_mut;
 use crate::util::timer::Stopwatch;
@@ -47,15 +47,23 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                 let mut scratch = vec![0.0f64; k];
                 let mut view = SimView::new(src, centers, k);
                 for (li, i) in range.enumerate() {
-                    let (best_j, _, _) =
-                        view.similarities_full(i, &mut out.iter, &mut scratch);
-                    if AUDIT_ENABLED {
+                    let (best_j, _, _) = view.assign_top2(
+                        i,
+                        iteration,
+                        &mut out.iter,
+                        &mut out.violations,
+                        &mut scratch,
+                    );
+                    if AUDIT_ENABLED && centers.kernel() != Kernel::Pruned {
                         // Standard takes no pruning decisions; what audit
                         // certifies here is the kernel layer itself — the
                         // configured backend's similarity row must agree
                         // with directly recomputed gather dots, or every
                         // bound the accelerated variants derive from the
-                        // same backend is suspect.
+                        // same backend is suspect. (Under the pruned kernel
+                        // `scratch` holds partial scores, not similarities;
+                        // `assign_top2` certifies its own decisions through
+                        // `audit_set_prune` instead.)
                         for (j, &sj) in scratch.iter().enumerate() {
                             let exact = audit_sim(&mut view, i, j);
                             if (sj - exact).abs() > AUDIT_MARGIN {

@@ -24,6 +24,15 @@ pub struct IterStats {
     pub loop_skips: u64,
     /// Per-center bound tests that pruned a similarity computation.
     pub bound_skips: u64,
+    /// Query terms the bound-pruned kernel walked before its suffix bounds
+    /// stopped the postings traversal. Zero unless the `Pruned` kernel ran;
+    /// `prune_terms / sims_point_center · k` approximates the walked
+    /// fraction of each query.
+    pub prune_terms: u64,
+    /// Centers the bound-pruned kernel re-scored exactly after the postings
+    /// walk — every other center was eliminated by a MaxScore suffix upper
+    /// bound. Zero unless the `Pruned` kernel ran.
+    pub prune_survivors: u64,
     /// Wall time of the iteration in milliseconds.
     pub wall_ms: f64,
 }
@@ -47,6 +56,8 @@ impl IterStats {
         self.reassignments += shard.reassignments;
         self.loop_skips += shard.loop_skips;
         self.bound_skips += shard.bound_skips;
+        self.prune_terms += shard.prune_terms;
+        self.prune_survivors += shard.prune_survivors;
     }
 }
 
@@ -75,6 +86,18 @@ impl RunStats {
     /// backend-sensitive cost — see [`IterStats::madds_point_center`]).
     pub fn total_madds(&self) -> u64 {
         self.iters.iter().map(|i| i.madds_point_center).sum()
+    }
+
+    /// Total query terms walked by the bound-pruned kernel (zero on the
+    /// exhaustive backends) — see [`IterStats::prune_terms`].
+    pub fn total_prune_terms(&self) -> u64 {
+        self.iters.iter().map(|i| i.prune_terms).sum()
+    }
+
+    /// Total centers the bound-pruned kernel re-scored exactly (zero on
+    /// the exhaustive backends) — see [`IterStats::prune_survivors`].
+    pub fn total_prune_survivors(&self) -> u64 {
+        self.iters.iter().map(|i| i.prune_survivors).sum()
     }
 
     /// Total wall time in milliseconds (sum of iteration laps).
@@ -156,6 +179,8 @@ mod tests {
                     reassignments: g.usize_in(0, 500) as u64,
                     loop_skips: g.usize_in(0, 500) as u64,
                     bound_skips: g.usize_in(0, 500) as u64,
+                    prune_terms: g.usize_in(0, 2_000) as u64,
+                    prune_survivors: g.usize_in(0, 2_000) as u64,
                     wall_ms: g.f64_in(0.0, 5.0),
                 };
                 serial.sims_point_center += part.sims_point_center;
@@ -164,6 +189,8 @@ mod tests {
                 serial.reassignments += part.reassignments;
                 serial.loop_skips += part.loop_skips;
                 serial.bound_skips += part.bound_skips;
+                serial.prune_terms += part.prune_terms;
+                serial.prune_survivors += part.prune_survivors;
                 merged.absorb(&part);
             }
             assert_eq!(merged.sims_point_center, serial.sims_point_center);
@@ -172,6 +199,8 @@ mod tests {
             assert_eq!(merged.reassignments, serial.reassignments);
             assert_eq!(merged.loop_skips, serial.loop_skips);
             assert_eq!(merged.bound_skips, serial.bound_skips);
+            assert_eq!(merged.prune_terms, serial.prune_terms);
+            assert_eq!(merged.prune_survivors, serial.prune_survivors);
             assert_eq!(merged.sims_total(), serial.sims_total());
             // Overlapping shard wall clocks must not leak into the merge.
             assert_eq!(merged.wall_ms, 0.0);

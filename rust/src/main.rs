@@ -43,7 +43,7 @@ USAGE:
   sphkm cluster --data <dataset> --k K [--algo VARIANT] [--init METHOD]
                 [--seed N] [--scale S] [--max-iter M] [--stats]
                 [--threads T] # sharded assignment: 0 = all cores, 1 = serial
-                [--kernel X]  # similarity backend: auto|dense|gather|inverted
+                [--kernel X]  # similarity backend: auto|dense|gather|inverted|pruned
                 [--preinit]   # §7: pre-initialize bounds from k-means++
                 [--minibatch] # approximate mini-batch engine (large corpora)
                 [--batch-size B] [--epochs E] [--tol T]
@@ -79,7 +79,9 @@ USAGE:
   VARIANT:   standard | elkan | simp-elkan | hamerly | simp-hamerly | yinyang
   METHOD:    uniform | kmeans++ | kmeans++1.5 | afkmc2 | afkmc2-1.5
   KERNEL:    auto (problem-shape heuristic) | dense (d×k transpose)
-             | gather (per-center dots) | inverted (CSC postings index)",
+             | gather (per-center dots) | inverted (CSC postings index)
+             | pruned (MaxScore bound-pruned postings walk; bit-identical,
+               --stats adds walked-term / survivor prune counters)",
         names = DATASET_NAMES.join("|")
     );
     std::process::exit(2)
@@ -598,17 +600,25 @@ fn main() {
             let sw = sphkm::util::timer::Stopwatch::start();
             let fitted = if args.flag("stats") {
                 // Live per-iteration progress through the observer hook.
-                println!("\niter  sims_pc  sims_cc  reassign  skips(loop/bound)  ms");
+                // The prune(terms/surv) columns are live only under
+                // --kernel pruned: query terms the MaxScore walk touched
+                // and centers that survived to an exact re-score.
+                println!(
+                    "\niter  sims_pc  sims_cc  reassign  skips(loop/bound)  \
+                     prune(terms/surv)  ms"
+                );
                 let mut reported = 0usize;
                 let mut observer = |s: &IterSnapshot<'_>| {
                     println!(
-                        "{:>4}  {:>8} {:>8} {:>9}  {:>7}/{:<9} {:>8.2}",
+                        "{:>4}  {:>8} {:>8} {:>9}  {:>7}/{:<9} {:>8}/{:<8} {:>8.2}",
                         s.iteration,
                         s.stats.sims_point_center,
                         s.stats.sims_center_center,
                         s.stats.reassignments,
                         s.stats.loop_skips,
                         s.stats.bound_skips,
+                        s.stats.prune_terms,
+                        s.stats.prune_survivors,
                         s.stats.wall_ms
                     );
                     // Surface audit violations as they are recorded (the
@@ -643,6 +653,16 @@ fn main() {
                 r.kernel(),
                 r.stats().total_sims() - r.stats().total_point_center()
             );
+            if r.stats().total_prune_survivors() > 0 {
+                println!(
+                    "pruned kernel: {} query terms walked, {} centers survived \
+                     to exact re-score ({:.1} per assignment)",
+                    r.stats().total_prune_terms(),
+                    r.stats().total_prune_survivors(),
+                    r.stats().total_prune_survivors() as f64
+                        / (r.stats().total_point_center() as f64 / k as f64).max(1.0)
+                );
+            }
             // Memory accounting: chunk-buffer high-water mark of the
             // shard cursors (out-of-core runs only) next to what the full
             // matrix would have cost resident, plus the process-level

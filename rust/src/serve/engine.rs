@@ -145,12 +145,13 @@ fn by_rank(a: &(u32, f64), b: &(u32, f64)) -> std::cmp::Ordering {
 #[derive(Debug)]
 pub struct QueryEngine {
     model: Model,
-    /// Postings index plus the per-dimension MaxScore bound table
-    /// (`maxw[c] = max_j |centers[j][c]|`). Built only when the resolved
-    /// mode can prune — an exhaustive engine never reads either, and for
-    /// a dense model the postings would cost roughly twice the dense
-    /// matrix they mirror.
-    index: Option<(InvertedIndex, Vec<f32>)>,
+    /// Postings index over the center non-zeros; its cached per-dimension
+    /// MaxScore bound table (`maxw[c] = max_j |centers[j][c]|`,
+    /// [`InvertedIndex::max_abs_weights`]) is maintained by the index
+    /// itself. Built only when the resolved mode can prune — an
+    /// exhaustive engine never reads it, and for a dense model the
+    /// postings would cost roughly twice the dense matrix they mirror.
+    index: Option<InvertedIndex>,
     /// What [`ServeMode`] resolved to: `true` = pruned traversal.
     pruned: bool,
     pool: Pool,
@@ -168,14 +169,13 @@ impl QueryEngine {
             ServeMode::Exhaustive => false,
             ServeMode::Auto => {
                 let shape = DataShape::of_centers(model.d(), model.k(), model.center_nnz());
-                KernelChoice::Auto.resolve(&shape) == Kernel::Inverted
+                matches!(
+                    KernelChoice::Auto.resolve(&shape),
+                    Kernel::Inverted | Kernel::Pruned
+                )
             }
         };
-        let index = pruned.then(|| {
-            let idx = InvertedIndex::from_centers(model.centers());
-            let maxw = idx.max_abs_weights();
-            (idx, maxw)
-        });
+        let index = pruned.then(|| InvertedIndex::from_centers(model.centers()));
         Self { model, index, pruned, pool: Pool::new(cfg.threads) }
     }
 
@@ -194,7 +194,7 @@ impl QueryEngine {
     /// density when the engine resolved exhaustive and built none).
     pub fn index_density(&self) -> f64 {
         match &self.index {
-            Some((idx, _)) => idx.density(),
+            Some(idx) => idx.density(),
             None => self.model.center_density(),
         }
     }
@@ -268,9 +268,10 @@ impl QueryEngine {
         // An engine resolved to exhaustive built no postings index; the
         // pruned entry points degrade to the exhaustive pass, which is
         // bit-identical anyway.
-        let Some((index, maxw)) = self.index.as_ref() else {
+        let Some(index) = self.index.as_ref() else {
             return self.top_p_exhaustive_into(row, p, stats);
         };
+        let maxw = index.max_abs_weights();
         stats.queries += 1;
         if p == 0 || k == 0 {
             return Vec::new();

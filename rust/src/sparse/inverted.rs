@@ -10,6 +10,13 @@
 //! An all-centers similarity pass then walks only the postings of the
 //! row's own terms, skipping every pair that shares no term.
 //!
+//! **Layout.** Each dimension's postings are stored structure-of-arrays
+//! (a `centers: Vec<u32>` id stream next to a `values: Vec<f32>` weight
+//! stream) per SIVF's structured-inverted-file layout: the accumulation
+//! loop streams two homogeneous, cache-sequential arrays instead of
+//! interleaved 8-byte records, which is where the postings walk spends
+//! its time on sparse text.
+//!
 //! **Bit-exactness contract.** [`InvertedIndex::sims_into`] accumulates
 //! per-center contributions in ascending dimension order of the row's
 //! non-zeros — the same `f64` addition sequence the dense-transpose kernel
@@ -22,19 +29,39 @@
 //! Maintenance is incremental: [`InvertedIndex::refresh_center`] rewrites
 //! only the postings of one (dirty) center, so an iteration that moves
 //! few centers pays for few centers — the same dirty-flag discipline
-//! [`crate::kmeans::Centers`] applies to its transpose columns.
+//! [`crate::kmeans::Centers`] applies to its transpose columns. The
+//! per-dimension **MaxScore bound table** `maxw[c] = max_j |centers[j][c]|`
+//! is cached inside the index under the same discipline: a dirty center's
+//! refresh recomputes only the dimensions in its old ∪ new support, so
+//! serving batches and the pruned training kernel read it for free
+//! instead of paying a full `O(nnz)` scan.
 
 use super::csr::RowView;
 use super::dense::DenseMatrix;
 use crate::audit::AuditViolation;
 
-/// One center's non-zero value in one dimension's postings list.
-#[derive(Debug, Clone, Copy)]
-struct Posting {
-    /// Center id (row of the centers matrix).
-    center: u32,
-    /// The center's value at this dimension.
-    value: f32,
+/// One dimension's postings: the centers with a non-zero coordinate
+/// there, sorted by center id ascending, stored structure-of-arrays
+/// (SIVF-style) so the accumulation loop streams homogeneous arrays.
+#[derive(Debug, Clone, Default)]
+struct PostingList {
+    /// Center ids, ascending.
+    centers: Vec<u32>,
+    /// The centers' values at this dimension, parallel to `centers`.
+    values: Vec<f32>,
+}
+
+impl PostingList {
+    #[inline]
+    fn len(&self) -> usize {
+        self.centers.len()
+    }
+
+    /// Recompute this list's maximum absolute weight from scratch.
+    #[inline]
+    fn max_abs(&self) -> f32 {
+        self.values.iter().map(|v| v.abs()).fold(0.0f32, f32::max)
+    }
 }
 
 /// CSC-style inverted file over a k×d centers matrix: for each dimension,
@@ -43,10 +70,14 @@ struct Posting {
 pub struct InvertedIndex {
     k: usize,
     /// Per-dimension postings, each sorted by center id ascending.
-    postings: Vec<Vec<Posting>>,
+    postings: Vec<PostingList>,
     /// Per-center sorted list of dimensions where the center is non-zero
     /// (its support) — what `refresh_center` must erase before rewriting.
     support: Vec<Vec<u32>>,
+    /// Cached per-dimension MaxScore bound table:
+    /// `maxw[c] = max_j |centers[j][c]|`, maintained incrementally per
+    /// dirty center alongside the postings themselves.
+    maxw: Vec<f32>,
     /// Total postings across all dimensions.
     nnz: usize,
 }
@@ -56,8 +87,9 @@ impl InvertedIndex {
     pub fn new(d: usize, k: usize) -> Self {
         Self {
             k,
-            postings: vec![Vec::new(); d],
+            postings: vec![PostingList::default(); d],
             support: vec![Vec::new(); k],
+            maxw: vec![0.0; d],
             nnz: 0,
         }
     }
@@ -70,8 +102,10 @@ impl InvertedIndex {
         for j in 0..me.k {
             for (c, &v) in centers.row(j).iter().enumerate() {
                 if v != 0.0 {
-                    me.postings[c].push(Posting { center: j as u32, value: v });
+                    me.postings[c].centers.push(j as u32);
+                    me.postings[c].values.push(v);
                     me.support[j].push(c as u32);
+                    me.maxw[c] = me.maxw[c].max(v.abs());
                     me.nnz += 1;
                 }
             }
@@ -109,14 +143,20 @@ impl InvertedIndex {
     /// Rewrite the postings of center `j` from its current dense row —
     /// the incremental maintenance step for a dirty center. `O(support +
     /// d)` plus the postings-list shifts (lists hold at most k entries).
+    /// The cached `maxw` table is refreshed for exactly the dimensions in
+    /// the center's old ∪ new support.
     pub fn refresh_center(&mut self, j: usize, row: &[f32]) {
         debug_assert_eq!(row.len(), self.postings.len());
         let jj = j as u32;
         for &c in &self.support[j] {
             let list = &mut self.postings[c as usize];
-            if let Ok(pos) = list.binary_search_by_key(&jj, |p| p.center) {
-                list.remove(pos);
+            if let Ok(pos) = list.centers.binary_search(&jj) {
+                list.centers.remove(pos);
+                list.values.remove(pos);
                 self.nnz -= 1;
+                // Exact for removal-only dims; dims re-inserted below get
+                // the cheaper max-update on top of this correct base.
+                self.maxw[c as usize] = list.max_abs();
             }
         }
         // Reuse the support allocation for the new pattern.
@@ -127,9 +167,12 @@ impl InvertedIndex {
                 support.push(c as u32);
                 let list = &mut self.postings[c];
                 let pos = list
-                    .binary_search_by_key(&jj, |p| p.center)
+                    .centers
+                    .binary_search(&jj)
                     .expect_err("center postings were just erased");
-                list.insert(pos, Posting { center: jj, value: v });
+                list.centers.insert(pos, jj);
+                list.values.insert(pos, v);
+                self.maxw[c] = self.maxw[c].max(v.abs());
                 self.nnz += 1;
             }
         }
@@ -139,14 +182,22 @@ impl InvertedIndex {
     /// Per-dimension maximum absolute center weight: `maxw[c] =
     /// max_j |centers[j][c]|` (0 where no center has the term). This is
     /// the MaxScore bound table (Turtle & Flood 1995) the serving layer
-    /// uses: the contribution of dimension `c` to any point×center cosine
-    /// is at most `|q_c| · maxw[c]`, so summing it over a query's
-    /// unprocessed terms bounds every center's remaining similarity.
-    pub fn max_abs_weights(&self) -> Vec<f32> {
-        self.postings
-            .iter()
-            .map(|list| list.iter().map(|p| p.value.abs()).fold(0.0f32, f32::max))
-            .collect()
+    /// and the pruned training kernel use: the contribution of dimension
+    /// `c` to any point×center cosine is at most `|q_c| · maxw[c]`, so
+    /// summing it over a query's unprocessed terms bounds every center's
+    /// remaining similarity. Cached inside the index and maintained per
+    /// dirty center — reading it is free.
+    #[inline]
+    pub fn max_abs_weights(&self) -> &[f32] {
+        &self.maxw
+    }
+
+    /// Number of postings stored for dimension `c` (the multiply-adds a
+    /// walk of that dimension costs) — what the pruned traversal's
+    /// stop-rule cost model sums without touching the lists themselves.
+    #[inline]
+    pub fn dim_len(&self, c: usize) -> usize {
+        self.postings[c].len()
     }
 
     /// Walk the postings of dimension `c`, folding `q · value` into
@@ -156,8 +207,8 @@ impl InvertedIndex {
     #[inline]
     pub fn accumulate_dim(&self, c: usize, q: f64, out: &mut [f64]) -> u64 {
         let list = &self.postings[c];
-        for p in list {
-            out[p.center as usize] += q * p.value as f64;
+        for (&j, &v) in list.centers.iter().zip(&list.values) {
+            out[j as usize] += q * v as f64;
         }
         list.len() as u64
     }
@@ -166,10 +217,12 @@ impl InvertedIndex {
     /// incrementally maintained index must be **exactly** the index a
     /// from-scratch build of `centers` would produce — postings sorted by
     /// center id with in-range ids and bit-identical non-zero values,
-    /// support lists matching each center's non-zero pattern, and the
-    /// `nnz` count agreeing with both. Run at iteration barriers under
-    /// audit (via [`crate::kmeans::Centers::check_invariants`]) and
-    /// callable from tests; returns the first broken invariant.
+    /// support lists matching each center's non-zero pattern, the cached
+    /// `maxw` bound table bit-equal to a fresh per-dimension fold, and
+    /// the `nnz` count agreeing with all of them. Run at iteration
+    /// barriers under audit (via
+    /// [`crate::kmeans::Centers::check_invariants`]) and callable from
+    /// tests; returns the first broken invariant.
     pub fn check_invariants(&self, centers: &DenseMatrix) -> Result<(), AuditViolation> {
         let fail = |check: &'static str, detail: String| {
             Err(AuditViolation::invariant("inverted", check, detail))
@@ -192,32 +245,55 @@ impl InvertedIndex {
                 format!("{} support lists for {} centers", self.support.len(), self.k),
             );
         }
+        if self.maxw.len() != self.postings.len() {
+            return fail(
+                "shape",
+                format!("{} maxw entries for {} dims", self.maxw.len(), self.postings.len()),
+            );
+        }
         let mut counted = 0usize;
         for (c, list) in self.postings.iter().enumerate() {
+            if list.centers.len() != list.values.len() {
+                return fail(
+                    "postings-parallel",
+                    format!(
+                        "dim {c}: {} center ids vs {} values",
+                        list.centers.len(),
+                        list.values.len()
+                    ),
+                );
+            }
             counted += list.len();
-            for w in list.windows(2) {
-                if w[0].center >= w[1].center {
+            for w in list.centers.windows(2) {
+                if w[0] >= w[1] {
                     return fail(
                         "postings-sorted",
-                        format!("dim {c}: center {} then {}", w[0].center, w[1].center),
+                        format!("dim {c}: center {} then {}", w[0], w[1]),
                     );
                 }
             }
-            for p in list {
-                let j = p.center as usize;
+            for (&jj, &v) in list.centers.iter().zip(&list.values) {
+                let j = jj as usize;
                 if j >= self.k {
                     return fail("postings-center-range", format!("dim {c}: center {j} >= k"));
                 }
                 let actual = centers.row(j)[c];
-                if p.value.to_bits() != actual.to_bits() {
+                if v.to_bits() != actual.to_bits() {
                     return fail(
                         "postings-value-coherence",
-                        format!("dim {c}, center {j}: posting {} vs center {actual}", p.value),
+                        format!("dim {c}, center {j}: posting {v} vs center {actual}"),
                     );
                 }
-                if p.value == 0.0 {
+                if v == 0.0 {
                     return fail("postings-nonzero", format!("dim {c}, center {j}: stored zero"));
                 }
+            }
+            let fresh = list.max_abs();
+            if self.maxw[c].to_bits() != fresh.to_bits() {
+                return fail(
+                    "maxw-coherence",
+                    format!("dim {c}: cached maxw {} vs recomputed {fresh}", self.maxw[c]),
+                );
             }
         }
         if counted != self.nnz {
@@ -264,8 +340,8 @@ impl InvertedIndex {
             let list = &self.postings[*c as usize];
             madds += list.len() as u64;
             let v = v as f64;
-            for p in list {
-                out[p.center as usize] += v * p.value as f64;
+            for (&j, &w) in list.centers.iter().zip(&list.values) {
+                out[j as usize] += v * w as f64;
             }
         }
         madds
@@ -302,6 +378,9 @@ mod tests {
         assert_eq!(idx.dims(), 4);
         assert_eq!(idx.nnz(), 6);
         assert!((idx.density() - 6.0 / 12.0).abs() < 1e-12);
+        assert_eq!(idx.max_abs_weights(), &[0.6, 1.0, 0.8, 0.5]);
+        assert_eq!(idx.dim_len(0), 2);
+        assert_eq!(idx.dim_len(1), 1);
     }
 
     #[test]
@@ -327,6 +406,9 @@ mod tests {
         let new_row = [0.6f32, 0.0, 0.0, 0.8];
         idx.refresh_center(1, &new_row);
         assert_eq!(idx.nnz(), 7);
+        // maxw follows the rewrite: dim 1 loses its only posting, dim 3
+        // gains the new 0.8.
+        assert_eq!(idx.max_abs_weights(), &[0.6, 0.0, 0.8, 0.8]);
         let mut expect = centers.clone();
         expect.row_mut(1).copy_from_slice(&new_row);
         let row = SparseVec::from_pairs(4, vec![(0, 1.0), (1, 1.0), (3, 1.0)]);
@@ -339,6 +421,7 @@ mod tests {
         // Refreshing with the same row is idempotent.
         idx.refresh_center(1, &new_row);
         assert_eq!(idx.nnz(), 7);
+        assert!(idx.check_invariants(&expect).is_ok());
     }
 
     #[test]
@@ -373,9 +456,19 @@ mod tests {
                 idx.refresh_center(j, centers.row(j));
             }
             // The incrementally maintained index must equal a from-scratch
-            // rebuild: same nnz, and bit-identical similarities.
+            // rebuild: same nnz, bit-identical similarities, and a
+            // bit-identical cached maxw bound table.
             let rebuilt = InvertedIndex::from_centers(&centers);
             assert_eq!(idx.nnz(), rebuilt.nnz());
+            for (c, (x, y)) in idx
+                .max_abs_weights()
+                .iter()
+                .zip(rebuilt.max_abs_weights())
+                .enumerate()
+            {
+                assert_eq!(x.to_bits(), y.to_bits(), "maxw[{c}]");
+            }
+            assert!(idx.check_invariants(&centers).is_ok());
             let nnz = g.usize_in(0, d + 1);
             let pat = g.sparse_pattern(d, nnz);
             let row = SparseVec::new(
@@ -401,7 +494,7 @@ mod tests {
 
         // A posting diverging from the centers matrix it claims to mirror.
         let mut idx = InvertedIndex::from_centers(&centers);
-        idx.postings[0][0].value += 1.0;
+        idx.postings[0].values[0] += 1.0;
         assert_eq!(
             idx.check_invariants(&centers).unwrap_err().check,
             "postings-value-coherence"
@@ -416,5 +509,10 @@ mod tests {
         let mut idx = InvertedIndex::from_centers(&centers);
         idx.nnz += 1;
         assert_eq!(idx.check_invariants(&centers).unwrap_err().check, "nnz-coherence");
+
+        // Stale cached MaxScore bound table.
+        let mut idx = InvertedIndex::from_centers(&centers);
+        idx.maxw[2] = 0.1;
+        assert_eq!(idx.check_invariants(&centers).unwrap_err().check, "maxw-coherence");
     }
 }

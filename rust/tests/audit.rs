@@ -77,7 +77,12 @@ fn audited_tight_bound_and_kernel_backends_are_clean() {
             fitted.unwrap_err()
         );
     }
-    for kernel in [KernelChoice::Dense, KernelChoice::Gather, KernelChoice::Inverted] {
+    for kernel in [
+        KernelChoice::Dense,
+        KernelChoice::Gather,
+        KernelChoice::Inverted,
+        KernelChoice::Pruned,
+    ] {
         let fitted = SphericalKMeans::new(6)
             .variant(Variant::Elkan)
             .kernel(kernel)
@@ -86,6 +91,23 @@ fn audited_tight_bound_and_kernel_backends_are_clean() {
         assert!(
             fitted.is_ok(),
             "elkan on {kernel:?} audited run failed: {}",
+            fitted.unwrap_err()
+        );
+    }
+    // Elkan only sends its initial pass through the pruned top-2 walk;
+    // Standard and Hamerly drive it every iteration, so their audited
+    // runs certify the threshold-seeded traversal (`audit_set_prune`
+    // cross-checks each pruned training assignment exhaustively).
+    for variant in [Variant::Standard, Variant::Hamerly] {
+        let fitted = SphericalKMeans::new(6)
+            .variant(variant)
+            .kernel(KernelChoice::Pruned)
+            .seed(11)
+            .fit(&ds.matrix);
+        assert!(
+            fitted.is_ok(),
+            "{} on the pruned kernel audited run failed: {}",
+            variant.name(),
             fitted.unwrap_err()
         );
     }

@@ -5,7 +5,11 @@
 //! statistics — must be **bit-identical** across backends, for every
 //! thread count, at any data density, with truncated or dense centers.
 //! The Gather backend shares values up to summation-order rounding (its
-//! four-lane unrolled dot sums in a different tree).
+//! four-lane unrolled dot sums in a different tree). The Pruned backend
+//! walks the same postings MaxScore-style and re-scores survivors with
+//! the exact gather dot, so it joins the bit-identical family — including
+//! its per-point traversal decisions, which must never change a
+//! trajectory.
 //!
 //! This suite asserts the contract with a randomized property sweep over
 //! densities (0.1%–50% nnz) plus full-run checks for all seven exact
@@ -19,7 +23,7 @@
 use sphkm::data::synth::SynthConfig;
 use sphkm::init::{seed_centers, InitMethod};
 use sphkm::kmeans::{Centers, KMeansResult, Kernel, KernelChoice, Variant};
-use sphkm::sparse::{CsrMatrix, DenseMatrix, SparseVec};
+use sphkm::sparse::{CsrMatrix, DenseMatrix, RowSource, ShardStore, SparseVec};
 use sphkm::util::prop::{forall, Gen};
 use sphkm::{Engine, MiniBatchParams, SphericalKMeans};
 
@@ -93,21 +97,30 @@ fn raw_similarities_bit_identical_across_backends_and_densities() {
         let dense = mk(Kernel::Dense);
         let gather = mk(Kernel::Gather);
         let inverted = mk(Kernel::Inverted);
+        let pruned = mk(Kernel::Pruned);
 
         let mut sd = vec![0.0f64; k];
         let mut sg = vec![0.0f64; k];
         let mut si = vec![0.0f64; k];
+        let mut sp = vec![0.0f64; k];
         for i in 0..rows {
             let md = dense.sims_all(data.row(i), &mut sd);
             let mg = gather.sims_all(data.row(i), &mut sg);
             let mi = inverted.sims_all(data.row(i), &mut si);
+            let mp = pruned.sims_all(data.row(i), &mut sp);
             assert_eq!(md, mg, "row {i}: dense and gather charge nnz·k");
             assert!(mi <= md, "row {i}: inverted must not exceed dense madds");
+            assert_eq!(mi, mp, "row {i}: pruned full-row pass is the inverted walk");
             for j in 0..k {
                 assert_eq!(
                     sd[j].to_bits(),
                     si[j].to_bits(),
                     "row {i} center {j} (d={d}, density={density}, truncate={truncate:?})"
+                );
+                assert_eq!(
+                    sd[j].to_bits(),
+                    sp[j].to_bits(),
+                    "row {i} center {j}: dense vs pruned (d={d}, density={density})"
                 );
                 assert!((sd[j] - sg[j]).abs() < 1e-12, "row {i} center {j}");
             }
@@ -127,31 +140,35 @@ fn full_runs_bit_identical_across_backends_and_densities() {
         for variant in [Variant::Standard, Variant::SimplifiedHamerly, Variant::Elkan] {
             let est = || SphericalKMeans::new(k).variant(variant).max_iter(20);
             let dense = fit_from(&data, initial.clone(), est().kernel(KernelChoice::Dense));
-            let inv = fit_from(&data, initial.clone(), est().kernel(KernelChoice::Inverted));
-            assert_eq!(
-                dense.assignments,
-                inv.assignments,
-                "{} (d={d}, density={density})",
-                variant.name()
-            );
-            assert_eq!(
-                dense.objective.to_bits(),
-                inv.objective.to_bits(),
-                "{}",
-                variant.name()
-            );
-            assert_eq!(dense.iterations, inv.iterations, "{}", variant.name());
-            assert_eq!(
-                dense.stats.total_point_center(),
-                inv.stats.total_point_center(),
-                "{}: pruning decisions must match",
-                variant.name()
-            );
-            assert!(
-                inv.stats.total_madds() <= dense.stats.total_madds(),
-                "{}: inverted did more madds",
-                variant.name()
-            );
+            for choice in [KernelChoice::Inverted, KernelChoice::Pruned] {
+                let r = fit_from(&data, initial.clone(), est().kernel(choice));
+                assert_eq!(
+                    dense.assignments,
+                    r.assignments,
+                    "{} {choice:?} (d={d}, density={density})",
+                    variant.name()
+                );
+                assert_eq!(
+                    dense.objective.to_bits(),
+                    r.objective.to_bits(),
+                    "{} {choice:?}",
+                    variant.name()
+                );
+                assert_eq!(dense.iterations, r.iterations, "{} {choice:?}", variant.name());
+                assert_eq!(
+                    dense.stats.total_point_center(),
+                    r.stats.total_point_center(),
+                    "{} {choice:?}: pruning decisions must match",
+                    variant.name()
+                );
+                if choice == KernelChoice::Inverted {
+                    assert!(
+                        r.stats.total_madds() <= dense.stats.total_madds(),
+                        "{}: inverted did more madds",
+                        variant.name()
+                    );
+                }
+            }
         }
     });
 }
@@ -190,8 +207,13 @@ fn auto_resolves_differently_across_the_corpora() {
     );
     assert_eq!(
         KernelChoice::Auto.resolve(&DataShape::of(&ds[1].matrix, 8, None)),
+        Kernel::Pruned,
+        "sparse corpus stays under the density cutoff at prunable k"
+    );
+    assert_eq!(
+        KernelChoice::Auto.resolve(&DataShape::of(&ds[1].matrix, 7, None)),
         Kernel::Inverted,
-        "sparse corpus stays under the density cutoff"
+        "below the pruning k floor the plain inverted walk wins"
     );
 }
 
@@ -207,7 +229,12 @@ fn all_seven_variants_bit_identical_on_every_kernel_and_thread_count() {
                 init.centers.clone(),
                 base().kernel(KernelChoice::Dense).threads(1),
             );
-            for choice in [KernelChoice::Dense, KernelChoice::Inverted, KernelChoice::Auto] {
+            for choice in [
+                KernelChoice::Dense,
+                KernelChoice::Inverted,
+                KernelChoice::Pruned,
+                KernelChoice::Auto,
+            ] {
                 for threads in [1usize, 0] {
                     let r = fit_from(
                         &ds.matrix,
@@ -283,7 +310,12 @@ fn minibatch_bit_identical_across_kernels_truncation_and_threads() {
                 init.centers.clone(),
                 base().kernel(KernelChoice::Dense).threads(1),
             );
-            for choice in [KernelChoice::Dense, KernelChoice::Inverted, KernelChoice::Auto] {
+            for choice in [
+                KernelChoice::Dense,
+                KernelChoice::Inverted,
+                KernelChoice::Pruned,
+                KernelChoice::Auto,
+            ] {
                 for threads in [1usize, 0] {
                     let r = fit_from(
                         &ds.matrix,
@@ -328,4 +360,64 @@ fn minibatch_bit_identical_across_kernels_truncation_and_threads() {
             }
         }
     }
+}
+
+#[test]
+fn pruned_kernel_bit_identical_from_the_disk_shard_store() {
+    // The out-of-core row source feeds the same kernels through the same
+    // shard grid, so the MaxScore walk's per-point decisions — and hence
+    // the whole trajectory — must survive the disk round trip untouched.
+    let ds = &corpora()[1];
+    let k = 8;
+    let init = initial_from_rows(&ds.matrix, k);
+
+    let dir = std::env::temp_dir().join(format!("sphkm-kernel-tests-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pruned-disk");
+    ShardStore::write_from_matrix(&path, &ds.matrix).unwrap();
+    let store = ShardStore::open(&path).unwrap().with_chunk_rows(37);
+
+    for variant in [Variant::Standard, Variant::SimplifiedHamerly] {
+        let est = |choice: KernelChoice| {
+            SphericalKMeans::new(k)
+                .variant(variant)
+                .max_iter(15)
+                .kernel(choice)
+                .warm_start_centers(init.clone())
+        };
+        let mem_dense = fit_from(&ds.matrix, init.clone(), {
+            SphericalKMeans::new(k)
+                .variant(variant)
+                .max_iter(15)
+                .kernel(KernelChoice::Dense)
+        });
+        let disk_pruned = est(KernelChoice::Pruned)
+            .fit_source(RowSource::Disk(&store))
+            .expect("disk-backed pruned fit succeeds")
+            .into_result();
+        assert_eq!(
+            mem_dense.assignments,
+            disk_pruned.assignments,
+            "{}: disk+pruned vs memory+dense assignments",
+            variant.name()
+        );
+        assert_eq!(
+            mem_dense.objective.to_bits(),
+            disk_pruned.objective.to_bits(),
+            "{}: objective bits",
+            variant.name()
+        );
+        assert_eq!(
+            mem_dense.iterations,
+            disk_pruned.iterations,
+            "{}: iteration counts",
+            variant.name()
+        );
+        assert!(
+            disk_pruned.stats.total_prune_survivors() > 0,
+            "{}: the pruned walk must actually run on the disk path",
+            variant.name()
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
