@@ -5,7 +5,12 @@
 //!
 //! ```text
 //! cargo bench --bench bench_fig1 -- [--scale S] [--k 100] [--reps 10]
+//!     [--runs N] [--warmup W]
 //! ```
+//!
+//! `--runs` is honored as an alias for `--reps` (the uniform bench-suite
+//! spelling) when `--reps` is absent; `--warmup W` runs W untimed tiny
+//! passes before the measured experiment.
 
 // Bench and test targets favour readable literal casts and exact
 // (bit-level) float assertions; the workspace clippy warnings on
@@ -13,15 +18,26 @@
 #![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 
 use sphkm::coordinator::experiments::{self, ExperimentOpts};
+use sphkm::data::datasets::Scale;
 use sphkm::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
     let mut opts = ExperimentOpts::from_args(&args);
-    if !args.has("reps") {
+    if args.has("runs") && !args.has("reps") {
+        opts.reps = args.get_or("runs", opts.reps).unwrap_or(opts.reps).max(1);
+    } else if !args.has("reps") {
         opts.reps = if args.flag("quick") { 2 } else { 10 }; // paper: 10 re-runs
     }
     let k = args.get_or("k", 100usize).unwrap_or(100);
+    let warmup: usize = args.get_or("warmup", 0).unwrap_or(0);
+    for _ in 0..warmup {
+        println!("# warmup pass (untimed)");
+        let mut w = opts.clone();
+        w.scale = Scale::Tiny;
+        w.reps = 1;
+        experiments::fig1(&w, 2);
+    }
     println!("# Fig. 1 bench — scale={}, k={k}, reps={}", opts.scale.name(), opts.reps);
     experiments::fig1(&opts, k);
 }

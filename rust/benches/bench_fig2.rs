@@ -5,8 +5,13 @@
 //!
 //! ```text
 //! cargo bench --bench bench_fig2 -- [--scale S] [--reps N] [--ks ...]
+//!     [--runs N] [--warmup W]
 //!     [--ablation]   # adds the cc-cost-vs-dimensionality ablation
 //! ```
+//!
+//! `--runs` is honored as an alias for `--reps` (the uniform bench-suite
+//! spelling) when `--reps` is absent; `--warmup W` runs W untimed tiny
+//! passes before the measured experiment.
 
 // Bench and test targets favour readable literal casts and exact
 // (bit-level) float assertions; the workspace clippy warnings on
@@ -14,11 +19,24 @@
 #![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 
 use sphkm::coordinator::experiments::{self, ExperimentOpts};
+use sphkm::data::datasets::Scale;
 use sphkm::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
-    let opts = ExperimentOpts::from_args(&args);
+    let mut opts = ExperimentOpts::from_args(&args);
+    if args.has("runs") && !args.has("reps") {
+        opts.reps = args.get_or("runs", opts.reps).unwrap_or(opts.reps).max(1);
+    }
+    let warmup: usize = args.get_or("warmup", 0).unwrap_or(0);
+    for _ in 0..warmup {
+        println!("# warmup pass (untimed)");
+        let mut w = opts.clone();
+        w.scale = Scale::Tiny;
+        w.reps = 1;
+        w.ks = vec![2];
+        experiments::fig2(&w);
+    }
     println!("# Fig. 2 bench — scale={}, reps={}", opts.scale.name(), opts.reps);
     experiments::fig2(&opts);
     if args.flag("ablation") {

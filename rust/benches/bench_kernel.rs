@@ -12,12 +12,15 @@
 //! backend actually wins — the dense kernel's contiguous SIMD reads buy
 //! it more per madd, so its crossover sits below the madd crossover.
 //!
-//! Results are written to `BENCH_kernel.json` at the repository root
-//! (one record per corpus; schema documented in that file).
+//! Each kernel is fitted `--warmup` untimed + `--runs` timed times;
+//! results are written to `BENCH_kernel.json` at the repository root in
+//! the shared `sphkm.report.v1` envelope (see `sphkm::util::report`,
+//! validated by `sphkm report --check`).
 //!
 //! ```text
 //! cargo bench --bench bench_kernel -- [--rows 8000] [--k 64]
 //!     [--max-iter 8] [--threads 0] [--seed 42] [--truncate 64]
+//!     [--runs 3] [--warmup 1]
 //! ```
 
 // Bench and test targets favour readable literal casts and exact
@@ -28,8 +31,11 @@
 use sphkm::data::synth::SynthConfig;
 use sphkm::init::{seed_centers, InitMethod};
 use sphkm::kmeans::{Engine, KernelChoice, MiniBatchParams, SphericalKMeans, Variant};
+use sphkm::util::benchkit::BenchOpts;
 use sphkm::util::cli::Args;
-use sphkm::util::timer::Stopwatch;
+use sphkm::util::json::Json;
+use sphkm::util::report::{timing_fields, RunReport};
+use sphkm::util::timer::{Stopwatch, TimingStats};
 
 fn corpus(vocab: usize, rows: usize, k: usize, seed: u64) -> sphkm::data::Dataset {
     SynthConfig {
@@ -56,18 +62,37 @@ fn main() {
     let threads: usize = args.get_or("threads", 0).unwrap_or(0);
     let seed: u64 = args.get_or("seed", 42).unwrap_or(42);
     let truncate: usize = args.get_or("truncate", 64).unwrap_or(64);
+    let mut opts = BenchOpts::from_args(&args);
+    if !args.has("runs") {
+        opts.runs = 3; // each run is a full capped fit; 3 keeps defaults tractable
+    }
 
     println!(
         "# kernel crossover bench — Standard variant, k={k}, {rows} rows, \
-         {max_iter}-iteration cap, threads={threads}"
+         {max_iter}-iteration cap, threads={threads}, runs={} (+{} warmup)",
+        opts.runs, opts.warmup
     );
     println!(
         "{:<14} {:>8} {:>16} {:>16} {:>16} {:>10} {:>10} {:>10}",
         "corpus", "density", "dense madds", "inverted madds", "pruned madds", "dense ms", "inv ms", "pruned ms"
     );
 
+    let mut report = RunReport::new("kernel_crossover");
+    report.note("madds are exact and run-invariant; ms columns are mean over --runs");
+    for (key, v) in [
+        ("rows", rows),
+        ("k", k),
+        ("max_iter", max_iter),
+        ("threads", threads),
+        ("truncate", truncate),
+        ("runs", opts.runs),
+        ("warmup", opts.warmup),
+    ] {
+        report.config_num(key, v as f64);
+    }
+    report.config_num("seed", seed as f64);
+
     let mut sparse_checked = 0usize;
-    let mut json_rows: Vec<String> = Vec::new();
     for &vocab in &[1_500usize, 6_000, 24_000] {
         let ds = corpus(vocab, rows, k, seed);
         let density = ds.matrix.density();
@@ -79,28 +104,31 @@ fn main() {
                 .max_iter(max_iter)
                 .warm_start_centers(init.centers.clone())
         };
+        // Warmup runs are discarded; every timed run re-fits from the
+        // same warm-started centers, so results are run-invariant and
+        // only the wall-clock samples vary.
+        let time_kernel = |kc: KernelChoice| {
+            let mut samples = Vec::new();
+            let mut last = None;
+            for it in 0..opts.warmup + opts.runs.max(1) {
+                let sw = Stopwatch::start();
+                let r = base()
+                    .kernel(kc)
+                    .fit(&ds.matrix)
+                    .expect("bench configuration is valid")
+                    .into_result();
+                let ms = sw.ms();
+                if it >= opts.warmup {
+                    samples.push(ms);
+                }
+                last = Some(r);
+            }
+            (last.expect("at least one run"), TimingStats::from_ms(&samples))
+        };
 
-        let sw = Stopwatch::start();
-        let dense = base()
-            .kernel(KernelChoice::Dense)
-            .fit(&ds.matrix)
-            .expect("bench configuration is valid")
-            .into_result();
-        let dense_ms = sw.ms();
-        let sw = Stopwatch::start();
-        let inv = base()
-            .kernel(KernelChoice::Inverted)
-            .fit(&ds.matrix)
-            .expect("bench configuration is valid")
-            .into_result();
-        let inv_ms = sw.ms();
-        let sw = Stopwatch::start();
-        let pruned = base()
-            .kernel(KernelChoice::Pruned)
-            .fit(&ds.matrix)
-            .expect("bench configuration is valid")
-            .into_result();
-        let pruned_ms = sw.ms();
+        let (dense, dense_t) = time_kernel(KernelChoice::Dense);
+        let (inv, inv_t) = time_kernel(KernelChoice::Inverted);
+        let (pruned, pruned_t) = time_kernel(KernelChoice::Pruned);
 
         // Kernel exactness contract: identical clustering, bit for bit.
         for (other, what) in [(&inv, "inverted"), (&pruned, "pruned")] {
@@ -130,20 +158,29 @@ fn main() {
             dm,
             im,
             pm,
-            dense_ms,
-            inv_ms,
-            pruned_ms
+            dense_t.mean_ms,
+            inv_t.mean_ms,
+            pruned_t.mean_ms
         );
-        json_rows.push(format!(
-            "    {{\"corpus\": \"{}\", \"density\": {:.6}, \"dense_madds\": {dm}, \
-             \"inverted_madds\": {im}, \"pruned_madds\": {pm}, \"dense_ms\": {dense_ms:.2}, \
-             \"inverted_ms\": {inv_ms:.2}, \"pruned_ms\": {pruned_ms:.2}, \
-             \"prune_terms\": {}, \"prune_survivors\": {}}}",
-            ds.name,
-            density,
-            pruned.stats.total_prune_terms(),
-            pruned.stats.total_prune_survivors()
-        ));
+        let mut row = vec![
+            ("corpus".to_string(), Json::Str(ds.name.clone())),
+            ("density".to_string(), Json::Num(density)),
+            ("dense_madds".to_string(), Json::Num(dm as f64)),
+            ("inverted_madds".to_string(), Json::Num(im as f64)),
+            ("pruned_madds".to_string(), Json::Num(pm as f64)),
+            (
+                "prune_terms".to_string(),
+                Json::Num(pruned.stats.total_prune_terms() as f64),
+            ),
+            (
+                "prune_survivors".to_string(),
+                Json::Num(pruned.stats.total_prune_survivors() as f64),
+            ),
+        ];
+        row.extend(timing_fields("dense", &dense_t));
+        row.extend(timing_fields("inverted", &inv_t));
+        row.extend(timing_fields("pruned", &pruned_t));
+        report.push_result(row);
         if density < 0.05 {
             assert!(
                 im < dm,
@@ -181,20 +218,26 @@ fn main() {
                 .threads(threads)
                 .warm_start_centers(init.centers.clone())
         };
-        let sw = Stopwatch::start();
-        let dense = base()
-            .kernel(KernelChoice::Dense)
-            .fit(&ds.matrix)
-            .expect("bench configuration is valid")
-            .into_result();
-        let dense_ms = sw.ms();
-        let sw = Stopwatch::start();
-        let inv = base()
-            .kernel(KernelChoice::Inverted)
-            .fit(&ds.matrix)
-            .expect("bench configuration is valid")
-            .into_result();
-        let inv_ms = sw.ms();
+        let time_kernel = |kc: KernelChoice| {
+            let mut samples = Vec::new();
+            let mut last = None;
+            for it in 0..opts.warmup + opts.runs.max(1) {
+                let sw = Stopwatch::start();
+                let r = base()
+                    .kernel(kc)
+                    .fit(&ds.matrix)
+                    .expect("bench configuration is valid")
+                    .into_result();
+                let ms = sw.ms();
+                if it >= opts.warmup {
+                    samples.push(ms);
+                }
+                last = Some(r);
+            }
+            (last.expect("at least one run"), TimingStats::from_ms(&samples))
+        };
+        let (dense, dense_t) = time_kernel(KernelChoice::Dense);
+        let (inv, inv_t) = time_kernel(KernelChoice::Inverted);
         assert_eq!(dense.assignments, inv.assignments, "minibatch assignments");
         assert_eq!(
             dense.objective.to_bits(),
@@ -204,10 +247,15 @@ fn main() {
         let (dm, im) = (dense.stats.total_madds(), inv.stats.total_madds());
         assert!(im < dm, "truncated minibatch: {im} vs {dm} madds");
         let label = format!("mb top-{truncate}");
-        json_rows.push(format!(
-            "    {{\"corpus\": \"{label}\", \"density\": null, \"dense_madds\": {dm}, \
-             \"inverted_madds\": {im}, \"dense_ms\": {dense_ms:.2}, \"inverted_ms\": {inv_ms:.2}}}"
-        ));
+        let mut row = vec![
+            ("corpus".to_string(), Json::Str(label.clone())),
+            ("density".to_string(), Json::Null),
+            ("dense_madds".to_string(), Json::Num(dm as f64)),
+            ("inverted_madds".to_string(), Json::Num(im as f64)),
+        ];
+        row.extend(timing_fields("dense", &dense_t));
+        row.extend(timing_fields("inverted", &inv_t));
+        report.push_result(row);
         println!(
             "{:<14} {:>8} {:>16} {:>16} {:>6.1}x {:>10.1} {:>10.1}",
             label,
@@ -215,21 +263,19 @@ fn main() {
             dm,
             im,
             dm as f64 / im.max(1) as f64,
-            dense_ms,
-            inv_ms
+            dense_t.mean_ms,
+            inv_t.mean_ms
         );
     }
 
     let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")
         .join("BENCH_kernel.json");
-    let json = format!(
-        "{{\n  \"bench\": \"kernel_crossover\",\n  \"config\": {{\"rows\": {rows}, \
-         \"k\": {k}, \"max_iter\": {max_iter}, \"threads\": {threads}, \"seed\": {seed}, \
-         \"truncate\": {truncate}}},\n  \"results\": [\n{}\n  ]\n}}\n",
-        json_rows.join(",\n")
+    debug_assert!(
+        RunReport::check_str(&report.to_json().pretty(2)).is_ok(),
+        "emitting an invalid report"
     );
-    match std::fs::write(&json_path, &json) {
+    match report.save(&json_path) {
         Ok(()) => println!("# wrote {}", json_path.display()),
         Err(e) => println!("# could not write {}: {e}", json_path.display()),
     }

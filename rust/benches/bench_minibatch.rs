@@ -3,10 +3,14 @@
 //! Standard objective using **≥5×** fewer point–center similarity
 //! computations (both checked with asserts at the end of the run).
 //!
+//! Both optimizers run `--warmup` untimed + `--runs` timed repetitions
+//! (fits are deterministic, so the acceptance asserts see the same result
+//! every time and only the wall-clock samples vary).
+//!
 //! ```text
 //! cargo bench --bench bench_minibatch -- [--rows 100000] [--k 50]
 //!     [--batch 1024] [--epochs 2] [--tol 1e-4] [--truncate 0]
-//!     [--threads 0] [--max-iter 100] [--seed 42]
+//!     [--threads 0] [--max-iter 100] [--seed 42] [--runs 1] [--warmup 0]
 //! ```
 
 // Bench and test targets favour readable literal casts and exact
@@ -18,8 +22,9 @@ use sphkm::data::synth::SynthConfig;
 use sphkm::init::{seed_centers, InitMethod};
 use sphkm::kmeans::{Engine, MiniBatchParams, SphericalKMeans, Variant};
 use sphkm::metrics;
+use sphkm::util::benchkit::BenchOpts;
 use sphkm::util::cli::Args;
-use sphkm::util::timer::Stopwatch;
+use sphkm::util::timer::{Stopwatch, TimingStats};
 
 fn main() {
     let args = Args::from_env();
@@ -32,6 +37,15 @@ fn main() {
     let threads: usize = args.get_or("threads", 0).unwrap_or(0);
     let max_iter: usize = args.get_or("max-iter", 100).unwrap_or(100);
     let seed: u64 = args.get_or("seed", 42).unwrap_or(42);
+    // Each run is a full fit over a 100k-row corpus: default to a single
+    // timed run with no warmup (the historical behaviour).
+    let mut opts = BenchOpts::from_args(&args);
+    if !args.has("runs") {
+        opts.runs = 1;
+    }
+    if !args.has("warmup") {
+        opts.warmup = 0;
+    }
 
     let ds = SynthConfig {
         name: format!("mb-blobs-{rows}"),
@@ -48,26 +62,48 @@ fn main() {
     }
     .generate(seed);
     println!(
-        "# mini-batch acceptance bench — {} ({}×{}, {:.4}% nnz), k={k}, threads={threads}",
+        "# mini-batch acceptance bench — {} ({}×{}, {:.4}% nnz), k={k}, threads={threads}, \
+         runs={} (+{} warmup)",
         ds.name,
         ds.matrix.rows(),
         ds.matrix.cols(),
         ds.matrix.density() * 100.0,
+        opts.runs,
+        opts.warmup,
     );
 
     // Shared initial centers so the comparison isolates the optimizer.
     let init = seed_centers(&ds.matrix, k, &InitMethod::Uniform, seed ^ 1);
 
-    let sw = Stopwatch::start();
-    let full = SphericalKMeans::new(k)
-        .variant(Variant::Standard)
-        .threads(threads)
-        .max_iter(max_iter)
-        .warm_start_centers(init.centers.clone())
-        .fit(&ds.matrix)
-        .expect("bench configuration is valid")
-        .into_result();
-    let full_ms = sw.ms();
+    // Deterministic fits: repeated runs reproduce the same result, so the
+    // last repetition feeds the acceptance asserts while every post-warmup
+    // repetition contributes a wall-clock sample.
+    let time_fit = |fit: &dyn Fn() -> sphkm::kmeans::KMeansResult| {
+        let mut samples = Vec::new();
+        let mut last = None;
+        for it in 0..opts.warmup + opts.runs.max(1) {
+            let sw = Stopwatch::start();
+            let r = fit();
+            let ms = sw.ms();
+            if it >= opts.warmup {
+                samples.push(ms);
+            }
+            last = Some(r);
+        }
+        (last.expect("at least one run"), TimingStats::from_ms(&samples))
+    };
+
+    let (full, full_t) = time_fit(&|| {
+        SphericalKMeans::new(k)
+            .variant(Variant::Standard)
+            .threads(threads)
+            .max_iter(max_iter)
+            .warm_start_centers(init.centers.clone())
+            .fit(&ds.matrix)
+            .expect("bench configuration is valid")
+            .into_result()
+    });
+    let full_ms = full_t.mean_ms;
     println!(
         "full-batch Standard : obj={:.2}  pc_sims={}  iters={}  converged={}  {:.0} ms",
         full.objective,
@@ -77,21 +113,22 @@ fn main() {
         full_ms,
     );
 
-    let sw = Stopwatch::start();
-    let mb = SphericalKMeans::new(k)
-        .engine(Engine::MiniBatch(MiniBatchParams {
-            batch_size: batch,
-            epochs,
-            tol,
-            truncate: if truncate == 0 { None } else { Some(truncate) },
-        }))
-        .seed(seed)
-        .threads(threads)
-        .warm_start_centers(init.centers.clone())
-        .fit(&ds.matrix)
-        .expect("bench configuration is valid")
-        .into_result();
-    let mb_ms = sw.ms();
+    let (mb, mb_t) = time_fit(&|| {
+        SphericalKMeans::new(k)
+            .engine(Engine::MiniBatch(MiniBatchParams {
+                batch_size: batch,
+                epochs,
+                tol,
+                truncate: if truncate == 0 { None } else { Some(truncate) },
+            }))
+            .seed(seed)
+            .threads(threads)
+            .warm_start_centers(init.centers.clone())
+            .fit(&ds.matrix)
+            .expect("bench configuration is valid")
+            .into_result()
+    });
+    let mb_ms = mb_t.mean_ms;
     let gap = metrics::objective_gap(mb.objective, full.objective);
     let ratio =
         full.stats.total_point_center() as f64 / mb.stats.total_point_center().max(1) as f64;

@@ -10,13 +10,15 @@
 //! **strictly below** the full in-memory matrix footprint — i.e. the run
 //! really was out-of-core, not a buffered copy.
 //!
-//! Results are appended to `BENCH_out_of_core.json` at the repository
-//! root (schema documented in that file).
+//! Both fits run `--warmup` untimed + `--runs` timed repetitions;
+//! results are written to `BENCH_out_of_core.json` at the repository
+//! root in the shared `sphkm.report.v1` envelope (see
+//! `sphkm::util::report`, validated by `sphkm report --check`).
 //!
 //! ```text
 //! cargo bench --bench bench_out_of_core -- [--rows 20000] [--k 16]
 //!     [--vocab 30000] [--max-iter 6] [--chunk-rows 256] [--threads 0]
-//!     [--seed 42] [--variant simp-elkan]
+//!     [--seed 42] [--variant simp-elkan] [--runs 1] [--warmup 0]
 //! ```
 
 // Bench and test targets favour readable literal casts and exact
@@ -28,9 +30,12 @@ use sphkm::data::synth::SynthConfig;
 use sphkm::kmeans::{SphericalKMeans, Variant};
 use sphkm::sparse::chunked::{reset_resident_peak, resident_peak_bytes};
 use sphkm::sparse::{RowSource, ShardStore};
+use sphkm::util::benchkit::BenchOpts;
 use sphkm::util::cli::Args;
+use sphkm::util::json::Json;
 use sphkm::util::mem::peak_rss_bytes;
-use sphkm::util::timer::Stopwatch;
+use sphkm::util::report::{timing_fields, RunReport};
+use sphkm::util::timer::{Stopwatch, TimingStats};
 
 fn corpus(vocab: usize, rows: usize, k: usize, seed: u64) -> sphkm::data::Dataset {
     SynthConfig {
@@ -62,11 +67,24 @@ fn main() {
         .get("variant")
         .map(|v| v.parse().expect("valid variant name"))
         .unwrap_or(Variant::SimplifiedElkan);
+    // Each run is a full fit over a 20k-row corpus: default to a single
+    // timed run with no warmup (the historical behaviour); CI smoke and
+    // serious measurement override with --runs / --warmup.
+    let mut opts = BenchOpts::from_args(&args);
+    if !args.has("runs") {
+        opts.runs = 1;
+    }
+    if !args.has("warmup") {
+        opts.warmup = 0;
+    }
 
     println!(
         "# out-of-core bench — {}, k={k}, {rows} rows, vocab={vocab}, \
-         chunk-rows={chunk_rows}, {max_iter}-iteration cap, threads={threads}",
-        variant.name()
+         chunk-rows={chunk_rows}, {max_iter}-iteration cap, threads={threads}, \
+         runs={} (+{} warmup)",
+        variant.name(),
+        opts.runs,
+        opts.warmup
     );
 
     let ds = corpus(vocab, rows, k, seed);
@@ -89,16 +107,39 @@ fn main() {
             .max_iter(max_iter)
     };
 
-    let sw = Stopwatch::start();
-    let mem = est().fit(&ds.matrix).expect("bench configuration is valid");
-    let mem_ms = sw.ms();
+    // Fits are deterministic, so repeated runs reproduce the same model
+    // and only the wall-clock samples vary; the last fit of each backend
+    // feeds the bit-identity assertions.
+    let mut mem_samples = Vec::new();
+    let mut mem = None;
+    for it in 0..opts.warmup + opts.runs.max(1) {
+        let sw = Stopwatch::start();
+        let r = est().fit(&ds.matrix).expect("bench configuration is valid");
+        let ms = sw.ms();
+        if it >= opts.warmup {
+            mem_samples.push(ms);
+        }
+        mem = Some(r);
+    }
+    let mem = mem.expect("at least one run");
+    let mem_t = TimingStats::from_ms(&mem_samples);
 
     reset_resident_peak();
-    let sw = Stopwatch::start();
-    let disk = est()
-        .fit_source(RowSource::Disk(&store))
-        .expect("bench configuration is valid");
-    let disk_ms = sw.ms();
+    let mut disk_samples = Vec::new();
+    let mut disk = None;
+    for it in 0..opts.warmup + opts.runs.max(1) {
+        let sw = Stopwatch::start();
+        let r = est()
+            .fit_source(RowSource::Disk(&store))
+            .expect("bench configuration is valid");
+        let ms = sw.ms();
+        if it >= opts.warmup {
+            disk_samples.push(ms);
+        }
+        disk = Some(r);
+    }
+    let disk = disk.expect("at least one run");
+    let disk_t = TimingStats::from_ms(&disk_samples);
     let peak_resident = resident_peak_bytes();
     let full_bytes = store.in_memory_bytes();
     std::fs::remove_file(&shard_path).ok();
@@ -130,7 +171,10 @@ fn main() {
     );
     println!(
         "{:<26} {:>10.1}ms {:>10.1}ms {:>11.2}x",
-        "train wall-clock", mem_ms, disk_ms, disk_ms / mem_ms.max(1e-9)
+        "train wall-clock",
+        mem_t.mean_ms,
+        disk_t.mean_ms,
+        disk_t.mean_ms / mem_t.mean_ms.max(1e-9)
     );
     println!(
         "{:<26} {:>9.2}MiB {:>9.2}MiB {:>11.2}x",
@@ -146,27 +190,56 @@ fn main() {
         disk.iterations()
     );
 
+    let mut report = RunReport::new("out_of_core");
+    report.note("bit-identical in-memory vs on-disk fits; ms are mean over --runs");
+    report.config_str("variant", variant.name());
+    for (key, v) in [
+        ("rows", rows),
+        ("vocab", vocab),
+        ("k", k),
+        ("max_iter", max_iter),
+        ("chunk_rows", chunk_rows),
+        ("threads", threads),
+        ("runs", opts.runs),
+        ("warmup", opts.warmup),
+    ] {
+        report.config_num(key, v as f64);
+    }
+    report.config_num("seed", seed as f64);
+    let mut row = vec![
+        ("convert_ms".to_string(), Json::Num(convert_ms)),
+        ("full_matrix_bytes".to_string(), Json::Num(full_bytes as f64)),
+        (
+            "peak_resident_bytes".to_string(),
+            Json::Num(peak_resident as f64),
+        ),
+        (
+            "resident_ratio".to_string(),
+            Json::Num(peak_resident as f64 / full_bytes.max(1) as f64),
+        ),
+        (
+            "peak_rss_bytes".to_string(),
+            peak_rss_bytes().map_or(Json::Null, |b| Json::Num(b as f64)),
+        ),
+        ("objective".to_string(), Json::Num(disk.objective())),
+        (
+            "iterations".to_string(),
+            Json::Num(disk.iterations() as f64),
+        ),
+        ("bit_identical_to_in_memory".to_string(), Json::Bool(true)),
+    ];
+    row.extend(timing_fields("mem_train", &mem_t));
+    row.extend(timing_fields("disk_train", &disk_t));
+    report.push_result(row);
+
     let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")
         .join("BENCH_out_of_core.json");
-    let rss = peak_rss_bytes().map_or("null".to_string(), |b| b.to_string());
-    let json = format!(
-        "{{\n  \"bench\": \"out_of_core\",\n  \"config\": {{\n    \"variant\": \"{}\",\n    \
-         \"rows\": {rows},\n    \"vocab\": {vocab},\n    \"k\": {k},\n    \
-         \"max_iter\": {max_iter},\n    \"chunk_rows\": {chunk_rows},\n    \
-         \"threads\": {threads},\n    \"seed\": {seed}\n  }},\n  \"results\": {{\n    \
-         \"convert_ms\": {convert_ms:.2},\n    \"mem_train_ms\": {mem_ms:.2},\n    \
-         \"disk_train_ms\": {disk_ms:.2},\n    \"full_matrix_bytes\": {full_bytes},\n    \
-         \"peak_resident_bytes\": {peak_resident},\n    \
-         \"resident_ratio\": {:.6},\n    \"peak_rss_bytes\": {rss},\n    \
-         \"objective\": {:.9},\n    \"iterations\": {},\n    \
-         \"bit_identical_to_in_memory\": true\n  }}\n}}\n",
-        variant.name(),
-        peak_resident as f64 / full_bytes.max(1) as f64,
-        disk.objective(),
-        disk.iterations()
+    debug_assert!(
+        RunReport::check_str(&report.to_json().pretty(2)).is_ok(),
+        "emitting an invalid report"
     );
-    match std::fs::write(&json_path, &json) {
+    match report.save(&json_path) {
         Ok(()) => println!("# wrote {}", json_path.display()),
         Err(e) => println!("# could not write {}: {e}", json_path.display()),
     }

@@ -10,9 +10,14 @@
 //! * On <5%-density text at k = 64 the pruned traversal performs
 //!   **strictly fewer multiply-adds** than exhaustive gather.
 //!
+//! Each batch-query measurement repeats `--warmup` untimed + `--runs`
+//! timed times (answers are deterministic; only wall-clock varies), and a
+//! final timed pass reports exact per-query latency percentiles from the
+//! engine's log-scale histogram.
+//!
 //! ```text
 //! cargo bench --bench bench_serve -- [--rows 8000] [--k 64] [--top 5]
-//!     [--seed 42] [--truncate 64]
+//!     [--seed 42] [--truncate 64] [--runs 1] [--warmup 0]
 //! ```
 
 // Bench and test targets favour readable literal casts and exact
@@ -24,8 +29,9 @@ use sphkm::data::synth::SynthConfig;
 use sphkm::kmeans::{Engine, KernelChoice, MiniBatchParams, SphericalKMeans};
 use sphkm::model::Model;
 use sphkm::serve::{QueryEngine, ServeConfig, ServeMode};
+use sphkm::util::benchkit::BenchOpts;
 use sphkm::util::cli::Args;
-use sphkm::util::timer::Stopwatch;
+use sphkm::util::timer::{Stopwatch, TimingStats};
 
 fn main() {
     let args = Args::from_env();
@@ -34,6 +40,15 @@ fn main() {
     let p: usize = args.get_or("top", 5).unwrap_or(5);
     let seed: u64 = args.get_or("seed", 42).unwrap_or(42);
     let truncate: usize = args.get_or("truncate", 64).unwrap_or(64);
+    // Each measurement is a full batch over the corpus: default to a
+    // single timed run with no warmup (the historical behaviour).
+    let mut opts = BenchOpts::from_args(&args);
+    if !args.has("runs") {
+        opts.runs = 1;
+    }
+    if !args.has("warmup") {
+        opts.warmup = 0;
+    }
 
     let ds = SynthConfig {
         name: "serve-bench".into(),
@@ -56,10 +71,12 @@ fn main() {
         density * 100.0
     );
     println!(
-        "# serve bench — {} rows × {} dims ({:.3}% nnz), k={k}, top-{p}",
+        "# serve bench — {} rows × {} dims ({:.3}% nnz), k={k}, top-{p}, runs={} (+{} warmup)",
         ds.matrix.rows(),
         ds.matrix.cols(),
-        density * 100.0
+        density * 100.0,
+        opts.runs,
+        opts.warmup
     );
 
     // Train a sparse-centroid model and round-trip it through persistence.
@@ -105,12 +122,35 @@ fn main() {
             model.clone(),
             &ServeConfig { mode: ServeMode::Pruned, threads },
         );
-        let sw = Stopwatch::start();
-        let (ex, ex_stats) = engine.top_p_batch_exhaustive(&ds.matrix, p);
-        let ex_ms = sw.ms();
-        let sw = Stopwatch::start();
-        let (pr, pr_stats) = engine.top_p_batch_pruned(&ds.matrix, p);
-        let pr_ms = sw.ms();
+        // Batch answers are deterministic, so repetitions reproduce the
+        // same results/stats and only add wall-clock samples; the last
+        // repetition feeds the bit-identity asserts below.
+        let mut ex_samples = Vec::new();
+        let mut ex_out = None;
+        for it in 0..opts.warmup + opts.runs.max(1) {
+            let sw = Stopwatch::start();
+            let out = engine.top_p_batch_exhaustive(&ds.matrix, p);
+            let ms = sw.ms();
+            if it >= opts.warmup {
+                ex_samples.push(ms);
+            }
+            ex_out = Some(out);
+        }
+        let (ex, ex_stats) = ex_out.expect("at least one run");
+        let ex_ms = TimingStats::from_ms(&ex_samples).mean_ms;
+        let mut pr_samples = Vec::new();
+        let mut pr_out = None;
+        for it in 0..opts.warmup + opts.runs.max(1) {
+            let sw = Stopwatch::start();
+            let out = engine.top_p_batch_pruned(&ds.matrix, p);
+            let ms = sw.ms();
+            if it >= opts.warmup {
+                pr_samples.push(ms);
+            }
+            pr_out = Some(out);
+        }
+        let (pr, pr_stats) = pr_out.expect("at least one run");
+        let pr_ms = TimingStats::from_ms(&pr_samples).mean_ms;
 
         // Bit-identity of the pruned traversal, per thread count, and of
         // every thread count against the serial baseline.
@@ -142,6 +182,31 @@ fn main() {
             );
         }
     }
+    // One timed pass through the histogram-instrumented batch path: exact
+    // per-query latency percentiles, and answers bit-identical to the
+    // serial baseline.
+    let engine = QueryEngine::new(
+        model.clone(),
+        &ServeConfig { mode: ServeMode::Pruned, threads: 0 },
+    );
+    let (timed, _, hist) = engine.top_p_batch_timed(&ds.matrix, p);
+    assert_eq!(
+        baseline.as_ref(),
+        Some(&timed),
+        "timed batch must match serial baseline bitwise"
+    );
+    println!(
+        "# pruned query latency: p50={:.4} ms, p95={:.4} ms, p99={:.4} ms \
+         (min {:.4}, mean {:.4}, max {:.4}; {} samples)",
+        hist.quantile_ms(0.50),
+        hist.quantile_ms(0.95),
+        hist.quantile_ms(0.99),
+        hist.min_ns() as f64 / 1e6,
+        hist.mean_ns() / 1e6,
+        hist.max_ns() as f64 / 1e6,
+        hist.count()
+    );
+
     let (ex_madds, pr_madds) = madds;
     assert!(
         pr_madds < ex_madds,

@@ -4,7 +4,12 @@
 //!
 //! ```text
 //! cargo bench --bench bench_table2 -- [--scale S] [--reps 10] [--ks ...]
+//!     [--runs N] [--warmup W]
 //! ```
+//!
+//! `--runs` is honored as an alias for `--reps` (the uniform bench-suite
+//! spelling) when `--reps` is absent; `--warmup W` runs W untimed tiny
+//! passes before the measured experiment.
 
 // Bench and test targets favour readable literal casts and exact
 // (bit-level) float assertions; the workspace clippy warnings on
@@ -12,13 +17,25 @@
 #![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 
 use sphkm::coordinator::experiments::{self, ExperimentOpts};
+use sphkm::data::datasets::Scale;
 use sphkm::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
     let mut opts = ExperimentOpts::from_args(&args);
-    if !args.has("reps") && !args.flag("quick") {
+    if args.has("runs") && !args.has("reps") {
+        opts.reps = args.get_or("runs", opts.reps).unwrap_or(opts.reps).max(1);
+    } else if !args.has("reps") && !args.flag("quick") {
         opts.reps = 3; // paper: 10 seeds; 3 keeps the default run tractable
+    }
+    let warmup: usize = args.get_or("warmup", 0).unwrap_or(0);
+    for _ in 0..warmup {
+        println!("# warmup pass (untimed)");
+        let mut w = opts.clone();
+        w.scale = Scale::Tiny;
+        w.reps = 1;
+        w.ks = vec![2];
+        experiments::table2(&w);
     }
     println!("# Table 2 bench — scale={}, reps={}", opts.scale.name(), opts.reps);
     experiments::table2(&opts);

@@ -5,7 +5,12 @@
 //! ```text
 //! cargo bench --bench bench_table3 -- [--scale tiny|small|medium]
 //!     [--reps N] [--ks 2,10,20,50,100,200] [--quick] [--extended]
+//!     [--runs N] [--warmup W]
 //! ```
+//!
+//! `--runs` is honored as an alias for `--reps` (the uniform bench-suite
+//! spelling) when `--reps` is absent; `--warmup W` runs W untimed tiny
+//! passes before the measured experiment.
 //!
 //! `--extended` adds the Yinyang variant (§5.5, implemented beyond the
 //! paper). `--table1` prints the dataset inventory as well.
@@ -16,11 +21,24 @@
 #![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 
 use sphkm::coordinator::experiments::{self, ExperimentOpts};
+use sphkm::data::datasets::Scale;
 use sphkm::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
-    let opts = ExperimentOpts::from_args(&args);
+    let mut opts = ExperimentOpts::from_args(&args);
+    if args.has("runs") && !args.has("reps") {
+        opts.reps = args.get_or("runs", opts.reps).unwrap_or(opts.reps).max(1);
+    }
+    let warmup: usize = args.get_or("warmup", 0).unwrap_or(0);
+    for _ in 0..warmup {
+        println!("# warmup pass (untimed)");
+        let mut w = opts.clone();
+        w.scale = Scale::Tiny;
+        w.reps = 1;
+        w.ks = vec![2];
+        experiments::table3(&w, false);
+    }
     println!("# Table 3 bench — scale={}, reps={}", opts.scale.name(), opts.reps);
     if args.flag("table1") {
         experiments::table1(&opts);

@@ -73,6 +73,12 @@ pub struct Centers {
     /// its `p(j)` is exactly 1 with no computation, and its column of the
     /// kernel store needs no rewrite.
     dirty: Vec<bool>,
+    /// Wall-clock spent rewriting the kernel store (transpose columns /
+    /// postings) at the update barriers since the last
+    /// [`Centers::take_refresh_ms`] drain. Accumulated only under the
+    /// `trace` feature (always exactly 0.0 otherwise — the spans
+    /// const-fold away, see [`crate::obs::span`]).
+    refresh_ms: f64,
 }
 
 impl Centers {
@@ -107,6 +113,7 @@ impl Centers {
             centers,
             p: vec![1.0; k],
             dirty: vec![false; k],
+            refresh_ms: 0.0,
         };
         me.refresh_store_all();
         me
@@ -146,6 +153,7 @@ impl Centers {
             centers,
             p: vec![1.0; k],
             dirty: vec![false; k],
+            refresh_ms: 0.0,
         };
         me.refresh_store_all();
         me
@@ -438,13 +446,17 @@ impl Centers {
             self.p[j] = crate::bounds::clamp_sim(self.centers.row_dot(j, &self.prev, j));
             dots += 1;
             if !bulk_inverted {
+                let sp = crate::obs::span::span_start();
                 self.refresh_store_center(j);
+                self.refresh_ms += crate::obs::span::span_ms(sp);
             }
         }
         if bulk_inverted {
+            let sp = crate::obs::span::span_start();
             if let CenterStore::Inverted(idx) | CenterStore::Pruned(idx) = &mut self.store {
                 *idx = InvertedIndex::from_centers(&self.centers);
             }
+            self.refresh_ms += crate::obs::span::span_ms(sp);
         }
         dots
     }
@@ -497,9 +509,20 @@ impl Centers {
             }
             self.p[j] = crate::bounds::clamp_sim(self.centers.row_dot(j, &self.prev, j));
             dots += 1;
+            let sp = crate::obs::span::span_start();
             self.refresh_store_center(j);
+            self.refresh_ms += crate::obs::span::span_ms(sp);
         }
         dots
+    }
+
+    /// Drain the kernel-store refresh wall-clock accumulated by the
+    /// update barriers since the last call. The engines shift this slice
+    /// of their update span into the index-refresh phase
+    /// ([`crate::obs::Phase::IndexRefresh`]); always exactly 0.0 without
+    /// the `trace` feature.
+    pub(crate) fn take_refresh_ms(&mut self) -> f64 {
+        std::mem::take(&mut self.refresh_ms)
     }
 
     /// Truncate every current center to its `m` largest-magnitude

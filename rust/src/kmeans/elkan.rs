@@ -18,6 +18,7 @@ use super::{
 use crate::audit::AUDIT_ENABLED;
 use crate::bounds::cc::CenterBounds;
 use crate::bounds::{update_lower_pre, update_upper_pre};
+use crate::obs::{span::span_start, Phase};
 use crate::util::timer::Stopwatch;
 
 pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
@@ -45,8 +46,11 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
         let iteration = ctx.stats.iters.len();
 
         // Center–center half-angle bounds for the current centers.
+        let sp = span_start();
         iter.sims_center_center += cb.recompute(ctx.centers.centers());
+        iter.phases.record(Phase::Bounds, sp);
 
+        let sp = span_start();
         let outs = {
             let src = ctx.src;
             let centers = &ctx.centers;
@@ -149,14 +153,20 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                 out
             })
         };
+        iter.phases.record(Phase::Assignment, sp);
+        let sp = span_start();
         ctx.merge_shards(outs, &mut iter);
 
         if iter.reassignments == 0 {
+            iter.phases.record(Phase::Update, sp);
             iter.wall_ms = sw.ms();
             ctx.push_iter(iter, true);
             return true;
         }
         iter.sims_center_center += ctx.centers.update();
+        iter.phases.record(Phase::Update, sp);
+        iter.phases
+            .shift(Phase::Update, Phase::IndexRefresh, ctx.centers.take_refresh_ms());
         iter.wall_ms = sw.ms();
         if ctx.push_iter(iter, false) {
             return false;

@@ -212,6 +212,13 @@ pub struct IterSnapshot<'a> {
     /// first violation instead of waiting for the fit to finish and
     /// return [`FitError::AuditViolation`].
     pub audit_violations: &'a [AuditViolation],
+    /// Wall-clock milliseconds since the engine started this fit,
+    /// measured when the snapshot is delivered. Always populated (no
+    /// feature gate) — one clock read per iteration barrier.
+    pub elapsed_ms: f64,
+    /// Wall-clock milliseconds of this iteration/epoch alone — a copy of
+    /// [`IterStats::wall_ms`] for convenience.
+    pub iter_ms: f64,
 }
 
 /// Per-iteration hook threaded through every engine's loop by
@@ -537,6 +544,11 @@ impl SphericalKMeans {
         // similarity matrix, optional resume state).
         let mut sim_matrix = None;
         let mut resume: Option<TrainState> = None;
+        // Pre-loop spans: seeding wall-clock, and the shard-I/O delta the
+        // fit accrues in the global registry (out-of-core runs under the
+        // `trace` feature; both exactly zero without it).
+        let seed_sp = crate::obs::span::span_start();
+        let io_ms_before = crate::obs::metrics::global_shard_io_ms();
         let centers = match &self.start {
             Start::Fresh => match &self.engine {
                 Engine::Exact(p) if p.preinit => {
@@ -586,7 +598,14 @@ impl SphericalKMeans {
             }
         };
         let prior_steps = resume.as_ref().map_or(0, |s| s.steps_done);
-        let (result, state, violations) = match &self.engine {
+        // Seeding only happens on a fresh start; warm starts clone
+        // existing centers, which is not seeding work.
+        let seeding_ms = if matches!(self.start, Start::Fresh) {
+            crate::obs::span::span_ms(seed_sp)
+        } else {
+            0.0
+        };
+        let (mut result, state, violations) = match &self.engine {
             Engine::Exact(_) => fit_exact(
                 data,
                 &cfg,
@@ -601,6 +620,13 @@ impl SphericalKMeans {
         // always would, but the exactness contract it rests on is broken.
         if let Some(v) = violations.into_iter().next() {
             return Err(FitError::AuditViolation(v));
+        }
+        if crate::obs::TRACE_ENABLED {
+            result.stats.pre.add(crate::obs::Phase::Seeding, seeding_ms);
+            let io_ms = crate::obs::metrics::global_shard_io_ms() - io_ms_before;
+            if io_ms > 0.0 {
+                result.stats.pre.add(crate::obs::Phase::ShardIo, io_ms);
+            }
         }
         let meta = TrainingMeta {
             variant: if is_minibatch {

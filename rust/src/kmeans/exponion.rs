@@ -28,6 +28,7 @@ use super::{
 use crate::audit::AUDIT_ENABLED;
 use crate::bounds::hamerly_bound::{update_eq9_pre, update_min_p_guarded, update_safe};
 use crate::bounds::{sim_upper, update_lower};
+use crate::obs::{span::span_start, Phase};
 use crate::util::timer::Stopwatch;
 
 pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
@@ -62,6 +63,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
 
         // Maintain-bound inputs across the last center movement (same
         // machinery as Hamerly §5.3).
+        let sp = span_start();
         {
             let ex = ctx.centers.p_extremes();
             for a in 0..k {
@@ -87,7 +89,9 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
         for list in &mut neighbors {
             list.sort_unstable_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
         }
+        iter.phases.record(Phase::Bounds, sp);
 
+        let sp = span_start();
         let outs = {
             let src = ctx.src;
             let centers = &ctx.centers;
@@ -216,14 +220,20 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                 out
             })
         };
+        iter.phases.record(Phase::Assignment, sp);
+        let sp = span_start();
         ctx.merge_shards(outs, &mut iter);
 
         if iter.reassignments == 0 {
+            iter.phases.record(Phase::Update, sp);
             iter.wall_ms = sw.ms();
             ctx.push_iter(iter, true);
             return true;
         }
         iter.sims_center_center += ctx.centers.update();
+        iter.phases.record(Phase::Update, sp);
+        iter.phases
+            .shift(Phase::Update, Phase::IndexRefresh, ctx.centers.take_refresh_ms());
         iter.wall_ms = sw.ms();
         if ctx.push_iter(iter, false) {
             return false;

@@ -21,6 +21,7 @@ use crate::audit::AUDIT_ENABLED;
 use crate::bounds::cc::nearest_center_bounds;
 use crate::bounds::hamerly_bound::{update_eq9_pre, update_min_p_guarded, update_safe};
 use crate::bounds::update_lower;
+use crate::obs::{span::span_start, Phase};
 use crate::util::timer::Stopwatch;
 
 /// Shared implementation: `use_s_test = true` for full Hamerly,
@@ -55,6 +56,7 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bo
         let mut iter = IterStats::default();
         let iteration = ctx.stats.iters.len();
 
+        let sp = span_start();
         {
             let ex = ctx.centers.p_extremes();
             for a in 0..k {
@@ -70,7 +72,9 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bo
         if use_s_test {
             iter.sims_center_center += nearest_center_bounds(ctx.centers.centers(), &mut s);
         }
+        iter.phases.record(Phase::Bounds, sp);
 
+        let sp = span_start();
         let outs = {
             let src = ctx.src;
             let centers = &ctx.centers;
@@ -202,14 +206,20 @@ pub(crate) fn run_impl(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig, use_s_test: bo
                 out
             })
         };
+        iter.phases.record(Phase::Assignment, sp);
+        let sp = span_start();
         ctx.merge_shards(outs, &mut iter);
 
         if iter.reassignments == 0 {
+            iter.phases.record(Phase::Update, sp);
             iter.wall_ms = sw.ms();
             ctx.push_iter(iter, true);
             return true;
         }
         iter.sims_center_center += ctx.centers.update();
+        iter.phases.record(Phase::Update, sp);
+        iter.phases
+            .shift(Phase::Update, Phase::IndexRefresh, ctx.centers.take_refresh_ms());
         iter.wall_ms = sw.ms();
         if ctx.push_iter(iter, false) {
             return false;

@@ -80,6 +80,7 @@ use super::{
     TrainState,
 };
 use crate::audit::{AuditViolation, AUDIT_ENABLED};
+use crate::obs::{span::span_start, Phase};
 use crate::runtime::parallel::{split_mut, Plan, Pool};
 use crate::sparse::{CsrMatrix, DenseMatrix, RowSource};
 use crate::util::rng::Xoshiro256;
@@ -149,6 +150,7 @@ pub(crate) fn fit_minibatch(
     prior_steps: u64,
     mut obs: Option<&mut dyn Observer>,
 ) -> (KMeansResult, TrainState, Vec<AuditViolation>) {
+    let fit_sw = Stopwatch::start();
     let n = src.rows();
     let k = cfg.k;
     let b = cfg.batch_size.min(n.max(1));
@@ -220,6 +222,7 @@ pub(crate) fn fit_minibatch(
             let batch = rng.sample_distinct(n, b);
             // Sharded batch assignment against frozen centers.
             let plan = Plan::for_rows(b);
+            let sp = span_start();
             let outs = {
                 let centers = &centers;
                 let batch_ref: &[usize] = &batch;
@@ -254,8 +257,10 @@ pub(crate) fn fit_minibatch(
                 iter.absorb(&o);
                 violations.extend(v);
             }
+            iter.phases.record(Phase::Assignment, sp);
             // Sequential decayed-rate fold, in batch order, then a partial
             // center update touching only the folded centers.
+            let sp = span_start();
             let mut rows = src.cursor();
             for (pos, &i) in batch.iter().enumerate() {
                 let j = basg[pos];
@@ -267,6 +272,9 @@ pub(crate) fn fit_minibatch(
             }
             drop(rows);
             iter.sims_center_center += centers.update_partial(cfg.truncate);
+            iter.phases.record(Phase::Update, sp);
+            iter.phases
+                .shift(Phase::Update, Phase::IndexRefresh, centers.take_refresh_ms());
         }
         // Largest per-center movement over the whole epoch, in cosine
         // distance (k center·center dots, charged).
@@ -290,10 +298,10 @@ pub(crate) fn fit_minibatch(
         }
         if shift <= cfg.tol {
             converged = true;
-            notify(&mut obs, &stats, true, Some(shift), &violations);
+            notify(&mut obs, &stats, true, Some(shift), &violations, fit_sw.ms());
             break;
         }
-        if notify(&mut obs, &stats, false, Some(shift), &violations) {
+        if notify(&mut obs, &stats, false, Some(shift), &violations, fit_sw.ms()) {
             break;
         }
     }
@@ -308,6 +316,7 @@ pub(crate) fn fit_minibatch(
         let sw = Stopwatch::start();
         let mut iter = IterStats::default();
         let plan = Plan::for_rows(n);
+        let sp = span_start();
         let outs = {
             let centers = &centers;
             let mut works: Vec<(Range<usize>, &mut [u32])> = Vec::with_capacity(plan.len());
@@ -341,11 +350,12 @@ pub(crate) fn fit_minibatch(
             obj += shard_obj;
             violations.extend(v);
         }
+        iter.phases.record(Phase::Assignment, sp);
         iter.wall_ms = sw.ms();
         stats.iters.push(iter);
         // The final pass is reported to the observer for completeness; the
         // run is over either way, so its stop request is moot.
-        let _ = notify(&mut obs, &stats, converged, None, &violations);
+        let _ = notify(&mut obs, &stats, converged, None, &violations, fit_sw.ms());
     }
 
     let state = TrainState {
@@ -384,6 +394,7 @@ fn notify(
     converged: bool,
     center_shift: Option<f64>,
     audit_violations: &[AuditViolation],
+    elapsed_ms: f64,
 ) -> bool {
     let Some(obs) = obs.as_deref_mut() else {
         return false;
@@ -395,6 +406,8 @@ fn notify(
         converged,
         center_shift,
         audit_violations,
+        elapsed_ms,
+        iter_ms: stats.iters[iteration].wall_ms,
     };
     obs.on_iteration(&snap).is_break()
 }

@@ -148,6 +148,7 @@ mod yinyang;
 use crate::audit::AuditViolation;
 use crate::data::Dataset;
 use crate::init::InitMethod;
+use crate::obs::{span::span_start, Phase};
 use crate::runtime::parallel::{split_mut, Plan, Pool};
 use crate::sparse::csr::RowView;
 use crate::sparse::{CsrMatrix, DenseMatrix, RowCursor, RowSource};
@@ -1015,6 +1016,9 @@ pub(crate) struct Ctx<'a, 'o> {
     prior_steps: u64,
     /// Per-iteration hook, notified by [`Ctx::push_iter`].
     obs: Option<&'o mut dyn Observer>,
+    /// Started at context construction (= fit start); drives the
+    /// [`IterSnapshot::elapsed_ms`] wall-clock field.
+    fit_sw: Stopwatch,
 }
 
 impl<'a, 'o> Ctx<'a, 'o> {
@@ -1067,6 +1071,7 @@ impl<'a, 'o> Ctx<'a, 'o> {
             resume,
             prior_steps: start.prior_steps,
             obs: start.obs,
+            fit_sw: Stopwatch::start(),
         }
     }
 
@@ -1109,6 +1114,8 @@ impl<'a, 'o> Ctx<'a, 'o> {
             converged,
             center_shift: None,
             audit_violations: &self.violations,
+            elapsed_ms: self.fit_sw.ms(),
+            iter_ms: self.stats.iters[iteration].wall_ms,
         };
         obs.on_iteration(&snap).is_break()
     }
@@ -1159,6 +1166,7 @@ impl<'a, 'o> Ctx<'a, 'o> {
         let k = self.k;
         let pre = self.preinit.take();
         let mut iter = IterStats::default();
+        let sp = span_start();
         {
             let src = self.src;
             let centers = &self.centers;
@@ -1239,11 +1247,16 @@ impl<'a, 'o> Ctx<'a, 'o> {
                 self.violations.extend(v);
             }
         }
+        iter.phases.record(Phase::Assignment, sp);
         iter.reassignments = self.src.rows() as u64;
         // Build sums for the initial assignment and move centers once.
+        let sp = span_start();
         self.centers
             .rebuild_sharded_source(self.src, &self.assign, &self.pool);
         iter.sims_center_center += self.centers.update();
+        iter.phases.record(Phase::Update, sp);
+        iter.phases
+            .shift(Phase::Update, Phase::IndexRefresh, self.centers.take_refresh_ms());
         iter.wall_ms = sw.ms();
         self.push_iter(iter, false)
     }
@@ -1260,6 +1273,7 @@ impl<'a, 'o> Ctx<'a, 'o> {
         let sw = Stopwatch::start();
         let k = self.k;
         let mut iter = IterStats::default();
+        let sp = span_start();
         {
             let src = self.src;
             let centers = &self.centers;
@@ -1292,6 +1306,9 @@ impl<'a, 'o> Ctx<'a, 'o> {
                 iter.absorb(o);
             }
         }
+        // A resume pass only (re)derives bound state — charge it to the
+        // bounds-maintenance phase rather than assignment.
+        iter.phases.record(Phase::Bounds, sp);
         iter.wall_ms = sw.ms();
         self.push_iter(iter, false)
     }

@@ -15,6 +15,7 @@ use super::{
 };
 use crate::audit::AUDIT_ENABLED;
 use crate::bounds::{update_lower_pre, update_upper_pre};
+use crate::obs::{span::span_start, Phase};
 use crate::util::timer::Stopwatch;
 
 pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
@@ -40,6 +41,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
         let mut iter = IterStats::default();
         let iteration = ctx.stats.iters.len();
 
+        let sp = span_start();
         let outs = {
             let src = ctx.src;
             let centers = &ctx.centers;
@@ -117,14 +119,20 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                 out
             })
         };
+        iter.phases.record(Phase::Assignment, sp);
+        let sp = span_start();
         ctx.merge_shards(outs, &mut iter);
 
         if iter.reassignments == 0 {
+            iter.phases.record(Phase::Update, sp);
             iter.wall_ms = sw.ms();
             ctx.push_iter(iter, true);
             return true;
         }
         iter.sims_center_center += ctx.centers.update();
+        iter.phases.record(Phase::Update, sp);
+        iter.phases
+            .shift(Phase::Update, Phase::IndexRefresh, ctx.centers.take_refresh_ms());
         iter.wall_ms = sw.ms();
         if ctx.push_iter(iter, false) {
             return false;

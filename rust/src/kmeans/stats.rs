@@ -1,6 +1,10 @@
 //! Per-iteration instrumentation. Fig. 1 of the paper plots the number of
 //! similarity computations and the run time of every iteration; this module
-//! records exactly those series for every algorithm run.
+//! records exactly those series for every algorithm run, plus (under the
+//! `trace` feature) the per-phase wall-clock breakdown of every iteration
+//! — see [`crate::obs`].
+
+use crate::obs::PhaseTimes;
 
 /// Counters for a single k-means iteration.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -35,6 +39,11 @@ pub struct IterStats {
     pub prune_survivors: u64,
     /// Wall time of the iteration in milliseconds.
     pub wall_ms: f64,
+    /// Per-phase wall-clock breakdown of the iteration, recorded at the
+    /// iteration barriers under the `trace` feature (all-zero without
+    /// it). Like `wall_ms`, measured on the coordinating thread around
+    /// the barriers — see [`crate::obs::span`].
+    pub phases: PhaseTimes,
 }
 
 impl IterStats {
@@ -48,7 +57,8 @@ impl IterStats {
     /// every shard grid and thread count. `wall_ms` is deliberately **not**
     /// summed: shard timings overlap under parallel execution, so the
     /// caller measures the iteration wall time around the whole barrier
-    /// instead.
+    /// instead, and the same rule applies to the per-phase span table
+    /// (`phases`), which is charged only by the coordinating thread.
     pub fn absorb(&mut self, shard: &IterStats) {
         self.sims_point_center += shard.sims_point_center;
         self.madds_point_center += shard.madds_point_center;
@@ -69,6 +79,11 @@ pub struct RunStats {
     /// Bytes of bound storage the algorithm allocated (paper §6 discusses
     /// the 2 GB Elkan bound matrix vs Hamerly's 44 MB).
     pub bound_bytes: usize,
+    /// Phase time charged before the iteration loop: center seeding, and
+    /// (out-of-core runs under `trace`) the run's shard-I/O total, which
+    /// overlaps the assignment phases rather than adding to them. All-zero
+    /// without the `trace` feature.
+    pub pre: PhaseTimes,
 }
 
 impl RunStats {
@@ -108,6 +123,20 @@ impl RunStats {
     /// Number of iterations recorded (including the initial pass).
     pub fn iterations(&self) -> usize {
         self.iters.len()
+    }
+
+    /// Run-level per-phase wall-clock totals: the pre-loop spans
+    /// (seeding, shard I/O) plus every iteration's table. All-zero
+    /// without the `trace` feature. The barrier phases
+    /// ([`PhaseTimes::barrier_ms`]) are disjoint and account for fit
+    /// wall-clock; [`crate::obs::Phase::ShardIo`] overlaps them (see
+    /// [`crate::obs::span`]).
+    pub fn phase_totals(&self) -> PhaseTimes {
+        let mut total = self.pre;
+        for it in &self.iters {
+            total.merge(&it.phases);
+        }
+        total
     }
 
     /// Cumulative similarity-computation series (Fig. 1b).
@@ -182,6 +211,7 @@ mod tests {
                     prune_terms: g.usize_in(0, 2_000) as u64,
                     prune_survivors: g.usize_in(0, 2_000) as u64,
                     wall_ms: g.f64_in(0.0, 5.0),
+                    phases: PhaseTimes::default(),
                 };
                 serial.sims_point_center += part.sims_point_center;
                 serial.madds_point_center += part.madds_point_center;
@@ -204,6 +234,27 @@ mod tests {
             assert_eq!(merged.sims_total(), serial.sims_total());
             // Overlapping shard wall clocks must not leak into the merge.
             assert_eq!(merged.wall_ms, 0.0);
+            // Same rule for the per-phase span table.
+            assert!(merged.phases.is_zero());
         });
+    }
+
+    #[test]
+    fn phase_totals_sum_pre_and_iters() {
+        use crate::obs::Phase;
+        let mut s = RunStats::default();
+        s.pre.add(Phase::Seeding, 3.0);
+        let mut a = IterStats::default();
+        a.phases.add(Phase::Assignment, 2.0);
+        a.phases.add(Phase::Update, 1.0);
+        let mut b = IterStats::default();
+        b.phases.add(Phase::Assignment, 4.0);
+        s.iters.push(a);
+        s.iters.push(b);
+        let t = s.phase_totals();
+        assert_eq!(t.get(Phase::Seeding), 3.0);
+        assert_eq!(t.get(Phase::Assignment), 6.0);
+        assert_eq!(t.get(Phase::Update), 1.0);
+        assert_eq!(t.barrier_ms(), 10.0);
     }
 }

@@ -21,6 +21,7 @@ use super::{
 use crate::audit::AUDIT_ENABLED;
 use crate::bounds::hamerly_bound::{update_eq9_pre, update_min_p_guarded, update_safe};
 use crate::bounds::update_lower;
+use crate::obs::{span::span_start, Phase};
 use crate::sparse::DenseMatrix;
 use crate::util::timer::Stopwatch;
 
@@ -130,6 +131,7 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
         let mut iter = IterStats::default();
         let iteration = ctx.stats.iters.len();
 
+        let sp = span_start();
         {
             let p = ctx.centers.p();
             for (gi, members) in groups.iter().enumerate() {
@@ -144,7 +146,9 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                 gp_one_minus_min_sq[gi] = (1.0 - mn * mn).max(0.0);
             }
         }
+        iter.phases.record(Phase::Bounds, sp);
 
+        let sp = span_start();
         let outs = {
             let src = ctx.src;
             let centers = &ctx.centers;
@@ -308,14 +312,20 @@ pub(crate) fn run(ctx: &mut Ctx<'_, '_>, cfg: &KMeansConfig) -> bool {
                 out
             })
         };
+        iter.phases.record(Phase::Assignment, sp);
+        let sp = span_start();
         ctx.merge_shards(outs, &mut iter);
 
         if iter.reassignments == 0 {
+            iter.phases.record(Phase::Update, sp);
             iter.wall_ms = sw.ms();
             ctx.push_iter(iter, true);
             return true;
         }
         iter.sims_center_center += ctx.centers.update();
+        iter.phases.record(Phase::Update, sp);
+        iter.phases
+            .shift(Phase::Update, Phase::IndexRefresh, ctx.centers.take_refresh_ms());
         iter.wall_ms = sw.ms();
         if ctx.push_iter(iter, false) {
             return false;

@@ -86,6 +86,8 @@ pub mod kmeans;
 pub mod metrics;
 pub mod model;
 #[allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+pub mod obs;
+#[allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 pub mod runtime;
 #[allow(clippy::cast_possible_truncation, clippy::float_cmp)]
 pub mod serve;

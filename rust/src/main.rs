@@ -6,10 +6,11 @@
 //!                 [--algo simp-elkan] [--init kmeans++] [--seed 0]
 //!                 [--scale small] [--stats] [--mmap] [--chunk-rows N]
 //!                 [--save-model model.spkm] [--resume model.spkm]
-//!                 [--save-assign assign.csv]
+//!                 [--save-assign assign.csv] [--trace-out trace.jsonl]
 //! sphkm assign    --model model.spkm --data <name|path.svm|path.mtx>
 //!                 [--top 1] [--mode auto|pruned|exhaustive] [--out top.csv]
-//!                 [--mmap]
+//!                 [--mmap] [--metrics-out metrics.json]
+//! sphkm report    --check FILE.json FILE.jsonl ...
 //! sphkm convert   --data file.svm --out file.sks [--normalize]
 //! sphkm gen       --data <name> --out file.svm [--scale small] [--seed 42]
 //! sphkm bench     --exp table1|table2|table3|fig1|fig2|ablation-cc|serve [opts]
@@ -32,6 +33,7 @@ use sphkm::model::Model;
 use sphkm::serve::{QueryEngine, ServeConfig, ServeMode};
 use sphkm::sparse::{RowSource, ShardStore};
 use sphkm::util::cli::Args;
+use sphkm::util::json::Json;
 use sphkm::{Engine, ExactParams, FittedModel, MiniBatchParams, SphericalKMeans};
 
 fn usage() -> ! {
@@ -55,6 +57,8 @@ USAGE:
                 [--save-assign FILE.csv] # write row,cluster assignments
                 [--audit]     # certify every bound-based skip against the
                               # exact cosine (needs --features audit)
+                [--trace-out FILE.jsonl] # per-iteration phase timings as
+                              # schema-stamped JSONL (needs --features trace)
                 [--save-model FILE.spkm] # persist the trained model + state
                 [--resume FILE.spkm]     # continue training a saved model
                                          # (k, engine, schedule and seed
@@ -62,7 +66,11 @@ USAGE:
   sphkm assign --model FILE.spkm --data <dataset> [--top P] [--threads T]
                [--mode auto|pruned|exhaustive] [--out FILE.csv]
                [--mmap]                 # low-memory streaming model load
+               [--metrics-out FILE.json] # query counters + per-query latency
+                                         # histogram (exact p50/p95/p99)
                [--scale S] [--seed N]   # answer nearest-center queries
+  sphkm report --check FILE...    # validate machine-readable outputs:
+                                  # .jsonl traces, report/metrics .json
   sphkm convert --data FILE.svm --out FILE.sks [--normalize]
                # stream a libsvm file into the chunked shard store the
                # --mmap trainer reads (bounded memory at any corpus size);
@@ -393,8 +401,18 @@ fn run_assign(args: &Args, scale: Scale, seed: u64) {
         .parse()
         .unwrap_or_else(|e| { eprintln!("{e}"); usage() });
     let engine = QueryEngine::new(model, &ServeConfig { mode, threads });
+    // --metrics-out opts into the timed batch path: same results and
+    // ServeStats, plus a per-query latency histogram merged across the
+    // worker shards (available in every build — no feature needed).
+    let metrics_out = args.get("metrics-out").map(str::to_string);
     let sw = sphkm::util::timer::Stopwatch::start();
-    let (top, stats) = engine.top_p_batch(&ds.matrix, p);
+    let (top, stats, hist) = if metrics_out.is_some() {
+        let (top, stats, hist) = engine.top_p_batch_timed(&ds.matrix, p);
+        (top, stats, Some(hist))
+    } else {
+        let (top, stats) = engine.top_p_batch(&ds.matrix, p);
+        (top, stats, None)
+    };
     let ms = sw.ms();
     let qps = stats.queries as f64 / (ms / 1000.0).max(1e-9);
     println!(
@@ -406,6 +424,43 @@ fn run_assign(args: &Args, scale: Scale, seed: u64) {
         stats.madds as f64 / stats.queries.max(1) as f64,
         stats.centers_pruned,
     );
+    if let Some(h) = &hist {
+        println!(
+            "query latency: p50={:.4} ms, p95={:.4} ms, p99={:.4} ms \
+             (min {:.4}, mean {:.4}, max {:.4}; {} samples)",
+            h.quantile_ms(0.50),
+            h.quantile_ms(0.95),
+            h.quantile_ms(0.99),
+            h.min_ns() as f64 / 1e6,
+            h.mean_ns() / 1e6,
+            h.max_ns() as f64 / 1e6,
+            h.count(),
+        );
+    }
+    if let (Some(out), Some(h)) = (&metrics_out, &hist) {
+        let mut m = sphkm::obs::Metrics::new();
+        m.incr("serve.queries", stats.queries);
+        m.incr("serve.madds", stats.madds);
+        m.incr("serve.candidates_scored", stats.candidates_scored);
+        m.incr("serve.centers_pruned", stats.centers_pruned);
+        m.set_gauge("serve.qps", qps);
+        m.set_gauge("serve.wall_ms", ms);
+        m.merge_histogram("serve.query", h);
+        let doc = Json::Obj(vec![
+            (
+                "schema".to_string(),
+                Json::Str(sphkm::obs::metrics::METRICS_SCHEMA.to_string()),
+            ),
+            ("metrics".to_string(), m.to_json()),
+        ]);
+        let mut text = doc.pretty(2);
+        text.push('\n');
+        if let Err(e) = std::fs::write(out, text) {
+            eprintln!("could not save {out}: {e}");
+            std::process::exit(1);
+        }
+        println!("[metrics] {out}");
+    }
     if let Some(rss) = sphkm::util::mem::peak_rss_bytes() {
         println!("peak RSS: {:.2} MiB", rss as f64 / (1024.0 * 1024.0));
     }
@@ -596,37 +651,116 @@ fn main() {
                      cross-checked against the exact cosine"
                 );
             }
+            // --trace-out: the fit as schema-stamped JSONL (run_start /
+            // iter / run_end — see sphkm::obs::trace). Mirrors --audit:
+            // without the `trace` feature the spans a trace would report
+            // are compile-time no-ops, so the flag is an error rather
+            // than a file of all-zero phase timings posing as measured.
+            let mut tracer = args.get("trace-out").map(|path| {
+                if !sphkm::obs::TRACE_ENABLED {
+                    eprintln!(
+                        "error: --trace-out requires a binary built with the `trace` feature\n\
+                         (cargo run --features trace -- cluster ...)"
+                    );
+                    std::process::exit(2);
+                }
+                let fail = |e: std::io::Error| -> ! {
+                    eprintln!("could not write trace {path}: {e}");
+                    std::process::exit(1)
+                };
+                let mut w = sphkm::obs::trace::TraceWriter::create(std::path::Path::new(path))
+                    .unwrap_or_else(|e| fail(e));
+                w.record(
+                    "run_start",
+                    vec![
+                        (
+                            "algo".to_string(),
+                            Json::Str(
+                                if minibatch { "minibatch" } else { variant.name() }.to_string(),
+                            ),
+                        ),
+                        ("k".to_string(), Json::Num(k as f64)),
+                        ("n".to_string(), Json::Num(td.rows() as f64)),
+                        ("d".to_string(), Json::Num(td.cols() as f64)),
+                        ("threads".to_string(), Json::Num(threads as f64)),
+                        ("dataset".to_string(), Json::Str(td.name().to_string())),
+                        ("seed".to_string(), Json::Num(seed as f64)),
+                        ("kernel".to_string(), Json::Str(kernel.to_string())),
+                    ],
+                )
+                .unwrap_or_else(|e| fail(e));
+                (w, path.to_string())
+            });
             sphkm::sparse::chunked::reset_resident_peak();
             let sw = sphkm::util::timer::Stopwatch::start();
-            let fitted = if args.flag("stats") {
+            let stats_live = args.flag("stats");
+            let fitted = if stats_live || tracer.is_some() {
                 // Live per-iteration progress through the observer hook.
                 // The prune(terms/surv) columns are live only under
                 // --kernel pruned: query terms the MaxScore walk touched
                 // and centers that survived to an exact re-score.
-                println!(
-                    "\niter  sims_pc  sims_cc  reassign  skips(loop/bound)  \
-                     prune(terms/surv)  ms"
-                );
+                if stats_live {
+                    println!(
+                        "\niter  sims_pc  sims_cc  reassign  skips(loop/bound)  \
+                         prune(terms/surv)  ms   elapsed"
+                    );
+                }
                 let mut reported = 0usize;
                 let mut observer = |s: &IterSnapshot<'_>| {
-                    println!(
-                        "{:>4}  {:>8} {:>8} {:>9}  {:>7}/{:<9} {:>8}/{:<8} {:>8.2}",
-                        s.iteration,
-                        s.stats.sims_point_center,
-                        s.stats.sims_center_center,
-                        s.stats.reassignments,
-                        s.stats.loop_skips,
-                        s.stats.bound_skips,
-                        s.stats.prune_terms,
-                        s.stats.prune_survivors,
-                        s.stats.wall_ms
-                    );
-                    // Surface audit violations as they are recorded (the
-                    // fit also fails at the end with the first of them).
-                    for v in &s.audit_violations[reported..] {
-                        eprintln!("[audit] {v}");
+                    if stats_live {
+                        println!(
+                            "{:>4}  {:>8} {:>8} {:>9}  {:>7}/{:<9} {:>8}/{:<8} {:>8.2} {:>9.2}",
+                            s.iteration,
+                            s.stats.sims_point_center,
+                            s.stats.sims_center_center,
+                            s.stats.reassignments,
+                            s.stats.loop_skips,
+                            s.stats.bound_skips,
+                            s.stats.prune_terms,
+                            s.stats.prune_survivors,
+                            s.stats.wall_ms,
+                            s.elapsed_ms
+                        );
+                        // Surface audit violations as they are recorded
+                        // (the fit also fails at the end with the first).
+                        for v in &s.audit_violations[reported..] {
+                            eprintln!("[audit] {v}");
+                        }
+                        reported = s.audit_violations.len();
                     }
-                    reported = s.audit_violations.len();
+                    if let Some((w, path)) = tracer.as_mut() {
+                        let res = w.record(
+                            "iter",
+                            vec![
+                                ("iteration".to_string(), Json::Num(s.iteration as f64)),
+                                ("wall_ms".to_string(), Json::Num(s.stats.wall_ms)),
+                                ("elapsed_ms".to_string(), Json::Num(s.elapsed_ms)),
+                                (
+                                    "sims_point_center".to_string(),
+                                    Json::Num(s.stats.sims_point_center as f64),
+                                ),
+                                (
+                                    "sims_center_center".to_string(),
+                                    Json::Num(s.stats.sims_center_center as f64),
+                                ),
+                                (
+                                    "reassignments".to_string(),
+                                    Json::Num(s.stats.reassignments as f64),
+                                ),
+                                ("loop_skips".to_string(), Json::Num(s.stats.loop_skips as f64)),
+                                (
+                                    "bound_skips".to_string(),
+                                    Json::Num(s.stats.bound_skips as f64),
+                                ),
+                                ("converged".to_string(), Json::Bool(s.converged)),
+                                ("phases".to_string(), s.stats.phases.to_json()),
+                            ],
+                        );
+                        if let Err(e) = res {
+                            eprintln!("could not write trace {path}: {e}");
+                            std::process::exit(1);
+                        }
+                    }
                     ControlFlow::Continue(())
                 };
                 estimator.fit_source_observed(td.source(), &mut observer)
@@ -637,14 +771,52 @@ fn main() {
                 eprintln!("error: {e}");
                 std::process::exit(1)
             });
+            let total_ms = sw.ms();
+            if let Some((mut w, path)) = tracer.take() {
+                let res = w
+                    .record(
+                        "run_end",
+                        vec![
+                            ("iterations".to_string(), Json::Num(r.iterations() as f64)),
+                            ("objective".to_string(), Json::Num(r.objective())),
+                            ("total_ms".to_string(), Json::Num(total_ms)),
+                            ("converged".to_string(), Json::Bool(r.converged())),
+                            ("phases".to_string(), r.stats().phase_totals().to_json()),
+                        ],
+                    )
+                    .and_then(|()| w.finish());
+                if let Err(e) = res {
+                    eprintln!("could not write trace {path}: {e}");
+                    std::process::exit(1);
+                }
+                println!("[trace] {path} ({} records)", w.records());
+            }
             println!(
                 "done in {:.1} ms: {} iterations, converged={}, objective={:.4}, mean similarity={:.4}",
-                sw.ms(),
+                total_ms,
                 r.iterations(),
                 r.converged(),
                 r.objective(),
                 r.mean_similarity()
             );
+            // Per-phase wall-clock breakdown (all-zero, and therefore
+            // omitted, unless built with the `trace` feature).
+            if stats_live {
+                let totals = r.stats().phase_totals();
+                if !totals.is_zero() {
+                    let parts: Vec<String> = sphkm::obs::Phase::ALL
+                        .iter()
+                        .filter(|&&p| totals.get(p) > 0.0)
+                        .map(|&p| format!("{} {:.1} ms", p.name(), totals.get(p)))
+                        .collect();
+                    println!(
+                        "phases: {} — barrier phases cover {:.1} of {:.1} ms wall",
+                        parts.join(", "),
+                        totals.barrier_ms(),
+                        total_ms
+                    );
+                }
+            }
             println!(
                 "similarity computations: {} point-center ({} kernel madds via {}) + \
                  {} center-center",
@@ -816,6 +988,65 @@ fn main() {
         }
         "assign" => {
             run_assign(&args, scale, seed);
+        }
+        "report" => {
+            // `report --check FILE...`: validate machine-readable outputs
+            // against their committed schemas — `.jsonl` files as traces
+            // (sphkm.trace.v1), `.json` files by their schema stamp
+            // (sphkm.report.v1 bench reports, sphkm.metrics.v1 dumps).
+            if !args.has("check") {
+                usage();
+            }
+            let mut files: Vec<String> = Vec::new();
+            if let Some(v) = args.get("check") {
+                // `--check FILE` puts the first file in the flag value.
+                if v != "true" {
+                    files.push(v.to_string());
+                }
+            }
+            files.extend(args.positional.iter().skip(1).cloned());
+            if files.is_empty() {
+                eprintln!("error: report --check needs at least one file");
+                std::process::exit(2);
+            }
+            let mut failed = false;
+            for f in &files {
+                let verdict: Result<String, String> = std::fs::read_to_string(f)
+                    .map_err(|e| e.to_string())
+                    .and_then(|text| {
+                        if f.ends_with(".jsonl") {
+                            return sphkm::obs::trace::validate_trace(&text)
+                                .map(|n| format!("valid {} ({n} records)", sphkm::obs::TRACE_SCHEMA));
+                        }
+                        let doc = Json::parse(&text).map_err(|e| e.to_string())?;
+                        let schema = doc
+                            .get("schema")
+                            .and_then(Json::as_str)
+                            .unwrap_or("")
+                            .to_string();
+                        if schema == sphkm::util::report::REPORT_SCHEMA {
+                            sphkm::util::report::RunReport::validate(&doc)
+                                .map(|()| format!("valid {schema}"))
+                        } else if schema == sphkm::obs::metrics::METRICS_SCHEMA {
+                            doc.get("metrics")
+                                .and_then(Json::as_obj)
+                                .map(|_| format!("valid {schema}"))
+                                .ok_or_else(|| "missing object field \"metrics\"".to_string())
+                        } else {
+                            Err(format!("unknown or missing schema {schema:?}"))
+                        }
+                    });
+                match verdict {
+                    Ok(msg) => println!("{f}: {msg}"),
+                    Err(e) => {
+                        eprintln!("{f}: INVALID: {e}");
+                        failed = true;
+                    }
+                }
+            }
+            if failed {
+                std::process::exit(1);
+            }
         }
         "sweep" => {
             let path = args.get("config").unwrap_or_else(|| usage());

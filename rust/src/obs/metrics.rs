@@ -1,0 +1,479 @@
+//! Metrics registry: named counters, gauges, and fixed-bucket log-scale
+//! latency histograms with exact rank-based quantiles.
+//!
+//! [`LatencyHistogram`] is the workhorse: a fixed array of 256
+//! log-spaced buckets (4 sub-buckets per power-of-two octave of
+//! nanoseconds, covering 0 ns to ~2⁶³ ns) plus exact count/sum/min/max.
+//! Recording is O(1) with no allocation; two histograms merge by
+//! element-wise addition, which is associative and commutative, so
+//! per-shard histograms recorded on worker threads combine into exactly
+//! the histogram a serial recording would have produced (property-tested
+//! in `tests/obs.rs`). Quantiles are nearest-rank over bucket lower
+//! bounds, clamped to the exact observed min/max — exact for samples on
+//! bucket boundaries and within ≤ 25% relative bucket resolution
+//! otherwise.
+//!
+//! [`Metrics`] groups named counters, gauges, and histograms and renders
+//! to JSON for `assign --metrics-out`. A process-global instance
+//! collects background metrics that have no natural owner — currently
+//! the [`ShardStore`](crate::sparse::ShardStore) chunk loader — behind
+//! the same zero-cost `trace` gate as the spans:
+//! [`record_shard_io`] is a no-op unless handed a live span from
+//! [`span_start`](crate::obs::span::span_start).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Number of histogram buckets: 4 sub-buckets for each of 62 octaves
+/// plus 4 exact unit buckets, padded to a power of two.
+pub const HIST_BUCKETS: usize = 256;
+
+/// Schema identifier stamped on `assign --metrics-out` dumps (an object
+/// `{"schema": …, "metrics": {counters, gauges, histograms}}`); bump on
+/// any breaking shape change.
+pub const METRICS_SCHEMA: &str = "sphkm.metrics.v1";
+
+/// Counter name for shard-store chunk loads in the global registry.
+pub const SHARD_IO_LOADS: &str = "shard_io.chunk_loads";
+/// Counter name for shard-store bytes read in the global registry.
+pub const SHARD_IO_BYTES: &str = "shard_io.bytes_read";
+/// Histogram name for shard-store chunk-load latency in the global
+/// registry.
+pub const SHARD_IO_LATENCY: &str = "shard_io.chunk_load";
+
+/// Fixed-bucket log-scale latency histogram over nanosecond samples.
+///
+/// Buckets 0–3 hold the exact values 0–3 ns; from there each
+/// power-of-two octave `[2^o, 2^(o+1))` splits into 4 equal sub-buckets,
+/// so relative bucket resolution is ≤ 25% everywhere. Exact count, sum,
+/// min, and max ride alongside, making mean and the extreme quantiles
+/// exact regardless of bucketing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    counts: [u64; HIST_BUCKETS],
+    count: u64,
+    sum_ns: u64,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            counts: [0; HIST_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index for a nanosecond sample. Monotone in `ns`.
+    fn bucket(ns: u64) -> usize {
+        if ns < 4 {
+            return ns as usize;
+        }
+        // The leading one sits at bit `o` (o >= 2 here); the next two
+        // bits select the sub-bucket within the octave.
+        let o = 63 - u64::from(ns.leading_zeros());
+        let sub = (ns >> (o - 2)) & 3;
+        (4 * o - 4 + sub) as usize
+    }
+
+    /// Inclusive lower bound (in ns) of bucket `idx` — the value
+    /// quantile queries report for ranks landing in that bucket.
+    pub fn bucket_lower_ns(idx: usize) -> u64 {
+        if idx < 4 {
+            return idx as u64;
+        }
+        let o = (idx as u64) / 4 + 1;
+        let sub = (idx as u64) & 3;
+        (1u64 << o) + sub * (1u64 << (o - 2))
+    }
+
+    /// Record one duration sample.
+    #[inline]
+    pub fn record(&mut self, d: Duration) {
+        self.record_ns(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Record one nanosecond sample.
+    #[inline]
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[Self::bucket(ns)] += 1;
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of all samples in nanoseconds (saturating).
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    /// Exact minimum sample in nanoseconds (`0` when empty).
+    pub fn min_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min_ns
+        }
+    }
+
+    /// Exact maximum sample in nanoseconds (`0` when empty).
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Exact mean in nanoseconds (`0.0` when empty).
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Element-wise accumulate another histogram into this one.
+    /// Associative and commutative: merging per-shard histograms in any
+    /// order reproduces the serial recording exactly.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// Nearest-rank quantile in nanoseconds: the lower bound of the
+    /// bucket holding the `⌈q·n⌉`-th smallest sample, clamped to the
+    /// exact observed `[min, max]`. `q ≤ 0` gives the exact minimum,
+    /// `q ≥ 1` the exact maximum; an empty histogram reports `0`.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        if q <= 0.0 {
+            return self.min_ns;
+        }
+        if q >= 1.0 {
+            return self.max_ns;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_lower_ns(idx).clamp(self.min_ns, self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// [`Self::quantile_ns`] converted to milliseconds.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        self.quantile_ns(q) as f64 / 1e6
+    }
+
+    /// Render a summary object: count, sum, exact min/mean/max, and the
+    /// p50/p90/p95/p99 quantiles, all in nanoseconds.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("count".to_string(), Json::Num(self.count as f64)),
+            ("sum_ns".to_string(), Json::Num(self.sum_ns as f64)),
+            ("min_ns".to_string(), Json::Num(self.min_ns() as f64)),
+            ("mean_ns".to_string(), Json::Num(self.mean_ns())),
+            ("max_ns".to_string(), Json::Num(self.max_ns as f64)),
+            ("p50_ns".to_string(), Json::Num(self.quantile_ns(0.50) as f64)),
+            ("p90_ns".to_string(), Json::Num(self.quantile_ns(0.90) as f64)),
+            ("p95_ns".to_string(), Json::Num(self.quantile_ns(0.95) as f64)),
+            ("p99_ns".to_string(), Json::Num(self.quantile_ns(0.99) as f64)),
+        ])
+    }
+}
+
+/// A registry of named counters, gauges, and latency histograms.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, LatencyHistogram>,
+}
+
+impl Metrics {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `by` to the named counter (created at zero on first use).
+    pub fn incr(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set the named gauge to `value`.
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Record a nanosecond sample into the named histogram (created
+    /// empty on first use).
+    pub fn observe_ns(&mut self, name: &str, ns: u64) {
+        self.histograms.entry(name.to_string()).or_default().record_ns(ns);
+    }
+
+    /// Current value of the named counter (`0` if never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Current value of the named gauge, if set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// The named histogram, if any sample was recorded.
+    pub fn histogram(&self, name: &str) -> Option<&LatencyHistogram> {
+        self.histograms.get(name)
+    }
+
+    /// Insert (or merge into) a histogram recorded elsewhere — how
+    /// per-shard serve histograms reach a registry.
+    pub fn merge_histogram(&mut self, name: &str, h: &LatencyHistogram) {
+        self.histograms.entry(name.to_string()).or_default().merge(h);
+    }
+
+    /// Accumulate another registry: counters add, gauges take the other
+    /// side's value, histograms merge element-wise.
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.histograms {
+            self.merge_histogram(k, h);
+        }
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Render the registry as a JSON object with `counters`, `gauges`,
+    /// and `histograms` sections (histograms as summary objects, see
+    /// [`LatencyHistogram::to_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            (
+                "counters".to_string(),
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges".to_string(),
+                Json::Obj(self.gauges.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect()),
+            ),
+            (
+                "histograms".to_string(),
+                Json::Obj(
+                    self.histograms
+                        .iter()
+                        .map(|(k, h)| (k.clone(), h.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Process-global registry for background metrics with no natural owner
+/// (shard-store chunk loads). `None` until the first record, so the
+/// untraced path never allocates.
+static GLOBAL: Mutex<Option<Metrics>> = Mutex::new(None);
+
+/// Charge one shard-store chunk load to the global registry: latency
+/// from the span, plus load-count and bytes-read counters. No-op (and
+/// compiled out) when `span` is `None`, i.e. whenever the `trace`
+/// feature is off.
+pub fn record_shard_io(span: Option<Instant>, bytes: u64) {
+    if let Some(t) = span {
+        let ns = u64::try_from(t.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        let mut g = GLOBAL.lock().expect("metrics lock");
+        let m = g.get_or_insert_with(Metrics::new);
+        m.incr(SHARD_IO_LOADS, 1);
+        m.incr(SHARD_IO_BYTES, bytes);
+        m.observe_ns(SHARD_IO_LATENCY, ns);
+    }
+}
+
+/// Total shard-store chunk-load wall-clock accumulated in the global
+/// registry, in milliseconds. The estimator differences this around a
+/// fit to attribute the run's [`Phase::ShardIo`](crate::obs::Phase)
+/// total; always exactly 0.0 without the `trace` feature.
+pub fn global_shard_io_ms() -> f64 {
+    GLOBAL
+        .lock()
+        .expect("metrics lock")
+        .as_ref()
+        .and_then(|m| m.histogram(SHARD_IO_LATENCY))
+        .map_or(0.0, |h| h.sum_ns() as f64 / 1e6)
+}
+
+/// Snapshot (clone) the global registry; empty if nothing was recorded.
+pub fn global_snapshot() -> Metrics {
+    GLOBAL.lock().expect("metrics lock").clone().unwrap_or_default()
+}
+
+/// Clear the global registry (test isolation and per-run deltas).
+pub fn reset_global() {
+    *GLOBAL.lock().expect("metrics lock") = None;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_and_lower_bounds_invert() {
+        let mut prev = 0usize;
+        for ns in [0u64, 1, 2, 3, 4, 5, 7, 8, 15, 16, 100, 1_000, 1_000_000, u64::MAX / 2] {
+            let b = LatencyHistogram::bucket(ns);
+            assert!(b >= prev, "bucket({ns}) = {b} < {prev}");
+            assert!(b < HIST_BUCKETS);
+            let lo = LatencyHistogram::bucket_lower_ns(b);
+            assert!(lo <= ns, "lower({b}) = {lo} > {ns}");
+            // The lower bound maps back into its own bucket.
+            assert_eq!(LatencyHistogram::bucket(lo), b);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn exact_quantiles_on_boundary_samples() {
+        let mut h = LatencyHistogram::new();
+        // Powers of two are bucket lower bounds, so quantiles are exact.
+        for ns in [1u64, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.min_ns(), 1);
+        assert_eq!(h.max_ns(), 512);
+        assert_eq!(h.quantile_ns(0.0), 1);
+        assert_eq!(h.quantile_ns(0.10), 1); // rank 1
+        assert_eq!(h.quantile_ns(0.50), 16); // rank 5
+        assert_eq!(h.quantile_ns(0.90), 256); // rank 9
+        assert_eq!(h.quantile_ns(0.95), 512); // rank 10
+        assert_eq!(h.quantile_ns(0.99), 512); // rank 10
+        assert_eq!(h.quantile_ns(1.0), 512);
+        assert_eq!(h.sum_ns(), 1023);
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_the_sample() {
+        let mut h = LatencyHistogram::new();
+        h.record_ns(1000); // not a bucket boundary: clamped to min/max
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile_ns(q), 1000, "q={q}");
+        }
+        assert!((h.mean_ns() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min_ns(), 0);
+        assert_eq!(h.max_ns(), 0);
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_serial_recording() {
+        let samples = [3u64, 10, 10, 500, 90_000, 7, 2_000_000, 64];
+        let mut serial = LatencyHistogram::new();
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for (i, &s) in samples.iter().enumerate() {
+            serial.record_ns(s);
+            if i % 2 == 0 {
+                a.record_ns(s);
+            } else {
+                b.record_ns(s);
+            }
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, serial);
+        assert_eq!(ba, serial); // commutative
+    }
+
+    #[test]
+    fn registry_counters_gauges_histograms() {
+        let mut m = Metrics::new();
+        assert!(m.is_empty());
+        m.incr("queries", 2);
+        m.incr("queries", 3);
+        m.set_gauge("qps", 123.5);
+        m.observe_ns("latency", 1_000);
+        m.observe_ns("latency", 2_000);
+        assert_eq!(m.counter("queries"), 5);
+        assert_eq!(m.counter("absent"), 0);
+        assert_eq!(m.gauge("qps"), Some(123.5));
+        assert_eq!(m.histogram("latency").map(LatencyHistogram::count), Some(2));
+
+        let mut other = Metrics::new();
+        other.incr("queries", 1);
+        other.observe_ns("latency", 3_000);
+        m.merge(&other);
+        assert_eq!(m.counter("queries"), 6);
+        assert_eq!(m.histogram("latency").map(LatencyHistogram::count), Some(3));
+
+        let j = m.to_json();
+        assert!(j.get("counters").and_then(|c| c.get("queries")).is_some());
+        assert!(j.get("histograms").and_then(|h| h.get("latency")).is_some());
+    }
+
+    #[test]
+    fn global_shard_io_gated_on_live_span() {
+        // Other test threads may record concurrently (chunk loads under
+        // `--features trace`), so assert only this thread's deltas.
+        let before = global_snapshot();
+        record_shard_io(None, 4096); // always a no-op
+        // A live span records regardless of the feature: the gate is
+        // span creation (span_start), not this sink.
+        record_shard_io(Some(Instant::now()), 4096);
+        let after = global_snapshot();
+        assert!(after.counter(SHARD_IO_LOADS) >= before.counter(SHARD_IO_LOADS) + 1);
+        assert!(after.counter(SHARD_IO_BYTES) >= before.counter(SHARD_IO_BYTES) + 4096);
+        let n = after.histogram(SHARD_IO_LATENCY).map_or(0, LatencyHistogram::count);
+        assert!(n >= 1);
+    }
+}

@@ -1,0 +1,69 @@
+//! Observability subsystem: phase-scoped timing spans, a metrics registry
+//! with exact-bucket latency histograms, and a structured JSONL trace
+//! writer.
+//!
+//! The paper's evaluation rests on two axes — similarity computations
+//! saved *and* wall-clock won — and the two routinely diverge: pruning
+//! that wins in multiply-adds can lose in wall-clock when the memory
+//! layout fights the cache. [`IterStats`](crate::kmeans::IterStats)
+//! counts the first axis meticulously; this module instruments the
+//! second. It answers *where the time goes*: which phase of each
+//! iteration (seeding, sharded assignment, bounds maintenance, center
+//! update, index refresh, shard I/O), with what serve-side latency
+//! distribution, and how both evolve across a run.
+//!
+//! # The three instruments
+//!
+//! * **Spans** ([`span`]) — phase-scoped wall-clock timing aggregated
+//!   per iteration into a [`PhaseTimes`] table, recorded at the existing
+//!   iteration barriers of all seven exact engines and the mini-batch
+//!   optimizer. Surfaced through
+//!   [`IterStats::phases`](crate::kmeans::IterStats),
+//!   [`RunStats::phase_totals`](crate::kmeans::RunStats), the
+//!   [`IterSnapshot`](crate::kmeans::IterSnapshot) observer hook, and
+//!   `cluster --stats`.
+//! * **Metrics** ([`metrics`]) — a registry of named counters, gauges,
+//!   and fixed-bucket log-scale latency histograms
+//!   ([`LatencyHistogram`]: 4 sub-buckets per power-of-two octave, exact
+//!   p50/p95/p99 up to ≤ 25% bucket resolution, mergeable across shards
+//!   by element-wise addition). Wired into the serve-side
+//!   [`QueryEngine`](crate::serve::QueryEngine) timed batch paths and
+//!   the [`ShardStore`](crate::sparse::ShardStore) chunk loader.
+//! * **Traces** ([`trace`]) — a JSONL writer emitting versioned,
+//!   schema-stable records (`run_start` / `iter` / `run_end`, schema
+//!   [`TRACE_SCHEMA`]) behind `cluster --trace-out`, plus the validator
+//!   the test suite and `sphkm report --check` run against every line.
+//!
+//! Bench targets report through the shared
+//! [`RunReport`](crate::util::report::RunReport) schema in
+//! [`util::report`](crate::util::report), which is what populates the
+//! committed `BENCH_*.json` files.
+//!
+//! # Zero cost when off
+//!
+//! Like the audit layer, instrumentation is gated on the compile-time
+//! constant [`TRACE_ENABLED`] (`cfg!(feature = "trace")`) rather than on
+//! `#[cfg]` blocks: the observability code type-checks in every build,
+//! and when the feature is off [`span::span_start`] const-folds to
+//! `None`, every `record` is a branch on a constant `false`, and the
+//! compiled hot loops are bit-for-bit those of an uninstrumented build.
+//! With the feature **on**, results stay bit-identical — spans only read
+//! the monotonic clock at iteration barriers, outside every counted
+//! similarity path; only wall-clock observation is added, never
+//! arithmetic. The serve-side timed batch entry points
+//! ([`QueryEngine::top_p_batch_timed`](crate::serve::QueryEngine::top_p_batch_timed))
+//! are explicit opt-ins and therefore work in every build: calling them
+//! is the gate, so the untimed paths stay untouched.
+
+pub mod metrics;
+pub mod span;
+pub mod trace;
+
+pub use metrics::{LatencyHistogram, Metrics};
+pub use span::{Phase, PhaseTimes};
+pub use trace::{TraceWriter, TRACE_SCHEMA};
+
+/// True when the crate was compiled with the `trace` cargo feature —
+/// the single gate every span and background-metric site branches on.
+/// A constant, so disabled instrumentation is removed at compile time.
+pub const TRACE_ENABLED: bool = cfg!(feature = "trace");

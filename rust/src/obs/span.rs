@@ -1,0 +1,254 @@
+//! Phase-scoped timing spans: where each iteration's wall-clock goes.
+//!
+//! A span is opened with [`span_start`] at an existing iteration barrier
+//! (no new synchronization is introduced) and closed by charging its
+//! elapsed time to one [`Phase`] of a [`PhaseTimes`] table. With the
+//! `trace` feature off, [`span_start`] const-folds to `None` and every
+//! `record` call compiles to nothing; with it on, the only added work is
+//! a monotonic-clock read at each barrier — far outside the per-point
+//! hot loops, so results stay bit-identical either way.
+//!
+//! The per-iteration tables live on
+//! [`IterStats::phases`](crate::kmeans::IterStats); run-level totals
+//! (plus the pre-loop seeding span) come from
+//! [`RunStats::phase_totals`](crate::kmeans::RunStats). Phase timings
+//! are measured on the coordinating thread between barriers, so the
+//! barrier phases (seeding, assignment, bounds, update, index refresh)
+//! of one fit are disjoint and sum to fit wall-clock minus loop
+//! overhead. [`Phase::ShardIo`] is the exception: chunk loads happen
+//! *inside* the sharded assignment pass across worker threads, so its
+//! time overlaps [`Phase::Assignment`] and is reported separately (see
+//! [`crate::obs::metrics`]) rather than added to the disjoint sum.
+
+use std::time::Instant;
+
+use super::TRACE_ENABLED;
+use crate::util::json::Json;
+
+/// The phases of a fit whose wall-clock is tracked separately. Ordered
+/// as reported; [`Phase::name`] gives the stable snake_case key used in
+/// trace and metrics JSON.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Initial center seeding (uniform, k-means++, AFK-MC²) before the
+    /// first assignment pass. Charged once per run, not per iteration.
+    Seeding,
+    /// The sharded per-point assignment pass over the Plan/Pool
+    /// executor, including the bound tests fused into it.
+    Assignment,
+    /// Serial per-iteration bound maintenance before the assignment
+    /// pass: center-center bound recomputation, `p`-extreme scans,
+    /// neighbor-list rebuilds, group extreme reductions.
+    Bounds,
+    /// Center update at the iteration barrier: move replay
+    /// (`merge_shards`), incremental sum maintenance, and the f32
+    /// center renormalization.
+    Update,
+    /// Refreshing the kernel's center store for dirty centers: the
+    /// dense transpose columns or the inverted-file postings (including
+    /// bulk rebuilds after truncation).
+    IndexRefresh,
+    /// Chunk loads from the on-disk shard store. Measured across worker
+    /// threads inside the assignment pass, so this phase *overlaps*
+    /// [`Phase::Assignment`] instead of adding to the disjoint
+    /// barrier-phase sum.
+    ShardIo,
+}
+
+impl Phase {
+    /// All phases, in reporting order.
+    pub const ALL: [Phase; 6] = [
+        Phase::Seeding,
+        Phase::Assignment,
+        Phase::Bounds,
+        Phase::Update,
+        Phase::IndexRefresh,
+        Phase::ShardIo,
+    ];
+
+    /// Stable snake_case name used as the JSON key in trace records and
+    /// metrics dumps. Part of the [`TRACE_SCHEMA`](super::TRACE_SCHEMA)
+    /// contract — do not rename without a schema version bump.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Seeding => "seeding",
+            Phase::Assignment => "assignment",
+            Phase::Bounds => "bounds",
+            Phase::Update => "update",
+            Phase::IndexRefresh => "index_refresh",
+            Phase::ShardIo => "shard_io",
+        }
+    }
+}
+
+/// Open a timing span: the capture instant under the `trace` feature,
+/// `None` (const-folded, zero cost) otherwise. Close it by passing the
+/// result to [`PhaseTimes::record`] or
+/// [`crate::obs::metrics::record_shard_io`].
+#[inline]
+pub fn span_start() -> Option<Instant> {
+    if TRACE_ENABLED {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Milliseconds elapsed since a [`span_start`] capture; `0.0` when the
+/// span was disabled.
+#[inline]
+pub fn span_ms(span: Option<Instant>) -> f64 {
+    match span {
+        Some(t) => t.elapsed().as_secs_f64() * 1e3,
+        None => 0.0,
+    }
+}
+
+/// Accumulated wall-clock milliseconds per [`Phase`]. All-zero when the
+/// `trace` feature is off (the table itself is always present so the
+/// stats structs keep one shape in every build).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseTimes {
+    ms: [f64; 6],
+}
+
+impl PhaseTimes {
+    /// Charge the elapsed time of a span opened with [`span_start`] to
+    /// `phase`. No-op (and compiled out) when the span is `None`.
+    #[inline]
+    pub fn record(&mut self, phase: Phase, span: Option<Instant>) {
+        if let Some(t) = span {
+            self.ms[phase as usize] += t.elapsed().as_secs_f64() * 1e3;
+        }
+    }
+
+    /// Add `ms` milliseconds to `phase` directly.
+    #[inline]
+    pub fn add(&mut self, phase: Phase, ms: f64) {
+        self.ms[phase as usize] += ms;
+    }
+
+    /// Reattribute `ms` milliseconds from one phase to another: used
+    /// when a finer-grained sub-measurement (e.g. the index refresh
+    /// inside the center update) must be carved out of an enclosing
+    /// span without double counting.
+    #[inline]
+    pub fn shift(&mut self, from: Phase, to: Phase, ms: f64) {
+        self.ms[from as usize] -= ms;
+        self.ms[to as usize] += ms;
+    }
+
+    /// Accumulated milliseconds charged to `phase`.
+    #[inline]
+    pub fn get(&self, phase: Phase) -> f64 {
+        self.ms[phase as usize]
+    }
+
+    /// Element-wise accumulate another table into this one.
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        for (a, b) in self.ms.iter_mut().zip(other.ms.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// Sum of the disjoint barrier phases (everything except
+    /// [`Phase::ShardIo`], which overlaps the assignment pass). This is
+    /// the quantity that accounts for fit wall-clock.
+    pub fn barrier_ms(&self) -> f64 {
+        Phase::ALL
+            .iter()
+            .filter(|&&p| p != Phase::ShardIo)
+            .map(|&p| self.get(p))
+            .sum()
+    }
+
+    /// Sum over all phases, including the overlapping shard I/O.
+    pub fn total_ms(&self) -> f64 {
+        self.ms.iter().sum()
+    }
+
+    /// True when no time has been charged to any phase (always the case
+    /// with the `trace` feature off).
+    pub fn is_zero(&self) -> bool {
+        self.ms.iter().all(|&m| m == 0.0)
+    }
+
+    /// Render as a JSON object `{phase_name: ms, …}` with every phase
+    /// present, in [`Phase::ALL`] order.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            Phase::ALL
+                .iter()
+                .map(|&p| (p.name().to_string(), Json::Num(self.get(p))))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_charges_only_under_trace() {
+        let mut t = PhaseTimes::default();
+        t.record(Phase::Assignment, span_start());
+        if TRACE_ENABLED {
+            assert!(t.get(Phase::Assignment) >= 0.0);
+        } else {
+            assert!(t.is_zero());
+        }
+    }
+
+    #[test]
+    fn add_merge_and_totals() {
+        let mut a = PhaseTimes::default();
+        a.add(Phase::Seeding, 1.0);
+        a.add(Phase::Assignment, 2.0);
+        a.add(Phase::ShardIo, 10.0);
+        let mut b = PhaseTimes::default();
+        b.add(Phase::Assignment, 3.0);
+        b.add(Phase::Update, 4.0);
+        a.merge(&b);
+        assert_eq!(a.get(Phase::Assignment), 5.0);
+        assert_eq!(a.get(Phase::Update), 4.0);
+        assert_eq!(a.barrier_ms(), 10.0);
+        assert_eq!(a.total_ms(), 20.0);
+        assert!(!a.is_zero());
+    }
+
+    #[test]
+    fn shift_reattributes_without_changing_total() {
+        let mut t = PhaseTimes::default();
+        t.add(Phase::Update, 10.0);
+        t.shift(Phase::Update, Phase::IndexRefresh, 4.0);
+        assert_eq!(t.get(Phase::Update), 6.0);
+        assert_eq!(t.get(Phase::IndexRefresh), 4.0);
+        assert_eq!(t.total_ms(), 10.0);
+    }
+
+    #[test]
+    fn json_carries_every_phase_in_order() {
+        let mut t = PhaseTimes::default();
+        t.add(Phase::Bounds, 2.5);
+        let j = t.to_json();
+        let obj = j.as_obj().expect("object");
+        assert_eq!(obj.len(), Phase::ALL.len());
+        let names: Vec<&str> = obj.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["seeding", "assignment", "bounds", "update", "index_refresh", "shard_io"]
+        );
+        assert_eq!(j.get("bounds").and_then(Json::as_f64), Some(2.5));
+    }
+
+    #[test]
+    fn phase_names_are_stable() {
+        // Schema contract: these strings appear in trace JSON.
+        let names: Vec<&str> = Phase::ALL.iter().map(|p| p.name()).collect();
+        assert_eq!(
+            names,
+            vec!["seeding", "assignment", "bounds", "update", "index_refresh", "shard_io"]
+        );
+    }
+}

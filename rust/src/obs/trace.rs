@@ -1,0 +1,279 @@
+//! Structured JSONL trace writer and validator.
+//!
+//! A trace is a sequence of newline-delimited JSON records, one per
+//! line, each a flat object stamped with the schema identifier
+//! ([`TRACE_SCHEMA`]) and an `event` discriminator:
+//!
+//! * `run_start` — once, first line: `algo`, `k`, `n`, `d`, `threads`,
+//!   plus any extra configuration the producer attaches.
+//! * `iter` — once per training iteration (or mini-batch epoch):
+//!   `iteration`, `wall_ms`, `elapsed_ms`, per-phase millisecond
+//!   breakdown under `phases`, the instrumentation counters, and
+//!   `converged`.
+//! * `run_end` — once, last line: `iterations`, `objective`,
+//!   `total_ms`, run-level `phases` totals.
+//!
+//! Producers only append fields; removing or re-typing one is a schema
+//! version bump. [`validate_line`] / [`validate_trace`] enforce the
+//! envelope (schema stamp, known event, required typed fields) and are
+//! what `sphkm report --check` and the `tests/obs.rs` round-trip run.
+//! The CLI side lives behind `cluster --trace-out`, which requires the
+//! `trace` cargo feature (without it the spans a trace would report are
+//! compile-time no-ops).
+
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Schema identifier stamped into every trace record; bump on any
+/// breaking record-shape change.
+pub const TRACE_SCHEMA: &str = "sphkm.trace.v1";
+
+/// The three record kinds of a v1 trace, in emission order.
+pub const TRACE_EVENTS: [&str; 3] = ["run_start", "iter", "run_end"];
+
+/// Append-only JSONL trace writer. Each record lands as one line; the
+/// file is flushed on drop (and explicitly by [`TraceWriter::finish`]).
+#[derive(Debug)]
+pub struct TraceWriter {
+    out: BufWriter<std::fs::File>,
+    records: usize,
+}
+
+impl TraceWriter {
+    /// Create (truncate) the trace file at `path`.
+    pub fn create(path: &Path) -> std::io::Result<Self> {
+        Ok(Self { out: BufWriter::new(std::fs::File::create(path)?), records: 0 })
+    }
+
+    /// Append one record: the schema stamp and `event` discriminator,
+    /// then `fields` in order.
+    pub fn record(
+        &mut self,
+        event: &str,
+        fields: Vec<(String, Json)>,
+    ) -> std::io::Result<()> {
+        let mut members = vec![
+            ("schema".to_string(), Json::Str(TRACE_SCHEMA.to_string())),
+            ("event".to_string(), Json::Str(event.to_string())),
+        ];
+        members.extend(fields);
+        let line = Json::Obj(members).render();
+        debug_assert!(validate_line(&line).is_ok(), "emitting invalid trace record: {line}");
+        self.out.write_all(line.as_bytes())?;
+        self.out.write_all(b"\n")?;
+        self.records += 1;
+        Ok(())
+    }
+
+    /// Number of records written so far.
+    pub fn records(&self) -> usize {
+        self.records
+    }
+
+    /// Flush buffered records to disk.
+    pub fn finish(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn require_num(doc: &Json, key: &str) -> Result<(), String> {
+    doc.get(key)
+        .and_then(Json::as_f64)
+        .map(|_| ())
+        .ok_or_else(|| format!("missing numeric field {key:?}"))
+}
+
+fn require_phases(doc: &Json) -> Result<(), String> {
+    let phases = doc
+        .get("phases")
+        .and_then(Json::as_obj)
+        .ok_or("missing object field \"phases\"")?;
+    let known = super::span::Phase::ALL;
+    for (k, v) in phases {
+        if !known.iter().any(|p| p.name() == k) {
+            return Err(format!("unknown phase {k:?}"));
+        }
+        v.as_f64().ok_or_else(|| format!("phase {k:?} must be numeric (ms)"))?;
+    }
+    Ok(())
+}
+
+/// Validate one trace line against the v1 schema: parses as an object,
+/// carries the schema stamp and a known `event`, and has that event's
+/// required typed fields.
+pub fn validate_line(line: &str) -> Result<(), String> {
+    let doc = Json::parse(line).map_err(|e| e.to_string())?;
+    if doc.as_obj().is_none() {
+        return Err("trace record must be a JSON object".to_string());
+    }
+    let schema = doc
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or("missing string field \"schema\"")?;
+    if schema != TRACE_SCHEMA {
+        return Err(format!("schema {schema:?}, expected {TRACE_SCHEMA:?}"));
+    }
+    let event = doc
+        .get("event")
+        .and_then(Json::as_str)
+        .ok_or("missing string field \"event\"")?;
+    match event {
+        "run_start" => {
+            doc.get("algo")
+                .and_then(Json::as_str)
+                .ok_or("run_start: missing string field \"algo\"")?;
+            for key in ["k", "n", "d", "threads"] {
+                require_num(&doc, key).map_err(|e| format!("run_start: {e}"))?;
+            }
+        }
+        "iter" => {
+            for key in ["iteration", "wall_ms", "elapsed_ms", "sims_point_center", "reassignments"]
+            {
+                require_num(&doc, key).map_err(|e| format!("iter: {e}"))?;
+            }
+            doc.get("converged")
+                .and_then(Json::as_bool)
+                .ok_or("iter: missing boolean field \"converged\"")?;
+            require_phases(&doc).map_err(|e| format!("iter: {e}"))?;
+        }
+        "run_end" => {
+            for key in ["iterations", "objective", "total_ms"] {
+                require_num(&doc, key).map_err(|e| format!("run_end: {e}"))?;
+            }
+            require_phases(&doc).map_err(|e| format!("run_end: {e}"))?;
+        }
+        other => return Err(format!("unknown event {other:?}")),
+    }
+    Ok(())
+}
+
+/// Validate a whole trace document: every line valid, exactly one
+/// `run_start` (first) and at most one `run_end` (last). Returns the
+/// record count.
+pub fn validate_trace(text: &str) -> Result<usize, String> {
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    if lines.is_empty() {
+        return Err("empty trace".to_string());
+    }
+    for (i, line) in lines.iter().enumerate() {
+        validate_line(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        let event = Json::parse(line)
+            .ok()
+            .and_then(|d| d.get("event").and_then(Json::as_str).map(str::to_string))
+            .expect("validated line has an event");
+        let is_first = i == 0;
+        let is_last = i + 1 == lines.len();
+        match event.as_str() {
+            "run_start" if !is_first => return Err(format!("line {}: run_start not first", i + 1)),
+            "run_end" if !is_last => return Err(format!("line {}: run_end not last", i + 1)),
+            "iter" if is_first => return Err("line 1: trace must open with run_start".to_string()),
+            _ => {}
+        }
+    }
+    Ok(lines.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{Phase, PhaseTimes};
+
+    fn start_fields() -> Vec<(String, Json)> {
+        vec![
+            ("algo".to_string(), Json::Str("elkan".to_string())),
+            ("k".to_string(), Json::Num(8.0)),
+            ("n".to_string(), Json::Num(100.0)),
+            ("d".to_string(), Json::Num(50.0)),
+            ("threads".to_string(), Json::Num(1.0)),
+        ]
+    }
+
+    fn iter_fields(i: usize, converged: bool) -> Vec<(String, Json)> {
+        let mut phases = PhaseTimes::default();
+        phases.add(Phase::Assignment, 1.5);
+        vec![
+            ("iteration".to_string(), Json::Num(i as f64)),
+            ("wall_ms".to_string(), Json::Num(2.0)),
+            ("elapsed_ms".to_string(), Json::Num(2.0 * (i as f64 + 1.0))),
+            ("sims_point_center".to_string(), Json::Num(800.0)),
+            ("reassignments".to_string(), Json::Num(10.0)),
+            ("converged".to_string(), Json::Bool(converged)),
+            ("phases".to_string(), phases.to_json()),
+        ]
+    }
+
+    fn end_fields() -> Vec<(String, Json)> {
+        vec![
+            ("iterations".to_string(), Json::Num(2.0)),
+            ("objective".to_string(), Json::Num(0.87)),
+            ("total_ms".to_string(), Json::Num(4.1)),
+            ("phases".to_string(), PhaseTimes::default().to_json()),
+        ]
+    }
+
+    #[test]
+    fn writer_emits_valid_jsonl() {
+        let dir = std::env::temp_dir().join("sphkm-trace-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let mut w = TraceWriter::create(&path).unwrap();
+        w.record("run_start", start_fields()).unwrap();
+        w.record("iter", iter_fields(0, false)).unwrap();
+        w.record("iter", iter_fields(1, true)).unwrap();
+        w.record("run_end", end_fields()).unwrap();
+        assert_eq!(w.records(), 4);
+        w.finish().unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(validate_trace(&text).unwrap(), 4);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn validator_rejects_schema_and_shape_defects() {
+        assert!(validate_line("not json").is_err());
+        assert!(validate_line("[1]").unwrap_err().contains("object"));
+        assert!(validate_line(r#"{"event": "iter"}"#).unwrap_err().contains("schema"));
+        let wrong_schema = r#"{"schema": "sphkm.trace.v0", "event": "run_end"}"#;
+        assert!(validate_line(wrong_schema).unwrap_err().contains("expected"));
+        let unknown_event = r#"{"schema": "sphkm.trace.v1", "event": "mystery"}"#;
+        assert!(validate_line(unknown_event).unwrap_err().contains("unknown event"));
+        let missing = r#"{"schema": "sphkm.trace.v1", "event": "run_start", "algo": "elkan"}"#;
+        assert!(validate_line(missing).unwrap_err().contains("\"k\""));
+        let bad_phase = r#"{"schema": "sphkm.trace.v1", "event": "run_end", "iterations": 1,
+            "objective": 0.5, "total_ms": 1.0, "phases": {"warp_drive": 1.0}}"#
+            .replace('\n', " ");
+        assert!(validate_line(&bad_phase).unwrap_err().contains("warp_drive"));
+    }
+
+    #[test]
+    fn trace_structure_is_enforced() {
+        let start = Json::Obj(
+            [
+                ("schema".to_string(), Json::Str(TRACE_SCHEMA.to_string())),
+                ("event".to_string(), Json::Str("run_start".to_string())),
+            ]
+            .into_iter()
+            .chain(start_fields())
+            .collect(),
+        )
+        .render();
+        let end = Json::Obj(
+            [
+                ("schema".to_string(), Json::Str(TRACE_SCHEMA.to_string())),
+                ("event".to_string(), Json::Str("run_end".to_string())),
+            ]
+            .into_iter()
+            .chain(end_fields())
+            .collect(),
+        )
+        .render();
+        assert!(validate_trace("").is_err());
+        assert!(validate_trace(&format!("{start}\n{end}\n")).is_ok());
+        // run_start must come first, run_end last.
+        assert!(validate_trace(&format!("{end}\n{start}\n")).is_err());
+        assert!(validate_trace(&format!("{start}\n{start}\n{end}\n")).is_err());
+    }
+}

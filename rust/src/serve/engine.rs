@@ -5,6 +5,7 @@
 use crate::audit::{AuditViolation, AUDIT_ENABLED};
 use crate::kmeans::{DataShape, Kernel, KernelChoice};
 use crate::model::Model;
+use crate::obs::metrics::LatencyHistogram;
 use crate::runtime::parallel::{Plan, Pool};
 use crate::sparse::csr::RowView;
 use crate::sparse::{CsrMatrix, InvertedIndex};
@@ -434,6 +435,59 @@ impl QueryEngine {
         (labels, stats)
     }
 
+    /// [`QueryEngine::top_p_batch`] plus a per-query latency histogram.
+    ///
+    /// Each worker times every query with one `Instant` pair and records
+    /// into a shard-local [`LatencyHistogram`]; the coordinating thread
+    /// merges the shards (order is immaterial — merging is associative
+    /// and commutative). Timing is available in every build — calling
+    /// this entry point is the opt-in, so the untimed batch paths pay
+    /// nothing — and the results and [`ServeStats`] are bit-identical to
+    /// [`QueryEngine::top_p_batch`] on the same engine.
+    pub fn top_p_batch_timed(
+        &self,
+        data: &CsrMatrix,
+        p: usize,
+    ) -> (Vec<Vec<(u32, f64)>>, ServeStats, LatencyHistogram) {
+        assert!(
+            data.cols() <= self.model.d(),
+            "query data has {} features but the model serves {}",
+            data.cols(),
+            self.model.d()
+        );
+        let plan = Plan::for_rows(data.rows());
+        let k = self.model.k();
+        let pruned = self.pruned;
+        let outs = self.pool.run(plan.ranges().to_vec(), |_, range| {
+            let mut scratch = Scratch::new(k);
+            let mut stats = ServeStats::default();
+            let mut hist = LatencyHistogram::new();
+            let results: Vec<Vec<(u32, f64)>> = range
+                .map(|i| {
+                    let row = data.row(i);
+                    let t = std::time::Instant::now();
+                    let out = if pruned {
+                        self.top_p_pruned_into(row, p, &mut scratch, &mut stats)
+                    } else {
+                        self.top_p_exhaustive_into(row, p, &mut stats)
+                    };
+                    hist.record(t.elapsed());
+                    out
+                })
+                .collect();
+            (results, stats, hist)
+        });
+        let mut all = Vec::with_capacity(data.rows());
+        let mut stats = ServeStats::default();
+        let mut hist = LatencyHistogram::new();
+        for (results, s, h) in outs {
+            all.extend(results);
+            stats.absorb(&s);
+            hist.merge(&h);
+        }
+        (all, stats, hist)
+    }
+
     fn batch(
         &self,
         data: &CsrMatrix,
@@ -601,6 +655,33 @@ mod tests {
         for (i, row) in pr.iter().enumerate() {
             assert_eq!(labels[i], row[0].0);
         }
+    }
+
+    #[test]
+    fn timed_batch_matches_untimed_and_counts_queries() {
+        let data = crate::data::synth::SynthConfig::small_demo().generate(5).matrix;
+        let ds = crate::data::synth::SynthConfig::small_demo().generate(9);
+        let fitted = crate::kmeans::SphericalKMeans::new(6)
+            .seed(2)
+            .max_iter(10)
+            .fit(&ds.matrix)
+            .unwrap();
+        let model = Model::new(fitted.centers().clone(), fitted.meta().clone());
+        let engine =
+            QueryEngine::new(model, &ServeConfig { mode: ServeMode::Pruned, threads: 2 });
+        let (base, bstats) = engine.top_p_batch(&data, 3);
+        let (out, stats, hist) = engine.top_p_batch_timed(&data, 3);
+        assert_eq!(stats, bstats);
+        assert_eq!(out, base);
+        assert_eq!(hist.count(), data.rows() as u64);
+        // Quantiles of real samples are ordered and within [min, max].
+        let (p50, p95, p99) = (
+            hist.quantile_ns(0.50),
+            hist.quantile_ns(0.95),
+            hist.quantile_ns(0.99),
+        );
+        assert!(hist.min_ns() <= p50 && p50 <= p95 && p95 <= p99);
+        assert!(p99 <= hist.max_ns());
     }
 
     #[test]

@@ -441,6 +441,10 @@ impl ChunkCursor<'_> {
     }
 
     fn load_chunk(&mut self, chunk: usize) -> std::io::Result<()> {
+        // Under the `trace` feature every chunk load charges its latency
+        // and byte count to the global obs registry (span is `None` and
+        // the record call compiles out otherwise).
+        let sp = crate::obs::span::span_start();
         let corrupt = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
         let start = chunk * self.store.chunk_rows;
         let end = (start + self.store.chunk_rows).min(self.store.rows);
@@ -491,6 +495,7 @@ impl ChunkCursor<'_> {
             + self.buf.capacity() as u64;
         recharge(self.charged, charge);
         self.charged = charge;
+        crate::obs::metrics::record_shard_io(sp, ((nrows + 1) * 8 + cnnz * 8) as u64);
         Ok(())
     }
 }

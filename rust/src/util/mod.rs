@@ -1,11 +1,14 @@
 //! Support substrates that would normally come from crates.io but are
 //! unavailable in this offline environment: PRNG, CLI parsing, a
-//! micro-benchmark harness, timing, and a property-testing mini-framework.
+//! micro-benchmark harness, timing, JSON, the shared bench-report
+//! schema, and a property-testing mini-framework.
 
 pub mod benchkit;
 pub mod cli;
 pub mod config;
+pub mod json;
 pub mod mem;
 pub mod prop;
+pub mod report;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,244 @@
+//! `RunReport`: the shared machine-readable result schema every bench
+//! target emits through, and the validator CI runs against the committed
+//! `BENCH_*.json` files.
+//!
+//! A report is a single JSON object:
+//!
+//! ```json
+//! {
+//!   "schema": "sphkm.report.v1",
+//!   "bench": "kernel_crossover",
+//!   "note": "optional free-form provenance",
+//!   "config": {"rows": 8000, "k": 64, "runs": 5, "warmup": 1},
+//!   "results": [ {"corpus": "kern-v1500", "dense_ms_mean": 41.2, ...}, ... ]
+//! }
+//! ```
+//!
+//! `config` holds the knobs the run was invoked with; `results` is a
+//! flat array of measurement rows whose values are scalars (numbers,
+//! strings, booleans, or `null` for not-yet-measured placeholders — the
+//! committed placeholders regenerate in place when the benches run on a
+//! machine with a toolchain). [`RunReport::validate`] enforces exactly
+//! this shape, no more: rows are bench-specific, the envelope is not.
+
+use std::path::Path;
+
+use super::json::Json;
+use super::timer::TimingStats;
+
+/// Schema identifier stamped into every report; bump on envelope
+/// changes.
+pub const REPORT_SCHEMA: &str = "sphkm.report.v1";
+
+/// A bench result document under construction (see module docs for the
+/// serialized shape).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    bench: String,
+    note: Option<String>,
+    config: Vec<(String, Json)>,
+    results: Vec<Json>,
+}
+
+impl RunReport {
+    /// Start an empty report for the named bench.
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), note: None, config: Vec::new(), results: Vec::new() }
+    }
+
+    /// Attach a free-form provenance note.
+    pub fn note(&mut self, note: &str) {
+        self.note = Some(note.to_string());
+    }
+
+    /// Record one configuration knob.
+    pub fn config(&mut self, key: &str, value: Json) {
+        self.config.push((key.to_string(), value));
+    }
+
+    /// Record one configuration knob as a number.
+    pub fn config_num(&mut self, key: &str, value: f64) {
+        self.config(key, Json::Num(value));
+    }
+
+    /// Record one configuration knob as a string.
+    pub fn config_str(&mut self, key: &str, value: &str) {
+        self.config(key, Json::Str(value.to_string()));
+    }
+
+    /// Append one measurement row (scalar values only; enforced by
+    /// [`RunReport::validate`] on the way back in).
+    pub fn push_result(&mut self, row: Vec<(String, Json)>) {
+        self.results.push(Json::Obj(row));
+    }
+
+    /// Render to the serialized document.
+    pub fn to_json(&self) -> Json {
+        let mut members = vec![
+            ("schema".to_string(), Json::Str(REPORT_SCHEMA.to_string())),
+            ("bench".to_string(), Json::Str(self.bench.clone())),
+        ];
+        if let Some(n) = &self.note {
+            members.push(("note".to_string(), Json::Str(n.clone())));
+        }
+        members.push(("config".to_string(), Json::Obj(self.config.clone())));
+        members.push(("results".to_string(), Json::Arr(self.results.clone())));
+        Json::Obj(members)
+    }
+
+    /// Pretty-render and write to `path` (trailing newline included).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut text = self.to_json().pretty(2);
+        text.push('\n');
+        std::fs::write(path, text)
+    }
+
+    /// Check that a parsed document is a well-formed v1 report:
+    /// the envelope keys with their exact types, scalar config values,
+    /// and an array of scalar-valued result rows.
+    pub fn validate(doc: &Json) -> Result<(), String> {
+        let obj = doc.as_obj().ok_or("report must be a JSON object")?;
+        let schema = doc
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or("missing string field \"schema\"")?;
+        if schema != REPORT_SCHEMA {
+            return Err(format!("schema {schema:?}, expected {REPORT_SCHEMA:?}"));
+        }
+        doc.get("bench")
+            .and_then(Json::as_str)
+            .filter(|b| !b.is_empty())
+            .ok_or("missing non-empty string field \"bench\"")?;
+        if let Some(n) = doc.get("note") {
+            n.as_str().ok_or("\"note\" must be a string")?;
+        }
+        let config = doc
+            .get("config")
+            .and_then(Json::as_obj)
+            .ok_or("missing object field \"config\"")?;
+        for (k, v) in config {
+            if !v.is_scalar() {
+                return Err(format!("config value {k:?} must be a scalar"));
+            }
+        }
+        let results = doc
+            .get("results")
+            .and_then(Json::as_arr)
+            .ok_or("missing array field \"results\"")?;
+        for (i, row) in results.iter().enumerate() {
+            let members = row
+                .as_obj()
+                .ok_or_else(|| format!("results[{i}] must be an object"))?;
+            for (k, v) in members {
+                if !v.is_scalar() {
+                    return Err(format!("results[{i}].{k} must be a scalar"));
+                }
+            }
+        }
+        for (k, _) in obj {
+            if !matches!(k.as_str(), "schema" | "bench" | "note" | "config" | "results") {
+                return Err(format!("unknown top-level field {k:?}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse and [`validate`](RunReport::validate) a serialized report.
+    pub fn check_str(text: &str) -> Result<(), String> {
+        let doc = Json::parse(text).map_err(|e| e.to_string())?;
+        Self::validate(&doc)
+    }
+}
+
+/// Flatten a [`TimingStats`] into prefixed measurement fields
+/// (`<prefix>_mean_ms`, `_min_ms`, `_max_ms`, `_std_ms`, `_median_ms`,
+/// `_runs`) for a result row.
+pub fn timing_fields(prefix: &str, t: &TimingStats) -> Vec<(String, Json)> {
+    vec![
+        (format!("{prefix}_mean_ms"), Json::Num(t.mean_ms)),
+        (format!("{prefix}_min_ms"), Json::Num(t.min_ms)),
+        (format!("{prefix}_max_ms"), Json::Num(t.max_ms)),
+        (format!("{prefix}_std_ms"), Json::Num(t.std_ms)),
+        (format!("{prefix}_median_ms"), Json::Num(t.median_ms)),
+        (format!("{prefix}_runs"), Json::Num(t.n as f64)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunReport {
+        let mut r = RunReport::new("kernel_crossover");
+        r.config_num("rows", 8000.0);
+        r.config_str("variant", "Standard");
+        r.push_result(vec![
+            ("corpus".to_string(), Json::Str("kern-v1500".to_string())),
+            ("dense_ms".to_string(), Json::Num(41.25)),
+            ("pending".to_string(), Json::Null),
+            ("ok".to_string(), Json::Bool(true)),
+        ]);
+        r
+    }
+
+    #[test]
+    fn round_trip_validates() {
+        let mut r = sample();
+        r.note("test provenance");
+        let text = r.to_json().pretty(2);
+        RunReport::check_str(&text).expect("valid report");
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(REPORT_SCHEMA));
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("kernel_crossover"));
+        let rows = doc.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("dense_ms").and_then(Json::as_f64), Some(41.25));
+        assert!(rows[0].get("pending").unwrap().is_null());
+    }
+
+    #[test]
+    fn save_writes_parsable_pretty_json() {
+        let dir = std::env::temp_dir().join("sphkm-report-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("r.json");
+        sample().save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        RunReport::check_str(&text).expect("valid on disk");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn validation_names_the_defect() {
+        let bad_schema = r#"{"schema": "other.v9", "bench": "x", "config": {}, "results": []}"#;
+        assert!(RunReport::check_str(bad_schema).unwrap_err().contains("schema"));
+        let no_bench = r#"{"schema": "sphkm.report.v1", "config": {}, "results": []}"#;
+        assert!(RunReport::check_str(no_bench).unwrap_err().contains("bench"));
+        let nested_row =
+            r#"{"schema": "sphkm.report.v1", "bench": "x", "config": {}, "results": [{"a": []}]}"#;
+        assert!(RunReport::check_str(nested_row).unwrap_err().contains("results[0]"));
+        let unknown =
+            r#"{"schema": "sphkm.report.v1", "bench": "x", "config": {}, "results": [], "extra": 1}"#;
+        assert!(RunReport::check_str(unknown).unwrap_err().contains("extra"));
+        assert!(RunReport::check_str("not json").is_err());
+    }
+
+    #[test]
+    fn timing_fields_flatten_all_stats() {
+        let t = TimingStats::from_ms(&[1.0, 3.0]);
+        let fields = timing_fields("dense", &t);
+        let keys: Vec<&str> = fields.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "dense_mean_ms",
+                "dense_min_ms",
+                "dense_max_ms",
+                "dense_std_ms",
+                "dense_median_ms",
+                "dense_runs"
+            ]
+        );
+        assert_eq!(fields[5].1, Json::Num(2.0));
+    }
+}

@@ -25,9 +25,14 @@ impl Stopwatch {
     }
 
     /// Restart and return the elapsed duration of the previous lap.
+    /// Drift-free: the next lap starts from the same captured instant
+    /// this lap ends at, so consecutive laps tile the timeline with no
+    /// gap (a second `Instant::now()` read would leak the time between
+    /// the two reads out of every lap).
     pub fn lap(&mut self) -> Duration {
-        let e = self.start.elapsed();
-        self.start = Instant::now();
+        let now = Instant::now();
+        let e = now.duration_since(self.start);
+        self.start = now;
         e
     }
 }
@@ -50,9 +55,14 @@ pub struct TimingStats {
 }
 
 impl TimingStats {
-    /// Compute stats from raw millisecond samples.
+    /// Compute stats from raw millisecond samples. Degenerate inputs
+    /// are well-defined instead of panicking or producing NaN: zero
+    /// samples yield all-zero stats, a single sample has zero standard
+    /// deviation.
     pub fn from_ms(samples: &[f64]) -> Self {
-        assert!(!samples.is_empty());
+        if samples.is_empty() {
+            return Self { n: 0, mean_ms: 0.0, min_ms: 0.0, max_ms: 0.0, std_ms: 0.0, median_ms: 0.0 };
+        }
         let n = samples.len();
         let mean = samples.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
@@ -99,6 +109,30 @@ mod tests {
         let s = TimingStats::from_ms(&[5.0]);
         assert_eq!(s.std_ms, 0.0);
         assert_eq!(s.median_ms, 5.0);
+        assert!(s.std_ms.is_finite() && s.mean_ms.is_finite());
+    }
+
+    #[test]
+    fn stats_empty_is_all_zero() {
+        let s = TimingStats::from_ms(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean_ms, 0.0);
+        assert_eq!(s.min_ms, 0.0);
+        assert_eq!(s.max_ms, 0.0);
+        assert_eq!(s.std_ms, 0.0);
+        assert_eq!(s.median_ms, 0.0);
+    }
+
+    #[test]
+    fn laps_tile_the_timeline() {
+        let mut sw = Stopwatch::start();
+        let outer = Stopwatch::start();
+        let a = sw.lap();
+        let b = sw.lap();
+        // Drift-free contract: consecutive laps cover the full elapsed
+        // span with no gap, so their sum cannot exceed an enclosing
+        // measurement taken after them.
+        assert!(a + b <= outer.elapsed() + sw.elapsed());
     }
 
     #[test]

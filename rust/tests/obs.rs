@@ -1,0 +1,292 @@
+//! Integration tests for the observability subsystem (`sphkm::obs` +
+//! `sphkm::util::{json, report}`): exact histogram quantiles, the
+//! merge-equals-serial property, real serve latency percentiles from the
+//! timed batch path, run-report round-trips, and — under the `trace`
+//! feature — a full fit-to-JSONL trace round-trip whose phase spans
+//! account for fit wall-clock.
+
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
+use sphkm::data::synth::SynthConfig;
+use sphkm::kmeans::SphericalKMeans;
+use sphkm::obs::{LatencyHistogram, Metrics};
+use sphkm::serve::{QueryEngine, ServeConfig, ServeMode};
+use sphkm::util::json::Json;
+use sphkm::util::prop::forall;
+use sphkm::util::report::{timing_fields, RunReport};
+use sphkm::util::timer::TimingStats;
+
+fn corpus(rows: usize, k: usize, seed: u64) -> sphkm::data::Dataset {
+    SynthConfig {
+        name: "obs-test".into(),
+        n_docs: rows,
+        vocab: 2_000,
+        topics: k.max(2),
+        doc_len_mean: 40.0,
+        doc_len_sigma: 0.4,
+        topic_strength: 0.65,
+        shared_vocab_frac: 0.2,
+        zipf_s: 1.05,
+        anomaly_frac: 0.0,
+        tfidf: Default::default(),
+    }
+    .generate(seed)
+}
+
+#[test]
+fn quantiles_are_exact_on_small_samples() {
+    // Samples on bucket lower bounds (powers of two) report exactly.
+    let mut h = LatencyHistogram::new();
+    for ns in [4u64, 8, 16, 32, 64, 128, 256, 512, 1024, 2048] {
+        h.record_ns(ns);
+    }
+    assert_eq!(h.count(), 10);
+    assert_eq!(h.quantile_ns(0.50), 32); // nearest rank 5
+    assert_eq!(h.quantile_ns(0.95), 2048); // rank 10
+    assert_eq!(h.quantile_ns(0.99), 2048);
+    assert_eq!(h.quantile_ns(0.0), 4);
+    assert_eq!(h.quantile_ns(1.0), 2048);
+    // Quantiles are monotone in q and clamped to [min, max].
+    let mut prev = 0;
+    for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+        let v = h.quantile_ns(q);
+        assert!(v >= prev, "quantile not monotone at q={q}");
+        assert!((h.min_ns()..=h.max_ns()).contains(&v));
+        prev = v;
+    }
+}
+
+#[test]
+fn histogram_merge_is_associative_commutative_and_equals_serial() {
+    forall(200, 0x0B5_CAFE, |g| {
+        // Random sample set split across three "shards" in random order.
+        let n = g.usize_in(0, 64);
+        let mut serial = LatencyHistogram::new();
+        let mut shards = [
+            LatencyHistogram::new(),
+            LatencyHistogram::new(),
+            LatencyHistogram::new(),
+        ];
+        for _ in 0..n {
+            // Log-uniform-ish spread: pick an octave, then an offset.
+            let octave = g.usize_in(0, 40) as u32;
+            let ns = (1u64 << octave) + g.usize_in(0, 1 << octave.min(20)) as u64;
+            serial.record_ns(ns);
+            let s = g.usize_in(0, 3);
+            shards[s].record_ns(ns);
+        }
+        // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c) == serial, in any operand order.
+        let mut left = shards[0].clone();
+        left.merge(&shards[1]);
+        left.merge(&shards[2]);
+        let mut right = shards[2].clone();
+        right.merge(&shards[1]);
+        right.merge(&shards[0]);
+        let mut bc = shards[1].clone();
+        bc.merge(&shards[2]);
+        let mut assoc = shards[0].clone();
+        assoc.merge(&bc);
+        assert_eq!(left, serial, "case {}", g.case);
+        assert_eq!(right, serial, "case {}", g.case);
+        assert_eq!(assoc, serial, "case {}", g.case);
+    });
+}
+
+#[test]
+fn timed_serve_batch_reports_real_latency_percentiles() {
+    let k = 16;
+    let ds = corpus(600, k, 7);
+    let fitted = SphericalKMeans::new(k)
+        .seed(7)
+        .threads(1)
+        .max_iter(5)
+        .fit(&ds.matrix)
+        .expect("valid config");
+    let model = fitted.to_model();
+    for threads in [1usize, 0] {
+        let engine =
+            QueryEngine::new(model.clone(), &ServeConfig { mode: ServeMode::Pruned, threads });
+        let (plain, plain_stats) = engine.top_p_batch(&ds.matrix, 3);
+        let (timed, timed_stats, hist) = engine.top_p_batch_timed(&ds.matrix, 3);
+        // The timed path answers bit-identically and counts every query.
+        assert_eq!(plain, timed, "threads={threads}");
+        assert_eq!(plain_stats, timed_stats, "threads={threads}");
+        assert_eq!(hist.count(), ds.matrix.rows() as u64);
+        // Real per-query latencies: positive, ordered percentiles.
+        let (p50, p95, p99) = (hist.quantile_ns(0.50), hist.quantile_ns(0.95), hist.quantile_ns(0.99));
+        assert!(p50 > 0, "p50 must be a real measurement");
+        assert!(hist.min_ns() <= p50 && p50 <= p95 && p95 <= p99 && p99 <= hist.max_ns());
+        assert!(hist.mean_ns() > 0.0);
+    }
+}
+
+#[test]
+fn metrics_registry_round_trips_through_schema_stamped_json() {
+    let mut m = Metrics::new();
+    m.incr("serve.queries", 600);
+    m.set_gauge("serve.qps", 1234.5);
+    for ns in [1_000u64, 2_000, 4_000] {
+        m.observe_ns("serve.query", ns);
+    }
+    let doc = Json::Obj(vec![
+        (
+            "schema".to_string(),
+            Json::Str(sphkm::obs::metrics::METRICS_SCHEMA.to_string()),
+        ),
+        ("metrics".to_string(), m.to_json()),
+    ]);
+    let text = doc.pretty(2);
+    let back = Json::parse(&text).expect("parses");
+    assert_eq!(back.get("schema").and_then(Json::as_str), Some("sphkm.metrics.v1"));
+    let hist = back
+        .get("metrics")
+        .and_then(|m| m.get("histograms"))
+        .and_then(|h| h.get("serve.query"))
+        .expect("histogram summary");
+    assert_eq!(hist.get("count").and_then(Json::as_f64), Some(3.0));
+    assert!(hist.get("p99_ns").and_then(Json::as_f64).is_some());
+}
+
+#[test]
+fn run_report_round_trips_and_validates() {
+    let mut r = RunReport::new("obs_selftest");
+    r.note("integration round trip");
+    r.config_num("rows", 600.0);
+    r.config_str("variant", "standard");
+    let t = TimingStats::from_ms(&[1.0, 2.0, 3.0]);
+    let mut row = vec![("corpus".to_string(), Json::Str("obs-test".to_string()))];
+    row.extend(timing_fields("fit", &t));
+    r.push_result(row);
+    let text = r.to_json().pretty(2);
+    RunReport::check_str(&text).expect("valid report");
+    let doc = Json::parse(&text).unwrap();
+    let rows = doc.get("results").and_then(Json::as_arr).unwrap();
+    assert_eq!(rows[0].get("fit_mean_ms").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(rows[0].get("fit_runs").and_then(Json::as_f64), Some(3.0));
+    // Write-to-disk path, as the benches use it.
+    let path = std::env::temp_dir()
+        .join(format!("sphkm-obs-report-{}.json", std::process::id()));
+    r.save(&path).expect("save");
+    let on_disk = std::fs::read_to_string(&path).expect("read back");
+    std::fs::remove_file(&path).ok();
+    RunReport::check_str(&on_disk).expect("valid on disk");
+}
+
+/// With the `trace` feature off every phase table must stay identically
+/// zero: the spans compile to nothing and the fit pays no timing cost.
+#[cfg(not(feature = "trace"))]
+#[test]
+fn phase_tables_are_zero_without_the_trace_feature() {
+    assert!(!sphkm::obs::TRACE_ENABLED);
+    let k = 8;
+    let ds = corpus(400, k, 11);
+    let fitted = SphericalKMeans::new(k)
+        .seed(11)
+        .threads(1)
+        .max_iter(4)
+        .fit(&ds.matrix)
+        .expect("valid config");
+    assert!(fitted.stats().phase_totals().is_zero());
+    for it in &fitted.stats().iters {
+        assert!(it.phases.is_zero());
+    }
+}
+
+/// With the `trace` feature on, a fit's phase spans are live: the
+/// disjoint barrier phases must account for fit wall-clock (within 10%
+/// plus a small constant for loop overhead), and an emitted JSONL trace
+/// must validate against `sphkm.trace.v1`.
+#[cfg(feature = "trace")]
+#[test]
+fn traced_fit_emits_valid_jsonl_and_phases_cover_wall_clock() {
+    use std::ops::ControlFlow;
+
+    use sphkm::obs::{TraceWriter, TRACE_ENABLED};
+    use sphkm::util::timer::Stopwatch;
+
+    assert!(TRACE_ENABLED);
+    let k = 16;
+    let ds = corpus(2_000, k, 13);
+    let path = std::env::temp_dir()
+        .join(format!("sphkm-obs-trace-{}.jsonl", std::process::id()));
+    let mut w = TraceWriter::create(&path).expect("create trace");
+    w.record(
+        "run_start",
+        vec![
+            ("algo".to_string(), Json::Str("simp-elkan".to_string())),
+            ("k".to_string(), Json::Num(k as f64)),
+            ("n".to_string(), Json::Num(ds.matrix.rows() as f64)),
+            ("d".to_string(), Json::Num(ds.matrix.cols() as f64)),
+            ("threads".to_string(), Json::Num(1.0)),
+        ],
+    )
+    .expect("run_start");
+
+    let sw = Stopwatch::start();
+    let fitted = SphericalKMeans::new(k)
+        .seed(13)
+        .threads(1)
+        .max_iter(8)
+        .fit_observed(&ds.matrix, &mut |s: &sphkm::kmeans::IterSnapshot<'_>| {
+            w.record(
+                "iter",
+                vec![
+                    ("iteration".to_string(), Json::Num(s.iteration as f64)),
+                    ("wall_ms".to_string(), Json::Num(s.iter_ms)),
+                    ("elapsed_ms".to_string(), Json::Num(s.elapsed_ms)),
+                    (
+                        "sims_point_center".to_string(),
+                        Json::Num(s.stats.sims_point_center as f64),
+                    ),
+                    (
+                        "reassignments".to_string(),
+                        Json::Num(s.stats.reassignments as f64),
+                    ),
+                    ("converged".to_string(), Json::Bool(s.converged)),
+                    ("phases".to_string(), s.stats.phases.to_json()),
+                ],
+            )
+            .expect("iter record");
+            ControlFlow::Continue(())
+        })
+        .expect("valid config");
+    let wall_ms = sw.ms();
+
+    let totals = fitted.stats().phase_totals();
+    w.record(
+        "run_end",
+        vec![
+            ("iterations".to_string(), Json::Num(fitted.iterations() as f64)),
+            ("objective".to_string(), Json::Num(fitted.objective())),
+            ("total_ms".to_string(), Json::Num(wall_ms)),
+            ("phases".to_string(), totals.to_json()),
+        ],
+    )
+    .expect("run_end");
+    let records = w.records();
+    w.finish().expect("flush");
+    drop(w);
+
+    // The trace round-trips through the validator.
+    let text = std::fs::read_to_string(&path).expect("read trace");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(sphkm::obs::trace::validate_trace(&text).expect("valid trace"), records);
+    assert!(records >= 3, "run_start + at least one iter + run_end");
+
+    // The disjoint barrier phases account for the fit: their sum sits
+    // within 10% of wall-clock (plus 5 ms slack for tiny fits where loop
+    // overhead dominates), and never exceeds it.
+    assert!(!totals.is_zero(), "spans must be live under --features trace");
+    let covered = totals.barrier_ms();
+    assert!(
+        covered <= wall_ms * 1.01 + 1.0,
+        "phases ({covered:.2} ms) cannot exceed wall-clock ({wall_ms:.2} ms)"
+    );
+    assert!(
+        covered >= wall_ms * 0.9 - 5.0,
+        "phases ({covered:.2} ms) must cover >=90% of wall-clock ({wall_ms:.2} ms)"
+    );
+}
