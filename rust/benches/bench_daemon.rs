@@ -1,0 +1,208 @@
+//! Swap-under-load acceptance bench for the serving daemon: N client
+//! threads sustain top-p queries over loopback TCP while the main thread
+//! hot-swaps between two trained models through the `reload` RPC.
+//!
+//! Acceptance bars (asserted):
+//! * every request through ≥ `--swaps` hot swaps completes — zero
+//!   dropped or errored requests;
+//! * every response is **bit-identical** to the one-shot
+//!   `QueryEngine` answer of the model epoch that served it (even
+//!   epochs serve model A, odd epochs model B);
+//! * every answered query is attributed to exactly one epoch by the
+//!   slot's per-epoch counters.
+//!
+//! ```text
+//! cargo bench --bench bench_daemon -- [--rows 2000] [--k 16] [--top 3]
+//!     [--clients 4] [--swaps 4] [--seed 42]
+//! ```
+
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use sphkm::data::synth::SynthConfig;
+use sphkm::kmeans::{Engine, MiniBatchParams, SphericalKMeans};
+use sphkm::model::Model;
+use sphkm::serve::{Client, Daemon, DaemonConfig, ServeMode};
+use sphkm::util::cli::Args;
+use sphkm::util::timer::Stopwatch;
+
+fn train(data: &sphkm::sparse::CsrMatrix, k: usize, seed: u64) -> sphkm::kmeans::FittedModel {
+    SphericalKMeans::new(k)
+        .engine(Engine::MiniBatch(MiniBatchParams {
+            batch_size: 512,
+            epochs: 2,
+            truncate: Some(48),
+            ..Default::default()
+        }))
+        .seed(seed)
+        .threads(1)
+        .fit(data)
+        .expect("bench configuration is valid")
+}
+
+fn main() {
+    let args = Args::from_env();
+    let rows: usize = args.get_or("rows", 2_000).unwrap_or(2_000);
+    let k: usize = args.get_or("k", 16).unwrap_or(16);
+    let p: usize = args.get_or("top", 3).unwrap_or(3);
+    let seed: u64 = args.get_or("seed", 42).unwrap_or(42);
+    let clients: usize = args.get_or("clients", 4).unwrap_or(4).max(1);
+    let swaps: u64 = args.get_or("swaps", 4).unwrap_or(4).max(3);
+
+    let ds = SynthConfig {
+        name: "daemon-bench".into(),
+        n_docs: rows,
+        vocab: 8_000,
+        topics: k.max(2),
+        doc_len_mean: 50.0,
+        doc_len_sigma: 0.4,
+        topic_strength: 0.6,
+        shared_vocab_frac: 0.2,
+        zipf_s: 1.05,
+        anomaly_frac: 0.0,
+        tfidf: Default::default(),
+    }
+    .generate(seed);
+    println!(
+        "# daemon bench — {} rows × {} dims, k={k}, top-{p}, {clients} clients, {swaps} swaps",
+        ds.matrix.rows(),
+        ds.matrix.cols(),
+    );
+
+    // Two distinct models, persisted like production would.
+    let dir = std::env::temp_dir().join(format!("sphkm-bench-daemon-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let a_path = dir.join("a.spkm");
+    let b_path = dir.join("b.spkm");
+    train(&ds.matrix, k, seed).to_model().save(&a_path).expect("save A");
+    train(&ds.matrix, k, seed ^ 0x5eed).to_model().save(&b_path).expect("save B");
+
+    // The probe batch and the per-model one-shot oracle answers, computed
+    // from the same persisted files the daemon serves (the engine is a
+    // pure function of the frozen model, bit-identical at every thread
+    // count, so one oracle covers every epoch of that model).
+    let probe_rows = ds.matrix.rows().min(200);
+    let probe: Vec<(Vec<u32>, Vec<f32>)> = (0..probe_rows)
+        .map(|i| {
+            let r = ds.matrix.row(i);
+            (r.indices.to_vec(), r.values.to_vec())
+        })
+        .collect();
+    let probe_csr = sphkm::sparse::CsrMatrix::from_rows(
+        ds.matrix.cols(),
+        &(0..probe_rows).map(|i| {
+            sphkm::sparse::SparseVec::from_pairs(
+                ds.matrix.cols(),
+                ds.matrix.row(i)
+                    .indices
+                    .iter()
+                    .zip(ds.matrix.row(i).values)
+                    .map(|(&c, &v)| (c, v))
+                    .collect(),
+            )
+        })
+        .collect::<Vec<_>>(),
+    );
+    let mode = ServeMode::Pruned;
+    let oracle = |path: &std::path::Path| -> Vec<Vec<(u32, f64)>> {
+        let engine = sphkm::kmeans::FittedModel::from_model(Model::load(path).expect("load"))
+            .query_engine_with(mode, 1);
+        engine.top_p_batch(&probe_csr, p).0
+    };
+    let answers = [oracle(&a_path), oracle(&b_path)]; // [even epochs, odd epochs]
+
+    let cfg = DaemonConfig {
+        mode,
+        threads: 1,
+        ..DaemonConfig::default()
+    };
+    let handle =
+        Daemon::start(Model::load(&a_path).expect("load A"), &cfg).expect("daemon starts");
+    let addr = handle.local_addr().to_string();
+    println!("# daemon on {addr}");
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let completed = Arc::new(AtomicU64::new(0));
+    let sw = Stopwatch::start();
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            let addr = addr.clone();
+            let probe = probe.clone();
+            let answers = &answers;
+            let stop = Arc::clone(&stop);
+            let completed = Arc::clone(&completed);
+            s.spawn(move || {
+                let mut client = Client::connect(&addr).expect("client connects");
+                let mut done = 0u64;
+                // Keep querying until the swapper finishes, with a floor
+                // so every client demonstrably runs through the swaps.
+                while !stop.load(Ordering::SeqCst) || done < 8 {
+                    let (epoch, got) = client.query(p, &probe).expect("zero errored requests");
+                    let want = &answers[(epoch % 2) as usize];
+                    assert_eq!(got.len(), want.len(), "epoch {epoch}: row count");
+                    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+                        assert_eq!(g.len(), w.len(), "epoch {epoch} row {i}: rank count");
+                        for (x, y) in g.iter().zip(w) {
+                            assert_eq!(x.0, y.0, "epoch {epoch} row {i}: center ids");
+                            assert_eq!(
+                                x.1.to_bits(),
+                                y.1.to_bits(),
+                                "epoch {epoch} row {i}: similarities"
+                            );
+                        }
+                    }
+                    done += 1;
+                }
+                completed.fetch_add(done, Ordering::SeqCst);
+            });
+        }
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        let a = a_path.clone();
+        let b = b_path.clone();
+        s.spawn(move || {
+            let mut client = Client::connect(&addr).expect("swapper connects");
+            for swap in 1..=swaps {
+                // Odd epochs serve B, even epochs serve A.
+                let path = if swap % 2 == 0 { &a } else { &b };
+                let epoch = client.reload(Some(path.to_str().expect("utf8 path"))).expect("reload");
+                assert_eq!(epoch, swap, "swaps publish consecutive epochs");
+                std::thread::sleep(std::time::Duration::from_millis(40));
+            }
+            stop.store(true, Ordering::SeqCst);
+        });
+    });
+    let ms = sw.ms();
+
+    let mut client = Client::connect(&addr).expect("stats client");
+    let (epoch, swapped, per_epoch, _metrics) = client.stats().expect("stats");
+    let total_requests = completed.load(Ordering::SeqCst);
+    let attributed: u64 = per_epoch.iter().map(|&(_, n)| n).sum();
+    client.shutdown().expect("shutdown ack");
+    let metrics = handle.join();
+
+    assert_eq!(epoch, swaps, "final epoch");
+    assert_eq!(swapped, swaps, "swap counter");
+    assert_eq!(
+        attributed,
+        total_requests * probe_rows as u64,
+        "every answered query attributed to exactly one epoch"
+    );
+    assert_eq!(metrics.counter("daemon.errors"), 0, "zero errored requests");
+    std::fs::remove_dir_all(&dir).ok();
+
+    println!(
+        "# {total_requests} batches × {probe_rows} queries from {clients} clients in {ms:.0} ms \
+         ({:.0} queries/s) across {swaps} hot swaps; per-epoch queries: {per_epoch:?}",
+        (total_requests * probe_rows as u64) as f64 / (ms / 1000.0).max(1e-9),
+    );
+    println!(
+        "# acceptance: zero dropped or errored requests; every response bit-identical \
+         to the one-shot QueryEngine answer for its serving epoch — OK"
+    );
+}

@@ -13,7 +13,10 @@
 //! Each batch-query measurement repeats `--warmup` untimed + `--runs`
 //! timed times (answers are deterministic; only wall-clock varies), and a
 //! final timed pass reports exact per-query latency percentiles from the
-//! engine's log-scale histogram.
+//! engine's log-scale histogram. Results are written to
+//! `BENCH_serve.json` at the repository root in the shared
+//! `sphkm.report.v1` envelope (see `sphkm::util::report`, validated by
+//! `sphkm report --check`).
 //!
 //! ```text
 //! cargo bench --bench bench_serve -- [--rows 8000] [--k 64] [--top 5]
@@ -31,6 +34,8 @@ use sphkm::model::Model;
 use sphkm::serve::{QueryEngine, ServeConfig, ServeMode};
 use sphkm::util::benchkit::BenchOpts;
 use sphkm::util::cli::Args;
+use sphkm::util::json::Json;
+use sphkm::util::report::{timing_fields, RunReport};
 use sphkm::util::timer::{Stopwatch, TimingStats};
 
 fn main() {
@@ -78,6 +83,21 @@ fn main() {
         opts.runs,
         opts.warmup
     );
+
+    let mut report = RunReport::new("serve");
+    report.note("madds are exact and run-invariant; ms columns are mean over --runs");
+    for (key, v) in [
+        ("rows", rows),
+        ("k", k),
+        ("top", p),
+        ("truncate", truncate),
+        ("runs", opts.runs),
+        ("warmup", opts.warmup),
+    ] {
+        report.config_num(key, v as f64);
+    }
+    report.config_num("seed", seed as f64);
+    report.config_num("density", density);
 
     // Train a sparse-centroid model and round-trip it through persistence.
     let sw = Stopwatch::start();
@@ -137,7 +157,8 @@ fn main() {
             ex_out = Some(out);
         }
         let (ex, ex_stats) = ex_out.expect("at least one run");
-        let ex_ms = TimingStats::from_ms(&ex_samples).mean_ms;
+        let ex_t = TimingStats::from_ms(&ex_samples);
+        let ex_ms = ex_t.mean_ms;
         let mut pr_samples = Vec::new();
         let mut pr_out = None;
         for it in 0..opts.warmup + opts.runs.max(1) {
@@ -150,7 +171,8 @@ fn main() {
             pr_out = Some(out);
         }
         let (pr, pr_stats) = pr_out.expect("at least one run");
-        let pr_ms = TimingStats::from_ms(&pr_samples).mean_ms;
+        let pr_t = TimingStats::from_ms(&pr_samples);
+        let pr_ms = pr_t.mean_ms;
 
         // Bit-identity of the pruned traversal, per thread count, and of
         // every thread count against the serial baseline.
@@ -170,6 +192,27 @@ fn main() {
             madds = (ex_stats.madds, pr_stats.madds);
         }
         let n = ex_stats.queries.max(1) as f64;
+        let mut row = vec![
+            ("threads".to_string(), Json::Num(threads as f64)),
+            ("queries".to_string(), Json::Num(ex_stats.queries as f64)),
+            ("exhaustive_madds".to_string(), Json::Num(ex_stats.madds as f64)),
+            ("pruned_madds".to_string(), Json::Num(pr_stats.madds as f64)),
+            (
+                "exhaustive_qps".to_string(),
+                Json::Num(ex_stats.queries as f64 / (ex_ms / 1000.0).max(1e-9)),
+            ),
+            (
+                "pruned_qps".to_string(),
+                Json::Num(pr_stats.queries as f64 / (pr_ms / 1000.0).max(1e-9)),
+            ),
+            (
+                "centers_pruned_per_query".to_string(),
+                Json::Num(pr_stats.centers_pruned as f64 / n),
+            ),
+        ];
+        row.extend(timing_fields("exhaustive", &ex_t));
+        row.extend(timing_fields("pruned", &pr_t));
+        report.push_result(row);
         for (mode, ms, stats) in [("exhaustive", ex_ms, ex_stats), ("pruned", pr_ms, pr_stats)] {
             println!(
                 "{:<10} {:>8} {:>10.1} {:>10.0} {:>16} {:>14.1}",
@@ -206,6 +249,14 @@ fn main() {
         hist.max_ns() as f64 / 1e6,
         hist.count()
     );
+    report.push_result(vec![
+        ("latency_samples".to_string(), Json::Num(hist.count() as f64)),
+        ("latency_p50_ms".to_string(), Json::Num(hist.quantile_ms(0.50))),
+        ("latency_p95_ms".to_string(), Json::Num(hist.quantile_ms(0.95))),
+        ("latency_p99_ms".to_string(), Json::Num(hist.quantile_ms(0.99))),
+        ("latency_mean_ms".to_string(), Json::Num(hist.mean_ns() / 1e6)),
+        ("latency_max_ms".to_string(), Json::Num(hist.max_ns() as f64 / 1e6)),
+    ]);
 
     let (ex_madds, pr_madds) = madds;
     assert!(
@@ -217,4 +268,16 @@ fn main() {
          at every thread count; {:.1}x fewer madds ({pr_madds} vs {ex_madds}) — OK",
         ex_madds as f64 / pr_madds.max(1) as f64
     );
+
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_serve.json");
+    debug_assert!(
+        RunReport::check_str(&report.to_json().pretty(2)).is_ok(),
+        "emitting an invalid report"
+    );
+    match report.save(&json_path) {
+        Ok(()) => println!("# wrote {}", json_path.display()),
+        Err(e) => println!("# could not write {}: {e}", json_path.display()),
+    }
 }

@@ -811,9 +811,16 @@ impl FittedModel {
     /// the traversal ([`ServeMode::Auto`] resolves from the centers'
     /// density); batches shard across all cores.
     pub fn query_engine(&self, mode: ServeMode) -> QueryEngine {
+        self.query_engine_with(mode, 0)
+    }
+
+    /// [`FittedModel::query_engine`] with an explicit worker-thread count
+    /// (`0` = all cores, `1` = serial). The serving daemon uses this to
+    /// keep every published epoch on the pool size the operator chose.
+    pub fn query_engine_with(&self, mode: ServeMode, threads: usize) -> QueryEngine {
         // Serving needs no training state — hand over a stateless model.
         let model = Model::new(self.result.centers.clone(), self.meta.clone());
-        QueryEngine::new(model, &ServeConfig { mode, threads: 0 })
+        QueryEngine::new(model, &ServeConfig { mode, threads })
     }
 
     /// The problem shape the serving Auto heuristic reads — exposed so

@@ -10,6 +10,10 @@
 //! sphkm assign    --model model.spkm --data <name|path.svm|path.mtx>
 //!                 [--top 1] [--mode auto|pruned|exhaustive] [--out top.csv]
 //!                 [--mmap] [--metrics-out metrics.json]
+//! sphkm serve     --model model.spkm [--addr 127.0.0.1:0] [--mode auto]
+//!                 [--watch model.spkm] [--refit-data <name>]
+//! sphkm query     [--addr HOST:PORT | --addr-file FILE] [--data <name>]
+//!                 [--op query|stats|ping|reload|refit|shutdown]
 //! sphkm report    --check FILE.json FILE.jsonl ...
 //! sphkm convert   --data file.svm --out file.sks [--normalize]
 //! sphkm gen       --data <name> --out file.svm [--scale small] [--seed 42]
@@ -30,7 +34,7 @@ use sphkm::init::InitMethod;
 use sphkm::kmeans::{IterSnapshot, KernelChoice, Variant};
 use sphkm::metrics;
 use sphkm::model::Model;
-use sphkm::serve::{QueryEngine, ServeConfig, ServeMode};
+use sphkm::serve::{Client, Daemon, DaemonConfig, QueryEngine, RefitConfig, ServeConfig, ServeMode};
 use sphkm::sparse::{RowSource, ShardStore};
 use sphkm::util::cli::Args;
 use sphkm::util::json::Json;
@@ -69,6 +73,23 @@ USAGE:
                [--metrics-out FILE.json] # query counters + per-query latency
                                          # histogram (exact p50/p95/p99)
                [--scale S] [--seed N]   # answer nearest-center queries
+  sphkm serve --model FILE.spkm   # persistent serving daemon: newline-
+               [--addr 127.0.0.1:0]     # delimited sphkm.rpc.v1 JSON over
+               [--addr-file FILE]       # TCP, hot model swap, runs until a
+               [--mode auto|pruned|exhaustive] [--threads T]  # shutdown RPC
+               [--mmap]                 # low-memory model load (no refit state)
+               [--watch FILE.spkm] [--watch-interval-ms N] # swap on change
+               [--refit-data <dataset>] # background mini-batch refit corpus
+               [--refit-interval-ms N]  # periodic rounds (omit: RPC-only)
+               [--refit-batch-size B] [--refit-epochs E] [--refit-tol T]
+               [--refit-truncate M] [--refit-threads T]
+               [--metrics-out FILE.json] # final registry dump on shutdown
+  sphkm query [--addr HOST:PORT | --addr-file FILE] # daemon client
+              [--op query|stats|ping|reload|refit|shutdown]
+              [--data <dataset>] [--top P] [--batch N] [--out FILE.csv]
+              [--path FILE.spkm]  # reload target (default: watched path)
+              # default op: query with --data, stats without; query CSVs
+              # are byte-identical to `assign --out` for the same model
   sphkm report --check FILE...    # validate machine-readable outputs:
                                   # .jsonl traces, report/metrics .json
   sphkm convert --data FILE.svm --out FILE.sks [--normalize]
@@ -96,7 +117,13 @@ USAGE:
 }
 
 fn load_dataset(args: &Args, scale: Scale, seed: u64) -> Dataset {
-    let spec = args.get("data").unwrap_or("demo");
+    load_dataset_spec(args.get("data").unwrap_or("demo"), scale, seed)
+}
+
+/// Resolve a dataset spec (named synthetic corpus or `.svm`/`.mtx` path)
+/// into unit-normalized rows — shared by `--data`, `--refit-data`, and
+/// the query client.
+fn load_dataset_spec(spec: &str, scale: Scale, seed: u64) -> Dataset {
     if spec.ends_with(".svm") || spec.ends_with(".libsvm") {
         let (mut m, labels) =
             sphkm::data::io::read_libsvm(std::path::Path::new(spec)).unwrap_or_else(|e| {
@@ -358,15 +385,7 @@ fn run_assign(args: &Args, scale: Scale, seed: u64) {
     // --mmap: low-memory streaming load — the training-state section of a
     // version-2 file is checksummed but never materialized (serve-only).
     let low_mem = args.flag("mmap");
-    let model = if low_mem {
-        Model::load_low_mem(std::path::Path::new(model_path))
-    } else {
-        Model::load(std::path::Path::new(model_path))
-    }
-    .unwrap_or_else(|e| {
-        eprintln!("error loading model {model_path}: {e}");
-        std::process::exit(1)
-    });
+    let model = load_model_or_exit(model_path, low_mem);
     if low_mem {
         println!("[mmap] low-memory model load: training state skipped, O(k·d) peak");
     }
@@ -488,6 +507,231 @@ fn run_assign(args: &Args, scale: Scale, seed: u64) {
     }
 }
 
+/// Load a `.spkm` file or exit 2 with the typed [`sphkm::model::ModelError`]
+/// as a one-line diagnostic (bad magic, version, truncation, checksum —
+/// all usage-class failures on the CLI surface, never a raw panic).
+fn load_model_or_exit(path: &str, low_mem: bool) -> Model {
+    let res = if low_mem {
+        Model::load_low_mem(std::path::Path::new(path))
+    } else {
+        Model::load(std::path::Path::new(path))
+    };
+    res.unwrap_or_else(|e| {
+        eprintln!("error loading model {path}: {e}");
+        std::process::exit(2)
+    })
+}
+
+/// `sphkm serve`: run the persistent serving daemon (see
+/// [`sphkm::serve::daemon`]) until a client sends the `shutdown` RPC.
+fn run_serve(args: &Args, scale: Scale, seed: u64) {
+    let model_path = args.get("model").unwrap_or_else(|| usage());
+    // Default to the full load: a background refit warm-starts from the
+    // persisted training state, which --mmap deliberately skips.
+    let low_mem = args.flag("mmap");
+    let model = load_model_or_exit(model_path, low_mem);
+    let mode: ServeMode = args
+        .get("mode")
+        .unwrap_or("auto")
+        .parse()
+        .unwrap_or_else(|e| { eprintln!("{e}"); usage() });
+    let threads: usize = args.get_or("threads", 0).unwrap_or(0);
+    let watch = args.get("watch").map(|p| {
+        let ms: u64 = args.get_or("watch-interval-ms", 500).unwrap_or(500).max(1);
+        (std::path::PathBuf::from(p), std::time::Duration::from_millis(ms))
+    });
+    let refit = args.get("refit-data").map(|spec| {
+        if low_mem {
+            eprintln!(
+                "warning: --mmap skips training state; the first refit round \
+                 transfers centers instead of resuming the schedule"
+            );
+        }
+        let ds = load_dataset_spec(spec, scale, seed);
+        let params = MiniBatchParams {
+            batch_size: args.get_or("refit-batch-size", 1024).unwrap_or(1024),
+            epochs: args.get_or("refit-epochs", 1).unwrap_or(1),
+            tol: args.get_or("refit-tol", 1e-4).unwrap_or(1e-4),
+            truncate: match args.get_or("refit-truncate", 0).unwrap_or(0) {
+                0 => None,
+                m => Some(m),
+            },
+        };
+        let interval = args
+            .get("refit-interval-ms")
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(std::time::Duration::from_millis);
+        println!(
+            "[refit] corpus {} ({} rows), batch={}, epochs={}, {}",
+            ds.name,
+            ds.matrix.rows(),
+            params.batch_size,
+            params.epochs,
+            match interval {
+                Some(d) => format!("every {} ms", d.as_millis()),
+                None => "on `refit` RPC only".to_string(),
+            }
+        );
+        RefitConfig {
+            data: ds.matrix,
+            params,
+            threads: args.get_or("refit-threads", threads).unwrap_or(threads),
+            interval,
+        }
+    });
+    let cfg = DaemonConfig {
+        addr: args.get_or("addr", "127.0.0.1:0".to_string()).unwrap_or_else(|_| usage()),
+        mode,
+        threads,
+        watch,
+        refit,
+    };
+    let (k, d) = (model.k(), model.d());
+    let handle = Daemon::start(model, &cfg).unwrap_or_else(|e| {
+        eprintln!("error starting daemon on {}: {e}", cfg.addr);
+        std::process::exit(1)
+    });
+    let addr = handle.local_addr();
+    println!(
+        "[serve] {model_path} (k={k}, d={d}) listening on {addr} — mode={mode}, \
+         threads={threads}; stop with `sphkm query --addr {addr} --op shutdown`"
+    );
+    if let Some(path) = args.get("addr-file") {
+        // Written after the bind so a launcher can poll for the
+        // ephemeral port instead of parsing stdout.
+        if let Err(e) = std::fs::write(path, format!("{addr}\n")) {
+            eprintln!("could not write {path}: {e}");
+            handle.shutdown();
+            handle.join();
+            std::process::exit(1);
+        }
+        println!("[serve] bound address written to {path}");
+    }
+    let metrics = handle.join();
+    println!("[serve] shutdown: {} requests served", metrics.counter("daemon.requests"));
+    if let Some(out) = args.get("metrics-out") {
+        if let Err(e) = std::fs::write(out, sphkm::serve::daemon::metrics_dump(&metrics)) {
+            eprintln!("could not save {out}: {e}");
+            std::process::exit(1);
+        }
+        println!("[metrics] {out}");
+    }
+}
+
+/// `sphkm query`: drive a running daemon over `sphkm.rpc.v1` — the CLI,
+/// smoke tests, and walkthroughs all use this instead of hand-rolled
+/// netcat framing.
+fn run_query(args: &Args, scale: Scale, seed: u64) {
+    let addr_owned;
+    let addr: &str = if let Some(a) = args.get("addr") {
+        a
+    } else if let Some(f) = args.get("addr-file") {
+        addr_owned = std::fs::read_to_string(f)
+            .unwrap_or_else(|e| {
+                eprintln!("error reading {f}: {e}");
+                std::process::exit(1)
+            })
+            .trim()
+            .to_string();
+        &addr_owned
+    } else {
+        eprintln!("error: query needs --addr HOST:PORT or --addr-file FILE");
+        usage()
+    };
+    let mut client = Client::connect(addr).unwrap_or_else(|e| {
+        eprintln!("error connecting to {addr}: {e}");
+        std::process::exit(1)
+    });
+    /// Unwrap an RPC result or exit 1 with the one-line client error.
+    fn check<T>(r: Result<T, sphkm::serve::ClientError>) -> T {
+        r.unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(1)
+        })
+    }
+    let op = args.get("op").unwrap_or(if args.get("data").is_some() { "query" } else { "stats" });
+    match op {
+        "ping" => {
+            let epoch = check(client.ping());
+            println!("pong (epoch {epoch})");
+        }
+        "stats" => {
+            let (epoch, swaps, per_epoch, metrics) = check(client.stats());
+            println!("epoch {epoch}, {swaps} hot swaps");
+            for (e, n) in per_epoch {
+                println!("  epoch {e}: {n} queries");
+            }
+            println!("{}", metrics.pretty(2));
+        }
+        "reload" => {
+            let epoch = check(client.reload(args.get("path")));
+            println!("reloaded: now serving epoch {epoch}");
+        }
+        "refit" => {
+            let epoch = check(client.refit());
+            println!("refit round published epoch {epoch}");
+        }
+        "shutdown" => {
+            check(client.shutdown());
+            println!("daemon acknowledged shutdown");
+        }
+        "query" => {
+            let ds = load_dataset_spec(args.get("data").unwrap_or("demo"), scale, seed);
+            let p: usize = args.get_or("top", 1).unwrap_or(1).max(1);
+            // Rows per frame: one frame per batch keeps any corpus under
+            // the 16 MiB frame cap; a swap can only land *between*
+            // batches, never inside one.
+            let batch: usize = args.get_or("batch", 1024).unwrap_or(1024).max(1);
+            let n = ds.matrix.rows();
+            let sw = sphkm::util::timer::Stopwatch::start();
+            let mut top: Vec<Vec<(u32, f64)>> = Vec::with_capacity(n);
+            let mut epochs: Vec<u64> = Vec::new();
+            let mut start = 0usize;
+            while start < n {
+                let end = (start + batch).min(n);
+                let rows: Vec<(Vec<u32>, Vec<f32>)> = (start..end)
+                    .map(|i| {
+                        let r = ds.matrix.row(i);
+                        (r.indices.to_vec(), r.values.to_vec())
+                    })
+                    .collect();
+                let (epoch, results) = check(client.query(p, &rows));
+                if epochs.last() != Some(&epoch) {
+                    epochs.push(epoch);
+                }
+                top.extend(results);
+                start = end;
+            }
+            let ms = sw.ms();
+            let epochs_str = epochs.iter().map(u64::to_string).collect::<Vec<_>>().join(",");
+            println!(
+                "queried {n} rows (top-{p}) against {addr} in {ms:.1} ms \
+                 ({:.0} queries/s), served by epoch(s) {epochs_str}",
+                n as f64 / (ms / 1000.0).max(1e-9),
+            );
+            if let Some(out) = args.get("out") {
+                // Byte-identical to `assign --out` for the same model —
+                // the daemon-smoke CI job diffs the two.
+                let mut csv = String::from("row,rank,center,similarity\n");
+                for (i, ranks) in top.iter().enumerate() {
+                    for (rank, &(j, s)) in ranks.iter().enumerate() {
+                        csv.push_str(&format!("{i},{rank},{j},{s}\n"));
+                    }
+                }
+                if let Err(e) = std::fs::write(out, csv) {
+                    eprintln!("could not save {out}: {e}");
+                    std::process::exit(1);
+                }
+                println!("[csv] {out}");
+            }
+        }
+        other => {
+            eprintln!("unknown query op: {other}");
+            usage()
+        }
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
@@ -509,9 +753,11 @@ fn main() {
             // substream and for regenerating the very same named
             // synthetic corpus. An explicit --seed still overrides.
             let resume_model = args.get("resume").map(|path| {
+                // A typed ModelError (bad magic, truncation, checksum)
+                // is a usage-class failure: one-line diagnostic, exit 2.
                 FittedModel::load(std::path::Path::new(path)).unwrap_or_else(|e| {
                     eprintln!("error loading model {path}: {e}");
-                    std::process::exit(1)
+                    std::process::exit(2)
                 })
             });
             let seed: u64 = match (&resume_model, args.get("seed")) {
@@ -988,6 +1234,12 @@ fn main() {
         }
         "assign" => {
             run_assign(&args, scale, seed);
+        }
+        "serve" => {
+            run_serve(&args, scale, seed);
+        }
+        "query" => {
+            run_query(&args, scale, seed);
         }
         "report" => {
             // `report --check FILE...`: validate machine-readable outputs

@@ -1,0 +1,136 @@
+//! Blocking `sphkm.rpc.v1` client over a [`TcpStream`] — what the
+//! `sphkm query` CLI mode, the daemon tests, and the swap-under-load
+//! bench all use to drive a [`Daemon`](crate::serve::Daemon).
+
+use std::io;
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::serve::rpc::{self, FrameReader, Reply, Request};
+use crate::util::json::Json;
+
+/// Why a client call failed.
+#[derive(Debug, thiserror::Error)]
+pub enum ClientError {
+    /// The transport failed (connect, read, or write).
+    #[error("transport error: {0}")]
+    Io(#[from] io::Error),
+    /// The peer's bytes were not a valid `sphkm.rpc.v1` reply, or the
+    /// connection closed mid-call.
+    #[error("protocol error: {0}")]
+    Protocol(String),
+    /// The daemon answered with an error frame; the connection remains
+    /// usable.
+    #[error("daemon error: {0}")]
+    Remote(String),
+}
+
+/// One connection to a serving daemon. Calls are strictly
+/// request-then-reply; the client is not thread-safe (open one per
+/// thread — connections are cheap and the daemon handles each on its own
+/// thread).
+#[derive(Debug)]
+pub struct Client {
+    reader: FrameReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connect to a daemon at `addr` (e.g. `"127.0.0.1:7171"`).
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: FrameReader::new(stream), writer })
+    }
+
+    /// Send one request and read its reply. An error *frame* is returned
+    /// as [`Reply::Error`], not `Err` — the typed helpers below map it.
+    pub fn call(&mut self, req: &Request) -> Result<Reply, ClientError> {
+        rpc::write_frame(&mut self.writer, &req.to_json())?;
+        self.read_reply()
+    }
+
+    /// Send one raw pre-framed line (no trailing newline) and read the
+    /// reply — lets tests and debugging tools speak malformed frames.
+    pub fn call_raw(&mut self, line: &str) -> Result<Reply, ClientError> {
+        let mut framed = line.to_string();
+        framed.push('\n');
+        io::Write::write_all(&mut self.writer, framed.as_bytes())?;
+        io::Write::flush(&mut self.writer)?;
+        self.read_reply()
+    }
+
+    fn read_reply(&mut self) -> Result<Reply, ClientError> {
+        let line = self
+            .reader
+            .read_frame()?
+            .ok_or_else(|| ClientError::Protocol("connection closed mid-call".to_string()))?;
+        let doc = Json::parse_bounded(&line, rpc::MAX_FRAME_BYTES)
+            .map_err(|e| ClientError::Protocol(format!("bad reply frame: {e}")))?;
+        Reply::from_json(&doc).map_err(ClientError::Protocol)
+    }
+
+    /// Top-`top` query for a batch of `(indices, values)` rows; returns
+    /// the serving epoch and per-row `(center, similarity)` lists.
+    #[allow(clippy::type_complexity)]
+    pub fn query(
+        &mut self,
+        top: usize,
+        rows: &[(Vec<u32>, Vec<f32>)],
+    ) -> Result<(u64, Vec<Vec<(u32, f64)>>), ClientError> {
+        match self.call(&Request::Query { top, rows: rows.to_vec() })? {
+            Reply::Query { epoch, results } => Ok((epoch, results)),
+            other => Err(unexpected("query", &other)),
+        }
+    }
+
+    /// Liveness probe; returns the current epoch.
+    pub fn ping(&mut self) -> Result<u64, ClientError> {
+        match self.call(&Request::Ping)? {
+            Reply::Pong { epoch } => Ok(epoch),
+            other => Err(unexpected("ping", &other)),
+        }
+    }
+
+    /// Fetch `(epoch, swaps, per-epoch query counts, metrics document)`.
+    #[allow(clippy::type_complexity)]
+    pub fn stats(&mut self) -> Result<(u64, u64, Vec<(u64, u64)>, Json), ClientError> {
+        match self.call(&Request::Stats)? {
+            Reply::Stats { epoch, swaps, epoch_queries, metrics } => {
+                Ok((epoch, swaps, epoch_queries, metrics))
+            }
+            other => Err(unexpected("stats", &other)),
+        }
+    }
+
+    /// Hot-swap to the model at `path` (`None` = the daemon's watched
+    /// path); returns the new epoch.
+    pub fn reload(&mut self, path: Option<&str>) -> Result<u64, ClientError> {
+        match self.call(&Request::Reload { path: path.map(str::to_string) })? {
+            Reply::Reload { epoch } => Ok(epoch),
+            other => Err(unexpected("reload", &other)),
+        }
+    }
+
+    /// Run one background refit round now; returns the new epoch.
+    pub fn refit(&mut self) -> Result<u64, ClientError> {
+        match self.call(&Request::Refit)? {
+            Reply::Refit { epoch } => Ok(epoch),
+            other => Err(unexpected("refit", &other)),
+        }
+    }
+
+    /// Ask the daemon to stop (acknowledged before it exits).
+    pub fn shutdown(&mut self) -> Result<(), ClientError> {
+        match self.call(&Request::Shutdown)? {
+            Reply::Shutdown => Ok(()),
+            other => Err(unexpected("shutdown", &other)),
+        }
+    }
+}
+
+fn unexpected(op: &str, reply: &Reply) -> ClientError {
+    match reply {
+        Reply::Error { message } => ClientError::Remote(message.clone()),
+        other => ClientError::Protocol(format!("unexpected reply to {op}: {other:?}")),
+    }
+}

@@ -1,0 +1,697 @@
+//! The serving daemon: a persistent TCP process answering
+//! `sphkm.rpc.v1` frames (see [`crate::serve::rpc`]) over a
+//! [`ModelSlot`], with hot model swap and an optional background
+//! mini-batch refit loop.
+//!
+//! # Architecture
+//!
+//! [`Daemon::start`] binds a [`std::net::TcpListener`] and spawns one
+//! accept thread; each accepted connection gets its own handler thread.
+//! All of them share one state block: the [`ModelSlot`] (the
+//! versioned engine), a [`Metrics`] registry, and the shutdown flag.
+//! A query request pins the slot once, validates and assembles the rows
+//! into a [`CsrMatrix`], and runs
+//! [`QueryEngine::top_p_batch_timed`](crate::serve::QueryEngine::top_p_batch_timed)
+//! — which shards the batch across the engine's [`runtime`](crate::runtime)
+//! Plan/Pool executor — so one client's large batch uses every core while
+//! other connections interleave between batches.
+//!
+//! # Hot swap
+//!
+//! Three paths publish a new epoch into the slot, all equivalent from a
+//! reader's point of view (in-flight queries keep their pinned engine;
+//! see [`ModelSlot`]):
+//!
+//! 1. the `reload` RPC (explicit path, or the watched path),
+//! 2. the **watcher thread**: polls the watched `.spkm` file's
+//!    `(mtime, len)` signature and publishes on change — loading via
+//!    [`Model::load_low_mem`], and treating a load failure as "the file
+//!    is mid-write, retry next tick" (the served model is never touched
+//!    by a failed load),
+//! 3. the **refit loop**: periodically (or on the `refit` RPC) reruns the
+//!    mini-batch estimator warm-started from the live lineage and
+//!    publishes the result.
+//!
+//! # Shutdown
+//!
+//! The `shutdown` RPC (or [`DaemonHandle::shutdown`]) raises one atomic
+//! flag. Connection threads poll it on their read timeout, the watcher
+//! and refit threads between sleep slices, and the accept thread on its
+//! own accept timeout loop; [`DaemonHandle::join`] then drains them all.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::ops::ControlFlow;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::kmeans::{Engine, FittedModel, IterSnapshot, MiniBatchParams, SphericalKMeans};
+use crate::model::Model;
+use crate::obs::Metrics;
+use crate::serve::rpc::{self, FrameReader, Reply, Request};
+use crate::serve::slot::ModelSlot;
+use crate::serve::ServeMode;
+use crate::sparse::{CsrMatrix, SparseVec};
+use crate::util::json::Json;
+
+/// How a [`Daemon`] binds and serves — everything but the model itself.
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// Bind address; use port 0 for an ephemeral port (the bound address
+    /// is reported by [`DaemonHandle::local_addr`]).
+    pub addr: String,
+    /// Traversal mode every published engine is opened with.
+    pub mode: ServeMode,
+    /// Worker threads per query batch (0 = all cores, 1 = serial).
+    pub threads: usize,
+    /// Watch this `.spkm` path and hot-swap when its `(mtime, len)`
+    /// signature changes, polling at the given interval. Also the
+    /// default path for a `reload` RPC that names none.
+    pub watch: Option<(PathBuf, Duration)>,
+    /// Background mini-batch refit configuration; `None` disables the
+    /// loop and makes the `refit` RPC an error.
+    pub refit: Option<RefitConfig>,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            mode: ServeMode::Auto,
+            threads: 0,
+            watch: None,
+            refit: None,
+        }
+    }
+}
+
+/// The background refit loop's corpus and optimizer settings.
+#[derive(Debug, Clone)]
+pub struct RefitConfig {
+    /// Unit-normalized training rows the refit resamples each round.
+    pub data: CsrMatrix,
+    /// Mini-batch optimizer parameters for each round.
+    pub params: MiniBatchParams,
+    /// Training threads per round (0 = all cores).
+    pub threads: usize,
+    /// Run a round automatically at this interval; `None` refits only on
+    /// the `refit` RPC.
+    pub interval: Option<Duration>,
+}
+
+/// Refit state guarded by one mutex: rounds are serialized (a concurrent
+/// `refit` RPC and timer tick warm-start from the same lineage one after
+/// the other instead of racing to publish stale centers).
+struct RefitState {
+    data: CsrMatrix,
+    params: MiniBatchParams,
+    threads: usize,
+    /// The lineage the next round warm-starts from — updated by every
+    /// publish (reload, watcher, refit) so rounds always continue the
+    /// model that is actually serving.
+    lineage: FittedModel,
+}
+
+/// State shared by the accept, connection, watcher, and refit threads.
+struct Shared {
+    slot: ModelSlot,
+    mode: ServeMode,
+    threads: usize,
+    watch_path: Option<PathBuf>,
+    metrics: Mutex<Metrics>,
+    shutdown: AtomicBool,
+    refit: Mutex<Option<RefitState>>,
+}
+
+/// Poll interval connection/accept threads use to notice the shutdown
+/// flag without burning a core.
+const POLL: Duration = Duration::from_millis(100);
+
+/// The daemon entry point; see the [module docs](self).
+pub struct Daemon;
+
+/// A running daemon: its bound address plus the handles needed to stop
+/// it and collect its metrics.
+pub struct DaemonHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Daemon {
+    /// Start serving `model` per `cfg`: bind the listener, publish the
+    /// model as epoch 0, and spawn the accept (and optional watcher /
+    /// refit) threads. Returns once the socket is bound — queries can be
+    /// sent as soon as this returns.
+    pub fn start(model: Model, cfg: &DaemonConfig) -> io::Result<DaemonHandle> {
+        let lineage = FittedModel::from_model(model);
+        let engine = lineage.query_engine_with(cfg.mode, cfg.threads);
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let shared = Arc::new(Shared {
+            slot: ModelSlot::new(engine),
+            mode: cfg.mode,
+            threads: cfg.threads,
+            watch_path: cfg.watch.as_ref().map(|(p, _)| p.clone()),
+            metrics: Mutex::new(Metrics::new()),
+            shutdown: AtomicBool::new(false),
+            refit: Mutex::new(cfg.refit.as_ref().map(|r| RefitState {
+                data: r.data.clone(),
+                params: r.params,
+                threads: r.threads,
+                lineage: lineage.clone(),
+            })),
+        });
+
+        let mut threads = Vec::new();
+        {
+            let shared = Arc::clone(&shared);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("sphkm-accept".to_string())
+                    .spawn(move || accept_loop(&listener, &shared))?,
+            );
+        }
+        if let Some((path, interval)) = cfg.watch.clone() {
+            let shared = Arc::clone(&shared);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("sphkm-watch".to_string())
+                    .spawn(move || watch_loop(&path, interval, &shared))?,
+            );
+        }
+        if let Some(interval) = cfg.refit.as_ref().and_then(|r| r.interval) {
+            let shared = Arc::clone(&shared);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("sphkm-refit".to_string())
+                    .spawn(move || refit_timer_loop(interval, &shared))?,
+            );
+        }
+        Ok(DaemonHandle { addr, shared, threads })
+    }
+}
+
+impl DaemonHandle {
+    /// The address the daemon actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Current slot epoch (0 until the first swap).
+    pub fn epoch(&self) -> u64 {
+        self.shared.slot.epoch()
+    }
+
+    /// Hot swaps performed so far.
+    pub fn swaps(&self) -> u64 {
+        self.shared.slot.swaps()
+    }
+
+    /// Raise the shutdown flag and nudge the accept thread. Idempotent;
+    /// returns immediately — call [`DaemonHandle::join`] to wait.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // The accept loop polls on a nonblocking listener, so the flag
+        // alone is enough; a best-effort self-connect shortens the wait.
+        let _ = TcpStream::connect_timeout(&self.addr, POLL);
+    }
+
+    /// Wait for every daemon thread to exit (call after
+    /// [`DaemonHandle::shutdown`], or after a client sent the `shutdown`
+    /// RPC).
+    pub fn join(mut self) -> Metrics {
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        self.shared.metrics.lock().expect("daemon metrics").clone()
+    }
+
+    /// Snapshot of the daemon's metrics registry.
+    pub fn metrics(&self) -> Metrics {
+        self.shared.metrics.lock().expect("daemon metrics").clone()
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let shared = Arc::clone(shared);
+                if let Ok(t) = std::thread::Builder::new()
+                    .name("sphkm-conn".to_string())
+                    .spawn(move || connection_loop(stream, &shared))
+                {
+                    conns.push(t);
+                }
+                // Reap finished handlers so a long-lived daemon does not
+                // accumulate one JoinHandle per past connection.
+                conns.retain(|t| !t.is_finished());
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => std::thread::sleep(POLL),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+    for t in conns {
+        let _ = t.join();
+    }
+}
+
+fn connection_loop(stream: TcpStream, shared: &Arc<Shared>) {
+    // The listener is nonblocking; the accepted stream must not be (on
+    // platforms where it inherits the flag). A read timeout then turns
+    // the blocking read into a shutdown-flag poll; FrameReader keeps
+    // partial frames across timeouts.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(POLL));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = FrameReader::new(stream);
+    loop {
+        match reader.read_frame() {
+            Ok(Some(line)) => {
+                let (reply, stop) = handle_frame(&line, shared);
+                if rpc::write_frame(&mut writer, &reply.to_json()).is_err() {
+                    return;
+                }
+                if stop {
+                    return;
+                }
+            }
+            Ok(None) => return,
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                // Framing is lost (oversize or non-UTF-8 frame): report
+                // once, then close — the stream cannot be resynced.
+                let reply = Reply::Error { message: e.to_string() };
+                let _ = rpc::write_frame(&mut writer, &reply.to_json());
+                return;
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Decode and execute one frame. Returns the reply and whether the
+/// connection (and for `shutdown`, the daemon) should stop afterwards.
+fn handle_frame(line: &str, shared: &Arc<Shared>) -> (Reply, bool) {
+    shared.metrics.lock().expect("daemon metrics").incr("daemon.requests", 1);
+    let req = Json::parse_bounded(line, rpc::MAX_FRAME_BYTES)
+        .map_err(|e| format!("bad frame: {e}"))
+        .and_then(|doc| Request::from_json(&doc));
+    let req = match req {
+        Ok(r) => r,
+        Err(message) => {
+            shared.metrics.lock().expect("daemon metrics").incr("daemon.errors", 1);
+            return (Reply::Error { message }, false);
+        }
+    };
+    match req {
+        Request::Query { top, rows } => {
+            let reply = handle_query(top, &rows, shared);
+            if matches!(reply, Reply::Error { .. }) {
+                shared.metrics.lock().expect("daemon metrics").incr("daemon.errors", 1);
+            }
+            (reply, false)
+        }
+        Request::Stats => (handle_stats(shared), false),
+        Request::Reload { path } => {
+            let reply = match handle_reload(path.as_deref(), shared) {
+                Ok(epoch) => Reply::Reload { epoch },
+                Err(message) => {
+                    shared.metrics.lock().expect("daemon metrics").incr("daemon.errors", 1);
+                    Reply::Error { message }
+                }
+            };
+            (reply, false)
+        }
+        Request::Refit => {
+            let reply = match refit_round(shared) {
+                Ok(epoch) => Reply::Refit { epoch },
+                Err(message) => {
+                    shared.metrics.lock().expect("daemon metrics").incr("daemon.errors", 1);
+                    Reply::Error { message }
+                }
+            };
+            (reply, false)
+        }
+        Request::Ping => (Reply::Pong { epoch: shared.slot.epoch() }, false),
+        Request::Shutdown => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            (Reply::Shutdown, true)
+        }
+    }
+}
+
+fn handle_query(top: usize, rows: &[(Vec<u32>, Vec<f32>)], shared: &Arc<Shared>) -> Reply {
+    // Pin once: the whole batch is answered by one epoch, never split
+    // across a concurrent swap.
+    let pinned = shared.slot.pin();
+    let d = pinned.engine().model().d();
+    let mut vecs = Vec::with_capacity(rows.len());
+    for (r, (idx, val)) in rows.iter().enumerate() {
+        // try_new validates sorted unique in-range indices and finite
+        // values — the batch kernel's dimension assert can never fire on
+        // wire input.
+        match SparseVec::try_new(d, idx.clone(), val.clone()) {
+            Ok(v) => vecs.push(v),
+            Err(e) => return Reply::Error { message: format!("row {r}: {e}") },
+        }
+    }
+    let data = CsrMatrix::from_rows(d, &vecs);
+    let (results, stats, hist) = pinned.engine().top_p_batch_timed(&data, top);
+    shared.slot.record_queries(pinned.epoch(), stats.queries);
+    let mut m = shared.metrics.lock().expect("daemon metrics");
+    m.incr("serve.queries", stats.queries);
+    m.incr("serve.madds", stats.madds);
+    m.incr("serve.candidates_scored", stats.candidates_scored);
+    m.incr("serve.centers_pruned", stats.centers_pruned);
+    m.merge_histogram("daemon.query", &hist);
+    m.set_gauge("daemon.epoch", pinned.epoch() as f64);
+    drop(m);
+    Reply::Query { epoch: pinned.epoch(), results }
+}
+
+fn handle_stats(shared: &Arc<Shared>) -> Reply {
+    Reply::Stats {
+        epoch: shared.slot.epoch(),
+        swaps: shared.slot.swaps(),
+        epoch_queries: shared.slot.epoch_queries(),
+        metrics: shared.metrics.lock().expect("daemon metrics").to_json(),
+    }
+}
+
+/// Load a model file and publish it as the next epoch. `path = None`
+/// falls back to the watched path. The served model is untouched on any
+/// failure.
+fn handle_reload(path: Option<&str>, shared: &Arc<Shared>) -> Result<u64, String> {
+    let owned;
+    let path: &Path = match path {
+        Some(p) => {
+            owned = PathBuf::from(p);
+            &owned
+        }
+        None => shared
+            .watch_path
+            .as_deref()
+            .ok_or("reload without a path and no watched model path configured")?,
+    };
+    let model = Model::load_low_mem(path)
+        .map_err(|e| format!("cannot load {}: {e}", path.display()))?;
+    Ok(publish_model(model, shared))
+}
+
+/// Publish `model` as the next epoch and realign the refit lineage so
+/// future rounds warm-start from what is now serving.
+fn publish_model(model: Model, shared: &Arc<Shared>) -> u64 {
+    let lineage = FittedModel::from_model(model);
+    let engine = lineage.query_engine_with(shared.mode, shared.threads);
+    if let Some(state) = shared.refit.lock().expect("refit state").as_mut() {
+        state.lineage = lineage;
+    }
+    let epoch = shared.slot.publish(engine);
+    let mut m = shared.metrics.lock().expect("daemon metrics");
+    m.incr("daemon.reloads", 1);
+    m.set_gauge("daemon.epoch", epoch as f64);
+    epoch
+}
+
+/// Poll `path`'s `(mtime, len)` signature and hot-swap on change.
+fn watch_loop(path: &Path, interval: Duration, shared: &Arc<Shared>) {
+    let signature = |p: &Path| {
+        std::fs::metadata(p)
+            .ok()
+            .map(|md| (md.modified().ok(), md.len()))
+    };
+    let mut last = signature(path);
+    while !sleep_poll(interval, shared) {
+        let now = signature(path);
+        if now != last && now.is_some() {
+            // Advance the seen-signature only after a *successful* load:
+            // a publisher caught mid-write fails Model::load_low_mem's
+            // checksum and is retried on the next tick instead of being
+            // skipped forever.
+            if let Ok(model) = Model::load_low_mem(path) {
+                publish_model(model, shared);
+                last = now;
+            }
+        }
+    }
+}
+
+/// Run refit rounds on a timer until shutdown.
+fn refit_timer_loop(interval: Duration, shared: &Arc<Shared>) {
+    while !sleep_poll(interval, shared) {
+        let _ = refit_round(shared);
+    }
+}
+
+/// Sleep `total` in shutdown-polling slices; true once shutdown is up.
+fn sleep_poll(total: Duration, shared: &Arc<Shared>) -> bool {
+    let mut left = total;
+    while left > Duration::ZERO {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return true;
+        }
+        let step = left.min(POLL);
+        std::thread::sleep(step);
+        left -= step;
+    }
+    shared.shutdown.load(Ordering::SeqCst)
+}
+
+/// One warm-started mini-batch round over the refit corpus, published as
+/// the next epoch. Rounds are serialized by the refit-state mutex; the
+/// warm start resumes the live lineage's persisted schedule, so the
+/// produced centers are a deterministic function of (lineage, corpus,
+/// params) — refit epochs are reproducible offline.
+fn refit_round(shared: &Arc<Shared>) -> Result<u64, String> {
+    let mut guard = shared.refit.lock().expect("refit state");
+    let state = guard.as_mut().ok_or("refit is not configured on this daemon")?;
+    let est = SphericalKMeans::new(state.lineage.k())
+        .engine(Engine::MiniBatch(state.params))
+        .seed(state.lineage.meta().seed)
+        .threads(state.threads)
+        .warm_start(&state.lineage);
+    let shutdown = &shared.shutdown;
+    let mut observer = |_snap: &IterSnapshot<'_>| {
+        if shutdown.load(Ordering::SeqCst) {
+            ControlFlow::Break(())
+        } else {
+            ControlFlow::Continue(())
+        }
+    };
+    let fitted = est
+        .fit_observed(&state.data, &mut observer)
+        .map_err(|e| format!("refit failed: {e}"))?;
+    state.lineage = fitted.clone();
+    let engine = fitted.query_engine_with(shared.mode, shared.threads);
+    drop(guard);
+    let epoch = shared.slot.publish(engine);
+    let mut m = shared.metrics.lock().expect("daemon metrics");
+    m.incr("daemon.refits", 1);
+    m.set_gauge("daemon.epoch", epoch as f64);
+    drop(m);
+    Ok(epoch)
+}
+
+/// Render the daemon's metrics registry as a `sphkm.metrics.v1` document
+/// — the same envelope `assign --metrics-out` writes, so downstream
+/// tooling reads both.
+pub fn metrics_dump(metrics: &Metrics) -> String {
+    let doc = Json::Obj(vec![
+        (
+            "schema".to_string(),
+            Json::Str(crate::obs::metrics::METRICS_SCHEMA.to_string()),
+        ),
+        ("metrics".to_string(), metrics.to_json()),
+    ]);
+    let mut text = doc.pretty(2);
+    text.push('\n');
+    text
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TrainingMeta;
+    use crate::serve::client::Client;
+    use crate::sparse::DenseMatrix;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sphkm-daemon-tests-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn meta(seed: u64) -> TrainingMeta {
+        TrainingMeta {
+            variant: "Standard".into(),
+            kernel: "gather".into(),
+            iterations: 1,
+            objective: 0.0,
+            seed,
+        }
+    }
+
+    fn axis_model(which: u64) -> Model {
+        let centers = if which % 2 == 0 {
+            DenseMatrix::from_vec(2, 3, vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0])
+        } else {
+            DenseMatrix::from_vec(2, 3, vec![0.0, 1.0, 0.0, 0.0, 0.0, 1.0])
+        };
+        Model::new(centers, meta(which))
+    }
+
+    fn serial_cfg() -> DaemonConfig {
+        DaemonConfig {
+            mode: ServeMode::Exhaustive,
+            threads: 1,
+            ..DaemonConfig::default()
+        }
+    }
+
+    /// The TSan-matrix loopback hammer: several client threads query over
+    /// real sockets while the main thread hot-swaps via the `reload` RPC.
+    /// Every answer must match the generation its epoch advertises.
+    #[test]
+    fn loopback_hammer_with_swaps() {
+        let b_path = tmp("hammer-b.spkm");
+        axis_model(1).save(&b_path).unwrap();
+        let a_path = tmp("hammer-a.spkm");
+        axis_model(0).save(&a_path).unwrap();
+
+        let handle = Daemon::start(axis_model(0), &serial_cfg()).unwrap();
+        let addr = handle.local_addr().to_string();
+        let probe = (vec![1u32], vec![1.0f32]);
+
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let addr = addr.clone();
+                let probe = probe.clone();
+                s.spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    for _ in 0..40 {
+                        let (epoch, results) = client.query(1, &[probe.clone()]).unwrap();
+                        let expect = if epoch % 2 == 0 { 1 } else { 0 };
+                        assert_eq!(results[0][0].0, expect, "epoch {epoch}");
+                    }
+                });
+            }
+            let addr = addr.clone();
+            let a = a_path.clone();
+            let b = b_path.clone();
+            s.spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                for swap in 1..=4u64 {
+                    let path = if swap % 2 == 0 { &a } else { &b };
+                    let epoch = client.reload(Some(path.to_str().unwrap())).unwrap();
+                    assert_eq!(epoch, swap);
+                    std::thread::yield_now();
+                }
+            });
+        });
+
+        assert_eq!(handle.swaps(), 4);
+        let mut client = Client::connect(&addr).unwrap();
+        let (epoch, swaps, per_epoch, _metrics) = client.stats().unwrap();
+        assert_eq!(epoch, 4);
+        assert_eq!(swaps, 4);
+        let counted: u64 = per_epoch.iter().map(|&(_, n)| n).sum();
+        assert_eq!(counted, 3 * 40, "every query attributed to an epoch");
+        client.shutdown().unwrap();
+        let metrics = handle.join();
+        assert_eq!(metrics.counter("serve.queries"), 3 * 40);
+        assert_eq!(metrics.counter("daemon.reloads"), 4);
+        assert_eq!(metrics.counter("daemon.errors"), 0);
+    }
+
+    /// Malformed content costs one error frame, never the connection; a
+    /// failed reload never touches the served model.
+    #[test]
+    fn errors_are_frames_not_disconnects() {
+        let handle = Daemon::start(axis_model(0), &serial_cfg()).unwrap();
+        let addr = handle.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+
+        for bad in [
+            "this is not json",
+            "{\"rpc\":\"sphkm.rpc.v1\",\"op\":\"frobnicate\"}",
+            // Out-of-range index: must be an error reply, not a panic.
+            "{\"rpc\":\"sphkm.rpc.v1\",\"op\":\"query\",\"top\":1,\"rows\":[{\"i\":[9],\"v\":[1.0]}]}",
+        ] {
+            let reply = client.call_raw(bad).unwrap();
+            assert!(matches!(reply, Reply::Error { .. }), "{bad}");
+        }
+        // Reload of a nonexistent file: error reply, epoch unchanged.
+        let missing = tmp("never-written.spkm");
+        assert!(client.reload(Some(missing.to_str().unwrap())).is_err());
+        let (epoch, _) = client.query(1, &[(vec![1], vec![1.0])]).unwrap();
+        assert_eq!(epoch, 0, "failed reload left epoch 0 serving");
+        // The same connection still works after every error above.
+        assert_eq!(client.ping().unwrap(), 0);
+        // Refit is not configured: typed error, connection survives.
+        assert!(client.refit().is_err());
+
+        client.shutdown().unwrap();
+        let metrics = handle.join();
+        assert!(metrics.counter("daemon.errors") >= 5);
+    }
+
+    /// The watcher publishes a new epoch when the watched file changes.
+    #[test]
+    fn watcher_hot_swaps_on_file_change() {
+        let path = tmp("watched.spkm");
+        axis_model(0).save(&path).unwrap();
+        let cfg = DaemonConfig {
+            watch: Some((path.clone(), Duration::from_millis(20))),
+            ..serial_cfg()
+        };
+        let handle = Daemon::start(axis_model(0), &cfg).unwrap();
+        let addr = handle.local_addr().to_string();
+        // Overwrite the watched file with generation 1 (different length
+        // is not guaranteed, but mtime advances).
+        std::thread::sleep(Duration::from_millis(30));
+        axis_model(1).save(&path).unwrap();
+        let mut client = Client::connect(&addr).unwrap();
+        let mut swapped = false;
+        for _ in 0..100 {
+            let (epoch, results) = client.query(1, &[(vec![1], vec![1.0])]).unwrap();
+            if epoch >= 1 {
+                assert_eq!(results[0][0].0, 0, "generation 1 centers serve e1 -> center 0");
+                swapped = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(swapped, "watcher never published the rewritten model");
+        client.shutdown().unwrap();
+        handle.join();
+    }
+
+    #[test]
+    fn metrics_dump_is_schema_stamped() {
+        let mut m = Metrics::new();
+        m.incr("daemon.requests", 2);
+        let text = metrics_dump(&m);
+        let doc = Json::parse(text.trim_end()).unwrap();
+        assert_eq!(
+            doc.get("schema").and_then(Json::as_str),
+            Some(crate::obs::metrics::METRICS_SCHEMA)
+        );
+        assert!(doc.get("metrics").is_some());
+    }
+}

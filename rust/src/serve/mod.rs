@@ -52,7 +52,30 @@
 //! println!("{} queries, {} madds", stats.queries, stats.madds);
 //! println!("doc 0 best center: {:?}", top[0][0]);
 //! ```
+//!
+//! # The serving daemon
+//!
+//! One-shot batches ([`QueryEngine`] behind `sphkm assign`) cover
+//! offline workloads; the **daemon** ([`Daemon`], `sphkm serve`) is the
+//! persistent shape: a TCP process answering newline-delimited
+//! `sphkm.rpc.v1` JSON frames ([`rpc`]), sharding every client batch
+//! onto the same Plan/Pool executor, and serving through a versioned
+//! [`ModelSlot`] so a freshly trained `.spkm` can be **hot-swapped**
+//! (explicit `reload` RPC, watched model path, or the background
+//! mini-batch refit loop) without dropping or corrupting one in-flight
+//! query. [`Client`] is the matching blocking client (`sphkm query`).
+//! Swap semantics, the protocol grammar, and a full train → serve →
+//! refit → swap walkthrough live in the README's "Serving daemon"
+//! section.
 
+pub mod client;
+pub mod daemon;
 pub mod engine;
+pub mod rpc;
+pub mod slot;
 
+pub use client::{Client, ClientError};
+pub use daemon::{Daemon, DaemonConfig, DaemonHandle, RefitConfig};
 pub use engine::{QueryEngine, ServeConfig, ServeMode, ServeStats};
+pub use rpc::{FrameReader, Reply, Request, MAX_FRAME_BYTES, RPC_SCHEMA};
+pub use slot::{EpochEngine, ModelSlot};

@@ -1,0 +1,598 @@
+//! The `sphkm.rpc.v1` wire protocol: newline-delimited JSON frames over
+//! a byte stream (the daemon's TCP sockets, a test's in-memory pipe).
+//!
+//! Every frame is one JSON object on one line. Requests carry
+//! `"rpc": "sphkm.rpc.v1"` (frames without the stamp are rejected — a
+//! client speaking a future incompatible revision fails loudly instead
+//! of being half-understood) and an `"op"` selector; replies carry the
+//! stamp, `"ok"`, and on success echo the `"op"`. Error replies are
+//! `{"ok": false, "error": "…"}` and never terminate the connection —
+//! the line framing survives any malformed *content*, so one bad request
+//! costs one error frame, not the session. Only a frame that breaks the
+//! *framing itself* (longer than [`MAX_FRAME_BYTES`] without a newline,
+//! or not UTF-8) forces a disconnect, since the byte stream can no
+//! longer be resynchronized.
+//!
+//! Similarities travel as JSON numbers rendered by the shortest
+//! round-trip `f64` formatter ([`crate::util::json`]), so a reply
+//! carries the server's scores **bit-exactly** — what lets the
+//! daemon-smoke CI job and the swap-under-load bench demand bitwise
+//! equality between daemon answers and one-shot [`QueryEngine`] runs.
+//!
+//! [`QueryEngine`]: crate::serve::QueryEngine
+
+use std::io::{self, Read, Write};
+
+use crate::util::json::Json;
+
+/// Protocol identifier stamped on every request and reply frame; bump on
+/// any breaking change to the frame shapes.
+pub const RPC_SCHEMA: &str = "sphkm.rpc.v1";
+
+/// Hard cap on one frame's bytes (16 MiB), enforced on both the reader
+/// ([`FrameReader`]) and the JSON parser ([`Json::parse_bounded`]). A
+/// peer streaming an endless line cannot make the daemon buffer more
+/// than this.
+pub const MAX_FRAME_BYTES: usize = 16 * 1024 * 1024;
+
+/// A client request, decoded from one frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Top-p nearest-center queries for a batch of sparse rows. Rows are
+    /// `(indices, values)` pairs in the model's vector space and should
+    /// be unit-normalized for the similarities to be cosines; the daemon
+    /// validates shape (sorted unique indices below the model dimension,
+    /// finite values) but never renormalizes.
+    Query {
+        /// How many centers to return per row (`top` ≥ 1 is useful;
+        /// `0` yields empty result lists).
+        top: usize,
+        /// The query rows as `(indices, values)` pairs.
+        rows: Vec<(Vec<u32>, Vec<f32>)>,
+    },
+    /// Fetch the daemon's metrics registry, slot epoch/swap counters,
+    /// and per-epoch query totals.
+    Stats,
+    /// Hot-swap the served model: load a `.spkm` file and publish it as
+    /// the next epoch. `None` reloads the daemon's watched model path.
+    Reload {
+        /// Path of the model file to load, if not the watched default.
+        path: Option<String>,
+    },
+    /// Run one warm-started mini-batch refit round on the daemon's refit
+    /// corpus and publish the result as the next epoch.
+    Refit,
+    /// Liveness probe; answers [`Reply::Pong`] with the current epoch.
+    Ping,
+    /// Stop the daemon: it acknowledges with [`Reply::Shutdown`], stops
+    /// accepting connections, and drains its threads.
+    Shutdown,
+}
+
+/// A server reply, decoded from one frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    /// Answer to [`Request::Query`].
+    Query {
+        /// Epoch of the engine that served the batch (pinned for the
+        /// whole request — one batch is never split across a swap).
+        epoch: u64,
+        /// Per-row `(center, similarity)` lists in rank order.
+        results: Vec<Vec<(u32, f64)>>,
+    },
+    /// Answer to [`Request::Stats`].
+    Stats {
+        /// Current slot epoch.
+        epoch: u64,
+        /// Hot swaps performed since startup.
+        swaps: u64,
+        /// `(epoch, queries answered)` per epoch, oldest first.
+        epoch_queries: Vec<(u64, u64)>,
+        /// The metrics registry rendered by
+        /// [`Metrics::to_json`](crate::obs::Metrics::to_json).
+        metrics: Json,
+    },
+    /// Answer to [`Request::Reload`]: the epoch the reloaded model was
+    /// published under.
+    Reload {
+        /// Epoch of the newly published model.
+        epoch: u64,
+    },
+    /// Answer to [`Request::Refit`]: the epoch the refit model was
+    /// published under.
+    Refit {
+        /// Epoch of the newly published model.
+        epoch: u64,
+    },
+    /// Answer to [`Request::Ping`].
+    Pong {
+        /// Current slot epoch.
+        epoch: u64,
+    },
+    /// Acknowledgement of [`Request::Shutdown`].
+    Shutdown,
+    /// The request could not be served; the connection remains usable.
+    Error {
+        /// One-line description of what was wrong.
+        message: String,
+    },
+}
+
+/// `j` as a non-negative integer (JSON numbers are `f64`; counts must
+/// be whole and within `f64`'s exact-integer range).
+fn as_count(j: &Json, what: &str) -> Result<u64, String> {
+    let v = j.as_f64().ok_or_else(|| format!("{what} must be a number"))?;
+    if !(0.0..=9.007_199_254_740_992e15).contains(&v) || v.fract() != 0.0 {
+        return Err(format!("{what} must be a non-negative integer, got {v}"));
+    }
+    Ok(v as u64)
+}
+
+fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("missing field {key:?}"))
+}
+
+fn num_arr(j: &Json, what: &str) -> Result<&[Json], String> {
+    j.as_arr().ok_or_else(|| format!("{what} must be an array"))
+}
+
+/// Check the `"rpc"` stamp on a decoded frame.
+fn check_schema(j: &Json) -> Result<(), String> {
+    match j.get("rpc").and_then(Json::as_str) {
+        Some(RPC_SCHEMA) => Ok(()),
+        Some(other) => Err(format!("unsupported rpc schema {other:?} (this build speaks {RPC_SCHEMA})")),
+        None => Err(format!("missing rpc schema stamp (expected {RPC_SCHEMA:?})")),
+    }
+}
+
+impl Request {
+    /// Encode as one frame's JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut members = vec![("rpc".to_string(), Json::Str(RPC_SCHEMA.to_string()))];
+        match self {
+            Request::Query { top, rows } => {
+                members.push(("op".to_string(), Json::Str("query".to_string())));
+                members.push(("top".to_string(), Json::Num(*top as f64)));
+                let rows = rows
+                    .iter()
+                    .map(|(idx, val)| {
+                        Json::Obj(vec![
+                            (
+                                "i".to_string(),
+                                Json::Arr(idx.iter().map(|&i| Json::Num(f64::from(i))).collect()),
+                            ),
+                            (
+                                "v".to_string(),
+                                Json::Arr(val.iter().map(|&v| Json::Num(f64::from(v))).collect()),
+                            ),
+                        ])
+                    })
+                    .collect();
+                members.push(("rows".to_string(), Json::Arr(rows)));
+            }
+            Request::Stats => members.push(("op".to_string(), Json::Str("stats".to_string()))),
+            Request::Reload { path } => {
+                members.push(("op".to_string(), Json::Str("reload".to_string())));
+                if let Some(p) = path {
+                    members.push(("path".to_string(), Json::Str(p.clone())));
+                }
+            }
+            Request::Refit => members.push(("op".to_string(), Json::Str("refit".to_string()))),
+            Request::Ping => members.push(("op".to_string(), Json::Str("ping".to_string()))),
+            Request::Shutdown => {
+                members.push(("op".to_string(), Json::Str("shutdown".to_string())));
+            }
+        }
+        Json::Obj(members)
+    }
+
+    /// Decode a frame's JSON document. Errors describe the first problem
+    /// found and are safe to echo back to the peer in an error frame.
+    pub fn from_json(j: &Json) -> Result<Request, String> {
+        check_schema(j)?;
+        let op = j
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "missing string field \"op\"".to_string())?;
+        match op {
+            "query" => {
+                let top = match j.get("top") {
+                    Some(t) => as_count(t, "top")? as usize,
+                    None => 1,
+                };
+                let mut rows = Vec::new();
+                for (r, row) in num_arr(field(j, "rows")?, "rows")?.iter().enumerate() {
+                    let idx = num_arr(field(row, "i").map_err(|e| format!("row {r}: {e}"))?, "i")?;
+                    let val = num_arr(field(row, "v").map_err(|e| format!("row {r}: {e}"))?, "v")?;
+                    let mut indices = Vec::with_capacity(idx.len());
+                    for i in idx {
+                        let i = as_count(i, "row index")?;
+                        if i > u64::from(u32::MAX) {
+                            return Err(format!("row {r}: index {i} exceeds u32"));
+                        }
+                        indices.push(i as u32);
+                    }
+                    let mut values = Vec::with_capacity(val.len());
+                    for v in val {
+                        // Finiteness and f32-range are validated against
+                        // the model by the daemon (SparseVec::try_new);
+                        // here only the JSON shape matters.
+                        values.push(
+                            v.as_f64().ok_or_else(|| format!("row {r}: values must be numbers"))?
+                                as f32,
+                        );
+                    }
+                    rows.push((indices, values));
+                }
+                Ok(Request::Query { top, rows })
+            }
+            "stats" => Ok(Request::Stats),
+            "reload" => Ok(Request::Reload {
+                path: j.get("path").and_then(Json::as_str).map(str::to_string),
+            }),
+            "refit" => Ok(Request::Refit),
+            "ping" => Ok(Request::Ping),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(format!("unknown op {other:?}")),
+        }
+    }
+}
+
+impl Reply {
+    /// Encode as one frame's JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut members = vec![("rpc".to_string(), Json::Str(RPC_SCHEMA.to_string()))];
+        let ok = !matches!(self, Reply::Error { .. });
+        members.push(("ok".to_string(), Json::Bool(ok)));
+        match self {
+            Reply::Query { epoch, results } => {
+                members.push(("op".to_string(), Json::Str("query".to_string())));
+                members.push(("epoch".to_string(), Json::Num(*epoch as f64)));
+                let rows = results
+                    .iter()
+                    .map(|row| {
+                        Json::Arr(
+                            row.iter()
+                                .map(|&(c, s)| {
+                                    Json::Arr(vec![Json::Num(f64::from(c)), Json::Num(s)])
+                                })
+                                .collect(),
+                        )
+                    })
+                    .collect();
+                members.push(("results".to_string(), Json::Arr(rows)));
+            }
+            Reply::Stats { epoch, swaps, epoch_queries, metrics } => {
+                members.push(("op".to_string(), Json::Str("stats".to_string())));
+                members.push(("epoch".to_string(), Json::Num(*epoch as f64)));
+                members.push(("swaps".to_string(), Json::Num(*swaps as f64)));
+                members.push((
+                    "epoch_queries".to_string(),
+                    Json::Arr(
+                        epoch_queries
+                            .iter()
+                            .map(|&(e, n)| {
+                                Json::Arr(vec![Json::Num(e as f64), Json::Num(n as f64)])
+                            })
+                            .collect(),
+                    ),
+                ));
+                members.push(("metrics".to_string(), metrics.clone()));
+            }
+            Reply::Reload { epoch } => {
+                members.push(("op".to_string(), Json::Str("reload".to_string())));
+                members.push(("epoch".to_string(), Json::Num(*epoch as f64)));
+            }
+            Reply::Refit { epoch } => {
+                members.push(("op".to_string(), Json::Str("refit".to_string())));
+                members.push(("epoch".to_string(), Json::Num(*epoch as f64)));
+            }
+            Reply::Pong { epoch } => {
+                members.push(("op".to_string(), Json::Str("ping".to_string())));
+                members.push(("epoch".to_string(), Json::Num(*epoch as f64)));
+            }
+            Reply::Shutdown => {
+                members.push(("op".to_string(), Json::Str("shutdown".to_string())));
+            }
+            Reply::Error { message } => {
+                members.push(("error".to_string(), Json::Str(message.clone())));
+            }
+        }
+        Json::Obj(members)
+    }
+
+    /// Decode a frame's JSON document.
+    pub fn from_json(j: &Json) -> Result<Reply, String> {
+        check_schema(j)?;
+        let ok = j
+            .get("ok")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| "missing boolean field \"ok\"".to_string())?;
+        if !ok {
+            let message = j
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unspecified error")
+                .to_string();
+            return Ok(Reply::Error { message });
+        }
+        let op = j
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "missing string field \"op\"".to_string())?;
+        let epoch = |j: &Json| as_count(field(j, "epoch")?, "epoch");
+        match op {
+            "query" => {
+                let mut results = Vec::new();
+                for (r, row) in num_arr(field(j, "results")?, "results")?.iter().enumerate() {
+                    let mut out = Vec::new();
+                    for pair in num_arr(row, "result row")? {
+                        let pair = num_arr(pair, "result pair")?;
+                        if pair.len() != 2 {
+                            return Err(format!("row {r}: result pairs are [center, similarity]"));
+                        }
+                        let c = as_count(&pair[0], "center")?;
+                        if c > u64::from(u32::MAX) {
+                            return Err(format!("row {r}: center {c} exceeds u32"));
+                        }
+                        let s = pair[1]
+                            .as_f64()
+                            .ok_or_else(|| format!("row {r}: similarity must be a number"))?;
+                        out.push((c as u32, s));
+                    }
+                    results.push(out);
+                }
+                Ok(Reply::Query { epoch: epoch(j)?, results })
+            }
+            "stats" => {
+                let mut epoch_queries = Vec::new();
+                for pair in num_arr(field(j, "epoch_queries")?, "epoch_queries")? {
+                    let pair = num_arr(pair, "epoch_queries entry")?;
+                    if pair.len() != 2 {
+                        return Err("epoch_queries entries are [epoch, queries]".to_string());
+                    }
+                    epoch_queries
+                        .push((as_count(&pair[0], "epoch")?, as_count(&pair[1], "queries")?));
+                }
+                Ok(Reply::Stats {
+                    epoch: epoch(j)?,
+                    swaps: as_count(field(j, "swaps")?, "swaps")?,
+                    epoch_queries,
+                    metrics: field(j, "metrics")?.clone(),
+                })
+            }
+            "reload" => Ok(Reply::Reload { epoch: epoch(j)? }),
+            "refit" => Ok(Reply::Refit { epoch: epoch(j)? }),
+            "ping" => Ok(Reply::Pong { epoch: epoch(j)? }),
+            "shutdown" => Ok(Reply::Shutdown),
+            other => Err(format!("unknown op {other:?}")),
+        }
+    }
+}
+
+/// Write one frame: the document rendered compactly (JSON string
+/// escaping guarantees a single line) plus the `\n` delimiter, flushed
+/// so the peer sees it immediately.
+pub fn write_frame<W: Write>(w: &mut W, doc: &Json) -> io::Result<()> {
+    let mut line = doc.render();
+    line.push('\n');
+    w.write_all(line.as_bytes())?;
+    w.flush()
+}
+
+/// Incremental, size-capped newline framer over any byte stream.
+///
+/// Unlike `BufRead::read_line`, a read error ([`io::ErrorKind::WouldBlock`],
+/// [`io::ErrorKind::TimedOut`]) does **not** lose buffered bytes: the
+/// partial frame stays in the accumulator and the next
+/// [`FrameReader::read_frame`] call resumes where the stream left off —
+/// which is what lets daemon connection threads poll a shutdown flag on
+/// a read timeout without corrupting the framing.
+#[derive(Debug)]
+pub struct FrameReader<R: Read> {
+    inner: R,
+    buf: Vec<u8>,
+    /// Bytes of `buf` already scanned for a delimiter (avoids re-scanning
+    /// the prefix on every refill).
+    scanned: usize,
+    limit: usize,
+}
+
+impl<R: Read> FrameReader<R> {
+    /// A framer enforcing the protocol's [`MAX_FRAME_BYTES`] cap.
+    pub fn new(inner: R) -> Self {
+        Self::with_limit(inner, MAX_FRAME_BYTES)
+    }
+
+    /// A framer with a custom frame-size cap (tests; tighter policies).
+    pub fn with_limit(inner: R, limit: usize) -> Self {
+        Self { inner, buf: Vec::new(), scanned: 0, limit }
+    }
+
+    /// Next frame as a string with the `\n` (and any `\r`) stripped.
+    ///
+    /// Returns `Ok(None)` at a clean end of stream. An unterminated
+    /// final frame before EOF is returned as a frame. Errors:
+    /// [`io::ErrorKind::InvalidData`] for an over-limit or non-UTF-8
+    /// frame (the stream cannot be resynchronized afterwards — close
+    /// it), and any transport error as-is, with buffered bytes kept for
+    /// the next call.
+    pub fn read_frame(&mut self) -> io::Result<Option<String>> {
+        loop {
+            if let Some(pos) = self.buf[self.scanned..].iter().position(|&b| b == b'\n') {
+                let end = self.scanned + pos;
+                let mut frame: Vec<u8> = self.buf.drain(..=end).collect();
+                self.scanned = 0;
+                frame.pop();
+                if frame.last() == Some(&b'\r') {
+                    frame.pop();
+                }
+                return frame_to_string(frame).map(Some);
+            }
+            self.scanned = self.buf.len();
+            if self.buf.len() > self.limit {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("frame exceeds the {}-byte limit", self.limit),
+                ));
+            }
+            let mut chunk = [0u8; 4096];
+            match self.inner.read(&mut chunk) {
+                Ok(0) => {
+                    if self.buf.is_empty() {
+                        return Ok(None);
+                    }
+                    let frame = std::mem::take(&mut self.buf);
+                    self.scanned = 0;
+                    return frame_to_string(frame).map(Some);
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+fn frame_to_string(frame: Vec<u8>) -> io::Result<String> {
+    String::from_utf8(frame)
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "frame is not UTF-8"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip_request(req: &Request) {
+        let doc = req.to_json();
+        let parsed = Json::parse(&doc.render()).expect("frame parses");
+        assert_eq!(&Request::from_json(&parsed).expect("decodes"), req);
+    }
+
+    fn round_trip_reply(rep: &Reply) {
+        let doc = rep.to_json();
+        let parsed = Json::parse(&doc.render()).expect("frame parses");
+        assert_eq!(&Reply::from_json(&parsed).expect("decodes"), rep);
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        round_trip_request(&Request::Query {
+            top: 3,
+            rows: vec![
+                (vec![0, 7, 4_000_000_000], vec![0.25, -0.5, 0.125]),
+                (vec![], vec![]),
+            ],
+        });
+        round_trip_request(&Request::Stats);
+        round_trip_request(&Request::Reload { path: Some("m.spkm".to_string()) });
+        round_trip_request(&Request::Reload { path: None });
+        round_trip_request(&Request::Refit);
+        round_trip_request(&Request::Ping);
+        round_trip_request(&Request::Shutdown);
+    }
+
+    #[test]
+    fn replies_round_trip_bit_exactly() {
+        // Similarities with no short decimal representation must survive
+        // the wire bit-for-bit (shortest round-trip f64 rendering).
+        let s = 1.0 / 3.0;
+        round_trip_reply(&Reply::Query {
+            epoch: 4,
+            results: vec![vec![(2, s), (0, s * s)], vec![]],
+        });
+        round_trip_reply(&Reply::Stats {
+            epoch: 2,
+            swaps: 2,
+            epoch_queries: vec![(0, 10), (1, 0), (2, 7)],
+            metrics: Json::Obj(vec![("counters".to_string(), Json::Obj(vec![]))]),
+        });
+        round_trip_reply(&Reply::Reload { epoch: 9 });
+        round_trip_reply(&Reply::Refit { epoch: 10 });
+        round_trip_reply(&Reply::Pong { epoch: 0 });
+        round_trip_reply(&Reply::Shutdown);
+        round_trip_reply(&Reply::Error { message: "no such model".to_string() });
+    }
+
+    #[test]
+    fn query_values_round_trip_exact_f32() {
+        let vals = vec![0.1f32, 1.0 / 3.0, f32::MIN_POSITIVE, 3.402_823_5e38];
+        let req = Request::Query { top: 1, rows: vec![(vec![0, 1, 2, 3], vals.clone())] };
+        let parsed = Request::from_json(&Json::parse(&req.to_json().render()).unwrap()).unwrap();
+        let Request::Query { rows, .. } = parsed else { panic!("query") };
+        for (a, b) in rows[0].1.iter().zip(&vals) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_frames() {
+        for (doc, why) in [
+            (r#"{"op":"ping"}"#, "missing schema stamp"),
+            (r#"{"rpc":"sphkm.rpc.v2","op":"ping"}"#, "wrong schema"),
+            (r#"{"rpc":"sphkm.rpc.v1"}"#, "missing op"),
+            (r#"{"rpc":"sphkm.rpc.v1","op":"frobnicate"}"#, "unknown op"),
+            (r#"{"rpc":"sphkm.rpc.v1","op":"query"}"#, "query without rows"),
+            (
+                r#"{"rpc":"sphkm.rpc.v1","op":"query","rows":[{"i":[-1],"v":[1.0]}]}"#,
+                "negative index",
+            ),
+            (
+                r#"{"rpc":"sphkm.rpc.v1","op":"query","rows":[{"i":[1.5],"v":[1.0]}]}"#,
+                "fractional index",
+            ),
+            (
+                r#"{"rpc":"sphkm.rpc.v1","op":"query","rows":[{"i":[5000000000],"v":[1.0]}]}"#,
+                "index beyond u32",
+            ),
+            (
+                r#"{"rpc":"sphkm.rpc.v1","op":"query","top":-3,"rows":[]}"#,
+                "negative top",
+            ),
+        ] {
+            let parsed = Json::parse(doc).expect("valid json");
+            assert!(Request::from_json(&parsed).is_err(), "{why}: {doc}");
+        }
+        // Reply-side: ok:false always decodes to Error.
+        let err = Json::parse(r#"{"rpc":"sphkm.rpc.v1","ok":false,"error":"nope"}"#).unwrap();
+        assert_eq!(
+            Reply::from_json(&err).unwrap(),
+            Reply::Error { message: "nope".to_string() }
+        );
+        let missing_ok = Json::parse(r#"{"rpc":"sphkm.rpc.v1","op":"ping"}"#).unwrap();
+        assert!(Reply::from_json(&missing_ok).is_err());
+    }
+
+    #[test]
+    fn frame_reader_splits_and_caps() {
+        let wire = b"{\"a\":1}\r\n\n{\"b\":2}".to_vec();
+        let mut r = FrameReader::new(io::Cursor::new(wire));
+        assert_eq!(r.read_frame().unwrap().as_deref(), Some("{\"a\":1}"));
+        assert_eq!(r.read_frame().unwrap().as_deref(), Some(""));
+        // Unterminated final frame is still delivered.
+        assert_eq!(r.read_frame().unwrap().as_deref(), Some("{\"b\":2}"));
+        assert_eq!(r.read_frame().unwrap(), None);
+
+        let mut capped = FrameReader::with_limit(io::Cursor::new(vec![b'x'; 64]), 8);
+        let err = capped.read_frame().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+
+        let mut bad_utf8 = FrameReader::new(io::Cursor::new(vec![0xff, 0xfe, b'\n']));
+        assert_eq!(bad_utf8.read_frame().unwrap_err().kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn write_frame_is_one_line() {
+        let doc = Reply::Error { message: "line\nbreak".to_string() }.to_json();
+        let mut out = Vec::new();
+        write_frame(&mut out, &doc).unwrap();
+        assert_eq!(out.iter().filter(|&&b| b == b'\n').count(), 1);
+        assert_eq!(out.last(), Some(&b'\n'));
+        let text = std::str::from_utf8(&out).unwrap();
+        let parsed = Json::parse(text.trim_end()).unwrap();
+        assert_eq!(
+            Reply::from_json(&parsed).unwrap(),
+            Reply::Error { message: "line\nbreak".to_string() }
+        );
+    }
+}

@@ -1,0 +1,233 @@
+//! The versioned model slot: an epoch-counted [`QueryEngine`] shared by
+//! every daemon connection, swapped atomically under concurrent queries.
+//!
+//! A [`ModelSlot`] holds the *current* engine behind an
+//! `RwLock<Arc<EpochEngine>>`. Readers [`pin`](ModelSlot::pin) the slot —
+//! a cheap `Arc` clone under the read lock — and hold the resulting
+//! [`EpochEngine`] for the duration of one request, so a concurrent
+//! [`publish`](ModelSlot::publish) can never invalidate in-flight work:
+//! the swapped-out engine stays alive until its last pinned reader drops
+//! it. Every published engine gets the next **epoch** number, and the
+//! slot keeps a per-epoch query counter plus a swap counter, which is
+//! what lets the daemon's `stats` RPC (and the swap-under-load bench)
+//! attribute each answer to the exact model generation that produced it.
+//!
+//! The per-epoch counters live in the slot, not in the [`EpochEngine`]:
+//! retired engines are dropped as soon as their last reader unpins, but
+//! their query totals remain reportable forever.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use super::engine::QueryEngine;
+
+/// A [`QueryEngine`] stamped with the slot epoch it was published under.
+/// Handed out by [`ModelSlot::pin`]; immutable, so any number of threads
+/// can query it concurrently.
+#[derive(Debug)]
+pub struct EpochEngine {
+    epoch: u64,
+    engine: QueryEngine,
+}
+
+impl EpochEngine {
+    /// The slot epoch this engine was published under (0 = the engine
+    /// the slot was created with).
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The engine itself.
+    #[inline]
+    pub fn engine(&self) -> &QueryEngine {
+        &self.engine
+    }
+}
+
+/// Atomically swappable, epoch-counted engine slot — see the
+/// [module docs](self).
+#[derive(Debug)]
+pub struct ModelSlot {
+    current: RwLock<Arc<EpochEngine>>,
+    /// Queries answered per epoch, indexed by epoch number.
+    queries: Mutex<Vec<u64>>,
+    /// Number of [`ModelSlot::publish`] calls (hot swaps) so far.
+    swaps: AtomicU64,
+}
+
+/// Compile-time proof that the serving types are safely shareable across
+/// threads: the daemon hands one [`ModelSlot`] (and through it, pinned
+/// [`QueryEngine`]s) to every connection thread. If a future change made
+/// any of them `!Send`/`!Sync` — say an `Rc` or a raw pointer slipped
+/// into the engine — this stops compiling instead of racing at runtime.
+const fn assert_send_sync<T: Send + Sync>() {}
+const _: () = {
+    assert_send_sync::<QueryEngine>();
+    assert_send_sync::<EpochEngine>();
+    assert_send_sync::<ModelSlot>();
+    assert_send_sync::<Arc<EpochEngine>>();
+};
+
+impl ModelSlot {
+    /// A slot serving `engine` as epoch 0.
+    pub fn new(engine: QueryEngine) -> Self {
+        Self {
+            current: RwLock::new(Arc::new(EpochEngine { epoch: 0, engine })),
+            queries: Mutex::new(vec![0]),
+            swaps: AtomicU64::new(0),
+        }
+    }
+
+    /// Pin the current engine for one request: a cheap `Arc` clone under
+    /// the read lock. The returned [`EpochEngine`] remains valid — and
+    /// its answers remain attributable to its epoch — no matter how many
+    /// swaps happen while the request is in flight.
+    pub fn pin(&self) -> Arc<EpochEngine> {
+        self.current.read().expect("slot lock").clone()
+    }
+
+    /// Atomically publish `engine` as the next epoch and return that
+    /// epoch number. In-flight readers keep the engine they pinned;
+    /// every subsequent [`ModelSlot::pin`] sees the new one.
+    pub fn publish(&self, engine: QueryEngine) -> u64 {
+        let mut cur = self.current.write().expect("slot lock");
+        let epoch = cur.epoch + 1;
+        *cur = Arc::new(EpochEngine { epoch, engine });
+        // Counter slots exist for every epoch ever published, even ones
+        // that never answer a query.
+        let mut q = self.queries.lock().expect("slot counters");
+        q.resize((epoch + 1) as usize, 0);
+        drop(q);
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        epoch
+    }
+
+    /// Charge `n` answered queries to `epoch` (the epoch of the pinned
+    /// engine that served them, which may already be swapped out).
+    pub fn record_queries(&self, epoch: u64, n: u64) {
+        let mut q = self.queries.lock().expect("slot counters");
+        let idx = epoch as usize;
+        if idx >= q.len() {
+            q.resize(idx + 1, 0);
+        }
+        q[idx] += n;
+    }
+
+    /// The current epoch number.
+    pub fn epoch(&self) -> u64 {
+        self.current.read().expect("slot lock").epoch
+    }
+
+    /// Number of hot swaps ([`ModelSlot::publish`] calls) so far.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// Per-epoch query totals as `(epoch, queries)` pairs, oldest first.
+    pub fn epoch_queries(&self) -> Vec<(u64, u64)> {
+        self.queries
+            .lock()
+            .expect("slot counters")
+            .iter()
+            .enumerate()
+            .map(|(e, &n)| (e as u64, n))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Model, TrainingMeta};
+    use crate::serve::{ServeConfig, ServeMode};
+    use crate::sparse::{CsrMatrix, DenseMatrix, SparseVec};
+
+    fn meta(seed: u64) -> TrainingMeta {
+        TrainingMeta {
+            variant: "Standard".into(),
+            kernel: "gather".into(),
+            iterations: 1,
+            objective: 0.0,
+            seed,
+        }
+    }
+
+    /// A 2-center engine whose centers are the axis pair rotated by
+    /// `which`, so different "generations" give different answers.
+    fn engine(which: u64) -> QueryEngine {
+        let centers = if which % 2 == 0 {
+            DenseMatrix::from_vec(2, 3, vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0])
+        } else {
+            DenseMatrix::from_vec(2, 3, vec![0.0, 1.0, 0.0, 0.0, 0.0, 1.0])
+        };
+        QueryEngine::new(
+            Model::new(centers, meta(which)),
+            &ServeConfig { mode: ServeMode::Exhaustive, threads: 1 },
+        )
+    }
+
+    fn probe() -> CsrMatrix {
+        CsrMatrix::from_rows(3, &[SparseVec::from_pairs(3, vec![(1, 1.0)])])
+    }
+
+    #[test]
+    fn publish_advances_epoch_and_counters() {
+        let slot = ModelSlot::new(engine(0));
+        assert_eq!(slot.epoch(), 0);
+        assert_eq!(slot.swaps(), 0);
+        let pinned = slot.pin();
+        assert_eq!(pinned.epoch(), 0);
+        assert_eq!(slot.publish(engine(1)), 1);
+        assert_eq!(slot.publish(engine(2)), 2);
+        assert_eq!(slot.epoch(), 2);
+        assert_eq!(slot.swaps(), 2);
+        // The pre-swap pin still answers with its own generation.
+        let (top, stats) = pinned.engine().top_p_batch(&probe(), 1);
+        assert_eq!(top[0][0].0, 1, "epoch-0 centers: e1 query hits center 1");
+        slot.record_queries(pinned.epoch(), stats.queries);
+        slot.record_queries(slot.epoch(), 5);
+        assert_eq!(slot.epoch_queries(), vec![(0, 1), (1, 0), (2, 5)]);
+    }
+
+    /// The TSan target: readers pin and query while a writer publishes.
+    /// Every answer must be internally consistent with the epoch that
+    /// served it — a torn swap would pair an old epoch with new centers
+    /// (or race outright under ThreadSanitizer).
+    #[test]
+    fn concurrent_pins_survive_swaps() {
+        let slot = Arc::new(ModelSlot::new(engine(0)));
+        let data = probe();
+        let readers: u64 = 3;
+        let queries_each: u64 = 60;
+        std::thread::scope(|s| {
+            for _ in 0..readers {
+                let slot = Arc::clone(&slot);
+                let data = data.clone();
+                s.spawn(move || {
+                    for _ in 0..queries_each {
+                        let pinned = slot.pin();
+                        let (top, stats) = pinned.engine().top_p_batch(&data, 1);
+                        // Even epochs serve centers {e0,e1}: the e1 probe
+                        // hits center 1. Odd epochs serve {e1,e2}: it
+                        // hits center 0. Any other pairing is a tear.
+                        let expect = if pinned.epoch() % 2 == 0 { 1 } else { 0 };
+                        assert_eq!(top[0][0].0, expect, "epoch {}", pinned.epoch());
+                        slot.record_queries(pinned.epoch(), stats.queries);
+                    }
+                });
+            }
+            let slot = Arc::clone(&slot);
+            s.spawn(move || {
+                for gen in 1..=6u64 {
+                    slot.publish(engine(gen));
+                    std::thread::yield_now();
+                }
+            });
+        });
+        assert_eq!(slot.swaps(), 6);
+        assert_eq!(slot.epoch(), 6);
+        let counted: u64 = slot.epoch_queries().iter().map(|&(_, n)| n).sum();
+        assert_eq!(counted, readers * queries_each, "every query attributed");
+    }
+}

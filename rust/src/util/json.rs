@@ -8,8 +8,21 @@
 //! are accepted on parse with [`Json::get`] returning the first match.
 //! Numbers are `f64` (like JavaScript); non-finite values render as
 //! `null` since JSON has no representation for them.
+//!
+//! The parser is hardened for untrusted wire input (the serving daemon
+//! feeds it raw network frames): trailing garbage is rejected, nesting
+//! is capped at [`MAX_DEPTH`] so a `[[[[…` bomb cannot blow the stack,
+//! [`Json::parse_bounded`] enforces a byte budget before scanning, and
+//! strings must escape control characters (raw bytes below `0x20` are
+//! a parse error, per RFC 8259).
 
 use std::fmt::Write as _;
+
+/// Maximum container nesting depth [`Json::parse`] accepts. Deep enough
+/// for any document this crate emits (reports nest 4–5 levels); shallow
+/// enough that a hostile `[[[[…` frame errors out long before the
+/// recursive-descent parser can exhaust the stack.
+pub const MAX_DEPTH: usize = 64;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -40,9 +53,11 @@ pub struct JsonError {
 }
 
 impl Json {
-    /// Parse a complete JSON document (rejects trailing garbage).
+    /// Parse a complete JSON document (rejects trailing garbage,
+    /// nesting beyond [`MAX_DEPTH`], and raw control characters in
+    /// strings).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -50,6 +65,20 @@ impl Json {
             return Err(p.err("trailing characters after document"));
         }
         Ok(v)
+    }
+
+    /// [`Json::parse`] with an input byte budget, for untrusted wire
+    /// frames: inputs longer than `max_bytes` are rejected before any
+    /// scanning, so a hostile peer cannot make the parser allocate in
+    /// proportion to an unbounded payload.
+    pub fn parse_bounded(text: &str, max_bytes: usize) -> Result<Json, JsonError> {
+        if text.len() > max_bytes {
+            return Err(JsonError {
+                at: max_bytes,
+                what: format!("document of {} bytes exceeds limit of {max_bytes}", text.len()),
+            });
+        }
+        Json::parse(text)
     }
 
     /// Member of an object by key (first match); `None` for non-objects.
@@ -204,11 +233,22 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl Parser<'_> {
     fn err(&self, what: &str) -> JsonError {
         JsonError { at: self.i, what: what.to_string() }
+    }
+
+    /// Enter one container level; errors past [`MAX_DEPTH`]. The
+    /// matching `depth -= 1` sits at each container's exit.
+    fn descend(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH} levels")));
+        }
+        Ok(())
     }
 
     fn ws(&mut self) {
@@ -358,6 +398,12 @@ impl Parser<'_> {
                         _ => return Err(self.err("invalid escape")),
                     }
                 }
+                Some(c) if c < 0x20 => {
+                    // RFC 8259 §7: control characters must be escaped.
+                    return Err(self.err(&format!(
+                        "unescaped control character 0x{c:02x} in string"
+                    )));
+                }
                 Some(_) => {
                     // Consume one UTF-8 scalar from the source text.
                     let rest = std::str::from_utf8(&self.b[self.i..])
@@ -372,10 +418,12 @@ impl Parser<'_> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.eat(b'[')?;
+        self.descend()?;
         let mut items = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -386,6 +434,7 @@ impl Parser<'_> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -395,10 +444,12 @@ impl Parser<'_> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.eat(b'{')?;
+        self.descend()?;
         let mut members = Vec::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(members));
         }
         loop {
@@ -414,6 +465,7 @@ impl Parser<'_> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(members));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -476,6 +528,41 @@ mod tests {
         ] {
             assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
         }
+    }
+
+    #[test]
+    fn rejects_hostile_wire_input() {
+        // Truncated and malformed \u escapes.
+        for bad in [r#""\u12""#, r#""\u""#, r#""\uzzzz""#, r#""\udc00""#, r#""\ud83dA""#] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
+        }
+        // Raw (unescaped) control characters inside strings.
+        assert!(Json::parse("\"a\u{1}b\"").is_err());
+        assert!(Json::parse("\"a\nb\"").is_err());
+        // The escaped forms of the same characters are fine.
+        assert_eq!(Json::parse(r#""a\u0001b""#).unwrap(), Json::Str("a\u{1}b".to_string()));
+        assert_eq!(Json::parse(r#""a\nb""#).unwrap(), Json::Str("a\nb".to_string()));
+    }
+
+    #[test]
+    fn depth_limit_stops_nesting_bombs() {
+        let deep_ok = format!("{}0{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&deep_ok).is_ok());
+        let too_deep = format!("{}0{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let err = Json::parse(&too_deep).unwrap_err();
+        assert!(err.what.contains("nesting"), "{err}");
+        // An unclosed bomb (the hostile shape — no closers needed to
+        // trigger recursion) must also fail without overflowing.
+        assert!(Json::parse(&"[".repeat(100_000)).is_err());
+        let obj_bomb = "{\"a\":".repeat(100_000);
+        assert!(Json::parse(&obj_bomb).is_err());
+    }
+
+    #[test]
+    fn parse_bounded_enforces_byte_budget() {
+        assert_eq!(Json::parse_bounded("[1,2]", 16).unwrap(), Json::parse("[1,2]").unwrap());
+        let err = Json::parse_bounded("[1,2,3,4,5,6,7,8]", 8).unwrap_err();
+        assert!(err.what.contains("exceeds limit"), "{err}");
     }
 
     #[test]

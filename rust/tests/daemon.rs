@@ -1,0 +1,260 @@
+//! Serving-daemon integration suite: the full train → persist → serve →
+//! hot-swap pipeline, at the library level and through the `sphkm`
+//! binary (`serve` / `query` subcommands), including the satellite
+//! guarantee that CLI model-load failures exit 2 with a one-line typed
+//! diagnostic.
+
+// Bench and test targets favour readable literal casts and exact
+// (bit-level) float assertions; the workspace clippy warnings on
+// those patterns are aimed at library code.
+#![allow(clippy::cast_possible_truncation, clippy::float_cmp)]
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::time::Duration;
+
+use sphkm::data::datasets::{self, Scale};
+use sphkm::kmeans::{Engine, FittedModel, MiniBatchParams, SphericalKMeans};
+use sphkm::serve::{Client, Daemon, DaemonConfig, RefitConfig, ServeMode};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sphkm-daemon-int-tests-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn sphkm() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_sphkm"))
+}
+
+/// Kills the daemon subprocess when a test panics mid-flight, so a
+/// failing assertion never leaks a listener into the test runner.
+struct KillOnDrop(std::process::Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// End-to-end over the binary: train and persist two models, serve one,
+/// and drive `sphkm query` clients through a `reload` swap — the query
+/// CSVs must be **byte-identical** to one-shot `assign --out` CSVs for
+/// whichever model the serving epoch holds (the daemon-smoke CI job
+/// replays this same sequence on an ephemeral port).
+#[test]
+fn serve_query_round_trip_matches_assign_bytes() {
+    let a = tmp("cli-a.spkm");
+    let b = tmp("cli-b.spkm");
+    let data = ["--data", "demo", "--scale", "tiny", "--seed", "7"];
+    for (path, k, init) in [(&a, "5", "uniform"), (&b, "4", "kmeans++")] {
+        let out = sphkm()
+            .args(data)
+            .args(["cluster", "--k", k, "--init", init, "--save-model", path.to_str().unwrap()])
+            .output()
+            .expect("spawn cluster");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    }
+    // One-shot oracle CSVs.
+    let a_csv = tmp("cli-a.csv");
+    let b_csv = tmp("cli-b.csv");
+    for (model, csv) in [(&a, &a_csv), (&b, &b_csv)] {
+        let out = sphkm()
+            .args(data)
+            .args(["assign", "--top", "3", "--mode", "exhaustive", "--threads", "1"])
+            .args(["--model", model.to_str().unwrap(), "--out", csv.to_str().unwrap()])
+            .output()
+            .expect("spawn assign");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    }
+
+    // Daemon on an ephemeral port, discovered through --addr-file.
+    let addr_file = tmp("cli-addr.txt");
+    std::fs::remove_file(&addr_file).ok();
+    let child = sphkm()
+        .args(["serve", "--model", a.to_str().unwrap(), "--addr", "127.0.0.1:0"])
+        .args(["--addr-file", addr_file.to_str().unwrap()])
+        .args(["--mode", "exhaustive", "--threads", "1"])
+        .spawn()
+        .expect("spawn serve");
+    let mut child = KillOnDrop(child);
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    while !addr_file.exists() {
+        assert!(std::time::Instant::now() < deadline, "daemon never wrote its address");
+        assert!(
+            child.0.try_wait().expect("try_wait").is_none(),
+            "daemon exited before binding"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let addr_args = ["--addr-file", addr_file.to_str().unwrap()];
+
+    // Query → byte-identical to the model-A oracle; reload to B; repeat.
+    let q_csv = tmp("cli-q.csv");
+    let query = |out_csv: &PathBuf| {
+        let out = sphkm()
+            .args(data)
+            .args(["query", "--top", "3", "--out", out_csv.to_str().unwrap()])
+            .args(addr_args)
+            .output()
+            .expect("spawn query");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    };
+    query(&q_csv);
+    assert_eq!(
+        std::fs::read(&q_csv).unwrap(),
+        std::fs::read(&a_csv).unwrap(),
+        "epoch 0 answers must be byte-identical to one-shot assign on model A"
+    );
+    let out = sphkm()
+        .args(["query", "--op", "reload", "--path", b.to_str().unwrap()])
+        .args(addr_args)
+        .output()
+        .expect("spawn reload");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    query(&q_csv);
+    assert_eq!(
+        std::fs::read(&q_csv).unwrap(),
+        std::fs::read(&b_csv).unwrap(),
+        "post-swap answers must be byte-identical to one-shot assign on model B"
+    );
+
+    // Stats over the CLI, then an orderly shutdown.
+    let out = sphkm().args(["query", "--op", "stats"]).args(addr_args).output().expect("stats");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("1 hot swaps"), "{text}");
+    let out = sphkm()
+        .args(["query", "--op", "shutdown"])
+        .args(addr_args)
+        .output()
+        .expect("shutdown");
+    assert!(out.status.success());
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Some(status) = child.0.try_wait().expect("try_wait") {
+            assert!(status.success(), "daemon exit status after shutdown RPC");
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "daemon ignored the shutdown RPC");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Satellite: `assign`, `serve`, and `cluster --resume` report the typed
+/// `ModelError` and exit 2 — a one-line diagnostic, no panic backtrace.
+#[test]
+fn model_load_failures_exit_2_with_typed_diagnostic() {
+    let garbage = tmp("not-a-model.spkm");
+    std::fs::write(&garbage, b"definitely not an spkm file").unwrap();
+    let missing = tmp("never-written.spkm");
+    std::fs::remove_file(&missing).ok();
+    for (cmd, path) in [
+        ("assign", &garbage),
+        ("serve", &garbage),
+        ("assign", &missing),
+        ("serve", &missing),
+    ] {
+        let out = sphkm()
+            .args([cmd, "--model", path.to_str().unwrap(), "--data", "demo", "--scale", "tiny"])
+            .output()
+            .expect("spawn");
+        assert_eq!(out.status.code(), Some(2), "{cmd} {}", path.display());
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("error loading model"), "{cmd}: {err}");
+        assert!(!err.contains("panicked"), "{cmd}: {err}");
+    }
+    let out = sphkm()
+        .args(["cluster", "--data", "demo", "--scale", "tiny", "--k", "3"])
+        .args(["--resume", garbage.to_str().unwrap()])
+        .output()
+        .expect("spawn");
+    assert_eq!(out.status.code(), Some(2), "cluster --resume");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("error loading model"));
+}
+
+/// A `refit` RPC round is deterministic: warm-started from the live
+/// lineage with the lineage's own seed, it must publish exactly the
+/// model an offline warm-started fit of the same corpus produces.
+#[test]
+fn refit_round_is_bit_identical_to_offline_warm_start() {
+    let ds = datasets::by_name("demo", Scale::Tiny, 11).expect("demo dataset");
+    let params = MiniBatchParams { batch_size: 256, epochs: 2, ..Default::default() };
+    let base = SphericalKMeans::new(4)
+        .engine(Engine::MiniBatch(params))
+        .seed(11)
+        .threads(1)
+        .fit(&ds.matrix)
+        .expect("base fit");
+    let model = base.to_model(); // carries the resumable training state
+
+    // The offline continuation the daemon's refit round must reproduce.
+    let expected = SphericalKMeans::new(4)
+        .engine(Engine::MiniBatch(params))
+        .seed(base.meta().seed)
+        .threads(1)
+        .warm_start(&FittedModel::from_model(model.clone()))
+        .fit(&ds.matrix)
+        .expect("offline warm-started fit");
+    let oracle = expected.query_engine_with(ServeMode::Exhaustive, 1);
+
+    let cfg = DaemonConfig {
+        mode: ServeMode::Exhaustive,
+        threads: 1,
+        refit: Some(RefitConfig {
+            data: ds.matrix.clone(),
+            params,
+            threads: 1,
+            interval: None, // RPC-only
+        }),
+        ..DaemonConfig::default()
+    };
+    let handle = Daemon::start(model, &cfg).expect("daemon starts");
+    let mut client = Client::connect(handle.local_addr()).expect("connect");
+    assert_eq!(client.refit().expect("refit round"), 1, "refit publishes epoch 1");
+
+    let probe_rows = ds.matrix.rows().min(64);
+    let rows: Vec<(Vec<u32>, Vec<f32>)> = (0..probe_rows)
+        .map(|i| {
+            let r = ds.matrix.row(i);
+            (r.indices.to_vec(), r.values.to_vec())
+        })
+        .collect();
+    let (epoch, got) = client.query(2, &rows).expect("query");
+    assert_eq!(epoch, 1);
+    let probe = sphkm::sparse::CsrMatrix::from_rows(
+        ds.matrix.cols(),
+        &(0..probe_rows)
+            .map(|i| {
+                sphkm::sparse::SparseVec::from_pairs(
+                    ds.matrix.cols(),
+                    ds.matrix
+                        .row(i)
+                        .indices
+                        .iter()
+                        .zip(ds.matrix.row(i).values)
+                        .map(|(&c, &v)| (c, v))
+                        .collect(),
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+    let (want, _) = oracle.top_p_batch(&probe, 2);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.len(), w.len(), "row {i}");
+        for (x, y) in g.iter().zip(w) {
+            assert_eq!(x.0, y.0, "row {i}: center ids");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "row {i}: similarities");
+        }
+    }
+
+    // A second round continues from the *refit* lineage, not the
+    // original — epochs keep advancing.
+    assert_eq!(client.refit().expect("second refit"), 2);
+    client.shutdown().expect("shutdown");
+    let metrics = handle.join();
+    assert_eq!(metrics.counter("daemon.refits"), 2);
+    assert_eq!(metrics.counter("daemon.errors"), 0);
+}
